@@ -1,0 +1,82 @@
+//! Quickstart: the minimal end-to-end use of the library.
+//!
+//! Loads the AOT-compiled ABC graph, runs the parallel coordinator on a
+//! synthetic dataset until 20 posterior samples are accepted, and
+//! prints the posterior summary.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use abc_ipu::abc::{calibrate_tolerance, Posterior};
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::Coordinator;
+use abc_ipu::data::synthetic;
+use abc_ipu::model::Prior;
+use abc_ipu::report::fmt_secs;
+use abc_ipu::runtime::default_artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A dataset: here, synthetic ground truth simulated from the
+    //    model itself at a known θ* (Italy-like initial condition).
+    let dataset = synthetic::default_dataset(49, 0x5eed);
+    println!(
+        "dataset `{}`: {} days, population {:.1e}, ε = {:.3e}",
+        dataset.name,
+        dataset.days(),
+        dataset.population,
+        dataset.default_tolerance
+    );
+
+    // 2. A job configuration: 2 simulated devices, 10k samples per run
+    //    per device, IPU-style conditional outfeed in 1k chunks.
+    let mut config = RunConfig {
+        dataset: dataset.name.clone(),
+        accepted_samples: 20,
+        devices: 2,
+        batch_per_device: 10_000,
+        days: 49,
+        tolerance: None,
+        return_strategy: ReturnStrategy::Outfeed { chunk: 1_000 },
+        seed: 42,
+        max_runs: 200,
+    };
+
+    // 3. Calibrate the tolerance to this machine's budget with a pilot
+    //    run (the paper hand-tunes ε per dataset; see abc::pilot).
+    let artifacts = default_artifacts_dir();
+    let pilot = calibrate_tolerance(&artifacts, &config, &dataset, 1e-3, 2)?;
+    println!(
+        "pilot: median prior distance {:.3e} → ε = {:.3e}",
+        pilot.median_distance, pilot.tolerance
+    );
+    config.tolerance = Some(pilot.tolerance);
+
+    // 4. Run the parallel ABC coordinator (Python is NOT involved —
+    //    workers execute the AOT-compiled XLA graph via PJRT).
+    let coordinator = Coordinator::new(artifacts, config, dataset, Prior::paper())?;
+    let result = coordinator.run_until(20)?;
+
+    // 5. Inspect the posterior.
+    let posterior = Posterior::new(result.accepted.clone());
+    let m = &result.metrics;
+    println!(
+        "\naccepted {} samples in {} | {} runs | acceptance {:.2e}",
+        posterior.len(),
+        fmt_secs(m.total.as_secs_f64()),
+        m.runs,
+        m.acceptance_rate()
+    );
+    println!(
+        "time/run {} | postproc {:.2}% | {} transfers, {} skipped by conditional outfeed",
+        fmt_secs(m.time_per_run().as_secs_f64()),
+        m.postproc_fraction() * 100.0,
+        m.transfers,
+        m.transfers_skipped
+    );
+    println!("\nposterior means (generating θ* = {:?}):", synthetic::DEFAULT_THETA_STAR);
+    for (name, s) in posterior.summaries() {
+        println!("  {name:<7} {:8.4}  (p5 {:8.4}, p95 {:8.4})", s.mean, s.p5, s.p95);
+    }
+    Ok(())
+}

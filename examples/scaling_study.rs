@@ -1,0 +1,87 @@
+//! Multi-device scaling study (paper Table 7).
+//!
+//! Measures end-to-end throughput of the coordinator as the simulated
+//! device count grows (weak scaling: per-device batch fixed), for both
+//! chunked and unchunked outfeeds, side by side with the IPU-link
+//! scaling model's projection for real Mk1 hardware.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example scaling_study
+//! ```
+
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::{Coordinator, StopRule};
+use abc_ipu::data::synthetic;
+use abc_ipu::hwmodel::{scaling_table, DeviceSpec, Workload};
+use abc_ipu::model::Prior;
+use abc_ipu::report::{fmt_secs, write_csv, Table};
+use abc_ipu::runtime::default_artifacts_dir;
+
+const BATCH: usize = 10_000;
+const RUNS_PER_DEVICE: u64 = 6;
+
+fn main() -> anyhow::Result<()> {
+    let dataset = synthetic::default_dataset(49, 0x5eed);
+    let artifacts = default_artifacts_dir();
+    let device_counts = [1usize, 2, 4, 8];
+    let w = Workload::analytic(BATCH, 49);
+
+    let mut table = Table::new(
+        "Table 7 analogue: scaling across simulated devices",
+        &["devices", "chunk", "runs", "total", "throughput Msamp/s", "speedup",
+          "IPU-model speedup", "IPU-model ovh %"],
+    );
+
+    let mut base: Option<f64> = None;
+    for &n in &device_counts {
+        for chunked in [true, false] {
+            let chunk = if chunked { BATCH / 10 } else { BATCH };
+            let cfg = RunConfig {
+                dataset: dataset.name.clone(),
+                tolerance: Some(dataset.default_tolerance * 4.0),
+                devices: n,
+                batch_per_device: BATCH,
+                days: 49,
+                return_strategy: ReturnStrategy::Outfeed { chunk },
+                seed: 7,
+                max_runs: 0,
+                accepted_samples: 1,
+            };
+            let coord = Coordinator::new(&artifacts, cfg, dataset.clone(), Prior::paper())?;
+            // fixed work per device → wall-clock should stay ~constant
+            let runs = RUNS_PER_DEVICE * n as u64;
+            let r = coord.run(StopRule::ExactRuns(runs))?;
+            let secs = r.metrics.total.as_secs_f64();
+            let throughput = r.metrics.samples_simulated as f64 / secs;
+            let base_tp = *base.get_or_insert(throughput);
+            let model = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n], chunk, device_counts[0]);
+            table.row(&[
+                n.to_string(),
+                if chunked { chunk.to_string() } else { "=batch".into() },
+                runs.to_string(),
+                fmt_secs(secs),
+                format!("{:.2}", throughput / 1e6),
+                format!("{:.2}", throughput / base_tp),
+                format!("{:.2}", model[0].speedup),
+                format!("{:.1}", model[0].overhead * 100.0),
+            ]);
+            println!(
+                "devices={n:<2} chunk={:<7} total={:<9} throughput={:.2} Msamples/s",
+                if chunked { chunk.to_string() } else { "=batch".into() },
+                fmt_secs(secs),
+                throughput / 1e6,
+            );
+        }
+    }
+    println!("\n{}", table.render());
+    let path = write_csv("reports", "scaling_study", &table.to_csv())?;
+    println!("written to {}", path.display());
+    println!(
+        "note: this host has {} CPU core(s); simulated devices share it, so the \
+         measured columns expose *coordinator overhead* (chunked-vs-unchunked sync \
+         cost), not hardware speedup. The model column projects real per-device \
+         hardware (paper: 7.38x at 16 IPUs chunked, 8.0x unchunked).",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    Ok(())
+}

@@ -1,0 +1,201 @@
+"""AOT compiler: lower the Layer-2 JAX graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads
+the emitted ``artifacts/*.hlo.txt`` via the ``xla`` crate's PJRT client
+and Python never appears on the inference path again.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Besides the HLO files, this writes ``manifest.json`` describing every
+artifact (input/output shapes + dtypes, batch/days, analytic workload
+statistics) — the Rust runtime consumes it to type-check calls, and the
+hardware performance model (rust/src/hwmodel) consumes the workload
+statistics to project device runtimes.
+
+Usage:  python -m compile.aot --out ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: ABC batch-size variants emitted by default. 1k/4k are the test sizes;
+#: 10k..100k are the sweep sizes of the paper's Tables 2-3 / Fig 3.
+ABC_BATCHES = (1000, 4000, 10000, 20000, 50000, 100000)
+#: Batch sizes emitted under --quick (CI / pytest path).
+ABC_BATCHES_QUICK = (1000, 4000)
+#: Fit window: 49 days after the first day with >= 100 cases (paper §4).
+FIT_DAYS = 49
+#: Posterior-predictive horizon: 120 days (paper Fig. 7).
+PREDICT_DAYS = 120
+#: Posterior-predictive batch (>= the 100 accepted samples plotted).
+PREDICT_BATCH = 128
+#: onestep validation batch.
+ONESTEP_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _key_spec():
+    # PRNGKey as a raw u32[2] so Rust can feed it directly.
+    return _spec((2,), jnp.uint32)
+
+
+def _io(args, names):
+    return [
+        {"name": n, "dtype": str(a.dtype), "shape": list(a.shape)}
+        for n, a in zip(names, args)
+    ]
+
+
+def lower_abc(batch: int, days: int, rng: str = "fast") -> tuple[str, dict]:
+    """Lower one abc_run variant; returns (hlo_text, manifest entry)."""
+
+    def fn(key, observed, prior_low, prior_high, consts):
+        theta, dist = model.abc_run(key, observed, prior_low, prior_high,
+                                    consts, batch=batch, rng=rng)
+        return theta, dist
+
+    args = (_key_spec(), _spec((3, days)), _spec((8,)), _spec((8,)),
+            _spec((4,)))
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    entry = {
+        "kind": "abc",
+        "batch": batch,
+        "days": days,
+        "rng": rng,
+        "inputs": _io(args, ["key", "observed", "prior_low", "prior_high",
+                             "consts"]),
+        "outputs": [
+            {"name": "theta", "dtype": "float32", "shape": [batch, 8]},
+            {"name": "dist", "dtype": "float32", "shape": [batch]},
+        ],
+        "stats": model.workload_stats(batch, days),
+    }
+    return text, entry
+
+
+def lower_predict(batch: int, days: int) -> tuple[str, dict]:
+    """Lower the posterior-predictive trajectory simulator."""
+
+    def fn(key, theta, consts):
+        key = jax.random.wrap_key_data(key, impl="threefry2x32")
+        return (model.predict(key, theta, consts, days=days,
+                              block_b=batch),)
+
+    args = (_key_spec(), _spec((batch, 8)), _spec((4,)))
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    entry = {
+        "kind": "predict",
+        "batch": batch,
+        "days": days,
+        "inputs": _io(args, ["key", "theta", "consts"]),
+        "outputs": [
+            {"name": "traj", "dtype": "float32", "shape": [batch, 3, days]},
+        ],
+        "stats": model.workload_stats(batch, days),
+    }
+    return text, entry
+
+
+def lower_onestep(batch: int) -> tuple[str, dict]:
+    """Lower the single-day validation kernel (explicit noise input)."""
+
+    def fn(state, theta, z, consts):
+        return (model.onestep(state, theta, z, consts),)
+
+    args = (_spec((batch, 6)), _spec((batch, 8)), _spec((batch, 5)),
+            _spec((4,)))
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    entry = {
+        "kind": "onestep",
+        "batch": batch,
+        "days": 1,
+        "inputs": _io(args, ["state", "theta", "z", "consts"]),
+        "outputs": [
+            {"name": "next_state", "dtype": "float32", "shape": [batch, 6]},
+        ],
+        "stats": model.workload_stats(batch, 1),
+    }
+    return text, entry
+
+
+def build(out_dir: str, quick: bool = False, rng: str = "fast") -> dict:
+    """Lower every artifact variant into ``out_dir``; returns the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"format": "hlo-text", "artifacts": {}}
+
+    jobs = []
+    batches = ABC_BATCHES_QUICK if quick else ABC_BATCHES
+    for b in batches:
+        jobs.append((f"abc_b{b}_d{FIT_DAYS}",
+                     functools.partial(lower_abc, b, FIT_DAYS, rng)))
+    # Small-days ABC variant for fast integration tests / CI.
+    jobs.append((f"abc_b1000_d16", functools.partial(lower_abc, 1000, 16, rng)))
+    # RNG ablation artifact: same graph with the threefry generator, so
+    # the fast-hash RNG can be A/B-validated end-to-end from Rust
+    # (bench `ablation_rng`, EXPERIMENTS.md §Perf).
+    if not quick and rng != "threefry":
+        jobs.append(("abc_tf_b10000_d49",
+                     functools.partial(lower_abc, 10000, FIT_DAYS, "threefry")))
+    jobs.append((f"predict_b{PREDICT_BATCH}_d{PREDICT_DAYS}",
+                 functools.partial(lower_predict, PREDICT_BATCH,
+                                   PREDICT_DAYS)))
+    # Short-horizon predict used when fitting synthetic data in tests.
+    jobs.append((f"predict_b{PREDICT_BATCH}_d{FIT_DAYS}",
+                 functools.partial(lower_predict, PREDICT_BATCH, FIT_DAYS)))
+    jobs.append((f"onestep_b{ONESTEP_BATCH}",
+                 functools.partial(lower_onestep, ONESTEP_BATCH)))
+
+    for name, fn in jobs:
+        text, entry = fn()
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["file"] = fname
+        manifest["artifacts"][name] = entry
+        print(f"  lowered {name}: {len(text) / 1e6:.2f} MB HLO text")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO text + manifest.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="only lower the small test variants")
+    ap.add_argument("--rng", default="fast", choices=model.RNG_IMPLS,
+                    help="in-graph RNG for abc artifacts (default: fast)")
+    args = ap.parse_args()
+    build(args.out, quick=args.quick, rng=args.rng)
+
+
+if __name__ == "__main__":
+    main()

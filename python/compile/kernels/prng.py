@@ -1,0 +1,71 @@
+"""Fast counter-based pseudo-random generation for the simulation path.
+
+Profiling (EXPERIMENTS.md §Perf) shows JAX's default threefry bit
+generation dominating the ABC run on CPU: ~56 ms of a 91 ms run at
+B=10k — the 20-round threefry chain costs ~40 int-ops per u32 where the
+simulation itself needs ~75 flops per sample-day total.
+
+A stochastic epidemic simulation does not need cryptographic streams;
+it needs i.i.d.-looking draws with clean moments and no cross-key or
+lag correlation. This module provides a 2-round splitmix32-style
+counter hash (~10 int-ops per u32, fully vectorized by XLA):
+
+    h = mix(iota ^ k0); h = mix(h + k1 + salt); u = h >> 8 → (0,1)
+
+measured 4.7x faster than threefry bits with mean/var/skew/kurtosis and
+lag/cross-key correlations indistinguishable from N(0,1) at 2.5M draws
+(see ``tests/test_prng.py``). The AOT artifacts use this generator by
+default; ``aot.py --rng threefry`` restores the JAX default (bit-exact
+with ``jax.random``) for A/B validation.
+
+Every (key, salt, index) triple maps to one fixed u32, so draws are
+deterministic per key and independent across the coordinator's
+per-(device, run) key schedule — the same reproducibility contract the
+threefry path provides.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+#: Salt for the θ-sampling stream (must differ from the noise stream).
+SALT_THETA = jnp.uint32(0x9E37_79B9)
+#: Salt for the tau-leap noise stream.
+SALT_NOISE = jnp.uint32(0x85EB_CA6B)
+
+
+def _mix(x: jnp.ndarray) -> jnp.ndarray:
+    """splitmix32 finalizer: full-avalanche 32-bit hash round."""
+    x = (x ^ (x >> jnp.uint32(16))) * jnp.uint32(0x7FEB_352D)
+    x = (x ^ (x >> jnp.uint32(15))) * jnp.uint32(0x846C_A68B)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def bits(key: jnp.ndarray, n: int, salt: jnp.ndarray) -> jnp.ndarray:
+    """`n` pseudo-random u32s for (key u32[2], salt). Shape [n]."""
+    idx = lax.iota(jnp.uint32, n)
+    h = _mix(idx ^ key[0])
+    return _mix(h + key[1] + salt)
+
+
+def uniform(key: jnp.ndarray, shape, salt: jnp.ndarray) -> jnp.ndarray:
+    """Uniforms in [0, 1) with 24-bit resolution. f32, `shape`."""
+    n = 1
+    for d in shape:
+        n *= d
+    b = bits(key, n, salt)
+    u = (b >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    return u.reshape(shape)
+
+
+def normal(key: jnp.ndarray, shape, salt: jnp.ndarray) -> jnp.ndarray:
+    """Standard normals via the probit transform of hashed uniforms.
+
+    `sqrt(2) * erfinv(2u - 1)` matches how `jax.random.normal` maps
+    uniforms to normals, so only the bit source differs from threefry.
+    """
+    u = uniform(key, shape, salt)
+    v = jnp.clip(2.0 * u - 1.0, -1.0 + 1e-7, 1.0 - 1e-7)
+    return jnp.float32(jnp.sqrt(2.0)) * jax.scipy.special.erfinv(v)

@@ -1,0 +1,187 @@
+"""Pure-jnp oracle for the stochastic epidemiology simulator.
+
+This module is the correctness reference for the Pallas kernels in
+``tau_leap.py``.  It implements the 6-compartment stochastic model of
+Warne et al. (2020) exactly as described in the paper (Section 2.1):
+
+  state     X = [S, I, A, R, D, Ru]
+  params    theta = [alpha0, alpha, n, beta, gamma, delta, eta, kappa]
+  response  g(A,R,D) = alpha0 + alpha / (1 + (A+R+D)^n)          (eq. 4)
+  hazard    h = (g*S*I/P, gamma*I, beta*A, delta*A, beta*eta*I)  (eq. 5)
+  sampling  n_i = floor(Normal(mean=h_i, std=sqrt(h_i)))  (tau-leap,
+            Gaussian approximation to the Poisson increment)
+  update    S->I, I->A, A->R, A->D, I->Ru   (ordering as in eq. 5)
+
+All transitions are clamped so compartments stay non-negative; the clamp
+is part of the model definition (the paper's IPU profile lists a Clamp
+compute set, Table 5) and MUST match bit-for-bit between this oracle and
+the Pallas kernel.
+
+Everything here is plain ``jax.numpy`` on unblocked arrays, traced with
+``lax.scan`` over days — no Pallas, no manual tiling — so it is easy to
+audit against the equations and slow-but-obviously-correct.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# Index aliases for the state vector.
+S, I, A, R, D, RU = 0, 1, 2, 3, 4, 5
+# Index aliases for theta.
+ALPHA0, ALPHA, N_EXP, BETA, GAMMA, DELTA, ETA, KAPPA = range(8)
+
+#: Upper bounds of the uniform prior, straight from eq. (2) of the paper.
+PRIOR_HIGH = jnp.array([1.0, 100.0, 2.0, 1.0, 1.0, 1.0, 1.0, 2.0], jnp.float32)
+
+
+def response_rate(theta: jnp.ndarray, a: jnp.ndarray, r: jnp.ndarray,
+                  d: jnp.ndarray) -> jnp.ndarray:
+    """Total infection rate g(A,R,D) = alpha0 + alpha / (1 + (A+R+D)^n).
+
+    ``theta`` is [..., 8]; a, r, d broadcast against its leading dims.
+    The observed total (A+R+D) is clamped to >= 0 before the power to keep
+    the fractional exponent well-defined under float error.
+    """
+    total = jnp.maximum(a + r + d, 0.0)
+    return theta[..., ALPHA0] + theta[..., ALPHA] / (
+        1.0 + jnp.power(total, theta[..., N_EXP])
+    )
+
+
+def hazard(state: jnp.ndarray, theta: jnp.ndarray, pop) -> jnp.ndarray:
+    """Hazard function h of eq. (5): per-day expected transition counts.
+
+    state: [..., 6], theta: [..., 8], pop: scalar. Returns [..., 5] in the
+    paper's ordering (S->I, I->A, A->R, A->D, I->Ru).
+    """
+    g = response_rate(theta, state[..., A], state[..., R], state[..., D])
+    h1 = g * state[..., S] * state[..., I] / pop
+    h2 = theta[..., GAMMA] * state[..., I]
+    h3 = theta[..., BETA] * state[..., A]
+    h4 = theta[..., DELTA] * state[..., A]
+    h5 = theta[..., BETA] * theta[..., ETA] * state[..., I]
+    return jnp.stack([h1, h2, h3, h4, h5], axis=-1)
+
+
+def sample_transitions(h: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Gaussian-approximated Poisson increments: floor(h + sqrt(h) * z).
+
+    ``z`` are standard normals with the same shape as ``h``.  Negative
+    hazards cannot occur for non-negative states, but we clamp h >= 0
+    anyway so sqrt never sees a negative under float error.  The result is
+    clamped to >= 0 (a Poisson count cannot be negative).
+    """
+    h = jnp.maximum(h, 0.0)
+    raw = jnp.floor(h + jnp.sqrt(h) * z)
+    return jnp.maximum(raw, 0.0)
+
+
+def clamp_transitions(n: jnp.ndarray, state: jnp.ndarray) -> jnp.ndarray:
+    """Clamp sampled transition counts so no compartment goes negative.
+
+    Clamping order follows the hazard ordering: within a source
+    compartment, earlier transitions get priority on the remaining mass
+    (n2 before n5 out of I; n3 before n4 out of A).
+    """
+    n1 = jnp.minimum(n[..., 0], state[..., S])
+    n2 = jnp.minimum(n[..., 1], state[..., I])
+    n5 = jnp.minimum(n[..., 4], state[..., I] - n2)
+    n3 = jnp.minimum(n[..., 2], state[..., A])
+    n4 = jnp.minimum(n[..., 3], state[..., A] - n3)
+    return jnp.stack([n1, n2, n3, n4, n5], axis=-1)
+
+
+def step(state: jnp.ndarray, theta: jnp.ndarray, z: jnp.ndarray,
+         pop) -> jnp.ndarray:
+    """One tau-leap day: hazard -> sample -> clamp -> apply.
+
+    state [..., 6], theta [..., 8], z [..., 5] std normals. Returns the
+    next-day state [..., 6].
+    """
+    h = hazard(state, theta, pop)
+    n = clamp_transitions(sample_transitions(h, z), state)
+    n1, n2, n3, n4, n5 = (n[..., k] for k in range(5))
+    return jnp.stack(
+        [
+            state[..., S] - n1,
+            state[..., I] + n1 - n2 - n5,
+            state[..., A] + n2 - n3 - n4,
+            state[..., R] + n3,
+            state[..., D] + n4,
+            state[..., RU] + n5,
+        ],
+        axis=-1,
+    )
+
+
+def init_state(theta: jnp.ndarray, a0, r0, d0, pop) -> jnp.ndarray:
+    """First-day initialization: Ru=0, I0 = kappa*A0, S = P - (A0+R0+D0+I0).
+
+    theta: [..., 8]; a0/r0/d0/pop scalars. Returns [..., 6].
+    """
+    i0 = theta[..., KAPPA] * a0
+    s0 = pop - (a0 + r0 + d0 + i0)
+    z = jnp.zeros_like(i0)
+    return jnp.stack([s0, i0, z + a0, z + r0, z + d0, z], axis=-1)
+
+
+def simulate(theta: jnp.ndarray, noise: jnp.ndarray,
+             consts: jnp.ndarray) -> jnp.ndarray:
+    """Simulate the observable trajectory for a batch of parameters.
+
+    theta:  [B, 8]
+    noise:  [D, B, 5] std normals (day-major so the scan carries no
+            transpose; noise[0] is unused because day 0 is the anchored
+            initial condition)
+    consts: [4] = (A0, R0, D0, P)
+    returns traj [B, 3, D]
+
+    Day alignment: the observed JHU-style data includes the initial day,
+    so traj[:, :, 0] is the initial (A0, R0, D0) shared by every sample
+    and traj[:, :, t] for t >= 1 is the state after t tau-leap updates.
+    """
+    a0, r0, d0, pop = consts[0], consts[1], consts[2], consts[3]
+    state0 = init_state(theta, a0, r0, d0, pop)
+
+    def body(state, z):
+        nxt = step(state, theta, z, pop)
+        return nxt, nxt[..., A:D + 1]  # observables (A, R, D) of the new day
+
+    # D-1 transitions after the anchored initial day.
+    _, obs = lax.scan(body, state0, noise[1:])
+    first = state0[..., A:D + 1][None]  # [1, B, 3]
+    traj = jnp.concatenate([first, obs], axis=0)  # [D, B, 3]
+    return jnp.transpose(traj, (1, 2, 0))  # [B, 3, D]
+
+
+def distance(traj: jnp.ndarray, observed: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean distance between simulated [B,3,D] and observed [3,D]."""
+    diff = traj - observed[None]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=(1, 2)))
+
+
+def simulate_distance(theta: jnp.ndarray, noise: jnp.ndarray,
+                      consts: jnp.ndarray, observed: jnp.ndarray) -> jnp.ndarray:
+    """Fused oracle: simulate then Euclidean distance, returns [B]."""
+    return distance(simulate(theta, noise, consts), observed)
+
+
+def simulate_full(theta: jnp.ndarray, noise: jnp.ndarray,
+                  consts: jnp.ndarray) -> jnp.ndarray:
+    """Like :func:`simulate` but returns the full state [B, 6, D].
+
+    Used by tests that check conservation invariants over the latent
+    compartments as well as the observed ones.
+    """
+    a0, r0, d0, pop = consts[0], consts[1], consts[2], consts[3]
+    state0 = init_state(theta, a0, r0, d0, pop)
+
+    def body(state, z):
+        nxt = step(state, theta, z, pop)
+        return nxt, nxt
+
+    _, states = lax.scan(body, state0, noise[1:])
+    traj = jnp.concatenate([state0[None], states], axis=0)  # [D, B, 6]
+    return jnp.transpose(traj, (1, 2, 0))  # [B, 6, D]

@@ -1,0 +1,274 @@
+"""Pallas kernels for the batched tau-leaping epidemic simulation.
+
+This is Layer 1: the compute hot-spot of the paper's parallel ABC
+inference — simulating the 6-compartment stochastic model for a large
+batch of parameter samples — expressed as a Pallas kernel.
+
+Hardware adaptation (paper targeted GPU/IPU; we target the TPU model):
+the paper's IPU insight is that the whole working set (code + state +
+per-sample data) lives in on-chip SRAM next to the compute.  The TPU
+analogue is VMEM residency: we tile the *batch* dimension into blocks
+(``BLOCK_B`` samples per grid step) and keep the full day loop *inside*
+the kernel, so the [bs, 6] state, the [bs, 8] parameters and the
+[D, bs, 5] noise slab stay in VMEM for the entire simulation — the
+HBM<->VMEM schedule (BlockSpec) replaces the paper's threadblock/tile
+mapping.  Per-block VMEM footprint at the default BLOCK_B=1000, D=49:
+
+    noise 49*1000*5*4B = 0.98 MB, theta 32 KB, state 24 KB  (< 16 MB VMEM)
+
+Two kernel variants:
+
+- ``simulate_distance``: the ABC hot path.  Fuses the day loop with the
+  running Euclidean-distance accumulation so the [B, 3, D] trajectory is
+  never materialized in HBM (the paper observed the bulk distance
+  calculation to dominate peak memory liveness, Fig. 4 — this is the
+  fix their §4.3 "unpublished results" experimented with, which is a win
+  on TPU where it was a loss on IPU).
+- ``simulate_traj``: returns the full observable trajectory; used for the
+  120-day posterior predictive simulations (Fig. 7) and for tests.
+
+Kernels MUST be lowered with ``interpret=True`` on this image: real-TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot run.
+All math matches ``ref.py`` op-for-op so the pytest oracle comparison is
+tight.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: Default number of samples per grid block (the VMEM tile size).
+#: Per-block VMEM at 10k: noise 49·10000·5·4 = 9.8 MB + θ/state < 1 MB —
+#: inside the 16 MB VMEM budget, and the larger block amortizes the
+#: per-grid-step machinery (measured 42.3 → 32.0 ms per 10k-sample run
+#: when going from 2k to 10k blocks; EXPERIMENTS.md §Perf).
+BLOCK_B = 10_000
+
+
+def _day0_sqdist(consts, observed):
+    """Squared-distance contribution of the anchored initial day.
+
+    Day 0 of every simulated trajectory is (A0, R0, D0) by construction,
+    so its contribution is a scalar shared by the whole batch.
+    """
+    a0, r0, d0 = consts[0], consts[1], consts[2]
+    obs0 = observed[:, 0]
+    return ((a0 - obs0[0]) ** 2 + (r0 - obs0[1]) ** 2 + (d0 - obs0[2]) ** 2)
+
+
+def _distance_kernel(theta_ref, noise_ref, consts_ref, observed_ref, dist_ref):
+    """Fused simulate + Euclidean distance for one batch block.
+
+    theta_ref    [bs, 8]      block of parameter samples
+    noise_ref    [D, 5, bs]   std normals, transition-major layout
+    consts_ref   [4]          (A0, R0, D0, P) — broadcast to every block
+    observed_ref [3, D]       ground-truth observables — broadcast
+    dist_ref     [bs]         output: Euclidean distance per sample
+
+    Hot-path layout notes (§Perf):
+    * the state is carried as six separate [bs] vectors (structure-of-
+      arrays) instead of one [bs, 6] array — the per-day ``stack``/
+      ``slice`` pair of the array layout cost ~43 % of kernel time on
+      CPU (the same data-arrangement tax the paper's Table 5 measures at
+      ~50 % of IPU cycles);
+    * noise arrives transition-major ([D, 5, B], minor dimension = the
+      batch) so every lane access is a contiguous [bs] row and the
+      upstream RNG fusion vectorizes (minor-dim-5 layouts de-vectorized
+      the whole hash+erfinv chain: 70 ms vs 18 ms at B=10k).
+    Same operations in the same order as ``ref.step`` — results agree
+    with the oracle to float-reassociation tolerance (≤ 5e-7 relative;
+    the traj/onestep kernels keep the array layout and stay bit-exact
+    with ``ref``).
+    """
+    theta = theta_ref[...]
+    consts = consts_ref[...]
+    observed = observed_ref[...]
+    pop = consts[3]
+    days = observed.shape[1]
+
+    alpha0 = theta[:, ref.ALPHA0]
+    alpha = theta[:, ref.ALPHA]
+    n_exp = theta[:, ref.N_EXP]
+    beta = theta[:, ref.BETA]
+    gamma = theta[:, ref.GAMMA]
+    delta = theta[:, ref.DELTA]
+    eta = theta[:, ref.ETA]
+    kappa = theta[:, ref.KAPPA]
+
+    a0, r0, d0 = consts[0], consts[1], consts[2]
+    i0 = kappa * a0
+    s0 = pop - (a0 + r0 + d0 + i0)
+    zero = jnp.zeros_like(i0)
+    acc0 = jnp.full((theta.shape[0],), _day0_sqdist(consts, observed),
+                    dtype=jnp.float32)
+
+    def body(t, carry):
+        s, i, a, r, d, ru, acc = carry
+        z = noise_ref[t]  # [5, bs] — contiguous per-transition rows
+        total = jnp.maximum(a + r + d, 0.0)
+        g = alpha0 + alpha / (1.0 + jnp.power(total, n_exp))
+        h1 = g * s * i / pop
+        h2 = gamma * i
+        h3 = beta * a
+        h4 = delta * a
+        h5 = beta * eta * i
+
+        def samp(h, zz):
+            h = jnp.maximum(h, 0.0)
+            return jnp.maximum(jnp.floor(h + jnp.sqrt(h) * zz), 0.0)
+
+        n1 = jnp.minimum(samp(h1, z[0]), s)
+        n2 = jnp.minimum(samp(h2, z[1]), i)
+        n5 = jnp.minimum(samp(h5, z[4]), i - n2)
+        n3 = jnp.minimum(samp(h3, z[2]), a)
+        n4 = jnp.minimum(samp(h4, z[3]), a - n3)
+
+        a2 = a + n2 - n3 - n4
+        r2 = r + n3
+        d2 = d + n4
+        obs_t = lax.dynamic_slice_in_dim(observed, t, 1, axis=1)[:, 0]  # [3]
+        da = a2 - obs_t[0]
+        dr = r2 - obs_t[1]
+        dd = d2 - obs_t[2]
+        return (
+            s - n1,
+            i + n1 - n2 - n5,
+            a2,
+            r2,
+            d2,
+            ru + n5,
+            acc + (da * da + dr * dr + dd * dd),
+        )
+
+    out = lax.fori_loop(
+        1, days, body,
+        (s0, i0, zero + a0, zero + r0, zero + d0, zero, acc0),
+    )
+    dist_ref[...] = jnp.sqrt(out[6])
+
+
+def _traj_kernel(theta_ref, noise_ref, consts_ref, traj_ref):
+    """Simulate one batch block, writing the observable trajectory.
+
+    noise_ref [D, 5, bs] (transition-major, like the distance kernel);
+    traj_ref [bs, 3, D]: (A, R, D) per day; day 0 is the initial state.
+    Uses the array-layout ``ref.step`` so it stays bit-exact with the
+    oracle (this kernel is the cold posterior-predictive path).
+    """
+    theta = theta_ref[...]
+    consts = consts_ref[...]
+    pop = consts[3]
+    days = traj_ref.shape[2]
+
+    state0 = ref.init_state(theta, consts[0], consts[1], consts[2], pop)
+    traj_ref[:, :, 0] = state0[..., ref.A:ref.D + 1]
+
+    def body(t, state):
+        z = noise_ref[t].T  # [bs, 5] for the array-layout oracle step
+        nxt = ref.step(state, theta, z, pop)
+        pl.store(
+            traj_ref,
+            (slice(None), slice(None), pl.dslice(t, 1)),
+            nxt[..., ref.A:ref.D + 1][..., None],
+        )
+        return nxt
+
+    lax.fori_loop(1, days, body, state0)
+
+
+def _block_b(batch: int, block_b: int | None) -> int:
+    """Resolve and validate the batch block size for a given batch."""
+    bs = block_b or min(BLOCK_B, batch)
+    if batch % bs != 0:
+        raise ValueError(f"batch {batch} not divisible by block {bs}")
+    return bs
+
+
+@functools.partial(jax.named_call, name="tau_leap_distance")
+def simulate_distance(theta: jnp.ndarray, noise: jnp.ndarray,
+                      consts: jnp.ndarray, observed: jnp.ndarray,
+                      *, block_b: int | None = None) -> jnp.ndarray:
+    """Batched fused simulate+distance via Pallas. Returns dist [B].
+
+    theta [B, 8], noise [D, 5, B] (transition-major), consts [4],
+    observed [3, D].
+    """
+    batch = theta.shape[0]
+    days = observed.shape[1]
+    bs = _block_b(batch, block_b)
+    return pl.pallas_call(
+        _distance_kernel,
+        grid=(batch // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, 8), lambda i: (i, 0)),
+            pl.BlockSpec((days, 5, bs), lambda i: (0, 0, i)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((3, days), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,
+    )(theta, noise, consts, observed)
+
+
+@functools.partial(jax.named_call, name="tau_leap_traj")
+def simulate_traj(theta: jnp.ndarray, noise: jnp.ndarray,
+                  consts: jnp.ndarray, *, days: int,
+                  block_b: int | None = None) -> jnp.ndarray:
+    """Batched trajectory simulation via Pallas. Returns traj [B, 3, D].
+
+    noise is [D, 5, B] (transition-major, matching the distance kernel).
+    """
+    batch = theta.shape[0]
+    bs = _block_b(batch, block_b)
+    return pl.pallas_call(
+        _traj_kernel,
+        grid=(batch // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, 8), lambda i: (i, 0)),
+            pl.BlockSpec((days, 5, bs), lambda i: (0, 0, i)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs, 3, days), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, 3, days), jnp.float32),
+        interpret=True,
+    )(theta, noise, consts)
+
+
+def _onestep_kernel(state_ref, theta_ref, z_ref, consts_ref, out_ref):
+    """Single tau-leap day for one batch block (test/micro-bench surface)."""
+    out_ref[...] = ref.step(
+        state_ref[...], theta_ref[...], z_ref[...], consts_ref[...][3]
+    )
+
+
+def onestep(state: jnp.ndarray, theta: jnp.ndarray, z: jnp.ndarray,
+            consts: jnp.ndarray, *, block_b: int | None = None) -> jnp.ndarray:
+    """One tau-leap day over a batch via Pallas. Returns next state [B, 6].
+
+    This is the kernel surface the Rust integration tests drive with
+    explicit noise so the pure-Rust model can be compared bit-for-bit
+    against the compiled HLO.
+    """
+    batch = state.shape[0]
+    bs = _block_b(batch, block_b)
+    return pl.pallas_call(
+        _onestep_kernel,
+        grid=(batch // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, 6), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 8), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 5), lambda i: (i, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs, 6), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, 6), jnp.float32),
+        interpret=True,
+    )(state, theta, z, consts)

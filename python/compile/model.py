@@ -1,0 +1,152 @@
+"""Layer 2: the JAX compute graphs AOT-compiled for the Rust coordinator.
+
+Three graphs, each lowered once by ``aot.py`` to HLO text and executed
+from Rust via PJRT (Python is never on the inference path):
+
+- :func:`abc_run` — one *run* of the paper's parallelized ABC (Fig. 2):
+  sample ``batch`` parameter vectors from the uniform prior, simulate the
+  epidemic for ``days`` days through the Pallas kernel, and return the
+  sampled parameters together with their Euclidean distance to the
+  observed data.  Accept/reject (tolerance filtering), sample return
+  strategy (outfeed chunking vs Top-k) and the run-until-N-accepted loop
+  all live in the Rust coordinator — exactly the split the paper
+  describes between the XLA graph and the host.
+
+- :func:`predict` — posterior-predictive trajectory simulation for
+  accepted samples (Fig. 7's 120-day projections).
+
+- :func:`onestep` — a single tau-leap day with *explicit* noise input, so
+  the Rust reference simulator can be validated bit-for-bit against the
+  compiled kernel.
+
+XLA requires fixed output shapes, which is why ``abc_run`` returns the
+full ``[B, 8]`` parameter and ``[B]`` distance arrays rather than the
+(dynamically many) accepted samples — the same constraint §3.2 of the
+paper designs its two return strategies around.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import prng, tau_leap
+
+#: (A0, R0, D0, P) packing order of the consts input.
+CONSTS_DOC = ("A0", "R0", "D0", "P")
+
+#: Supported in-graph RNG implementations. "fast" is the default
+#: counter-hash generator (see kernels/prng.py — 4.7x faster bits on
+#: CPU); "threefry" is the bit-exact jax.random path for A/B checks.
+RNG_IMPLS = ("fast", "threefry")
+
+
+def sample_prior(key: jax.Array, batch: int, prior_low: jnp.ndarray,
+                 prior_high: jnp.ndarray, *, rng: str = "fast") -> jnp.ndarray:
+    """Draw ``batch`` samples from the uniform prior U(low, high). [B, 8]."""
+    if rng == "fast":
+        u = prng.uniform(key, (batch, 8), prng.SALT_THETA)
+    else:
+        tkey = jax.random.wrap_key_data(key, impl="threefry2x32")
+        u = jax.random.uniform(jax.random.fold_in(tkey, 0), (batch, 8),
+                               dtype=jnp.float32)
+    return prior_low + u * (prior_high - prior_low)
+
+
+def abc_run(key: jax.Array, observed: jnp.ndarray, prior_low: jnp.ndarray,
+            prior_high: jnp.ndarray, consts: jnp.ndarray, *, batch: int,
+            block_b: int | None = None,
+            rng: str = "fast") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One vectorized ABC run: prior -> simulate -> distance.
+
+    Inputs (all runtime parameters of the compiled executable):
+      key        u32[2]    per-run key; the coordinator derives one per
+                           global run index so every run across every
+                           device draws independent samples
+      observed   f32[3,D]  ground-truth (A, R, D) per day
+      prior_low  f32[8]    lower prior bounds (0 in the paper)
+      prior_high f32[8]    upper prior bounds (eq. 2)
+      consts     f32[4]    (A0, R0, D0, P)
+
+    Returns (theta f32[B,8], dist f32[B]).
+    """
+    if rng not in RNG_IMPLS:
+        raise ValueError(f"unknown rng impl {rng!r}")
+    days = observed.shape[1]
+    theta = sample_prior(key, batch, prior_low, prior_high, rng=rng)
+    # Transition-major noise layout [D, 5, B]: minor dimension = batch,
+    # so the RNG fusion vectorizes and kernel lane reads are contiguous
+    # (EXPERIMENTS.md §Perf: 70 ms → 18 ms for the noise stage at B=10k).
+    if rng == "fast":
+        noise = prng.normal(key, (days, 5, batch), prng.SALT_NOISE)
+    else:
+        tkey = jax.random.wrap_key_data(key, impl="threefry2x32")
+        noise = jax.random.normal(jax.random.fold_in(tkey, 1),
+                                  (days, 5, batch), dtype=jnp.float32)
+    dist = tau_leap.simulate_distance(theta, noise, consts, observed,
+                                      block_b=block_b)
+    return theta, dist
+
+
+def predict(key: jax.Array, theta: jnp.ndarray, consts: jnp.ndarray, *,
+            days: int, block_b: int | None = None) -> jnp.ndarray:
+    """Posterior-predictive simulation: trajectories for given parameters.
+
+    theta f32[B,8] are accepted posterior samples; returns f32[B,3,days]
+    observable trajectories (one stochastic rollout per sample).
+    """
+    batch = theta.shape[0]
+    noise = jax.random.normal(key, (days, 5, batch), dtype=jnp.float32)
+    return tau_leap.simulate_traj(theta, noise, consts, days=days,
+                                  block_b=block_b)
+
+
+def onestep(state: jnp.ndarray, theta: jnp.ndarray, z: jnp.ndarray,
+            consts: jnp.ndarray) -> jnp.ndarray:
+    """One tau-leap day with explicit noise (validation surface). [B,6]."""
+    return tau_leap.onestep(state, theta, z, consts)
+
+
+# ---------------------------------------------------------------------------
+# Workload statistics for the hardware performance model (hwmodel/).
+# These are analytic counts of the per-run work, used by the Rust roofline
+# model to project Xeon / V100 / Mk1-IPU runtimes from the measured CPU
+# baseline (DESIGN.md §1). Counting convention: fused multiply-add = 2 flops.
+# ---------------------------------------------------------------------------
+
+#: flops per sample-day of the tau-leap step: response g (~12: add, div,
+#: pow≈8), hazard (7 mul/div), gaussian sampling (5 * [sqrt≈4 + mul + add +
+#: floor + max] = 40), clamps (7), state update (8).
+FLOPS_PER_SAMPLE_DAY = 74.0
+#: flops per sample-day of the distance accumulation (3 sub, 3 mul, 3 add).
+FLOPS_PER_SAMPLE_DAY_DIST = 9.0
+
+
+def rng_flops_per_sample(days: int) -> float:
+    """flops per sample of prior sampling + threefry normal generation
+    (threefry ~24 u32 rounds per 2 outputs + box-muller/erfinv ~20)."""
+    return 8 * 3 + (days * 5) * 34.0
+
+
+def workload_stats(batch: int, days: int) -> dict:
+    """Per-run work statistics consumed by rust/src/hwmodel."""
+    sim = batch * days * (FLOPS_PER_SAMPLE_DAY + FLOPS_PER_SAMPLE_DAY_DIST)
+    rng = batch * rng_flops_per_sample(days)
+    # Streaming bytes per run: the noise slab is generated and consumed
+    # once (f32, write+read), theta written + read, outputs written.
+    noise_bytes = days * batch * 5 * 4 * 2
+    theta_bytes = batch * 8 * 4 * 2
+    out_bytes = batch * (8 + 1) * 4
+    # Working set that must be cache/SRAM-resident for full-speed reuse:
+    # per-sample state (6) + theta (8) + hazard scratch (5) + dist acc (1).
+    working_set = batch * (6 + 8 + 5 + 1) * 4
+    return {
+        "flops": sim + rng,
+        "sim_flops": sim,
+        "rng_flops": rng,
+        "bytes_streamed": noise_bytes + theta_bytes + out_bytes,
+        "working_set_bytes": working_set,
+        "output_bytes": out_bytes,
+        "batch": batch,
+        "days": days,
+    }

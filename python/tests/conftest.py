@@ -1,0 +1,26 @@
+"""Shared fixtures for the Layer-1/Layer-2 test suite."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="session")
+def prior_high():
+    return ref.PRIOR_HIGH
+
+
+@pytest.fixture()
+def consts():
+    """Italy-like initial condition: (A0, R0, D0, P)."""
+    return jnp.array([155.0, 2.0, 3.0, 60_000_000.0], jnp.float32)
+
+
+def make_batch(seed: int, batch: int, days: int, prior_scale=1.0):
+    """Draw a (theta, noise) batch from the paper's prior."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    theta = jax.random.uniform(k1, (batch, 8)) * ref.PRIOR_HIGH * prior_scale
+    noise = jax.random.normal(k2, (days, batch, 5))
+    return theta.astype(jnp.float32), noise.astype(jnp.float32)

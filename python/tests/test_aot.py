@@ -1,0 +1,82 @@
+"""AOT pipeline tests: HLO text emission + manifest integrity.
+
+Lowering the full artifact set takes minutes, so these tests lower only
+the smallest variants and validate the manifest contract the Rust
+runtime depends on.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out), quick=True)
+    return str(out), manifest
+
+
+def test_manifest_written(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["format"] == "hlo-text"
+
+
+def test_every_artifact_file_exists_and_is_hlo(built):
+    out, manifest = built
+    assert len(manifest["artifacts"]) >= 4
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(out, entry["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} does not look like HLO text"
+
+
+def test_abc_entry_contract(built):
+    _, manifest = built
+    entry = manifest["artifacts"]["abc_b1000_d49"]
+    assert entry["kind"] == "abc"
+    assert entry["batch"] == 1000 and entry["days"] == 49
+    names = [i["name"] for i in entry["inputs"]]
+    assert names == ["key", "observed", "prior_low", "prior_high", "consts"]
+    assert entry["inputs"][0]["dtype"] == "uint32"
+    assert entry["inputs"][0]["shape"] == [2]
+    assert entry["inputs"][1]["shape"] == [3, 49]
+    assert entry["outputs"][0]["shape"] == [1000, 8]
+    assert entry["outputs"][1]["shape"] == [1000]
+
+
+def test_onestep_entry_contract(built):
+    _, manifest = built
+    entry = manifest["artifacts"][f"onestep_b{aot.ONESTEP_BATCH}"]
+    assert [i["name"] for i in entry["inputs"]] == [
+        "state", "theta", "z", "consts"]
+    assert entry["outputs"][0]["shape"] == [aot.ONESTEP_BATCH, 6]
+
+
+def test_stats_present_and_positive(built):
+    _, manifest = built
+    for name, entry in manifest["artifacts"].items():
+        stats = entry["stats"]
+        for k in ("flops", "bytes_streamed", "working_set_bytes"):
+            assert stats[k] > 0, (name, k)
+
+
+def test_hlo_parameter_count_matches_manifest(built):
+    out, manifest = built
+    entry = manifest["artifacts"]["abc_b1000_d16"]
+    with open(os.path.join(out, entry["file"])) as f:
+        text = f.read()
+    # ENTRY computation must declare exactly the manifest inputs.
+    assert any("ENTRY" in l for l in text.splitlines())
+    n_params = text.count(" parameter(")
+    # parameters appear at least once per manifest input (inner
+    # computations declare their own, so >= is the right bound)
+    assert n_params >= len(entry["inputs"])

@@ -1,0 +1,130 @@
+"""Layer-2 tests: abc_run / predict / onestep graph semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+CONSTS = jnp.array([155.0, 2.0, 3.0, 60_000_000.0], jnp.float32)
+LOW = jnp.zeros(8, jnp.float32)
+HIGH = ref.PRIOR_HIGH
+
+
+def _observed(days=16):
+    theta = jnp.array([[0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83]],
+                      jnp.float32)
+    noise = jax.random.normal(jax.random.PRNGKey(3), (days, 1, 5))
+    return ref.simulate(theta, noise, CONSTS)[0]
+
+
+def test_abc_run_shapes_and_dtypes():
+    obs = _observed()
+    theta, dist = model.abc_run(jax.random.PRNGKey(0), obs, LOW, HIGH,
+                                CONSTS, batch=200, block_b=50)
+    assert theta.shape == (200, 8) and theta.dtype == jnp.float32
+    assert dist.shape == (200,) and dist.dtype == jnp.float32
+
+
+def test_abc_run_theta_within_prior():
+    obs = _observed()
+    theta, _ = model.abc_run(jax.random.PRNGKey(1), obs, LOW, HIGH, CONSTS,
+                             batch=2000, block_b=500)
+    t = np.asarray(theta)
+    assert (t >= np.asarray(LOW)).all()
+    assert (t <= np.asarray(HIGH)).all()
+    # every parameter dimension actually spans its range (not collapsed)
+    spread = t.max(0) - t.min(0)
+    assert (spread > 0.5 * np.asarray(HIGH)).all()
+
+
+def test_abc_run_deterministic_in_key():
+    obs = _observed()
+    a = model.abc_run(jax.random.PRNGKey(7), obs, LOW, HIGH, CONSTS,
+                      batch=100, block_b=50)
+    b = model.abc_run(jax.random.PRNGKey(7), obs, LOW, HIGH, CONSTS,
+                      batch=100, block_b=50)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_abc_run_keys_independent():
+    obs = _observed()
+    a = model.abc_run(jax.random.PRNGKey(0), obs, LOW, HIGH, CONSTS,
+                      batch=100, block_b=50)
+    b = model.abc_run(jax.random.PRNGKey(1), obs, LOW, HIGH, CONSTS,
+                      batch=100, block_b=50)
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+def test_abc_run_distances_finite_nonnegative():
+    obs = _observed()
+    _, dist = model.abc_run(jax.random.PRNGKey(2), obs, LOW, HIGH, CONSTS,
+                            batch=1000, block_b=250)
+    d = np.asarray(dist)
+    assert np.isfinite(d).all() and (d >= 0).all()
+
+
+def test_abc_run_perfect_theta_scores_low():
+    """Simulating near the generating theta yields far lower distance than
+    the prior bulk — the signal ABC acceptance relies on."""
+    days = 25
+    gen_theta = jnp.array([0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83],
+                          jnp.float32)
+    obs = _observed(days)
+    # narrow prior box around the generating theta
+    eps = 1e-3
+    lo = jnp.maximum(gen_theta - eps, 0)
+    hi = gen_theta + eps
+    _, d_near = model.abc_run(jax.random.PRNGKey(5), obs, lo, hi, CONSTS,
+                              batch=200, block_b=50)
+    _, d_prior = model.abc_run(jax.random.PRNGKey(5), obs, LOW, HIGH, CONSTS,
+                               batch=200, block_b=50)
+    assert np.median(np.asarray(d_near)) < np.median(np.asarray(d_prior))
+
+
+def test_predict_shapes_and_day0_anchor():
+    theta = jnp.tile(jnp.array([[0.38, 36.0, 0.6, 0.013, 0.385, 0.009,
+                                 0.48, 0.83]], jnp.float32), (64, 1))
+    traj = model.predict(jax.random.PRNGKey(0), theta, CONSTS, days=30,
+                         block_b=64)
+    assert traj.shape == (64, 3, 30)
+    t = np.asarray(traj)
+    np.testing.assert_array_equal(t[:, 0, 0], np.full(64, 155.0))
+    np.testing.assert_array_equal(t[:, 1, 0], np.full(64, 2.0))
+    np.testing.assert_array_equal(t[:, 2, 0], np.full(64, 3.0))
+
+
+def test_onestep_matches_ref():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    theta = jax.random.uniform(k1, (256, 8)) * HIGH
+    z = jax.random.normal(k2, (256, 5))
+    state = ref.init_state(theta, CONSTS[0], CONSTS[1], CONSTS[2], CONSTS[3])
+    want = ref.step(state, theta, z, CONSTS[3])
+    got = model.onestep(state, theta, z, CONSTS)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.sampled_from([50, 100, 250]), seed=st.integers(0, 2**16))
+def test_hypothesis_abc_run_prior_bounds(batch, seed):
+    obs = _observed(8)
+    theta, _ = model.abc_run(jax.random.PRNGKey(seed), obs, LOW, HIGH,
+                             CONSTS, batch=batch, block_b=batch)
+    t = np.asarray(theta)
+    assert (t >= 0).all() and (t <= np.asarray(HIGH)).all()
+
+
+def test_workload_stats_scaling():
+    """Workload statistics scale linearly in batch and days."""
+    s1 = model.workload_stats(1000, 49)
+    s2 = model.workload_stats(2000, 49)
+    assert s2["sim_flops"] == 2 * s1["sim_flops"]
+    assert s2["working_set_bytes"] == 2 * s1["working_set_bytes"]
+    s3 = model.workload_stats(1000, 98)
+    assert s3["sim_flops"] == 2 * s1["sim_flops"]
+    # outputs don't depend on days
+    assert s3["output_bytes"] == s1["output_bytes"]

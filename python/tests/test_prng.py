@@ -1,0 +1,84 @@
+"""Statistical validation of the fast counter-hash RNG (kernels/prng.py).
+
+The fast generator replaces threefry on the simulation hot path, so its
+output must be statistically indistinguishable from i.i.d. draws for
+this application: clean moments, no lag correlation, no cross-key or
+cross-salt correlation, uniform bucket occupancy.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prng
+
+KEY = jnp.array([123, 456], jnp.uint32)
+
+
+def test_normal_moments():
+    x = np.asarray(prng.normal(KEY, (500_000,), prng.SALT_NOISE))
+    assert abs(x.mean()) < 0.01
+    assert abs(x.var() - 1.0) < 0.01
+    skew = ((x - x.mean()) ** 3).mean() / x.std() ** 3
+    kurt = ((x - x.mean()) ** 4).mean() / x.var() ** 2
+    assert abs(skew) < 0.02, skew
+    assert abs(kurt - 3.0) < 0.05, kurt
+
+
+def test_uniform_range_and_buckets():
+    u = np.asarray(prng.uniform(KEY, (400_000,), prng.SALT_THETA))
+    assert (u >= 0.0).all() and (u < 1.0).all()
+    counts, _ = np.histogram(u, bins=20, range=(0.0, 1.0))
+    expected = len(u) / 20
+    # chi-square-ish: every bucket within 3% of expected
+    assert (np.abs(counts - expected) < 0.03 * expected).all(), counts
+
+
+def test_lag_correlations_negligible():
+    x = np.asarray(prng.normal(KEY, (300_000,), prng.SALT_NOISE))
+    for lag in (1, 2, 7, 49):
+        c = np.corrcoef(x[:-lag], x[lag:])[0, 1]
+        assert abs(c) < 0.01, (lag, c)
+
+
+def test_cross_key_and_cross_salt_independence():
+    a = np.asarray(prng.normal(KEY, (200_000,), prng.SALT_NOISE))
+    b = np.asarray(prng.normal(jnp.array([123, 457], jnp.uint32), (200_000,),
+                               prng.SALT_NOISE))
+    c = np.asarray(prng.normal(KEY, (200_000,), prng.SALT_THETA))
+    assert abs(np.corrcoef(a, b)[0, 1]) < 0.01
+    assert abs(np.corrcoef(a, c)[0, 1]) < 0.01
+    assert not np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_deterministic_per_key():
+    a = np.asarray(prng.bits(KEY, 1000, prng.SALT_NOISE))
+    b = np.asarray(prng.bits(KEY, 1000, prng.SALT_NOISE))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k0=st.integers(0, 2**32 - 1), k1=st.integers(0, 2**32 - 1))
+def test_hypothesis_moments_hold_across_keys(k0, k1):
+    key = jnp.array([k0, k1], jnp.uint32)
+    x = np.asarray(prng.normal(key, (50_000,), prng.SALT_NOISE))
+    assert abs(x.mean()) < 0.03
+    assert abs(x.var() - 1.0) < 0.04
+
+
+def test_bits_avalanche_across_adjacent_keys():
+    a = np.asarray(prng.bits(jnp.array([0, 0], jnp.uint32), 4096, prng.SALT_NOISE))
+    b = np.asarray(prng.bits(jnp.array([1, 0], jnp.uint32), 4096, prng.SALT_NOISE))
+    flips = np.unpackbits((a ^ b).view(np.uint8)).mean()
+    assert 0.45 < flips < 0.55, flips
+
+
+def test_normal_tail_mass():
+    """P(|z| > 2) ≈ 4.55 %, P(|z| > 3) ≈ 0.27 % — tails must be right."""
+    x = np.asarray(prng.normal(KEY, (1_000_000,), prng.SALT_NOISE))
+    p2 = (np.abs(x) > 2).mean()
+    p3 = (np.abs(x) > 3).mean()
+    assert abs(p2 - 0.0455) < 0.003, p2
+    assert abs(p3 - 0.0027) < 0.0008, p3

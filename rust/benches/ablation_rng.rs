@@ -1,0 +1,59 @@
+//! Ablation: fast counter-hash RNG vs threefry (EXPERIMENTS.md §Perf).
+//!
+//! Runs the identical ABC graph compiled with both in-graph generators
+//! (`abc_b10000_d49` fast vs `abc_tf_b10000_d49` threefry) and compares
+//! per-run wall time and statistical behaviour (acceptance at a fixed
+//! tolerance must agree — the generators are interchangeable draws).
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::data::synthetic;
+use abc_ipu::model::Prior;
+use abc_ipu::runtime::Runtime;
+
+fn main() {
+    if !harness::require_artifacts("ablation_rng") {
+        return;
+    }
+    let mut suite = harness::Suite::new("ablation_rng");
+    let rt = Runtime::open(harness::artifacts_dir()).expect("runtime");
+    let ds = synthetic::default_dataset(49, 0x5eed);
+    let observed = ds.observed.flatten();
+    let consts = ds.consts();
+    let prior = Prior::paper();
+    let tol = 8.4e5f32;
+
+    let mut rates = Vec::new();
+    for (label, name) in [("fast_hash", "abc_b10000_d49"), ("threefry", "abc_tf_b10000_d49")] {
+        let exe = match rt.abc_named(name) {
+            Ok(e) => e,
+            Err(e) => {
+                suite.note(format!("{label}: {e} (rebuild artifacts)"));
+                continue;
+            }
+        };
+        let mut key = 0u32;
+        let mut accepted = 0u64;
+        let mut total = 0u64;
+        suite.bench(format!("abc_run_{label}"), 1, 6, || {
+            key += 1;
+            let out = exe
+                .run([key, 3], &observed, prior.low(), prior.high(), &consts)
+                .expect("run");
+            accepted += out.distances.iter().filter(|&&d| d <= tol).count() as u64;
+            total += out.batch() as u64;
+        });
+        let rate = accepted as f64 / total as f64;
+        rates.push((label, rate));
+        suite.note(format!("{label}: acceptance at ε={tol:.2e}: {rate:.3e}"));
+    }
+    if rates.len() == 2 {
+        let (a, b) = (rates[0].1.max(1e-12), rates[1].1.max(1e-12));
+        suite.note(format!(
+            "acceptance ratio fast/threefry = {:.2} (≈1 expected: interchangeable draws)",
+            a / b
+        ));
+    }
+    suite.finish();
+}

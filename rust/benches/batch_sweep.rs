@@ -1,0 +1,69 @@
+//! Tables 2-3 / Fig 3: batch-size sweep.
+//!
+//! Measured: the compiled PJRT graph at every AOT-compiled batch size
+//! (time per run + normalized per-100k time, the Fig 3 series).
+//! Modeled: the V100 and Mk1 sweeps with memory/active-time columns.
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::data::synthetic;
+use abc_ipu::hwmodel::{batch_sweep, DeviceSpec};
+use abc_ipu::model::Prior;
+use abc_ipu::runtime::Runtime;
+
+fn main() {
+    if !harness::require_artifacts("batch_sweep") {
+        return;
+    }
+    let mut suite = harness::Suite::new("batch_sweep");
+    let rt = Runtime::open(harness::artifacts_dir()).expect("runtime");
+    let ds = synthetic::default_dataset(49, 0x5eed);
+    let observed = ds.observed.flatten();
+    let consts = ds.consts();
+    let prior = Prior::paper();
+
+    let batches = rt.abc_batches(49);
+    let mut normalized = Vec::new();
+    for &b in &batches {
+        let exe = rt.abc(b, 49).expect("artifact");
+        let mut key = 0u32;
+        let iters = if b >= 100_000 { 3 } else { 5 };
+        suite.bench(format!("pjrt_abc_b{b}"), 1, iters, || {
+            key += 1;
+            exe.run([key, 1], &observed, prior.low(), prior.high(), &consts)
+                .expect("run");
+        });
+        let m = suite.get(&format!("pjrt_abc_b{b}")).unwrap().mean_s;
+        normalized.push((b, m / b as f64 * 100_000.0));
+    }
+    for (b, n) in &normalized {
+        suite.record(format!("normalized_100k_b{b}"), *n);
+    }
+    let best = normalized
+        .iter()
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap();
+    suite.note(format!(
+        "best measured per-sample efficiency at batch {} (paper: IPU improves with batch \
+         until the memory wall, GPU flat beyond 500k)",
+        best.0
+    ));
+
+    // model sweeps (Tables 2-3 shapes)
+    for (name, spec, bs) in [
+        ("v100", DeviceSpec::tesla_v100(),
+         vec![100_000usize, 200_000, 400_000, 500_000, 700_000, 1_000_000]),
+        ("ipu", DeviceSpec::ipu_c2_card(),
+         vec![80_000, 120_000, 160_000, 200_000, 240_000, 260_000]),
+    ] {
+        for p in batch_sweep(&spec, &bs, 49) {
+            suite.record(format!("model_{name}_b{}_t", p.batch), p.time_per_run);
+            suite.record(
+                format!("model_{name}_b{}_norm", p.batch),
+                p.normalized,
+            );
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,122 @@
+//! Minimal benchmark harness (offline stand-in for `criterion`).
+//!
+//! Each bench binary is `harness = false` and drives this module:
+//! warmup + timed iterations, mean ± std, and a CSV row per benchmark
+//! written to `reports/bench_<name>.csv`.
+#![allow(dead_code)] // each bench binary uses a different API subset
+
+use std::time::Instant;
+
+/// One measured statistic.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub iters: u32,
+}
+
+impl Measurement {
+    pub fn per_iter_display(&self) -> String {
+        let m = self.mean_s;
+        if m < 1e-6 {
+            format!("{:8.1} ns ± {:5.1}", m * 1e9, self.std_s * 1e9)
+        } else if m < 1e-3 {
+            format!("{:8.2} µs ± {:5.2}", m * 1e6, self.std_s * 1e6)
+        } else if m < 1.0 {
+            format!("{:8.2} ms ± {:5.2}", m * 1e3, self.std_s * 1e3)
+        } else {
+            format!("{:8.3} s ± {:5.3}", m, self.std_s)
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs; returns stats
+/// over per-iteration wall time.
+pub fn time_fn<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+        / samples.len().max(2) as f64;
+    (mean, var.sqrt())
+}
+
+/// A named suite accumulating measurements and emitting a report.
+pub struct Suite {
+    name: &'static str,
+    rows: Vec<Measurement>,
+    notes: Vec<String>,
+}
+
+impl Suite {
+    pub fn new(name: &'static str) -> Self {
+        println!("=== bench suite: {name} ===");
+        Self { name, rows: Vec::new(), notes: Vec::new() }
+    }
+
+    /// Run one benchmark case.
+    pub fn bench<F: FnMut()>(&mut self, name: impl Into<String>, warmup: u32, iters: u32, f: F) {
+        let name = name.into();
+        let (mean, std) = time_fn(warmup, iters, f);
+        let m = Measurement { name: name.clone(), mean_s: mean, std_s: std, iters };
+        println!("  {name:<44} {}", m.per_iter_display());
+        self.rows.push(m);
+    }
+
+    /// Record a pre-measured value (e.g. from a coordinator run).
+    pub fn record(&mut self, name: impl Into<String>, mean_s: f64) {
+        let name = name.into();
+        let m = Measurement { name: name.clone(), mean_s, std_s: 0.0, iters: 1 };
+        println!("  {name:<44} {}", m.per_iter_display());
+        self.rows.push(m);
+    }
+
+    /// Attach a free-form note to the report.
+    pub fn note(&mut self, text: impl Into<String>) {
+        let text = text.into();
+        println!("  note: {text}");
+        self.notes.push(text);
+    }
+
+    /// Look up a measurement by name.
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.rows.iter().find(|m| m.name == name)
+    }
+
+    /// Write `reports/bench_<suite>.csv` and print a footer.
+    pub fn finish(self) {
+        let mut csv = String::from("name,mean_s,std_s,iters\n");
+        for m in &self.rows {
+            csv.push_str(&format!("{},{},{},{}\n", m.name, m.mean_s, m.std_s, m.iters));
+        }
+        for (i, n) in self.notes.iter().enumerate() {
+            csv.push_str(&format!("# note{}: {}\n", i + 1, n));
+        }
+        std::fs::create_dir_all("reports").ok();
+        let path = format!("reports/bench_{}.csv", self.name);
+        std::fs::write(&path, csv).expect("write bench csv");
+        println!("=== {} done → {path} ===\n", self.name);
+    }
+}
+
+/// Locate artifacts (same logic as the library's default).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    abc_ipu::runtime::default_artifacts_dir()
+}
+
+/// Skip-guard for PJRT-dependent suites.
+pub fn require_artifacts(suite: &str) -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping bench `{suite}`: run `make artifacts` first");
+    }
+    ok
+}

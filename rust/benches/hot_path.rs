@@ -1,0 +1,85 @@
+//! Hot-path microbenchmarks (the §Perf working set).
+//!
+//! Covers every L3 component that sits on the per-run critical path:
+//! host RNG, scalar simulator (CPU baseline inner loop), chunk scan,
+//! top-k selection, transfer filtering, and the per-run PJRT dispatch
+//! overhead (empty-ish work vs large batch).
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::coordinator::{chunk_batch, filter_transfer, top_k_selection, Transfer};
+use abc_ipu::data::synthetic;
+use abc_ipu::model::{Prior, Simulator};
+use abc_ipu::rng::Xoshiro256;
+use abc_ipu::runtime::{AbcRunOutput, Runtime};
+
+fn main() {
+    let mut suite = harness::Suite::new("hot_path");
+
+    // RNG throughput
+    let mut rng = Xoshiro256::seed_from(0);
+    let mut buf = vec![0f32; 245_000]; // one 1k-sample day-noise slab (49*5*1000)
+    suite.bench("rng_fill_normal_245k", 2, 20, || {
+        rng.fill_normal_f32(&mut buf);
+    });
+
+    // scalar simulator: one trajectory + fused distance
+    let ds = synthetic::default_dataset(49, 0x5eed);
+    let observed = ds.observed.flatten();
+    let sim = Simulator::new(ds.initial_condition());
+    let prior = Prior::paper();
+    let mut r2 = Xoshiro256::seed_from(1);
+    suite.bench("cpu_sim_distance_1_sample_49d", 10, 2000, || {
+        let theta = prior.sample(&mut r2);
+        let _ = sim.distance(&theta, &observed, 49, &mut r2);
+    });
+
+    // device-side return strategies over a 100k batch
+    let mut r3 = Xoshiro256::seed_from(2);
+    let out = AbcRunOutput {
+        thetas: (0..800_000).map(|_| r3.uniform() as f32).collect(),
+        distances: (0..100_000).map(|_| r3.uniform() as f32).collect(),
+    };
+    suite.bench("chunk_batch_100k_c10k", 3, 100, || {
+        let _ = chunk_batch(&out, 10_000, 1e-4);
+    });
+    suite.bench("top_k_100k_k5", 3, 100, || {
+        let _ = top_k_selection(&out, 5, 1e-4);
+    });
+    let (chunks, _) = chunk_batch(&out, 10_000, 0.5);
+    let transfer = Transfer::Chunks(chunks);
+    suite.bench("filter_transfer_50k_accepted", 3, 30, || {
+        let mut acc = Vec::new();
+        filter_transfer(&transfer, 0.5, 0, 0, &mut acc);
+    });
+
+    // PJRT dispatch + execution across batch sizes → fixed-cost estimate
+    if harness::require_artifacts("hot_path (PJRT part)") {
+        let rt = Runtime::open(harness::artifacts_dir()).expect("runtime");
+        let consts = ds.consts();
+        let mut key = 0u32;
+        for b in [1_000usize, 10_000] {
+            if let Ok(exe) = rt.abc(b, 49) {
+                suite.bench(format!("pjrt_dispatch_b{b}"), 1, 5, || {
+                    key += 1;
+                    exe.run([key, 9], &observed, prior.low(), prior.high(), &consts)
+                        .expect("run");
+                });
+            }
+        }
+        if let (Some(a), Some(c)) =
+            (suite.get("pjrt_dispatch_b1000"), suite.get("pjrt_dispatch_b10000"))
+        {
+            // t(b) = fixed + slope*b → estimate both
+            let slope = (c.mean_s - a.mean_s) / 9_000.0;
+            let fixed = a.mean_s - slope * 1_000.0;
+            suite.note(format!(
+                "PJRT per-run fixed cost ≈ {:.2} ms, marginal ≈ {:.2} µs/sample",
+                fixed * 1e3,
+                slope * 1e6
+            ));
+        }
+    }
+    suite.finish();
+}

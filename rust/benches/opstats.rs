@@ -1,0 +1,72 @@
+//! Tables 5-6: op-level attribution.
+//!
+//! Two views: (a) the hwmodel's device-weighted compute-set / kernel
+//! shares (the paper's PopVision / TF-profiler analogue), and (b) a
+//! *measured* op histogram parsed from the compiled HLO text of the
+//! largest ABC artifact — ground truth for what the graph contains.
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::hwmodel::{arrangement_fraction, gpu_kernel_table, ipu_compute_set_table, DeviceClass};
+use std::collections::BTreeMap;
+
+fn hlo_op_histogram(text: &str) -> BTreeMap<String, u64> {
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    for line in text.lines() {
+        // HLO instruction lines look like: `%name = type op-name(...)`
+        let Some(eq) = line.find(" = ") else { continue };
+        let rest = &line[eq + 3..];
+        // skip the result type, take the op token before '('
+        let Some(paren) = rest.find('(') else { continue };
+        let head = &rest[..paren];
+        let op = head.split_whitespace().last().unwrap_or("");
+        if op.is_empty() {
+            continue;
+        }
+        *counts.entry(op.to_string()).or_insert(0) += 1;
+    }
+    counts
+}
+
+fn main() {
+    let mut suite = harness::Suite::new("opstats");
+
+    suite.note("Table 5 model (IPU compute-set shares):");
+    for r in ipu_compute_set_table() {
+        suite.record(format!("ipu_{}", r.name), r.percent / 100.0);
+    }
+    suite.note(format!(
+        "IPU arrangement fraction: {:.1}% (paper ~50%)",
+        arrangement_fraction(DeviceClass::Ipu) * 100.0
+    ));
+
+    suite.note("Table 6 model (GPU XLA-kernel shares):");
+    for r in gpu_kernel_table() {
+        suite.record(format!("gpu_{}", r.name.split(' ').next().unwrap()), r.percent / 100.0);
+    }
+
+    if harness::require_artifacts("opstats (HLO histogram part)") {
+        let path = harness::artifacts_dir().join("abc_b100000_d49.hlo.txt");
+        let path = if path.exists() {
+            path
+        } else {
+            harness::artifacts_dir().join("abc_b1000_d49.hlo.txt")
+        };
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            let hist = hlo_op_histogram(&text);
+            let total: u64 = hist.values().sum();
+            let mut rows: Vec<_> = hist.into_iter().collect();
+            rows.sort_by_key(|(_, c)| std::cmp::Reverse(*c));
+            suite.note(format!(
+                "measured HLO op histogram of {} ({} instructions), top 15:",
+                path.file_name().unwrap().to_string_lossy(),
+                total
+            ));
+            for (op, c) in rows.iter().take(15) {
+                suite.record(format!("hlo_{op}"), *c as f64 / total as f64);
+            }
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,82 @@
+//! Table 4: host post-processing cost per return strategy.
+//!
+//! Microbenchmarks the host-side halves (chunk scan + filter vs top-k
+//! select + filter) on realistic run outputs, then measures the
+//! in-coordinator numbers end-to-end.
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::{chunk_batch, filter_transfer, top_k_selection, Coordinator, Transfer};
+use abc_ipu::data::synthetic;
+use abc_ipu::model::Prior;
+use abc_ipu::rng::Xoshiro256;
+use abc_ipu::runtime::AbcRunOutput;
+
+fn synthetic_output(batch: usize, accept_rate: f64, seed: u64) -> (AbcRunOutput, f32) {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let thetas: Vec<f32> = (0..batch * 8).map(|_| rng.uniform() as f32).collect();
+    let distances: Vec<f32> = (0..batch).map(|_| rng.uniform() as f32).collect();
+    (AbcRunOutput { thetas, distances }, accept_rate as f32)
+}
+
+fn main() {
+    let mut suite = harness::Suite::new("postproc");
+    let batch = 100_000;
+    let (out, tol) = synthetic_output(batch, 1e-4, 3);
+
+    // device-side halves
+    for chunk in [1_000usize, 10_000, batch] {
+        suite.bench(format!("chunk_batch_b100k_c{chunk}"), 3, 50, || {
+            let _ = chunk_batch(&out, chunk, tol);
+        });
+    }
+    for k in [1usize, 5, 100] {
+        suite.bench(format!("top_k_selection_b100k_k{k}"), 3, 50, || {
+            let _ = top_k_selection(&out, k, tol);
+        });
+    }
+
+    // host-side filter over a transferred 10k chunk (the IPU path's
+    // Table-4 cost driver)
+    let (chunks, _) = chunk_batch(&out, 10_000, 0.5); // ~half accepted → chunks transfer
+    let transfer = Transfer::Chunks(chunks);
+    suite.bench("filter_transfer_10k_chunks", 3, 50, || {
+        let mut acc = Vec::new();
+        filter_transfer(&transfer, 0.5, 0, 0, &mut acc);
+    });
+
+    // end-to-end measured postproc share per strategy (needs artifacts)
+    if harness::require_artifacts("postproc (end-to-end part)") {
+        let ds = synthetic::default_dataset(49, 0x5eed);
+        for (label, strategy) in [
+            ("outfeed_chunk_eq_batch", ReturnStrategy::Outfeed { chunk: 10_000 }),
+            ("outfeed_chunk_1k", ReturnStrategy::Outfeed { chunk: 1_000 }),
+            ("topk_5", ReturnStrategy::TopK { k: 5 }),
+        ] {
+            let cfg = RunConfig {
+                dataset: ds.name.clone(),
+                tolerance: Some(8.4e5), // pilot-scale ε (≈1e-3 acceptance)
+                devices: 2,
+                batch_per_device: 10_000,
+                days: 49,
+                return_strategy: strategy,
+                seed: 11,
+                max_runs: 0,
+                accepted_samples: 1,
+            };
+            let coord = Coordinator::new(harness::artifacts_dir(), cfg, ds.clone(),
+                                         Prior::paper()).expect("coordinator");
+            let r = coord.run_exact(4).expect("run");
+            suite.record(format!("e2e_postproc_{label}"),
+                         r.metrics.host_postproc.as_secs_f64());
+            suite.note(format!(
+                "{label}: postproc {:.3}% of total, {} to host",
+                r.metrics.postproc_fraction() * 100.0,
+                r.metrics.bytes_to_host
+            ));
+        }
+    }
+    suite.finish();
+}

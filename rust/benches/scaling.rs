@@ -1,0 +1,71 @@
+//! Table 7: multi-device scaling, measured + modeled.
+//!
+//! Weak scaling over simulated devices with chunked vs unchunked
+//! outfeeds; the model column projects real Mk1 IPU-Link behaviour
+//! (paper: 7.38x at 16 devices chunked, 8.0x unchunked, vs 2-device
+//! base).
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::{Coordinator, StopRule};
+use abc_ipu::data::synthetic;
+use abc_ipu::hwmodel::{scaling_table, DeviceSpec, Workload};
+use abc_ipu::model::Prior;
+
+fn main() {
+    if !harness::require_artifacts("scaling") {
+        return;
+    }
+    let mut suite = harness::Suite::new("scaling");
+    let ds = synthetic::default_dataset(49, 0x5eed);
+    let batch = 10_000usize;
+    let w = Workload::analytic(batch, 49);
+    let runs_per_device = 4u64;
+
+    let mut base: Option<f64> = None;
+    for n in [1usize, 2, 4, 8] {
+        for chunked in [true, false] {
+            let chunk = if chunked { batch / 10 } else { batch };
+            let cfg = RunConfig {
+                dataset: ds.name.clone(),
+                tolerance: Some(8.4e5),
+                devices: n,
+                batch_per_device: batch,
+                days: 49,
+                return_strategy: ReturnStrategy::Outfeed { chunk },
+                seed: 3,
+                max_runs: 0,
+                accepted_samples: 1,
+            };
+            let coord = Coordinator::new(harness::artifacts_dir(), cfg, ds.clone(),
+                                         Prior::paper()).expect("coordinator");
+            let r = coord.run(StopRule::ExactRuns(runs_per_device * n as u64)).expect("run");
+            let secs = r.metrics.total.as_secs_f64();
+            let tp = r.metrics.samples_simulated as f64 / secs;
+            let base_tp = *base.get_or_insert(tp);
+            suite.record(format!("measured_n{n}_chunked{chunked}"), secs);
+            let model = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n], chunk, 1);
+            suite.note(format!(
+                "n={n} chunked={chunked}: measured speedup {:.2}, model speedup {:.2} \
+                 (overhead {:.1}%)",
+                tp / base_tp,
+                model[0].speedup,
+                model[0].overhead * 100.0
+            ));
+        }
+    }
+    // the paper's 16-device points, model-only (we cap measured at 8
+    // workers to avoid host oversubscription artifacts)
+    for chunk in [1_000usize, 10_000] {
+        let m = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[16], chunk, 2);
+        suite.note(format!(
+            "model 16 devices chunk={chunk}: speedup {:.2} vs 2 (paper: {} → {})",
+            m[0].speedup,
+            if chunk < 10_000 { "chunked" } else { "unchunked" },
+            if chunk < 10_000 { "7.38x" } else { "8.0x" },
+        ));
+    }
+    suite.finish();
+}

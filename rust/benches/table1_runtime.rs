@@ -1,0 +1,72 @@
+//! Table 1: device comparison.
+//!
+//! Measured rows: the PJRT-compiled ABC graph at two batch sizes and
+//! the pure-Rust scalar CPU baseline; projected rows: the paper's three
+//! 300 W packages through the hwmodel at their Table-1 batch sizes.
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::data::synthetic;
+use abc_ipu::hwmodel::{DeviceSpec, Workload};
+use abc_ipu::model::{simulate_distance_batch, Prior, Simulator};
+use abc_ipu::rng::Xoshiro256;
+use abc_ipu::runtime::Runtime;
+
+fn main() {
+    if !harness::require_artifacts("table1_runtime") {
+        return;
+    }
+    let mut suite = harness::Suite::new("table1_runtime");
+    let ds = synthetic::default_dataset(49, 0x5eed);
+    let observed = ds.observed.flatten();
+    let consts = ds.consts();
+    let prior = Prior::paper();
+    let rt = Runtime::open(harness::artifacts_dir()).expect("runtime");
+
+    // measured: compiled XLA graph per-run, two batch sizes
+    for batch in [10_000usize, 50_000] {
+        let exe = rt.abc(batch, 49).expect("artifact");
+        let mut key = 0u32;
+        suite.bench(format!("pjrt_abc_run_b{batch}_d49"), 1, 5, || {
+            key += 1;
+            exe.run([key, 0], &observed, prior.low(), prior.high(), &consts)
+                .expect("run");
+        });
+    }
+
+    // measured: scalar CPU baseline (the paper's pre-acceleration path)
+    let sim = Simulator::new(ds.initial_condition());
+    let mut rng = Xoshiro256::seed_from(1);
+    let cpu_batch = 2_000usize;
+    suite.bench(format!("cpu_scalar_baseline_b{cpu_batch}_d49"), 1, 3, || {
+        simulate_distance_batch(&sim, &prior, &observed, 49, cpu_batch, &mut rng);
+    });
+
+    // per-sample normalization + speedup (the Table-1 comparison axis)
+    let pjrt = suite.get("pjrt_abc_run_b50000_d49").unwrap().mean_s / 50_000.0;
+    let cpu = suite.get(&format!("cpu_scalar_baseline_b{cpu_batch}_d49")).unwrap().mean_s
+        / cpu_batch as f64;
+    suite.record("per_sample_pjrt_engine", pjrt);
+    suite.record("per_sample_cpu_baseline", cpu);
+    suite.note(format!("measured speedup (per-sample, engine vs scalar CPU): {:.1}x", cpu / pjrt));
+
+    // projected: the paper's packages at their Table-1 batches
+    for (spec, b) in [
+        (DeviceSpec::ipu_c2_card(), 200_000usize),
+        (DeviceSpec::tesla_v100(), 500_000),
+        (DeviceSpec::xeon_gold_6248(), 1_000_000),
+    ] {
+        let t = spec.time_per_run(&Workload::analytic(b, 49)).expect("fits");
+        suite.record(format!("projected_{}_b{b}", spec.name.replace(' ', "_")), t);
+    }
+    let ipu = suite.get("projected_2xIPU_b200000").unwrap().mean_s / 200_000.0;
+    let gpu = suite.get("projected_Tesla_V100_b500000").unwrap().mean_s / 500_000.0;
+    let cpu_m = suite.get("projected_2x_CPU_b1000000").unwrap().mean_s / 1_000_000.0;
+    suite.note(format!(
+        "projected per-sample ratios: GPU/IPU {:.1}x (paper 7.5x), CPU/IPU {:.1}x (paper 30x)",
+        gpu / ipu,
+        cpu_m / ipu
+    ));
+    suite.finish();
+}

@@ -1,0 +1,62 @@
+//! Fig 6: processing time vs tolerance (super-exponential growth).
+//!
+//! Sweeps a geometric tolerance ladder downward and measures wall time
+//! to a fixed number of accepted samples, reproducing the Fig 6 shape:
+//! near-flat at loose ε, exploding once acceptance collapses.
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::Coordinator;
+use abc_ipu::data::synthetic;
+use abc_ipu::model::Prior;
+
+fn main() {
+    if !harness::require_artifacts("tolerance_sweep") {
+        return;
+    }
+    let mut suite = harness::Suite::new("tolerance_sweep");
+    let ds = synthetic::default_dataset(49, 0x5eed);
+    // pilot-scale anchor (≈1e-3 acceptance at 8.4e5 on this dataset)
+    let anchor = 8.4e5f32;
+    let target = 20usize;
+    let mut prev_time = None;
+    for (i, factor) in [2.0f32, 1.41, 1.0, 0.85, 0.75, 0.67].iter().enumerate() {
+        let tol = anchor * factor;
+        let cfg = RunConfig {
+            dataset: ds.name.clone(),
+            tolerance: Some(tol),
+            devices: 2,
+            batch_per_device: 10_000,
+            days: 49,
+            return_strategy: ReturnStrategy::Outfeed { chunk: 1_000 },
+            seed: 5,
+            max_runs: 600,
+            accepted_samples: target,
+        };
+        let coord = Coordinator::new(harness::artifacts_dir(), cfg, ds.clone(),
+                                     Prior::paper()).expect("coordinator");
+        match coord.run_until(target) {
+            Ok(r) => {
+                let secs = r.metrics.total.as_secs_f64();
+                suite.record(format!("tol_{i}_{tol:.3e}"), secs);
+                suite.note(format!(
+                    "ε={tol:.3e}: {} runs, acceptance {:.2e}{}",
+                    r.metrics.runs,
+                    r.metrics.acceptance_rate(),
+                    prev_time
+                        .map(|p: f64| format!(", {:.2}x previous", secs / p))
+                        .unwrap_or_default()
+                ));
+                prev_time = Some(secs);
+            }
+            Err(e) => {
+                suite.note(format!("ε={tol:.3e}: budget exhausted ({e})"));
+                break;
+            }
+        }
+    }
+    suite.note("paper Fig 6: super-exponential growth as ε decreases (log-x axis)");
+    suite.finish();
+}

@@ -1,0 +1,272 @@
+//! Posterior diagnostics (the analysis layer behind Figs 8–9).
+//!
+//! The paper's §5 discussion rests on reading posterior marginals:
+//! modality (β/δ uni- vs bi-modal at 100 vs 1000 samples), parameter
+//! contrasts between countries, and whether a marginal is actually
+//! informed by the data or still prior-shaped. This module quantifies
+//! those reads: credible intervals, prior-contraction factors,
+//! Kolmogorov–Smirnov distance from the prior, and pairwise sample
+//! correlations.
+
+use super::Posterior;
+use crate::model::{Prior, N_PARAMS, PARAM_NAMES};
+use crate::stats::percentile;
+
+/// Diagnostics for one parameter's marginal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarginalDiagnostic {
+    /// Parameter name.
+    pub name: &'static str,
+    /// Posterior mean.
+    pub mean: f64,
+    /// Central 90 % credible interval.
+    pub ci90: (f64, f64),
+    /// Posterior CI width / prior width — < 1 means the data informed
+    /// this parameter ("contraction"); ≈ 0.9 means prior-shaped.
+    pub contraction: f64,
+    /// Kolmogorov–Smirnov distance between the marginal and its
+    /// uniform prior (0 = identical to prior, → 1 = concentrated).
+    pub ks_from_prior: f64,
+    /// Crude mode count (local maxima ≥ 50 % of the peak, 20 bins).
+    pub modes: usize,
+}
+
+/// Full posterior diagnostic report.
+#[derive(Debug, Clone)]
+pub struct DiagnosticReport {
+    /// Per-parameter diagnostics, paper ordering.
+    pub marginals: Vec<MarginalDiagnostic>,
+    /// Pairwise Pearson correlations, row-major `[8, 8]`.
+    pub correlations: Vec<f64>,
+    /// Number of samples diagnosed.
+    pub samples: usize,
+}
+
+/// One-sample Kolmogorov–Smirnov statistic against U(lo, hi).
+pub fn ks_against_uniform(xs: &[f32], lo: f64, hi: f64) -> f64 {
+    assert!(!xs.is_empty() && hi > lo);
+    let mut sorted: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in sorted.iter().enumerate() {
+        let cdf = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+        let emp_hi = (i as f64 + 1.0) / n;
+        let emp_lo = i as f64 / n;
+        d = d.max((cdf - emp_lo).abs()).max((emp_hi - cdf).abs());
+    }
+    d
+}
+
+/// Pearson correlation between two equal-length samples.
+pub fn pearson(xs: &[f32], ys: &[f32]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let my = ys.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let dx = x as f64 - mx;
+        let dy = y as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Diagnose a posterior against the prior it was sampled under.
+pub fn diagnose(posterior: &Posterior, prior: &Prior) -> DiagnosticReport {
+    assert!(!posterior.is_empty(), "cannot diagnose an empty posterior");
+    let marginals = (0..N_PARAMS)
+        .map(|p| {
+            let xs = posterior.marginal(p);
+            let lo = prior.low()[p] as f64;
+            let hi = prior.high()[p] as f64;
+            let p5 = percentile(&xs, 5.0);
+            let p95 = percentile(&xs, 95.0);
+            let prior_width = (hi - lo).max(f64::MIN_POSITIVE);
+            MarginalDiagnostic {
+                name: PARAM_NAMES[p],
+                mean: crate::stats::mean(&xs),
+                ci90: (p5, p95),
+                contraction: ((p95 - p5) / (0.9 * prior_width)).min(f64::MAX),
+                ks_from_prior: ks_against_uniform(&xs, lo, hi),
+                modes: posterior.histogram(p, 20).modes(0.5),
+            }
+        })
+        .collect();
+
+    let mut correlations = vec![0.0; N_PARAMS * N_PARAMS];
+    let cols: Vec<Vec<f32>> = (0..N_PARAMS).map(|p| posterior.marginal(p)).collect();
+    for i in 0..N_PARAMS {
+        for j in 0..N_PARAMS {
+            correlations[i * N_PARAMS + j] =
+                if i == j { 1.0 } else { pearson(&cols[i], &cols[j]) };
+        }
+    }
+    DiagnosticReport { marginals, correlations, samples: posterior.len() }
+}
+
+impl DiagnosticReport {
+    /// Parameters the data visibly informed (contraction < threshold).
+    pub fn informed(&self, threshold: f64) -> Vec<&'static str> {
+        self.marginals
+            .iter()
+            .filter(|m| m.contraction < threshold)
+            .map(|m| m.name)
+            .collect()
+    }
+
+    /// Strongest absolute off-diagonal correlation `(i, j, r)`.
+    pub fn strongest_correlation(&self) -> (usize, usize, f64) {
+        let mut best = (0, 1, 0.0f64);
+        for i in 0..N_PARAMS {
+            for j in i + 1..N_PARAMS {
+                let r = self.correlations[i * N_PARAMS + j];
+                if r.abs() > best.2.abs() {
+                    best = (i, j, r);
+                }
+            }
+        }
+        best
+    }
+
+    /// Render as an aligned table.
+    pub fn to_table(&self) -> crate::report::Table {
+        let mut t = crate::report::Table::new(
+            format!("posterior diagnostics ({} samples)", self.samples),
+            &["param", "mean", "ci90", "contraction", "KS vs prior", "modes"],
+        );
+        for m in &self.marginals {
+            t.row(&[
+                m.name.to_string(),
+                format!("{:.4}", m.mean),
+                format!("[{:.3}, {:.3}]", m.ci90.0, m.ci90.1),
+                format!("{:.2}", m.contraction),
+                format!("{:.3}", m.ks_from_prior),
+                m.modes.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AcceptedSample;
+    use crate::rng::Xoshiro256;
+
+    fn posterior_from<F: FnMut(&mut Xoshiro256) -> crate::model::Theta>(
+        n: usize,
+        mut gen: F,
+    ) -> Posterior {
+        let mut rng = Xoshiro256::seed_from(7);
+        Posterior::new(
+            (0..n)
+                .map(|i| AcceptedSample {
+                    theta: gen(&mut rng),
+                    distance: i as f32,
+                    device: 0,
+                    run: i as u64,
+                    index: 0,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn ks_of_uniform_sample_is_small() {
+        let mut rng = Xoshiro256::seed_from(1);
+        let xs: Vec<f32> = (0..5000).map(|_| rng.uniform() as f32).collect();
+        assert!(ks_against_uniform(&xs, 0.0, 1.0) < 0.03);
+    }
+
+    #[test]
+    fn ks_of_concentrated_sample_is_large() {
+        let xs = vec![0.5f32; 1000];
+        assert!(ks_against_uniform(&xs, 0.0, 1.0) > 0.45);
+    }
+
+    #[test]
+    fn pearson_detects_linear_dependence() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        let zs: Vec<f32> = xs.iter().map(|x| -x).collect();
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-9);
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-9);
+        assert_eq!(pearson(&xs, &vec![3.0; 100]), 0.0);
+    }
+
+    #[test]
+    fn prior_shaped_posterior_shows_no_contraction() {
+        let prior = Prior::paper();
+        let p = posterior_from(2000, |rng| prior.sample(rng));
+        let report = diagnose(&p, &prior);
+        for m in &report.marginals {
+            assert!(m.contraction > 0.85, "{}: {}", m.name, m.contraction);
+            assert!(m.ks_from_prior < 0.05, "{}: {}", m.name, m.ks_from_prior);
+        }
+        assert!(report.informed(0.5).is_empty());
+    }
+
+    #[test]
+    fn concentrated_posterior_shows_contraction_and_ks() {
+        let prior = Prior::paper();
+        let p = posterior_from(1000, |rng| {
+            let mut t = prior.sample(rng);
+            t[3] = 0.013 + 0.002 * rng.normal_f32(); // β pinned
+            t[3] = t[3].clamp(0.0, 1.0);
+            t
+        });
+        let report = diagnose(&p, &prior);
+        let beta = &report.marginals[3];
+        assert!(beta.contraction < 0.05, "{}", beta.contraction);
+        assert!(beta.ks_from_prior > 0.8);
+        assert_eq!(report.informed(0.5), vec!["beta"]);
+    }
+
+    #[test]
+    fn correlations_symmetric_with_unit_diagonal() {
+        let prior = Prior::paper();
+        let p = posterior_from(500, |rng| prior.sample(rng));
+        let r = diagnose(&p, &prior);
+        for i in 0..N_PARAMS {
+            assert_eq!(r.correlations[i * N_PARAMS + i], 1.0);
+            for j in 0..N_PARAMS {
+                let a = r.correlations[i * N_PARAMS + j];
+                let b = r.correlations[j * N_PARAMS + i];
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn strongest_correlation_found() {
+        let prior = Prior::paper();
+        // couple α (1) and κ (7)
+        let p = posterior_from(1000, |rng| {
+            let mut t = prior.sample(rng);
+            t[7] = (t[1] / 50.0).clamp(0.0, 2.0);
+            t
+        });
+        let r = diagnose(&p, &prior);
+        let (i, j, c) = r.strongest_correlation();
+        assert_eq!((i, j), (1, 7));
+        assert!(c > 0.9);
+    }
+
+    #[test]
+    fn table_renders_all_params() {
+        let prior = Prior::paper();
+        let p = posterior_from(100, |rng| prior.sample(rng));
+        let t = diagnose(&p, &prior).to_table();
+        assert_eq!(t.len(), 8);
+    }
+}

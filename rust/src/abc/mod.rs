@@ -1,0 +1,22 @@
+//! The ABC algorithm layer on top of the coordinator.
+//!
+//! - [`Posterior`]: accepted-sample store with the paper's summaries
+//!   (Table 8 means, Fig 8/9 histograms).
+//! - [`predict`]: posterior-predictive trajectories with percentile
+//!   bands (Fig 7).
+//! - [`smc`]: SMC-ABC — the decreasing-tolerance refinement the paper
+//!   references (§2.2, Drovandi & Pettitt).
+//! - [`cpu`]: the pure-host CPU baseline engine (Table 1's CPU rows),
+//!   sharing the coordinator's return-strategy semantics.
+
+pub mod cpu;
+pub mod diagnostics;
+pub mod pilot;
+pub mod predict;
+pub mod smc;
+
+mod posterior;
+
+pub use diagnostics::{diagnose, DiagnosticReport};
+pub use pilot::{calibrate_tolerance, PilotCalibration};
+pub use posterior::Posterior;

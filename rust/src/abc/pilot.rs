@@ -1,0 +1,80 @@
+//! Pilot-run tolerance calibration.
+//!
+//! The paper tunes ε per country by hand (§5: "the tolerance had to be
+//! adjusted on an individual basis") against an IPU-pod compute budget;
+//! its tuned values imply acceptance rates down to ~1e-9 — far beyond a
+//! CPU-host budget. This module provides the principled scaled-down
+//! equivalent: run a few pilot batches, look at the empirical distance
+//! distribution, and pick ε as the quantile that yields a target
+//! acceptance rate. The tolerance→runtime *shape* (Fig 6) is then swept
+//! explicitly by `repro tolerance-sweep` / the `tolerance_sweep` bench.
+
+use crate::config::{ReturnStrategy, RunConfig};
+use crate::coordinator::{Coordinator, StopRule};
+use crate::data::Dataset;
+use crate::model::Prior;
+use crate::stats::percentile;
+use crate::{Error, Result};
+use std::path::PathBuf;
+
+/// Result of a pilot calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PilotCalibration {
+    /// Chosen tolerance ε.
+    pub tolerance: f32,
+    /// Acceptance rate targeted.
+    pub target_rate: f64,
+    /// Samples observed in the pilot.
+    pub pilot_samples: u64,
+    /// Median pilot distance (scale reference).
+    pub median_distance: f64,
+    /// Minimum pilot distance.
+    pub min_distance: f64,
+}
+
+/// Calibrate ε for `dataset` so that acceptance ≈ `target_rate`.
+///
+/// Runs `pilot_runs` full batches with ε = +∞ (every chunk transfers)
+/// and returns the `target_rate` quantile of the observed distances.
+pub fn calibrate_tolerance(
+    artifacts_dir: impl Into<PathBuf>,
+    base: &RunConfig,
+    dataset: &Dataset,
+    target_rate: f64,
+    pilot_runs: u64,
+) -> Result<PilotCalibration> {
+    if !(0.0 < target_rate && target_rate <= 1.0) {
+        return Err(Error::Config(format!("target rate {target_rate} out of (0, 1]")));
+    }
+    let mut cfg = base.clone();
+    cfg.tolerance = Some(f32::MAX);
+    cfg.return_strategy = ReturnStrategy::Outfeed { chunk: cfg.batch_per_device };
+    cfg.max_runs = 0;
+    let coord = Coordinator::new(artifacts_dir, cfg, dataset.clone(), Prior::paper())?;
+    let result = coord.run(StopRule::ExactRuns(pilot_runs))?;
+    let distances: Vec<f32> = result.accepted.iter().map(|s| s.distance).collect();
+    if distances.is_empty() {
+        return Err(Error::Coordinator("pilot produced no samples".into()));
+    }
+    let tolerance = percentile(&distances, (target_rate * 100.0).min(100.0)) as f32;
+    Ok(PilotCalibration {
+        tolerance,
+        target_rate,
+        pilot_samples: result.metrics.samples_simulated,
+        median_distance: percentile(&distances, 50.0),
+        min_distance: percentile(&distances, 0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_bad_rate() {
+        let ds = crate::data::synthetic::default_dataset(16, 0);
+        let cfg = RunConfig::default();
+        assert!(calibrate_tolerance("artifacts", &cfg, &ds, 0.0, 1).is_err());
+        assert!(calibrate_tolerance("artifacts", &cfg, &ds, 1.5, 1).is_err());
+    }
+}

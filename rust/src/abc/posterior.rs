@@ -1,0 +1,170 @@
+//! Posterior sample store and summaries.
+
+use crate::coordinator::AcceptedSample;
+use crate::model::{Theta, N_PARAMS, PARAM_NAMES, PRIOR_HIGH};
+use crate::stats::{Histogram, Summary};
+
+/// A set of accepted posterior samples with summary machinery.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Posterior {
+    samples: Vec<AcceptedSample>,
+}
+
+impl Posterior {
+    /// Wrap a set of accepted samples.
+    pub fn new(samples: Vec<AcceptedSample>) -> Self {
+        Self { samples }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Whether the posterior is empty.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The underlying samples.
+    pub fn samples(&self) -> &[AcceptedSample] {
+        &self.samples
+    }
+
+    /// Marginal values of parameter `p`.
+    pub fn marginal(&self, p: usize) -> Vec<f32> {
+        assert!(p < N_PARAMS);
+        self.samples.iter().map(|s| s.theta[p]).collect()
+    }
+
+    /// Posterior mean θ (the Table 8 "Average" row).
+    pub fn mean_theta(&self) -> Theta {
+        let mut mean = [0.0f64; N_PARAMS];
+        for s in &self.samples {
+            for p in 0..N_PARAMS {
+                mean[p] += s.theta[p] as f64;
+            }
+        }
+        let n = self.samples.len().max(1) as f64;
+        std::array::from_fn(|p| (mean[p] / n) as f32)
+    }
+
+    /// Per-parameter summaries.
+    pub fn summaries(&self) -> Vec<(&'static str, Summary)> {
+        (0..N_PARAMS)
+            .map(|p| (PARAM_NAMES[p], Summary::of(&self.marginal(p))))
+            .collect()
+    }
+
+    /// Distance summary of the accepted set.
+    pub fn distance_summary(&self) -> Summary {
+        let d: Vec<f32> = self.samples.iter().map(|s| s.distance).collect();
+        Summary::of(&d)
+    }
+
+    /// Fig 8/9-style histogram of parameter `p` over its prior range.
+    pub fn histogram(&self, p: usize, bins: usize) -> Histogram {
+        let mut h = Histogram::new(0.0, PRIOR_HIGH[p] as f64, bins);
+        h.add_all(&self.marginal(p));
+        h
+    }
+
+    /// Per-parameter [min, max] box of the samples — the SMC-ABC
+    /// refinement region.
+    pub fn bounding_box(&self) -> (Theta, Theta) {
+        let mut low = [f32::MAX; N_PARAMS];
+        let mut high = [f32::MIN; N_PARAMS];
+        for s in &self.samples {
+            for p in 0..N_PARAMS {
+                low[p] = low[p].min(s.theta[p]);
+                high[p] = high[p].max(s.theta[p]);
+            }
+        }
+        (low, high)
+    }
+
+    /// θ matrix `[n, 8]` row-major (the predict-artifact input).
+    pub fn theta_matrix(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.samples.len() * N_PARAMS);
+        for s in &self.samples {
+            out.extend_from_slice(&s.theta);
+        }
+        out
+    }
+
+    /// CSV dump: `alpha0,...,kappa,distance` rows.
+    pub fn to_csv(&self) -> String {
+        let mut out = PARAM_NAMES.join(",");
+        out.push_str(",distance\n");
+        for s in &self.samples {
+            let row: Vec<String> = s.theta.iter().map(|v| v.to_string()).collect();
+            out.push_str(&row.join(","));
+            out.push_str(&format!(",{}\n", s.distance));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(theta: Theta, d: f32) -> AcceptedSample {
+        AcceptedSample { theta, distance: d, device: 0, run: 0, index: 0 }
+    }
+
+    fn posterior() -> Posterior {
+        Posterior::new(vec![
+            sample([0.2, 30.0, 0.5, 0.01, 0.4, 0.01, 0.5, 0.8], 10.0),
+            sample([0.4, 40.0, 0.7, 0.02, 0.5, 0.02, 0.6, 1.0], 20.0),
+        ])
+    }
+
+    #[test]
+    fn mean_theta() {
+        let m = posterior().mean_theta();
+        assert!((m[0] - 0.3).abs() < 1e-6);
+        assert!((m[1] - 35.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn marginal_and_histogram() {
+        let p = posterior();
+        assert_eq!(p.marginal(1), vec![30.0, 40.0]);
+        let h = p.histogram(1, 10); // range [0, 100], bins of 10
+        assert_eq!(h.counts()[3], 1);
+        assert_eq!(h.counts()[4], 1);
+        assert_eq!(h.outliers(), 0);
+    }
+
+    #[test]
+    fn bounding_box() {
+        let (lo, hi) = posterior().bounding_box();
+        assert_eq!(lo[0], 0.2);
+        assert_eq!(hi[0], 0.4);
+        assert_eq!(lo[1], 30.0);
+        assert_eq!(hi[1], 40.0);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = posterior().to_csv();
+        assert!(csv.starts_with("alpha0,alpha,n,beta,gamma,delta,eta,kappa,distance\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn theta_matrix_layout() {
+        let m = posterior().theta_matrix();
+        assert_eq!(m.len(), 16);
+        assert_eq!(m[8], 0.4);
+    }
+
+    #[test]
+    fn summaries_cover_all_params() {
+        let s = posterior().summaries();
+        assert_eq!(s.len(), 8);
+        assert_eq!(s[0].0, "alpha0");
+        assert_eq!(s[0].1.count, 2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Posterior-predictive trajectory simulation (Fig 7).
+//!
+//! Takes accepted posterior samples, simulates one stochastic rollout
+//! per sample over a (longer) prediction horizon through the compiled
+//! `predict` artifact, and reduces to per-day percentile bands — the
+//! shaded 5th–95th envelope of the paper's Fig 7.
+
+use super::Posterior;
+use crate::model::N_PARAMS;
+use crate::runtime::Runtime;
+use crate::stats::percentile;
+use crate::{Error, Result};
+
+/// Per-day percentile bands for one observable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Band {
+    /// 5th percentile per day.
+    pub p5: Vec<f64>,
+    /// Median per day.
+    pub p50: Vec<f64>,
+    /// 95th percentile per day.
+    pub p95: Vec<f64>,
+}
+
+/// Fig-7-style prediction output: bands for A, R, D over the horizon.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    /// Prediction horizon in days.
+    pub days: usize,
+    /// Number of posterior samples used.
+    pub samples: usize,
+    /// Bands for Active, Recovered, Deaths.
+    pub active: Band,
+    pub recovered: Band,
+    pub deaths: Band,
+}
+
+impl Prediction {
+    /// CSV: `day,a_p5,a_p50,a_p95,r_p5,...,d_p95` (Fig 7 series format).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("day,a_p5,a_p50,a_p95,r_p5,r_p50,r_p95,d_p5,d_p50,d_p95\n");
+        for t in 0..self.days {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{}\n",
+                t,
+                self.active.p5[t],
+                self.active.p50[t],
+                self.active.p95[t],
+                self.recovered.p5[t],
+                self.recovered.p50[t],
+                self.recovered.p95[t],
+                self.deaths.p5[t],
+                self.deaths.p50[t],
+                self.deaths.p95[t],
+            ));
+        }
+        out
+    }
+}
+
+/// Simulate posterior-predictive trajectories and reduce to bands.
+///
+/// Uses the `predict_b{B}_d{days}` artifact; posterior samples are tiled
+/// cyclically to fill the compiled batch (so every sample contributes at
+/// least ⌊B/n⌋ rollouts).
+pub fn predict(
+    runtime: &Runtime,
+    posterior: &Posterior,
+    consts: &[f32; 4],
+    days: usize,
+    key: [u32; 2],
+) -> Result<Prediction> {
+    if posterior.is_empty() {
+        return Err(Error::Coordinator("cannot predict from an empty posterior".into()));
+    }
+    // find a compiled predict batch for this horizon
+    let batch = runtime
+        .manifest()
+        .artifacts()
+        .values()
+        .filter(|e| e.kind == crate::runtime::ArtifactKind::Predict && e.days == days)
+        .map(|e| e.batch)
+        .max()
+        .ok_or_else(|| Error::MissingArtifact(format!("predict_b*_d{days}")))?;
+    let exe = runtime.predict(batch, days)?;
+
+    // tile posterior θ rows cyclically into the compiled batch
+    let n = posterior.len();
+    let thetas = posterior.theta_matrix();
+    let mut tiled = Vec::with_capacity(batch * N_PARAMS);
+    for i in 0..batch {
+        let s = i % n;
+        tiled.extend_from_slice(&thetas[s * N_PARAMS..(s + 1) * N_PARAMS]);
+    }
+
+    let traj = exe.run(key, &tiled, consts)?; // [batch, 3, days]
+    let band = |obs: usize| -> Band {
+        let mut p5 = Vec::with_capacity(days);
+        let mut p50 = Vec::with_capacity(days);
+        let mut p95 = Vec::with_capacity(days);
+        let mut col = vec![0.0f32; batch];
+        for t in 0..days {
+            for (b, c) in col.iter_mut().enumerate() {
+                *c = traj[b * 3 * days + obs * days + t];
+            }
+            p5.push(percentile(&col, 5.0));
+            p50.push(percentile(&col, 50.0));
+            p95.push(percentile(&col, 95.0));
+        }
+        Band { p5, p50, p95 }
+    };
+
+    Ok(Prediction {
+        days,
+        samples: n,
+        active: band(0),
+        recovered: band(1),
+        deaths: band(2),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_format() {
+        let b = Band { p5: vec![1.0], p50: vec![2.0], p95: vec![3.0] };
+        let p = Prediction {
+            days: 1,
+            samples: 10,
+            active: b.clone(),
+            recovered: b.clone(),
+            deaths: b,
+        };
+        let csv = p.to_csv();
+        assert!(csv.starts_with("day,"));
+        assert!(csv.contains("0,1,2,3,1,2,3,1,2,3"));
+    }
+}

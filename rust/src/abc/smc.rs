@@ -1,0 +1,159 @@
+//! SMC-ABC: sequential tolerance refinement (paper §2.2).
+//!
+//! Instead of one fixed tolerance, SMC-ABC transforms an initial sample
+//! set through a decreasing tolerance sequence (Drovandi & Pettitt
+//! 2011). Our compiled artifacts sample from *box* priors, so the
+//! refinement step is box-restricted: each stage shrinks the prior box
+//! to the bounding box of the surviving particles (with a safety
+//! margin) and halves the tolerance toward a quantile of the accepted
+//! distances. This preserves the SMC-ABC structure — propose from a
+//! narrowing proposal, accept under a tightening ε — while staying
+//! expressible as the AOT-compiled uniform sampler (an adaptation
+//! documented in DESIGN.md §2).
+
+use super::Posterior;
+use crate::config::RunConfig;
+use crate::coordinator::{Coordinator, StopRule};
+use crate::data::Dataset;
+use crate::model::{Prior, Theta, N_PARAMS};
+use crate::stats::percentile;
+use crate::{Error, Result};
+use std::path::PathBuf;
+
+/// Configuration of an SMC-ABC schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SmcConfig {
+    /// Number of refinement stages after the initial one.
+    pub stages: usize,
+    /// Accepted samples per stage.
+    pub samples_per_stage: usize,
+    /// Quantile of the accepted distances that becomes the next ε
+    /// (0.5 = median, the common choice).
+    pub quantile: f64,
+    /// Margin added around the survivors' bounding box, as a fraction of
+    /// the box width per side.
+    pub box_margin: f32,
+}
+
+impl Default for SmcConfig {
+    fn default() -> Self {
+        Self { stages: 3, samples_per_stage: 100, quantile: 0.5, box_margin: 0.25 }
+    }
+}
+
+/// One stage's record.
+#[derive(Debug, Clone)]
+pub struct SmcStage {
+    /// Stage index (0 = initial prior-wide stage).
+    pub stage: usize,
+    /// Tolerance used.
+    pub tolerance: f32,
+    /// Posterior of this stage.
+    pub posterior: Posterior,
+    /// Prior box used for this stage.
+    pub prior_low: Theta,
+    pub prior_high: Theta,
+    /// Accelerator runs consumed.
+    pub runs: u64,
+}
+
+/// Full SMC-ABC result.
+#[derive(Debug, Clone)]
+pub struct SmcResult {
+    /// All stages, first to last.
+    pub stages: Vec<SmcStage>,
+}
+
+impl SmcResult {
+    /// The final (tightest-tolerance) posterior.
+    pub fn final_posterior(&self) -> &Posterior {
+        &self.stages.last().expect("at least one stage").posterior
+    }
+
+    /// The tolerance sequence, decreasing.
+    pub fn tolerances(&self) -> Vec<f32> {
+        self.stages.iter().map(|s| s.tolerance).collect()
+    }
+}
+
+/// Run SMC-ABC on the accelerator coordinator.
+pub fn run_smc(
+    artifacts_dir: impl Into<PathBuf>,
+    base_config: RunConfig,
+    dataset: Dataset,
+    smc: &SmcConfig,
+) -> Result<SmcResult> {
+    if smc.samples_per_stage == 0 {
+        return Err(Error::Config("samples_per_stage must be >= 1".into()));
+    }
+    if !(0.0..1.0).contains(&smc.quantile) {
+        return Err(Error::Config(format!("quantile {} out of (0,1)", smc.quantile)));
+    }
+    let artifacts_dir = artifacts_dir.into();
+    let mut prior = Prior::paper();
+    let mut tolerance = base_config
+        .tolerance
+        .unwrap_or(dataset.default_tolerance);
+
+    let mut stages = Vec::new();
+    for stage in 0..=smc.stages {
+        let mut cfg = base_config.clone();
+        cfg.tolerance = Some(tolerance);
+        // deterministic but stage-distinct seeding
+        cfg.seed = base_config.seed.wrapping_add(stage as u64);
+        let coord =
+            Coordinator::new(artifacts_dir.clone(), cfg, dataset.clone(), prior.clone())?;
+        let result = coord.run(StopRule::AcceptedTarget(smc.samples_per_stage))?;
+        let posterior = Posterior::new(result.accepted.clone());
+
+        stages.push(SmcStage {
+            stage,
+            tolerance,
+            posterior: posterior.clone(),
+            prior_low: *prior.low(),
+            prior_high: *prior.high(),
+            runs: result.metrics.runs,
+        });
+
+        if stage == smc.stages {
+            break;
+        }
+        // next stage: shrink the box around survivors, tighten ε
+        let (lo, hi) = posterior.bounding_box();
+        let mut low = lo;
+        let mut high = hi;
+        for p in 0..N_PARAMS {
+            let margin = (hi[p] - lo[p]) * smc.box_margin;
+            low[p] = (lo[p] - margin).max(prior.low()[p]);
+            high[p] = (hi[p] + margin).min(prior.high()[p]);
+        }
+        prior = Prior::new(low, high)?;
+        let dists: Vec<f32> =
+            posterior.samples().iter().map(|s| s.distance).collect();
+        let next = percentile(&dists, smc.quantile * 100.0) as f32;
+        // guard: ε must strictly decrease but not collapse to zero
+        tolerance = next.min(tolerance * 0.95).max(f32::MIN_POSITIVE);
+    }
+    Ok(SmcResult { stages })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        let smc = SmcConfig { samples_per_stage: 0, ..Default::default() };
+        let ds = crate::data::synthetic::default_dataset(16, 0);
+        assert!(run_smc("artifacts", RunConfig::default(), ds.clone(), &smc).is_err());
+        let smc = SmcConfig { quantile: 1.5, ..Default::default() };
+        assert!(run_smc("artifacts", RunConfig::default(), ds, &smc).is_err());
+    }
+
+    #[test]
+    fn default_schedule_sane() {
+        let smc = SmcConfig::default();
+        assert!(smc.stages >= 1);
+        assert!((0.0..1.0).contains(&smc.quantile));
+    }
+}

@@ -1,0 +1,276 @@
+//! Run configuration.
+//!
+//! [`RunConfig`] captures everything that defines one inference job —
+//! dataset, tolerance, batch geometry, device count, sample-return
+//! strategy — with JSON round-tripping (via the in-tree [`crate::util::json`]
+//! parser) so jobs are reproducible from a file (`repro infer --config
+//! job.json`) and CLI flags can override individual fields.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// How samples travel from device to host (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReturnStrategy {
+    /// IPU-style conditional outfeed: the batch is split into chunks and
+    /// a chunk is transferred only if it contains ≥ 1 accepted sample.
+    /// `chunk == batch` disables chunking (Table 7's "no chunking").
+    Outfeed { chunk: usize },
+    /// GPU-style fixed-shape return: per run, transfer the accepted
+    /// count and the `k` lowest-distance samples; host filters.
+    TopK { k: usize },
+}
+
+impl Default for ReturnStrategy {
+    fn default() -> Self {
+        // The paper's IPU default: 10k chunks.
+        ReturnStrategy::Outfeed { chunk: 10_000 }
+    }
+}
+
+/// Full configuration of one parallel ABC inference job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Dataset name: an embedded country (`italy`, `usa`, `new_zealand`),
+    /// `synthetic`, or a path to a CSV file.
+    pub dataset: String,
+    /// Acceptance tolerance ε; `None` uses the dataset default.
+    pub tolerance: Option<f32>,
+    /// Target number of accepted posterior samples.
+    pub accepted_samples: usize,
+    /// Simulated accelerator devices (the paper scales 2→16 IPUs).
+    pub devices: usize,
+    /// Per-device batch size; must match a compiled artifact.
+    pub batch_per_device: usize,
+    /// Fit window in days; must match a compiled artifact.
+    pub days: usize,
+    /// Sample return strategy.
+    pub return_strategy: ReturnStrategy,
+    /// Master seed for all key derivation.
+    pub seed: u64,
+    /// Hard cap on total runs across all devices (0 = unlimited); guards
+    /// against a tolerance so tight nothing is ever accepted.
+    pub max_runs: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "italy".into(),
+            tolerance: None,
+            accepted_samples: 100,
+            devices: 2,
+            batch_per_device: 100_000,
+            days: 49,
+            return_strategy: ReturnStrategy::default(),
+            seed: 0xC0FFEE,
+            max_runs: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Validate cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.devices == 0 {
+            return Err(Error::Config("devices must be >= 1".into()));
+        }
+        if self.batch_per_device == 0 {
+            return Err(Error::Config("batch_per_device must be >= 1".into()));
+        }
+        if self.accepted_samples == 0 {
+            return Err(Error::Config("accepted_samples must be >= 1".into()));
+        }
+        match self.return_strategy {
+            ReturnStrategy::Outfeed { chunk } => {
+                if chunk == 0 || chunk > self.batch_per_device {
+                    return Err(Error::Config(format!(
+                        "outfeed chunk {chunk} must be in [1, batch_per_device={}]",
+                        self.batch_per_device
+                    )));
+                }
+            }
+            ReturnStrategy::TopK { k } => {
+                if k == 0 || k > self.batch_per_device {
+                    return Err(Error::Config(format!(
+                        "top-k {k} must be in [1, batch_per_device={}]",
+                        self.batch_per_device
+                    )));
+                }
+            }
+        }
+        if let Some(tol) = self.tolerance {
+            if !(tol > 0.0) {
+                return Err(Error::Config(format!("tolerance must be > 0, got {tol}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from a JSON document.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(d) = v.get("dataset") {
+            cfg.dataset = d.as_str()?.to_string();
+        }
+        if let Some(t) = v.get("tolerance") {
+            cfg.tolerance = match t {
+                Json::Null => None,
+                other => Some(other.as_f64()? as f32),
+            };
+        }
+        if let Some(n) = v.get("accepted_samples") {
+            cfg.accepted_samples = n.as_usize()?;
+        }
+        if let Some(n) = v.get("devices") {
+            cfg.devices = n.as_usize()?;
+        }
+        if let Some(n) = v.get("batch_per_device") {
+            cfg.batch_per_device = n.as_usize()?;
+        }
+        if let Some(n) = v.get("days") {
+            cfg.days = n.as_usize()?;
+        }
+        if let Some(n) = v.get("seed") {
+            cfg.seed = n.as_f64()? as u64;
+        }
+        if let Some(n) = v.get("max_runs") {
+            cfg.max_runs = n.as_f64()? as u64;
+        }
+        if let Some(rs) = v.get("return_strategy") {
+            let mode = rs.req("mode")?.as_str()?;
+            cfg.return_strategy = match mode {
+                "outfeed" => ReturnStrategy::Outfeed { chunk: rs.req("chunk")?.as_usize()? },
+                "top_k" => ReturnStrategy::TopK { k: rs.req("k")?.as_usize()? },
+                other => {
+                    return Err(Error::Parse(format!("unknown return strategy `{other}`")))
+                }
+            };
+        } else if let ReturnStrategy::Outfeed { chunk } = cfg.return_strategy {
+            // strategy left to default: clamp the default chunk to the
+            // (possibly smaller) configured batch
+            cfg.return_strategy =
+                ReturnStrategy::Outfeed { chunk: chunk.min(cfg.batch_per_device) };
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("dataset".into(), Json::Str(self.dataset.clone()));
+        m.insert(
+            "tolerance".into(),
+            match self.tolerance {
+                Some(t) => Json::Num(t as f64),
+                None => Json::Null,
+            },
+        );
+        m.insert("accepted_samples".into(), Json::Num(self.accepted_samples as f64));
+        m.insert("devices".into(), Json::Num(self.devices as f64));
+        m.insert("batch_per_device".into(), Json::Num(self.batch_per_device as f64));
+        m.insert("days".into(), Json::Num(self.days as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("max_runs".into(), Json::Num(self.max_runs as f64));
+        let mut rs = BTreeMap::new();
+        match self.return_strategy {
+            ReturnStrategy::Outfeed { chunk } => {
+                rs.insert("mode".into(), Json::Str("outfeed".into()));
+                rs.insert("chunk".into(), Json::Num(chunk as f64));
+            }
+            ReturnStrategy::TopK { k } => {
+                rs.insert("mode".into(), Json::Str("top_k".into()));
+                rs.insert("k".into(), Json::Num(k as f64));
+            }
+        }
+        m.insert("return_strategy".into(), Json::Obj(rs));
+        Json::Obj(m).to_string()
+    }
+
+    /// Total samples simulated per synchronized round across devices.
+    pub fn samples_per_round(&self) -> u64 {
+        self.devices as u64 * self.batch_per_device as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let cfg = RunConfig {
+            return_strategy: ReturnStrategy::TopK { k: 5 },
+            tolerance: Some(2e5),
+            seed: 99,
+            ..RunConfig::default()
+        };
+        let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn json_round_trip_outfeed_and_none_tolerance() {
+        let cfg = RunConfig::default();
+        let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn small_batch_config_clamps_default_chunk() {
+        let cfg = RunConfig::from_json(r#"{"batch_per_device": 1000}"#).unwrap();
+        assert_eq!(cfg.return_strategy, ReturnStrategy::Outfeed { chunk: 1000 });
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = RunConfig::from_json(r#"{"devices": 4, "batch_per_device": 50000}"#).unwrap();
+        assert_eq!(cfg.devices, 4);
+        assert_eq!(cfg.batch_per_device, 50_000);
+        assert_eq!(cfg.days, 49);
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let mut cfg = RunConfig::default();
+        cfg.devices = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = RunConfig::default();
+        cfg.return_strategy = ReturnStrategy::Outfeed { chunk: cfg.batch_per_device + 1 };
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = RunConfig::default();
+        cfg.return_strategy = ReturnStrategy::TopK { k: 0 };
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = RunConfig::default();
+        cfg.tolerance = Some(-1.0);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_strategy() {
+        assert!(RunConfig::from_json(r#"{"return_strategy": {"mode": "magic"}}"#).is_err());
+    }
+
+    #[test]
+    fn samples_per_round() {
+        let cfg = RunConfig { devices: 4, batch_per_device: 100_000, ..Default::default() };
+        assert_eq!(cfg.samples_per_round(), 400_000);
+    }
+}

@@ -1,0 +1,187 @@
+//! Device worker: one simulated accelerator.
+//!
+//! A worker owns its own PJRT client and compiled ABC executable
+//! (mirroring per-device program residency on real IPUs; also required
+//! because `xla::PjRtClient` is thread-local). Its loop:
+//!
+//! 1. claim the next global run index from the leader's atomic counter,
+//! 2. derive the run's threefry key (a function of the run index only),
+//! 3. execute the compiled ABC graph,
+//! 4. apply the device-side return strategy (conditional chunked
+//!    outfeed or Top-k selection),
+//! 5. ship the resulting [`Transfer`] to the leader.
+//!
+//! Workers stop when the leader raises the stop flag or the run budget
+//! is exhausted.
+
+use super::outfeed::{chunk_batch, OutfeedChunk};
+use super::topk::{top_k_selection, TopKSelection};
+use crate::config::ReturnStrategy;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::model::Theta;
+use crate::rng::SeedSequence;
+use crate::runtime::Runtime;
+use crate::Result;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Device-side output of one run, after return-strategy filtering.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Transfer {
+    /// Outfeed chunks that contained ≥ 1 accepted sample.
+    Chunks(Vec<OutfeedChunk>),
+    /// Fixed Top-k selection.
+    TopK(TopKSelection),
+}
+
+impl Transfer {
+    /// Bytes crossing the device→host boundary.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Transfer::Chunks(cs) => cs.iter().map(|c| c.wire_bytes()).sum(),
+            Transfer::TopK(s) => s.wire_bytes(),
+        }
+    }
+
+    /// Number of discrete transfers (chunks, or 1 for top-k).
+    pub fn transfer_count(&self) -> u64 {
+        match self {
+            Transfer::Chunks(cs) => cs.len() as u64,
+            Transfer::TopK(_) => 1,
+        }
+    }
+}
+
+/// One run's report from a device worker to the leader.
+#[derive(Debug)]
+pub struct DeviceReport {
+    /// Which device executed the run.
+    pub device: u32,
+    /// Global run index.
+    pub run: u64,
+    /// Accelerator execution time of this run.
+    pub exec_time: Duration,
+    /// Filtered device→host payload.
+    pub transfer: Transfer,
+    /// Chunks skipped by the conditional outfeed (0 for top-k).
+    pub chunks_skipped: u64,
+    /// Samples simulated (= batch size).
+    pub samples: u64,
+}
+
+/// Everything a worker thread needs; plain data so it can be moved in.
+pub(super) struct WorkerSpec {
+    pub device: u32,
+    pub artifacts_dir: PathBuf,
+    pub batch: usize,
+    pub days: usize,
+    pub observed: Vec<f32>,
+    pub prior_low: Theta,
+    pub prior_high: Theta,
+    pub consts: [f32; 4],
+    pub tolerance: f32,
+    pub strategy: ReturnStrategy,
+    pub seeds: SeedSequence,
+    pub next_run: Arc<AtomicU64>,
+    pub run_budget: u64,
+    pub stop: Arc<AtomicBool>,
+    pub tx: mpsc::Sender<Result<DeviceReport>>,
+}
+
+/// Worker thread body. Opens its own runtime, compiles once, then loops.
+/// Sends `Err` once and exits on any failure.
+pub(super) fn worker_main(spec: WorkerSpec) -> RunMetrics {
+    let mut metrics = RunMetrics::default();
+    let total_sw = Stopwatch::start();
+
+    let exe = match Runtime::open(&spec.artifacts_dir)
+        .and_then(|rt| rt.abc(spec.batch, spec.days))
+    {
+        Ok(exe) => exe,
+        Err(e) => {
+            let _ = spec.tx.send(Err(e));
+            return metrics;
+        }
+    };
+
+    while !spec.stop.load(Ordering::Relaxed) {
+        let run = spec.next_run.fetch_add(1, Ordering::Relaxed);
+        if spec.run_budget > 0 && run >= spec.run_budget {
+            break;
+        }
+        // Key depends only on the global run index → the sample stream
+        // is scheduling-independent (see module docs of `coordinator`).
+        let key = spec.seeds.key(0, run);
+
+        let sw = Stopwatch::start();
+        let out = match exe.run(key, &spec.observed, &spec.prior_low, &spec.prior_high,
+                                &spec.consts) {
+            Ok(out) => out,
+            Err(e) => {
+                let _ = spec.tx.send(Err(e));
+                break;
+            }
+        };
+        let exec_time = sw.elapsed();
+
+        // Device-side half of the return strategy.
+        let (transfer, skipped) = match spec.strategy {
+            ReturnStrategy::Outfeed { chunk } => {
+                let (chunks, skipped) = chunk_batch(&out, chunk, spec.tolerance);
+                (Transfer::Chunks(chunks), skipped)
+            }
+            ReturnStrategy::TopK { k } => {
+                (Transfer::TopK(top_k_selection(&out, k, spec.tolerance)), 0)
+            }
+        };
+
+        metrics.runs += 1;
+        metrics.samples_simulated += out.batch() as u64;
+        metrics.device_exec += exec_time;
+        metrics.bytes_to_host += transfer.wire_bytes();
+        metrics.transfers += transfer.transfer_count();
+        metrics.transfers_skipped += skipped;
+
+        let report = DeviceReport {
+            device: spec.device,
+            run,
+            exec_time,
+            transfer,
+            chunks_skipped: skipped,
+            samples: out.batch() as u64,
+        };
+        if spec.tx.send(Ok(report)).is_err() {
+            break; // leader hung up
+        }
+    }
+
+    metrics.total = total_sw.elapsed();
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_accounting() {
+        let chunks = Transfer::Chunks(vec![
+            OutfeedChunk { offset: 0, thetas: vec![0.0; 8], distances: vec![0.0] },
+            OutfeedChunk { offset: 5, thetas: vec![0.0; 16], distances: vec![0.0; 2] },
+        ]);
+        assert_eq!(chunks.transfer_count(), 2);
+        assert_eq!(chunks.wire_bytes(), (8 + 1 + 16 + 2) * 4);
+
+        let topk = Transfer::TopK(super::super::topk::top_k_selection(
+            &crate::runtime::AbcRunOutput {
+                thetas: vec![0.0; 80],
+                distances: vec![1.0; 10],
+            },
+            3,
+            0.5,
+        ));
+        assert_eq!(topk.transfer_count(), 1);
+    }
+}

@@ -1,0 +1,275 @@
+//! The leader: run distribution, host filtering, stop control.
+
+use super::device::{worker_main, DeviceReport, WorkerSpec};
+use super::postproc::filter_transfer;
+use super::AcceptedSample;
+use crate::config::RunConfig;
+use crate::data::Dataset;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::model::Prior;
+use crate::rng::SeedSequence;
+use crate::{Error, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// When the leader stops the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopRule {
+    /// Stop once at least this many samples are accepted (the paper's
+    /// mode: "repeat until the target number of posterior samples").
+    /// In-flight runs may overshoot; all accepted samples are kept.
+    AcceptedTarget(usize),
+    /// Execute exactly this many runs, then stop — fully deterministic
+    /// for a given master seed, used by benches and property tests.
+    ExactRuns(u64),
+}
+
+/// Result of one inference job.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    /// Accepted posterior samples, sorted by (run, index) so the result
+    /// is reproducible independent of worker scheduling.
+    pub accepted: Vec<AcceptedSample>,
+    /// Merged metrics across devices + leader.
+    pub metrics: RunMetrics,
+    /// Tolerance used.
+    pub tolerance: f32,
+}
+
+impl InferenceResult {
+    /// The first `n` accepted samples in deterministic order.
+    pub fn take(&self, n: usize) -> &[AcceptedSample] {
+        &self.accepted[..n.min(self.accepted.len())]
+    }
+
+    /// θ rows of all accepted samples, `[n, 8]` row-major.
+    pub fn theta_matrix(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.accepted.len() * 8);
+        for s in &self.accepted {
+            out.extend_from_slice(&s.theta);
+        }
+        out
+    }
+}
+
+/// The parallel ABC inference engine (leader side).
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    artifacts_dir: PathBuf,
+    config: RunConfig,
+    dataset: Dataset,
+    prior: Prior,
+}
+
+impl Coordinator {
+    /// Build a coordinator for one dataset + configuration.
+    pub fn new(
+        artifacts_dir: impl Into<PathBuf>,
+        config: RunConfig,
+        dataset: Dataset,
+        prior: Prior,
+    ) -> Result<Self> {
+        config.validate()?;
+        if dataset.days() < config.days {
+            return Err(Error::Config(format!(
+                "dataset `{}` has {} days, config wants {}",
+                dataset.name,
+                dataset.days(),
+                config.days
+            )));
+        }
+        Ok(Self { artifacts_dir: artifacts_dir.into(), config, dataset, prior })
+    }
+
+    /// Effective tolerance (config override or dataset default).
+    pub fn tolerance(&self) -> f32 {
+        self.config.tolerance.unwrap_or(self.dataset.default_tolerance)
+    }
+
+    /// The configuration in use.
+    pub fn config(&self) -> &RunConfig {
+        &self.config
+    }
+
+    /// The dataset in use.
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    /// Run the inference job until `stop` is satisfied.
+    pub fn run(&self, stop: StopRule) -> Result<InferenceResult> {
+        let tolerance = self.tolerance();
+        let cfg = &self.config;
+        let truncated = self.dataset.truncated(cfg.days);
+        let observed = truncated.observed.flatten();
+        let consts = truncated.consts();
+        let seeds = SeedSequence::new(cfg.seed);
+
+        let next_run = Arc::new(AtomicU64::new(0));
+        let stop_flag = Arc::new(AtomicBool::new(false));
+        let run_budget = match stop {
+            StopRule::ExactRuns(r) => r,
+            StopRule::AcceptedTarget(_) => cfg.max_runs,
+        };
+        let (tx, rx) = mpsc::channel::<Result<DeviceReport>>();
+
+        let total_sw = Stopwatch::start();
+        let mut handles = Vec::with_capacity(cfg.devices);
+        for device in 0..cfg.devices as u32 {
+            let spec = WorkerSpec {
+                device,
+                artifacts_dir: self.artifacts_dir.clone(),
+                batch: cfg.batch_per_device,
+                days: cfg.days,
+                observed: observed.clone(),
+                prior_low: *self.prior.low(),
+                prior_high: *self.prior.high(),
+                consts,
+                tolerance,
+                strategy: cfg.return_strategy,
+                seeds,
+                next_run: next_run.clone(),
+                run_budget,
+                stop: stop_flag.clone(),
+                tx: tx.clone(),
+            };
+            handles.push(std::thread::spawn(move || worker_main(spec)));
+        }
+        drop(tx); // leader keeps only rx; channel closes when workers exit
+
+        let mut accepted: Vec<AcceptedSample> = Vec::new();
+        let mut leader_metrics = RunMetrics::default();
+        let mut first_error: Option<Error> = None;
+
+        for msg in rx.iter() {
+            match msg {
+                Ok(report) => {
+                    let sw = Stopwatch::start();
+                    filter_transfer(
+                        &report.transfer,
+                        tolerance,
+                        report.device,
+                        report.run,
+                        &mut accepted,
+                    );
+                    leader_metrics.host_postproc += sw.elapsed();
+                    leader_metrics.samples_accepted =
+                        accepted.len() as u64;
+
+                    if let StopRule::AcceptedTarget(target) = stop {
+                        if accepted.len() >= target {
+                            stop_flag.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Remember the first failure and stop the fleet.
+                    if first_error.is_none() {
+                        first_error = Some(e);
+                    }
+                    stop_flag.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+
+        let mut metrics = leader_metrics;
+        for handle in handles {
+            let device_metrics = handle
+                .join()
+                .map_err(|_| Error::Coordinator("device worker panicked".into()))?;
+            metrics.merge(&device_metrics);
+        }
+        metrics.samples_accepted = accepted.len() as u64;
+        metrics.total = total_sw.elapsed();
+
+        if let Some(e) = first_error {
+            return Err(e);
+        }
+        if let StopRule::AcceptedTarget(target) = stop {
+            if accepted.len() < target && cfg.max_runs > 0 {
+                return Err(Error::Coordinator(format!(
+                    "run budget {} exhausted with only {}/{} accepted samples \
+                     (tolerance {tolerance} too tight?)",
+                    cfg.max_runs,
+                    accepted.len(),
+                    target
+                )));
+            }
+        }
+
+        // Deterministic order regardless of worker scheduling.
+        accepted.sort_by_key(|s| (s.run, s.index));
+        Ok(InferenceResult { accepted, metrics, tolerance })
+    }
+
+    /// Convenience: run until `n` samples are accepted.
+    pub fn run_until(&self, n: usize) -> Result<InferenceResult> {
+        self.run(StopRule::AcceptedTarget(n))
+    }
+
+    /// Convenience: run exactly `r` runs (deterministic).
+    pub fn run_exact(&self, r: u64) -> Result<InferenceResult> {
+        self.run(StopRule::ExactRuns(r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn config() -> RunConfig {
+        RunConfig {
+            dataset: "synthetic".into(),
+            batch_per_device: 1000,
+            days: 16,
+            devices: 2,
+            return_strategy: crate::config::ReturnStrategy::Outfeed { chunk: 1000 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rejects_short_dataset() {
+        let ds = synthetic::default_dataset(10, 0); // only 10 days
+        let err = Coordinator::new("artifacts", config(), ds, Prior::paper());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn tolerance_defaults_to_dataset() {
+        let ds = synthetic::default_dataset(16, 0);
+        let tol = ds.default_tolerance;
+        let c = Coordinator::new("artifacts", config(), ds, Prior::paper()).unwrap();
+        assert_eq!(c.tolerance(), tol);
+
+        let mut cfg = config();
+        cfg.tolerance = Some(123.0);
+        let ds = synthetic::default_dataset(16, 0);
+        let c = Coordinator::new("artifacts", cfg, ds, Prior::paper()).unwrap();
+        assert_eq!(c.tolerance(), 123.0);
+    }
+
+    #[test]
+    fn result_take_and_matrix() {
+        let samples: Vec<AcceptedSample> = (0..3)
+            .map(|i| AcceptedSample {
+                theta: [i as f32; 8],
+                distance: i as f32,
+                device: 0,
+                run: i as u64,
+                index: 0,
+            })
+            .collect();
+        let r = InferenceResult {
+            accepted: samples,
+            metrics: RunMetrics::default(),
+            tolerance: 1.0,
+        };
+        assert_eq!(r.take(2).len(), 2);
+        assert_eq!(r.take(10).len(), 3);
+        assert_eq!(r.theta_matrix().len(), 24);
+        assert_eq!(r.theta_matrix()[8], 1.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! The parallel ABC coordinator — the paper's Layer-3 system contribution.
+//!
+//! Architecture (paper §3, Fig. 2):
+//!
+//! ```text
+//!             ┌────────────────────────── leader ──────────────────────────┐
+//!             │ run budget (atomic counter) · stop flag · tolerance filter │
+//!             │ host post-processing · accepted-sample store · metrics     │
+//!             └──────────▲──────────────────────────────────▲──────────────┘
+//!                        │ mpsc: filtered transfers          │
+//!   ┌─────────────────┐  │                 ┌─────────────────┐
+//!   │ device worker 0 │──┘                 │ device worker N │ ...
+//!   │ own PJRT client │                    │ own PJRT client │
+//!   │ abc executable  │                    │ abc executable  │
+//!   │ outfeed / top-k │                    │ outfeed / top-k │
+//!   └─────────────────┘                    └─────────────────┘
+//! ```
+//!
+//! Every **device worker** stands in for one accelerator (IPU or GPU):
+//! it owns its own PJRT client and compiled executable (mirroring the
+//! per-device program residency of real hardware — `xla::PjRtClient` is
+//! deliberately thread-local), executes vectorized ABC runs, and applies
+//! the *device-side* half of the sample-return strategy: conditional
+//! chunked outfeed (IPU, §3.2) or fixed Top-k selection (GPU, §3.2).
+//! The **leader** assigns global run indices, filters transferred chunks
+//! by tolerance on the host, accumulates accepted samples, and stops the
+//! fleet once the target is reached.
+//!
+//! Reproducibility: the threefry key of a run depends only on the
+//! *global run index* (not on which device executed it), so the sample
+//! stream is a deterministic function of the master seed. With a fixed
+//! run budget ([`Coordinator::run_exact`]) the accepted set is exactly
+//! reproducible across any device count, chunk size or return strategy —
+//! the property the `prop_coordinator` suite pins down.
+
+pub mod autotune;
+mod device;
+mod leader;
+mod outfeed;
+mod postproc;
+mod topk;
+
+pub use autotune::{autotune_batch, TuneResult};
+pub use device::{DeviceReport, Transfer};
+pub use leader::{Coordinator, InferenceResult, StopRule};
+pub use outfeed::{chunk_batch, OutfeedChunk};
+pub use postproc::{filter_transfer, PostprocStats};
+pub use topk::top_k_selection;
+
+use crate::model::Theta;
+
+/// One accepted posterior sample with its provenance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AcceptedSample {
+    /// Parameter vector.
+    pub theta: Theta,
+    /// Euclidean distance to the observed data.
+    pub distance: f32,
+    /// Device that simulated it.
+    pub device: u32,
+    /// Global run index that produced it.
+    pub run: u64,
+    /// Index within the run's batch.
+    pub index: u32,
+}

@@ -1,0 +1,124 @@
+//! Host post-processing: tolerance filtering of transferred payloads.
+//!
+//! The paper measures this stage separately (Table 4): on the IPU path
+//! the host filters whole 10k-sample chunks, on the GPU path it filters
+//! the k pre-selected samples — the chunked outfeed trades more host
+//! work for exactness, Top-k trades host work for a risk of dropped
+//! samples.
+
+use super::device::Transfer;
+use super::AcceptedSample;
+use crate::model::N_PARAMS;
+
+/// Counters of one postprocessing invocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PostprocStats {
+    /// Samples examined on the host.
+    pub scanned: u64,
+    /// Samples accepted.
+    pub accepted: u64,
+}
+
+/// Filter a device transfer by tolerance, appending accepted samples.
+///
+/// Returns stats; `out` receives one [`AcceptedSample`] per accepted
+/// entry, in (offset, index) order within the transfer.
+pub fn filter_transfer(
+    transfer: &Transfer,
+    tolerance: f32,
+    device: u32,
+    run: u64,
+    out: &mut Vec<AcceptedSample>,
+) -> PostprocStats {
+    let mut stats = PostprocStats::default();
+    match transfer {
+        Transfer::Chunks(chunks) => {
+            for chunk in chunks {
+                for (i, &d) in chunk.distances.iter().enumerate() {
+                    stats.scanned += 1;
+                    if d <= tolerance {
+                        stats.accepted += 1;
+                        let mut theta = [0.0f32; N_PARAMS];
+                        theta.copy_from_slice(&chunk.thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
+                        out.push(AcceptedSample {
+                            theta,
+                            distance: d,
+                            device,
+                            run,
+                            index: chunk.offset + i as u32,
+                        });
+                    }
+                }
+            }
+        }
+        Transfer::TopK(sel) => {
+            for (i, &d) in sel.distances.iter().enumerate() {
+                stats.scanned += 1;
+                if d <= tolerance {
+                    stats.accepted += 1;
+                    let mut theta = [0.0f32; N_PARAMS];
+                    theta.copy_from_slice(&sel.thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
+                    out.push(AcceptedSample {
+                        theta,
+                        distance: d,
+                        device,
+                        run,
+                        index: sel.indices[i],
+                    });
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::outfeed::OutfeedChunk;
+    use crate::coordinator::topk::top_k_selection;
+    use crate::runtime::AbcRunOutput;
+
+    #[test]
+    fn chunk_filtering_accepts_only_under_tolerance() {
+        let t = Transfer::Chunks(vec![OutfeedChunk {
+            offset: 10,
+            thetas: (0..24).map(|i| i as f32).collect(),
+            distances: vec![0.5, 3.0, 1.0],
+        }]);
+        let mut out = Vec::new();
+        let stats = filter_transfer(&t, 1.0, 2, 7, &mut out);
+        assert_eq!(stats, PostprocStats { scanned: 3, accepted: 2 });
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].index, 10);
+        assert_eq!(out[1].index, 12);
+        assert_eq!(out[0].device, 2);
+        assert_eq!(out[0].run, 7);
+        assert_eq!(out[1].theta[0], 16.0);
+    }
+
+    #[test]
+    fn topk_filtering_respects_indices() {
+        let out_run = AbcRunOutput {
+            thetas: (0..40).map(|i| i as f32).collect(),
+            distances: vec![5.0, 0.5, 4.0, 0.7, 3.0],
+        };
+        let sel = top_k_selection(&out_run, 3, 1.0);
+        let t = Transfer::TopK(sel);
+        let mut out = Vec::new();
+        let stats = filter_transfer(&t, 1.0, 0, 0, &mut out);
+        assert_eq!(stats.scanned, 3);
+        assert_eq!(stats.accepted, 2);
+        let idx: Vec<u32> = out.iter().map(|s| s.index).collect();
+        assert_eq!(idx, vec![1, 3]);
+    }
+
+    #[test]
+    fn empty_transfer_is_noop() {
+        let t = Transfer::Chunks(vec![]);
+        let mut out = Vec::new();
+        let stats = filter_transfer(&t, 1.0, 0, 0, &mut out);
+        assert_eq!(stats, PostprocStats::default());
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,120 @@
+//! GPU-style fixed-shape Top-k sample return (paper §3.2).
+//!
+//! Data leaving an XLA graph on the GPU must have a fixed shape, so the
+//! paper's GPU implementation returns, per run: (a) the count of
+//! accepted samples, and (b) the `k` lowest-distance samples regardless
+//! of acceptance. The host filters those k by tolerance afterwards.
+//! Undersized `k` can drop genuinely accepted samples — the
+//! hyperparameter cost the paper tuned (k=5 at ε=2e5, k=1 at 5e4) and
+//! the reason its IPU path preferred outfeeds.
+
+use crate::runtime::AbcRunOutput;
+
+/// Device-side Top-k selection result for one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopKSelection {
+    /// Number of samples in the run with `distance <= tolerance`
+    /// (computed "on device": exact, even if k is too small).
+    pub accepted_count: u32,
+    /// Indices (into the run batch) of the k lowest-distance samples,
+    /// ascending by distance.
+    pub indices: Vec<u32>,
+    /// θ rows of the selected samples, `[k, 8]` row-major.
+    pub thetas: Vec<f32>,
+    /// Distances of the selected samples, ascending.
+    pub distances: Vec<f32>,
+}
+
+impl TopKSelection {
+    /// Bytes on the wire: count + k·(θ + distance + index).
+    pub fn wire_bytes(&self) -> u64 {
+        (4 + self.distances.len() * (8 + 1 + 1) * 4) as u64
+    }
+}
+
+/// Select the `k` lowest-distance samples of a run plus the exact
+/// accepted count at `tolerance`.
+///
+/// Selection is a partial sort (`select_nth_unstable`) — O(batch) — the
+/// host analogue of the device-side top-k reduction.
+pub fn top_k_selection(out: &AbcRunOutput, k: usize, tolerance: f32) -> TopKSelection {
+    let batch = out.batch();
+    let k = k.min(batch);
+    let accepted_count = out.distances.iter().filter(|&&d| d <= tolerance).count() as u32;
+
+    let mut order: Vec<u32> = (0..batch as u32).collect();
+    if k < batch {
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            out.distances[a as usize].total_cmp(&out.distances[b as usize])
+        });
+        order.truncate(k);
+    }
+    order.sort_by(|&a, &b| out.distances[a as usize].total_cmp(&out.distances[b as usize]));
+
+    let mut thetas = Vec::with_capacity(k * 8);
+    let mut distances = Vec::with_capacity(k);
+    for &i in &order {
+        let i = i as usize;
+        thetas.extend_from_slice(&out.thetas[i * 8..(i + 1) * 8]);
+        distances.push(out.distances[i]);
+    }
+    TopKSelection { accepted_count, indices: order, thetas, distances }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_output(distances: Vec<f32>) -> AbcRunOutput {
+        let batch = distances.len();
+        AbcRunOutput {
+            thetas: (0..batch * 8).map(|i| i as f32).collect(),
+            distances,
+        }
+    }
+
+    #[test]
+    fn selects_lowest_k_in_order() {
+        let out = run_output(vec![5.0, 1.0, 4.0, 0.5, 3.0]);
+        let sel = top_k_selection(&out, 2, 1.0);
+        assert_eq!(sel.indices, vec![3, 1]);
+        assert_eq!(sel.distances, vec![0.5, 1.0]);
+        assert_eq!(sel.accepted_count, 2);
+        // θ rows follow selection order
+        assert_eq!(sel.thetas[0], 24.0); // sample 3 starts at 3*8
+        assert_eq!(sel.thetas[8], 8.0); // sample 1 starts at 1*8
+    }
+
+    #[test]
+    fn count_is_exact_even_when_k_too_small() {
+        let out = run_output(vec![0.1, 0.2, 0.3, 9.0]);
+        let sel = top_k_selection(&out, 1, 0.5);
+        assert_eq!(sel.accepted_count, 3); // device count sees all
+        assert_eq!(sel.distances.len(), 1); // but only k transferred
+    }
+
+    #[test]
+    fn k_larger_than_batch_clamps() {
+        let out = run_output(vec![2.0, 1.0]);
+        let sel = top_k_selection(&out, 10, 0.5);
+        assert_eq!(sel.distances, vec![1.0, 2.0]);
+        assert_eq!(sel.accepted_count, 0);
+    }
+
+    #[test]
+    fn handles_ties_deterministically_by_distance() {
+        let out = run_output(vec![1.0, 1.0, 1.0, 1.0]);
+        let sel = top_k_selection(&out, 2, 2.0);
+        assert_eq!(sel.distances, vec![1.0, 1.0]);
+        assert_eq!(sel.accepted_count, 4);
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_k() {
+        let out = run_output(vec![1.0; 100]);
+        let a = top_k_selection(&out, 1, 0.0).wire_bytes();
+        let b = top_k_selection(&out, 5, 0.0).wire_bytes();
+        assert!(b > a);
+        assert_eq!(a, 4 + 40);
+    }
+}

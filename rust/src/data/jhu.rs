@@ -1,0 +1,305 @@
+//! Johns Hopkins CSSE time-series format support.
+//!
+//! The paper's data source (§2.1, footnote 5) is the JHU CSSE COVID-19
+//! repository: three wide-format CSVs (`confirmed`, `deaths`,
+//! `recovered`), one row per region, one column per date:
+//!
+//! ```csv
+//! Province/State,Country/Region,Lat,Long,1/22/20,1/23/20,...
+//! ,Italy,41.87,12.56,0,0,...
+//! ```
+//!
+//! This module parses that exact layout (including quoted fields with
+//! embedded commas, e.g. `"Korea, South"`), aggregates provinces into
+//! country totals, aligns the onset (first day with ≥ `onset_threshold`
+//! cumulative cases — the paper uses 100), and derives the model's
+//! observables: active A = confirmed − recovered − deaths, cumulative
+//! R and D.
+
+use super::{Dataset, ObservedSeries};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Default onset rule from the paper: first day with ≥ 100 cases.
+pub const ONSET_THRESHOLD: f32 = 100.0;
+
+/// One parsed wide-format JHU table: country → cumulative series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JhuTable {
+    /// Number of date columns.
+    pub days: usize,
+    /// Country/Region → per-day cumulative counts (provinces summed).
+    pub by_country: BTreeMap<String, Vec<f32>>,
+}
+
+/// Split one CSV line honoring double-quoted fields.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    for c in line.chars() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => fields.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+impl JhuTable {
+    /// Parse a wide-format JHU CSV.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().enumerate();
+        let (_, header) = lines
+            .next()
+            .ok_or_else(|| Error::Parse("empty JHU csv".into()))?;
+        let header = split_csv_line(header);
+        if header.len() < 5
+            || !header[1].contains("Country")
+        {
+            return Err(Error::Parse(format!(
+                "not a JHU wide-format header: {:?}...",
+                &header[..header.len().min(4)]
+            )));
+        }
+        let days = header.len() - 4;
+        let mut by_country: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        for (lineno, line) in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols = split_csv_line(line);
+            if cols.len() != header.len() {
+                return Err(Error::Parse(format!(
+                    "line {}: {} columns, header has {}",
+                    lineno + 1,
+                    cols.len(),
+                    header.len()
+                )));
+            }
+            let country = cols[1].trim().to_string();
+            let series = by_country
+                .entry(country)
+                .or_insert_with(|| vec![0.0; days]);
+            for (d, raw) in cols[4..].iter().enumerate() {
+                let v: f32 = raw.trim().parse().map_err(|_| {
+                    Error::Parse(format!("line {}: bad count `{raw}`", lineno + 1))
+                })?;
+                series[d] += v;
+            }
+        }
+        Ok(Self { days, by_country })
+    }
+
+    /// Parse from a file.
+    pub fn parse_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Country lookup (exact, case-insensitive).
+    pub fn country(&self, name: &str) -> Option<&Vec<f32>> {
+        self.by_country
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v)
+    }
+}
+
+/// The three JHU tables combined.
+#[derive(Debug, Clone)]
+pub struct JhuDataset {
+    confirmed: JhuTable,
+    deaths: JhuTable,
+    recovered: JhuTable,
+}
+
+impl JhuDataset {
+    /// Combine the three wide-format tables; day counts must agree.
+    pub fn new(confirmed: JhuTable, deaths: JhuTable, recovered: JhuTable) -> Result<Self> {
+        if confirmed.days != deaths.days || confirmed.days != recovered.days {
+            return Err(Error::Parse(format!(
+                "table day counts disagree: confirmed={}, deaths={}, recovered={}",
+                confirmed.days, deaths.days, recovered.days
+            )));
+        }
+        Ok(Self { confirmed, deaths, recovered })
+    }
+
+    /// Load from the three standard files in a directory
+    /// (`time_series_covid19_{confirmed,deaths,recovered}_global.csv`).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        Self::new(
+            JhuTable::parse_file(dir.join("time_series_covid19_confirmed_global.csv"))?,
+            JhuTable::parse_file(dir.join("time_series_covid19_deaths_global.csv"))?,
+            JhuTable::parse_file(dir.join("time_series_covid19_recovered_global.csv"))?,
+        )
+    }
+
+    /// Extract one country as a model [`Dataset`]: onset-aligned
+    /// (first day ≥ `onset_threshold` cumulative cases), `fit_days`
+    /// long, with A = confirmed − recovered − deaths.
+    pub fn country_dataset(
+        &self,
+        name: &str,
+        population: f32,
+        fit_days: usize,
+        onset_threshold: f32,
+    ) -> Result<Dataset> {
+        let c = self
+            .confirmed
+            .country(name)
+            .ok_or_else(|| Error::Parse(format!("country `{name}` not in confirmed table")))?;
+        let d = self
+            .deaths
+            .country(name)
+            .ok_or_else(|| Error::Parse(format!("country `{name}` not in deaths table")))?;
+        let r = self
+            .recovered
+            .country(name)
+            .ok_or_else(|| Error::Parse(format!("country `{name}` not in recovered table")))?;
+
+        let onset = c
+            .iter()
+            .position(|&v| v >= onset_threshold)
+            .ok_or_else(|| {
+                Error::Parse(format!(
+                    "country `{name}` never reaches {onset_threshold} cases"
+                ))
+            })?;
+        let available = self.confirmed.days - onset;
+        if available < fit_days {
+            return Err(Error::Parse(format!(
+                "country `{name}`: only {available} days after onset, want {fit_days}"
+            )));
+        }
+        let mut active = Vec::with_capacity(fit_days);
+        let mut recovered = Vec::with_capacity(fit_days);
+        let mut deaths = Vec::with_capacity(fit_days);
+        for t in onset..onset + fit_days {
+            let a = (c[t] - r[t] - d[t]).max(0.0);
+            active.push(a);
+            recovered.push(r[t]);
+            deaths.push(d[t]);
+        }
+        Ok(Dataset {
+            name: name.to_ascii_lowercase().replace(' ', "_"),
+            observed: ObservedSeries::new(active, recovered, deaths)?,
+            population,
+            default_tolerance: 5e4, // placeholder; pilot-calibrate per §5
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CONFIRMED: &str = "\
+Province/State,Country/Region,Lat,Long,1/22/20,1/23/20,1/24/20,1/25/20,1/26/20
+,Italy,41.87,12.56,0,60,120,400,900
+Hubei,China,30.97,112.27,444,444,549,761,1058
+Beijing,China,40.18,116.41,14,22,36,41,68
+,\"Korea, South\",35.9,127.7,1,1,2,2,3
+";
+    const DEATHS: &str = "\
+Province/State,Country/Region,Lat,Long,1/22/20,1/23/20,1/24/20,1/25/20,1/26/20
+,Italy,41.87,12.56,0,2,3,10,20
+Hubei,China,30.97,112.27,17,17,24,40,52
+Beijing,China,40.18,116.41,0,0,0,0,1
+,\"Korea, South\",35.9,127.7,0,0,0,0,0
+";
+    const RECOVERED: &str = "\
+Province/State,Country/Region,Lat,Long,1/22/20,1/23/20,1/24/20,1/25/20,1/26/20
+,Italy,41.87,12.56,0,1,2,5,12
+Hubei,China,30.97,112.27,28,28,31,32,42
+Beijing,China,40.18,116.41,0,0,0,0,2
+,\"Korea, South\",35.9,127.7,0,0,0,0,0
+";
+
+    fn dataset() -> JhuDataset {
+        JhuDataset::new(
+            JhuTable::parse(CONFIRMED).unwrap(),
+            JhuTable::parse(DEATHS).unwrap(),
+            JhuTable::parse(RECOVERED).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_wide_format_and_sums_provinces() {
+        let t = JhuTable::parse(CONFIRMED).unwrap();
+        assert_eq!(t.days, 5);
+        assert_eq!(t.country("Italy").unwrap(), &vec![0.0, 60.0, 120.0, 400.0, 900.0]);
+        // Hubei + Beijing
+        assert_eq!(t.country("China").unwrap()[0], 458.0);
+        assert_eq!(t.country("china").unwrap()[4], 1126.0);
+    }
+
+    #[test]
+    fn quoted_country_names() {
+        let t = JhuTable::parse(CONFIRMED).unwrap();
+        assert_eq!(t.country("Korea, South").unwrap()[4], 3.0);
+    }
+
+    #[test]
+    fn onset_alignment_and_observables() {
+        let ds = dataset()
+            .country_dataset("Italy", 60_360_000.0, 3, 100.0)
+            .unwrap();
+        // onset: first day confirmed >= 100 is index 2 (120 cases)
+        assert_eq!(ds.days(), 3);
+        assert_eq!(ds.observed.recovered, vec![2.0, 5.0, 12.0]);
+        assert_eq!(ds.observed.deaths, vec![3.0, 10.0, 20.0]);
+        // A = C - R - D
+        assert_eq!(ds.observed.active, vec![115.0, 385.0, 868.0]);
+        assert_eq!(ds.population, 60_360_000.0);
+    }
+
+    #[test]
+    fn errors_are_specific() {
+        let ds = dataset();
+        let err = ds
+            .country_dataset("Atlantis", 1.0, 3, 100.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Atlantis"));
+        let err = ds
+            .country_dataset("Korea, South", 1.0, 3, 100.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("never reaches"));
+        let err = ds
+            .country_dataset("Italy", 1.0, 10, 100.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("only"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(JhuTable::parse("").is_err());
+        assert!(JhuTable::parse("a,b,c\n1,2,3\n").is_err());
+        let ragged = CONFIRMED.replace(",0,60,120,400,900", ",0,60");
+        assert!(JhuTable::parse(&ragged).is_err());
+        let bad = CONFIRMED.replace("120", "xx");
+        assert!(JhuTable::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn mismatched_day_counts_rejected() {
+        let shorter = "\
+Province/State,Country/Region,Lat,Long,1/22/20
+,Italy,41.87,12.56,0
+";
+        let err = JhuDataset::new(
+            JhuTable::parse(CONFIRMED).unwrap(),
+            JhuTable::parse(shorter).unwrap(),
+            JhuTable::parse(RECOVERED).unwrap(),
+        );
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! COVID-19 case-data substrate.
+//!
+//! The paper fits the model to the Johns Hopkins CSSE daily time series
+//! (active confirmed cases, confirmed recoveries, confirmed deaths) for
+//! 49 days after the first day with ≥ 100 detected cases. This module
+//! provides:
+//!
+//! * [`ObservedSeries`] — the `[3, days]` observable block every
+//!   artifact consumes, with CSV round-tripping,
+//! * [`embedded`] — offline stand-ins for the JHU data for Italy, New
+//!   Zealand and the USA (digitized approximations; see DESIGN.md §1),
+//! * [`synthetic`] — ground-truth generation by simulating the model at
+//!   a known θ\*, used for parameter-recovery validation.
+
+pub mod embedded;
+pub mod jhu;
+mod series;
+pub mod synthetic;
+
+pub use series::ObservedSeries;
+
+use crate::model::InitialCondition;
+
+/// A named dataset: observed series + the constants the model needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    /// Human-readable name ("italy", "synthetic-θ*", ...).
+    pub name: String,
+    /// Observed (A, R, D) series, day 0 = first day with ≥ 100 cases.
+    pub observed: ObservedSeries,
+    /// Total population P.
+    pub population: f32,
+    /// ABC tolerance the experiments use for this dataset (the paper
+    /// tunes this per country, §5).
+    pub default_tolerance: f32,
+}
+
+impl Dataset {
+    /// Initial condition implied by day 0 of the observed data.
+    pub fn initial_condition(&self) -> InitialCondition {
+        InitialCondition {
+            a0: self.observed.active[0],
+            r0: self.observed.recovered[0],
+            d0: self.observed.deaths[0],
+            population: self.population,
+        }
+    }
+
+    /// The `f32[4]` consts input of the compiled artifacts.
+    pub fn consts(&self) -> [f32; 4] {
+        self.initial_condition().to_consts()
+    }
+
+    /// Number of observed days.
+    pub fn days(&self) -> usize {
+        self.observed.days()
+    }
+
+    /// Truncate to the first `days` days (fit windows shorter than the
+    /// stored series, e.g. the 16-day CI artifacts).
+    pub fn truncated(&self, days: usize) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            observed: self.observed.truncated(days),
+            population: self.population,
+            default_tolerance: self.default_tolerance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_initial_condition_comes_from_day0() {
+        let d = embedded::italy();
+        let ic = d.initial_condition();
+        assert_eq!(ic.a0, d.observed.active[0]);
+        assert_eq!(ic.population, d.population);
+        assert_eq!(d.consts()[3], d.population);
+    }
+
+    #[test]
+    fn truncation_preserves_prefix() {
+        let d = embedded::italy();
+        let t = d.truncated(16);
+        assert_eq!(t.days(), 16);
+        assert_eq!(t.observed.active[..], d.observed.active[..16]);
+    }
+}

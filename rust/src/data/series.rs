@@ -1,0 +1,173 @@
+//! The observed `[3, days]` time series and its CSV representation.
+
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Daily observables: active confirmed cases, cumulative confirmed
+/// recoveries, cumulative confirmed deaths — the (A, R, D) block of the
+/// paper's state vector that the JHU data provides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObservedSeries {
+    /// Active confirmed cases per day.
+    pub active: Vec<f32>,
+    /// Cumulative confirmed recoveries per day.
+    pub recovered: Vec<f32>,
+    /// Cumulative confirmed deaths per day.
+    pub deaths: Vec<f32>,
+}
+
+impl ObservedSeries {
+    /// Build from three equal-length columns.
+    pub fn new(active: Vec<f32>, recovered: Vec<f32>, deaths: Vec<f32>) -> Result<Self> {
+        if active.len() != recovered.len() || active.len() != deaths.len() {
+            return Err(Error::Parse(format!(
+                "column length mismatch: active={}, recovered={}, deaths={}",
+                active.len(),
+                recovered.len(),
+                deaths.len()
+            )));
+        }
+        if active.is_empty() {
+            return Err(Error::Parse("empty series".into()));
+        }
+        Ok(Self { active, recovered, deaths })
+    }
+
+    /// Number of days.
+    pub fn days(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Flatten to the `[3, days]` row-major layout of the artifacts
+    /// (A-block, then R-block, then D-block).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(3 * self.days());
+        out.extend_from_slice(&self.active);
+        out.extend_from_slice(&self.recovered);
+        out.extend_from_slice(&self.deaths);
+        out
+    }
+
+    /// Inverse of [`flatten`](Self::flatten).
+    pub fn from_flat(flat: &[f32], days: usize) -> Result<Self> {
+        if flat.len() != 3 * days {
+            return Err(Error::Parse(format!(
+                "flat series has {} values, want {}",
+                flat.len(),
+                3 * days
+            )));
+        }
+        Self::new(
+            flat[..days].to_vec(),
+            flat[days..2 * days].to_vec(),
+            flat[2 * days..].to_vec(),
+        )
+    }
+
+    /// First `days` days.
+    pub fn truncated(&self, days: usize) -> ObservedSeries {
+        let d = days.min(self.days());
+        ObservedSeries {
+            active: self.active[..d].to_vec(),
+            recovered: self.recovered[..d].to_vec(),
+            deaths: self.deaths[..d].to_vec(),
+        }
+    }
+
+    /// Parse the repo's CSV format: header `day,active,recovered,deaths`,
+    /// one row per day in order.
+    pub fn from_csv_str(text: &str) -> Result<Self> {
+        let mut active = Vec::new();
+        let mut recovered = Vec::new();
+        let mut deaths = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || (lineno == 0 && line.starts_with("day")) {
+                continue;
+            }
+            let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+            if cols.len() != 4 {
+                return Err(Error::Parse(format!(
+                    "line {}: want 4 columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let parse = |s: &str, what: &str| -> Result<f32> {
+                s.parse::<f32>().map_err(|_| {
+                    Error::Parse(format!("line {}: bad {what} value `{s}`", lineno + 1))
+                })
+            };
+            active.push(parse(cols[1], "active")?);
+            recovered.push(parse(cols[2], "recovered")?);
+            deaths.push(parse(cols[3], "deaths")?);
+        }
+        Self::new(active, recovered, deaths)
+    }
+
+    /// Load the CSV format from a file.
+    pub fn from_csv_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_csv_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Serialize to the repo's CSV format.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("day,active,recovered,deaths\n");
+        for t in 0..self.days() {
+            out.push_str(&format!(
+                "{},{},{},{}\n",
+                t, self.active[t], self.recovered[t], self.deaths[t]
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> ObservedSeries {
+        ObservedSeries::new(
+            vec![100.0, 150.0, 220.0],
+            vec![1.0, 3.0, 8.0],
+            vec![0.0, 1.0, 2.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flatten_round_trips() {
+        let s = series();
+        let flat = s.flatten();
+        assert_eq!(flat.len(), 9);
+        assert_eq!(flat[0], 100.0);
+        assert_eq!(flat[3], 1.0);
+        assert_eq!(flat[6], 0.0);
+        assert_eq!(ObservedSeries::from_flat(&flat, 3).unwrap(), s);
+    }
+
+    #[test]
+    fn csv_round_trips() {
+        let s = series();
+        let parsed = ObservedSeries::from_csv_str(&s.to_csv()).unwrap();
+        assert_eq!(parsed, s);
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        assert!(ObservedSeries::from_csv_str("day,active,recovered,deaths\n0,1,2\n").is_err());
+        assert!(ObservedSeries::from_csv_str("day,active,recovered,deaths\n0,x,2,3\n").is_err());
+        assert!(ObservedSeries::from_csv_str("").is_err());
+    }
+
+    #[test]
+    fn mismatched_columns_rejected() {
+        assert!(ObservedSeries::new(vec![1.0], vec![1.0, 2.0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn from_flat_wrong_len_rejected() {
+        assert!(ObservedSeries::from_flat(&[1.0; 8], 3).is_err());
+    }
+}

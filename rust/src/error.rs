@@ -1,0 +1,94 @@
+//! Crate-wide error type.
+//!
+//! A single enum keeps the public API surface small; variants map to the
+//! subsystems that can fail (artifact loading, PJRT execution, data
+//! parsing, configuration). `xla::Error` is wrapped verbatim so callers
+//! can still inspect compiler/runtime failures.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors surfaced by the abc-ipu library.
+#[derive(Debug)]
+pub enum Error {
+    /// Failure in the XLA/PJRT runtime (compile, execute, transfer).
+    Xla(xla::Error),
+    /// I/O failure (artifact files, datasets, reports).
+    Io(std::io::Error),
+    /// Malformed manifest / config / dataset contents.
+    Parse(String),
+    /// A requested artifact is missing from the manifest.
+    MissingArtifact(String),
+    /// Shape or dtype mismatch between caller and compiled executable.
+    ShapeMismatch { what: String, want: String, got: String },
+    /// Invalid run configuration (bad batch/worker/tolerance combination).
+    Config(String),
+    /// The coordinator was asked for something it cannot deliver
+    /// (e.g. more accepted samples than the budget allows).
+    Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla runtime error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::MissingArtifact(n) => {
+                write!(f, "artifact `{n}` not found in manifest (run `make artifacts`)")
+            }
+            Error::ShapeMismatch { what, want, got } => {
+                write!(f, "shape mismatch for {what}: want {want}, got {got}")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = Error::MissingArtifact("abc_b1000_d49".into());
+        assert!(e.to_string().contains("make artifacts"));
+        let e = Error::ShapeMismatch {
+            what: "observed".into(),
+            want: "[3, 49]".into(),
+            got: "[3, 16]".into(),
+        };
+        assert!(e.to_string().contains("[3, 49]"));
+    }
+
+    #[test]
+    fn io_error_round_trips_source() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "x").into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

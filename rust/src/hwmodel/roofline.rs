@@ -1,0 +1,206 @@
+//! The runtime prediction model: per-run time, memory, utilization.
+//!
+//! `time_per_run(B) = t_fixed + work(B) / throughput_eff(B)` where
+//! `throughput_eff` is the achieved-FLOPS roofline degraded by
+//! working-set spill (see `specs.rs` for where each constant comes
+//! from). Everything in Tables 1–3 / Fig 3 is derived from this.
+
+use super::{DeviceSpec, Workload};
+
+/// Prediction for one (device, workload) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DevicePrediction {
+    /// Device display name.
+    pub device: &'static str,
+    /// Seconds per run.
+    pub time_per_run: f64,
+    /// Device memory used by the run (bytes); `None` if it does not fit.
+    pub memory_bytes: Option<f64>,
+    /// Fraction of run time doing useful compute (paper's "active
+    /// time"): variable part / total.
+    pub active_fraction: f64,
+    /// Achieved FLOP/s during the run.
+    pub achieved_flops: f64,
+}
+
+impl DeviceSpec {
+    /// Effective achieved throughput (FLOP/s) for a workload, after the
+    /// working-set spill penalty.
+    pub fn effective_flops(&self, w: &Workload) -> f64 {
+        let base = self.peak_flops * self.achieved_frac;
+        if w.working_set_bytes > self.onchip_bytes {
+            base / self.spill_penalty
+        } else {
+            base
+        }
+    }
+
+    /// Predicted seconds per run, or `None` if the run does not fit in
+    /// device memory (the IPU's hard SRAM wall).
+    pub fn time_per_run(&self, w: &Workload) -> Option<f64> {
+        self.memory_used(w)?;
+        let compute = w.flops / self.effective_flops(w);
+        // Memory roofline: streamed bytes at main-memory bandwidth.
+        let memory = w.bytes_streamed / self.mem_bw;
+        Some(self.t_fixed + compute.max(memory))
+    }
+
+    /// Memory footprint on this device, `None` if over capacity.
+    pub fn memory_used(&self, w: &Workload) -> Option<f64> {
+        let used = w.device_memory_bytes() + self.code_bytes();
+        if used > self.total_mem_bytes {
+            None
+        } else {
+            Some(used)
+        }
+    }
+
+    /// Full prediction record.
+    pub fn predict(&self, w: &Workload) -> Option<DevicePrediction> {
+        let time = self.time_per_run(w)?;
+        let variable = time - self.t_fixed;
+        Some(DevicePrediction {
+            device: self.name,
+            time_per_run: time,
+            memory_bytes: self.memory_used(w),
+            active_fraction: variable / time,
+            achieved_flops: w.flops / time,
+        })
+    }
+
+    /// Largest batch (multiple of `step`) that fits in device memory
+    /// for `days`-day runs.
+    pub fn max_batch(&self, days: usize, step: usize) -> usize {
+        let mut lo = 0usize;
+        let mut hi = 64_000_000usize / step;
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.memory_used(&Workload::analytic(mid * step, days)).is_some() {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo * step
+    }
+}
+
+/// One row of a batch sweep (Tables 2–3 / Fig 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPoint {
+    /// Batch size.
+    pub batch: usize,
+    /// Predicted seconds per run.
+    pub time_per_run: f64,
+    /// Normalized per-100k-samples time (the Fig 3 series).
+    pub normalized: f64,
+    /// Memory used (bytes), if it fits.
+    pub memory_bytes: Option<f64>,
+    /// Memory utilization fraction of total device memory.
+    pub memory_util: f64,
+    /// Active-time fraction.
+    pub active_fraction: f64,
+}
+
+/// Sweep predicted behaviour over batch sizes (Tables 2–3, Fig 3).
+pub fn batch_sweep(spec: &DeviceSpec, batches: &[usize], days: usize) -> Vec<BatchPoint> {
+    batches
+        .iter()
+        .filter_map(|&b| {
+            let w = Workload::analytic(b, days);
+            let p = spec.predict(&w)?;
+            Some(BatchPoint {
+                batch: b,
+                time_per_run: p.time_per_run,
+                normalized: p.time_per_run / b as f64 * 100_000.0,
+                memory_bytes: p.memory_bytes,
+                memory_util: p.memory_bytes.unwrap_or(0.0) / spec.total_mem_bytes,
+                active_fraction: p.active_fraction,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(batch: usize) -> Workload {
+        Workload::analytic(batch, 49)
+    }
+
+    #[test]
+    fn table1_anchor_ratios_hold() {
+        // paper Table 1: 2×IPU ≈ 7.5× GPU, ≈ 30× CPU on time per run at
+        // the per-device batch sizes of the table.
+        let ipu = DeviceSpec::ipu_c2_card().time_per_run(&w(200_000)).unwrap();
+        let gpu = DeviceSpec::tesla_v100().time_per_run(&w(500_000)).unwrap();
+        let cpu = DeviceSpec::xeon_gold_6248().time_per_run(&w(1_000_000)).unwrap();
+        let gpu_ratio = (gpu / 500_000.0) / (ipu / 200_000.0);
+        let cpu_ratio = (cpu / 1_000_000.0) / (ipu / 200_000.0);
+        assert!((5.0..11.0).contains(&gpu_ratio), "IPU/GPU per-sample ratio {gpu_ratio}");
+        assert!((20.0..45.0).contains(&cpu_ratio), "IPU/CPU per-sample ratio {cpu_ratio}");
+    }
+
+    #[test]
+    fn table_2_3_magnitudes() {
+        // GPU @ 500k ≈ 85 ms (Table 2), IPU card @ 2×100k ≈ 4.7 ms (Table 1)
+        let gpu = DeviceSpec::tesla_v100().time_per_run(&w(500_000)).unwrap();
+        assert!((0.04..0.18).contains(&gpu), "gpu t/run {gpu}");
+        let ipu = DeviceSpec::ipu_c2_card().time_per_run(&w(200_000)).unwrap();
+        assert!((0.003..0.010).contains(&ipu), "ipu t/run {ipu}");
+    }
+
+    #[test]
+    fn ipu_has_oom_wall_gpu_does_not() {
+        let ipu = DeviceSpec::ipu_c2_card();
+        assert!(ipu.time_per_run(&w(260_000)).is_some());
+        assert!(ipu.time_per_run(&w(2_000_000)).is_none());
+        let gpu = DeviceSpec::tesla_v100();
+        assert!(gpu.time_per_run(&w(2_000_000)).is_some());
+    }
+
+    #[test]
+    fn normalized_time_improves_with_batch_on_ipu() {
+        // Fig 3: per-sample cost falls as batch grows (fixed cost
+        // amortizes) until the memory wall.
+        let pts = batch_sweep(
+            &DeviceSpec::ipu_c2_card(),
+            &[80_000, 160_000, 200_000, 240_000],
+            49,
+        );
+        assert_eq!(pts.len(), 4);
+        for win in pts.windows(2) {
+            assert!(win[1].normalized < win[0].normalized);
+        }
+    }
+
+    #[test]
+    fn gpu_active_fraction_rises_with_batch() {
+        // Table 2: larger batches amortize launch overhead (50→55 %).
+        let pts = batch_sweep(&DeviceSpec::tesla_v100(), &[100_000, 1_000_000], 49);
+        assert!(pts[1].active_fraction > pts[0].active_fraction);
+    }
+
+    #[test]
+    fn max_batch_respects_memory() {
+        let ipu = DeviceSpec::mk1_ipu();
+        let max = ipu.max_batch(49, 10_000);
+        assert!(max >= 100_000, "paper runs 100k/IPU; model says {max}");
+        assert!(max < 500_000);
+        assert!(ipu
+            .memory_used(&Workload::analytic(max + 10_000, 49))
+            .is_none());
+    }
+
+    #[test]
+    fn more_bandwidth_never_slower() {
+        let base = DeviceSpec::tesla_v100();
+        let mut fat = base.clone();
+        fat.mem_bw *= 4.0;
+        for b in [100_000, 500_000, 1_000_000] {
+            let w = w(b);
+            assert!(fat.time_per_run(&w).unwrap() <= base.time_per_run(&w).unwrap());
+        }
+    }
+}

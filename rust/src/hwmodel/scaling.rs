@@ -1,0 +1,121 @@
+//! Multi-device scaling model (Table 7).
+//!
+//! Sample generation is embarrassingly parallel; what the paper
+//! measures in Table 7 is the *overhead* that device-count and the
+//! chunking configuration add: chunked outfeeds synchronize the IPUs
+//! more often (up to 8 % overhead at 16 devices), while unchunked
+//! transfers scale essentially perfectly but shift work to host
+//! post-processing.
+
+use super::{DeviceSpec, Workload};
+
+/// One row of the Table-7-style scaling study.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingPoint {
+    /// Number of devices.
+    pub devices: usize,
+    /// Whether outfeed chunking (chunk < batch) is enabled.
+    pub chunked: bool,
+    /// Predicted seconds per run (per synchronized round).
+    pub time_per_run: f64,
+    /// Speedup of total throughput relative to `base_devices`.
+    pub speedup: f64,
+    /// Fractional overhead vs perfect scaling.
+    pub overhead: f64,
+}
+
+/// Per-sync overhead model: each synchronized chunk boundary costs a
+/// fixed link+sync latency that grows logarithmically with the device
+/// count (tree reduction over IPU-Links).
+fn sync_overhead(devices: usize, syncs_per_run: f64) -> f64 {
+    const LINK_SYNC_S: f64 = 10e-6; // per sync per log2(devices) stage
+    let stages = (devices as f64).log2().max(1.0);
+    syncs_per_run * LINK_SYNC_S * stages
+}
+
+/// Predict a scaling table over `device_counts`, mirroring Table 7:
+/// per-device batch stays constant (weak scaling), `chunk` sets the
+/// sync granularity.
+pub fn scaling_table(
+    per_device: &DeviceSpec,
+    w_per_device: &Workload,
+    device_counts: &[usize],
+    chunk: usize,
+    base_devices: usize,
+) -> Vec<ScalingPoint> {
+    let t_base_run = per_device
+        .time_per_run(w_per_device)
+        .expect("per-device workload must fit");
+    let chunked = chunk < w_per_device.batch;
+    let syncs = if chunked {
+        (w_per_device.batch as f64 / chunk as f64).ceil()
+    } else {
+        1.0
+    };
+
+    let base_time = t_base_run + sync_overhead(base_devices, syncs);
+    device_counts
+        .iter()
+        .map(|&n| {
+            let t = t_base_run + sync_overhead(n, syncs);
+            // throughput per round ∝ n / t; speedup vs the base config
+            let speedup = (n as f64 / t) / (base_devices as f64 / base_time);
+            let perfect = n as f64 / base_devices as f64;
+            ScalingPoint {
+                devices: n,
+                chunked,
+                time_per_run: t,
+                speedup,
+                overhead: 1.0 - speedup / perfect,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (DeviceSpec, Workload) {
+        (DeviceSpec::mk1_ipu(), Workload::analytic(100_000, 49))
+    }
+
+    #[test]
+    fn near_linear_scaling() {
+        let (d, w) = setup();
+        let pts = scaling_table(&d, &w, &[2, 4, 8, 16], 10_000, 2);
+        // Table 7: 16 IPUs vs 2 → speedup ≈ 7.4 (8 perfect, ≤ 8 % off)
+        let p16 = &pts[3];
+        assert!((6.5..8.0).contains(&p16.speedup), "speedup {}", p16.speedup);
+        assert!(p16.overhead <= 0.10, "overhead {}", p16.overhead);
+    }
+
+    #[test]
+    fn unchunked_scales_better() {
+        let (d, w) = setup();
+        let chunked = scaling_table(&d, &w, &[16], 10_000, 2);
+        let unchunked = scaling_table(&d, &w, &[16], w.batch, 2);
+        assert!(!unchunked[0].chunked);
+        assert!(chunked[0].chunked);
+        assert!(unchunked[0].speedup > chunked[0].speedup);
+        // Table 7: unchunked 16-IPU speedup ≈ 8.0 (perfect)
+        assert!(unchunked[0].overhead < 0.01, "overhead {}", unchunked[0].overhead);
+    }
+
+    #[test]
+    fn overhead_grows_with_devices_when_chunked() {
+        let (d, w) = setup();
+        let pts = scaling_table(&d, &w, &[2, 4, 8, 16], 10_000, 2);
+        for win in pts.windows(2) {
+            assert!(win[1].overhead >= win[0].overhead - 1e-12);
+        }
+    }
+
+    #[test]
+    fn base_config_speedup_is_one() {
+        let (d, w) = setup();
+        let pts = scaling_table(&d, &w, &[2], 10_000, 2);
+        assert!((pts[0].speedup - 1.0).abs() < 1e-12);
+        assert!(pts[0].overhead.abs() < 1e-12);
+    }
+}

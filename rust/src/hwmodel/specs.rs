@@ -1,0 +1,204 @@
+//! Device descriptors for the paper's three evaluation platforms.
+//!
+//! Architectural numbers come from paper §2.3 (and the referenced
+//! whitepapers); the two *derate* constants per device are calibrated
+//! against the paper's own measured anchors (Tables 1–3) and documented
+//! inline. Everything downstream (batch sweeps, tolerance scaling,
+//! device comparisons) is then derived, not hard-coded.
+
+/// Broad device class, used by the op-profile attribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    /// Cache-hierarchy CPU (Xeon).
+    Cpu,
+    /// SIMT GPU with off-chip HBM (V100).
+    Gpu,
+    /// MIMD tiles with on-chip SRAM only (Mk1 IPU).
+    Ipu,
+}
+
+/// Static description of one device package (what Table 1 calls a
+/// "device": 2×IPU C2 card, one V100, 2×Xeon).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    /// Display name (Table 1 spelling).
+    pub name: &'static str,
+    /// Class for op attribution.
+    pub class: DeviceClass,
+    /// Peak f32 FLOP/s of the package.
+    pub peak_flops: f64,
+    /// Main-memory bandwidth (B/s). For the IPU this *is* the SRAM
+    /// bandwidth — there is no off-chip memory on the inference path.
+    pub mem_bw: f64,
+    /// On-chip memory capacity in bytes (L1+L2 for GPU, L2+L3 for CPU,
+    /// tile SRAM for IPU).
+    pub onchip_bytes: f64,
+    /// On-chip aggregate bandwidth (B/s).
+    pub onchip_bw: f64,
+    /// Total device memory (B). IPU: same as on-chip (hard OOM wall).
+    pub total_mem_bytes: f64,
+    /// Whether program code resides at the compute units (IPU tiles) or
+    /// must be fetched per launch (GPU/CPU instruction streams from
+    /// memory) — §6.ii.
+    pub code_resident: bool,
+    /// Per-run fixed overhead in seconds: kernel launch + code fetch
+    /// (GPU), inter-tile sync + host round-trip (IPU), dispatch (CPU).
+    /// Calibrated: the intercept of time-per-run vs batch in the
+    /// paper's Tables 2/3.
+    pub t_fixed: f64,
+    /// Achieved fraction of `peak_flops` on this workload's op mix
+    /// (transcendental + arrangement heavy, Table 5). Calibrated: the
+    /// slope of time-per-run vs batch in Tables 2/3 (see module doc).
+    pub achieved_frac: f64,
+    /// Throughput multiplier when the working set spills out of on-chip
+    /// memory (GPU beyond B≈500k, §4.3; 1.0 = no penalty).
+    pub spill_penalty: f64,
+    /// Thermal design power (W) — the paper's iso-power comparison axis.
+    pub tdp_watts: f64,
+}
+
+impl DeviceSpec {
+    /// 2× Intel Xeon Gold 6248 (the paper's CPU baseline, Table 1).
+    ///
+    /// 20 cores × 2 sockets, AVX-512: ≈ 3.2 TFLOPS f32 peak; 6 channels
+    /// DDR4-2933 ×2 ≈ 280 GB/s; 27.5 MB L3 + 20 MB L2 per socket.
+    /// Calibration anchor: 697–727 ms/run at B=1M (Table 1) →
+    /// achieved_frac ≈ 0.0056 (the scalar/short-vector price of a
+    /// branchy transcendental workload under TF on CPU: ≈ 12.4 kflop
+    /// per sample at 0.70 µs/sample).
+    pub fn xeon_gold_6248() -> Self {
+        Self {
+            name: "2x CPU",
+            class: DeviceClass::Cpu,
+            peak_flops: 3.2e12,
+            mem_bw: 280e9,
+            onchip_bytes: 95e6,
+            onchip_bw: 2e12,
+            total_mem_bytes: 384e9,
+            code_resident: false,
+            t_fixed: 2.0e-3,
+            achieved_frac: 0.0056,
+            spill_penalty: 1.15,
+            tdp_watts: 300.0,
+        }
+    }
+
+    /// NVIDIA Tesla V100 (paper §2.3.1).
+    ///
+    /// 14 TFLOPS f32, 900 GB/s HBM2, 10 MB L1 + 6 MB L2, 16 GB
+    /// (14.38 GB usable). Calibration anchors: slope 164 ns/sample at
+    /// D=49 (Table 2: 19.9 ms @ 100k → 167.9 ms @ 1M) → achieved_frac
+    /// ≈ 0.0051; intercept t_fixed ≈ 3.4 ms (kernel launch + code
+    /// fetch, §6.ii). Working set exceeds L1+L2 at every measured batch,
+    /// so the spill penalty is folded into the anchor; the *extra*
+    /// penalty models batches whose parameter array alone exceeds cache
+    /// (B > 500k, §4.3: "no additional benefit with increasing batch").
+    pub fn tesla_v100() -> Self {
+        Self {
+            name: "Tesla V100",
+            class: DeviceClass::Gpu,
+            peak_flops: 14e12,
+            mem_bw: 900e9,
+            onchip_bytes: 16e6,
+            onchip_bw: 14e12,
+            total_mem_bytes: 14.38e9,
+            code_resident: false,
+            t_fixed: 3.4e-3,
+            achieved_frac: 0.0058,
+            spill_penalty: 1.10,
+            tdp_watts: 300.0,
+        }
+    }
+
+    /// Graphcore C2 card = 2× Mk1 IPU (paper §2.3.2) — the unit the
+    /// paper compares against one V100 at equal 300 W TDP.
+    ///
+    /// 2 × 31.1 TFLOPS f32, 45 TB/s aggregate tile-SRAM bandwidth,
+    /// 2 × 304 MB SRAM, code resident on tiles. Calibration anchors:
+    /// slope 32 ns/sample/IPU at D=49 (Table 3: 2.67 ms @ 2×40k →
+    /// 5.58 ms @ 2×130k) → achieved_frac ≈ 0.013 (MIMD handles the
+    /// branchy op mix ~2.5× better than SIMT); intercept t_fixed
+    /// ≈ 1.4 ms (inter-tile sync ≈ 13 % of cycles, §4.4).
+    pub fn ipu_c2_card() -> Self {
+        Self {
+            name: "2xIPU",
+            class: DeviceClass::Ipu,
+            peak_flops: 62.2e12,
+            mem_bw: 45e12,
+            onchip_bytes: 608e6,
+            onchip_bw: 45e12,
+            total_mem_bytes: 608e6,
+            code_resident: true,
+            t_fixed: 1.4e-3,
+            achieved_frac: 0.013,
+            spill_penalty: f64::INFINITY, // SRAM-only: spilling = OOM
+            tdp_watts: 300.0,
+        }
+    }
+
+    /// A single Mk1 IPU (half a C2 card) — the per-device unit of the
+    /// Table 7 scaling study.
+    pub fn mk1_ipu() -> Self {
+        let c2 = Self::ipu_c2_card();
+        Self {
+            name: "1xIPU",
+            peak_flops: c2.peak_flops / 2.0,
+            mem_bw: c2.mem_bw / 2.0,
+            onchip_bytes: c2.onchip_bytes / 2.0,
+            onchip_bw: c2.onchip_bw / 2.0,
+            total_mem_bytes: c2.total_mem_bytes / 2.0,
+            tdp_watts: c2.tdp_watts / 2.0,
+            ..c2
+        }
+    }
+
+    /// The three Table-1 packages in paper order (IPU, GPU, CPU).
+    pub fn paper_lineup() -> Vec<DeviceSpec> {
+        vec![Self::ipu_c2_card(), Self::tesla_v100(), Self::xeon_gold_6248()]
+    }
+
+    /// Memory on the device available for program code. The Mk1 keeps
+    /// code on-tile (≈ 30 MB for this graph, the "always live" band of
+    /// Fig 4/5); others stream it.
+    pub fn code_bytes(&self) -> f64 {
+        if self.code_resident {
+            30e6
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_architecture_numbers() {
+        let gpu = DeviceSpec::tesla_v100();
+        assert_eq!(gpu.peak_flops, 14e12);
+        assert_eq!(gpu.mem_bw, 900e9);
+        assert_eq!(gpu.onchip_bytes, 16e6); // 10 MB L1 + 6 MB L2
+
+        let ipu = DeviceSpec::ipu_c2_card();
+        assert_eq!(ipu.mem_bw, 45e12);
+        assert!(ipu.code_resident);
+        // paper: 2×IPU ≈ 4.4× the GPU's FLOPS
+        assert!((ipu.peak_flops / gpu.peak_flops - 4.44).abs() < 0.1);
+    }
+
+    #[test]
+    fn iso_power_comparison() {
+        for d in DeviceSpec::paper_lineup() {
+            assert_eq!(d.tdp_watts, 300.0, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn single_ipu_is_half_a_card() {
+        let one = DeviceSpec::mk1_ipu();
+        let card = DeviceSpec::ipu_c2_card();
+        assert_eq!(one.peak_flops * 2.0, card.peak_flops);
+        assert_eq!(one.total_mem_bytes * 2.0, card.total_mem_bytes);
+    }
+}

@@ -1,0 +1,54 @@
+//! # abc-ipu — hardware-accelerated simulation-based inference
+//!
+//! Reproduction of *"Hardware-accelerated Simulation-based Inference of
+//! Stochastic Epidemiology Models for COVID-19"* (Kulkarni, Krell,
+//! Nabarro, Moritz — ACM 2020) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — the tau-leaping epidemic
+//!   simulation kernel, tiled over the sample batch
+//!   (`python/compile/kernels/tau_leap.py`).
+//! * **Layer 2 (JAX, build time)** — the batched ABC compute graph
+//!   (prior sampling → simulation → Euclidean distance), AOT-lowered to
+//!   HLO text (`python/compile/model.py`, `aot.py`).
+//! * **Layer 3 (this crate, run time)** — the paper's *system*
+//!   contribution: the massively parallel ABC coordinator. Device
+//!   workers each own a compiled PJRT executable; the leader drives the
+//!   run-until-N-accepted loop, the conditional chunked outfeed (IPU
+//!   strategy) or fixed Top-k return (GPU strategy), host
+//!   post-processing, and multi-device scaling.
+//!
+//! Python never runs on the inference path: `make artifacts` lowers the
+//! graphs once, and the `repro` binary is self-contained afterwards.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
+//! | [`coordinator`] | parallel ABC engine: leader, device workers, outfeed, top-k |
+//! | [`abc`] | ABC/SMC-ABC algorithm layer: tolerances, posterior store, prediction |
+//! | [`model`] | pure-Rust reference simulator (CPU baseline + validation oracle) |
+//! | [`data`] | JHU-format loader, embedded country series, synthetic generator |
+//! | [`hwmodel`] | analytical Xeon/V100/Mk1-IPU performance model (Tables 1–6) |
+//! | [`stats`] | histograms, quantiles, summary statistics (Figs 8–9) |
+//! | [`rng`] | splittable deterministic RNG for seeds + host-side sampling |
+//! | [`metrics`] | timers, counters, run reports |
+//! | [`report`] | paper-style table rendering and CSV series emission |
+//! | [`config`] | run configuration (serde, JSON file + CLI overrides) |
+
+pub mod abc;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod hwmodel;
+pub mod metrics;
+pub mod model;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,745 @@
+//! `repro` — the launcher for the parallel ABC inference framework.
+//!
+//! Every subcommand regenerates one of the paper's experiments (see
+//! DESIGN.md §3 for the full index):
+//!
+//! ```text
+//! repro infer            run inference (any dataset / config)
+//! repro table1           CPU-vs-GPU-vs-IPU comparison (Table 1)
+//! repro sweep            batch-size sweep (Tables 2–3, Fig 3)
+//! repro postproc         host post-processing cost (Table 4)
+//! repro liveness         memory liveness / per-tile curves (Figs 4–5)
+//! repro opstats          op-level cycle shares (Tables 5–6)
+//! repro tolerance-sweep  time vs tolerance (Fig 6)
+//! repro scale            multi-device scaling (Table 7)
+//! repro countries        3-country end-to-end analysis (Table 8, Figs 7–9)
+//! repro energy           iso-power samples/joule table
+//! repro autotune         measure + pick the best batch variant
+//! repro smc              SMC-ABC refinement schedule
+//! repro info             artifact + dataset inventory
+//! ```
+//!
+//! Flags are `--name value` (or `--name=value`); `repro <cmd> --help`
+//! lists each command's options.
+
+use abc_ipu::abc::{predict::predict, smc, Posterior};
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::Coordinator;
+use abc_ipu::data::{embedded, synthetic, Dataset, ObservedSeries};
+use abc_ipu::hwmodel::{
+    batch_sweep, gpu_kernel_table, ipu_compute_set_table, liveness_curve, per_tile_memory,
+    scaling_table, DeviceSpec, Workload,
+};
+use abc_ipu::model::{Prior, PARAM_NAMES};
+use abc_ipu::report::{fmt_bytes, fmt_secs, write_csv, Table};
+use abc_ipu::runtime::{default_artifacts_dir, Runtime};
+use abc_ipu::util::cli::{ParsedArgs, Spec};
+use anyhow::{anyhow, bail, Context};
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+repro — parallel ABC inference of stochastic epidemiology models
+usage: repro <command> [--flag value ...]
+
+commands (paper experiment in brackets):
+  infer             run one inference job
+  table1            device comparison            [Table 1]
+  sweep             batch-size sweep             [Tables 2-3, Fig 3]
+  postproc          host post-processing cost    [Table 4]
+  liveness          memory liveness model        [Figs 4-5]
+  opstats           op-level cycle shares        [Tables 5-6]
+  tolerance-sweep   time vs tolerance            [Fig 6]
+  scale             multi-device scaling         [Table 7]
+  countries         3-country end-to-end run     [Table 8, Figs 7-9]
+  energy            iso-power samples/joule table
+  autotune          measure + pick best batch variant
+  smc               SMC-ABC refinement schedule
+  info              artifact + dataset inventory
+
+common flags: --artifacts DIR  --reports DIR
+infer flags:  --dataset NAME --tolerance F --samples N --devices N
+              --batch N --days N --chunk N --top-k K --seed N --max-runs N
+              --config FILE (JSON RunConfig; CLI flags override)
+";
+
+/// Flags shared by inference-shaped commands.
+const INFER_FLAGS: &[&str] = &[
+    "artifacts", "reports", "dataset", "tolerance", "samples", "devices", "batch", "days",
+    "chunk", "top-k", "seed", "max-runs", "config",
+];
+
+fn infer_config(a: &ParsedArgs) -> anyhow::Result<RunConfig> {
+    let mut cfg = match a.get("config") {
+        Some(path) => RunConfig::from_file(path).map_err(|e| anyhow!("{e}"))?,
+        None => RunConfig {
+            dataset: "synthetic".into(),
+            batch_per_device: 10_000,
+            devices: 2,
+            ..Default::default()
+        },
+    };
+    if let Some(d) = a.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    cfg.tolerance = a.parse_opt::<f32>("tolerance").map_err(anyhow::Error::msg)?
+        .or(cfg.tolerance);
+    cfg.accepted_samples =
+        a.parse_or("samples", cfg.accepted_samples).map_err(anyhow::Error::msg)?;
+    cfg.devices = a.parse_or("devices", cfg.devices).map_err(anyhow::Error::msg)?;
+    cfg.batch_per_device =
+        a.parse_or("batch", cfg.batch_per_device).map_err(anyhow::Error::msg)?;
+    cfg.days = a.parse_or("days", cfg.days).map_err(anyhow::Error::msg)?;
+    cfg.seed = a.parse_or("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    cfg.max_runs = a.parse_or("max-runs", cfg.max_runs).map_err(anyhow::Error::msg)?;
+    if let Some(k) = a.parse_opt::<usize>("top-k").map_err(anyhow::Error::msg)? {
+        cfg.return_strategy = ReturnStrategy::TopK { k };
+    } else if let Some(chunk) = a.parse_opt::<usize>("chunk").map_err(anyhow::Error::msg)? {
+        let chunk = if chunk == 0 { cfg.batch_per_device } else { chunk };
+        cfg.return_strategy = ReturnStrategy::Outfeed { chunk: chunk.min(cfg.batch_per_device) };
+    } else if let ReturnStrategy::Outfeed { chunk } = cfg.return_strategy {
+        cfg.return_strategy =
+            ReturnStrategy::Outfeed { chunk: chunk.min(cfg.batch_per_device) };
+    }
+    Ok(cfg)
+}
+
+fn load_dataset(name: &str, days: usize) -> anyhow::Result<Dataset> {
+    let ds = if name == "synthetic" {
+        synthetic::default_dataset(days.max(16).max(49), 0x5eed)
+    } else if let Some(ds) = embedded::by_name(name) {
+        ds
+    } else if std::path::Path::new(name).exists() {
+        let observed = ObservedSeries::from_csv_file(name).map_err(|e| anyhow!("{e}"))?;
+        Dataset {
+            name: name.to_string(),
+            population: 60_000_000.0,
+            default_tolerance: 5e4,
+            observed,
+        }
+    } else {
+        bail!("unknown dataset `{name}` (no embedded country, not a file)");
+    };
+    if ds.days() < days {
+        bail!("dataset `{}` has {} days < requested {days}", ds.name, ds.days());
+    }
+    Ok(ds)
+}
+
+fn artifacts_dir(a: &ParsedArgs) -> PathBuf {
+    a.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+}
+
+fn reports_dir(a: &ParsedArgs) -> PathBuf {
+    PathBuf::from(a.get_or("reports", "reports"))
+}
+
+fn print_result(result: &abc_ipu::coordinator::InferenceResult) {
+    let m = &result.metrics;
+    let post = Posterior::new(result.accepted.clone());
+    println!(
+        "accepted {} samples in {} ({} runs, {} simulated, acceptance {:.2e})",
+        post.len(),
+        fmt_secs(m.total.as_secs_f64()),
+        m.runs,
+        m.samples_simulated,
+        m.acceptance_rate()
+    );
+    println!(
+        "time/run {} | host postproc {} ({:.2}%) | to-host {} in {} transfers ({} skipped)",
+        fmt_secs(m.time_per_run().as_secs_f64()),
+        fmt_secs(m.host_postproc.as_secs_f64()),
+        m.postproc_fraction() * 100.0,
+        fmt_bytes(m.bytes_to_host),
+        m.transfers,
+        m.transfers_skipped,
+    );
+    if !post.is_empty() {
+        let mut t = Table::new("posterior", &["param", "mean", "std", "p5", "p95"]);
+        for (name, s) in post.summaries() {
+            t.row(&[
+                name.to_string(),
+                format!("{:.4}", s.mean),
+                format!("{:.4}", s.std_dev),
+                format!("{:.4}", s.p5),
+                format!("{:.4}", s.p95),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    if argv.iter().any(|a| a == "--help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "infer" => cmd_infer(argv),
+        "table1" => cmd_table1(argv),
+        "sweep" => cmd_sweep(argv),
+        "postproc" => cmd_postproc(argv),
+        "liveness" => cmd_liveness(argv),
+        "opstats" => cmd_opstats(argv),
+        "tolerance-sweep" => cmd_tolerance_sweep(argv),
+        "scale" => cmd_scale(argv),
+        "countries" => cmd_countries(argv),
+        "energy" => cmd_energy(argv),
+        "autotune" => cmd_autotune(argv),
+        "smc" => cmd_smc(argv),
+        "info" => cmd_info(argv),
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown command `{other}`");
+        }
+    }
+}
+
+fn parse(argv: Vec<String>, values: &[&'static str], bools: &[&'static str])
+    -> anyhow::Result<ParsedArgs> {
+    Spec::new()
+        .values(values)
+        .bools(bools)
+        .parse(argv)
+        .map_err(anyhow::Error::msg)
+}
+
+fn cmd_infer(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, INFER_FLAGS, &[])?;
+    let cfg = infer_config(&a)?;
+    let ds = load_dataset(&cfg.dataset, cfg.days)?;
+    let samples = cfg.accepted_samples;
+    let coord = Coordinator::new(artifacts_dir(&a), cfg.clone(), ds, Prior::paper())
+        .map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "inferring with tolerance {:.4e} on {} devices (batch {}/device)",
+        coord.tolerance(),
+        cfg.devices,
+        cfg.batch_per_device
+    );
+    let result = coord.run_until(samples).map_err(|e| anyhow!("{e}"))?;
+    print_result(&result);
+    let post = Posterior::new(result.accepted);
+    let path = write_csv(reports_dir(&a), "posterior", &post.to_csv())
+        .map_err(|e| anyhow!("{e}"))?;
+    println!("posterior written to {}", path.display());
+    Ok(())
+}
+
+/// Table 1: measured PJRT engine + measured CPU baseline + projected
+/// device models, at matched acceptance workload.
+fn cmd_table1(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, INFER_FLAGS, &[])?;
+    let mut cfg = infer_config(&a)?;
+    cfg.return_strategy = ReturnStrategy::Outfeed { chunk: cfg.batch_per_device };
+    let samples = cfg.accepted_samples.min(100);
+    let batch = cfg.batch_per_device;
+    let ds = load_dataset(&cfg.dataset, cfg.days)?;
+    let prior = Prior::paper();
+
+    let coord = Coordinator::new(artifacts_dir(&a), cfg, ds.clone(), prior.clone())
+        .map_err(|e| anyhow!("{e}"))?;
+    let accel = coord.run_until(samples).map_err(|e| anyhow!("{e}"))?;
+
+    // measured CPU baseline at the same tolerance (scaled-down workload)
+    let cpu_batch = (batch / 10).max(100);
+    let cpu = abc_ipu::abc::cpu::run_until(
+        &ds,
+        &prior,
+        coord.tolerance(),
+        cpu_batch,
+        samples.min(10),
+        7,
+        50,
+    );
+
+    let mut t = Table::new(
+        "Table 1 (measured on this host + projected via hwmodel)",
+        &["config", "batch", "accepted", "total", "time/run", "per-sample µs"],
+    );
+    let accel_ps = accel.metrics.time_per_run().as_secs_f64() / batch as f64 * 1e6;
+    t.row(&[
+        "PJRT engine (XLA, 2 workers)".into(),
+        format!("2x{batch}"),
+        accel.accepted.len().to_string(),
+        fmt_secs(accel.metrics.total.as_secs_f64()),
+        fmt_secs(accel.metrics.time_per_run().as_secs_f64()),
+        format!("{accel_ps:.2}"),
+    ]);
+    let cpu_ps = cpu.metrics.time_per_run().as_secs_f64() / cpu_batch as f64 * 1e6;
+    t.row(&[
+        "CPU scalar baseline".into(),
+        cpu_batch.to_string(),
+        cpu.accepted.len().to_string(),
+        fmt_secs(cpu.metrics.total.as_secs_f64()),
+        fmt_secs(cpu.metrics.time_per_run().as_secs_f64()),
+        format!("{cpu_ps:.2}"),
+    ]);
+    for (spec, b) in [
+        (DeviceSpec::ipu_c2_card(), 200_000usize),
+        (DeviceSpec::tesla_v100(), 500_000),
+        (DeviceSpec::xeon_gold_6248(), 1_000_000),
+    ] {
+        let w = Workload::analytic(b, 49);
+        let tpr = spec.time_per_run(&w).expect("fits");
+        t.row(&[
+            format!("{} (projected)", spec.name),
+            b.to_string(),
+            "-".into(),
+            "-".into(),
+            fmt_secs(tpr),
+            format!("{:.2}", tpr / b as f64 * 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+    write_csv(reports_dir(&a), "table1", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "measured speedup (CPU baseline / PJRT engine, per-sample): {:.1}x",
+        cpu_ps / accel_ps
+    );
+    Ok(())
+}
+
+fn cmd_sweep(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "device"], &["measure"])?;
+    let device = a.get_or("device", "ipu");
+    let (spec, batches): (DeviceSpec, Vec<usize>) = match device.as_str() {
+        "ipu" => (
+            DeviceSpec::ipu_c2_card(),
+            vec![80_000, 120_000, 160_000, 200_000, 240_000, 260_000],
+        ),
+        "v100" | "gpu" => (
+            DeviceSpec::tesla_v100(),
+            vec![100_000, 200_000, 400_000, 500_000, 700_000, 1_000_000],
+        ),
+        "cpu" => (DeviceSpec::xeon_gold_6248(), vec![250_000, 500_000, 1_000_000]),
+        other => bail!("unknown device `{other}`"),
+    };
+    let pts = batch_sweep(&spec, &batches, 49);
+    let mut t = Table::new(
+        format!("Tables 2-3 / Fig 3: batch sweep ({} model)", spec.name),
+        &["batch", "time/run", "norm vs first", "memory", "mem util %", "active %"],
+    );
+    for p in &pts {
+        t.row(&[
+            p.batch.to_string(),
+            fmt_secs(p.time_per_run),
+            format!("{:.3}", p.normalized / pts[0].normalized),
+            p.memory_bytes.map(|b| fmt_bytes(b as u64)).unwrap_or_else(|| "OOM".into()),
+            format!("{:.1}", p.memory_util * 100.0),
+            format!("{:.1}", p.active_fraction * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    write_csv(reports_dir(&a), &format!("batch_sweep_{device}"), &t.to_csv())
+        .map_err(|e| anyhow!("{e}"))?;
+
+    if a.has("measure") {
+        let rt = Runtime::open(artifacts_dir(&a)).map_err(|e| anyhow!("{e}"))?;
+        let ds = load_dataset("synthetic", 49)?;
+        let observed = ds.observed.flatten();
+        let consts = ds.consts();
+        let prior = Prior::paper();
+        let mut t = Table::new(
+            "measured PJRT time/run at compiled batches",
+            &["batch", "time/run", "per-sample µs"],
+        );
+        for b in rt.abc_batches(49) {
+            let exe = rt.abc(b, 49).map_err(|e| anyhow!("{e}"))?;
+            exe.run([0, 1], &observed, prior.low(), prior.high(), &consts)
+                .map_err(|e| anyhow!("{e}"))?;
+            let sw = abc_ipu::metrics::Stopwatch::start();
+            for i in 0..3u32 {
+                exe.run([i, 2], &observed, prior.low(), prior.high(), &consts)
+                    .map_err(|e| anyhow!("{e}"))?;
+            }
+            let per = sw.seconds() / 3.0;
+            t.row(&[b.to_string(), fmt_secs(per), format!("{:.2}", per / b as f64 * 1e6)]);
+        }
+        print!("{}", t.render());
+        write_csv(reports_dir(&a), "batch_sweep_measured", &t.to_csv())
+            .map_err(|e| anyhow!("{e}"))?;
+    }
+    Ok(())
+}
+
+fn cmd_postproc(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, INFER_FLAGS, &[])?;
+    let base = infer_config(&a)?;
+    let ds = load_dataset(&base.dataset, base.days)?;
+    let mut t = Table::new(
+        "Table 4: host post-processing",
+        &["strategy", "accepted", "postproc", "% of total", "to-host", "transfers (skipped)"],
+    );
+    let batch = base.batch_per_device;
+    for (label, strategy) in [
+        ("outfeed chunk=batch", ReturnStrategy::Outfeed { chunk: batch }),
+        ("outfeed chunk=batch/10", ReturnStrategy::Outfeed { chunk: (batch / 10).max(1) }),
+        ("top-k k=5", ReturnStrategy::TopK { k: 5 }),
+    ] {
+        let mut cfg = base.clone();
+        cfg.return_strategy = strategy;
+        let coord = Coordinator::new(artifacts_dir(&a), cfg, ds.clone(), Prior::paper())
+            .map_err(|e| anyhow!("{e}"))?;
+        let r = coord.run_until(base.accepted_samples).map_err(|e| anyhow!("{e}"))?;
+        t.row(&[
+            label.into(),
+            r.accepted.len().to_string(),
+            fmt_secs(r.metrics.host_postproc.as_secs_f64()),
+            format!("{:.2}", r.metrics.postproc_fraction() * 100.0),
+            fmt_bytes(r.metrics.bytes_to_host),
+            format!("{} ({})", r.metrics.transfers, r.metrics.transfers_skipped),
+        ]);
+    }
+    print!("{}", t.render());
+    write_csv(reports_dir(&a), "table4_postproc", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_liveness(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "batch"], &[])?;
+    let batch: usize = a.parse_or("batch", 100_000).map_err(anyhow::Error::msg)?;
+    let w = Workload::analytic(batch, 49);
+    let curve = liveness_curve(&w);
+    let mut t = Table::new(
+        format!("Fig 4: memory liveness (B={batch}, model)"),
+        &["step", "phase", "always_live", "live"],
+    );
+    for p in &curve {
+        t.row(&[
+            p.step.to_string(),
+            p.phase.to_string(),
+            fmt_bytes(p.always_live as u64),
+            fmt_bytes(p.live as u64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "peak/always-live ratio: {:.1}x (paper Fig 4: ~6x)",
+        abc_ipu::hwmodel::peak_ratio(&curve)
+    );
+    write_csv(reports_dir(&a), "fig4_liveness", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    let tiles = per_tile_memory(&w, 1216);
+    let mut csv = String::from("tile,bytes\n");
+    for (i, b) in tiles.iter().enumerate() {
+        csv.push_str(&format!("{i},{b}\n"));
+    }
+    let path = write_csv(reports_dir(&a), "fig5_per_tile", &csv).map_err(|e| anyhow!("{e}"))?;
+    println!("per-tile series written to {}", path.display());
+    Ok(())
+}
+
+fn cmd_opstats(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "device"], &[])?;
+    let device = a.get_or("device", "ipu");
+    let (title, rows) = match device.as_str() {
+        "ipu" => ("Table 5: IPU compute-set cycle shares", ipu_compute_set_table()),
+        "v100" | "gpu" => ("Table 6: GPU XLA-kernel shares", gpu_kernel_table()),
+        other => bail!("unknown device `{other}`"),
+    };
+    let mut t = Table::new(title, &["op", "share %"]);
+    for r in &rows {
+        t.row(&[r.name.to_string(), format!("{:.1}", r.percent)]);
+    }
+    print!("{}", t.render());
+    write_csv(reports_dir(&a), &format!("opstats_{device}"), &t.to_csv())
+        .map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_tolerance_sweep(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut flags = INFER_FLAGS.to_vec();
+    flags.push("points");
+    let a = parse(argv, &flags, &[])?;
+    let base = infer_config(&a)?;
+    let points: usize = a.parse_or("points", 6).map_err(anyhow::Error::msg)?;
+    let ds = load_dataset(&base.dataset, base.days)?;
+    let base_tol = base.tolerance.unwrap_or(ds.default_tolerance);
+    let mut t = Table::new(
+        "Fig 6: processing time vs tolerance",
+        &["tolerance", "accepted", "runs", "total", "time/run", "acceptance"],
+    );
+    for i in 0..points {
+        let tol = base_tol * 4.0 / 2f32.powi(i as i32);
+        let mut cfg = base.clone();
+        cfg.tolerance = Some(tol);
+        if cfg.max_runs == 0 {
+            cfg.max_runs = 400;
+        }
+        let coord = Coordinator::new(artifacts_dir(&a), cfg, ds.clone(), Prior::paper())
+            .map_err(|e| anyhow!("{e}"))?;
+        match coord.run_until(base.accepted_samples) {
+            Ok(r) => {
+                t.row(&[
+                    format!("{tol:.3e}"),
+                    r.accepted.len().to_string(),
+                    r.metrics.runs.to_string(),
+                    fmt_secs(r.metrics.total.as_secs_f64()),
+                    fmt_secs(r.metrics.time_per_run().as_secs_f64()),
+                    format!("{:.2e}", r.metrics.acceptance_rate()),
+                ]);
+            }
+            Err(e) => {
+                t.row(&[
+                    format!("{tol:.3e}"),
+                    "budget".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("{e}"),
+                ]);
+                break;
+            }
+        }
+    }
+    print!("{}", t.render());
+    write_csv(reports_dir(&a), "fig6_tolerance", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_scale(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut flags = INFER_FLAGS.to_vec();
+    flags.push("device-counts");
+    let a = parse(argv, &flags, &[])?;
+    let base = infer_config(&a)?;
+    let counts: Vec<usize> = a
+        .get_or("device-counts", "1,2,4,8")
+        .split(',')
+        .map(|s| s.trim().parse().context("bad device count"))
+        .collect::<anyhow::Result<_>>()?;
+    let ds = load_dataset(&base.dataset, base.days)?;
+    let batch = base.batch_per_device;
+    let w = Workload::analytic(batch, 49);
+    let mut t = Table::new(
+        "Table 7: multi-device scaling (measured workers + IPU model)",
+        &["devices", "chunk", "total", "time/run", "speedup", "model speedup", "model ovh %"],
+    );
+    let mut base_throughput: Option<f64> = None;
+    for &n in &counts {
+        for chunked in [true, false] {
+            let chunk = if chunked { (batch / 10).max(1) } else { batch };
+            let mut cfg = base.clone();
+            cfg.devices = n;
+            cfg.return_strategy = ReturnStrategy::Outfeed { chunk };
+            if cfg.max_runs == 0 {
+                cfg.max_runs = 400;
+            }
+            let coord = Coordinator::new(artifacts_dir(&a), cfg, ds.clone(), Prior::paper())
+                .map_err(|e| anyhow!("{e}"))?;
+            let r = coord.run_until(base.accepted_samples).map_err(|e| anyhow!("{e}"))?;
+            let throughput =
+                r.metrics.samples_simulated as f64 / r.metrics.total.as_secs_f64();
+            let base_tp = *base_throughput.get_or_insert(throughput);
+            let model = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n.max(1)], chunk, counts[0]);
+            t.row(&[
+                n.to_string(),
+                if chunked { format!("{chunk}") } else { "=batch".into() },
+                fmt_secs(r.metrics.total.as_secs_f64()),
+                fmt_secs(r.metrics.time_per_run().as_secs_f64()),
+                format!("{:.2}", throughput / base_tp),
+                format!("{:.2}", model[0].speedup),
+                format!("{:.1}", model[0].overhead * 100.0),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    write_csv(reports_dir(&a), "table7_scaling", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_countries(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut flags = INFER_FLAGS.to_vec();
+    flags.push("horizon");
+    let a = parse(argv, &flags, &[])?;
+    let base = infer_config(&a)?;
+    let horizon: usize = a.parse_or("horizon", 120).map_err(anyhow::Error::msg)?;
+    let artifacts = artifacts_dir(&a);
+    let rt = Runtime::open(&artifacts).map_err(|e| anyhow!("{e}"))?;
+    let reports = reports_dir(&a);
+    let mut t8 = Table::new(
+        "Table 8: per-country runtimes and posterior means",
+        &["country", "tolerance", "runtime", "accepted", "alpha0", "alpha", "n", "beta",
+          "gamma", "delta", "eta", "kappa"],
+    );
+    for ds in embedded::all() {
+        let mut cfg = base.clone();
+        cfg.dataset = ds.name.clone();
+        cfg.tolerance = None; // per-country default (the paper tunes per country)
+        if cfg.max_runs == 0 {
+            cfg.max_runs = 2_000;
+        }
+        let coord = Coordinator::new(&artifacts, cfg, ds.clone(), Prior::paper())
+            .map_err(|e| anyhow!("{e}"))?;
+        println!("fitting {} (ε={:.3e})...", ds.name, coord.tolerance());
+        let r = coord.run_until(base.accepted_samples).map_err(|e| anyhow!("{e}"))?;
+        let post = Posterior::new(r.accepted.clone());
+        let mean = post.mean_theta();
+        let mut row = vec![
+            ds.name.clone(),
+            format!("{:.3e}", r.tolerance),
+            fmt_secs(r.metrics.total.as_secs_f64()),
+            post.len().to_string(),
+        ];
+        row.extend(mean.iter().map(|v| format!("{v:.3}")));
+        t8.row(&row);
+
+        let pred = predict(&rt, &post, &ds.consts(), horizon, [9, 9])
+            .map_err(|e| anyhow!("{e}"))?;
+        write_csv(&reports, &format!("fig7_{}", ds.name), &pred.to_csv())
+            .map_err(|e| anyhow!("{e}"))?;
+        let mut csv = String::from("param,bin_center,count,density\n");
+        for p in 0..8 {
+            let h = post.histogram(p, 20);
+            for (i, &c) in h.counts().iter().enumerate() {
+                csv.push_str(&format!(
+                    "{},{},{},{}\n",
+                    PARAM_NAMES[p],
+                    h.bin_center(i),
+                    c,
+                    h.density()[i]
+                ));
+            }
+        }
+        write_csv(&reports, &format!("fig8_hist_{}", ds.name), &csv)
+            .map_err(|e| anyhow!("{e}"))?;
+        write_csv(&reports, &format!("posterior_{}", ds.name), &post.to_csv())
+            .map_err(|e| anyhow!("{e}"))?;
+    }
+    print!("{}", t8.render());
+    write_csv(&reports, "table8", &t8.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+/// Energy table: samples per joule at the paper's iso-power packages.
+fn cmd_energy(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, &["artifacts", "reports"], &[])?;
+    let mut t = Table::new(
+        "iso-power comparison (300 W packages, hwmodel)",
+        &["device", "Msamples/s", "ksamples/J", "kJ per 1e9 samples"],
+    );
+    for p in abc_ipu::hwmodel::paper_energy_table() {
+        t.row(&[
+            p.device.to_string(),
+            format!("{:.2}", p.samples_per_sec / 1e6),
+            format!("{:.1}", p.samples_per_joule / 1e3),
+            format!("{:.2}", p.joules_per_reference / 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    write_csv(reports_dir(&a), "energy", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+/// Autotune: measure compiled batch variants, pick the best per-sample.
+fn cmd_autotune(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "days", "budget-ms", "reps"], &[])?;
+    let days: usize = a.parse_or("days", 49).map_err(anyhow::Error::msg)?;
+    let budget_ms: f64 = a.parse_or("budget-ms", f64::INFINITY).map_err(anyhow::Error::msg)?;
+    let reps: u32 = a.parse_or("reps", 3).map_err(anyhow::Error::msg)?;
+    let rt = Runtime::open(artifacts_dir(&a)).map_err(|e| anyhow!("{e}"))?;
+    let ds = load_dataset("synthetic", days)?;
+    let result = abc_ipu::coordinator::autotune_batch(
+        &rt,
+        &ds.truncated(days).observed.flatten(),
+        &ds.consts(),
+        days,
+        budget_ms / 1e3,
+        reps,
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+    let mut t = Table::new(
+        "batch autotune (Tables 2-3 as a feature)",
+        &["batch", "time/run", "per-sample µs", "chosen"],
+    );
+    for p in &result.points {
+        t.row(&[
+            p.batch.to_string(),
+            fmt_secs(p.time_per_run),
+            format!("{:.2}", p.per_sample * 1e6),
+            if p.batch == result.best_batch { "<= best".into() } else { String::new() },
+        ]);
+    }
+    print!("{}", t.render());
+    write_csv(reports_dir(&a), "autotune", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    Ok(())
+}
+
+fn cmd_smc(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut flags = INFER_FLAGS.to_vec();
+    flags.push("stages");
+    let a = parse(argv, &flags, &[])?;
+    let cfg = infer_config(&a)?;
+    let stages: usize = a.parse_or("stages", 3).map_err(anyhow::Error::msg)?;
+    let ds = load_dataset(&cfg.dataset, cfg.days)?;
+    let smc_cfg = smc::SmcConfig {
+        stages,
+        samples_per_stage: cfg.accepted_samples,
+        ..Default::default()
+    };
+    let result = smc::run_smc(artifacts_dir(&a), cfg, ds, &smc_cfg)
+        .map_err(|e| anyhow!("{e}"))?;
+    let mut t = Table::new(
+        "SMC-ABC schedule",
+        &["stage", "tolerance", "accepted", "runs", "dist p50"],
+    );
+    for s in &result.stages {
+        t.row(&[
+            s.stage.to_string(),
+            format!("{:.4e}", s.tolerance),
+            s.posterior.len().to_string(),
+            s.runs.to_string(),
+            format!("{:.4e}", s.posterior.distance_summary().median),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
+    let a = parse(argv, &["artifacts", "reports"], &[])?;
+    let rt = Runtime::open(artifacts_dir(&a))
+        .map_err(|e| anyhow!("{e}"))
+        .context("cannot open artifacts (run `make artifacts`)")?;
+    println!("platform: {}", rt.platform());
+    let mut t = Table::new("artifacts", &["name", "kind", "batch", "days", "file"]);
+    for (name, e) in rt.manifest().artifacts() {
+        t.row(&[
+            name.clone(),
+            format!("{:?}", e.kind),
+            e.batch.to_string(),
+            e.days.to_string(),
+            e.file.clone(),
+        ]);
+    }
+    print!("{}", t.render());
+    let mut t = Table::new("embedded datasets", &["name", "days", "population", "default ε"]);
+    for d in embedded::all() {
+        t.row(&[
+            d.name.clone(),
+            d.days().to_string(),
+            format!("{:.2e}", d.population),
+            format!("{:.1e}", d.default_tolerance),
+        ]);
+    }
+    print!("{}", t.render());
+    let mut t = Table::new(
+        "device models (300 W packages)",
+        &["name", "peak TFLOPS", "mem BW/s", "on-chip", "code-resident"],
+    );
+    for d in DeviceSpec::paper_lineup() {
+        t.row(&[
+            d.name.to_string(),
+            format!("{:.1}", d.peak_flops / 1e12),
+            fmt_bytes(d.mem_bw as u64),
+            fmt_bytes(d.onchip_bytes as u64),
+            d.code_resident.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

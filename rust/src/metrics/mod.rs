@@ -1,0 +1,172 @@
+//! Timers, counters and run reports.
+//!
+//! The paper's evaluation is built on per-run wall-clock accounting
+//! (Tables 1–4, 7): total time, time per run, host post-processing
+//! share, transfer volume. [`RunMetrics`] accumulates exactly those
+//! quantities inside the coordinator; [`Stopwatch`] is the measuring
+//! primitive.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch around `Instant`.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn seconds(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Aggregated metrics of one inference job.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunMetrics {
+    /// Number of accelerator runs executed (across all devices).
+    pub runs: u64,
+    /// Samples simulated in total.
+    pub samples_simulated: u64,
+    /// Samples accepted.
+    pub samples_accepted: u64,
+    /// Wall-clock time of the whole job.
+    pub total: Duration,
+    /// Time spent inside accelerator execution (sum over devices).
+    pub device_exec: Duration,
+    /// Time spent in host post-processing (filtering transferred data).
+    pub host_postproc: Duration,
+    /// Bytes transferred device → host (after outfeed/top-k filtering).
+    pub bytes_to_host: u64,
+    /// Chunks (or top-k blocks) actually transferred.
+    pub transfers: u64,
+    /// Chunks skipped because they contained no accepted sample.
+    pub transfers_skipped: u64,
+}
+
+impl RunMetrics {
+    /// Mean wall-clock time per accelerator run.
+    ///
+    /// The paper calls this the "more reliable metric" (§4.1) because
+    /// total time inherits the stochasticity of how many runs are needed.
+    pub fn time_per_run(&self) -> Duration {
+        if self.runs == 0 {
+            return Duration::ZERO;
+        }
+        // per-device wall time: device_exec is summed across devices but
+        // runs count is global, so this is mean exec time per run.
+        self.device_exec / self.runs as u32
+    }
+
+    /// Acceptance rate over everything simulated.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.samples_simulated == 0 {
+            return 0.0;
+        }
+        self.samples_accepted as f64 / self.samples_simulated as f64
+    }
+
+    /// Host post-processing share of total time (Table 4's percentage).
+    pub fn postproc_fraction(&self) -> f64 {
+        let t = self.total.as_secs_f64();
+        if t == 0.0 {
+            return 0.0;
+        }
+        self.host_postproc.as_secs_f64() / t
+    }
+
+    /// Fraction of potential transfers skipped by conditional outfeed.
+    pub fn transfer_skip_rate(&self) -> f64 {
+        let total = self.transfers + self.transfers_skipped;
+        if total == 0 {
+            return 0.0;
+        }
+        self.transfers_skipped as f64 / total as f64
+    }
+
+    /// Merge another device/job's metrics into this one (durations add;
+    /// `total` takes the max since devices run concurrently).
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.runs += other.runs;
+        self.samples_simulated += other.samples_simulated;
+        self.samples_accepted += other.samples_accepted;
+        self.total = self.total.max(other.total);
+        self.device_exec += other.device_exec;
+        self.host_postproc += other.host_postproc;
+        self.bytes_to_host += other.bytes_to_host;
+        self.transfers += other.transfers;
+        self.transfers_skipped += other.transfers_skipped;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_per_run_and_rates() {
+        let m = RunMetrics {
+            runs: 4,
+            samples_simulated: 400,
+            samples_accepted: 10,
+            device_exec: Duration::from_millis(400),
+            total: Duration::from_millis(500),
+            host_postproc: Duration::from_millis(50),
+            transfers: 3,
+            transfers_skipped: 9,
+            ..Default::default()
+        };
+        assert_eq!(m.time_per_run(), Duration::from_millis(100));
+        assert!((m.acceptance_rate() - 0.025).abs() < 1e-12);
+        assert!((m.postproc_fraction() - 0.1).abs() < 1e-12);
+        assert!((m.transfer_skip_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_runs_safe() {
+        let m = RunMetrics::default();
+        assert_eq!(m.time_per_run(), Duration::ZERO);
+        assert_eq!(m.acceptance_rate(), 0.0);
+        assert_eq!(m.postproc_fraction(), 0.0);
+        assert_eq!(m.transfer_skip_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_and_maxes() {
+        let mut a = RunMetrics {
+            runs: 1,
+            total: Duration::from_secs(2),
+            device_exec: Duration::from_secs(1),
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            runs: 2,
+            total: Duration::from_secs(3),
+            device_exec: Duration::from_secs(2),
+            bytes_to_host: 128,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.runs, 3);
+        assert_eq!(a.total, Duration::from_secs(3));
+        assert_eq!(a.device_exec, Duration::from_secs(3));
+        assert_eq!(a.bytes_to_host, 128);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.seconds() >= 0.004);
+    }
+}

@@ -1,0 +1,123 @@
+//! Derived epidemiological quantities.
+//!
+//! The paper's motivation (§1) is inferring quantities like the
+//! reproduction rate from fitted parameters. This module derives them
+//! from posterior θ samples: the effective reproduction number R_t
+//! implied by the model's rate structure, the basic R₀ at onset, and
+//! doubling times — the numbers an epidemiologist actually reads off
+//! a fit.
+
+use super::{response_rate, state_idx, theta_idx, InitialCondition, Theta};
+
+/// Effective reproduction number at a given state.
+///
+/// In this model an undocumented-infected individual leaves I at total
+/// rate γ + βη (confirmation or unconfirmed removal) and infects at
+/// rate g·S/P, so the expected number of secondary infections is
+///
+///   R_t = g(A,R,D) · (S/P) / (γ + β·η)
+pub fn effective_r(theta: &Theta, state: &super::State, population: f32) -> f32 {
+    use state_idx::*;
+    use theta_idx::*;
+    let g = response_rate(theta, state[A], state[R], state[D]);
+    let leave = theta[GAMMA] + theta[BETA] * theta[ETA];
+    if leave <= 0.0 {
+        return f32::INFINITY;
+    }
+    g * (state[S] / population) / leave
+}
+
+/// Basic reproduction number at the dataset's initial condition.
+pub fn r0(theta: &Theta, ic: &InitialCondition) -> f32 {
+    let state = ic.init_state(theta);
+    effective_r(theta, &state, ic.population)
+}
+
+/// Early-epidemic exponential growth rate r (per day): the dominant
+/// rate of I growth when S ≈ P, r = g − (γ + βη).
+pub fn growth_rate(theta: &Theta, ic: &InitialCondition) -> f32 {
+    use theta_idx::*;
+    let state = ic.init_state(theta);
+    let g = response_rate(
+        theta,
+        state[state_idx::A],
+        state[state_idx::R],
+        state[state_idx::D],
+    );
+    g * state[state_idx::S] / ic.population - (theta[GAMMA] + theta[BETA] * theta[ETA])
+}
+
+/// Case doubling time in days (None if the epidemic is not growing).
+pub fn doubling_time(theta: &Theta, ic: &InitialCondition) -> Option<f32> {
+    let r = growth_rate(theta, ic);
+    if r <= 0.0 {
+        None
+    } else {
+        Some(std::f32::consts::LN_2 / r)
+    }
+}
+
+/// Posterior summary of a derived quantity over θ samples.
+pub fn posterior_r0(thetas: &[Theta], ic: &InitialCondition) -> Vec<f32> {
+    thetas.iter().map(|t| r0(t, ic)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ic() -> InitialCondition {
+        InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 }
+    }
+
+    const THETA: Theta = [0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83];
+
+    #[test]
+    fn r0_is_positive_and_plausible() {
+        let r = r0(&THETA, &ic());
+        // early-COVID fits put R0 roughly in [1, 10]
+        assert!(r > 0.5 && r < 50.0, "r0 = {r}");
+    }
+
+    #[test]
+    fn growing_epidemic_has_r_above_one_and_finite_doubling() {
+        let r = r0(&THETA, &ic());
+        let g = growth_rate(&THETA, &ic());
+        let d = doubling_time(&THETA, &ic());
+        assert!(r > 1.0);
+        assert!(g > 0.0);
+        let d = d.expect("growing epidemic must have a doubling time");
+        // this θ implies a very fast early epidemic (g ≈ 2/day)
+        assert!((0.1..60.0).contains(&d), "doubling {d} days");
+    }
+
+    #[test]
+    fn suppressed_epidemic_has_r_below_one() {
+        // high removal rates, tiny infection rate
+        let theta: Theta = [0.01, 0.0, 1.0, 0.5, 0.9, 0.1, 1.0, 0.5];
+        assert!(r0(&theta, &ic()) < 1.0);
+        assert!(doubling_time(&theta, &ic()).is_none());
+    }
+
+    #[test]
+    fn r_decreases_as_cases_accumulate() {
+        // the response function g decays with observed cases, so R_t at
+        // a heavy-caseload state must be below R0
+        let state_late: crate::model::State =
+            [50_000_000.0, 1e5, 2e5, 1e5, 1e4, 1e5];
+        let r_late = effective_r(&THETA, &state_late, 60_000_000.0);
+        assert!(r_late < r0(&THETA, &ic()));
+    }
+
+    #[test]
+    fn degenerate_leave_rate_is_infinite() {
+        let theta: Theta = [0.5, 10.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        assert!(r0(&theta, &ic()).is_infinite());
+    }
+
+    #[test]
+    fn posterior_r0_maps_every_sample() {
+        let thetas = vec![THETA; 7];
+        assert_eq!(posterior_r0(&thetas, &ic()).len(), 7);
+    }
+}

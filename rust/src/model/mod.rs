@@ -1,0 +1,224 @@
+//! Pure-Rust reference implementation of the stochastic epidemiology model.
+//!
+//! This is the same 6-compartment tau-leaping model the Pallas kernel
+//! implements (Warne et al. 2020; paper §2.1), written directly in f32
+//! Rust with *identical operation ordering* so a step with explicit
+//! noise is bit-comparable to the compiled `onestep` artifact.
+//!
+//! It serves three roles:
+//! 1. the **CPU baseline** of Table 1 (scalar per-sample loop — what the
+//!    paper ran on Xeon clusters before acceleration),
+//! 2. the **validation oracle** for the accelerator path from the Rust
+//!    side (integration tests drive `onestep` with the same inputs),
+//! 3. the **synthetic ground-truth generator** for parameter-recovery
+//!    experiments.
+
+mod distance;
+pub mod epi;
+mod prior;
+mod simulator;
+
+pub use distance::{euclidean_distance, sq_distance_day};
+pub use prior::Prior;
+pub use simulator::{simulate_distance_batch, simulate_traj, Simulator};
+
+/// Number of model parameters (eq. 1).
+pub const N_PARAMS: usize = 8;
+/// Number of compartments in the state vector (eq. 3).
+pub const N_COMPARTMENTS: usize = 6;
+/// Number of transitions in the hazard function (eq. 5).
+pub const N_TRANSITIONS: usize = 5;
+/// Number of observable compartments (A, R, D).
+pub const N_OBSERVED: usize = 3;
+
+/// Parameter vector θ = [α₀, α, n, β, γ, δ, η, κ] (eq. 1).
+pub type Theta = [f32; N_PARAMS];
+/// State vector X = [S, I, A, R, D, Rᵘ] (eq. 3).
+pub type State = [f32; N_COMPARTMENTS];
+
+/// Named indices into [`Theta`].
+pub mod theta_idx {
+    pub const ALPHA0: usize = 0;
+    pub const ALPHA: usize = 1;
+    pub const N_EXP: usize = 2;
+    pub const BETA: usize = 3;
+    pub const GAMMA: usize = 4;
+    pub const DELTA: usize = 5;
+    pub const ETA: usize = 6;
+    pub const KAPPA: usize = 7;
+}
+
+/// Named indices into [`State`].
+pub mod state_idx {
+    pub const S: usize = 0;
+    pub const I: usize = 1;
+    pub const A: usize = 2;
+    pub const R: usize = 3;
+    pub const D: usize = 4;
+    pub const RU: usize = 5;
+}
+
+/// Upper bounds of the paper's uniform prior (eq. 2).
+pub const PRIOR_HIGH: Theta = [1.0, 100.0, 2.0, 1.0, 1.0, 1.0, 1.0, 2.0];
+
+/// Human-readable parameter names, Fig 8/9 ordering.
+pub const PARAM_NAMES: [&str; N_PARAMS] =
+    ["alpha0", "alpha", "n", "beta", "gamma", "delta", "eta", "kappa"];
+
+/// Initial condition + population: the `consts` input of every artifact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InitialCondition {
+    /// Active confirmed cases on day 0.
+    pub a0: f32,
+    /// Confirmed recoveries on day 0.
+    pub r0: f32,
+    /// Confirmed fatalities on day 0.
+    pub d0: f32,
+    /// Total population P.
+    pub population: f32,
+}
+
+impl InitialCondition {
+    /// Pack into the `f32[4]` consts layout of the compiled artifacts.
+    pub fn to_consts(&self) -> [f32; 4] {
+        [self.a0, self.r0, self.d0, self.population]
+    }
+
+    /// First-day state for a given θ: Rᵘ=0, I₀=κ·A₀, S=P−(A₀+R₀+D₀+I₀).
+    pub fn init_state(&self, theta: &Theta) -> State {
+        let i0 = theta[theta_idx::KAPPA] * self.a0;
+        let s0 = self.population - (self.a0 + self.r0 + self.d0 + i0);
+        [s0, i0, self.a0, self.r0, self.d0, 0.0]
+    }
+}
+
+/// Total infection rate g(A,R,D) = α₀ + α / (1 + (A+R+D)ⁿ) (eq. 4).
+#[inline]
+pub fn response_rate(theta: &Theta, a: f32, r: f32, d: f32) -> f32 {
+    let total = (a + r + d).max(0.0);
+    theta[theta_idx::ALPHA0]
+        + theta[theta_idx::ALPHA] / (1.0 + total.powf(theta[theta_idx::N_EXP]))
+}
+
+/// Hazard function h (eq. 5): expected per-day transition counts, in the
+/// paper's ordering (S→I, I→A, A→R, A→D, I→Rᵘ).
+#[inline]
+pub fn hazard(state: &State, theta: &Theta, population: f32) -> [f32; N_TRANSITIONS] {
+    use state_idx::*;
+    use theta_idx::*;
+    let g = response_rate(theta, state[A], state[R], state[D]);
+    [
+        g * state[S] * state[I] / population,
+        theta[GAMMA] * state[I],
+        theta[BETA] * state[A],
+        theta[DELTA] * state[A],
+        theta[BETA] * theta[ETA] * state[I],
+    ]
+}
+
+/// Gaussian-approximated Poisson increment: `max(floor(h + sqrt(h)·z), 0)`.
+#[inline]
+pub fn sample_transition(h: f32, z: f32) -> f32 {
+    let h = h.max(0.0);
+    (h + h.sqrt() * z).floor().max(0.0)
+}
+
+/// One tau-leap day with explicit standard-normal noise `z[0..5]`.
+///
+/// Matches `ref.step` / the Pallas kernel op-for-op (same clamp priority:
+/// n2 before n5 out of I, n3 before n4 out of A).
+#[inline]
+pub fn step(state: &State, theta: &Theta, z: &[f32; N_TRANSITIONS], population: f32) -> State {
+    use state_idx::*;
+    let h = hazard(state, theta, population);
+    let raw: [f32; N_TRANSITIONS] = std::array::from_fn(|i| sample_transition(h[i], z[i]));
+    let n1 = raw[0].min(state[S]);
+    let n2 = raw[1].min(state[I]);
+    let n5 = raw[4].min(state[I] - n2);
+    let n3 = raw[2].min(state[A]);
+    let n4 = raw[3].min(state[A] - n3);
+    [
+        state[S] - n1,
+        state[I] + n1 - n2 - n5,
+        state[A] + n2 - n3 - n4,
+        state[R] + n3,
+        state[D] + n4,
+        state[RU] + n5,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const IC: InitialCondition = InitialCondition {
+        a0: 155.0,
+        r0: 2.0,
+        d0: 3.0,
+        population: 60_000_000.0,
+    };
+    const THETA: Theta = [0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83];
+
+    #[test]
+    fn init_state_rule() {
+        let s = IC.init_state(&THETA);
+        assert_eq!(s[state_idx::RU], 0.0);
+        assert!((s[state_idx::I] - 0.83 * 155.0).abs() < 1e-3);
+        let total: f32 = s.iter().sum();
+        // f32 ulp at 6e7 is 4, so allow a few ulps of rounding
+        assert!((total - IC.population).abs() < 16.0);
+    }
+
+    #[test]
+    fn response_rate_limits() {
+        let theta: Theta = [0.3, 40.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        assert!((response_rate(&theta, 0.0, 0.0, 0.0) - 40.3).abs() < 1e-5);
+        assert!((response_rate(&theta, 1e9, 0.0, 0.0) - 0.3).abs() < 1e-4);
+    }
+
+    #[test]
+    fn hazard_ordering_matches_eq5() {
+        let s = IC.init_state(&THETA);
+        let h = hazard(&s, &THETA, IC.population);
+        // I→A is γ·I, A→R is β·A, A→D is δ·A, I→Rᵘ is βη·I
+        assert!((h[1] - THETA[theta_idx::GAMMA] * s[state_idx::I]).abs() < 1e-3);
+        assert!((h[2] - THETA[theta_idx::BETA] * s[state_idx::A]).abs() < 1e-4);
+        assert!((h[3] - THETA[theta_idx::DELTA] * s[state_idx::A]).abs() < 1e-4);
+        assert!(
+            (h[4] - THETA[theta_idx::BETA] * THETA[theta_idx::ETA] * s[state_idx::I]).abs() < 1e-4
+        );
+    }
+
+    #[test]
+    fn step_conserves_population_and_nonnegativity() {
+        let mut state = IC.init_state(&THETA);
+        let mut rng = crate::rng::Xoshiro256::seed_from(11);
+        for _ in 0..200 {
+            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
+            state = step(&state, &THETA, &z, IC.population);
+            for &v in &state {
+                assert!(v >= 0.0, "negative compartment: {state:?}");
+            }
+            let total: f32 = state.iter().sum();
+            assert!((total - IC.population).abs() / IC.population < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_noise_is_floored_hazard() {
+        let state = IC.init_state(&THETA);
+        let h = hazard(&state, &THETA, IC.population);
+        let next = step(&state, &THETA, &[0.0; 5], IC.population);
+        assert_eq!(
+            next[state_idx::R],
+            state[state_idx::R] + h[2].floor().min(state[state_idx::A])
+        );
+    }
+
+    #[test]
+    fn sample_transition_never_negative() {
+        assert_eq!(sample_transition(4.0, -100.0), 0.0);
+        assert_eq!(sample_transition(0.0, 1.0), 0.0);
+        assert!(sample_transition(100.0, 1.0) >= 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! The uniform prior over model parameters (eq. 2).
+
+use super::{Theta, N_PARAMS, PRIOR_HIGH};
+use crate::rng::Xoshiro256;
+
+/// Independent uniform prior U(low, high) over θ.
+///
+/// The paper uses U(0, [1, 100, 2, 1, 1, 1, 1, 2]); SMC-ABC refinement
+/// shrinks the box around surviving particles, so general bounds are
+/// supported.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prior {
+    low: Theta,
+    high: Theta,
+}
+
+impl Prior {
+    /// The paper's prior: U(0, [1, 100, 2, 1, 1, 1, 1, 2]).
+    pub fn paper() -> Self {
+        Self { low: [0.0; N_PARAMS], high: PRIOR_HIGH }
+    }
+
+    /// A general box prior. Errors if any `low[i] > high[i]` or a bound
+    /// is not finite.
+    pub fn new(low: Theta, high: Theta) -> crate::Result<Self> {
+        for i in 0..N_PARAMS {
+            if !low[i].is_finite() || !high[i].is_finite() || low[i] > high[i] {
+                return Err(crate::Error::Config(format!(
+                    "invalid prior bounds for parameter {}: [{}, {}]",
+                    super::PARAM_NAMES[i],
+                    low[i],
+                    high[i]
+                )));
+            }
+        }
+        Ok(Self { low, high })
+    }
+
+    /// Lower bounds, artifact input layout.
+    pub fn low(&self) -> &Theta {
+        &self.low
+    }
+
+    /// Upper bounds, artifact input layout.
+    pub fn high(&self) -> &Theta {
+        &self.high
+    }
+
+    /// Draw one θ.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> Theta {
+        std::array::from_fn(|i| {
+            self.low[i] + (self.high[i] - self.low[i]) * rng.uniform() as f32
+        })
+    }
+
+    /// Whether θ lies inside the box (boundary inclusive).
+    pub fn contains(&self, theta: &Theta) -> bool {
+        theta
+            .iter()
+            .enumerate()
+            .all(|(i, &v)| v >= self.low[i] && v <= self.high[i])
+    }
+
+    /// Shrink the box to `[center - half, center + half]` per parameter,
+    /// clipped to the current bounds. Used by SMC-ABC refinement.
+    pub fn shrink_around(&self, center: &Theta, half_widths: &Theta) -> Self {
+        let mut low = self.low;
+        let mut high = self.high;
+        for i in 0..N_PARAMS {
+            low[i] = (center[i] - half_widths[i]).max(self.low[i]);
+            high[i] = (center[i] + half_widths[i]).min(self.high[i]);
+            if low[i] > high[i] {
+                // degenerate: collapse to the clipped center
+                let c = center[i].clamp(self.low[i], self.high[i]);
+                low[i] = c;
+                high[i] = c;
+            }
+        }
+        Self { low, high }
+    }
+
+    /// Box volume (product of side lengths); 0 for degenerate boxes.
+    pub fn volume(&self) -> f64 {
+        (0..N_PARAMS)
+            .map(|i| (self.high[i] - self.low[i]) as f64)
+            .product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_prior_bounds() {
+        let p = Prior::paper();
+        assert_eq!(p.low(), &[0.0; 8]);
+        assert_eq!(p.high(), &PRIOR_HIGH);
+        assert!((p.volume() - (100.0 * 2.0 * 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn samples_inside_box() {
+        let p = Prior::paper();
+        let mut rng = Xoshiro256::seed_from(0);
+        for _ in 0..1000 {
+            assert!(p.contains(&p.sample(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn invalid_bounds_rejected() {
+        let mut low = [0.0f32; 8];
+        low[2] = 3.0; // > high[2] = 2.0
+        assert!(Prior::new(low, PRIOR_HIGH).is_err());
+        let mut bad = PRIOR_HIGH;
+        bad[0] = f32::NAN;
+        assert!(Prior::new([0.0; 8], bad).is_err());
+    }
+
+    #[test]
+    fn shrink_clips_to_parent() {
+        let p = Prior::paper();
+        let center: Theta = [0.05, 50.0, 1.0, 0.5, 0.5, 0.5, 0.5, 1.0];
+        let half: Theta = [0.2, 10.0, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1];
+        let q = p.shrink_around(&center, &half);
+        assert_eq!(q.low()[0], 0.0); // clipped at parent low
+        assert!((q.high()[0] - 0.25).abs() < 1e-6);
+        assert!((q.low()[1] - 40.0).abs() < 1e-4);
+        assert!(q.volume() < p.volume());
+    }
+
+    #[test]
+    fn shrink_degenerate_collapses() {
+        let p = Prior::paper();
+        let center: Theta = [5.0, 50.0, 1.0, 0.5, 0.5, 0.5, 0.5, 1.0]; // outside
+        let half: Theta = [0.0; 8];
+        let q = p.shrink_around(&center, &half);
+        assert_eq!(q.low()[0], q.high()[0]);
+        assert_eq!(q.low()[0], 1.0); // clamped into the parent box
+    }
+
+    #[test]
+    fn sample_marginals_span_box() {
+        let p = Prior::paper();
+        let mut rng = Xoshiro256::seed_from(1);
+        let samples: Vec<Theta> = (0..2000).map(|_| p.sample(&mut rng)).collect();
+        for i in 0..N_PARAMS {
+            let min = samples.iter().map(|t| t[i]).fold(f32::MAX, f32::min);
+            let max = samples.iter().map(|t| t[i]).fold(f32::MIN, f32::max);
+            assert!(min < 0.1 * PRIOR_HIGH[i]);
+            assert!(max > 0.9 * PRIOR_HIGH[i]);
+        }
+    }
+}

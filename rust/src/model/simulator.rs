@@ -1,0 +1,197 @@
+//! Batched trajectory simulation on the host CPU.
+//!
+//! [`Simulator`] is the scalar-loop reference: it plays the role of the
+//! paper's Xeon baseline (Table 1's "2×CPU" rows) and of the oracle the
+//! accelerator path is validated against. The inner loop is written to
+//! be auto-vectorization friendly (per-sample arrays, no allocation in
+//! the day loop) — the perf pass (EXPERIMENTS.md §Perf) measures it as
+//! the `cpu_baseline` bench.
+
+use super::{InitialCondition, State, Theta, N_OBSERVED};
+use crate::rng::Xoshiro256;
+
+/// Host-side simulator for one initial condition.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    ic: InitialCondition,
+}
+
+impl Simulator {
+    /// Build a simulator for the given initial condition.
+    pub fn new(ic: InitialCondition) -> Self {
+        Self { ic }
+    }
+
+    /// The initial condition this simulator anchors day 0 to.
+    pub fn initial_condition(&self) -> &InitialCondition {
+        &self.ic
+    }
+
+    /// Simulate one trajectory, returning the observables row-major as
+    /// `[A; days] ++ [R; days] ++ [D; days]` (the `[3, days]` layout used
+    /// by the artifacts and the observed data).
+    ///
+    /// Day 0 is the anchored initial condition; each subsequent day is
+    /// one tau-leap update, matching `ref.simulate`.
+    pub fn trajectory(&self, theta: &Theta, days: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+        let mut out = vec![0.0f32; N_OBSERVED * days];
+        let mut state = self.ic.init_state(theta);
+        self.record(&state, 0, days, &mut out);
+        for t in 1..days {
+            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
+            state = super::step(&state, theta, &z, self.ic.population);
+            self.record(&state, t, days, &mut out);
+        }
+        out
+    }
+
+    /// Simulate one trajectory and return its Euclidean distance to
+    /// `observed` (layout `[3, days]`), never materializing the
+    /// trajectory — the host analogue of the fused Pallas kernel.
+    pub fn distance(&self, theta: &Theta, observed: &[f32], days: usize,
+                    rng: &mut Xoshiro256) -> f32 {
+        debug_assert_eq!(observed.len(), N_OBSERVED * days);
+        let mut state = self.ic.init_state(theta);
+        let mut acc = super::sq_distance_day(&state, observed, 0, days);
+        for t in 1..days {
+            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
+            state = super::step(&state, theta, &z, self.ic.population);
+            acc += super::sq_distance_day(&state, observed, t, days);
+        }
+        acc.sqrt()
+    }
+
+    /// Full state trajectory `[6, days]` row-major (tests, liveness model).
+    pub fn full_trajectory(&self, theta: &Theta, days: usize,
+                           rng: &mut Xoshiro256) -> Vec<f32> {
+        let mut out = vec![0.0f32; 6 * days];
+        let mut state = self.ic.init_state(theta);
+        for (c, &v) in state.iter().enumerate() {
+            out[c * days] = v;
+        }
+        for t in 1..days {
+            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
+            state = super::step(&state, theta, &z, self.ic.population);
+            for (c, &v) in state.iter().enumerate() {
+                out[c * days + t] = v;
+            }
+        }
+        out
+    }
+
+    #[inline]
+    fn record(&self, state: &State, t: usize, days: usize, out: &mut [f32]) {
+        use super::state_idx::*;
+        out[t] = state[A];
+        out[days + t] = state[R];
+        out[2 * days + t] = state[D];
+    }
+}
+
+/// CPU baseline for one full ABC run: sample `batch` θ from `prior`,
+/// simulate, return `(thetas, distances)`. This is the Table-1 "CPU"
+/// comparator — a straight scalar loop over samples.
+pub fn simulate_distance_batch(
+    sim: &Simulator,
+    prior: &super::Prior,
+    observed: &[f32],
+    days: usize,
+    batch: usize,
+    rng: &mut Xoshiro256,
+) -> (Vec<Theta>, Vec<f32>) {
+    let mut thetas = Vec::with_capacity(batch);
+    let mut dists = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let theta = prior.sample(rng);
+        dists.push(sim.distance(&theta, observed, days, rng));
+        thetas.push(theta);
+    }
+    (thetas, dists)
+}
+
+/// Simulate `thetas` trajectories (posterior predictive), returning each
+/// as a `[3, days]` row-major vector.
+pub fn simulate_traj(sim: &Simulator, thetas: &[Theta], days: usize,
+                     rng: &mut Xoshiro256) -> Vec<Vec<f32>> {
+    thetas.iter().map(|t| sim.trajectory(t, days, rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{euclidean_distance, Prior, PRIOR_HIGH};
+
+    fn sim() -> Simulator {
+        Simulator::new(InitialCondition {
+            a0: 155.0,
+            r0: 2.0,
+            d0: 3.0,
+            population: 60_000_000.0,
+        })
+    }
+
+    const THETA: Theta = [0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83];
+
+    #[test]
+    fn trajectory_layout_and_anchor() {
+        let mut rng = Xoshiro256::seed_from(0);
+        let days = 20;
+        let traj = sim().trajectory(&THETA, days, &mut rng);
+        assert_eq!(traj.len(), 3 * days);
+        assert_eq!(traj[0], 155.0); // A day 0
+        assert_eq!(traj[days], 2.0); // R day 0
+        assert_eq!(traj[2 * days], 3.0); // D day 0
+    }
+
+    #[test]
+    fn distance_matches_trajectory_distance() {
+        let days = 25;
+        let mut rng = Xoshiro256::seed_from(1);
+        let observed = sim().trajectory(&THETA, days, &mut rng);
+        // identical RNG stream for both paths
+        let mut r1 = Xoshiro256::seed_from(2);
+        let mut r2 = Xoshiro256::seed_from(2);
+        let traj = sim().trajectory(&THETA, days, &mut r1);
+        let d_fused = sim().distance(&THETA, &observed, days, &mut r2);
+        let d_bulk = euclidean_distance(&traj, &observed);
+        assert!((d_fused - d_bulk).abs() / d_bulk.max(1.0) < 1e-5);
+    }
+
+    #[test]
+    fn distance_to_self_with_same_seed_is_zero() {
+        let days = 15;
+        let mut r1 = Xoshiro256::seed_from(3);
+        let observed = sim().trajectory(&THETA, days, &mut r1);
+        let mut r2 = Xoshiro256::seed_from(3);
+        let d = sim().distance(&THETA, &observed, days, &mut r2);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn batch_respects_prior_bounds() {
+        let prior = Prior::paper();
+        let mut rng = Xoshiro256::seed_from(4);
+        let observed = sim().trajectory(&THETA, 10, &mut rng);
+        let (thetas, dists) =
+            simulate_distance_batch(&sim(), &prior, &observed, 10, 500, &mut rng);
+        assert_eq!(thetas.len(), 500);
+        assert_eq!(dists.len(), 500);
+        for t in &thetas {
+            for (i, &v) in t.iter().enumerate() {
+                assert!(v >= 0.0 && v <= PRIOR_HIGH[i]);
+            }
+        }
+        assert!(dists.iter().all(|d| d.is_finite() && *d >= 0.0));
+    }
+
+    #[test]
+    fn full_trajectory_conserves_population() {
+        let mut rng = Xoshiro256::seed_from(5);
+        let days = 30;
+        let full = sim().full_trajectory(&THETA, days, &mut rng);
+        for t in 0..days {
+            let total: f32 = (0..6).map(|c| full[c * days + t]).sum();
+            assert!((total - 60_000_000.0).abs() / 60_000_000.0 < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+//!
+//! The manifest is written by `python/compile/aot.py` and is the single
+//! source of truth for what was AOT-compiled: input/output shapes and
+//! dtypes per artifact plus the analytic workload statistics the
+//! hardware performance model consumes. Parsed with the in-tree JSON
+//! parser ([`crate::util::json`]).
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One input or output tensor of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    /// Logical name (`key`, `observed`, ...).
+    pub name: String,
+    /// Numpy dtype string (`float32`, `uint32`).
+    pub dtype: String,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(Json::as_usize)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Artifact kind, mirroring `aot.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Batched ABC run (prior → simulate → distance).
+    Abc,
+    /// Posterior-predictive trajectory simulation.
+    Predict,
+    /// Single tau-leap day with explicit noise.
+    Onestep,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "abc" => Ok(Self::Abc),
+            "predict" => Ok(Self::Predict),
+            "onestep" => Ok(Self::Onestep),
+            other => Err(Error::Parse(format!("unknown artifact kind `{other}`"))),
+        }
+    }
+}
+
+/// Analytic per-run workload statistics (see `model.workload_stats`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadStats {
+    /// Total flops per run (simulation + RNG).
+    pub flops: f64,
+    /// Simulation-only flops.
+    pub sim_flops: f64,
+    /// RNG flops (threefry + transforms).
+    pub rng_flops: f64,
+    /// Bytes streamed through memory per run.
+    pub bytes_streamed: f64,
+    /// Bytes that must stay resident for full-speed reuse.
+    pub working_set_bytes: f64,
+    /// Output bytes per run.
+    pub output_bytes: f64,
+}
+
+impl WorkloadStats {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            flops: v.req("flops")?.as_f64()?,
+            sim_flops: v.req("sim_flops")?.as_f64()?,
+            rng_flops: v.req("rng_flops")?.as_f64()?,
+            bytes_streamed: v.req("bytes_streamed")?.as_f64()?,
+            working_set_bytes: v.req("working_set_bytes")?.as_f64()?,
+            output_bytes: v.req("output_bytes")?.as_f64()?,
+        })
+    }
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// Artifact kind.
+    pub kind: ArtifactKind,
+    /// Sample batch size B.
+    pub batch: usize,
+    /// Day count D.
+    pub days: usize,
+    /// HLO text filename relative to the artifact directory.
+    pub file: String,
+    /// Ordered input tensors.
+    pub inputs: Vec<IoSpec>,
+    /// Ordered output tensors (lowered with `return_tuple=True`).
+    pub outputs: Vec<IoSpec>,
+    /// Analytic workload statistics.
+    pub stats: WorkloadStats,
+}
+
+impl ArtifactEntry {
+    fn from_json(name: &str, v: &Json) -> Result<Self> {
+        let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+            v.req(key)?.as_arr()?.iter().map(IoSpec::from_json).collect()
+        };
+        let entry = Self {
+            kind: ArtifactKind::parse(v.req("kind")?.as_str()?)?,
+            batch: v.req("batch")?.as_usize()?,
+            days: v.req("days")?.as_usize()?,
+            file: v.req("file")?.as_str()?.to_string(),
+            inputs: parse_io("inputs")?,
+            outputs: parse_io("outputs")?,
+            stats: WorkloadStats::from_json(v.req("stats")?)?,
+        };
+        if entry.inputs.is_empty() || entry.outputs.is_empty() {
+            return Err(Error::Parse(format!("artifact `{name}` has empty io spec")));
+        }
+        Ok(entry)
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Parse(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::from_json(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let format = v.req("format")?.as_str()?;
+        if format != "hlo-text" {
+            return Err(Error::Parse(format!(
+                "unsupported artifact format `{format}` (want hlo-text)"
+            )));
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in v.req("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), ArtifactEntry::from_json(name, entry)?);
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// All artifacts by name.
+    pub fn artifacts(&self) -> &BTreeMap<String, ArtifactEntry> {
+        &self.artifacts
+    }
+
+    /// Look up one artifact.
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::MissingArtifact(name.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": {
+        "abc_b1000_d49": {
+          "kind": "abc", "batch": 1000, "days": 49,
+          "file": "abc_b1000_d49.hlo.txt",
+          "inputs": [
+            {"name": "key", "dtype": "uint32", "shape": [2]},
+            {"name": "observed", "dtype": "float32", "shape": [3, 49]}
+          ],
+          "outputs": [
+            {"name": "theta", "dtype": "float32", "shape": [1000, 8]}
+          ],
+          "stats": {
+            "flops": 1.0, "sim_flops": 0.5, "rng_flops": 0.5,
+            "bytes_streamed": 10.0, "working_set_bytes": 5.0,
+            "output_bytes": 2.0, "batch": 1000, "days": 49
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(SAMPLE).unwrap();
+        let e = m.get("abc_b1000_d49").unwrap();
+        assert_eq!(e.kind, ArtifactKind::Abc);
+        assert_eq!(e.batch, 1000);
+        assert_eq!(e.inputs[1].elems(), 147);
+        assert_eq!(e.stats.flops, 1.0);
+    }
+
+    #[test]
+    fn missing_artifact_is_actionable() {
+        let m = Manifest::from_json(SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_io() {
+        let bad = SAMPLE.replace(
+            r#""outputs": [
+            {"name": "theta", "dtype": "float32", "shape": [1000, 8]}
+          ]"#,
+            r#""outputs": []"#,
+        );
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = SAMPLE.replace(r#""kind": "abc""#, r#""kind": "mystery""#);
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+}

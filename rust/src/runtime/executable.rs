@@ -1,0 +1,218 @@
+//! Typed wrappers around compiled PJRT executables.
+//!
+//! Each wrapper checks input shapes against the manifest entry before
+//! execution and unpacks the output tuple into plain Rust vectors, so
+//! the rest of the crate never touches `xla::Literal` directly.
+
+use super::ArtifactEntry;
+use crate::model::{Theta, N_PARAMS};
+use crate::{Error, Result};
+use std::rc::Rc;
+
+fn check_len(what: &str, want: usize, got: usize) -> Result<()> {
+    if want != got {
+        return Err(Error::ShapeMismatch {
+            what: what.to_string(),
+            want: format!("{want} elements"),
+            got: format!("{got} elements"),
+        });
+    }
+    Ok(())
+}
+
+fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Output of one ABC run: the full per-sample parameter and distance
+/// arrays (the fixed-shape XLA outputs the paper's §3.2 discusses).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AbcRunOutput {
+    /// Sampled parameters, row-major `[batch, 8]`.
+    pub thetas: Vec<f32>,
+    /// Euclidean distances, `[batch]`.
+    pub distances: Vec<f32>,
+}
+
+impl AbcRunOutput {
+    /// Number of samples in this run.
+    pub fn batch(&self) -> usize {
+        self.distances.len()
+    }
+
+    /// θ of sample `i` as a fixed-size array.
+    pub fn theta(&self, i: usize) -> Theta {
+        let mut t = [0.0f32; N_PARAMS];
+        t.copy_from_slice(&self.thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
+        t
+    }
+}
+
+/// Compiled `abc_b{B}_d{D}` artifact.
+pub struct AbcExecutable {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    entry: ArtifactEntry,
+}
+
+impl std::fmt::Debug for AbcExecutable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AbcExecutable").field("entry", &self.entry).finish()
+    }
+}
+
+impl AbcExecutable {
+    pub(super) fn new(exe: Rc<xla::PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+        Self { exe, entry }
+    }
+
+    /// Batch size B of this variant.
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    /// Fit window D of this variant.
+    pub fn days(&self) -> usize {
+        self.entry.days
+    }
+
+    /// Manifest entry (workload statistics etc.).
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Execute one run: sample B thetas, simulate, return distances.
+    ///
+    /// `observed` is `[3, days]` row-major; `prior_low`/`prior_high` are
+    /// the box bounds; `consts` is `(A0, R0, D0, P)`.
+    pub fn run(
+        &self,
+        key: [u32; 2],
+        observed: &[f32],
+        prior_low: &Theta,
+        prior_high: &Theta,
+        consts: &[f32; 4],
+    ) -> Result<AbcRunOutput> {
+        check_len("observed", 3 * self.entry.days, observed.len())?;
+        let key_lit = xla::Literal::vec1(&key);
+        let observed_lit = literal_f32(observed, &[3, self.entry.days as i64])?;
+        let low_lit = xla::Literal::vec1(&prior_low[..]);
+        let high_lit = xla::Literal::vec1(&prior_high[..]);
+        let consts_lit = xla::Literal::vec1(&consts[..]);
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[key_lit, observed_lit, low_lit, high_lit, consts_lit])?
+            [0][0]
+            .to_literal_sync()?;
+        let (theta_lit, dist_lit) = result.to_tuple2()?;
+        let thetas = theta_lit.to_vec::<f32>()?;
+        let distances = dist_lit.to_vec::<f32>()?;
+        check_len("theta output", self.entry.batch * N_PARAMS, thetas.len())?;
+        check_len("dist output", self.entry.batch, distances.len())?;
+        Ok(AbcRunOutput { thetas, distances })
+    }
+}
+
+/// Compiled `predict_b{B}_d{D}` artifact.
+pub struct PredictExecutable {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    entry: ArtifactEntry,
+}
+
+impl PredictExecutable {
+    pub(super) fn new(exe: Rc<xla::PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+        Self { exe, entry }
+    }
+
+    /// Batch size B (number of θ rows per call).
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    /// Prediction horizon D.
+    pub fn days(&self) -> usize {
+        self.entry.days
+    }
+
+    /// Simulate one stochastic rollout per θ row.
+    ///
+    /// `thetas` is `[batch, 8]` row-major (pad with copies if you have
+    /// fewer than `batch`); returns `[batch, 3, days]` row-major.
+    pub fn run(&self, key: [u32; 2], thetas: &[f32], consts: &[f32; 4]) -> Result<Vec<f32>> {
+        check_len("thetas", self.entry.batch * N_PARAMS, thetas.len())?;
+        let key_lit = xla::Literal::vec1(&key);
+        let theta_lit = literal_f32(thetas, &[self.entry.batch as i64, N_PARAMS as i64])?;
+        let consts_lit = xla::Literal::vec1(&consts[..]);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[key_lit, theta_lit, consts_lit])?[0][0]
+            .to_literal_sync()?;
+        let traj = result.to_tuple1()?.to_vec::<f32>()?;
+        check_len("traj output", self.entry.batch * 3 * self.entry.days, traj.len())?;
+        Ok(traj)
+    }
+}
+
+/// Compiled `onestep_b{B}` artifact (validation surface).
+pub struct OnestepExecutable {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    entry: ArtifactEntry,
+}
+
+impl OnestepExecutable {
+    pub(super) fn new(exe: Rc<xla::PjRtLoadedExecutable>, entry: ArtifactEntry) -> Self {
+        Self { exe, entry }
+    }
+
+    /// Batch size B.
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    /// Advance `state` (`[B, 6]`) one day with explicit noise `z`
+    /// (`[B, 5]`) and parameters `thetas` (`[B, 8]`); all row-major.
+    pub fn run(
+        &self,
+        state: &[f32],
+        thetas: &[f32],
+        z: &[f32],
+        consts: &[f32; 4],
+    ) -> Result<Vec<f32>> {
+        let b = self.entry.batch;
+        check_len("state", b * 6, state.len())?;
+        check_len("thetas", b * N_PARAMS, thetas.len())?;
+        check_len("z", b * 5, z.len())?;
+        let state_lit = literal_f32(state, &[b as i64, 6])?;
+        let theta_lit = literal_f32(thetas, &[b as i64, 8])?;
+        let z_lit = literal_f32(z, &[b as i64, 5])?;
+        let consts_lit = xla::Literal::vec1(&consts[..]);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[state_lit, theta_lit, z_lit, consts_lit])?[0][0]
+            .to_literal_sync()?;
+        let next = result.to_tuple1()?.to_vec::<f32>()?;
+        check_len("next_state output", b * 6, next.len())?;
+        Ok(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abc_output_theta_accessor() {
+        let out = AbcRunOutput {
+            thetas: (0..16).map(|i| i as f32).collect(),
+            distances: vec![1.0, 2.0],
+        };
+        assert_eq!(out.batch(), 2);
+        assert_eq!(out.theta(1), [8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn check_len_mismatch_is_error() {
+        let err = check_len("observed", 147, 48).unwrap_err().to_string();
+        assert!(err.contains("observed") && err.contains("147"));
+    }
+}

@@ -1,0 +1,165 @@
+//! XLA/PJRT runtime: load and execute the AOT-compiled artifacts.
+//!
+//! The interchange format is HLO **text** (not serialized protos — see
+//! `python/compile/aot.py` and /opt/xla-example/README.md). The flow per
+//! artifact is `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `PjRtLoadedExecutable::execute`.
+//!
+//! [`Runtime`] owns one CPU PJRT client and an executable cache keyed by
+//! artifact name; compilation happens once per artifact per process.
+//! Typed wrappers ([`AbcExecutable`], [`PredictExecutable`],
+//! [`OnestepExecutable`]) check shapes against the manifest before
+//! touching PJRT, so misuse fails with an actionable error instead of a
+//! C++ abort.
+
+mod artifacts;
+mod executable;
+
+pub use artifacts::{ArtifactEntry, ArtifactKind, IoSpec, Manifest, WorkloadStats};
+pub use executable::{AbcExecutable, AbcRunOutput, OnestepExecutable, PredictExecutable};
+
+use crate::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// The PJRT runtime: one client + compiled-executable cache.
+///
+/// `xla::PjRtClient` is `Rc`-based and therefore **thread-local**; a
+/// `Runtime` is a cheap-to-clone per-thread handle. The multi-device
+/// coordinator gives every device worker thread its *own* `Runtime`
+/// (its own PJRT client + compiled executable) — which also mirrors the
+/// paper's hardware reality: each IPU holds its own program copy.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Rc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`) on the
+    /// CPU PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            inner: Rc::new(RuntimeInner {
+                client,
+                manifest,
+                dir,
+                cache: RefCell::new(HashMap::new()),
+            }),
+        })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    /// PJRT platform name (always `"cpu"` on this image).
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.inner.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.inner.manifest.get(name)?;
+        let path = self.inner.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Parse(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.inner.client.compile(&computation)?);
+        self.inner
+            .cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load the ABC run executable for `batch` samples over `days` days.
+    pub fn abc(&self, batch: usize, days: usize) -> Result<AbcExecutable> {
+        self.abc_named(&format!("abc_b{batch}_d{days}"))
+    }
+
+    /// Load an ABC executable by exact artifact name (ablation variants
+    /// such as `abc_tf_b10000_d49`).
+    pub fn abc_named(&self, name: &str) -> Result<AbcExecutable> {
+        let entry = self.inner.manifest.get(name)?.clone();
+        if entry.kind != ArtifactKind::Abc {
+            return Err(Error::Parse(format!("artifact `{name}` is not an abc graph")));
+        }
+        Ok(AbcExecutable::new(self.load(name)?, entry))
+    }
+
+    /// Load the posterior-predictive executable (`batch` θ, `days` horizon).
+    pub fn predict(&self, batch: usize, days: usize) -> Result<PredictExecutable> {
+        let name = format!("predict_b{batch}_d{days}");
+        let entry = self.inner.manifest.get(&name)?.clone();
+        Ok(PredictExecutable::new(self.load(&name)?, entry))
+    }
+
+    /// Load the single-day validation executable.
+    pub fn onestep(&self, batch: usize) -> Result<OnestepExecutable> {
+        let name = format!("onestep_b{batch}");
+        let entry = self.inner.manifest.get(&name)?.clone();
+        Ok(OnestepExecutable::new(self.load(&name)?, entry))
+    }
+
+    /// ABC batch variants available for `days`, ascending (the
+    /// coordinator picks per-device batch sizes from what was compiled).
+    pub fn abc_batches(&self, days: usize) -> Vec<usize> {
+        let mut batches: Vec<usize> = self
+            .inner
+            .manifest
+            .artifacts()
+            .values()
+            .filter(|e| e.kind == ArtifactKind::Abc && e.days == days)
+            .map(|e| e.batch)
+            .collect();
+        batches.sort_unstable();
+        batches
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.inner.dir)
+            .field("artifacts", &self.inner.manifest.artifacts().len())
+            .finish()
+    }
+}
+
+/// Resolve the default artifacts directory: `$ABC_IPU_ARTIFACTS` if set,
+/// otherwise `./artifacts` searched upward from the current directory
+/// (so tests and benches work from target subdirectories).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("ABC_IPU_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..4 {
+        let candidate = cur.join("artifacts");
+        if candidate.join("manifest.json").exists() {
+            return candidate;
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts")
+}

@@ -1,0 +1,176 @@
+//! Fixed-bin histograms (Figs 8–9 posterior marginals).
+
+/// A fixed-range, equal-width histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    /// Values outside [lo, hi) (excluding hi itself, which folds into
+    /// the last bin).
+    outliers: u64,
+    total: u64,
+}
+
+impl Histogram {
+    /// `bins` equal-width bins over `[lo, hi]`. Panics if `bins == 0` or
+    /// `lo >= hi`.
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0, "need at least one bin");
+        assert!(lo < hi, "empty range [{lo}, {hi})");
+        Self { lo, hi, counts: vec![0; bins], outliers: 0, total: 0 }
+    }
+
+    /// Add one observation. `hi` itself lands in the last bin.
+    pub fn add(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo || x > self.hi || x.is_nan() {
+            self.outliers += 1;
+            return;
+        }
+        let n = self.counts.len();
+        let idx = (((x - self.lo) / (self.hi - self.lo)) * n as f64) as usize;
+        self.counts[idx.min(n - 1)] += 1;
+    }
+
+    /// Add a slice of observations.
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x as f64);
+        }
+    }
+
+    /// Per-bin counts.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Observations that fell outside the range.
+    pub fn outliers(&self) -> u64 {
+        self.outliers
+    }
+
+    /// Total observations added (including outliers).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Normalized bin heights (probability mass per bin; sums to the
+    /// in-range fraction).
+    pub fn density(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts.iter().map(|&c| c as f64 / self.total as f64).collect()
+    }
+
+    /// CSV rows `bin_center,count,density` (the Fig 8/9 series format).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("bin_center,count,density\n");
+        let d = self.density();
+        for i in 0..self.counts.len() {
+            out.push_str(&format!("{},{},{}\n", self.bin_center(i), self.counts[i], d[i]));
+        }
+        out
+    }
+
+    /// Crude modality probe: number of local maxima above `frac` of the
+    /// global maximum (used by tests mirroring the paper's uni-modal vs
+    /// bi-modal discussion of Fig 9).
+    pub fn modes(&self, frac: f64) -> usize {
+        let max = self.counts.iter().copied().max().unwrap_or(0);
+        if max == 0 {
+            return 0;
+        }
+        let thresh = (max as f64 * frac) as u64;
+        let n = self.counts.len();
+        (0..n)
+            .filter(|&i| {
+                let c = self.counts[i];
+                c >= thresh
+                    && (i == 0 || self.counts[i - 1] < c)
+                    && (i + 1 == n || self.counts[i + 1] <= c)
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_cover_range() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert_eq!(h.counts(), &[1u64; 10][..]);
+        assert_eq!(h.outliers(), 0);
+    }
+
+    #[test]
+    fn hi_edge_folds_into_last_bin() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add(1.0);
+        assert_eq!(h.counts()[3], 1);
+    }
+
+    #[test]
+    fn outliers_counted_not_binned() {
+        let mut h = Histogram::new(0.0, 1.0, 2);
+        h.add(-0.1);
+        h.add(1.1);
+        h.add(f64::NAN);
+        assert_eq!(h.outliers(), 3);
+        assert_eq!(h.counts().iter().sum::<u64>(), 0);
+        assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn density_sums_to_in_range_fraction() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add_all(&[0.1, 0.3, 0.6, 0.9, 2.0]);
+        let sum: f64 = h.density().iter().sum();
+        assert!((sum - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bin_centers() {
+        let h = Histogram::new(0.0, 1.0, 2);
+        assert!((h.bin_center(0) - 0.25).abs() < 1e-12);
+        assert!((h.bin_center(1) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn modality_probe() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        // two well-separated bumps
+        for _ in 0..50 {
+            h.add(2.5);
+            h.add(7.5);
+        }
+        assert_eq!(h.modes(0.5), 2);
+        // single bump
+        let mut h1 = Histogram::new(0.0, 10.0, 10);
+        for _ in 0..50 {
+            h1.add(5.5);
+        }
+        assert_eq!(h1.modes(0.5), 1);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut h = Histogram::new(0.0, 1.0, 3);
+        h.add(0.5);
+        let csv = h.to_csv();
+        assert!(csv.starts_with("bin_center,count,density\n"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+}

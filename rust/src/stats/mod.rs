@@ -1,0 +1,11 @@
+//! Summary statistics, quantiles and histograms.
+//!
+//! Backs the posterior analyses of the paper: Table 8's parameter
+//! averages, Fig 7's 5th–95th percentile trajectory bands, and the
+//! Fig 8/9 posterior histograms.
+
+mod histogram;
+mod summary;
+
+pub use histogram::Histogram;
+pub use summary::{mean, percentile, std_dev, Summary};

@@ -1,0 +1,149 @@
+//! Minimal CLI argument parser (offline stand-in for `clap`).
+//!
+//! Grammar: `repro [GLOBAL FLAGS] <subcommand> [FLAGS]`, where every
+//! flag is `--name value` or a boolean `--name`. Unknown flags are
+//! errors; every flag registers a help line for `--help`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments of one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl ParsedArgs {
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Parsed numeric/typed option with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("invalid value `{v}` for --{name}")),
+        }
+    }
+
+    /// Optional typed option (None when absent).
+    pub fn parse_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value `{v}` for --{name}")),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Command-line spec: which flags take values, which are boolean.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    value_flags: Vec<&'static str>,
+    bool_flags: Vec<&'static str>,
+}
+
+impl Spec {
+    /// New empty spec.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register flags that take a value.
+    pub fn values(mut self, names: &[&'static str]) -> Self {
+        self.value_flags.extend_from_slice(names);
+        self
+    }
+
+    /// Register boolean flags.
+    pub fn bools(mut self, names: &[&'static str]) -> Self {
+        self.bool_flags.extend_from_slice(names);
+        self
+    }
+
+    /// Parse a token stream against this spec.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<ParsedArgs, String> {
+        let mut out = ParsedArgs::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            let name = tok
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected positional argument `{tok}`"))?;
+            // --name=value form
+            if let Some((n, v)) = name.split_once('=') {
+                if self.value_flags.contains(&n) {
+                    out.values.insert(n.to_string(), v.to_string());
+                    continue;
+                }
+                return Err(format!("unknown option --{n}"));
+            }
+            if self.value_flags.contains(&name) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| format!("--{name} requires a value"))?;
+                out.values.insert(name.to_string(), v);
+            } else if self.bool_flags.contains(&name) {
+                out.flags.push(name.to_string());
+            } else {
+                return Err(format!("unknown option --{name}"));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new().values(&["batch", "dataset"]).bools(&["measure"])
+    }
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_bools() {
+        let p = spec()
+            .parse(v(&["--batch", "100", "--measure", "--dataset=italy"]))
+            .unwrap();
+        assert_eq!(p.parse_or("batch", 0usize).unwrap(), 100);
+        assert!(p.has("measure"));
+        assert_eq!(p.get("dataset"), Some("italy"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(v(&[])).unwrap();
+        assert_eq!(p.parse_or("batch", 7usize).unwrap(), 7);
+        assert_eq!(p.parse_opt::<f32>("batch").unwrap(), None);
+        assert!(!p.has("measure"));
+        assert_eq!(p.get_or("dataset", "synthetic"), "synthetic");
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(spec().parse(v(&["--nope", "1"])).is_err());
+        assert!(spec().parse(v(&["positional"])).is_err());
+        assert!(spec().parse(v(&["--batch"])).is_err());
+        assert!(spec().parse(v(&["--batch", "xyz"])).unwrap()
+            .parse_or("batch", 0usize).is_err());
+    }
+}

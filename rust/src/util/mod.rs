@@ -1,0 +1,9 @@
+//! Small in-tree substrates that would normally come from crates.
+//!
+//! This build environment is offline with only the `xla` dependency
+//! closure vendored, so the repo carries its own minimal JSON parser
+//! ([`json`]) and CLI argument parser ([`cli`]). Both are deliberately
+//! small, fully tested, and tailored to this project's needs.
+
+pub mod cli;
+pub mod json;

@@ -1,0 +1,64 @@
+//! Shared helpers for integration/property tests.
+//!
+//! Includes a tiny property-testing harness (offline stand-in for
+//! `proptest`): deterministic random case generation over `Xoshiro256`
+//! with first-failure reporting of the seed, so failures reproduce.
+
+use abc_ipu::rng::Xoshiro256;
+use std::path::PathBuf;
+
+/// Locate the artifacts directory for tests (repo root / env override).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ABC_IPU_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let mut dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    dir.push("artifacts");
+    dir
+}
+
+/// Whether the AOT artifacts are present (skip-guard for PJRT tests).
+pub fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Run `cases` random property cases; on failure, panic with the case
+/// seed so the exact case can be replayed.
+pub fn prop_cases<F: FnMut(&mut Xoshiro256)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xABC0_0000 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// A random θ uniform in the paper prior.
+pub fn random_theta(rng: &mut Xoshiro256) -> abc_ipu::model::Theta {
+    let prior = abc_ipu::model::Prior::paper();
+    prior.sample(rng)
+}
+
+/// A random `AbcRunOutput` with distances in [0, scale).
+pub fn random_run_output(
+    rng: &mut Xoshiro256,
+    batch: usize,
+    scale: f32,
+) -> abc_ipu::runtime::AbcRunOutput {
+    let thetas: Vec<f32> = (0..batch * 8).map(|_| rng.uniform() as f32).collect();
+    let distances: Vec<f32> = (0..batch).map(|_| rng.uniform() as f32 * scale).collect();
+    abc_ipu::runtime::AbcRunOutput { thetas, distances }
+}
+
+/// Brute-force reference accept set: indices with d <= tolerance.
+pub fn brute_force_accept(out: &abc_ipu::runtime::AbcRunOutput, tolerance: f32) -> Vec<u32> {
+    out.distances
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d <= tolerance)
+        .map(|(i, _)| i as u32)
+        .collect()
+}

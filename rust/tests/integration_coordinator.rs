@@ -1,0 +1,210 @@
+//! Integration tests of the full coordinator over PJRT: determinism
+//! across device counts and return strategies, stop rules, SMC-ABC,
+//! and agreement with the CPU baseline.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+mod common;
+
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::{AcceptedSample, Coordinator, StopRule};
+use abc_ipu::data::{synthetic, Dataset};
+use abc_ipu::model::Prior;
+use common::{artifacts_dir, have_artifacts};
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn dataset() -> Dataset {
+    synthetic::default_dataset(16, 0x5eed)
+}
+
+fn config(devices: usize, strategy: ReturnStrategy, tolerance: f32) -> RunConfig {
+    RunConfig {
+        dataset: "synthetic".into(),
+        tolerance: Some(tolerance),
+        devices,
+        batch_per_device: 1000,
+        days: 16,
+        return_strategy: strategy,
+        seed: 0xFEED,
+        ..Default::default()
+    }
+}
+
+fn ids(samples: &[AcceptedSample]) -> Vec<(u64, u32)> {
+    samples.iter().map(|s| (s.run, s.index)).collect()
+}
+
+/// A tolerance that accepts a workable fraction on the synthetic set.
+fn tolerance() -> f32 {
+    dataset().default_tolerance * 20.0
+}
+
+#[test]
+fn exact_runs_deterministic_across_device_counts() {
+    require_artifacts!();
+    let tol = tolerance();
+    let mut reference: Option<Vec<(u64, u32)>> = None;
+    for devices in [1usize, 2, 4] {
+        let cfg = config(devices, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
+        let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+        let r = coord.run_exact(6).unwrap();
+        assert_eq!(r.metrics.runs, 6);
+        let got = ids(&r.accepted);
+        assert!(!got.is_empty(), "tolerance too tight for the test");
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => assert_eq!(&got, want, "devices={devices}"),
+        }
+    }
+}
+
+#[test]
+fn exact_runs_deterministic_across_return_strategies() {
+    require_artifacts!();
+    let tol = tolerance();
+    let strategies = [
+        ReturnStrategy::Outfeed { chunk: 1000 },
+        ReturnStrategy::Outfeed { chunk: 100 },
+        ReturnStrategy::Outfeed { chunk: 17 },
+        // k=1000 = whole batch: top-k cannot drop accepted samples
+        ReturnStrategy::TopK { k: 1000 },
+    ];
+    let mut reference: Option<Vec<(u64, u32)>> = None;
+    for strategy in strategies {
+        let cfg = config(2, strategy, tol);
+        let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+        let r = coord.run_exact(6).unwrap();
+        let got = ids(&r.accepted);
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => assert_eq!(&got, want, "strategy {strategy:?}"),
+        }
+    }
+}
+
+#[test]
+fn accepted_samples_all_satisfy_tolerance_and_prior() {
+    require_artifacts!();
+    let tol = tolerance();
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 250 }, tol);
+    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let r = coord.run_exact(4).unwrap();
+    let prior = Prior::paper();
+    for s in &r.accepted {
+        assert!(s.distance <= tol);
+        assert!(prior.contains(&s.theta));
+        assert!(s.run < 4);
+        assert!((s.index as usize) < 1000);
+    }
+    // sorted by (run, index)
+    let mut sorted = ids(&r.accepted);
+    sorted.sort_unstable();
+    assert_eq!(sorted, ids(&r.accepted));
+}
+
+#[test]
+fn run_until_reaches_target() {
+    require_artifacts!();
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 500 }, tolerance());
+    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let r = coord.run(StopRule::AcceptedTarget(10)).unwrap();
+    assert!(r.accepted.len() >= 10, "got {}", r.accepted.len());
+    assert!(r.metrics.runs >= 1);
+    assert!(r.metrics.samples_simulated >= r.metrics.runs * 1000);
+}
+
+#[test]
+fn budget_exhaustion_is_an_error() {
+    require_artifacts!();
+    let mut cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, 1e-3); // impossible ε
+    cfg.max_runs = 3;
+    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let err = coord.run(StopRule::AcceptedTarget(5)).unwrap_err().to_string();
+    assert!(err.contains("budget"), "{err}");
+}
+
+#[test]
+fn missing_batch_artifact_propagates_from_workers() {
+    require_artifacts!();
+    let mut cfg = config(2, ReturnStrategy::Outfeed { chunk: 10 }, tolerance());
+    cfg.batch_per_device = 777; // not compiled
+    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let err = coord.run_exact(1).unwrap_err().to_string();
+    assert!(err.contains("abc_b777_d16"), "{err}");
+}
+
+#[test]
+fn metrics_account_for_conditional_transfers() {
+    require_artifacts!();
+    // tight-ish tolerance: most chunks skipped
+    let tol = dataset().default_tolerance * 3.0;
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 50 }, tol);
+    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let r = coord.run_exact(4).unwrap();
+    let m = &r.metrics;
+    assert_eq!(m.transfers + m.transfers_skipped, 4 * (1000 / 50));
+    assert!(m.transfer_skip_rate() > 0.5, "skip rate {}", m.transfer_skip_rate());
+    // conditional outfeed must beat the full-array volume
+    assert!(m.bytes_to_host < 4 * 1000 * 9 * 4);
+}
+
+#[test]
+fn cpu_baseline_and_accelerator_agree_statistically() {
+    require_artifacts!();
+    let ds = dataset();
+    let tol = tolerance();
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
+    let coord = Coordinator::new(artifacts_dir(), cfg, ds.clone(), Prior::paper()).unwrap();
+    let accel = coord.run_exact(10).unwrap();
+    let cpu = abc_ipu::abc::cpu::run_until(&ds, &Prior::paper(), tol, 1000, accel.accepted.len(), 99, 10);
+    assert!(!accel.accepted.is_empty() && !cpu.accepted.is_empty());
+    // acceptance rates should agree within a generous factor
+    let ra = accel.metrics.samples_accepted as f64 / accel.metrics.samples_simulated as f64;
+    let rc = cpu.metrics.samples_accepted as f64 / cpu.metrics.samples_simulated as f64;
+    assert!(
+        ra / rc < 3.0 && rc / ra < 3.0,
+        "acceptance rates diverge: accel {ra:.4e} vs cpu {rc:.4e}"
+    );
+}
+
+#[test]
+fn smc_tolerances_strictly_decrease_and_posteriors_tighten() {
+    require_artifacts!();
+    let ds = dataset();
+    let cfg = RunConfig {
+        dataset: "synthetic".into(),
+        tolerance: Some(tolerance()),
+        devices: 2,
+        batch_per_device: 1000,
+        days: 16,
+        return_strategy: ReturnStrategy::Outfeed { chunk: 1000 },
+        seed: 0xFEED,
+        max_runs: 300,
+        ..Default::default()
+    };
+    let smc_cfg = abc_ipu::abc::smc::SmcConfig {
+        stages: 2,
+        samples_per_stage: 15,
+        quantile: 0.5,
+        box_margin: 0.3,
+    };
+    let result = abc_ipu::abc::smc::run_smc(artifacts_dir(), cfg, ds, &smc_cfg).unwrap();
+    assert_eq!(result.stages.len(), 3);
+    let tols = result.tolerances();
+    for w in tols.windows(2) {
+        assert!(w[1] < w[0], "tolerances must decrease: {tols:?}");
+    }
+    // final stage distances all under the final tolerance
+    let last = result.final_posterior();
+    for s in last.samples() {
+        assert!(s.distance <= tols[tols.len() - 1]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Integration tests over the PJRT runtime: load compiled artifacts,
+//! execute them, and validate against the pure-Rust reference model.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+mod common;
+
+use abc_ipu::model::{InitialCondition, Prior, Simulator, Theta};
+use abc_ipu::rng::Xoshiro256;
+use abc_ipu::runtime::Runtime;
+use common::{artifacts_dir, have_artifacts};
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn ic() -> InitialCondition {
+    InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 }
+}
+
+fn observed_16() -> Vec<f32> {
+    // deterministic synthetic observation over 16 days
+    let theta: Theta = [0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83];
+    let mut rng = Xoshiro256::seed_from(7);
+    Simulator::new(ic()).trajectory(&theta, 16, &mut rng)
+}
+
+#[test]
+fn abc_run_shapes_and_prior_bounds() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let exe = rt.abc(1000, 16).unwrap();
+    assert_eq!(exe.batch(), 1000);
+    let prior = Prior::paper();
+    let out = exe
+        .run([1, 2], &observed_16(), prior.low(), prior.high(), &ic().to_consts())
+        .unwrap();
+    assert_eq!(out.batch(), 1000);
+    assert_eq!(out.thetas.len(), 8000);
+    for i in 0..out.batch() {
+        assert!(prior.contains(&out.theta(i)), "sample {i} escaped prior");
+    }
+    for &d in &out.distances {
+        assert!(d.is_finite() && d >= 0.0);
+    }
+}
+
+#[test]
+fn abc_run_deterministic_in_key_and_distinct_across_keys() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let exe = rt.abc(1000, 16).unwrap();
+    let prior = Prior::paper();
+    let obs = observed_16();
+    let consts = ic().to_consts();
+    let a = exe.run([5, 6], &obs, prior.low(), prior.high(), &consts).unwrap();
+    let b = exe.run([5, 6], &obs, prior.low(), prior.high(), &consts).unwrap();
+    assert_eq!(a.thetas, b.thetas);
+    assert_eq!(a.distances, b.distances);
+    let c = exe.run([5, 7], &obs, prior.low(), prior.high(), &consts).unwrap();
+    assert_ne!(a.thetas, c.thetas);
+}
+
+#[test]
+fn onestep_matches_rust_model_bitwise() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let exe = rt.onestep(256).unwrap();
+    let b = exe.batch();
+    let prior = Prior::paper();
+    let mut rng = Xoshiro256::seed_from(42);
+    let consts = ic().to_consts();
+
+    // random states/thetas/noise, same inputs through both paths
+    let mut states = Vec::with_capacity(b * 6);
+    let mut thetas = Vec::with_capacity(b * 8);
+    let mut zs = Vec::with_capacity(b * 5);
+    let mut rust_next = Vec::with_capacity(b * 6);
+    for _ in 0..b {
+        let theta = prior.sample(&mut rng);
+        let state = ic().init_state(&theta);
+        let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
+        let next = abc_ipu::model::step(&state, &theta, &z, consts[3]);
+        states.extend_from_slice(&state);
+        thetas.extend_from_slice(&theta);
+        zs.extend_from_slice(&z);
+        rust_next.extend_from_slice(&next);
+    }
+    let got = exe.run(&states, &thetas, &zs, &consts).unwrap();
+    // identical op ordering (see kernels/ref.py + model/mod.rs) => exact
+    let mut max_rel = 0f32;
+    for (i, (&g, &w)) in got.iter().zip(&rust_next).enumerate() {
+        let rel = (g - w).abs() / w.abs().max(1.0);
+        assert!(rel < 1e-5, "elem {i}: hlo={g} rust={w}");
+        max_rel = max_rel.max(rel);
+    }
+    // the vast majority must be exactly equal
+    let exact = got.iter().zip(&rust_next).filter(|(g, w)| g == w).count();
+    assert!(
+        exact as f64 / got.len() as f64 > 0.99,
+        "only {exact}/{} bitwise equal (max rel err {max_rel})",
+        got.len()
+    );
+}
+
+#[test]
+fn predict_anchors_day0_and_respects_shapes() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let exe = rt.predict(128, 49).unwrap();
+    let theta: Theta = [0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83];
+    let mut thetas = Vec::with_capacity(128 * 8);
+    for _ in 0..128 {
+        thetas.extend_from_slice(&theta);
+    }
+    let traj = exe.run([3, 4], &thetas, &ic().to_consts()).unwrap();
+    assert_eq!(traj.len(), 128 * 3 * 49);
+    for b in 0..128 {
+        let base = b * 3 * 49;
+        assert_eq!(traj[base], 155.0, "A day0 of rollout {b}");
+        assert_eq!(traj[base + 49], 2.0, "R day0");
+        assert_eq!(traj[base + 2 * 49], 3.0, "D day0");
+        // cumulative compartments monotone
+        for t in 1..49 {
+            assert!(traj[base + 49 + t] >= traj[base + 49 + t - 1], "R monotone");
+            assert!(traj[base + 2 * 49 + t] >= traj[base + 2 * 49 + t - 1], "D monotone");
+        }
+    }
+}
+
+#[test]
+fn abc_distances_respond_to_prior_quality() {
+    // narrow prior around the generating theta must score much lower
+    // median distance than the wide paper prior — the signal ABC needs.
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let exe = rt.abc(1000, 16).unwrap();
+    let obs = observed_16();
+    let consts = ic().to_consts();
+    let gen_theta: Theta = [0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83];
+
+    let wide = Prior::paper();
+    let narrow_low: Theta = std::array::from_fn(|i| (gen_theta[i] - 1e-3).max(0.0));
+    let narrow_high: Theta = std::array::from_fn(|i| gen_theta[i] + 1e-3);
+    let narrow = Prior::new(narrow_low, narrow_high).unwrap();
+
+    let median = |mut xs: Vec<f32>| -> f32 {
+        xs.sort_by(f32::total_cmp);
+        xs[xs.len() / 2]
+    };
+    let d_wide = median(
+        exe.run([8, 1], &obs, wide.low(), wide.high(), &consts).unwrap().distances,
+    );
+    let d_narrow = median(
+        exe.run([8, 1], &obs, narrow.low(), narrow.high(), &consts).unwrap().distances,
+    );
+    assert!(
+        d_narrow < d_wide / 2.0,
+        "narrow-prior median {d_narrow} not well below wide-prior {d_wide}"
+    );
+}
+
+#[test]
+fn shape_mismatch_is_caught_before_pjrt() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let exe = rt.abc(1000, 16).unwrap();
+    let prior = Prior::paper();
+    let too_short = vec![0.0f32; 3 * 10]; // 10 days instead of 16
+    let err = exe
+        .run([0, 0], &too_short, prior.low(), prior.high(), &ic().to_consts())
+        .unwrap_err();
+    assert!(err.to_string().contains("observed"), "{err}");
+}
+
+#[test]
+fn missing_artifact_error_is_actionable() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let err = rt.abc(123_456, 49).unwrap_err().to_string();
+    assert!(err.contains("abc_b123456_d49") && err.contains("make artifacts"));
+}
+
+#[test]
+fn runtime_caches_compiled_executables() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let t0 = std::time::Instant::now();
+    rt.load("abc_b1000_d16").unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    rt.load("abc_b1000_d16").unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 10, "cache miss on second load: {first:?} vs {second:?}");
+}
+
+
+#[test]
+fn autotune_picks_a_compiled_batch() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let observed = observed_16();
+    let result = abc_ipu::coordinator::autotune_batch(
+        &rt, &observed, &ic().to_consts(), 16, f64::INFINITY, 1,
+    )
+    .unwrap();
+    let batches = rt.abc_batches(16);
+    assert!(batches.contains(&result.best_batch));
+    assert_eq!(result.points.len(), batches.len());
+    for p in &result.points {
+        assert!(p.time_per_run > 0.0 && p.per_sample > 0.0);
+    }
+}
+
+#[test]
+fn abc_named_rejects_non_abc_artifacts() {
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let err = rt.abc_named("onestep_b256").unwrap_err().to_string();
+    assert!(err.contains("not an abc graph"), "{err}");
+}
+
+#[test]
+fn rng_ablation_variants_statistically_agree() {
+    // fast-hash and threefry artifacts must produce interchangeable
+    // distance distributions (same model, different bit source).
+    require_artifacts!();
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let Ok(tf) = rt.abc_named("abc_tf_b10000_d49") else {
+        eprintln!("skipping: threefry ablation artifact not built");
+        return;
+    };
+    let fast = rt.abc(10_000, 49).unwrap();
+    let ds = abc_ipu::data::synthetic::default_dataset(49, 0x5eed);
+    let observed = ds.observed.flatten();
+    let consts = ds.consts();
+    let prior = Prior::paper();
+    let med = |mut xs: Vec<f32>| -> f32 {
+        xs.sort_by(f32::total_cmp);
+        xs[xs.len() / 2]
+    };
+    let m_fast = med(fast.run([3, 1], &observed, prior.low(), prior.high(), &consts)
+        .unwrap().distances);
+    let m_tf = med(tf.run([3, 1], &observed, prior.low(), prior.high(), &consts)
+        .unwrap().distances);
+    let ratio = (m_fast / m_tf) as f64;
+    assert!((0.8..1.25).contains(&ratio), "median distance ratio {ratio}");
+}
+
+#[test]
+fn bundled_jhu_sample_parses_and_onset_aligns() {
+    // guards the offline sample under data/jhu_sample/ that the
+    // jhu_workflow example depends on
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("data/jhu_sample");
+    if !dir.exists() {
+        eprintln!("skipping: bundled JHU sample missing");
+        return;
+    }
+    let jhu = abc_ipu::data::jhu::JhuDataset::load_dir(&dir).unwrap();
+    for (country, pop) in [("Italy", 60_360_000.0f32), ("US", 331_000_000.0),
+                           ("New Zealand", 4_920_000.0)] {
+        let ds = jhu
+            .country_dataset(country, pop, 49, abc_ipu::data::jhu::ONSET_THRESHOLD)
+            .unwrap_or_else(|e| panic!("{country}: {e}"));
+        assert_eq!(ds.days(), 49);
+        // onset rule: day-0 cumulative >= 100
+        let day0 = ds.observed.active[0] + ds.observed.recovered[0] + ds.observed.deaths[0];
+        assert!(day0 >= 100.0, "{country} day0 {day0}");
+        // cumulative monotonicity
+        for t in 1..49 {
+            assert!(ds.observed.recovered[t] >= ds.observed.recovered[t - 1]);
+            assert!(ds.observed.deaths[t] >= ds.observed.deaths[t - 1]);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Property tests for the coordinator's routing/batching/accept-reject
+//! invariants (hand-rolled harness; see `common::prop_cases`).
+//!
+//! The paper's correctness claim for the parallel ABC design (§3) is
+//! that *no sample-return strategy changes the accepted set* (outfeed
+//! chunking of any size; top-k with sufficient k) — only transfer
+//! volume and host work differ. These properties pin that down.
+
+mod common;
+
+use abc_ipu::coordinator::{chunk_batch, filter_transfer, top_k_selection, Transfer};
+use abc_ipu::metrics::RunMetrics;
+use common::{brute_force_accept, prop_cases, random_run_output};
+
+#[test]
+fn prop_chunking_partitions_the_batch() {
+    prop_cases("chunk partition", 200, |rng| {
+        let batch = 1 + rng.below(500) as usize;
+        let chunk = 1 + rng.below(batch as u64) as usize;
+        let tol = rng.uniform() as f32;
+        let out = random_run_output(rng, batch, 1.0);
+        let (chunks, skipped) = chunk_batch(&out, chunk, tol);
+        let expected_chunks = batch.div_ceil(chunk) as u64;
+        assert_eq!(chunks.len() as u64 + skipped, expected_chunks);
+        // chunk offsets are aligned and lengths within bounds
+        for c in &chunks {
+            assert_eq!(c.offset as usize % chunk, 0);
+            assert!(c.len() <= chunk);
+            assert_eq!(c.thetas.len(), c.len() * 8);
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_accept_set_equals_brute_force() {
+    prop_cases("chunked accept = brute force", 200, |rng| {
+        let batch = 1 + rng.below(400) as usize;
+        let chunk = 1 + rng.below(batch as u64) as usize;
+        let tol = (rng.uniform() * 0.5) as f32;
+        let out = random_run_output(rng, batch, 1.0);
+        let (chunks, _) = chunk_batch(&out, chunk, tol);
+        let mut accepted = Vec::new();
+        filter_transfer(&Transfer::Chunks(chunks), tol, 3, 7, &mut accepted);
+        let got: Vec<u32> = accepted.iter().map(|s| s.index).collect();
+        assert_eq!(got, brute_force_accept(&out, tol));
+        // θ payload must match the original rows
+        for s in &accepted {
+            let i = s.index as usize;
+            assert_eq!(s.theta[..], out.thetas[i * 8..(i + 1) * 8]);
+            assert_eq!(s.distance, out.distances[i]);
+            assert_eq!((s.device, s.run), (3, 7));
+        }
+    });
+}
+
+#[test]
+fn prop_chunk_size_invariance() {
+    prop_cases("accept set invariant in chunk size", 100, |rng| {
+        let batch = 2 + rng.below(300) as usize;
+        let tol = (rng.uniform() * 0.3) as f32;
+        let out = random_run_output(rng, batch, 1.0);
+        let mut reference: Option<Vec<u32>> = None;
+        for chunk in [1usize, 7, batch / 2 + 1, batch] {
+            let (chunks, _) = chunk_batch(&out, chunk, tol);
+            let mut acc = Vec::new();
+            filter_transfer(&Transfer::Chunks(chunks), tol, 0, 0, &mut acc);
+            let ids: Vec<u32> = acc.iter().map(|s| s.index).collect();
+            match &reference {
+                None => reference = Some(ids),
+                Some(r) => assert_eq!(&ids, r, "chunk={chunk}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_topk_equals_brute_force_when_k_sufficient() {
+    prop_cases("top-k = brute force when k >= count", 200, |rng| {
+        let batch = 1 + rng.below(300) as usize;
+        let tol = (rng.uniform() * 0.2) as f32;
+        let out = random_run_output(rng, batch, 1.0);
+        let brute = brute_force_accept(&out, tol);
+        let sel = top_k_selection(&out, brute.len().max(1), tol);
+        assert_eq!(sel.accepted_count as usize, brute.len());
+        let mut acc = Vec::new();
+        filter_transfer(&Transfer::TopK(sel), tol, 0, 0, &mut acc);
+        let mut got: Vec<u32> = acc.iter().map(|s| s.index).collect();
+        got.sort_unstable();
+        assert_eq!(got, brute);
+    });
+}
+
+#[test]
+fn prop_topk_undersized_k_loses_at_most_count_minus_k() {
+    prop_cases("top-k drops exactly count-k when undersized", 200, |rng| {
+        let batch = 2 + rng.below(300) as usize;
+        let k = 1 + rng.below(8) as usize;
+        let tol = (rng.uniform() * 0.5) as f32;
+        let out = random_run_output(rng, batch, 1.0);
+        let brute = brute_force_accept(&out, tol).len();
+        let sel = top_k_selection(&out, k, tol);
+        assert_eq!(sel.accepted_count as usize, brute, "device count stays exact");
+        let mut acc = Vec::new();
+        filter_transfer(&Transfer::TopK(sel), tol, 0, 0, &mut acc);
+        // distances returned are the k smallest -> accepted iff under tol
+        assert_eq!(acc.len(), brute.min(k));
+    });
+}
+
+#[test]
+fn prop_topk_selection_is_minimal() {
+    prop_cases("top-k distances are the k smallest", 150, |rng| {
+        let batch = 2 + rng.below(300) as usize;
+        let k = (1 + rng.below(batch as u64 / 2 + 1)) as usize;
+        let out = random_run_output(rng, batch, 1.0);
+        let sel = top_k_selection(&out, k, 0.5);
+        let mut sorted = out.distances.clone();
+        sorted.sort_by(f32::total_cmp);
+        assert_eq!(sel.distances, sorted[..k.min(batch)]);
+        for w in sel.distances.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    });
+}
+
+#[test]
+fn prop_transfer_bytes_never_exceed_full_batch() {
+    prop_cases("conditional outfeed never inflates traffic", 150, |rng| {
+        let batch = 1 + rng.below(400) as usize;
+        let chunk = 1 + rng.below(batch as u64) as usize;
+        let tol = (rng.uniform() * 0.5) as f32;
+        let out = random_run_output(rng, batch, 1.0);
+        let (chunks, _) = chunk_batch(&out, chunk, tol);
+        let bytes: u64 = chunks.iter().map(|c| c.wire_bytes()).sum();
+        let full = (batch * 9 * 4) as u64;
+        assert!(bytes <= full, "chunked {bytes} > unchunked {full}");
+    });
+}
+
+#[test]
+fn prop_metrics_merge_is_commutative_monoid() {
+    prop_cases("metrics merge commutative + identity", 100, |rng| {
+        let mut rand_metrics = |rng: &mut abc_ipu::rng::Xoshiro256| RunMetrics {
+            runs: rng.below(100),
+            samples_simulated: rng.below(1_000_000),
+            samples_accepted: rng.below(1_000),
+            total: std::time::Duration::from_nanos(rng.below(1 << 30)),
+            device_exec: std::time::Duration::from_nanos(rng.below(1 << 30)),
+            host_postproc: std::time::Duration::from_nanos(rng.below(1 << 20)),
+            bytes_to_host: rng.below(1 << 40),
+            transfers: rng.below(1_000),
+            transfers_skipped: rng.below(1_000),
+        };
+        let a = rand_metrics(rng);
+        let b = rand_metrics(rng);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        let mut id = a.clone();
+        id.merge(&RunMetrics::default());
+        assert_eq!(id, a);
+    });
+}

@@ -1,0 +1,200 @@
+//! Property tests on the model, prior, stats and hwmodel invariants.
+
+mod common;
+
+use abc_ipu::hwmodel::{DeviceSpec, Workload};
+use abc_ipu::model::{
+    euclidean_distance, hazard, response_rate, state_idx, step, InitialCondition, Prior,
+};
+use abc_ipu::stats::{percentile, Histogram, Summary};
+use common::{prop_cases, random_theta};
+
+fn random_ic(rng: &mut abc_ipu::rng::Xoshiro256) -> InitialCondition {
+    InitialCondition {
+        a0: 100.0 + rng.uniform() as f32 * 900.0,
+        r0: rng.uniform() as f32 * 50.0,
+        d0: rng.uniform() as f32 * 50.0,
+        population: 1e5 + rng.uniform() as f32 * 3e8,
+    }
+}
+
+#[test]
+fn prop_step_conserves_population_and_nonnegativity() {
+    prop_cases("tau-leap conservation", 150, |rng| {
+        let theta = random_theta(rng);
+        let ic = random_ic(rng);
+        let mut state = ic.init_state(&theta);
+        for _ in 0..30 {
+            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
+            state = step(&state, &theta, &z, ic.population);
+            let total: f32 = state.iter().sum();
+            assert!(
+                (total - ic.population).abs() / ic.population < 1e-4,
+                "population drift: {total} vs {}",
+                ic.population
+            );
+            for (i, &v) in state.iter().enumerate() {
+                assert!(v >= 0.0, "compartment {i} negative: {state:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cumulative_compartments_monotone() {
+    prop_cases("R/D/Ru monotone", 100, |rng| {
+        let theta = random_theta(rng);
+        let ic = random_ic(rng);
+        let mut state = ic.init_state(&theta);
+        let mut prev = state;
+        for _ in 0..30 {
+            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
+            state = step(&state, &theta, &z, ic.population);
+            for comp in [state_idx::R, state_idx::D, state_idx::RU] {
+                assert!(state[comp] >= prev[comp], "compartment {comp} decreased");
+            }
+            prev = state;
+        }
+    });
+}
+
+#[test]
+fn prop_response_rate_decreasing_in_cases() {
+    prop_cases("g decreasing in observed total", 200, |rng| {
+        let theta = random_theta(rng);
+        let a = rng.uniform() as f32 * 1e5;
+        let scale = 1.0 + rng.uniform() as f32 * 10.0;
+        let g1 = response_rate(&theta, a, 0.0, 0.0);
+        let g2 = response_rate(&theta, a * scale + 1.0, 0.0, 0.0);
+        assert!(
+            g2 <= g1 + 1e-4,
+            "g must not increase with cases: g({a})={g1} g({})={g2}",
+            a * scale + 1.0
+        );
+        // and bounded: alpha0 <= g <= alpha0 + alpha
+        assert!(g1 >= theta[0] - 1e-5 && g1 <= theta[0] + theta[1] + 1e-3);
+    });
+}
+
+#[test]
+fn prop_hazard_nonnegative_and_linear_in_state() {
+    prop_cases("hazard sane", 150, |rng| {
+        let theta = random_theta(rng);
+        let ic = random_ic(rng);
+        let state = ic.init_state(&theta);
+        let h = hazard(&state, &theta, ic.population);
+        for (i, &v) in h.iter().enumerate() {
+            assert!(v >= 0.0 && v.is_finite(), "hazard {i} = {v}");
+        }
+        // gamma*I and beta*A exactly
+        assert!((h[1] - theta[4] * state[state_idx::I]).abs() <= 1e-2 * h[1].max(1.0));
+        assert!((h[2] - theta[3] * state[state_idx::A]).abs() <= 1e-2 * h[2].max(1.0));
+    });
+}
+
+#[test]
+fn prop_prior_sample_contains_roundtrip() {
+    prop_cases("prior sample within box", 200, |rng| {
+        let base = Prior::paper();
+        let center = base.sample(rng);
+        let halves: [f32; 8] = std::array::from_fn(|_| rng.uniform() as f32);
+        let shrunk = base.shrink_around(&center, &halves);
+        let s = shrunk.sample(rng);
+        assert!(shrunk.contains(&s));
+        assert!(base.contains(&s), "shrunk prior escaped the parent box");
+        assert!(shrunk.volume() <= base.volume() + 1e-9);
+    });
+}
+
+#[test]
+fn prop_euclidean_distance_metric_axioms() {
+    prop_cases("distance symmetry/identity", 200, |rng| {
+        let n = 3 * (1 + rng.below(40) as usize);
+        let a: Vec<f32> = (0..n).map(|_| rng.uniform() as f32 * 100.0).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.uniform() as f32 * 100.0).collect();
+        assert_eq!(euclidean_distance(&a, &b), euclidean_distance(&b, &a));
+        assert_eq!(euclidean_distance(&a, &a), 0.0);
+        assert!(euclidean_distance(&a, &b) >= 0.0);
+    });
+}
+
+#[test]
+fn prop_percentile_monotone_in_p() {
+    prop_cases("percentile monotone", 150, |rng| {
+        let n = 1 + rng.below(200) as usize;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 10.0).collect();
+        let mut prev = f64::NEG_INFINITY;
+        for p in [0.0, 5.0, 25.0, 50.0, 75.0, 95.0, 100.0] {
+            let v = percentile(&xs, p);
+            assert!(v >= prev, "percentile({p}) = {v} < {prev}");
+            prev = v;
+        }
+        let s = Summary::of(&xs);
+        assert!(s.min <= s.median && s.median <= s.max);
+    });
+}
+
+#[test]
+fn prop_histogram_conserves_counts() {
+    prop_cases("histogram total conservation", 150, |rng| {
+        let bins = 1 + rng.below(40) as usize;
+        let mut h = Histogram::new(-5.0, 5.0, bins);
+        let n = rng.below(500);
+        for _ in 0..n {
+            h.add(rng.normal_f32() as f64 * 3.0);
+        }
+        let binned: u64 = h.counts().iter().sum();
+        assert_eq!(binned + h.outliers(), n);
+        assert_eq!(h.total(), n);
+    });
+}
+
+#[test]
+fn prop_hwmodel_time_monotone_in_batch() {
+    prop_cases("time/run nondecreasing in batch", 50, |rng| {
+        for spec in [DeviceSpec::tesla_v100(), DeviceSpec::xeon_gold_6248()] {
+            let b1 = 1_000 + rng.below(400_000) as usize;
+            let b2 = b1 + 1 + rng.below(400_000) as usize;
+            let t1 = spec.time_per_run(&Workload::analytic(b1, 49)).unwrap();
+            let t2 = spec.time_per_run(&Workload::analytic(b2, 49)).unwrap();
+            assert!(t2 >= t1, "{}: t({b2})={t2} < t({b1})={t1}", spec.name);
+        }
+    });
+}
+
+#[test]
+fn prop_hwmodel_faster_device_never_slower() {
+    prop_cases("architectural dominance", 50, |rng| {
+        let base = DeviceSpec::tesla_v100();
+        let mut better = base.clone();
+        better.achieved_frac *= 1.0 + rng.uniform();
+        better.t_fixed *= rng.uniform().max(0.01);
+        let b = 10_000 + rng.below(900_000) as usize;
+        let w = Workload::analytic(b, 49);
+        assert!(better.time_per_run(&w).unwrap() <= base.time_per_run(&w).unwrap());
+    });
+}
+
+#[test]
+fn prop_json_config_roundtrip() {
+    prop_cases("RunConfig JSON roundtrip", 100, |rng| {
+        let batch = 1 + rng.below(100_000) as usize;
+        let cfg = abc_ipu::config::RunConfig {
+            dataset: format!("ds{}", rng.below(100)),
+            tolerance: if rng.below(2) == 0 { None } else { Some(rng.uniform() as f32 * 1e5 + 1.0) },
+            accepted_samples: 1 + rng.below(1_000) as usize,
+            devices: 1 + rng.below(16) as usize,
+            batch_per_device: batch,
+            days: 1 + rng.below(120) as usize,
+            return_strategy: if rng.below(2) == 0 {
+                abc_ipu::config::ReturnStrategy::Outfeed { chunk: 1 + rng.below(batch as u64) as usize }
+            } else {
+                abc_ipu::config::ReturnStrategy::TopK { k: 1 + rng.below(batch as u64) as usize }
+            },
+            seed: rng.next_u64() >> 12,
+            max_runs: rng.below(10_000),
+        };
+        let parsed = abc_ipu::config::RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed, cfg);
+    });
+}
