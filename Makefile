@@ -1,0 +1,48 @@
+# abc-ipu — build / test / artifact entry points.
+#
+# `make artifacts` is the only target that needs Python (JAX): it
+# AOT-lowers the batched ABC graphs to HLO text + manifest.json for the
+# `pjrt` cargo feature. Everything else is pure cargo.
+
+ARTIFACTS_DIR ?= $(CURDIR)/artifacts
+PYTHON ?= python3
+
+.PHONY: build test doc examples bench artifacts artifacts-quick fmt clean
+
+## cargo build --release (native backend, zero external deps)
+build:
+	cargo build --release
+
+## tier-1: release build + full test suite
+test: build
+	cargo test -q
+
+## rustdoc with warnings denied (the CI contract)
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+## compile every example against the native backend
+examples:
+	cargo build --release --examples
+
+## run the in-tree bench suites (native parts; PJRT parts need
+## --features pjrt + artifacts)
+bench:
+	cargo bench
+
+## AOT-lower the XLA graphs (HLO text + manifest) for --features pjrt.
+## Referenced by lib.rs and the integration tests; requires jax.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out $(ARTIFACTS_DIR)
+
+## smaller artifact set for CI-scale machines (16-day variants etc.)
+artifacts-quick:
+	cd python && $(PYTHON) -m compile.aot --out $(ARTIFACTS_DIR) --quick
+
+## formatting gate (advisory until the tree is rustfmt-clean)
+fmt:
+	cargo fmt --all --check
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS_DIR) reports

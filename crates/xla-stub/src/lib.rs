@@ -1,0 +1,184 @@
+//! Compile-only stub of the `xla-rs` PJRT bindings.
+//!
+//! The `abc_ipu` crate's `pjrt` feature targets the external `xla` crate
+//! (XLA/PJRT C++ bindings). That crate is not on crates.io and needs a
+//! multi-gigabyte XLA toolchain to build, so this workspace ships an
+//! **API stub** under the same crate name: every type and method the
+//! runtime layer touches exists with the right signature, and every
+//! entry point that would reach real PJRT returns [`Error`] with an
+//! actionable message instead.
+//!
+//! Consequences:
+//!
+//! * `cargo build --features pjrt` always compiles, everywhere.
+//! * `Runtime::open(...)` fails at **run time** with a clear message
+//!   unless a real `xla` build is substituted (patch the `xla` path
+//!   dependency in `rust/Cargo.toml` to point at an xla-rs checkout).
+//! * Integration tests that need PJRT skip cleanly: they gate both on
+//!   `artifacts/manifest.json` existing *and* on a PJRT client opening
+//!   (`abc_ipu::runtime::pjrt_usable()`, always `false` here), so a
+//!   stub build with artifacts present skips instead of panicking.
+//!
+//! The stub is intentionally minimal — it mirrors only the surface used
+//! by `abc_ipu::runtime` (client, loaded executable, literal, HLO text
+//! loading), not all of xla-rs.
+
+use std::borrow::BorrowMut;
+use std::fmt;
+
+/// Error type mirroring `xla::Error`: a message, nothing more.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    /// The canonical "this is only a stub" failure.
+    pub fn stub() -> Self {
+        Error(
+            "the `xla` crate in this build is a compile-only API stub; \
+             PJRT execution is unavailable. Point the `xla` path \
+             dependency at a real xla-rs build, or use the default \
+             native backend (no feature flags)"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry (subset used by abc-ipu).
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for u32 {}
+
+/// An HLO module parsed from text. Never constructible through the stub.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Real impl: parse HLO text into a module proto. Stub: always errs.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::stub())
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Real impl: wrap the proto. Unreachable through the stub because
+    /// no `HloModuleProto` can exist.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// A host-side tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Self {
+        Literal(())
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    /// Unpack a 1-tuple.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    /// Unpack a 2-tuple.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::stub())
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+}
+
+/// A device-resident buffer produced by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Synchronously transfer the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// A compiled, device-loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals; `[replica][output]`
+    /// buffers on success.
+    pub fn execute<L: BorrowMut<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// A PJRT client bound to one platform.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Real impl: open the CPU PJRT plugin. Stub: always errs — this is
+    /// the single gate every runtime path funnels through.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::stub())
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_open_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"));
+        assert!(err.contains("native backend"));
+    }
+
+    #[test]
+    fn hlo_text_loading_fails() {
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_surface_compiles_and_errs() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(Literal::vec1(&[1u32]).to_tuple1().is_err());
+    }
+}

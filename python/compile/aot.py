@@ -7,7 +7,7 @@ and Python never appears on the inference path again.
 Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
 jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
-and round-trips cleanly (see /opt/xla-example/README.md).
+and round-trips cleanly through the PJRT text parser.
 
 Besides the HLO files, this writes ``manifest.json`` describing every
 artifact (input/output shapes + dtypes, batch/days, analytic workload
@@ -157,7 +157,7 @@ def build(out_dir: str, quick: bool = False, rng: str = "fast") -> dict:
     jobs.append((f"abc_b1000_d16", functools.partial(lower_abc, 1000, 16, rng)))
     # RNG ablation artifact: same graph with the threefry generator, so
     # the fast-hash RNG can be A/B-validated end-to-end from Rust
-    # (bench `ablation_rng`, EXPERIMENTS.md §Perf).
+    # (bench `ablation_rng`, DESIGN.md §6).
     if not quick and rng != "threefry":
         jobs.append(("abc_tf_b10000_d49",
                      functools.partial(lower_abc, 10000, FIT_DAYS, "threefry")))

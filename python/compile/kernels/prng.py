@@ -1,6 +1,6 @@
 """Fast counter-based pseudo-random generation for the simulation path.
 
-Profiling (EXPERIMENTS.md §Perf) shows JAX's default threefry bit
+Profiling (bench `ablation_rng`, DESIGN.md §6) shows JAX's default threefry bit
 generation dominating the ABC run on CPU: ~56 ms of a 91 ms run at
 B=10k — the 20-round threefry chain costs ~40 int-ops per u32 where the
 simulation itself needs ~75 flops per sample-day total.

@@ -48,7 +48,7 @@ from . import ref
 #: Per-block VMEM at 10k: noise 49·10000·5·4 = 9.8 MB + θ/state < 1 MB —
 #: inside the 16 MB VMEM budget, and the larger block amortizes the
 #: per-grid-step machinery (measured 42.3 → 32.0 ms per 10k-sample run
-#: when going from 2k to 10k blocks; EXPERIMENTS.md §Perf).
+#: when going from 2k to 10k blocks; DESIGN.md §6).
 BLOCK_B = 10_000
 
 

@@ -76,7 +76,7 @@ def abc_run(key: jax.Array, observed: jnp.ndarray, prior_low: jnp.ndarray,
     theta = sample_prior(key, batch, prior_low, prior_high, rng=rng)
     # Transition-major noise layout [D, 5, B]: minor dimension = batch,
     # so the RNG fusion vectorizes and kernel lane reads are contiguous
-    # (EXPERIMENTS.md §Perf: 70 ms → 18 ms for the noise stage at B=10k).
+    # (bench `hot_path`, DESIGN.md §6: 70 ms → 18 ms for the noise stage at B=10k).
     if rng == "fast":
         noise = prng.normal(key, (days, 5, batch), prng.SALT_NOISE)
     else:
@@ -111,7 +111,7 @@ def onestep(state: jnp.ndarray, theta: jnp.ndarray, z: jnp.ndarray,
 # Workload statistics for the hardware performance model (hwmodel/).
 # These are analytic counts of the per-run work, used by the Rust roofline
 # model to project Xeon / V100 / Mk1-IPU runtimes from the measured CPU
-# baseline (DESIGN.md §1). Counting convention: fused multiply-add = 2 flops.
+# baseline (DESIGN.md §6). Counting convention: fused multiply-add = 2 flops.
 # ---------------------------------------------------------------------------
 
 #: flops per sample-day of the tau-leap step: response g (~12: add, div,

@@ -1,18 +1,21 @@
-//! Ablation: fast counter-hash RNG vs threefry (EXPERIMENTS.md §Perf).
+//! Ablation: fast counter-hash RNG vs threefry (DESIGN.md §6).
 //!
 //! Runs the identical ABC graph compiled with both in-graph generators
 //! (`abc_b10000_d49` fast vs `abc_tf_b10000_d49` threefry) and compares
 //! per-run wall time and statistical behaviour (acceptance at a fixed
 //! tolerance must agree — the generators are interchangeable draws).
+//! PJRT-only: the ablation compares *compiled* RNG variants, so the
+//! suite skips without `--features pjrt` + artifacts.
 
 #[path = "harness.rs"]
 mod harness;
 
-use abc_ipu::data::synthetic;
-use abc_ipu::model::Prior;
-use abc_ipu::runtime::Runtime;
-
+#[cfg(feature = "pjrt")]
 fn main() {
+    use abc_ipu::data::synthetic;
+    use abc_ipu::model::Prior;
+    use abc_ipu::runtime::Runtime;
+
     if !harness::require_artifacts("ablation_rng") {
         return;
     }
@@ -56,4 +59,12 @@ fn main() {
         ));
     }
     suite.finish();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "skipping bench `ablation_rng`: compares compiled RNG variants; \
+         rebuild with --features pjrt and run `make artifacts`"
+    );
 }

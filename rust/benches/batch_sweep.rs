@@ -1,40 +1,39 @@
 //! Tables 2-3 / Fig 3: batch-size sweep.
 //!
-//! Measured: the compiled PJRT graph at every AOT-compiled batch size
-//! (time per run + normalized per-100k time, the Fig 3 series).
-//! Modeled: the V100 and Mk1 sweeps with memory/active-time columns.
+//! Measured: the native engine at its served batch ladder (and, with
+//! `--features pjrt` + artifacts, the compiled PJRT graph at every
+//! AOT-compiled batch size — time per run + normalized per-100k time,
+//! the Fig 3 series). Modeled: the V100 and Mk1 sweeps with
+//! memory/active-time columns.
 
 #[path = "harness.rs"]
 mod harness;
 
+use abc_ipu::backend::{AbcJob, Backend, NativeBackend};
 use abc_ipu::data::synthetic;
 use abc_ipu::hwmodel::{batch_sweep, DeviceSpec};
 use abc_ipu::model::Prior;
-use abc_ipu::runtime::Runtime;
 
 fn main() {
-    if !harness::require_artifacts("batch_sweep") {
-        return;
-    }
     let mut suite = harness::Suite::new("batch_sweep");
-    let rt = Runtime::open(harness::artifacts_dir()).expect("runtime");
     let ds = synthetic::default_dataset(49, 0x5eed);
     let observed = ds.observed.flatten();
     let consts = ds.consts();
     let prior = Prior::paper();
 
-    let batches = rt.abc_batches(49);
+    // measured: native engine across its advertised ladder
+    let backend = NativeBackend::new();
     let mut normalized = Vec::new();
-    for &b in &batches {
-        let exe = rt.abc(b, 49).expect("artifact");
+    for b in backend.abc_batches(49) {
+        let job = AbcJob::new(b, 49, observed.clone(), &prior, consts);
+        let mut engine = backend.open_engine(0, &job).expect("engine");
         let mut key = 0u32;
-        let iters = if b >= 100_000 { 3 } else { 5 };
-        suite.bench(format!("pjrt_abc_b{b}"), 1, iters, || {
+        let iters = if b >= 50_000 { 3 } else { 5 };
+        suite.bench(format!("native_abc_b{b}"), 1, iters, || {
             key += 1;
-            exe.run([key, 1], &observed, prior.low(), prior.high(), &consts)
-                .expect("run");
+            engine.run([key, 1]).expect("run");
         });
-        let m = suite.get(&format!("pjrt_abc_b{b}")).unwrap().mean_s;
+        let m = suite.get(&format!("native_abc_b{b}")).unwrap().mean_s;
         normalized.push((b, m / b as f64 * 100_000.0));
     }
     for (b, n) in &normalized {
@@ -49,6 +48,22 @@ fn main() {
          until the memory wall, GPU flat beyond 500k)",
         best.0
     ));
+
+    // measured: compiled PJRT graph at every AOT-compiled batch
+    #[cfg(feature = "pjrt")]
+    if harness::require_artifacts("batch_sweep (PJRT part)") {
+        let rt = abc_ipu::runtime::Runtime::open(harness::artifacts_dir()).expect("runtime");
+        for b in rt.abc_batches(49) {
+            let exe = rt.abc(b, 49).expect("artifact");
+            let mut key = 0u32;
+            let iters = if b >= 100_000 { 3 } else { 5 };
+            suite.bench(format!("pjrt_abc_b{b}"), 1, iters, || {
+                key += 1;
+                exe.run([key, 1], &observed, prior.low(), prior.high(), &consts)
+                    .expect("run");
+            });
+        }
+    }
 
     // model sweeps (Tables 2-3 shapes)
     for (name, spec, bs) in [

@@ -109,14 +109,21 @@ impl Suite {
 
 /// Locate artifacts (same logic as the library's default).
 pub fn artifacts_dir() -> std::path::PathBuf {
-    abc_ipu::runtime::default_artifacts_dir()
+    abc_ipu::backend::default_artifacts_dir()
 }
 
-/// Skip-guard for PJRT-dependent suites.
+/// Skip-guard for PJRT-dependent suites: artifacts must exist *and*
+/// PJRT must actually be executable (false under the stub `xla` crate,
+/// where artifacts can exist — `make artifacts` is pure Python).
 pub fn require_artifacts(suite: &str) -> bool {
-    let ok = artifacts_dir().join("manifest.json").exists();
-    if !ok {
+    if !abc_ipu::backend::have_artifacts(artifacts_dir()) {
         eprintln!("skipping bench `{suite}`: run `make artifacts` first");
+        return false;
     }
-    ok
+    #[cfg(feature = "pjrt")]
+    if !abc_ipu::runtime::pjrt_usable() {
+        eprintln!("skipping bench `{suite}`: PJRT unavailable in this build (stub `xla` crate)");
+        return false;
+    }
+    true
 }

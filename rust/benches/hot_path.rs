@@ -1,18 +1,19 @@
 //! Hot-path microbenchmarks (the §Perf working set).
 //!
 //! Covers every L3 component that sits on the per-run critical path:
-//! host RNG, scalar simulator (CPU baseline inner loop), chunk scan,
-//! top-k selection, transfer filtering, and the per-run PJRT dispatch
-//! overhead (empty-ish work vs large batch).
+//! host RNG, scalar simulator (CPU baseline inner loop), the native
+//! backend's batched run, chunk scan, top-k selection, transfer
+//! filtering, and (with `--features pjrt` + artifacts) the per-run PJRT
+//! dispatch overhead.
 
 #[path = "harness.rs"]
 mod harness;
 
+use abc_ipu::backend::{AbcJob, AbcRunOutput, Backend, NativeBackend};
 use abc_ipu::coordinator::{chunk_batch, filter_transfer, top_k_selection, Transfer};
 use abc_ipu::data::synthetic;
 use abc_ipu::model::{Prior, Simulator};
 use abc_ipu::rng::Xoshiro256;
-use abc_ipu::runtime::{AbcRunOutput, Runtime};
 
 fn main() {
     let mut suite = harness::Suite::new("hot_path");
@@ -35,6 +36,17 @@ fn main() {
         let _ = sim.distance(&theta, &observed, 49, &mut r2);
     });
 
+    // native backend: one batched run end-to-end (the default engine's
+    // per-run cost the coordinator sees)
+    let backend = NativeBackend::new();
+    let job = AbcJob::new(1_000, 49, observed.clone(), &prior, ds.consts());
+    let mut engine = backend.open_engine(0, &job).expect("engine");
+    let mut key = 0u32;
+    suite.bench("native_abc_run_b1000_d49", 1, 10, || {
+        key += 1;
+        engine.run([key, 0]).expect("run");
+    });
+
     // device-side return strategies over a 100k batch
     let mut r3 = Xoshiro256::seed_from(2);
     let out = AbcRunOutput {
@@ -55,8 +67,9 @@ fn main() {
     });
 
     // PJRT dispatch + execution across batch sizes → fixed-cost estimate
+    #[cfg(feature = "pjrt")]
     if harness::require_artifacts("hot_path (PJRT part)") {
-        let rt = Runtime::open(harness::artifacts_dir()).expect("runtime");
+        let rt = abc_ipu::runtime::Runtime::open(harness::artifacts_dir()).expect("runtime");
         let consts = ds.consts();
         let mut key = 0u32;
         for b in [1_000usize, 10_000] {

@@ -2,17 +2,17 @@
 //!
 //! Microbenchmarks the host-side halves (chunk scan + filter vs top-k
 //! select + filter) on realistic run outputs, then measures the
-//! in-coordinator numbers end-to-end.
+//! in-coordinator numbers end-to-end on the native backend.
 
 #[path = "harness.rs"]
 mod harness;
 
+use abc_ipu::backend::AbcRunOutput;
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::{chunk_batch, filter_transfer, top_k_selection, Coordinator, Transfer};
 use abc_ipu::data::synthetic;
 use abc_ipu::model::Prior;
 use abc_ipu::rng::Xoshiro256;
-use abc_ipu::runtime::AbcRunOutput;
 
 fn synthetic_output(batch: usize, accept_rate: f64, seed: u64) -> (AbcRunOutput, f32) {
     let mut rng = Xoshiro256::seed_from(seed);
@@ -47,36 +47,35 @@ fn main() {
         filter_transfer(&transfer, 0.5, 0, 0, &mut acc);
     });
 
-    // end-to-end measured postproc share per strategy (needs artifacts)
-    if harness::require_artifacts("postproc (end-to-end part)") {
-        let ds = synthetic::default_dataset(49, 0x5eed);
-        for (label, strategy) in [
-            ("outfeed_chunk_eq_batch", ReturnStrategy::Outfeed { chunk: 10_000 }),
-            ("outfeed_chunk_1k", ReturnStrategy::Outfeed { chunk: 1_000 }),
-            ("topk_5", ReturnStrategy::TopK { k: 5 }),
-        ] {
-            let cfg = RunConfig {
-                dataset: ds.name.clone(),
-                tolerance: Some(8.4e5), // pilot-scale ε (≈1e-3 acceptance)
-                devices: 2,
-                batch_per_device: 10_000,
-                days: 49,
-                return_strategy: strategy,
-                seed: 11,
-                max_runs: 0,
-                accepted_samples: 1,
-            };
-            let coord = Coordinator::new(harness::artifacts_dir(), cfg, ds.clone(),
-                                         Prior::paper()).expect("coordinator");
-            let r = coord.run_exact(4).expect("run");
-            suite.record(format!("e2e_postproc_{label}"),
-                         r.metrics.host_postproc.as_secs_f64());
-            suite.note(format!(
-                "{label}: postproc {:.3}% of total, {} to host",
-                r.metrics.postproc_fraction() * 100.0,
-                r.metrics.bytes_to_host
-            ));
-        }
+    // end-to-end measured postproc share per strategy (native backend)
+    let ds = synthetic::default_dataset(49, 0x5eed);
+    for (label, strategy) in [
+        ("outfeed_chunk_eq_batch", ReturnStrategy::Outfeed { chunk: 10_000 }),
+        ("outfeed_chunk_1k", ReturnStrategy::Outfeed { chunk: 1_000 }),
+        ("topk_5", ReturnStrategy::TopK { k: 5 }),
+    ] {
+        let cfg = RunConfig {
+            dataset: ds.name.clone(),
+            tolerance: Some(ds.default_tolerance * 4.0),
+            devices: 2,
+            batch_per_device: 10_000,
+            days: 49,
+            return_strategy: strategy,
+            seed: 11,
+            max_runs: 0,
+            accepted_samples: 1,
+            ..Default::default()
+        };
+        let coord =
+            Coordinator::native(cfg, ds.clone(), Prior::paper()).expect("coordinator");
+        let r = coord.run_exact(4).expect("run");
+        suite.record(format!("e2e_postproc_{label}"),
+                     r.metrics.host_postproc.as_secs_f64());
+        suite.note(format!(
+            "{label}: postproc {:.3}% of total, {} to host",
+            r.metrics.postproc_fraction() * 100.0,
+            r.metrics.bytes_to_host
+        ));
     }
     suite.finish();
 }

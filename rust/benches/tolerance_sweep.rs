@@ -1,8 +1,9 @@
 //! Fig 6: processing time vs tolerance (super-exponential growth).
 //!
 //! Sweeps a geometric tolerance ladder downward and measures wall time
-//! to a fixed number of accepted samples, reproducing the Fig 6 shape:
-//! near-flat at loose ε, exploding once acceptance collapses.
+//! to a fixed number of accepted samples on the native backend,
+//! reproducing the Fig 6 shape: near-flat at loose ε, exploding once
+//! acceptance collapses.
 
 #[path = "harness.rs"]
 mod harness;
@@ -13,16 +14,13 @@ use abc_ipu::data::synthetic;
 use abc_ipu::model::Prior;
 
 fn main() {
-    if !harness::require_artifacts("tolerance_sweep") {
-        return;
-    }
     let mut suite = harness::Suite::new("tolerance_sweep");
     let ds = synthetic::default_dataset(49, 0x5eed);
-    // pilot-scale anchor (≈1e-3 acceptance at 8.4e5 on this dataset)
-    let anchor = 8.4e5f32;
+    // anchor the ladder on the dataset's self-distance-derived ε
+    let anchor = ds.default_tolerance;
     let target = 20usize;
     let mut prev_time = None;
-    for (i, factor) in [2.0f32, 1.41, 1.0, 0.85, 0.75, 0.67].iter().enumerate() {
+    for (i, factor) in [4.0f32, 2.83, 2.0, 1.7, 1.5, 1.33].iter().enumerate() {
         let tol = anchor * factor;
         let cfg = RunConfig {
             dataset: ds.name.clone(),
@@ -34,9 +32,10 @@ fn main() {
             seed: 5,
             max_runs: 600,
             accepted_samples: target,
+            ..Default::default()
         };
-        let coord = Coordinator::new(harness::artifacts_dir(), cfg, ds.clone(),
-                                     Prior::paper()).expect("coordinator");
+        let coord = Coordinator::native(cfg, ds.clone(), Prior::paper())
+            .expect("coordinator");
         match coord.run_until(target) {
             Ok(r) => {
                 let secs = r.metrics.total.as_secs_f64();

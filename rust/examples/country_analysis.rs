@@ -5,8 +5,8 @@
 //! 1. pilot-calibrate the tolerance to this host's compute budget
 //!    (the paper hand-tunes ε per country against an IPU-pod budget —
 //!    see `abc::pilot` for the scaling rationale),
-//! 2. run the full parallel ABC coordinator over PJRT until the target
-//!    posterior samples are accepted (Table 8),
+//! 2. run the full parallel ABC coordinator until the target posterior
+//!    samples are accepted (Table 8),
 //! 3. simulate 120-day posterior-predictive trajectories with 5–95 %
 //!    bands (Fig 7),
 //! 4. emit posterior histograms (Figs 8–9),
@@ -14,34 +14,33 @@
 //! writing every table/series as CSV under `reports/`.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example country_analysis
+//! cargo run --release --example country_analysis
 //! ```
 //!
 //! Flags: `--samples N` (default 100), `--batch B` (default 10000),
-//! `--devices D` (default 4), `--rate R` (pilot acceptance, default 5e-4).
+//! `--devices D` (default 4), `--rate R` (pilot acceptance, default 5e-4),
+//! `--backend native|pjrt`.
 
 use abc_ipu::abc::{calibrate_tolerance, predict::predict, Posterior};
+use abc_ipu::backend;
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::Coordinator;
 use abc_ipu::data::embedded;
 use abc_ipu::model::{Prior, PARAM_NAMES};
 use abc_ipu::report::{fmt_secs, write_csv, Table};
-use abc_ipu::runtime::{default_artifacts_dir, Runtime};
 use abc_ipu::util::cli::Spec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> abc_ipu::Result<()> {
     let args = Spec::new()
-        .values(&["samples", "batch", "devices", "rate", "horizon"])
-        .parse(std::env::args().skip(1))
-        .map_err(anyhow::Error::msg)?;
-    let samples: usize = args.parse_or("samples", 100).map_err(anyhow::Error::msg)?;
-    let batch: usize = args.parse_or("batch", 10_000).map_err(anyhow::Error::msg)?;
-    let devices: usize = args.parse_or("devices", 4).map_err(anyhow::Error::msg)?;
-    let rate: f64 = args.parse_or("rate", 5e-4).map_err(anyhow::Error::msg)?;
-    let horizon: usize = args.parse_or("horizon", 120).map_err(anyhow::Error::msg)?;
+        .values(&["samples", "batch", "devices", "rate", "horizon", "backend"])
+        .parse(std::env::args().skip(1))?;
+    let samples: usize = args.parse_or("samples", 100)?;
+    let batch: usize = args.parse_or("batch", 10_000)?;
+    let devices: usize = args.parse_or("devices", 4)?;
+    let rate: f64 = args.parse_or("rate", 5e-4)?;
+    let horizon: usize = args.parse_or("horizon", 120)?;
 
-    let artifacts = default_artifacts_dir();
-    let runtime = Runtime::open(&artifacts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = backend::from_name(&args.get_or("backend", "native"), None)?;
     let mut table8 = Table::new(
         "Table 8: per-country tolerances, runtimes, posterior means",
         &["country", "ε (calibrated)", "runtime", "runs", "accepted", "alpha0", "alpha",
@@ -61,12 +60,12 @@ fn main() -> anyhow::Result<()> {
             accepted_samples: samples,
             tolerance: None,
             max_runs: 5_000,
+            ..Default::default()
         };
 
         // 1. pilot calibration (the scaled-down analogue of the paper's
         //    per-country hand tuning)
-        let pilot = calibrate_tolerance(&artifacts, &base, &dataset, rate, 2)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let pilot = calibrate_tolerance(engine.clone(), &base, &dataset, rate, 2)?;
         println!(
             "  pilot: median distance {:.3e}, min {:.3e} → ε = {:.3e} (target rate {:.1e})",
             pilot.median_distance, pilot.min_distance, pilot.tolerance, rate
@@ -75,9 +74,8 @@ fn main() -> anyhow::Result<()> {
         // 2. full inference
         let mut cfg = base.clone();
         cfg.tolerance = Some(pilot.tolerance);
-        let coord = Coordinator::new(&artifacts, cfg, dataset.clone(), Prior::paper())
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        let result = coord.run_until(samples).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let coord = Coordinator::new(engine.clone(), cfg, dataset.clone(), Prior::paper())?;
+        let result = coord.run_until(samples)?;
         let posterior = Posterior::new(result.accepted.clone());
         let m = &result.metrics;
         println!(
@@ -101,8 +99,7 @@ fn main() -> anyhow::Result<()> {
         table8.row(&row);
 
         // 3. posterior-predictive 120-day projection (Fig 7)
-        let pred = predict(&runtime, &posterior, &dataset.consts(), horizon, [0xF1, 0x67])
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let pred = predict(&*engine, &posterior, &dataset.consts(), horizon, [0xF1, 0x67], 200)?;
         let p = write_csv("reports", &format!("fig7_{}", dataset.name), &pred.to_csv())?;
         println!("  Fig 7 bands → {}", p.display());
         let last = horizon - 1;

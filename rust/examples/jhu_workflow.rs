@@ -8,35 +8,37 @@
 //! doubling time).
 //!
 //! ```text
-//! cargo run --release --example jhu_workflow [-- --dir data/jhu_sample --country Italy]
+//! cargo run --release --example jhu_workflow -- --country Italy
 //! ```
+//!
+//! Defaults to the bundled offline sample (`rust/data/jhu_sample/`,
+//! model-shaped curves in the real JHU column layout); point `--dir` at
+//! a directory with the three real
+//! `time_series_covid19_{confirmed,deaths,recovered}_global.csv` files
+//! to fit actual data.
 
 use abc_ipu::abc::{calibrate_tolerance, diagnose, Posterior};
+use abc_ipu::backend;
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::Coordinator;
 use abc_ipu::data::jhu::{JhuDataset, ONSET_THRESHOLD};
 use abc_ipu::model::{epi, Prior};
 use abc_ipu::report::fmt_secs;
-use abc_ipu::runtime::default_artifacts_dir;
 use abc_ipu::stats::percentile;
 use abc_ipu::util::cli::Spec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> abc_ipu::Result<()> {
     let args = Spec::new()
-        .values(&["dir", "country", "population", "samples"])
-        .parse(std::env::args().skip(1))
-        .map_err(anyhow::Error::msg)?;
-    let dir = args.get_or("dir", "data/jhu_sample");
+        .values(&["dir", "country", "population", "samples", "backend"])
+        .parse(std::env::args().skip(1))?;
+    let dir = args.get_or("dir", concat!(env!("CARGO_MANIFEST_DIR"), "/data/jhu_sample"));
     let country = args.get_or("country", "Italy");
-    let population: f32 = args.parse_or("population", 60_360_000.0)
-        .map_err(anyhow::Error::msg)?;
-    let samples: usize = args.parse_or("samples", 100).map_err(anyhow::Error::msg)?;
+    let population: f32 = args.parse_or("population", 60_360_000.0)?;
+    let samples: usize = args.parse_or("samples", 100)?;
 
     // 1. Parse the three JHU wide-format tables.
-    let jhu = JhuDataset::load_dir(&dir).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let dataset = jhu
-        .country_dataset(&country, population, 49, ONSET_THRESHOLD)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let jhu = JhuDataset::load_dir(&dir)?;
+    let dataset = jhu.country_dataset(&country, population, 49, ONSET_THRESHOLD)?;
     println!(
         "{}: onset-aligned 49 days; day0 A={} R={} D={}, day48 A={}",
         dataset.name,
@@ -57,18 +59,17 @@ fn main() -> anyhow::Result<()> {
         accepted_samples: samples,
         tolerance: None,
         max_runs: 3_000,
+        ..Default::default()
     };
-    let artifacts = default_artifacts_dir();
-    let pilot = calibrate_tolerance(&artifacts, &cfg, &dataset, 3e-4, 2)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let engine = backend::from_name(&args.get_or("backend", "native"), None)?;
+    let pilot = calibrate_tolerance(engine.clone(), &cfg, &dataset, 3e-4, 2)?;
     cfg.tolerance = Some(pilot.tolerance);
     println!("pilot ε = {:.3e} (prior median distance {:.3e})",
              pilot.tolerance, pilot.median_distance);
 
     let prior = Prior::paper();
-    let coord = Coordinator::new(&artifacts, cfg, dataset.clone(), prior.clone())
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let result = coord.run_until(samples).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let coord = Coordinator::new(engine, cfg, dataset.clone(), prior.clone())?;
+    let result = coord.run_until(samples)?;
     let posterior = Posterior::new(result.accepted.clone());
     println!(
         "accepted {} in {} ({} runs)",

@@ -1,23 +1,26 @@
 //! Parameter recovery: the strongest correctness check of the stack.
 //!
 //! Generates synthetic observations from the model at a known θ*, runs
-//! the full accelerated ABC + SMC-ABC refinement, and verifies the
-//! posterior concentrates around θ* for the identifiable parameters.
-//! (ABC posteriors are approximate — with a finite tolerance some
-//! parameters, e.g. η and κ, are only weakly identified from 49 days of
-//! (A, R, D); the test asserts coverage, not point equality.)
+//! the full parallel ABC + SMC-ABC refinement on the native backend,
+//! and verifies the posterior concentrates around θ* for the
+//! identifiable parameters. (ABC posteriors are approximate — with a
+//! finite tolerance some parameters, e.g. η and κ, are only weakly
+//! identified from 49 days of (A, R, D); the test asserts coverage, not
+//! point equality.)
 //!
 //! ```text
-//! make artifacts && cargo run --release --example parameter_recovery
+//! cargo run --release --example parameter_recovery
 //! ```
 
 use abc_ipu::abc::{calibrate_tolerance, smc, Posterior};
+use abc_ipu::backend::NativeBackend;
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::data::synthetic;
 use abc_ipu::model::{PARAM_NAMES, PRIOR_HIGH};
-use abc_ipu::runtime::default_artifacts_dir;
+use abc_ipu::Error;
+use std::sync::Arc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> abc_ipu::Result<()> {
     let theta_star = synthetic::DEFAULT_THETA_STAR;
     let dataset = synthetic::default_dataset(49, 0xD00D);
     println!("generating θ* = {theta_star:?}");
@@ -33,9 +36,11 @@ fn main() -> anyhow::Result<()> {
         seed: 0xABCD,
         max_runs: 600,
         accepted_samples: 50,
+        ..Default::default()
     };
+    let backend = Arc::new(NativeBackend::new());
     // stage-0 ε from a pilot over the full prior (acceptance ~2e-3)
-    let pilot = calibrate_tolerance(default_artifacts_dir(), &config, &dataset, 2e-3, 2)?;
+    let pilot = calibrate_tolerance(backend.clone(), &config, &dataset, 2e-3, 2)?;
     println!("pilot ε = {:.3e} (prior median {:.3e})", pilot.tolerance, pilot.median_distance);
     config.tolerance = Some(pilot.tolerance);
 
@@ -46,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         quantile: 0.5,
         box_margin: 0.3,
     };
-    let result = smc::run_smc(default_artifacts_dir(), config, dataset, &smc_cfg)?;
+    let result = smc::run_smc(backend, config, dataset, &smc_cfg)?;
 
     println!("\nSMC-ABC schedule:");
     for s in &result.stages {
@@ -95,10 +100,11 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nwell-identified parameters recovered: {well_identified_hits}/{well_identified_total}"
     );
-    anyhow::ensure!(
-        well_identified_hits >= well_identified_total - 1,
-        "posterior failed to concentrate around θ*"
-    );
+    if well_identified_hits < well_identified_total - 1 {
+        return Err(Error::Coordinator(
+            "posterior failed to concentrate around θ*".to_string(),
+        ));
+    }
     println!("parameter recovery PASSED");
     Ok(())
 }

@@ -1,22 +1,26 @@
 //! Quickstart: the minimal end-to-end use of the library.
 //!
-//! Loads the AOT-compiled ABC graph, runs the parallel coordinator on a
-//! synthetic dataset until 20 posterior samples are accepted, and
-//! prints the posterior summary.
+//! Runs the parallel coordinator on the default native backend (no
+//! artifacts or external dependencies needed) over a synthetic dataset
+//! until 20 posterior samples are accepted, and prints the posterior
+//! summary. Build with `--features pjrt` and pass
+//! `backend::from_name("pjrt", None)` instead to use the compiled-XLA
+//! path after `make artifacts`.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use abc_ipu::abc::{calibrate_tolerance, Posterior};
+use abc_ipu::backend::NativeBackend;
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::Coordinator;
 use abc_ipu::data::synthetic;
 use abc_ipu::model::Prior;
 use abc_ipu::report::fmt_secs;
-use abc_ipu::runtime::default_artifacts_dir;
+use std::sync::Arc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> abc_ipu::Result<()> {
     // 1. A dataset: here, synthetic ground truth simulated from the
     //    model itself at a known θ* (Italy-like initial condition).
     let dataset = synthetic::default_dataset(49, 0x5eed);
@@ -40,24 +44,26 @@ fn main() -> anyhow::Result<()> {
         return_strategy: ReturnStrategy::Outfeed { chunk: 1_000 },
         seed: 42,
         max_runs: 200,
+        ..Default::default()
     };
 
-    // 3. Calibrate the tolerance to this machine's budget with a pilot
+    // 3. The execution backend: native = pure-Rust tau-leaping engine.
+    let backend = Arc::new(NativeBackend::new());
+
+    // 4. Calibrate the tolerance to this machine's budget with a pilot
     //    run (the paper hand-tunes ε per dataset; see abc::pilot).
-    let artifacts = default_artifacts_dir();
-    let pilot = calibrate_tolerance(&artifacts, &config, &dataset, 1e-3, 2)?;
+    let pilot = calibrate_tolerance(backend.clone(), &config, &dataset, 1e-3, 2)?;
     println!(
         "pilot: median prior distance {:.3e} → ε = {:.3e}",
         pilot.median_distance, pilot.tolerance
     );
     config.tolerance = Some(pilot.tolerance);
 
-    // 4. Run the parallel ABC coordinator (Python is NOT involved —
-    //    workers execute the AOT-compiled XLA graph via PJRT).
-    let coordinator = Coordinator::new(artifacts, config, dataset, Prior::paper())?;
+    // 5. Run the parallel ABC coordinator.
+    let coordinator = Coordinator::new(backend, config, dataset, Prior::paper())?;
     let result = coordinator.run_until(20)?;
 
-    // 5. Inspect the posterior.
+    // 6. Inspect the posterior.
     let posterior = Posterior::new(result.accepted.clone());
     let m = &result.metrics;
     println!(

@@ -3,26 +3,29 @@
 //! Measures end-to-end throughput of the coordinator as the simulated
 //! device count grows (weak scaling: per-device batch fixed), for both
 //! chunked and unchunked outfeeds, side by side with the IPU-link
-//! scaling model's projection for real Mk1 hardware.
+//! scaling model's projection for real Mk1 hardware. Runs on the
+//! native backend; use `repro scale --backend pjrt` for the same
+//! measurement over compiled artifacts.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example scaling_study
+//! cargo run --release --example scaling_study
 //! ```
 
+use abc_ipu::backend::NativeBackend;
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::{Coordinator, StopRule};
 use abc_ipu::data::synthetic;
 use abc_ipu::hwmodel::{scaling_table, DeviceSpec, Workload};
 use abc_ipu::model::Prior;
 use abc_ipu::report::{fmt_secs, write_csv, Table};
-use abc_ipu::runtime::default_artifacts_dir;
+use std::sync::Arc;
 
 const BATCH: usize = 10_000;
 const RUNS_PER_DEVICE: u64 = 6;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> abc_ipu::Result<()> {
     let dataset = synthetic::default_dataset(49, 0x5eed);
-    let artifacts = default_artifacts_dir();
+    let backend = Arc::new(NativeBackend::new());
     let device_counts = [1usize, 2, 4, 8];
     let w = Workload::analytic(BATCH, 49);
 
@@ -46,8 +49,10 @@ fn main() -> anyhow::Result<()> {
                 seed: 7,
                 max_runs: 0,
                 accepted_samples: 1,
+                ..Default::default()
             };
-            let coord = Coordinator::new(&artifacts, cfg, dataset.clone(), Prior::paper())?;
+            let coord =
+                Coordinator::new(backend.clone(), cfg, dataset.clone(), Prior::paper())?;
             // fixed work per device → wall-clock should stay ~constant
             let runs = RUNS_PER_DEVICE * n as u64;
             let r = coord.run(StopRule::ExactRuns(runs))?;

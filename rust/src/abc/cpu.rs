@@ -1,13 +1,17 @@
 //! CPU baseline engine (Table 1's "2×CPU" rows).
 //!
 //! Runs the identical parallel-ABC dataflow — batched runs, tolerance
-//! filter, run-until-N-accepted — but simulates on the host with the
-//! pure-Rust scalar model instead of the compiled XLA graph. This is
-//! the comparator the paper's CPU rows represent (their original code
-//! ran on Xeon HPC clusters), and it doubles as an independent oracle:
-//! the accelerator path must produce statistically indistinguishable
-//! posteriors from this one.
+//! filter, run-until-N-accepted — as a single-threaded host loop. It
+//! shares [`crate::backend::native::abc_run`] with the native
+//! coordinator backend and derives run keys the same way the leader
+//! does (`SeedSequence::key(0, run)`), so for a given master seed this
+//! baseline produces the *bit-identical* sample stream the N-worker
+//! native coordinator produces — it is the exact oracle the
+//! `native_backend` integration suite compares against, and the
+//! measured comparator the paper's CPU rows represent (their original
+//! code ran on Xeon HPC clusters).
 
+use crate::backend::native::abc_run;
 use crate::coordinator::AcceptedSample;
 use crate::data::Dataset;
 use crate::metrics::{RunMetrics, Stopwatch};
@@ -25,6 +29,12 @@ pub struct CpuResult {
 
 /// Run batched ABC on the host until `target` samples are accepted (or
 /// `max_runs` is hit when non-zero).
+///
+/// Fits the dataset at its full stored length. For a matched comparison
+/// against a coordinator run (same ε, same stream), pass
+/// `dataset.truncated(cfg.days)` and the coordinator's
+/// `batch_per_device` — stream identity only holds for identical
+/// `(seed, batch, days, observed)`.
 pub fn run_until(
     dataset: &Dataset,
     prior: &Prior,
@@ -44,14 +54,14 @@ pub fn run_until(
     let total = Stopwatch::start();
     let mut run: u64 = 0;
     while accepted.len() < target && (max_runs == 0 || run < max_runs) {
-        let mut rng = seeds.host_rng(0).split_for_run(run);
+        // same key derivation as the coordinator's device workers
+        let key = seeds.key(0, run);
         let sw = Stopwatch::start();
-        for index in 0..batch {
-            let theta = prior.sample(&mut rng);
-            let d = sim.distance(&theta, &observed, days, &mut rng);
+        let out = abc_run(&sim, prior, &observed, days, batch, key);
+        for (index, &d) in out.distances.iter().enumerate() {
             if d <= tolerance {
                 accepted.push(AcceptedSample {
-                    theta,
+                    theta: out.theta(index),
                     distance: d,
                     device: 0,
                     run,
@@ -67,19 +77,6 @@ pub fn run_until(
     metrics.samples_accepted = accepted.len() as u64;
     metrics.total = total.elapsed();
     CpuResult { accepted, metrics }
-}
-
-/// Seed-routing helper: an independent RNG stream per run index.
-trait SplitForRun {
-    fn split_for_run(self, run: u64) -> Self;
-}
-
-impl SplitForRun for crate::rng::Xoshiro256 {
-    fn split_for_run(self, run: u64) -> Self {
-        crate::rng::Xoshiro256::seed_from(crate::rng::splitmix64(
-            0x5eed ^ run.wrapping_mul(0x9e37_79b9_7f4a_7c15),
-        ))
-    }
 }
 
 #[cfg(test)]
@@ -111,6 +108,15 @@ mod tests {
             assert_eq!(x.theta, y.theta);
             assert_eq!(x.distance, y.distance);
         }
+    }
+
+    #[test]
+    fn different_seeds_decorrelate() {
+        let ds = synthetic::default_dataset(16, 0);
+        let prior = Prior::paper();
+        let a = run_until(&ds, &prior, 1e9, 100, 10, 42, 0);
+        let b = run_until(&ds, &prior, 1e9, 100, 10, 43, 0);
+        assert_ne!(a.accepted[0].theta, b.accepted[0].theta);
     }
 
     #[test]

@@ -9,13 +9,14 @@
 //! acceptance rate. The tolerance→runtime *shape* (Fig 6) is then swept
 //! explicitly by `repro tolerance-sweep` / the `tolerance_sweep` bench.
 
+use crate::backend::Backend;
 use crate::config::{ReturnStrategy, RunConfig};
 use crate::coordinator::{Coordinator, StopRule};
 use crate::data::Dataset;
 use crate::model::Prior;
 use crate::stats::percentile;
 use crate::{Error, Result};
-use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Result of a pilot calibration.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,7 +38,7 @@ pub struct PilotCalibration {
 /// Runs `pilot_runs` full batches with ε = +∞ (every chunk transfers)
 /// and returns the `target_rate` quantile of the observed distances.
 pub fn calibrate_tolerance(
-    artifacts_dir: impl Into<PathBuf>,
+    backend: Arc<dyn Backend>,
     base: &RunConfig,
     dataset: &Dataset,
     target_rate: f64,
@@ -50,7 +51,7 @@ pub fn calibrate_tolerance(
     cfg.tolerance = Some(f32::MAX);
     cfg.return_strategy = ReturnStrategy::Outfeed { chunk: cfg.batch_per_device };
     cfg.max_runs = 0;
-    let coord = Coordinator::new(artifacts_dir, cfg, dataset.clone(), Prior::paper())?;
+    let coord = Coordinator::new(backend, cfg, dataset.clone(), Prior::paper())?;
     let result = coord.run(StopRule::ExactRuns(pilot_runs))?;
     let distances: Vec<f32> = result.accepted.iter().map(|s| s.distance).collect();
     if distances.is_empty() {
@@ -70,11 +71,33 @@ pub fn calibrate_tolerance(
 mod tests {
     use super::*;
 
+    fn native() -> Arc<dyn Backend> {
+        Arc::new(crate::backend::NativeBackend::new())
+    }
+
     #[test]
     fn rejects_bad_rate() {
         let ds = crate::data::synthetic::default_dataset(16, 0);
         let cfg = RunConfig::default();
-        assert!(calibrate_tolerance("artifacts", &cfg, &ds, 0.0, 1).is_err());
-        assert!(calibrate_tolerance("artifacts", &cfg, &ds, 1.5, 1).is_err());
+        assert!(calibrate_tolerance(native(), &cfg, &ds, 0.0, 1).is_err());
+        assert!(calibrate_tolerance(native(), &cfg, &ds, 1.5, 1).is_err());
+    }
+
+    #[test]
+    fn calibrates_on_native_backend() {
+        let ds = crate::data::synthetic::default_dataset(16, 0);
+        let cfg = RunConfig {
+            dataset: ds.name.clone(),
+            devices: 2,
+            batch_per_device: 500,
+            days: 16,
+            ..Default::default()
+        };
+        let cal = calibrate_tolerance(native(), &cfg, &ds, 0.05, 2).unwrap();
+        assert!(cal.tolerance > 0.0 && cal.tolerance.is_finite());
+        assert!(cal.tolerance as f64 <= cal.median_distance * 1.0001);
+        assert!(cal.min_distance <= cal.tolerance as f64);
+        // ExactRuns(2) = two runs total across the fleet
+        assert_eq!(cal.pilot_samples, 2 * 500);
     }
 }

@@ -1,13 +1,13 @@
 //! Posterior-predictive trajectory simulation (Fig 7).
 //!
 //! Takes accepted posterior samples, simulates one stochastic rollout
-//! per sample over a (longer) prediction horizon through the compiled
-//! `predict` artifact, and reduces to per-day percentile bands — the
-//! shaded 5th–95th envelope of the paper's Fig 7.
+//! per tiled sample over a (longer) prediction horizon through the
+//! backend's `predict` entry point, and reduces to per-day percentile
+//! bands — the shaded 5th–95th envelope of the paper's Fig 7.
 
 use super::Posterior;
+use crate::backend::Backend;
 use crate::model::N_PARAMS;
-use crate::runtime::Runtime;
 use crate::stats::percentile;
 use crate::{Error, Result};
 
@@ -61,45 +61,38 @@ impl Prediction {
 
 /// Simulate posterior-predictive trajectories and reduce to bands.
 ///
-/// Uses the `predict_b{B}_d{days}` artifact; posterior samples are tiled
-/// cyclically to fill the compiled batch (so every sample contributes at
-/// least ⌊B/n⌋ rollouts).
+/// Posterior θ rows are tiled cyclically to `rollouts` stochastic
+/// rollouts (so every sample contributes at least ⌊rollouts/n⌋), which
+/// on the PJRT backend also fills the compiled predict batch.
 pub fn predict(
-    runtime: &Runtime,
+    backend: &dyn Backend,
     posterior: &Posterior,
     consts: &[f32; 4],
     days: usize,
     key: [u32; 2],
+    rollouts: usize,
 ) -> Result<Prediction> {
     if posterior.is_empty() {
         return Err(Error::Coordinator("cannot predict from an empty posterior".into()));
     }
-    // find a compiled predict batch for this horizon
-    let batch = runtime
-        .manifest()
-        .artifacts()
-        .values()
-        .filter(|e| e.kind == crate::runtime::ArtifactKind::Predict && e.days == days)
-        .map(|e| e.batch)
-        .max()
-        .ok_or_else(|| Error::MissingArtifact(format!("predict_b*_d{days}")))?;
-    let exe = runtime.predict(batch, days)?;
-
-    // tile posterior θ rows cyclically into the compiled batch
+    if rollouts == 0 {
+        return Err(Error::Config("predict needs rollouts >= 1".into()));
+    }
+    // tile posterior θ rows cyclically into the requested rollout count
     let n = posterior.len();
     let thetas = posterior.theta_matrix();
-    let mut tiled = Vec::with_capacity(batch * N_PARAMS);
-    for i in 0..batch {
+    let mut tiled = Vec::with_capacity(rollouts * N_PARAMS);
+    for i in 0..rollouts {
         let s = i % n;
         tiled.extend_from_slice(&thetas[s * N_PARAMS..(s + 1) * N_PARAMS]);
     }
 
-    let traj = exe.run(key, &tiled, consts)?; // [batch, 3, days]
+    let traj = backend.predict(key, &tiled, consts, days)?; // [rollouts, 3, days]
     let band = |obs: usize| -> Band {
         let mut p5 = Vec::with_capacity(days);
         let mut p50 = Vec::with_capacity(days);
         let mut p95 = Vec::with_capacity(days);
-        let mut col = vec![0.0f32; batch];
+        let mut col = vec![0.0f32; rollouts];
         for t in 0..days {
             for (b, c) in col.iter_mut().enumerate() {
                 *c = traj[b * 3 * days + obs * days + t];
@@ -123,6 +116,9 @@ pub fn predict(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::AcceptedSample;
+    use crate::data::synthetic;
 
     #[test]
     fn csv_format() {
@@ -137,5 +133,47 @@ mod tests {
         let csv = p.to_csv();
         assert!(csv.starts_with("day,"));
         assert!(csv.contains("0,1,2,3,1,2,3,1,2,3"));
+    }
+
+    #[test]
+    fn native_prediction_bands_are_ordered_and_anchored() {
+        let ds = synthetic::default_dataset(16, 0x5eed);
+        let post = Posterior::new(vec![AcceptedSample {
+            theta: synthetic::DEFAULT_THETA_STAR,
+            distance: 1.0,
+            device: 0,
+            run: 0,
+            index: 0,
+        }]);
+        let backend = NativeBackend::new();
+        let days = 24;
+        let pred = predict(&backend, &post, &ds.consts(), days, [1, 2], 64).unwrap();
+        assert_eq!(pred.days, days);
+        assert_eq!(pred.samples, 1);
+        let consts = ds.consts();
+        // day 0 anchored to the initial condition → degenerate band
+        assert_eq!(pred.active.p5[0], consts[0] as f64);
+        assert_eq!(pred.active.p95[0], consts[0] as f64);
+        for t in 0..days {
+            assert!(pred.active.p5[t] <= pred.active.p50[t]);
+            assert!(pred.active.p50[t] <= pred.active.p95[t]);
+            assert!(pred.deaths.p5[t] <= pred.deaths.p95[t]);
+        }
+    }
+
+    #[test]
+    fn empty_posterior_and_zero_rollouts_rejected() {
+        let backend = NativeBackend::new();
+        let consts = [155.0, 2.0, 3.0, 6e7];
+        let empty = Posterior::new(vec![]);
+        assert!(predict(&backend, &empty, &consts, 10, [0, 0], 8).is_err());
+        let post = Posterior::new(vec![AcceptedSample {
+            theta: [0.5; 8],
+            distance: 1.0,
+            device: 0,
+            run: 0,
+            index: 0,
+        }]);
+        assert!(predict(&backend, &post, &consts, 10, [0, 0], 0).is_err());
     }
 }

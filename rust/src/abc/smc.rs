@@ -12,13 +12,14 @@
 //! documented in DESIGN.md §2).
 
 use super::Posterior;
+use crate::backend::Backend;
 use crate::config::RunConfig;
 use crate::coordinator::{Coordinator, StopRule};
 use crate::data::Dataset;
 use crate::model::{Prior, Theta, N_PARAMS};
 use crate::stats::percentile;
 use crate::{Error, Result};
-use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Configuration of an SMC-ABC schedule.
 #[derive(Debug, Clone, PartialEq)]
@@ -76,9 +77,9 @@ impl SmcResult {
     }
 }
 
-/// Run SMC-ABC on the accelerator coordinator.
+/// Run SMC-ABC on the parallel coordinator over any backend.
 pub fn run_smc(
-    artifacts_dir: impl Into<PathBuf>,
+    backend: Arc<dyn Backend>,
     base_config: RunConfig,
     dataset: Dataset,
     smc: &SmcConfig,
@@ -89,7 +90,6 @@ pub fn run_smc(
     if !(0.0..1.0).contains(&smc.quantile) {
         return Err(Error::Config(format!("quantile {} out of (0,1)", smc.quantile)));
     }
-    let artifacts_dir = artifacts_dir.into();
     let mut prior = Prior::paper();
     let mut tolerance = base_config
         .tolerance
@@ -102,7 +102,7 @@ pub fn run_smc(
         // deterministic but stage-distinct seeding
         cfg.seed = base_config.seed.wrapping_add(stage as u64);
         let coord =
-            Coordinator::new(artifacts_dir.clone(), cfg, dataset.clone(), prior.clone())?;
+            Coordinator::new(backend.clone(), cfg, dataset.clone(), prior.clone())?;
         let result = coord.run(StopRule::AcceptedTarget(smc.samples_per_stage))?;
         let posterior = Posterior::new(result.accepted.clone());
 
@@ -141,13 +141,17 @@ pub fn run_smc(
 mod tests {
     use super::*;
 
+    fn native() -> Arc<dyn Backend> {
+        Arc::new(crate::backend::NativeBackend::new())
+    }
+
     #[test]
     fn config_validation() {
         let smc = SmcConfig { samples_per_stage: 0, ..Default::default() };
         let ds = crate::data::synthetic::default_dataset(16, 0);
-        assert!(run_smc("artifacts", RunConfig::default(), ds.clone(), &smc).is_err());
+        assert!(run_smc(native(), RunConfig::default(), ds.clone(), &smc).is_err());
         let smc = SmcConfig { quantile: 1.5, ..Default::default() };
-        assert!(run_smc("artifacts", RunConfig::default(), ds, &smc).is_err());
+        assert!(run_smc(native(), RunConfig::default(), ds, &smc).is_err());
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Pluggable simulation backends: who executes a batched ABC run.
+//!
+//! The coordinator (leader + device workers) is agnostic about *how* a
+//! run `key → (thetas, distances)` is produced. This module defines the
+//! seam:
+//!
+//! * [`Backend`] — opens per-device [`AbcEngine`]s and serves the
+//!   posterior-predictive / one-step entry points. Object-safe, so the
+//!   coordinator holds an `Arc<dyn Backend>` and worker threads stay
+//!   generic over it.
+//! * [`AbcEngine`] — one device's engine: executes one batched ABC run
+//!   per call. Engines are opened *on the worker's own thread* (PJRT
+//!   clients are thread-local; the native engine just doesn't care).
+//! * [`NativeBackend`] — the default: the pure-Rust tau-leaping
+//!   simulator batched per worker thread, zero external dependencies.
+//! * `PjrtBackend` (behind the `pjrt` cargo feature) — the paper's
+//!   artifact path: AOT-compiled XLA graphs executed through PJRT.
+//!
+//! Reproducibility contract: a backend's ABC run must be a pure
+//! function of `(job, key)`. The coordinator derives keys from the
+//! *global run index* only, so for any conforming backend the sample
+//! stream is independent of device count and worker scheduling.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use crate::model::{Theta, N_PARAMS};
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Output of one ABC run: the full per-sample parameter and distance
+/// arrays (the fixed-shape outputs the paper's §3.2 discusses).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AbcRunOutput {
+    /// Sampled parameters, row-major `[batch, 8]`.
+    pub thetas: Vec<f32>,
+    /// Euclidean distances, `[batch]`.
+    pub distances: Vec<f32>,
+}
+
+impl AbcRunOutput {
+    /// Number of samples in this run.
+    pub fn batch(&self) -> usize {
+        self.distances.len()
+    }
+
+    /// θ of sample `i` as a fixed-size array.
+    pub fn theta(&self, i: usize) -> Theta {
+        let mut t = [0.0f32; N_PARAMS];
+        t.copy_from_slice(&self.thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
+        t
+    }
+}
+
+/// Everything that defines the problem one ABC engine is bound to —
+/// the quantities a compiled artifact bakes in at AOT time and the
+/// native path reads at run time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AbcJob {
+    /// Samples per run.
+    pub batch: usize,
+    /// Fit window in days.
+    pub days: usize,
+    /// Observed `[3, days]` block, row-major.
+    pub observed: Vec<f32>,
+    /// Prior box lower bounds.
+    pub prior_low: Theta,
+    /// Prior box upper bounds.
+    pub prior_high: Theta,
+    /// `(A0, R0, D0, P)` — initial condition + population.
+    pub consts: [f32; 4],
+}
+
+impl AbcJob {
+    /// Bind a job from its parts (the common construction shape).
+    pub fn new(
+        batch: usize,
+        days: usize,
+        observed: Vec<f32>,
+        prior: &crate::model::Prior,
+        consts: [f32; 4],
+    ) -> Self {
+        Self {
+            batch,
+            days,
+            observed,
+            prior_low: *prior.low(),
+            prior_high: *prior.high(),
+            consts,
+        }
+    }
+
+    /// Validate internal consistency (shapes, bounds).
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.days == 0 {
+            return Err(Error::Config(format!(
+                "abc job needs batch >= 1 and days >= 1 (got {}x{})",
+                self.batch, self.days
+            )));
+        }
+        if self.observed.len() != 3 * self.days {
+            return Err(Error::ShapeMismatch {
+                what: "observed".to_string(),
+                want: format!("{} elements", 3 * self.days),
+                got: format!("{} elements", self.observed.len()),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// One device's ABC engine: executes one batched run per call.
+///
+/// `run` must be a pure function of the key — calling it twice with the
+/// same key yields bit-identical output, and outputs for distinct keys
+/// are statistically independent.
+pub trait AbcEngine {
+    /// Batch size B of this engine.
+    fn batch(&self) -> usize;
+
+    /// Execute one run: sample B thetas from the job's prior box,
+    /// simulate, and return `(thetas, distances)`.
+    fn run(&mut self, key: [u32; 2]) -> Result<AbcRunOutput>;
+}
+
+/// An execution backend: per-device engines plus the non-ABC entry
+/// points (posterior prediction, one-step validation).
+///
+/// Implementations must be cheap to share (`Send + Sync`); per-thread
+/// state belongs in the engine, which is opened on the worker thread.
+pub trait Backend: Send + Sync + std::fmt::Debug {
+    /// Short name for logs and `repro info` ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Open the engine for `device`. Called on the worker's own thread.
+    fn open_engine(&self, device: u32, job: &AbcJob) -> Result<Box<dyn AbcEngine>>;
+
+    /// Posterior-predictive rollouts: one stochastic trajectory per θ
+    /// row of `thetas` (`[n, 8]` row-major), returned `[n, 3, days]`
+    /// row-major. Deterministic in `(key, thetas, consts, days)`.
+    fn predict(&self, key: [u32; 2], thetas: &[f32], consts: &[f32; 4], days: usize)
+        -> Result<Vec<f32>>;
+
+    /// Advance `states` (`[n, 6]`) one tau-leap day with explicit noise
+    /// `z` (`[n, 5]`) and parameters `thetas` (`[n, 8]`); all row-major.
+    /// The validation surface used to compare implementations bit-wise.
+    fn onestep(
+        &self,
+        states: &[f32],
+        thetas: &[f32],
+        z: &[f32],
+        consts: &[f32; 4],
+    ) -> Result<Vec<f32>>;
+
+    /// ABC batch variants this backend can serve for `days`, ascending.
+    /// For an artifact-based backend these are the compiled sizes; the
+    /// native backend is shape-free and advertises a representative
+    /// ladder for autotuning.
+    fn abc_batches(&self, days: usize) -> Vec<usize>;
+}
+
+/// Whether `name` names a backend this crate knows about — the single
+/// source of truth for the name set (`RunConfig::validate` delegates
+/// here, [`from_name`] resolves the same set).
+pub fn is_known(name: &str) -> bool {
+    matches!(name, "native" | "pjrt")
+}
+
+/// Resolve a backend by configuration name.
+///
+/// * `"native"` — the pure-Rust default, always available.
+/// * `"pjrt"` — the compiled-artifact path; errors unless the crate was
+///   built with `--features pjrt`. `artifacts_dir` (or the
+///   `ABC_IPU_ARTIFACTS` / `./artifacts` default) locates the AOT
+///   output.
+pub fn from_name(name: &str, artifacts_dir: Option<PathBuf>) -> Result<Arc<dyn Backend>> {
+    match name {
+        "native" => Ok(Arc::new(NativeBackend::new())),
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                let dir = artifacts_dir.unwrap_or_else(default_artifacts_dir);
+                Ok(Arc::new(PjrtBackend::new(dir)))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifacts_dir;
+                Err(Error::Config(
+                    "backend `pjrt` requires building with `--features pjrt`".to_string(),
+                ))
+            }
+        }
+        other => Err(Error::Config(format!(
+            "unknown backend `{other}` (expected `native` or `pjrt`)"
+        ))),
+    }
+}
+
+/// Resolve the default artifacts directory: `$ABC_IPU_ARTIFACTS` if set,
+/// otherwise `./artifacts` searched upward from the current directory
+/// (so tests and benches work from target subdirectories).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("ABC_IPU_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..4 {
+        let candidate = cur.join("artifacts");
+        if candidate.join("manifest.json").exists() {
+            return candidate;
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Whether an artifact directory looks usable (has a manifest).
+pub fn have_artifacts(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abc_output_theta_accessor() {
+        let out = AbcRunOutput {
+            thetas: (0..16).map(|i| i as f32).collect(),
+            distances: vec![1.0, 2.0],
+        };
+        assert_eq!(out.batch(), 2);
+        assert_eq!(out.theta(1), [8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn job_validation() {
+        let job = AbcJob {
+            batch: 10,
+            days: 4,
+            observed: vec![0.0; 12],
+            prior_low: [0.0; 8],
+            prior_high: [1.0; 8],
+            consts: [155.0, 2.0, 3.0, 6e7],
+        };
+        job.validate().unwrap();
+
+        let mut bad = job.clone();
+        bad.observed.truncate(5);
+        assert!(bad.validate().is_err());
+
+        let mut bad = job;
+        bad.batch = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn from_name_resolves_native() {
+        let b = from_name("native", None).unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn from_name_rejects_unknown() {
+        let err = from_name("tpu", None).unwrap_err().to_string();
+        assert!(err.contains("tpu"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_is_actionable() {
+        let err = from_name("pjrt", None).unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,296 @@
+//! The native backend: pure-Rust tau-leaping simulation on the host.
+//!
+//! This is the zero-dependency default. Each device worker thread gets
+//! its own [`AbcEngine`] wrapping the scalar [`Simulator`]; a run's
+//! entire randomness is derived from the run key by splitting the
+//! 64-bit key into a xoshiro256++ seed, so a run is a pure function of
+//! `(job, key)` — the same discipline the compiled threefry graphs
+//! follow, which is what makes N-worker runs bit-deterministic and lets
+//! the CPU baseline double as an exact oracle for the coordinator (see
+//! `abc::cpu`, which shares [`abc_run`]).
+//!
+//! Performance notes: the per-sample loop reuses the
+//! auto-vectorization-friendly `Simulator::distance` fused kernel (no
+//! trajectory materialization), and parallelism comes from the
+//! coordinator's device workers — one engine per thread, no intra-run
+//! threading to keep determinism trivial.
+
+use super::{AbcEngine, AbcJob, AbcRunOutput, Backend};
+use crate::model::{InitialCondition, Prior, Simulator, N_COMPARTMENTS, N_PARAMS, N_TRANSITIONS};
+use crate::rng::{splitmix64, Xoshiro256};
+use crate::{Error, Result};
+
+/// The pure-Rust host backend (the default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    /// Create the native backend.
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+/// Initial condition from the `(A0, R0, D0, P)` consts layout.
+fn initial_condition(consts: &[f32; 4]) -> InitialCondition {
+    InitialCondition {
+        a0: consts[0],
+        r0: consts[1],
+        d0: consts[2],
+        population: consts[3],
+    }
+}
+
+/// Fold a `u32[2]` run key into one 64-bit word.
+#[inline]
+fn key_u64(key: [u32; 2]) -> u64 {
+    ((key[0] as u64) << 32) | key[1] as u64
+}
+
+/// The host RNG for a run key: all of a native run's randomness flows
+/// from here, so the run is a pure function of the key.
+pub fn key_rng(key: [u32; 2]) -> Xoshiro256 {
+    Xoshiro256::seed_from(splitmix64(key_u64(key)))
+}
+
+/// One batched ABC run from a run key: sample `batch` θ from `prior`,
+/// simulate `days`, return `(thetas, distances)`.
+///
+/// Shared verbatim by the native coordinator engine and the `abc::cpu`
+/// baseline — by construction the two produce bit-identical streams for
+/// the same key, which the `native_backend` integration suite pins down.
+pub fn abc_run(
+    sim: &Simulator,
+    prior: &Prior,
+    observed: &[f32],
+    days: usize,
+    batch: usize,
+    key: [u32; 2],
+) -> AbcRunOutput {
+    let mut rng = key_rng(key);
+    let mut thetas = Vec::with_capacity(batch * N_PARAMS);
+    let mut distances = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let theta = prior.sample(&mut rng);
+        distances.push(sim.distance(&theta, observed, days, &mut rng));
+        thetas.extend_from_slice(&theta);
+    }
+    AbcRunOutput { thetas, distances }
+}
+
+/// One worker's native engine: owns the simulator and the job binding.
+struct NativeEngine {
+    sim: Simulator,
+    prior: Prior,
+    observed: Vec<f32>,
+    days: usize,
+    batch: usize,
+}
+
+impl AbcEngine for NativeEngine {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run(&mut self, key: [u32; 2]) -> Result<AbcRunOutput> {
+        Ok(abc_run(
+            &self.sim,
+            &self.prior,
+            &self.observed,
+            self.days,
+            self.batch,
+            key,
+        ))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn open_engine(&self, _device: u32, job: &AbcJob) -> Result<Box<dyn AbcEngine>> {
+        job.validate()?;
+        Ok(Box::new(NativeEngine {
+            sim: Simulator::new(initial_condition(&job.consts)),
+            prior: Prior::new(job.prior_low, job.prior_high)?,
+            observed: job.observed.clone(),
+            days: job.days,
+            batch: job.batch,
+        }))
+    }
+
+    fn predict(
+        &self,
+        key: [u32; 2],
+        thetas: &[f32],
+        consts: &[f32; 4],
+        days: usize,
+    ) -> Result<Vec<f32>> {
+        if days == 0 || thetas.is_empty() || thetas.len() % N_PARAMS != 0 {
+            return Err(Error::ShapeMismatch {
+                what: "predict thetas".to_string(),
+                want: format!("non-empty multiple of {N_PARAMS} (days >= 1)"),
+                got: format!("{} elements over {days} days", thetas.len()),
+            });
+        }
+        let n = thetas.len() / N_PARAMS;
+        let sim = Simulator::new(initial_condition(consts));
+        let mut out = Vec::with_capacity(n * 3 * days);
+        for i in 0..n {
+            let mut theta = [0.0f32; N_PARAMS];
+            theta.copy_from_slice(&thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
+            // independent stream per rollout, deterministic in (key, i)
+            let mut rng = Xoshiro256::seed_from(splitmix64(key_u64(key) ^ splitmix64(i as u64)));
+            out.extend_from_slice(&sim.trajectory(&theta, days, &mut rng));
+        }
+        Ok(out)
+    }
+
+    fn onestep(
+        &self,
+        states: &[f32],
+        thetas: &[f32],
+        z: &[f32],
+        consts: &[f32; 4],
+    ) -> Result<Vec<f32>> {
+        if states.is_empty() || states.len() % N_COMPARTMENTS != 0 {
+            return Err(Error::ShapeMismatch {
+                what: "onestep states".to_string(),
+                want: format!("non-empty multiple of {N_COMPARTMENTS}"),
+                got: format!("{} elements", states.len()),
+            });
+        }
+        let n = states.len() / N_COMPARTMENTS;
+        if thetas.len() != n * N_PARAMS || z.len() != n * N_TRANSITIONS {
+            return Err(Error::ShapeMismatch {
+                what: "onestep thetas/z".to_string(),
+                want: format!("{} / {} elements", n * N_PARAMS, n * N_TRANSITIONS),
+                got: format!("{} / {} elements", thetas.len(), z.len()),
+            });
+        }
+        let mut out = Vec::with_capacity(states.len());
+        for i in 0..n {
+            let mut state = [0.0f32; N_COMPARTMENTS];
+            state.copy_from_slice(&states[i * N_COMPARTMENTS..(i + 1) * N_COMPARTMENTS]);
+            let mut theta = [0.0f32; N_PARAMS];
+            theta.copy_from_slice(&thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
+            let mut noise = [0.0f32; N_TRANSITIONS];
+            noise.copy_from_slice(&z[i * N_TRANSITIONS..(i + 1) * N_TRANSITIONS]);
+            out.extend_from_slice(&crate::model::step(&state, &theta, &noise, consts[3]));
+        }
+        Ok(out)
+    }
+
+    fn abc_batches(&self, _days: usize) -> Vec<usize> {
+        // shape-free: any batch works; this ladder feeds the autotuner
+        vec![1_000, 4_000, 16_000, 64_000]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn job(batch: usize) -> AbcJob {
+        let ds = synthetic::default_dataset(16, 0x5eed);
+        let prior = Prior::paper();
+        AbcJob {
+            batch,
+            days: 16,
+            observed: ds.observed.flatten(),
+            prior_low: *prior.low(),
+            prior_high: *prior.high(),
+            consts: ds.consts(),
+        }
+    }
+
+    #[test]
+    fn run_is_pure_in_key_and_distinct_across_keys() {
+        let backend = NativeBackend::new();
+        let mut e1 = backend.open_engine(0, &job(200)).unwrap();
+        let mut e2 = backend.open_engine(1, &job(200)).unwrap();
+        let a = e1.run([5, 6]).unwrap();
+        let b = e2.run([5, 6]).unwrap();
+        assert_eq!(a, b, "same key on different engines must match bit-wise");
+        let c = e1.run([5, 7]).unwrap();
+        assert_ne!(a.thetas, c.thetas);
+    }
+
+    #[test]
+    fn run_respects_shapes_and_prior() {
+        let backend = NativeBackend::new();
+        let mut engine = backend.open_engine(0, &job(300)).unwrap();
+        assert_eq!(engine.batch(), 300);
+        let out = engine.run([1, 2]).unwrap();
+        assert_eq!(out.batch(), 300);
+        assert_eq!(out.thetas.len(), 300 * N_PARAMS);
+        let prior = Prior::paper();
+        for i in 0..out.batch() {
+            assert!(prior.contains(&out.theta(i)));
+        }
+        for &d in &out.distances {
+            assert!(d.is_finite() && d >= 0.0);
+        }
+    }
+
+    #[test]
+    fn predict_anchors_day0_and_shapes() {
+        let backend = NativeBackend::new();
+        let ds = synthetic::default_dataset(16, 0x5eed);
+        let theta = synthetic::DEFAULT_THETA_STAR;
+        let mut rows = Vec::new();
+        for _ in 0..4 {
+            rows.extend_from_slice(&theta);
+        }
+        let days = 20;
+        let traj = backend.predict([3, 4], &rows, &ds.consts(), days).unwrap();
+        assert_eq!(traj.len(), 4 * 3 * days);
+        let consts = ds.consts();
+        for b in 0..4 {
+            let base = b * 3 * days;
+            assert_eq!(traj[base], consts[0], "A day0 of rollout {b}");
+            assert_eq!(traj[base + days], consts[1], "R day0");
+            assert_eq!(traj[base + 2 * days], consts[2], "D day0");
+        }
+        // rollouts use independent noise streams
+        assert_ne!(traj[..3 * days], traj[3 * days..6 * days]);
+    }
+
+    #[test]
+    fn onestep_matches_model_step() {
+        let backend = NativeBackend::new();
+        let ds = synthetic::default_dataset(16, 0x5eed);
+        let consts = ds.consts();
+        let ic = initial_condition(&consts);
+        let prior = Prior::paper();
+        let mut rng = Xoshiro256::seed_from(42);
+        let mut states = Vec::new();
+        let mut thetas = Vec::new();
+        let mut zs = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..32 {
+            let theta = prior.sample(&mut rng);
+            let state = ic.init_state(&theta);
+            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
+            want.extend_from_slice(&crate::model::step(&state, &theta, &z, consts[3]));
+            states.extend_from_slice(&state);
+            thetas.extend_from_slice(&theta);
+            zs.extend_from_slice(&z);
+        }
+        let got = backend.onestep(&states, &thetas, &zs, &consts).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn shape_errors_are_caught() {
+        let backend = NativeBackend::new();
+        let consts = [155.0, 2.0, 3.0, 6e7];
+        assert!(backend.predict([0, 0], &[1.0; 7], &consts, 10).is_err());
+        assert!(backend.onestep(&[1.0; 5], &[1.0; 8], &[1.0; 5], &consts).is_err());
+        assert!(backend
+            .onestep(&[1.0; 6], &[1.0; 7], &[1.0; 5], &consts)
+            .is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! The PJRT backend: AOT-compiled XLA artifacts executed per device.
+//!
+//! This preserves the paper's artifact path: `make artifacts` lowers
+//! the batched ABC / predict / onestep graphs to HLO text once, and the
+//! runtime compiles + executes them through PJRT with no Python on the
+//! inference path.
+//!
+//! Threading: `xla::PjRtClient` is `Rc`-based and thread-local, so the
+//! backend itself holds only the artifact directory; every
+//! `open_engine` call (on the worker's own thread) opens a private
+//! [`Runtime`] — mirroring the per-device program residency of real
+//! IPUs. Runtimes are cached per `(thread, artifact dir)` so repeated
+//! calls on one thread (each country's `predict`, successive
+//! `abc_batches` probes) share one client and its compiled-executable
+//! cache instead of recompiling.
+
+use super::{AbcEngine, AbcJob, AbcRunOutput, Backend};
+use crate::model::{Theta, N_PARAMS};
+use crate::runtime::{AbcExecutable, ArtifactKind, Runtime};
+use crate::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+thread_local! {
+    // One Runtime per (thread, artifact dir): PJRT clients are
+    // thread-local, but within a thread the compiled-executable cache
+    // must survive across backend calls (predict per country, repeated
+    // abc_batches, ...) or every call pays a full recompile.
+    static RUNTIMES: RefCell<HashMap<PathBuf, Runtime>> = RefCell::new(HashMap::new());
+}
+
+/// The compiled-artifact backend (requires `--features pjrt` and a real
+/// `xla` crate; see the workspace README).
+#[derive(Debug, Clone)]
+pub struct PjrtBackend {
+    artifacts_dir: PathBuf,
+}
+
+impl PjrtBackend {
+    /// Create a backend over an artifact directory (must contain
+    /// `manifest.json`; checked lazily when an engine is opened).
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        Self { artifacts_dir: artifacts_dir.into() }
+    }
+
+    /// The artifact directory this backend reads.
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.artifacts_dir
+    }
+
+    fn open_runtime(&self) -> Result<Runtime> {
+        RUNTIMES.with(|cache| {
+            if let Some(rt) = cache.borrow().get(&self.artifacts_dir) {
+                return Ok(rt.clone());
+            }
+            let rt = Runtime::open(&self.artifacts_dir)?;
+            cache.borrow_mut().insert(self.artifacts_dir.clone(), rt.clone());
+            Ok(rt)
+        })
+    }
+}
+
+/// One worker's engine: a private runtime + compiled ABC executable.
+struct PjrtEngine {
+    exe: AbcExecutable,
+    observed: Vec<f32>,
+    prior_low: Theta,
+    prior_high: Theta,
+    consts: [f32; 4],
+}
+
+impl AbcEngine for PjrtEngine {
+    fn batch(&self) -> usize {
+        self.exe.batch()
+    }
+
+    fn run(&mut self, key: [u32; 2]) -> Result<AbcRunOutput> {
+        self.exe
+            .run(key, &self.observed, &self.prior_low, &self.prior_high, &self.consts)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn open_engine(&self, _device: u32, job: &AbcJob) -> Result<Box<dyn AbcEngine>> {
+        job.validate()?;
+        let rt = self.open_runtime()?;
+        let exe = rt.abc(job.batch, job.days)?;
+        Ok(Box::new(PjrtEngine {
+            exe,
+            observed: job.observed.clone(),
+            prior_low: job.prior_low,
+            prior_high: job.prior_high,
+            consts: job.consts,
+        }))
+    }
+
+    fn predict(
+        &self,
+        key: [u32; 2],
+        thetas: &[f32],
+        consts: &[f32; 4],
+        days: usize,
+    ) -> Result<Vec<f32>> {
+        if thetas.is_empty() || thetas.len() % N_PARAMS != 0 {
+            return Err(Error::ShapeMismatch {
+                what: "predict thetas".to_string(),
+                want: format!("non-empty multiple of {N_PARAMS}"),
+                got: format!("{} elements", thetas.len()),
+            });
+        }
+        let n = thetas.len() / N_PARAMS;
+        let rt = self.open_runtime()?;
+        // largest compiled predict variant for this horizon
+        let batch = rt
+            .manifest()
+            .artifacts()
+            .values()
+            .filter(|e| e.kind == ArtifactKind::Predict && e.days == days)
+            .map(|e| e.batch)
+            .max()
+            .ok_or_else(|| Error::MissingArtifact(format!("predict_b*_d{days}")))?;
+        let exe = rt.predict(batch, days)?;
+
+        // process the requested rows in compiled-batch slabs, padding the
+        // final slab by cycling rows; each slab gets a derived key
+        let mut out = Vec::with_capacity(n * 3 * days);
+        let mut row = 0usize;
+        let mut slab = 0u32;
+        while row < n {
+            let take = batch.min(n - row);
+            let mut tiled = Vec::with_capacity(batch * N_PARAMS);
+            for i in 0..batch {
+                let s = row + (i % take);
+                tiled.extend_from_slice(&thetas[s * N_PARAMS..(s + 1) * N_PARAMS]);
+            }
+            let slab_key = [key[0].wrapping_add(slab), key[1]];
+            let traj = exe.run(slab_key, &tiled, consts)?; // [batch, 3, days]
+            out.extend_from_slice(&traj[..take * 3 * days]);
+            row += take;
+            slab += 1;
+        }
+        Ok(out)
+    }
+
+    fn onestep(
+        &self,
+        states: &[f32],
+        thetas: &[f32],
+        z: &[f32],
+        consts: &[f32; 4],
+    ) -> Result<Vec<f32>> {
+        let rt = self.open_runtime()?;
+        // the onestep artifact is compiled at a fixed validation batch;
+        // require an exact match (callers size their probe to it)
+        let batch = rt
+            .manifest()
+            .artifacts()
+            .values()
+            .filter(|e| e.kind == ArtifactKind::Onestep)
+            .map(|e| e.batch)
+            .max()
+            .ok_or_else(|| Error::MissingArtifact("onestep_b*".to_string()))?;
+        let exe = rt.onestep(batch)?;
+        exe.run(states, thetas, z, consts)
+    }
+
+    fn abc_batches(&self, days: usize) -> Vec<usize> {
+        match self.open_runtime() {
+            Ok(rt) => rt.abc_batches(days),
+            Err(e) => {
+                // the trait keeps this infallible (an empty ladder is a
+                // valid answer), but don't swallow the actionable cause
+                eprintln!("pjrt backend: cannot open artifacts: {e}");
+                Vec::new()
+            }
+        }
+    }
+}

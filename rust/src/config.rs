@@ -36,6 +36,9 @@ pub struct RunConfig {
     /// Dataset name: an embedded country (`italy`, `usa`, `new_zealand`),
     /// `synthetic`, or a path to a CSV file.
     pub dataset: String,
+    /// Execution backend: `native` (pure-Rust, default) or `pjrt`
+    /// (AOT-compiled artifacts; needs the `pjrt` cargo feature).
+    pub backend: String,
     /// Acceptance tolerance ε; `None` uses the dataset default.
     pub tolerance: Option<f32>,
     /// Target number of accepted posterior samples.
@@ -59,6 +62,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         Self {
             dataset: "italy".into(),
+            backend: "native".into(),
             tolerance: None,
             accepted_samples: 100,
             devices: 2,
@@ -74,6 +78,12 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Validate cross-field constraints.
     pub fn validate(&self) -> Result<()> {
+        if !crate::backend::is_known(&self.backend) {
+            return Err(Error::Config(format!(
+                "unknown backend `{}` (expected `native` or `pjrt`)",
+                self.backend
+            )));
+        }
         if self.devices == 0 {
             return Err(Error::Config("devices must be >= 1".into()));
         }
@@ -115,6 +125,9 @@ impl RunConfig {
         let mut cfg = RunConfig::default();
         if let Some(d) = v.get("dataset") {
             cfg.dataset = d.as_str()?.to_string();
+        }
+        if let Some(b) = v.get("backend") {
+            cfg.backend = b.as_str()?.to_string();
         }
         if let Some(t) = v.get("tolerance") {
             cfg.tolerance = match t {
@@ -168,6 +181,7 @@ impl RunConfig {
     pub fn to_json(&self) -> String {
         let mut m = BTreeMap::new();
         m.insert("dataset".into(), Json::Str(self.dataset.clone()));
+        m.insert("backend".into(), Json::Str(self.backend.clone()));
         m.insert(
             "tolerance".into(),
             match self.tolerance {
@@ -266,6 +280,16 @@ mod tests {
     #[test]
     fn rejects_unknown_strategy() {
         assert!(RunConfig::from_json(r#"{"return_strategy": {"mode": "magic"}}"#).is_err());
+    }
+
+    #[test]
+    fn backend_field_round_trips_and_validates() {
+        let cfg = RunConfig::from_json(r#"{"backend": "pjrt"}"#).unwrap();
+        assert_eq!(cfg.backend, "pjrt");
+        let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed, cfg);
+        assert!(RunConfig::from_json(r#"{"backend": "tpu"}"#).is_err());
+        assert_eq!(RunConfig::default().backend, "native");
     }
 
     #[test]

@@ -3,15 +3,15 @@
 //! The paper's Tables 2–3 are manual batch sweeps to find the
 //! best-throughput configuration per device (500k on the GPU, 2×120k on
 //! the IPU). This module turns that sweep into a feature: measure every
-//! compiled ABC batch variant on the live runtime and pick the one with
-//! the best per-sample cost, optionally under a per-run latency budget
+//! ABC batch variant the backend advertises and pick the one with the
+//! best per-sample cost, optionally under a per-run latency budget
 //! (smaller batches give the leader finer stop granularity — the same
 //! latency-vs-throughput trade-off the paper's chunk-size parameter
 //! exposes at the transfer level).
 
+use crate::backend::{AbcJob, Backend};
 use crate::metrics::Stopwatch;
 use crate::model::Prior;
-use crate::runtime::Runtime;
 use crate::{Error, Result};
 
 /// One measured batch variant.
@@ -34,30 +34,32 @@ pub struct TuneResult {
     pub best_batch: usize,
 }
 
-/// Measure every compiled ABC variant for `days` and choose the best
-/// per-sample batch whose run latency is ≤ `max_run_seconds`
-/// (`f64::INFINITY` to disable the budget). `reps` timed runs each.
+/// Measure every ABC batch variant the backend serves for `days` and
+/// choose the best per-sample batch whose run latency is ≤
+/// `max_run_seconds` (`f64::INFINITY` to disable the budget). `reps`
+/// timed runs each.
 pub fn autotune_batch(
-    runtime: &Runtime,
+    backend: &dyn Backend,
     observed: &[f32],
     consts: &[f32; 4],
     days: usize,
     max_run_seconds: f64,
     reps: u32,
 ) -> Result<TuneResult> {
-    let batches = runtime.abc_batches(days);
+    let batches = backend.abc_batches(days);
     if batches.is_empty() {
         return Err(Error::MissingArtifact(format!("abc_b*_d{days}")));
     }
     let prior = Prior::paper();
     let mut points = Vec::with_capacity(batches.len());
     for batch in batches {
-        let exe = runtime.abc(batch, days)?;
+        let job = AbcJob::new(batch, days, observed.to_vec(), &prior, *consts);
+        let mut engine = backend.open_engine(0, &job)?;
         // warmup (compile + caches)
-        exe.run([7, 0], observed, prior.low(), prior.high(), consts)?;
+        engine.run([7, 0])?;
         let sw = Stopwatch::start();
         for i in 0..reps.max(1) {
-            exe.run([7, i + 1], observed, prior.low(), prior.high(), consts)?;
+            engine.run([7, i + 1])?;
         }
         let time_per_run = sw.seconds() / reps.max(1) as f64;
         points.push(TunePoint {
@@ -79,6 +81,8 @@ pub fn autotune_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synthetic;
 
     #[test]
     fn best_selection_logic() {
@@ -101,5 +105,20 @@ mod tests {
         assert_eq!(pick(f64::INFINITY), 10_000); // best per-sample
         assert_eq!(pick(0.01), 1_000); // latency budget excludes 10k
         assert_eq!(pick(0.0001), 1_000); // nothing fits → smallest
+    }
+
+    #[test]
+    fn native_backend_measures_its_ladder() {
+        let backend = NativeBackend::new();
+        let ds = synthetic::default_dataset(16, 0x5eed);
+        let observed = ds.observed.flatten();
+        let result =
+            autotune_batch(&backend, &observed, &ds.consts(), 16, f64::INFINITY, 1).unwrap();
+        let ladder = backend.abc_batches(16);
+        assert_eq!(result.points.len(), ladder.len());
+        assert!(ladder.contains(&result.best_batch));
+        for p in &result.points {
+            assert!(p.time_per_run > 0.0 && p.per_sample > 0.0);
+        }
     }
 }

@@ -1,12 +1,13 @@
 //! Device worker: one simulated accelerator.
 //!
-//! A worker owns its own PJRT client and compiled ABC executable
-//! (mirroring per-device program residency on real IPUs; also required
+//! A worker owns its own simulation engine, opened through the
+//! [`Backend`] seam on the worker's own thread (mirroring per-device
+//! program residency on real IPUs; also required on the PJRT path
 //! because `xla::PjRtClient` is thread-local). Its loop:
 //!
 //! 1. claim the next global run index from the leader's atomic counter,
-//! 2. derive the run's threefry key (a function of the run index only),
-//! 3. execute the compiled ABC graph,
+//! 2. derive the run's key (a function of the run index only),
+//! 3. execute one batched ABC run on the engine,
 //! 4. apply the device-side return strategy (conditional chunked
 //!    outfeed or Top-k selection),
 //! 5. ship the resulting [`Transfer`] to the leader.
@@ -16,13 +17,11 @@
 
 use super::outfeed::{chunk_batch, OutfeedChunk};
 use super::topk::{top_k_selection, TopKSelection};
+use crate::backend::{AbcJob, Backend};
 use crate::config::ReturnStrategy;
 use crate::metrics::{RunMetrics, Stopwatch};
-use crate::model::Theta;
 use crate::rng::SeedSequence;
-use crate::runtime::Runtime;
 use crate::Result;
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -61,7 +60,7 @@ pub struct DeviceReport {
     pub device: u32,
     /// Global run index.
     pub run: u64,
-    /// Accelerator execution time of this run.
+    /// Engine execution time of this run.
     pub exec_time: Duration,
     /// Filtered device→host payload.
     pub transfer: Transfer,
@@ -72,15 +71,13 @@ pub struct DeviceReport {
 }
 
 /// Everything a worker thread needs; plain data so it can be moved in.
-pub(super) struct WorkerSpec {
+/// Generic over the backend so workers stay monomorphic when the
+/// concrete backend type is known, and work through `dyn Backend` when
+/// the leader holds a trait object.
+pub(super) struct WorkerSpec<B: Backend + ?Sized> {
     pub device: u32,
-    pub artifacts_dir: PathBuf,
-    pub batch: usize,
-    pub days: usize,
-    pub observed: Vec<f32>,
-    pub prior_low: Theta,
-    pub prior_high: Theta,
-    pub consts: [f32; 4],
+    pub backend: Arc<B>,
+    pub job: AbcJob,
     pub tolerance: f32,
     pub strategy: ReturnStrategy,
     pub seeds: SeedSequence,
@@ -90,16 +87,14 @@ pub(super) struct WorkerSpec {
     pub tx: mpsc::Sender<Result<DeviceReport>>,
 }
 
-/// Worker thread body. Opens its own runtime, compiles once, then loops.
+/// Worker thread body. Opens its own engine once, then loops.
 /// Sends `Err` once and exits on any failure.
-pub(super) fn worker_main(spec: WorkerSpec) -> RunMetrics {
+pub(super) fn worker_main<B: Backend + ?Sized>(spec: WorkerSpec<B>) -> RunMetrics {
     let mut metrics = RunMetrics::default();
     let total_sw = Stopwatch::start();
 
-    let exe = match Runtime::open(&spec.artifacts_dir)
-        .and_then(|rt| rt.abc(spec.batch, spec.days))
-    {
-        Ok(exe) => exe,
+    let mut engine = match spec.backend.open_engine(spec.device, &spec.job) {
+        Ok(engine) => engine,
         Err(e) => {
             let _ = spec.tx.send(Err(e));
             return metrics;
@@ -116,8 +111,7 @@ pub(super) fn worker_main(spec: WorkerSpec) -> RunMetrics {
         let key = spec.seeds.key(0, run);
 
         let sw = Stopwatch::start();
-        let out = match exe.run(key, &spec.observed, &spec.prior_low, &spec.prior_high,
-                                &spec.consts) {
+        let out = match engine.run(key) {
             Ok(out) => out,
             Err(e) => {
                 let _ = spec.tx.send(Err(e));
@@ -175,7 +169,7 @@ mod tests {
         assert_eq!(chunks.wire_bytes(), (8 + 1 + 16 + 2) * 4);
 
         let topk = Transfer::TopK(super::super::topk::top_k_selection(
-            &crate::runtime::AbcRunOutput {
+            &crate::backend::AbcRunOutput {
                 thetas: vec![0.0; 80],
                 distances: vec![1.0; 10],
             },

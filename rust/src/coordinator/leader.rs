@@ -3,13 +3,13 @@
 use super::device::{worker_main, DeviceReport, WorkerSpec};
 use super::postproc::filter_transfer;
 use super::AcceptedSample;
+use crate::backend::{AbcJob, Backend, NativeBackend};
 use crate::config::RunConfig;
 use crate::data::Dataset;
 use crate::metrics::{RunMetrics, Stopwatch};
 use crate::model::Prior;
 use crate::rng::SeedSequence;
 use crate::{Error, Result};
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 
@@ -56,16 +56,16 @@ impl InferenceResult {
 /// The parallel ABC inference engine (leader side).
 #[derive(Debug, Clone)]
 pub struct Coordinator {
-    artifacts_dir: PathBuf,
+    backend: Arc<dyn Backend>,
     config: RunConfig,
     dataset: Dataset,
     prior: Prior,
 }
 
 impl Coordinator {
-    /// Build a coordinator for one dataset + configuration.
+    /// Build a coordinator for one backend + dataset + configuration.
     pub fn new(
-        artifacts_dir: impl Into<PathBuf>,
+        backend: Arc<dyn Backend>,
         config: RunConfig,
         dataset: Dataset,
         prior: Prior,
@@ -79,7 +79,17 @@ impl Coordinator {
                 config.days
             )));
         }
-        Ok(Self { artifacts_dir: artifacts_dir.into(), config, dataset, prior })
+        Ok(Self { backend, config, dataset, prior })
+    }
+
+    /// Convenience: a coordinator on the dependency-free native backend.
+    pub fn native(config: RunConfig, dataset: Dataset, prior: Prior) -> Result<Self> {
+        Self::new(Arc::new(NativeBackend::new()), config, dataset, prior)
+    }
+
+    /// The backend in use.
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
     }
 
     /// Effective tolerance (config override or dataset default).
@@ -102,8 +112,13 @@ impl Coordinator {
         let tolerance = self.tolerance();
         let cfg = &self.config;
         let truncated = self.dataset.truncated(cfg.days);
-        let observed = truncated.observed.flatten();
-        let consts = truncated.consts();
+        let job = AbcJob::new(
+            cfg.batch_per_device,
+            cfg.days,
+            truncated.observed.flatten(),
+            &self.prior,
+            truncated.consts(),
+        );
         let seeds = SeedSequence::new(cfg.seed);
 
         let next_run = Arc::new(AtomicU64::new(0));
@@ -119,13 +134,8 @@ impl Coordinator {
         for device in 0..cfg.devices as u32 {
             let spec = WorkerSpec {
                 device,
-                artifacts_dir: self.artifacts_dir.clone(),
-                batch: cfg.batch_per_device,
-                days: cfg.days,
-                observed: observed.clone(),
-                prior_low: *self.prior.low(),
-                prior_high: *self.prior.high(),
-                consts,
+                backend: self.backend.clone(),
+                job: job.clone(),
                 tolerance,
                 strategy: cfg.return_strategy,
                 seeds,
@@ -233,7 +243,7 @@ mod tests {
     #[test]
     fn rejects_short_dataset() {
         let ds = synthetic::default_dataset(10, 0); // only 10 days
-        let err = Coordinator::new("artifacts", config(), ds, Prior::paper());
+        let err = Coordinator::native(config(), ds, Prior::paper());
         assert!(err.is_err());
     }
 
@@ -241,13 +251,14 @@ mod tests {
     fn tolerance_defaults_to_dataset() {
         let ds = synthetic::default_dataset(16, 0);
         let tol = ds.default_tolerance;
-        let c = Coordinator::new("artifacts", config(), ds, Prior::paper()).unwrap();
+        let c = Coordinator::native(config(), ds, Prior::paper()).unwrap();
         assert_eq!(c.tolerance(), tol);
+        assert_eq!(c.backend().name(), "native");
 
         let mut cfg = config();
         cfg.tolerance = Some(123.0);
         let ds = synthetic::default_dataset(16, 0);
-        let c = Coordinator::new("artifacts", cfg, ds, Prior::paper()).unwrap();
+        let c = Coordinator::native(cfg, ds, Prior::paper()).unwrap();
         assert_eq!(c.tolerance(), 123.0);
     }
 

@@ -10,28 +10,32 @@
 //!                        │ mpsc: filtered transfers          │
 //!   ┌─────────────────┐  │                 ┌─────────────────┐
 //!   │ device worker 0 │──┘                 │ device worker N │ ...
-//!   │ own PJRT client │                    │ own PJRT client │
-//!   │ abc executable  │                    │ abc executable  │
+//!   │ own ABC engine  │                    │ own ABC engine  │
+//!   │ (native / PJRT) │                    │ (native / PJRT) │
 //!   │ outfeed / top-k │                    │ outfeed / top-k │
 //!   └─────────────────┘                    └─────────────────┘
 //! ```
 //!
 //! Every **device worker** stands in for one accelerator (IPU or GPU):
-//! it owns its own PJRT client and compiled executable (mirroring the
-//! per-device program residency of real hardware — `xla::PjRtClient` is
-//! deliberately thread-local), executes vectorized ABC runs, and applies
-//! the *device-side* half of the sample-return strategy: conditional
-//! chunked outfeed (IPU, §3.2) or fixed Top-k selection (GPU, §3.2).
-//! The **leader** assigns global run indices, filters transferred chunks
-//! by tolerance on the host, accumulates accepted samples, and stops the
-//! fleet once the target is reached.
+//! it opens its own simulation engine through the
+//! [`crate::backend::Backend`] seam — the pure-Rust native engine by
+//! default, or a compiled PJRT executable behind the `pjrt` feature
+//! (mirroring the per-device program residency of real hardware —
+//! `xla::PjRtClient` is deliberately thread-local). It executes batched
+//! ABC runs and applies the *device-side* half of the sample-return
+//! strategy: conditional chunked outfeed (IPU, §3.2) or fixed Top-k
+//! selection (GPU, §3.2). The **leader** assigns global run indices,
+//! filters transferred chunks by tolerance on the host, accumulates
+//! accepted samples, and stops the fleet once the target is reached.
 //!
-//! Reproducibility: the threefry key of a run depends only on the
-//! *global run index* (not on which device executed it), so the sample
-//! stream is a deterministic function of the master seed. With a fixed
-//! run budget ([`Coordinator::run_exact`]) the accepted set is exactly
+//! Reproducibility: the run key depends only on the *global run index*
+//! (not on which device executed it) and every backend's run is a pure
+//! function of the key, so the sample stream is a deterministic
+//! function of the master seed. With a fixed run budget
+//! ([`Coordinator::run_exact`]) the accepted set is exactly
 //! reproducible across any device count, chunk size or return strategy —
-//! the property the `prop_coordinator` suite pins down.
+//! the property the `prop_coordinator` and `native_backend` suites pin
+//! down.
 
 pub mod autotune;
 mod device;

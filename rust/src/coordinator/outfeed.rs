@@ -11,7 +11,7 @@
 //! in for the accelerator); what is "transferred" is what crosses the
 //! worker→leader channel and gets host-filtered by the leader.
 
-use crate::runtime::AbcRunOutput;
+use crate::backend::AbcRunOutput;
 
 /// One chunk selected for transfer to the host.
 #[derive(Debug, Clone, PartialEq)]

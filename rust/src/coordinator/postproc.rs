@@ -75,9 +75,9 @@ pub fn filter_transfer(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::AbcRunOutput;
     use crate::coordinator::outfeed::OutfeedChunk;
     use crate::coordinator::topk::top_k_selection;
-    use crate::runtime::AbcRunOutput;
 
     #[test]
     fn chunk_filtering_accepts_only_under_tolerance() {

@@ -8,7 +8,7 @@
 //! hyperparameter cost the paper tuned (k=5 at ε=2e5, k=1 at 5e4) and
 //! the reason its IPU path preferred outfeeds.
 
-use crate::runtime::AbcRunOutput;
+use crate::backend::AbcRunOutput;
 
 /// Device-side Top-k selection result for one run.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,9 +1,10 @@
 //! Crate-wide error type.
 //!
 //! A single enum keeps the public API surface small; variants map to the
-//! subsystems that can fail (artifact loading, PJRT execution, data
-//! parsing, configuration). `xla::Error` is wrapped verbatim so callers
-//! can still inspect compiler/runtime failures.
+//! subsystems that can fail (artifact loading, backend execution, data
+//! parsing, configuration). With the `pjrt` feature, `xla::Error` is
+//! wrapped verbatim so callers can still inspect compiler/runtime
+//! failures.
 
 use std::fmt;
 
@@ -14,6 +15,7 @@ pub type Result<T> = std::result::Result<T, Error>;
 #[derive(Debug)]
 pub enum Error {
     /// Failure in the XLA/PJRT runtime (compile, execute, transfer).
+    #[cfg(feature = "pjrt")]
     Xla(xla::Error),
     /// I/O failure (artifact files, datasets, reports).
     Io(std::io::Error),
@@ -21,7 +23,7 @@ pub enum Error {
     Parse(String),
     /// A requested artifact is missing from the manifest.
     MissingArtifact(String),
-    /// Shape or dtype mismatch between caller and compiled executable.
+    /// Shape or dtype mismatch between caller and simulation engine.
     ShapeMismatch { what: String, want: String, got: String },
     /// Invalid run configuration (bad batch/worker/tolerance combination).
     Config(String),
@@ -33,6 +35,7 @@ pub enum Error {
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
+            #[cfg(feature = "pjrt")]
             Error::Xla(e) => write!(f, "xla runtime error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Parse(m) => write!(f, "parse error: {m}"),
@@ -57,6 +60,7 @@ impl std::error::Error for Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e)
@@ -69,6 +73,12 @@ impl From<std::io::Error> for Error {
     }
 }
 
+/// CLI-layer convenience: flag-parsing errors are plain strings.
+impl From<String> for Error {
+    fn from(m: String) -> Self {
+        Error::Config(m)
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -90,5 +100,11 @@ mod tests {
     fn io_error_round_trips_source() {
         let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "x").into();
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn string_becomes_config_error() {
+        let e: Error = String::from("bad flag").into();
+        assert!(matches!(e, Error::Config(_)));
     }
 }

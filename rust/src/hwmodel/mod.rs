@@ -3,7 +3,7 @@
 //!
 //! The paper's evaluation hardware (Xeon Gold 6248, Tesla V100, Mk1
 //! IPU) is not available here, so — per the substitution rule in
-//! DESIGN.md §1 — this module implements the *mechanisms* the paper
+//! DESIGN.md §6 — this module implements the *mechanisms* the paper
 //! uses in §4/§6 to explain its measurements, and projects device
 //! runtimes from the workload statistics of our compiled artifacts:
 //!
@@ -26,8 +26,8 @@
 //!    the chunking configuration.
 //!
 //! The model is *predictive in shape* (who wins, how runtimes scale
-//! with batch/tolerance/devices) and *calibrated in level*; EXPERIMENTS
-//! .md compares both against the paper's numbers.
+//! with batch/tolerance/devices) and *calibrated in level*; the bench
+//! suites (DESIGN.md §6) compare both against the paper's numbers.
 
 pub mod energy;
 mod liveness;
@@ -84,7 +84,8 @@ impl Workload {
         }
     }
 
-    /// Build from a manifest entry's stats.
+    /// Build from a manifest entry's stats (artifact path only).
+    #[cfg(feature = "pjrt")]
     pub fn from_stats(batch: usize, days: usize, s: &crate::runtime::WorkloadStats) -> Self {
         Self {
             batch,

@@ -13,19 +13,25 @@
 //!   HLO text (`python/compile/model.py`, `aot.py`).
 //! * **Layer 3 (this crate, run time)** — the paper's *system*
 //!   contribution: the massively parallel ABC coordinator. Device
-//!   workers each own a compiled PJRT executable; the leader drives the
+//!   workers each own a simulation engine; the leader drives the
 //!   run-until-N-accepted loop, the conditional chunked outfeed (IPU
 //!   strategy) or fixed Top-k return (GPU strategy), host
 //!   post-processing, and multi-device scaling.
 //!
-//! Python never runs on the inference path: `make artifacts` lowers the
-//! graphs once, and the `repro` binary is self-contained afterwards.
+//! Execution is pluggable through the [`backend`] seam: the default
+//! [`backend::NativeBackend`] batches the pure-Rust tau-leaping
+//! simulator per worker thread (zero external dependencies — clone,
+//! build, run), while the `pjrt` cargo feature restores the paper's
+//! artifact path (`make artifacts` lowers the graphs once; the `repro`
+//! binary then executes the compiled XLA programs through PJRT with no
+//! Python on the inference path).
 //!
 //! ## Crate map
 //!
 //! | module | role |
 //! |---|---|
-//! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
+//! | [`backend`] | pluggable execution: native host engine / compiled PJRT |
+//! | `runtime` (feature `pjrt`) | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | parallel ABC engine: leader, device workers, outfeed, top-k |
 //! | [`abc`] | ABC/SMC-ABC algorithm layer: tolerances, posterior store, prediction |
 //! | [`model`] | pure-Rust reference simulator (CPU baseline + validation oracle) |
@@ -35,9 +41,10 @@
 //! | [`rng`] | splittable deterministic RNG for seeds + host-side sampling |
 //! | [`metrics`] | timers, counters, run reports |
 //! | [`report`] | paper-style table rendering and CSV series emission |
-//! | [`config`] | run configuration (serde, JSON file + CLI overrides) |
+//! | [`config`] | run configuration (JSON file + CLI overrides) |
 
 pub mod abc;
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -47,6 +54,7 @@ pub mod metrics;
 pub mod model;
 pub mod report;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod stats;
 pub mod util;

@@ -16,13 +16,16 @@
 //! repro energy           iso-power samples/joule table
 //! repro autotune         measure + pick the best batch variant
 //! repro smc              SMC-ABC refinement schedule
-//! repro info             artifact + dataset inventory
+//! repro info             backend + dataset inventory
 //! ```
 //!
-//! Flags are `--name value` (or `--name=value`); `repro <cmd> --help`
-//! lists each command's options.
+//! Execution defaults to the pure-Rust native backend; `--backend pjrt`
+//! (with the `pjrt` cargo feature and `make artifacts`) restores the
+//! paper's compiled-XLA path. Flags are `--name value` (or
+//! `--name=value`); `repro <cmd> --help` lists each command's options.
 
 use abc_ipu::abc::{predict::predict, smc, Posterior};
+use abc_ipu::backend::{self, AbcJob, Backend};
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::Coordinator;
 use abc_ipu::data::{embedded, synthetic, Dataset, ObservedSeries};
@@ -32,10 +35,10 @@ use abc_ipu::hwmodel::{
 };
 use abc_ipu::model::{Prior, PARAM_NAMES};
 use abc_ipu::report::{fmt_bytes, fmt_secs, write_csv, Table};
-use abc_ipu::runtime::{default_artifacts_dir, Runtime};
 use abc_ipu::util::cli::{ParsedArgs, Spec};
-use anyhow::{anyhow, bail, Context};
+use abc_ipu::{Error, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 repro — parallel ABC inference of stochastic epidemiology models
@@ -54,9 +57,9 @@ commands (paper experiment in brackets):
   energy            iso-power samples/joule table
   autotune          measure + pick best batch variant
   smc               SMC-ABC refinement schedule
-  info              artifact + dataset inventory
+  info              backend + dataset inventory
 
-common flags: --artifacts DIR  --reports DIR
+common flags: --backend native|pjrt  --artifacts DIR  --reports DIR
 infer flags:  --dataset NAME --tolerance F --samples N --devices N
               --batch N --days N --chunk N --top-k K --seed N --max-runs N
               --config FILE (JSON RunConfig; CLI flags override)
@@ -64,13 +67,13 @@ infer flags:  --dataset NAME --tolerance F --samples N --devices N
 
 /// Flags shared by inference-shaped commands.
 const INFER_FLAGS: &[&str] = &[
-    "artifacts", "reports", "dataset", "tolerance", "samples", "devices", "batch", "days",
-    "chunk", "top-k", "seed", "max-runs", "config",
+    "artifacts", "reports", "backend", "dataset", "tolerance", "samples", "devices", "batch",
+    "days", "chunk", "top-k", "seed", "max-runs", "config",
 ];
 
-fn infer_config(a: &ParsedArgs) -> anyhow::Result<RunConfig> {
+fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
     let mut cfg = match a.get("config") {
-        Some(path) => RunConfig::from_file(path).map_err(|e| anyhow!("{e}"))?,
+        Some(path) => RunConfig::from_file(path)?,
         None => RunConfig {
             dataset: "synthetic".into(),
             batch_per_device: 10_000,
@@ -81,19 +84,19 @@ fn infer_config(a: &ParsedArgs) -> anyhow::Result<RunConfig> {
     if let Some(d) = a.get("dataset") {
         cfg.dataset = d.to_string();
     }
-    cfg.tolerance = a.parse_opt::<f32>("tolerance").map_err(anyhow::Error::msg)?
-        .or(cfg.tolerance);
-    cfg.accepted_samples =
-        a.parse_or("samples", cfg.accepted_samples).map_err(anyhow::Error::msg)?;
-    cfg.devices = a.parse_or("devices", cfg.devices).map_err(anyhow::Error::msg)?;
-    cfg.batch_per_device =
-        a.parse_or("batch", cfg.batch_per_device).map_err(anyhow::Error::msg)?;
-    cfg.days = a.parse_or("days", cfg.days).map_err(anyhow::Error::msg)?;
-    cfg.seed = a.parse_or("seed", cfg.seed).map_err(anyhow::Error::msg)?;
-    cfg.max_runs = a.parse_or("max-runs", cfg.max_runs).map_err(anyhow::Error::msg)?;
-    if let Some(k) = a.parse_opt::<usize>("top-k").map_err(anyhow::Error::msg)? {
+    if let Some(b) = a.get("backend") {
+        cfg.backend = b.to_string();
+    }
+    cfg.tolerance = a.parse_opt::<f32>("tolerance")?.or(cfg.tolerance);
+    cfg.accepted_samples = a.parse_or("samples", cfg.accepted_samples)?;
+    cfg.devices = a.parse_or("devices", cfg.devices)?;
+    cfg.batch_per_device = a.parse_or("batch", cfg.batch_per_device)?;
+    cfg.days = a.parse_or("days", cfg.days)?;
+    cfg.seed = a.parse_or("seed", cfg.seed)?;
+    cfg.max_runs = a.parse_or("max-runs", cfg.max_runs)?;
+    if let Some(k) = a.parse_opt::<usize>("top-k")? {
         cfg.return_strategy = ReturnStrategy::TopK { k };
-    } else if let Some(chunk) = a.parse_opt::<usize>("chunk").map_err(anyhow::Error::msg)? {
+    } else if let Some(chunk) = a.parse_opt::<usize>("chunk")? {
         let chunk = if chunk == 0 { cfg.batch_per_device } else { chunk };
         cfg.return_strategy = ReturnStrategy::Outfeed { chunk: chunk.min(cfg.batch_per_device) };
     } else if let ReturnStrategy::Outfeed { chunk } = cfg.return_strategy {
@@ -103,13 +106,13 @@ fn infer_config(a: &ParsedArgs) -> anyhow::Result<RunConfig> {
     Ok(cfg)
 }
 
-fn load_dataset(name: &str, days: usize) -> anyhow::Result<Dataset> {
+fn load_dataset(name: &str, days: usize) -> Result<Dataset> {
     let ds = if name == "synthetic" {
         synthetic::default_dataset(days.max(16).max(49), 0x5eed)
     } else if let Some(ds) = embedded::by_name(name) {
         ds
     } else if std::path::Path::new(name).exists() {
-        let observed = ObservedSeries::from_csv_file(name).map_err(|e| anyhow!("{e}"))?;
+        let observed = ObservedSeries::from_csv_file(name)?;
         Dataset {
             name: name.to_string(),
             population: 60_000_000.0,
@@ -117,20 +120,36 @@ fn load_dataset(name: &str, days: usize) -> anyhow::Result<Dataset> {
             observed,
         }
     } else {
-        bail!("unknown dataset `{name}` (no embedded country, not a file)");
+        return Err(Error::Config(format!(
+            "unknown dataset `{name}` (no embedded country, not a file)"
+        )));
     };
     if ds.days() < days {
-        bail!("dataset `{}` has {} days < requested {days}", ds.name, ds.days());
+        return Err(Error::Config(format!(
+            "dataset `{}` has {} days < requested {days}",
+            ds.name,
+            ds.days()
+        )));
     }
     Ok(ds)
 }
 
 fn artifacts_dir(a: &ParsedArgs) -> PathBuf {
-    a.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+    a.get("artifacts").map(PathBuf::from).unwrap_or_else(backend::default_artifacts_dir)
 }
 
 fn reports_dir(a: &ParsedArgs) -> PathBuf {
     PathBuf::from(a.get_or("reports", "reports"))
+}
+
+/// Resolve the execution backend from `--backend` / config.
+fn resolve_backend(a: &ParsedArgs, cfg: &RunConfig) -> Result<Arc<dyn Backend>> {
+    backend::from_name(&cfg.backend, Some(artifacts_dir(a)))
+}
+
+/// Backend resolution for commands that have no full `RunConfig`.
+fn backend_from_flag(a: &ParsedArgs) -> Result<Arc<dyn Backend>> {
+    backend::from_name(&a.get_or("backend", "native"), Some(artifacts_dir(a)))
 }
 
 fn print_result(result: &abc_ipu::coordinator::InferenceResult) {
@@ -168,18 +187,18 @@ fn print_result(result: &abc_ipu::coordinator::InferenceResult) {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
         print!("{USAGE}");
-        return Ok(());
+        return;
     }
     let cmd = argv.remove(0);
     if argv.iter().any(|a| a == "--help") {
         print!("{USAGE}");
-        return Ok(());
+        return;
     }
-    match cmd.as_str() {
+    let result = match cmd.as_str() {
         "infer" => cmd_infer(argv),
         "table1" => cmd_table1(argv),
         "sweep" => cmd_sweep(argv),
@@ -195,61 +214,66 @@ fn main() -> anyhow::Result<()> {
         "info" => cmd_info(argv),
         other => {
             eprint!("{USAGE}");
-            bail!("unknown command `{other}`");
+            eprintln!("error: unknown command `{other}`");
+            std::process::exit(2);
         }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
     }
 }
 
 fn parse(argv: Vec<String>, values: &[&'static str], bools: &[&'static str])
-    -> anyhow::Result<ParsedArgs> {
-    Spec::new()
-        .values(values)
-        .bools(bools)
-        .parse(argv)
-        .map_err(anyhow::Error::msg)
+    -> Result<ParsedArgs> {
+    Ok(Spec::new().values(values).bools(bools).parse(argv)?)
 }
 
-fn cmd_infer(argv: Vec<String>) -> anyhow::Result<()> {
+fn cmd_infer(argv: Vec<String>) -> Result<()> {
     let a = parse(argv, INFER_FLAGS, &[])?;
     let cfg = infer_config(&a)?;
     let ds = load_dataset(&cfg.dataset, cfg.days)?;
     let samples = cfg.accepted_samples;
-    let coord = Coordinator::new(artifacts_dir(&a), cfg.clone(), ds, Prior::paper())
-        .map_err(|e| anyhow!("{e}"))?;
+    let engine = resolve_backend(&a, &cfg)?;
+    let coord = Coordinator::new(engine, cfg.clone(), ds, Prior::paper())?;
     println!(
-        "inferring with tolerance {:.4e} on {} devices (batch {}/device)",
+        "inferring on `{}` backend with tolerance {:.4e} on {} devices (batch {}/device)",
+        coord.backend().name(),
         coord.tolerance(),
         cfg.devices,
         cfg.batch_per_device
     );
-    let result = coord.run_until(samples).map_err(|e| anyhow!("{e}"))?;
+    let result = coord.run_until(samples)?;
     print_result(&result);
     let post = Posterior::new(result.accepted);
-    let path = write_csv(reports_dir(&a), "posterior", &post.to_csv())
-        .map_err(|e| anyhow!("{e}"))?;
+    let path = write_csv(reports_dir(&a), "posterior", &post.to_csv())?;
     println!("posterior written to {}", path.display());
     Ok(())
 }
 
-/// Table 1: measured PJRT engine + measured CPU baseline + projected
+/// Table 1: measured engine + measured CPU baseline + projected
 /// device models, at matched acceptance workload.
-fn cmd_table1(argv: Vec<String>) -> anyhow::Result<()> {
+fn cmd_table1(argv: Vec<String>) -> Result<()> {
     let a = parse(argv, INFER_FLAGS, &[])?;
     let mut cfg = infer_config(&a)?;
     cfg.return_strategy = ReturnStrategy::Outfeed { chunk: cfg.batch_per_device };
     let samples = cfg.accepted_samples.min(100);
     let batch = cfg.batch_per_device;
+    let devices = cfg.devices;
+    let fit_days = cfg.days;
     let ds = load_dataset(&cfg.dataset, cfg.days)?;
     let prior = Prior::paper();
 
-    let coord = Coordinator::new(artifacts_dir(&a), cfg, ds.clone(), prior.clone())
-        .map_err(|e| anyhow!("{e}"))?;
-    let accel = coord.run_until(samples).map_err(|e| anyhow!("{e}"))?;
+    let engine = resolve_backend(&a, &cfg)?;
+    let engine_name = engine.name();
+    let coord = Coordinator::new(engine, cfg, ds.clone(), prior.clone())?;
+    let accel = coord.run_until(samples)?;
 
-    // measured CPU baseline at the same tolerance (scaled-down workload)
+    // measured CPU baseline at the same tolerance (scaled-down workload);
+    // truncate to the coordinator's fit window so ε means the same thing
     let cpu_batch = (batch / 10).max(100);
     let cpu = abc_ipu::abc::cpu::run_until(
-        &ds,
+        &ds.truncated(fit_days),
         &prior,
         coord.tolerance(),
         cpu_batch,
@@ -264,8 +288,8 @@ fn cmd_table1(argv: Vec<String>) -> anyhow::Result<()> {
     );
     let accel_ps = accel.metrics.time_per_run().as_secs_f64() / batch as f64 * 1e6;
     t.row(&[
-        "PJRT engine (XLA, 2 workers)".into(),
-        format!("2x{batch}"),
+        format!("{engine_name} engine ({devices} workers)"),
+        format!("{devices}x{batch}"),
         accel.accepted.len().to_string(),
         fmt_secs(accel.metrics.total.as_secs_f64()),
         fmt_secs(accel.metrics.time_per_run().as_secs_f64()),
@@ -297,16 +321,16 @@ fn cmd_table1(argv: Vec<String>) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
-    write_csv(reports_dir(&a), "table1", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), "table1", &t.to_csv())?;
     println!(
-        "measured speedup (CPU baseline / PJRT engine, per-sample): {:.1}x",
+        "measured speedup (CPU baseline / {engine_name} engine, per-sample): {:.1}x",
         cpu_ps / accel_ps
     );
     Ok(())
 }
 
-fn cmd_sweep(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = parse(argv, &["artifacts", "reports", "device"], &["measure"])?;
+fn cmd_sweep(argv: Vec<String>) -> Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "backend", "device"], &["measure"])?;
     let device = a.get_or("device", "ipu");
     let (spec, batches): (DeviceSpec, Vec<usize>) = match device.as_str() {
         "ipu" => (
@@ -318,7 +342,7 @@ fn cmd_sweep(argv: Vec<String>) -> anyhow::Result<()> {
             vec![100_000, 200_000, 400_000, 500_000, 700_000, 1_000_000],
         ),
         "cpu" => (DeviceSpec::xeon_gold_6248(), vec![250_000, 500_000, 1_000_000]),
-        other => bail!("unknown device `{other}`"),
+        other => return Err(Error::Config(format!("unknown device `{other}`"))),
     };
     let pts = batch_sweep(&spec, &batches, 49);
     let mut t = Table::new(
@@ -336,42 +360,40 @@ fn cmd_sweep(argv: Vec<String>) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
-    write_csv(reports_dir(&a), &format!("batch_sweep_{device}"), &t.to_csv())
-        .map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), &format!("batch_sweep_{device}"), &t.to_csv())?;
 
     if a.has("measure") {
-        let rt = Runtime::open(artifacts_dir(&a)).map_err(|e| anyhow!("{e}"))?;
+        let engine = backend_from_flag(&a)?;
         let ds = load_dataset("synthetic", 49)?;
         let observed = ds.observed.flatten();
         let consts = ds.consts();
         let prior = Prior::paper();
         let mut t = Table::new(
-            "measured PJRT time/run at compiled batches",
+            format!("measured {} time/run at served batches", engine.name()),
             &["batch", "time/run", "per-sample µs"],
         );
-        for b in rt.abc_batches(49) {
-            let exe = rt.abc(b, 49).map_err(|e| anyhow!("{e}"))?;
-            exe.run([0, 1], &observed, prior.low(), prior.high(), &consts)
-                .map_err(|e| anyhow!("{e}"))?;
+        for b in engine.abc_batches(49) {
+            let job = AbcJob::new(b, 49, observed.clone(), &prior, consts);
+            let mut e = engine.open_engine(0, &job)?;
+            e.run([0, 1])?;
             let sw = abc_ipu::metrics::Stopwatch::start();
             for i in 0..3u32 {
-                exe.run([i, 2], &observed, prior.low(), prior.high(), &consts)
-                    .map_err(|e| anyhow!("{e}"))?;
+                e.run([i, 2])?;
             }
             let per = sw.seconds() / 3.0;
             t.row(&[b.to_string(), fmt_secs(per), format!("{:.2}", per / b as f64 * 1e6)]);
         }
         print!("{}", t.render());
-        write_csv(reports_dir(&a), "batch_sweep_measured", &t.to_csv())
-            .map_err(|e| anyhow!("{e}"))?;
+        write_csv(reports_dir(&a), "batch_sweep_measured", &t.to_csv())?;
     }
     Ok(())
 }
 
-fn cmd_postproc(argv: Vec<String>) -> anyhow::Result<()> {
+fn cmd_postproc(argv: Vec<String>) -> Result<()> {
     let a = parse(argv, INFER_FLAGS, &[])?;
     let base = infer_config(&a)?;
     let ds = load_dataset(&base.dataset, base.days)?;
+    let engine = resolve_backend(&a, &base)?;
     let mut t = Table::new(
         "Table 4: host post-processing",
         &["strategy", "accepted", "postproc", "% of total", "to-host", "transfers (skipped)"],
@@ -384,9 +406,8 @@ fn cmd_postproc(argv: Vec<String>) -> anyhow::Result<()> {
     ] {
         let mut cfg = base.clone();
         cfg.return_strategy = strategy;
-        let coord = Coordinator::new(artifacts_dir(&a), cfg, ds.clone(), Prior::paper())
-            .map_err(|e| anyhow!("{e}"))?;
-        let r = coord.run_until(base.accepted_samples).map_err(|e| anyhow!("{e}"))?;
+        let coord = Coordinator::new(engine.clone(), cfg, ds.clone(), Prior::paper())?;
+        let r = coord.run_until(base.accepted_samples)?;
         t.row(&[
             label.into(),
             r.accepted.len().to_string(),
@@ -397,13 +418,13 @@ fn cmd_postproc(argv: Vec<String>) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
-    write_csv(reports_dir(&a), "table4_postproc", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), "table4_postproc", &t.to_csv())?;
     Ok(())
 }
 
-fn cmd_liveness(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = parse(argv, &["artifacts", "reports", "batch"], &[])?;
-    let batch: usize = a.parse_or("batch", 100_000).map_err(anyhow::Error::msg)?;
+fn cmd_liveness(argv: Vec<String>) -> Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "backend", "batch"], &[])?;
+    let batch: usize = a.parse_or("batch", 100_000)?;
     let w = Workload::analytic(batch, 49);
     let curve = liveness_curve(&w);
     let mut t = Table::new(
@@ -423,42 +444,42 @@ fn cmd_liveness(argv: Vec<String>) -> anyhow::Result<()> {
         "peak/always-live ratio: {:.1}x (paper Fig 4: ~6x)",
         abc_ipu::hwmodel::peak_ratio(&curve)
     );
-    write_csv(reports_dir(&a), "fig4_liveness", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), "fig4_liveness", &t.to_csv())?;
     let tiles = per_tile_memory(&w, 1216);
     let mut csv = String::from("tile,bytes\n");
     for (i, b) in tiles.iter().enumerate() {
         csv.push_str(&format!("{i},{b}\n"));
     }
-    let path = write_csv(reports_dir(&a), "fig5_per_tile", &csv).map_err(|e| anyhow!("{e}"))?;
+    let path = write_csv(reports_dir(&a), "fig5_per_tile", &csv)?;
     println!("per-tile series written to {}", path.display());
     Ok(())
 }
 
-fn cmd_opstats(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = parse(argv, &["artifacts", "reports", "device"], &[])?;
+fn cmd_opstats(argv: Vec<String>) -> Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "backend", "device"], &[])?;
     let device = a.get_or("device", "ipu");
     let (title, rows) = match device.as_str() {
         "ipu" => ("Table 5: IPU compute-set cycle shares", ipu_compute_set_table()),
         "v100" | "gpu" => ("Table 6: GPU XLA-kernel shares", gpu_kernel_table()),
-        other => bail!("unknown device `{other}`"),
+        other => return Err(Error::Config(format!("unknown device `{other}`"))),
     };
     let mut t = Table::new(title, &["op", "share %"]);
     for r in &rows {
         t.row(&[r.name.to_string(), format!("{:.1}", r.percent)]);
     }
     print!("{}", t.render());
-    write_csv(reports_dir(&a), &format!("opstats_{device}"), &t.to_csv())
-        .map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), &format!("opstats_{device}"), &t.to_csv())?;
     Ok(())
 }
 
-fn cmd_tolerance_sweep(argv: Vec<String>) -> anyhow::Result<()> {
+fn cmd_tolerance_sweep(argv: Vec<String>) -> Result<()> {
     let mut flags = INFER_FLAGS.to_vec();
     flags.push("points");
     let a = parse(argv, &flags, &[])?;
     let base = infer_config(&a)?;
-    let points: usize = a.parse_or("points", 6).map_err(anyhow::Error::msg)?;
+    let points: usize = a.parse_or("points", 6)?;
     let ds = load_dataset(&base.dataset, base.days)?;
+    let engine = resolve_backend(&a, &base)?;
     let base_tol = base.tolerance.unwrap_or(ds.default_tolerance);
     let mut t = Table::new(
         "Fig 6: processing time vs tolerance",
@@ -471,8 +492,7 @@ fn cmd_tolerance_sweep(argv: Vec<String>) -> anyhow::Result<()> {
         if cfg.max_runs == 0 {
             cfg.max_runs = 400;
         }
-        let coord = Coordinator::new(artifacts_dir(&a), cfg, ds.clone(), Prior::paper())
-            .map_err(|e| anyhow!("{e}"))?;
+        let coord = Coordinator::new(engine.clone(), cfg, ds.clone(), Prior::paper())?;
         match coord.run_until(base.accepted_samples) {
             Ok(r) => {
                 t.row(&[
@@ -498,11 +518,11 @@ fn cmd_tolerance_sweep(argv: Vec<String>) -> anyhow::Result<()> {
         }
     }
     print!("{}", t.render());
-    write_csv(reports_dir(&a), "fig6_tolerance", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), "fig6_tolerance", &t.to_csv())?;
     Ok(())
 }
 
-fn cmd_scale(argv: Vec<String>) -> anyhow::Result<()> {
+fn cmd_scale(argv: Vec<String>) -> Result<()> {
     let mut flags = INFER_FLAGS.to_vec();
     flags.push("device-counts");
     let a = parse(argv, &flags, &[])?;
@@ -510,9 +530,14 @@ fn cmd_scale(argv: Vec<String>) -> anyhow::Result<()> {
     let counts: Vec<usize> = a
         .get_or("device-counts", "1,2,4,8")
         .split(',')
-        .map(|s| s.trim().parse().context("bad device count"))
-        .collect::<anyhow::Result<_>>()?;
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad device count `{s}`")))
+        })
+        .collect::<Result<_>>()?;
     let ds = load_dataset(&base.dataset, base.days)?;
+    let engine = resolve_backend(&a, &base)?;
     let batch = base.batch_per_device;
     let w = Workload::analytic(batch, 49);
     let mut t = Table::new(
@@ -529,9 +554,8 @@ fn cmd_scale(argv: Vec<String>) -> anyhow::Result<()> {
             if cfg.max_runs == 0 {
                 cfg.max_runs = 400;
             }
-            let coord = Coordinator::new(artifacts_dir(&a), cfg, ds.clone(), Prior::paper())
-                .map_err(|e| anyhow!("{e}"))?;
-            let r = coord.run_until(base.accepted_samples).map_err(|e| anyhow!("{e}"))?;
+            let coord = Coordinator::new(engine.clone(), cfg, ds.clone(), Prior::paper())?;
+            let r = coord.run_until(base.accepted_samples)?;
             let throughput =
                 r.metrics.samples_simulated as f64 / r.metrics.total.as_secs_f64();
             let base_tp = *base_throughput.get_or_insert(throughput);
@@ -548,18 +572,19 @@ fn cmd_scale(argv: Vec<String>) -> anyhow::Result<()> {
         }
     }
     print!("{}", t.render());
-    write_csv(reports_dir(&a), "table7_scaling", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), "table7_scaling", &t.to_csv())?;
     Ok(())
 }
 
-fn cmd_countries(argv: Vec<String>) -> anyhow::Result<()> {
+fn cmd_countries(argv: Vec<String>) -> Result<()> {
     let mut flags = INFER_FLAGS.to_vec();
     flags.push("horizon");
+    flags.push("rollouts");
     let a = parse(argv, &flags, &[])?;
     let base = infer_config(&a)?;
-    let horizon: usize = a.parse_or("horizon", 120).map_err(anyhow::Error::msg)?;
-    let artifacts = artifacts_dir(&a);
-    let rt = Runtime::open(&artifacts).map_err(|e| anyhow!("{e}"))?;
+    let horizon: usize = a.parse_or("horizon", 120)?;
+    let rollouts: usize = a.parse_or("rollouts", 200)?;
+    let engine = resolve_backend(&a, &base)?;
     let reports = reports_dir(&a);
     let mut t8 = Table::new(
         "Table 8: per-country runtimes and posterior means",
@@ -573,10 +598,9 @@ fn cmd_countries(argv: Vec<String>) -> anyhow::Result<()> {
         if cfg.max_runs == 0 {
             cfg.max_runs = 2_000;
         }
-        let coord = Coordinator::new(&artifacts, cfg, ds.clone(), Prior::paper())
-            .map_err(|e| anyhow!("{e}"))?;
+        let coord = Coordinator::new(engine.clone(), cfg, ds.clone(), Prior::paper())?;
         println!("fitting {} (ε={:.3e})...", ds.name, coord.tolerance());
-        let r = coord.run_until(base.accepted_samples).map_err(|e| anyhow!("{e}"))?;
+        let r = coord.run_until(base.accepted_samples)?;
         let post = Posterior::new(r.accepted.clone());
         let mean = post.mean_theta();
         let mut row = vec![
@@ -588,10 +612,8 @@ fn cmd_countries(argv: Vec<String>) -> anyhow::Result<()> {
         row.extend(mean.iter().map(|v| format!("{v:.3}")));
         t8.row(&row);
 
-        let pred = predict(&rt, &post, &ds.consts(), horizon, [9, 9])
-            .map_err(|e| anyhow!("{e}"))?;
-        write_csv(&reports, &format!("fig7_{}", ds.name), &pred.to_csv())
-            .map_err(|e| anyhow!("{e}"))?;
+        let pred = predict(&*engine, &post, &ds.consts(), horizon, [9, 9], rollouts)?;
+        write_csv(&reports, &format!("fig7_{}", ds.name), &pred.to_csv())?;
         let mut csv = String::from("param,bin_center,count,density\n");
         for p in 0..8 {
             let h = post.histogram(p, 20);
@@ -605,19 +627,17 @@ fn cmd_countries(argv: Vec<String>) -> anyhow::Result<()> {
                 ));
             }
         }
-        write_csv(&reports, &format!("fig8_hist_{}", ds.name), &csv)
-            .map_err(|e| anyhow!("{e}"))?;
-        write_csv(&reports, &format!("posterior_{}", ds.name), &post.to_csv())
-            .map_err(|e| anyhow!("{e}"))?;
+        write_csv(&reports, &format!("fig8_hist_{}", ds.name), &csv)?;
+        write_csv(&reports, &format!("posterior_{}", ds.name), &post.to_csv())?;
     }
     print!("{}", t8.render());
-    write_csv(&reports, "table8", &t8.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    write_csv(&reports, "table8", &t8.to_csv())?;
     Ok(())
 }
 
 /// Energy table: samples per joule at the paper's iso-power packages.
-fn cmd_energy(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = parse(argv, &["artifacts", "reports"], &[])?;
+fn cmd_energy(argv: Vec<String>) -> Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "backend"], &[])?;
     let mut t = Table::new(
         "iso-power comparison (300 W packages, hwmodel)",
         &["device", "Msamples/s", "ksamples/J", "kJ per 1e9 samples"],
@@ -631,29 +651,28 @@ fn cmd_energy(argv: Vec<String>) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
-    write_csv(reports_dir(&a), "energy", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), "energy", &t.to_csv())?;
     Ok(())
 }
 
-/// Autotune: measure compiled batch variants, pick the best per-sample.
-fn cmd_autotune(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = parse(argv, &["artifacts", "reports", "days", "budget-ms", "reps"], &[])?;
-    let days: usize = a.parse_or("days", 49).map_err(anyhow::Error::msg)?;
-    let budget_ms: f64 = a.parse_or("budget-ms", f64::INFINITY).map_err(anyhow::Error::msg)?;
-    let reps: u32 = a.parse_or("reps", 3).map_err(anyhow::Error::msg)?;
-    let rt = Runtime::open(artifacts_dir(&a)).map_err(|e| anyhow!("{e}"))?;
+/// Autotune: measure served batch variants, pick the best per-sample.
+fn cmd_autotune(argv: Vec<String>) -> Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "backend", "days", "budget-ms", "reps"], &[])?;
+    let days: usize = a.parse_or("days", 49)?;
+    let budget_ms: f64 = a.parse_or("budget-ms", f64::INFINITY)?;
+    let reps: u32 = a.parse_or("reps", 3)?;
+    let engine = backend_from_flag(&a)?;
     let ds = load_dataset("synthetic", days)?;
     let result = abc_ipu::coordinator::autotune_batch(
-        &rt,
+        &*engine,
         &ds.truncated(days).observed.flatten(),
         &ds.consts(),
         days,
         budget_ms / 1e3,
         reps,
-    )
-    .map_err(|e| anyhow!("{e}"))?;
+    )?;
     let mut t = Table::new(
-        "batch autotune (Tables 2-3 as a feature)",
+        format!("batch autotune on `{}` (Tables 2-3 as a feature)", engine.name()),
         &["batch", "time/run", "per-sample µs", "chosen"],
     );
     for p in &result.points {
@@ -665,24 +684,24 @@ fn cmd_autotune(argv: Vec<String>) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
-    write_csv(reports_dir(&a), "autotune", &t.to_csv()).map_err(|e| anyhow!("{e}"))?;
+    write_csv(reports_dir(&a), "autotune", &t.to_csv())?;
     Ok(())
 }
 
-fn cmd_smc(argv: Vec<String>) -> anyhow::Result<()> {
+fn cmd_smc(argv: Vec<String>) -> Result<()> {
     let mut flags = INFER_FLAGS.to_vec();
     flags.push("stages");
     let a = parse(argv, &flags, &[])?;
     let cfg = infer_config(&a)?;
-    let stages: usize = a.parse_or("stages", 3).map_err(anyhow::Error::msg)?;
+    let stages: usize = a.parse_or("stages", 3)?;
     let ds = load_dataset(&cfg.dataset, cfg.days)?;
+    let engine = resolve_backend(&a, &cfg)?;
     let smc_cfg = smc::SmcConfig {
         stages,
         samples_per_stage: cfg.accepted_samples,
         ..Default::default()
     };
-    let result = smc::run_smc(artifacts_dir(&a), cfg, ds, &smc_cfg)
-        .map_err(|e| anyhow!("{e}"))?;
+    let result = smc::run_smc(engine, cfg, ds, &smc_cfg)?;
     let mut t = Table::new(
         "SMC-ABC schedule",
         &["stage", "tolerance", "accepted", "runs", "dist p50"],
@@ -700,21 +719,19 @@ fn cmd_smc(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
-    let a = parse(argv, &["artifacts", "reports"], &[])?;
-    let rt = Runtime::open(artifacts_dir(&a))
-        .map_err(|e| anyhow!("{e}"))
-        .context("cannot open artifacts (run `make artifacts`)")?;
-    println!("platform: {}", rt.platform());
-    let mut t = Table::new("artifacts", &["name", "kind", "batch", "days", "file"]);
-    for (name, e) in rt.manifest().artifacts() {
-        t.row(&[
-            name.clone(),
-            format!("{:?}", e.kind),
-            e.batch.to_string(),
-            e.days.to_string(),
-            e.file.clone(),
-        ]);
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let a = parse(argv, &["artifacts", "reports", "backend"], &[])?;
+    let engine = backend_from_flag(&a)?;
+    println!("backend: {}", engine.name());
+    let mut t = Table::new("served ABC batch variants", &["days", "batches"]);
+    for days in [16usize, 49] {
+        let batches = engine.abc_batches(days);
+        let cell = if batches.is_empty() {
+            "none (pjrt: run `make artifacts`)".to_string()
+        } else {
+            batches.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(", ")
+        };
+        t.row(&[days.to_string(), cell]);
     }
     print!("{}", t.render());
     let mut t = Table::new("embedded datasets", &["name", "days", "population", "default ε"]);

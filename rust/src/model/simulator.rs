@@ -4,8 +4,8 @@
 //! paper's Xeon baseline (Table 1's "2×CPU" rows) and of the oracle the
 //! accelerator path is validated against. The inner loop is written to
 //! be auto-vectorization friendly (per-sample arrays, no allocation in
-//! the day loop) — the perf pass (EXPERIMENTS.md §Perf) measures it as
-//! the `cpu_baseline` bench.
+//! the day loop) — the bench suites (DESIGN.md §6) measure it as
+//! `cpu_sim_distance_1_sample_49d` / `cpu_scalar_baseline`.
 
 use super::{InitialCondition, State, Theta, N_OBSERVED};
 use crate::rng::Xoshiro256;

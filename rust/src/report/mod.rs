@@ -2,7 +2,7 @@
 //!
 //! Every bench/example regenerates a paper table or figure; this module
 //! renders them in a consistent, diff-friendly format: aligned text
-//! tables for the terminal (and EXPERIMENTS.md) plus CSV files for the
+//! tables for the terminal plus CSV files for the
 //! figure series.
 
 use std::fmt::Write as _;

@@ -5,6 +5,7 @@
 //! the rest of the crate never touches `xla::Literal` directly.
 
 use super::ArtifactEntry;
+use crate::backend::AbcRunOutput;
 use crate::model::{Theta, N_PARAMS};
 use crate::{Error, Result};
 use std::rc::Rc;
@@ -22,30 +23,6 @@ fn check_len(what: &str, want: usize, got: usize) -> Result<()> {
 
 fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
-
-/// Output of one ABC run: the full per-sample parameter and distance
-/// arrays (the fixed-shape XLA outputs the paper's §3.2 discusses).
-#[derive(Debug, Clone, PartialEq)]
-pub struct AbcRunOutput {
-    /// Sampled parameters, row-major `[batch, 8]`.
-    pub thetas: Vec<f32>,
-    /// Euclidean distances, `[batch]`.
-    pub distances: Vec<f32>,
-}
-
-impl AbcRunOutput {
-    /// Number of samples in this run.
-    pub fn batch(&self) -> usize {
-        self.distances.len()
-    }
-
-    /// θ of sample `i` as a fixed-size array.
-    pub fn theta(&self, i: usize) -> Theta {
-        let mut t = [0.0f32; N_PARAMS];
-        t.copy_from_slice(&self.thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
-        t
-    }
 }
 
 /// Compiled `abc_b{B}_d{D}` artifact.
@@ -199,16 +176,6 @@ impl OnestepExecutable {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn abc_output_theta_accessor() {
-        let out = AbcRunOutput {
-            thetas: (0..16).map(|i| i as f32).collect(),
-            distances: vec![1.0, 2.0],
-        };
-        assert_eq!(out.batch(), 2);
-        assert_eq!(out.theta(1), [8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0]);
-    }
 
     #[test]
     fn check_len_mismatch_is_error() {

@@ -1,7 +1,10 @@
 //! XLA/PJRT runtime: load and execute the AOT-compiled artifacts.
 //!
+//! Only compiled with the `pjrt` cargo feature; the backend-facing
+//! wrapper is [`crate::backend::PjrtBackend`].
+//!
 //! The interchange format is HLO **text** (not serialized protos — see
-//! `python/compile/aot.py` and /opt/xla-example/README.md). The flow per
+//! `python/compile/aot.py`, which documents the choice). The flow per
 //! artifact is `HloModuleProto::from_text_file` → `XlaComputation` →
 //! `PjRtClient::compile` → `PjRtLoadedExecutable::execute`.
 //!
@@ -16,7 +19,11 @@ mod artifacts;
 mod executable;
 
 pub use artifacts::{ArtifactEntry, ArtifactKind, IoSpec, Manifest, WorkloadStats};
-pub use executable::{AbcExecutable, AbcRunOutput, OnestepExecutable, PredictExecutable};
+pub use executable::{AbcExecutable, OnestepExecutable, PredictExecutable};
+
+// `AbcRunOutput` and the artifact-dir resolution live in `backend` now
+// (they are backend-agnostic); re-exported here for continuity.
+pub use crate::backend::{default_artifacts_dir, AbcRunOutput};
 
 use crate::{Error, Result};
 use std::cell::RefCell;
@@ -144,22 +151,10 @@ impl std::fmt::Debug for Runtime {
     }
 }
 
-/// Resolve the default artifacts directory: `$ABC_IPU_ARTIFACTS` if set,
-/// otherwise `./artifacts` searched upward from the current directory
-/// (so tests and benches work from target subdirectories).
-pub fn default_artifacts_dir() -> PathBuf {
-    if let Ok(dir) = std::env::var("ABC_IPU_ARTIFACTS") {
-        return PathBuf::from(dir);
-    }
-    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
-    for _ in 0..4 {
-        let candidate = cur.join("artifacts");
-        if candidate.join("manifest.json").exists() {
-            return candidate;
-        }
-        if !cur.pop() {
-            break;
-        }
-    }
-    PathBuf::from("artifacts")
+/// Whether a PJRT client can actually be opened in this build — `false`
+/// under the in-tree `xla` API stub (and for broken installs). Test
+/// skip-guards combine this with artifact presence so a stub build
+/// skips instead of panicking.
+pub fn pjrt_usable() -> bool {
+    xla::PjRtClient::cpu().is_ok()
 }

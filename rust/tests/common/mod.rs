@@ -3,6 +3,7 @@
 //! Includes a tiny property-testing harness (offline stand-in for
 //! `proptest`): deterministic random case generation over `Xoshiro256`
 //! with first-failure reporting of the seed, so failures reproduce.
+#![allow(dead_code)] // each test binary uses a different helper subset
 
 use abc_ipu::rng::Xoshiro256;
 use std::path::PathBuf;
@@ -19,7 +20,25 @@ pub fn artifacts_dir() -> PathBuf {
 
 /// Whether the AOT artifacts are present (skip-guard for PJRT tests).
 pub fn have_artifacts() -> bool {
-    artifacts_dir().join("manifest.json").exists()
+    abc_ipu::backend::have_artifacts(artifacts_dir())
+}
+
+/// A PJRT backend over the test artifact directory.
+#[cfg(feature = "pjrt")]
+pub fn pjrt_backend() -> std::sync::Arc<dyn abc_ipu::backend::Backend> {
+    std::sync::Arc::new(abc_ipu::backend::PjrtBackend::new(artifacts_dir()))
+}
+
+/// Whether PJRT can actually execute in this build (false under the
+/// in-tree `xla` stub) — the second half of the skip-guard.
+#[cfg(feature = "pjrt")]
+pub fn pjrt_usable() -> bool {
+    abc_ipu::runtime::pjrt_usable()
+}
+
+/// The native backend as a coordinator-ready trait object.
+pub fn native_backend() -> std::sync::Arc<dyn abc_ipu::backend::Backend> {
+    std::sync::Arc::new(abc_ipu::backend::NativeBackend::new())
 }
 
 /// Run `cases` random property cases; on failure, panic with the case
@@ -47,14 +66,14 @@ pub fn random_run_output(
     rng: &mut Xoshiro256,
     batch: usize,
     scale: f32,
-) -> abc_ipu::runtime::AbcRunOutput {
+) -> abc_ipu::backend::AbcRunOutput {
     let thetas: Vec<f32> = (0..batch * 8).map(|_| rng.uniform() as f32).collect();
     let distances: Vec<f32> = (0..batch).map(|_| rng.uniform() as f32 * scale).collect();
-    abc_ipu::runtime::AbcRunOutput { thetas, distances }
+    abc_ipu::backend::AbcRunOutput { thetas, distances }
 }
 
 /// Brute-force reference accept set: indices with d <= tolerance.
-pub fn brute_force_accept(out: &abc_ipu::runtime::AbcRunOutput, tolerance: f32) -> Vec<u32> {
+pub fn brute_force_accept(out: &abc_ipu::backend::AbcRunOutput, tolerance: f32) -> Vec<u32> {
     out.distances
         .iter()
         .enumerate()

@@ -2,7 +2,9 @@
 //! across device counts and return strategies, stop rules, SMC-ABC,
 //! and agreement with the CPU baseline.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires the `pjrt` cargo feature (the whole file compiles away
+//! otherwise) and `make artifacts` (skipped with a message otherwise).
+#![cfg(feature = "pjrt")]
 
 mod common;
 
@@ -10,12 +12,16 @@ use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::{AcceptedSample, Coordinator, StopRule};
 use abc_ipu::data::{synthetic, Dataset};
 use abc_ipu::model::Prior;
-use common::{artifacts_dir, have_artifacts};
+use common::{have_artifacts, pjrt_backend, pjrt_usable};
 
 macro_rules! require_artifacts {
     () => {
         if !have_artifacts() {
             eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        if !pjrt_usable() {
+            eprintln!("skipping: PJRT unavailable in this build (stub `xla` crate)");
             return;
         }
     };
@@ -54,7 +60,7 @@ fn exact_runs_deterministic_across_device_counts() {
     let mut reference: Option<Vec<(u64, u32)>> = None;
     for devices in [1usize, 2, 4] {
         let cfg = config(devices, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
-        let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+        let coord = Coordinator::new(pjrt_backend(), cfg, dataset(), Prior::paper()).unwrap();
         let r = coord.run_exact(6).unwrap();
         assert_eq!(r.metrics.runs, 6);
         let got = ids(&r.accepted);
@@ -80,7 +86,7 @@ fn exact_runs_deterministic_across_return_strategies() {
     let mut reference: Option<Vec<(u64, u32)>> = None;
     for strategy in strategies {
         let cfg = config(2, strategy, tol);
-        let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+        let coord = Coordinator::new(pjrt_backend(), cfg, dataset(), Prior::paper()).unwrap();
         let r = coord.run_exact(6).unwrap();
         let got = ids(&r.accepted);
         match &reference {
@@ -95,7 +101,7 @@ fn accepted_samples_all_satisfy_tolerance_and_prior() {
     require_artifacts!();
     let tol = tolerance();
     let cfg = config(2, ReturnStrategy::Outfeed { chunk: 250 }, tol);
-    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let coord = Coordinator::new(pjrt_backend(), cfg, dataset(), Prior::paper()).unwrap();
     let r = coord.run_exact(4).unwrap();
     let prior = Prior::paper();
     for s in &r.accepted {
@@ -114,7 +120,7 @@ fn accepted_samples_all_satisfy_tolerance_and_prior() {
 fn run_until_reaches_target() {
     require_artifacts!();
     let cfg = config(2, ReturnStrategy::Outfeed { chunk: 500 }, tolerance());
-    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let coord = Coordinator::new(pjrt_backend(), cfg, dataset(), Prior::paper()).unwrap();
     let r = coord.run(StopRule::AcceptedTarget(10)).unwrap();
     assert!(r.accepted.len() >= 10, "got {}", r.accepted.len());
     assert!(r.metrics.runs >= 1);
@@ -126,7 +132,7 @@ fn budget_exhaustion_is_an_error() {
     require_artifacts!();
     let mut cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, 1e-3); // impossible ε
     cfg.max_runs = 3;
-    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let coord = Coordinator::new(pjrt_backend(), cfg, dataset(), Prior::paper()).unwrap();
     let err = coord.run(StopRule::AcceptedTarget(5)).unwrap_err().to_string();
     assert!(err.contains("budget"), "{err}");
 }
@@ -136,7 +142,7 @@ fn missing_batch_artifact_propagates_from_workers() {
     require_artifacts!();
     let mut cfg = config(2, ReturnStrategy::Outfeed { chunk: 10 }, tolerance());
     cfg.batch_per_device = 777; // not compiled
-    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let coord = Coordinator::new(pjrt_backend(), cfg, dataset(), Prior::paper()).unwrap();
     let err = coord.run_exact(1).unwrap_err().to_string();
     assert!(err.contains("abc_b777_d16"), "{err}");
 }
@@ -147,7 +153,7 @@ fn metrics_account_for_conditional_transfers() {
     // tight-ish tolerance: most chunks skipped
     let tol = dataset().default_tolerance * 3.0;
     let cfg = config(2, ReturnStrategy::Outfeed { chunk: 50 }, tol);
-    let coord = Coordinator::new(artifacts_dir(), cfg, dataset(), Prior::paper()).unwrap();
+    let coord = Coordinator::new(pjrt_backend(), cfg, dataset(), Prior::paper()).unwrap();
     let r = coord.run_exact(4).unwrap();
     let m = &r.metrics;
     assert_eq!(m.transfers + m.transfers_skipped, 4 * (1000 / 50));
@@ -162,7 +168,7 @@ fn cpu_baseline_and_accelerator_agree_statistically() {
     let ds = dataset();
     let tol = tolerance();
     let cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
-    let coord = Coordinator::new(artifacts_dir(), cfg, ds.clone(), Prior::paper()).unwrap();
+    let coord = Coordinator::new(pjrt_backend(), cfg, ds.clone(), Prior::paper()).unwrap();
     let accel = coord.run_exact(10).unwrap();
     let cpu = abc_ipu::abc::cpu::run_until(&ds, &Prior::paper(), tol, 1000, accel.accepted.len(), 99, 10);
     assert!(!accel.accepted.is_empty() && !cpu.accepted.is_empty());
@@ -196,7 +202,7 @@ fn smc_tolerances_strictly_decrease_and_posteriors_tighten() {
         quantile: 0.5,
         box_margin: 0.3,
     };
-    let result = abc_ipu::abc::smc::run_smc(artifacts_dir(), cfg, ds, &smc_cfg).unwrap();
+    let result = abc_ipu::abc::smc::run_smc(pjrt_backend(), cfg, ds, &smc_cfg).unwrap();
     assert_eq!(result.stages.len(), 3);
     let tols = result.tolerances();
     for w in tols.windows(2) {

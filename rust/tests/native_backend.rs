@@ -1,0 +1,291 @@
+//! Integration tests of the full coordinator over the native backend.
+//!
+//! These run on the default feature set (no artifacts, no external
+//! dependencies) and pin down the acceptance contract of the backend
+//! seam:
+//!
+//! * an N-worker run is **bit-deterministic** for a fixed master seed,
+//!   independent of worker count, scheduling and return strategy;
+//! * the accepted-sample set **equals the single-threaded `abc::cpu`
+//!   baseline** (the oracle) run-for-run, sample-for-sample;
+//! * stop rules, budget errors, SMC-ABC and prediction all work
+//!   end-to-end without PJRT.
+
+mod common;
+
+use abc_ipu::abc::{predict::predict, Posterior};
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::{AcceptedSample, Coordinator, StopRule};
+use abc_ipu::data::{synthetic, Dataset};
+use abc_ipu::model::Prior;
+use common::native_backend;
+
+fn dataset() -> Dataset {
+    synthetic::default_dataset(16, 0x5eed)
+}
+
+fn config(devices: usize, strategy: ReturnStrategy, tolerance: f32) -> RunConfig {
+    RunConfig {
+        dataset: "synthetic".into(),
+        tolerance: Some(tolerance),
+        devices,
+        batch_per_device: 1000,
+        days: 16,
+        return_strategy: strategy,
+        seed: 0xFEED,
+        ..Default::default()
+    }
+}
+
+/// Full identity of a sample, bit-exact θ and distance included.
+fn fingerprints(samples: &[AcceptedSample]) -> Vec<(u64, u32, [u32; 8], u32)> {
+    samples
+        .iter()
+        .map(|s| {
+            (
+                s.run,
+                s.index,
+                s.theta.map(f32::to_bits),
+                s.distance.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// A tolerance that accepts a workable fraction on the synthetic set.
+fn tolerance() -> f32 {
+    dataset().default_tolerance * 30.0
+}
+
+#[test]
+fn exact_runs_bit_deterministic_across_device_counts() {
+    let tol = tolerance();
+    let mut reference: Option<Vec<(u64, u32, [u32; 8], u32)>> = None;
+    for devices in [1usize, 2, 4] {
+        let cfg = config(devices, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
+        let coord = Coordinator::new(native_backend(), cfg, dataset(), Prior::paper()).unwrap();
+        let r = coord.run_exact(6).unwrap();
+        assert_eq!(r.metrics.runs, 6);
+        let got = fingerprints(&r.accepted);
+        assert!(!got.is_empty(), "tolerance too tight for the test");
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => assert_eq!(&got, want, "devices={devices}"),
+        }
+    }
+}
+
+#[test]
+fn exact_runs_bit_deterministic_across_return_strategies() {
+    let tol = tolerance();
+    let strategies = [
+        ReturnStrategy::Outfeed { chunk: 1000 },
+        ReturnStrategy::Outfeed { chunk: 100 },
+        ReturnStrategy::Outfeed { chunk: 17 },
+        // k=1000 = whole batch: top-k cannot drop accepted samples
+        ReturnStrategy::TopK { k: 1000 },
+    ];
+    let mut reference: Option<Vec<(u64, u32, [u32; 8], u32)>> = None;
+    for strategy in strategies {
+        let cfg = config(2, strategy, tol);
+        let coord = Coordinator::new(native_backend(), cfg, dataset(), Prior::paper()).unwrap();
+        let r = coord.run_exact(6).unwrap();
+        let mut got = fingerprints(&r.accepted);
+        // top-k returns per-run ascending-by-distance; normalize order
+        got.sort_unstable();
+        match &mut reference {
+            None => {
+                let mut want = got.clone();
+                want.sort_unstable();
+                reference = Some(want);
+            }
+            Some(want) => assert_eq!(&got, want, "strategy {strategy:?}"),
+        }
+    }
+}
+
+#[test]
+fn accepted_set_matches_cpu_baseline_oracle() {
+    let ds = dataset();
+    let tol = tolerance();
+    let runs = 6u64;
+    // the single-threaded host baseline is the oracle: same seed, same
+    // batch geometry, unlimited target, exactly `runs` runs
+    let oracle = abc_ipu::abc::cpu::run_until(
+        &ds,
+        &Prior::paper(),
+        tol,
+        1000,
+        usize::MAX,
+        0xFEED,
+        runs,
+    );
+    assert!(!oracle.accepted.is_empty(), "oracle found nothing — tolerance too tight");
+
+    for devices in [1usize, 3] {
+        let cfg = config(devices, ReturnStrategy::Outfeed { chunk: 250 }, tol);
+        let coord =
+            Coordinator::new(native_backend(), cfg, ds.clone(), Prior::paper()).unwrap();
+        let r = coord.run_exact(runs).unwrap();
+        assert_eq!(
+            fingerprints(&r.accepted),
+            fingerprints(&oracle.accepted),
+            "coordinator ({devices} workers) diverged from the CPU oracle"
+        );
+    }
+}
+
+#[test]
+fn accepted_samples_all_satisfy_tolerance_and_prior() {
+    let tol = tolerance();
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 250 }, tol);
+    let coord = Coordinator::new(native_backend(), cfg, dataset(), Prior::paper()).unwrap();
+    let r = coord.run_exact(4).unwrap();
+    let prior = Prior::paper();
+    for s in &r.accepted {
+        assert!(s.distance <= tol);
+        assert!(prior.contains(&s.theta));
+        assert!(s.run < 4);
+        assert!((s.index as usize) < 1000);
+    }
+    // sorted by (run, index)
+    let mut sorted: Vec<(u64, u32)> = r.accepted.iter().map(|s| (s.run, s.index)).collect();
+    sorted.sort_unstable();
+    let got: Vec<(u64, u32)> = r.accepted.iter().map(|s| (s.run, s.index)).collect();
+    assert_eq!(sorted, got);
+}
+
+#[test]
+fn run_until_reaches_target() {
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 500 }, tolerance());
+    let coord = Coordinator::new(native_backend(), cfg, dataset(), Prior::paper()).unwrap();
+    let r = coord.run(StopRule::AcceptedTarget(10)).unwrap();
+    assert!(r.accepted.len() >= 10, "got {}", r.accepted.len());
+    assert!(r.metrics.runs >= 1);
+    assert!(r.metrics.samples_simulated >= r.metrics.runs * 1000);
+}
+
+#[test]
+fn budget_exhaustion_is_an_error() {
+    let mut cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, 1e-3); // impossible ε
+    cfg.max_runs = 3;
+    let coord = Coordinator::new(native_backend(), cfg, dataset(), Prior::paper()).unwrap();
+    let err = coord.run(StopRule::AcceptedTarget(5)).unwrap_err().to_string();
+    assert!(err.contains("budget"), "{err}");
+}
+
+#[test]
+fn metrics_account_for_conditional_transfers() {
+    // tight-ish tolerance: most chunks skipped
+    let tol = dataset().default_tolerance * 3.0;
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 50 }, tol);
+    let coord = Coordinator::new(native_backend(), cfg, dataset(), Prior::paper()).unwrap();
+    let r = coord.run_exact(4).unwrap();
+    let m = &r.metrics;
+    assert_eq!(m.transfers + m.transfers_skipped, 4 * (1000 / 50));
+    assert!(m.transfer_skip_rate() > 0.5, "skip rate {}", m.transfer_skip_rate());
+    // conditional outfeed must beat the full-array volume
+    assert!(m.bytes_to_host < 4 * 1000 * 9 * 4);
+}
+
+#[test]
+fn posterior_agrees_with_cpu_baseline_statistically() {
+    // different seeds on the two paths: agreement must be statistical,
+    // not stream identity (that case is the oracle test above)
+    let ds = dataset();
+    let tol = tolerance();
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
+    let coord = Coordinator::new(native_backend(), cfg, ds.clone(), Prior::paper()).unwrap();
+    let accel = coord.run_exact(10).unwrap();
+    let cpu = abc_ipu::abc::cpu::run_until(&ds, &Prior::paper(), tol, 1000, usize::MAX, 99, 10);
+    assert!(!accel.accepted.is_empty() && !cpu.accepted.is_empty());
+    let ra = accel.metrics.samples_accepted as f64 / accel.metrics.samples_simulated as f64;
+    let rc = cpu.metrics.samples_accepted as f64 / cpu.metrics.samples_simulated as f64;
+    assert!(
+        ra / rc < 3.0 && rc / ra < 3.0,
+        "acceptance rates diverge: coordinator {ra:.4e} vs cpu {rc:.4e}"
+    );
+}
+
+#[test]
+fn smc_tolerances_strictly_decrease_and_posteriors_tighten() {
+    let ds = dataset();
+    let cfg = RunConfig {
+        dataset: "synthetic".into(),
+        tolerance: Some(tolerance()),
+        devices: 2,
+        batch_per_device: 1000,
+        days: 16,
+        return_strategy: ReturnStrategy::Outfeed { chunk: 1000 },
+        seed: 0xFEED,
+        max_runs: 400,
+        ..Default::default()
+    };
+    let smc_cfg = abc_ipu::abc::smc::SmcConfig {
+        stages: 2,
+        samples_per_stage: 15,
+        quantile: 0.5,
+        box_margin: 0.3,
+    };
+    let result = abc_ipu::abc::smc::run_smc(native_backend(), cfg, ds, &smc_cfg).unwrap();
+    assert_eq!(result.stages.len(), 3);
+    let tols = result.tolerances();
+    for w in tols.windows(2) {
+        assert!(w[1] < w[0], "tolerances must decrease: {tols:?}");
+    }
+    // final stage distances all under the final tolerance
+    let last = result.final_posterior();
+    for s in last.samples() {
+        assert!(s.distance <= tols[tols.len() - 1]);
+    }
+}
+
+#[test]
+fn prediction_from_inferred_posterior_works_end_to_end() {
+    let ds = dataset();
+    let cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, tolerance());
+    let coord = Coordinator::new(native_backend(), cfg, ds.clone(), Prior::paper()).unwrap();
+    let r = coord.run(StopRule::AcceptedTarget(5)).unwrap();
+    let post = Posterior::new(r.accepted);
+    let horizon = 30;
+    let pred =
+        predict(&*native_backend(), &post, &ds.consts(), horizon, [7, 7], 50).unwrap();
+    assert_eq!(pred.days, horizon);
+    assert_eq!(pred.active.p50.len(), horizon);
+    let consts = ds.consts();
+    assert_eq!(pred.active.p50[0], consts[0] as f64);
+    for t in 0..horizon {
+        assert!(pred.active.p5[t] <= pred.active.p95[t]);
+        // cumulative compartments stay monotone in the median band
+        if t > 0 {
+            assert!(pred.deaths.p50[t] >= pred.deaths.p50[t - 1] - 1e-6);
+        }
+    }
+}
+
+#[test]
+fn bundled_jhu_sample_parses_and_onset_aligns() {
+    // guards the offline sample under data/jhu_sample/ that the
+    // jhu_workflow example depends on
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("data/jhu_sample");
+    if !dir.exists() {
+        eprintln!("skipping: bundled JHU sample missing");
+        return;
+    }
+    let jhu = abc_ipu::data::jhu::JhuDataset::load_dir(&dir).unwrap();
+    for (country, pop) in [("Italy", 60_360_000.0f32), ("US", 331_000_000.0),
+                           ("New Zealand", 4_920_000.0)] {
+        let ds = jhu
+            .country_dataset(country, pop, 49, abc_ipu::data::jhu::ONSET_THRESHOLD)
+            .unwrap_or_else(|e| panic!("{country}: {e}"));
+        assert_eq!(ds.days(), 49);
+        // onset rule: day-0 cumulative >= 100
+        let day0 = ds.observed.active[0] + ds.observed.recovered[0] + ds.observed.deaths[0];
+        assert!(day0 >= 100.0, "{country} day0 {day0}");
+        // cumulative monotonicity
+        for t in 1..49 {
+            assert!(ds.observed.recovered[t] >= ds.observed.recovered[t - 1]);
+            assert!(ds.observed.deaths[t] >= ds.observed.deaths[t - 1]);
+        }
+    }
+}

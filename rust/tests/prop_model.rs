@@ -181,6 +181,7 @@ fn prop_json_config_roundtrip() {
         let batch = 1 + rng.below(100_000) as usize;
         let cfg = abc_ipu::config::RunConfig {
             dataset: format!("ds{}", rng.below(100)),
+            backend: if rng.below(2) == 0 { "native".into() } else { "pjrt".into() },
             tolerance: if rng.below(2) == 0 { None } else { Some(rng.uniform() as f32 * 1e5 + 1.0) },
             accepted_samples: 1 + rng.below(1_000) as usize,
             devices: 1 + rng.below(16) as usize,
