@@ -1,0 +1,130 @@
+//! Multi-scenario inference on one shared worker pool.
+//!
+//! The paper's closing demonstration fits three countries; this example
+//! runs that study the scheduler way: pilot-calibrate a tolerance per
+//! country, build a [`ScenarioSet`] matrix, submit every scenario to
+//! one shared pool, and render the per-country posteriors side by side
+//! (paper Fig 6 style). For contrast it then repeats the exact same
+//! jobs as the naive sequential loop of solo coordinator runs — the
+//! per-job accepted sets are bit-identical (the scheduler's determinism
+//! contract), only the wall-clock differs.
+//!
+//! ```text
+//! cargo run --release --example multi_scenario
+//! ```
+//!
+//! Flags: `--samples N` (default 40), `--batch B` (default 5000),
+//! `--workers W` (pool size, default 4 or $ABC_IPU_TEST_WORKERS),
+//! `--rate R` (pilot acceptance target, default 2e-3).
+
+use abc_ipu::abc::{calibrate_tolerance, Posterior};
+use abc_ipu::config::{ReturnStrategy, RunConfig, ScenarioSet};
+use abc_ipu::coordinator::{Coordinator, StopRule};
+use abc_ipu::data::embedded;
+use abc_ipu::model::Prior;
+use abc_ipu::report::{fmt_secs, scenario_comparison, write_csv};
+use abc_ipu::scheduler::{JobSpec, Scheduler};
+use abc_ipu::util::cli::Spec;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> abc_ipu::Result<()> {
+    let args = Spec::new()
+        .values(&["samples", "batch", "workers", "rate"])
+        .parse(std::env::args().skip(1))?;
+    let samples: usize = args.parse_or("samples", 40)?;
+    let batch: usize = args.parse_or("batch", 5_000)?;
+    let default_workers: usize = std::env::var("ABC_IPU_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let workers: usize = args.parse_or("workers", default_workers)?;
+    let rate: f64 = args.parse_or("rate", 2e-3)?;
+
+    let backend = Arc::new(abc_ipu::backend::NativeBackend::new());
+    let base = RunConfig {
+        devices: workers,
+        batch_per_device: batch,
+        days: 49,
+        return_strategy: ReturnStrategy::Outfeed { chunk: (batch / 10).max(1) },
+        accepted_samples: samples,
+        seed: 0x5CED,
+        max_runs: 10_000,
+        ..Default::default()
+    };
+
+    // 1. Pilot-calibrate ε per country (the paper hand-tunes per
+    //    country; abc::pilot is the scaled-down equivalent), then build
+    //    the scenario matrix with the calibrated tolerances baked in.
+    println!("pilot-calibrating tolerances (target rate {rate:.1e})...");
+    let mut scenarios = Vec::new();
+    for dataset in embedded::all() {
+        let mut cfg = base.clone();
+        cfg.dataset = dataset.name.clone();
+        let pilot = calibrate_tolerance(backend.clone(), &cfg, &dataset, rate, 1)?;
+        println!("  {:<12} ε = {:.3e}", dataset.name, pilot.tolerance);
+        let mut set = ScenarioSet::new(cfg)
+            .dataset(dataset.name.clone())
+            .tolerance(pilot.tolerance)
+            .stop(StopRule::AcceptedTarget(samples))
+            .build()?;
+        scenarios.append(&mut set);
+    }
+
+    // 2. Shared pool: all countries multiplexed over `workers` workers.
+    let scheduler = Scheduler::new(backend.clone(), workers);
+    let t0 = Instant::now();
+    let report = scheduler.run_scenarios(&scenarios)?;
+    let shared = t0.elapsed();
+    let results = report.into_results()?;
+
+    // 3. The naive baseline: the same jobs as a sequential loop of solo
+    //    coordinator runs (each still using `workers` devices).
+    let fingerprint = |accepted: &[abc_ipu::coordinator::AcceptedSample]| -> Vec<(u64, u32, [u32; 8])> {
+        accepted
+            .iter()
+            .map(|s| (s.run, s.index, s.theta.map(f32::to_bits)))
+            .collect()
+    };
+    let t0 = Instant::now();
+    let mut sequential_fingerprints = Vec::new();
+    for sc in &scenarios {
+        let job = JobSpec::from_scenario(sc)?;
+        let coord = Coordinator::new(backend.clone(), job.config, job.dataset, Prior::paper())?;
+        sequential_fingerprints.push(fingerprint(&coord.run(sc.stop)?.accepted));
+    }
+    let sequential = t0.elapsed();
+
+    // 4. Per-country posteriors side by side (paper Fig 6 style).
+    let posteriors: Vec<(String, Posterior)> = results
+        .iter()
+        .map(|(name, r)| (name.clone(), Posterior::new(r.accepted.clone())))
+        .collect();
+    let refs: Vec<(&str, &Posterior)> =
+        posteriors.iter().map(|(n, p)| (n.as_str(), p)).collect();
+    let table = scenario_comparison(
+        "Fig 6 analogue: per-country posteriors from one shared pool",
+        &refs,
+    );
+    println!("\n{}", table.render());
+    let path = write_csv("reports", "multi_scenario", &table.to_csv())?;
+    println!("written to {}", path.display());
+
+    // 5. Identity + timing contrast: bit-exact (run, index, θ) equality
+    //    between the shared-pool and solo results, per job.
+    for ((name, r), solo) in results.iter().zip(&sequential_fingerprints) {
+        assert_eq!(
+            &fingerprint(&r.accepted),
+            solo,
+            "{name}: shared-pool accepted set diverged from the solo run"
+        );
+    }
+    println!("\nscheduler ({workers} workers, {} scenarios):", scenarios.len());
+    println!("  shared pool:     {}", fmt_secs(shared.as_secs_f64()));
+    println!("  sequential loop: {}", fmt_secs(sequential.as_secs_f64()));
+    println!(
+        "  speedup:         {:.2}x  (same per-job results, bit for bit)",
+        sequential.as_secs_f64() / shared.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}

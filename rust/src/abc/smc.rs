@@ -10,13 +10,22 @@
 //! narrowing proposal, accept under a tightening ε — while staying
 //! expressible as the AOT-compiled uniform sampler (an adaptation
 //! documented in DESIGN.md §2).
+//!
+//! Multi-scenario studies go through [`run_smc_scenarios`]: every
+//! stage fans *all* scenarios out as one schedule on a shared worker
+//! pool ([`crate::scheduler`]), so stage `s` of country A overlaps
+//! stage `s` of country B instead of idling the pool between
+//! per-country runs. Per-scenario results are bit-identical to looping
+//! [`run_smc`] scenario by scenario (the scheduler's determinism
+//! contract).
 
 use super::Posterior;
 use crate::backend::Backend;
 use crate::config::RunConfig;
-use crate::coordinator::{Coordinator, StopRule};
+use crate::coordinator::StopRule;
 use crate::data::Dataset;
 use crate::model::{Prior, Theta, N_PARAMS};
+use crate::scheduler::{JobSpec, Scheduler};
 use crate::stats::percentile;
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -24,12 +33,14 @@ use std::sync::Arc;
 /// Configuration of an SMC-ABC schedule.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SmcConfig {
-    /// Number of refinement stages after the initial one.
+    /// Number of refinement stages after the initial one (0 = a single
+    /// prior-wide stage, no refinement).
     pub stages: usize,
     /// Accepted samples per stage.
     pub samples_per_stage: usize,
-    /// Quantile of the accepted distances that becomes the next ε
-    /// (0.5 = median, the common choice).
+    /// Quantile of the accepted distances that becomes the next ε, in
+    /// `[0, 1]` (0.5 = median, the common choice; 0 targets the best
+    /// accepted distance, 1 the worst).
     pub quantile: f64,
     /// Margin added around the survivors' bounding box, as a fraction of
     /// the box width per side.
@@ -39,6 +50,22 @@ pub struct SmcConfig {
 impl Default for SmcConfig {
     fn default() -> Self {
         Self { stages: 3, samples_per_stage: 100, quantile: 0.5, box_margin: 0.25 }
+    }
+}
+
+impl SmcConfig {
+    /// Validate stage/quantile constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.samples_per_stage == 0 {
+            return Err(Error::Config("samples_per_stage must be >= 1".into()));
+        }
+        if !(0.0..=1.0).contains(&self.quantile) {
+            return Err(Error::Config(format!(
+                "quantile {} out of [0, 1]",
+                self.quantile
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -77,72 +104,158 @@ impl SmcResult {
     }
 }
 
-/// Run SMC-ABC on the parallel coordinator over any backend.
+/// One scenario of a multi-scenario SMC study: a named
+/// (config, dataset) pair. Each scenario keeps its own prior box and
+/// tolerance schedule; only the worker pool is shared.
+#[derive(Debug, Clone)]
+pub struct SmcScenario {
+    /// Scenario name (usually the dataset name).
+    pub name: String,
+    /// Base run configuration (per-stage seeds derive from its seed).
+    pub config: RunConfig,
+    /// Dataset to fit.
+    pub dataset: Dataset,
+}
+
+/// Per-scenario refinement state between stages.
+struct ScenarioState {
+    prior: Prior,
+    tolerance: f32,
+    stages: Vec<SmcStage>,
+}
+
+/// Run SMC-ABC for many scenarios, fanning every stage out across one
+/// shared pool of `workers` device workers.
+///
+/// Per-stage, one [`JobSpec`] per scenario is submitted as a single
+/// schedule: the pool drains all scenarios' stage-`s` work before any
+/// scenario advances to stage `s+1` (stages are sequential by
+/// construction — stage `s+1`'s prior box and ε come from stage `s`).
+/// The first failing job (e.g. budget exhaustion) aborts the study with
+/// that job's error.
+pub fn run_smc_scenarios(
+    backend: Arc<dyn Backend>,
+    scenarios: &[SmcScenario],
+    smc: &SmcConfig,
+    workers: usize,
+) -> Result<Vec<(String, SmcResult)>> {
+    if scenarios.is_empty() {
+        return Err(Error::Config("smc needs at least one scenario".into()));
+    }
+    smc.validate()?;
+
+    let mut states: Vec<ScenarioState> = scenarios
+        .iter()
+        .map(|s| ScenarioState {
+            prior: Prior::paper(),
+            tolerance: s.config.tolerance.unwrap_or(s.dataset.default_tolerance),
+            stages: Vec::new(),
+        })
+        .collect();
+
+    let scheduler = Scheduler::new(backend, workers);
+    for stage in 0..=smc.stages {
+        // Fan out: one job per scenario, all sharing the pool.
+        let mut jobs = Vec::with_capacity(scenarios.len());
+        for (scenario, state) in scenarios.iter().zip(&states) {
+            let mut cfg = scenario.config.clone();
+            cfg.tolerance = Some(state.tolerance);
+            // Deterministic, stage-distinct seeding. Hash-mix the stage
+            // instead of adding it: `seed + stage` would make replicate
+            // seeds s and s+1 share identical key streams in adjacent
+            // stages, silently correlating "independent" replicates.
+            cfg.seed = crate::rng::splitmix64(
+                scenario.config.seed ^ (stage as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            jobs.push(JobSpec::new(
+                scenario.name.clone(),
+                cfg,
+                scenario.dataset.clone(),
+                state.prior.clone(),
+                StopRule::AcceptedTarget(smc.samples_per_stage),
+            )?);
+        }
+        let report = scheduler.run(jobs)?;
+
+        for (state, job) in states.iter_mut().zip(report.jobs) {
+            let result = job.outcome?;
+            let posterior = Posterior::new(result.accepted.clone());
+            state.stages.push(SmcStage {
+                stage,
+                tolerance: state.tolerance,
+                posterior: posterior.clone(),
+                prior_low: *state.prior.low(),
+                prior_high: *state.prior.high(),
+                runs: result.metrics.runs,
+            });
+
+            if stage == smc.stages {
+                continue;
+            }
+            // next stage: shrink the box around survivors, tighten ε
+            let (lo, hi) = posterior.bounding_box();
+            let mut low = lo;
+            let mut high = hi;
+            for p in 0..N_PARAMS {
+                let margin = (hi[p] - lo[p]) * smc.box_margin;
+                low[p] = (lo[p] - margin).max(state.prior.low()[p]);
+                high[p] = (hi[p] + margin).min(state.prior.high()[p]);
+            }
+            state.prior = Prior::new(low, high)?;
+            let dists: Vec<f32> =
+                posterior.samples().iter().map(|s| s.distance).collect();
+            let next = percentile(&dists, smc.quantile * 100.0) as f32;
+            // guard: ε must strictly decrease but not collapse to zero
+            state.tolerance = next.min(state.tolerance * 0.95).max(f32::MIN_POSITIVE);
+        }
+    }
+    Ok(scenarios
+        .iter()
+        .zip(states)
+        .map(|(s, st)| (s.name.clone(), SmcResult { stages: st.stages }))
+        .collect())
+}
+
+/// Run SMC-ABC for one dataset on the parallel coordinator over any
+/// backend — a single-scenario [`run_smc_scenarios`] with a pool of
+/// `base_config.devices` workers.
 pub fn run_smc(
     backend: Arc<dyn Backend>,
     base_config: RunConfig,
     dataset: Dataset,
     smc: &SmcConfig,
 ) -> Result<SmcResult> {
-    if smc.samples_per_stage == 0 {
-        return Err(Error::Config("samples_per_stage must be >= 1".into()));
-    }
-    if !(0.0..1.0).contains(&smc.quantile) {
-        return Err(Error::Config(format!("quantile {} out of (0,1)", smc.quantile)));
-    }
-    let mut prior = Prior::paper();
-    let mut tolerance = base_config
-        .tolerance
-        .unwrap_or(dataset.default_tolerance);
-
-    let mut stages = Vec::new();
-    for stage in 0..=smc.stages {
-        let mut cfg = base_config.clone();
-        cfg.tolerance = Some(tolerance);
-        // deterministic but stage-distinct seeding
-        cfg.seed = base_config.seed.wrapping_add(stage as u64);
-        let coord =
-            Coordinator::new(backend.clone(), cfg, dataset.clone(), prior.clone())?;
-        let result = coord.run(StopRule::AcceptedTarget(smc.samples_per_stage))?;
-        let posterior = Posterior::new(result.accepted.clone());
-
-        stages.push(SmcStage {
-            stage,
-            tolerance,
-            posterior: posterior.clone(),
-            prior_low: *prior.low(),
-            prior_high: *prior.high(),
-            runs: result.metrics.runs,
-        });
-
-        if stage == smc.stages {
-            break;
-        }
-        // next stage: shrink the box around survivors, tighten ε
-        let (lo, hi) = posterior.bounding_box();
-        let mut low = lo;
-        let mut high = hi;
-        for p in 0..N_PARAMS {
-            let margin = (hi[p] - lo[p]) * smc.box_margin;
-            low[p] = (lo[p] - margin).max(prior.low()[p]);
-            high[p] = (hi[p] + margin).min(prior.high()[p]);
-        }
-        prior = Prior::new(low, high)?;
-        let dists: Vec<f32> =
-            posterior.samples().iter().map(|s| s.distance).collect();
-        let next = percentile(&dists, smc.quantile * 100.0) as f32;
-        // guard: ε must strictly decrease but not collapse to zero
-        tolerance = next.min(tolerance * 0.95).max(f32::MIN_POSITIVE);
-    }
-    Ok(SmcResult { stages })
+    let workers = base_config.devices;
+    let scenario = SmcScenario {
+        name: dataset.name.clone(),
+        config: base_config,
+        dataset,
+    };
+    let mut results = run_smc_scenarios(backend, &[scenario], smc, workers)?;
+    Ok(results.pop().expect("single scenario").1)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ReturnStrategy;
 
     fn native() -> Arc<dyn Backend> {
         Arc::new(crate::backend::NativeBackend::new())
+    }
+
+    fn tiny_config(ds: &Dataset) -> RunConfig {
+        RunConfig {
+            dataset: "synthetic".into(),
+            tolerance: Some(ds.default_tolerance * 30.0),
+            devices: 2,
+            batch_per_device: 500,
+            days: 16,
+            return_strategy: ReturnStrategy::Outfeed { chunk: 500 },
+            seed: 0xFEED,
+            max_runs: 400,
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -151,13 +264,74 @@ mod tests {
         let ds = crate::data::synthetic::default_dataset(16, 0);
         assert!(run_smc(native(), RunConfig::default(), ds.clone(), &smc).is_err());
         let smc = SmcConfig { quantile: 1.5, ..Default::default() };
+        assert!(run_smc(native(), RunConfig::default(), ds.clone(), &smc).is_err());
+        let smc = SmcConfig { quantile: -0.1, ..Default::default() };
         assert!(run_smc(native(), RunConfig::default(), ds, &smc).is_err());
+        assert!(SmcConfig::default().validate().is_ok());
     }
 
     #[test]
     fn default_schedule_sane() {
         let smc = SmcConfig::default();
         assert!(smc.stages >= 1);
-        assert!((0.0..1.0).contains(&smc.quantile));
+        assert!((0.0..=1.0).contains(&smc.quantile));
+    }
+
+    #[test]
+    fn single_stage_schedule_runs_end_to_end() {
+        // stages = 0: exactly one prior-wide stage, no refinement —
+        // the SmcConfig edge case this once mishandled.
+        let ds = crate::data::synthetic::default_dataset(16, 0x5eed);
+        let cfg = tiny_config(&ds);
+        let smc = SmcConfig { stages: 0, samples_per_stage: 8, ..Default::default() };
+        let result = run_smc(native(), cfg, ds, &smc).unwrap();
+        assert_eq!(result.stages.len(), 1);
+        assert!(result.final_posterior().len() >= 8);
+    }
+
+    #[test]
+    fn boundary_quantiles_are_valid() {
+        // quantile 0 and 1 are legal (best/worst accepted distance);
+        // with stages = 0 the quantile is never applied, so this pins
+        // validation only.
+        let ds = crate::data::synthetic::default_dataset(16, 0x5eed);
+        let smc = SmcConfig { stages: 0, samples_per_stage: 5, quantile: 0.0, ..Default::default() };
+        assert!(run_smc(native(), tiny_config(&ds), ds.clone(), &smc).is_ok());
+        let smc = SmcConfig { stages: 0, samples_per_stage: 5, quantile: 1.0, ..Default::default() };
+        assert!(run_smc(native(), tiny_config(&ds), ds, &smc).is_ok());
+    }
+
+    #[test]
+    fn scenario_fanout_matches_sequential_smc_loop() {
+        let a = crate::data::synthetic::default_dataset(16, 0x5eed);
+        let b = crate::data::synthetic::default_dataset(16, 0xBEEF);
+        let mut cfg_b = tiny_config(&b);
+        cfg_b.seed = 0xB0B;
+        let scenarios = vec![
+            SmcScenario { name: "a".into(), config: tiny_config(&a), dataset: a.clone() },
+            SmcScenario { name: "b".into(), config: cfg_b.clone(), dataset: b.clone() },
+        ];
+        let smc = SmcConfig { stages: 1, samples_per_stage: 10, ..Default::default() };
+        let fanned = run_smc_scenarios(native(), &scenarios, &smc, 3).unwrap();
+
+        let solo_a = run_smc(native(), tiny_config(&a), a, &smc).unwrap();
+        let solo_b = run_smc(native(), cfg_b, b, &smc).unwrap();
+        assert_eq!(fanned.len(), 2);
+        for ((name, fanned_result), solo) in fanned.iter().zip([solo_a, solo_b]) {
+            assert_eq!(fanned_result.tolerances(), solo.tolerances(), "{name}");
+            let f: Vec<[u32; 8]> = fanned_result
+                .final_posterior()
+                .samples()
+                .iter()
+                .map(|s| s.theta.map(f32::to_bits))
+                .collect();
+            let s: Vec<[u32; 8]> = solo
+                .final_posterior()
+                .samples()
+                .iter()
+                .map(|s| s.theta.map(f32::to_bits))
+                .collect();
+            assert_eq!(f, s, "{name}");
+        }
     }
 }

@@ -5,7 +5,12 @@
 //! strategy — with JSON round-tripping (via the in-tree [`crate::util::json`]
 //! parser) so jobs are reproducible from a file (`repro infer --config
 //! job.json`) and CLI flags can override individual fields.
+//!
+//! [`ScenarioSet`] expands one base `RunConfig` into a *scenario
+//! matrix* — datasets × tolerances × seeds — for the multi-scenario
+//! scheduler ([`crate::scheduler`], DESIGN.md §7).
 
+use crate::coordinator::StopRule;
 use crate::util::json::Json;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -216,6 +221,153 @@ impl RunConfig {
     }
 }
 
+/// One named scenario produced by [`ScenarioSet`]: a complete
+/// [`RunConfig`] plus the stop rule the scheduler should apply.
+/// Resolved into a runnable job by
+/// [`crate::scheduler::JobSpec::from_scenario`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    /// Derived scenario name (`<dataset>[-eps…][-s…]`).
+    pub name: String,
+    /// The expanded configuration (dataset, tolerance and seed filled
+    /// in from the matrix axes).
+    pub config: RunConfig,
+    /// Stop rule shared by the whole set.
+    pub stop: StopRule,
+}
+
+/// Builder for a scenario matrix: one base [`RunConfig`] expanded over
+/// datasets × tolerances × seeds, all sharing one stop rule. Every
+/// combination becomes one [`ScenarioConfig`]; feed the result to
+/// [`crate::scheduler::Scheduler::run_scenarios`] to multiplex them
+/// over one worker pool.
+///
+/// ```no_run
+/// use abc_ipu::config::{RunConfig, ScenarioSet};
+/// use abc_ipu::coordinator::StopRule;
+///
+/// let scenarios = ScenarioSet::new(RunConfig::default())
+///     .datasets(["italy", "usa", "new_zealand"])
+///     .seeds(&[1, 2])
+///     .stop(StopRule::AcceptedTarget(100))
+///     .build()
+///     .unwrap(); // 3 datasets × 2 seeds = 6 scenarios
+/// # assert_eq!(scenarios.len(), 6);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ScenarioSet {
+    base: RunConfig,
+    datasets: Vec<String>,
+    tolerances: Vec<Option<f32>>,
+    seeds: Vec<u64>,
+    stop: StopRule,
+}
+
+impl ScenarioSet {
+    /// Start a matrix from a base configuration. The default stop rule
+    /// targets `base.accepted_samples` accepted samples; the default
+    /// tolerance and seed axes are the base's own values.
+    pub fn new(base: RunConfig) -> Self {
+        let stop = StopRule::AcceptedTarget(base.accepted_samples);
+        Self {
+            base,
+            datasets: Vec::new(),
+            tolerances: Vec::new(),
+            seeds: Vec::new(),
+            stop,
+        }
+    }
+
+    /// Add one dataset (embedded country name or `synthetic`).
+    pub fn dataset(mut self, name: impl Into<String>) -> Self {
+        self.datasets.push(name.into());
+        self
+    }
+
+    /// Add several datasets.
+    pub fn datasets<I, S>(mut self, names: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.datasets.extend(names.into_iter().map(Into::into));
+        self
+    }
+
+    /// Add an explicit tolerance variant (the ε axis of the matrix).
+    pub fn tolerance(mut self, eps: f32) -> Self {
+        self.tolerances.push(Some(eps));
+        self
+    }
+
+    /// Add the dataset-default tolerance as a variant.
+    pub fn default_tolerance(mut self) -> Self {
+        self.tolerances.push(None);
+        self
+    }
+
+    /// Add one master-seed variant (the independent-replicate axis).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seeds.push(seed);
+        self
+    }
+
+    /// Add several seeds.
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.seeds.extend_from_slice(seeds);
+        self
+    }
+
+    /// Stop rule applied to every scenario.
+    pub fn stop(mut self, stop: StopRule) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    /// Expand the matrix into named, validated scenarios
+    /// (dataset-major, then tolerance, then seed). Axis suffixes are
+    /// appended to the name only when that axis has more than one
+    /// variant.
+    pub fn build(self) -> Result<Vec<ScenarioConfig>> {
+        if self.datasets.is_empty() {
+            return Err(Error::Config(
+                "scenario set needs at least one dataset".into(),
+            ));
+        }
+        let tolerances = if self.tolerances.is_empty() {
+            vec![self.base.tolerance]
+        } else {
+            self.tolerances
+        };
+        let seeds = if self.seeds.is_empty() { vec![self.base.seed] } else { self.seeds };
+
+        let mut out = Vec::with_capacity(self.datasets.len() * tolerances.len() * seeds.len());
+        for ds in &self.datasets {
+            for (ti, tol) in tolerances.iter().enumerate() {
+                for seed in &seeds {
+                    let mut cfg = self.base.clone();
+                    cfg.dataset = ds.clone();
+                    cfg.tolerance = *tol;
+                    cfg.seed = *seed;
+                    cfg.validate()?;
+                    let mut name = ds.clone();
+                    if tolerances.len() > 1 {
+                        match tol {
+                            Some(e) => name.push_str(&format!("-eps{ti}_{e:.0}")),
+                            None => name.push_str(&format!("-eps{ti}_default")),
+                        }
+                    }
+                    if seeds.len() > 1 {
+                        name.push_str(&format!("-s{seed}"));
+                    }
+                    out.push(ScenarioConfig { name, config: cfg, stop: self.stop });
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,5 +448,60 @@ mod tests {
     fn samples_per_round() {
         let cfg = RunConfig { devices: 4, batch_per_device: 100_000, ..Default::default() };
         assert_eq!(cfg.samples_per_round(), 400_000);
+    }
+
+    #[test]
+    fn scenario_set_cross_product_and_names() {
+        let scenarios = ScenarioSet::new(RunConfig::default())
+            .datasets(["italy", "usa"])
+            .tolerance(2e5)
+            .tolerance(1e5)
+            .seeds(&[7, 8, 9])
+            .stop(StopRule::ExactRuns(4))
+            .build()
+            .unwrap();
+        assert_eq!(scenarios.len(), 2 * 2 * 3);
+        // dataset-major, then tolerance, then seed
+        assert_eq!(scenarios[0].name, "italy-eps0_200000-s7");
+        assert_eq!(scenarios[0].config.tolerance, Some(2e5));
+        assert_eq!(scenarios[0].config.seed, 7);
+        assert_eq!(scenarios[5].name, "italy-eps1_100000-s9");
+        assert_eq!(scenarios[6].config.dataset, "usa");
+        for s in &scenarios {
+            assert_eq!(s.stop, StopRule::ExactRuns(4));
+        }
+        // names unique across the matrix
+        let mut names: Vec<&str> = scenarios.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), scenarios.len());
+    }
+
+    #[test]
+    fn scenario_set_single_axis_keeps_plain_names() {
+        let scenarios = ScenarioSet::new(RunConfig::default())
+            .dataset("new_zealand")
+            .build()
+            .unwrap();
+        assert_eq!(scenarios.len(), 1);
+        assert_eq!(scenarios[0].name, "new_zealand");
+        // default stop rule targets the base's accepted_samples
+        assert_eq!(
+            scenarios[0].stop,
+            StopRule::AcceptedTarget(RunConfig::default().accepted_samples)
+        );
+        // base tolerance/seed pass through untouched
+        assert_eq!(scenarios[0].config.tolerance, RunConfig::default().tolerance);
+        assert_eq!(scenarios[0].config.seed, RunConfig::default().seed);
+    }
+
+    #[test]
+    fn scenario_set_rejects_empty_and_invalid() {
+        assert!(ScenarioSet::new(RunConfig::default()).build().is_err());
+        let err = ScenarioSet::new(RunConfig::default())
+            .dataset("italy")
+            .tolerance(-1.0)
+            .build();
+        assert!(err.is_err());
     }
 }

@@ -1,29 +1,34 @@
-//! Device worker: one simulated accelerator.
+//! Device-side primitives: one simulated accelerator's share of a run.
 //!
-//! A worker owns its own simulation engine, opened through the
-//! [`Backend`] seam on the worker's own thread (mirroring per-device
-//! program residency on real IPUs; also required on the PJRT path
-//! because `xla::PjRtClient` is thread-local). Its loop:
+//! Since the scheduler refactor, a *worker thread* is job-agnostic: it
+//! belongs to a shared pool (`crate::scheduler::pool`) and every work
+//! item it claims carries its own [`JobContext`] — the `AbcJob`, the
+//! tolerance, the return strategy and the job's private RNG key
+//! namespace. This module keeps the device-side pieces that are
+//! per-*run* rather than per-*pool*:
 //!
-//! 1. claim the next global run index from the leader's atomic counter,
-//! 2. derive the run's key (a function of the run index only),
-//! 3. execute one batched ABC run on the engine,
-//! 4. apply the device-side return strategy (conditional chunked
-//!    outfeed or Top-k selection),
-//! 5. ship the resulting [`Transfer`] to the leader.
+//! * [`JobContext`] — everything that binds a work item to its job,
+//! * [`execute_work`] — run one work item on an already-open engine:
+//!   derive the run key, execute the batched ABC run, apply the
+//!   device-side half of the sample-return strategy (conditional
+//!   chunked outfeed or Top-k selection, paper §3.2),
+//! * [`Transfer`] / [`DeviceReport`] — what crosses the device→host
+//!   boundary, tagged with the job it belongs to so the leader can
+//!   demux results per job.
 //!
-//! Workers stop when the leader raises the stop flag or the run budget
-//! is exhausted.
+//! Reproducibility: the run key is `seeds.key(0, run)` — a function of
+//! the job's master seed and the job-local run index only, never of the
+//! device or the pool composition — so each job's sample stream is
+//! identical no matter how many jobs share the pool or how work
+//! interleaves.
 
 use super::outfeed::{chunk_batch, OutfeedChunk};
 use super::topk::{top_k_selection, TopKSelection};
-use crate::backend::{AbcJob, Backend};
+use crate::backend::{AbcEngine, AbcJob, AbcRunOutput};
 use crate::config::ReturnStrategy;
-use crate::metrics::{RunMetrics, Stopwatch};
+use crate::metrics::Stopwatch;
 use crate::rng::SeedSequence;
 use crate::Result;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 /// Device-side output of one run, after return-strategy filtering.
@@ -53,12 +58,32 @@ impl Transfer {
     }
 }
 
-/// One run's report from a device worker to the leader.
+/// Everything that binds a work item to its inference job. One
+/// `JobContext` is shared (via `Arc`) by all work items of a job; a
+/// pool worker opens one engine per distinct job it encounters.
+#[derive(Debug, Clone)]
+pub(crate) struct JobContext {
+    /// The backend-facing job definition (batch, days, observed, prior box).
+    pub job: AbcJob,
+    /// Acceptance tolerance ε of this job.
+    pub tolerance: f32,
+    /// Device-side sample-return strategy.
+    pub strategy: ReturnStrategy,
+    /// The job's private RNG key namespace, rooted at the job's master
+    /// seed. Keys depend only on the job-local run index.
+    pub seeds: SeedSequence,
+}
+
+/// One run's report from a pool worker to the leader.
 #[derive(Debug)]
 pub struct DeviceReport {
-    /// Which device executed the run.
+    /// Scheduler-local id of the job this run belongs to (results demux
+    /// on this; 0 for a solo `Coordinator::run`).
+    pub job: u32,
+    /// Which pool worker ("device") executed the run. Provenance only —
+    /// never part of the reproducibility contract.
     pub device: u32,
-    /// Global run index.
+    /// Job-local run index.
     pub run: u64,
     /// Engine execution time of this run.
     pub exec_time: Duration,
@@ -70,94 +95,58 @@ pub struct DeviceReport {
     pub samples: u64,
 }
 
-/// Everything a worker thread needs; plain data so it can be moved in.
-/// Generic over the backend so workers stay monomorphic when the
-/// concrete backend type is known, and work through `dyn Backend` when
-/// the leader holds a trait object.
-pub(super) struct WorkerSpec<B: Backend + ?Sized> {
-    pub device: u32,
-    pub backend: Arc<B>,
-    pub job: AbcJob,
-    pub tolerance: f32,
-    pub strategy: ReturnStrategy,
-    pub seeds: SeedSequence,
-    pub next_run: Arc<AtomicU64>,
-    pub run_budget: u64,
-    pub stop: Arc<AtomicBool>,
-    pub tx: mpsc::Sender<Result<DeviceReport>>,
-}
-
-/// Worker thread body. Opens its own engine once, then loops.
-/// Sends `Err` once and exits on any failure.
-pub(super) fn worker_main<B: Backend + ?Sized>(spec: WorkerSpec<B>) -> RunMetrics {
-    let mut metrics = RunMetrics::default();
-    let total_sw = Stopwatch::start();
-
-    let mut engine = match spec.backend.open_engine(spec.device, &spec.job) {
-        Ok(engine) => engine,
-        Err(e) => {
-            let _ = spec.tx.send(Err(e));
-            return metrics;
+/// Apply the device-side half of the sample-return strategy to one
+/// run's raw output. Returns the transfer plus the skipped-chunk count.
+pub(crate) fn apply_return_strategy(
+    out: &AbcRunOutput,
+    strategy: ReturnStrategy,
+    tolerance: f32,
+) -> (Transfer, u64) {
+    match strategy {
+        ReturnStrategy::Outfeed { chunk } => {
+            let (chunks, skipped) = chunk_batch(out, chunk, tolerance);
+            (Transfer::Chunks(chunks), skipped)
         }
-    };
-
-    while !spec.stop.load(Ordering::Relaxed) {
-        let run = spec.next_run.fetch_add(1, Ordering::Relaxed);
-        if spec.run_budget > 0 && run >= spec.run_budget {
-            break;
-        }
-        // Key depends only on the global run index → the sample stream
-        // is scheduling-independent (see module docs of `coordinator`).
-        let key = spec.seeds.key(0, run);
-
-        let sw = Stopwatch::start();
-        let out = match engine.run(key) {
-            Ok(out) => out,
-            Err(e) => {
-                let _ = spec.tx.send(Err(e));
-                break;
-            }
-        };
-        let exec_time = sw.elapsed();
-
-        // Device-side half of the return strategy.
-        let (transfer, skipped) = match spec.strategy {
-            ReturnStrategy::Outfeed { chunk } => {
-                let (chunks, skipped) = chunk_batch(&out, chunk, spec.tolerance);
-                (Transfer::Chunks(chunks), skipped)
-            }
-            ReturnStrategy::TopK { k } => {
-                (Transfer::TopK(top_k_selection(&out, k, spec.tolerance)), 0)
-            }
-        };
-
-        metrics.runs += 1;
-        metrics.samples_simulated += out.batch() as u64;
-        metrics.device_exec += exec_time;
-        metrics.bytes_to_host += transfer.wire_bytes();
-        metrics.transfers += transfer.transfer_count();
-        metrics.transfers_skipped += skipped;
-
-        let report = DeviceReport {
-            device: spec.device,
-            run,
-            exec_time,
-            transfer,
-            chunks_skipped: skipped,
-            samples: out.batch() as u64,
-        };
-        if spec.tx.send(Ok(report)).is_err() {
-            break; // leader hung up
+        ReturnStrategy::TopK { k } => {
+            (Transfer::TopK(top_k_selection(out, k, tolerance)), 0)
         }
     }
+}
 
-    metrics.total = total_sw.elapsed();
-    metrics
+/// Execute one work item — run `run` of job `job` — on an engine that
+/// was opened for this job on the calling worker's thread.
+pub(crate) fn execute_work(
+    engine: &mut dyn AbcEngine,
+    ctx: &JobContext,
+    job: u32,
+    device: u32,
+    run: u64,
+) -> Result<DeviceReport> {
+    // Key depends only on the job's seed and the job-local run index →
+    // the sample stream is scheduling- and pool-independent (see the
+    // module docs above and `coordinator` module docs).
+    let key = ctx.seeds.key(0, run);
+
+    let sw = Stopwatch::start();
+    let out = engine.run(key)?;
+    let exec_time = sw.elapsed();
+
+    let (transfer, skipped) = apply_return_strategy(&out, ctx.strategy, ctx.tolerance);
+    Ok(DeviceReport {
+        job,
+        device,
+        run,
+        exec_time,
+        transfer,
+        chunks_skipped: skipped,
+        samples: out.batch() as u64,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{Backend, NativeBackend};
 
     #[test]
     fn transfer_accounting() {
@@ -177,5 +166,26 @@ mod tests {
             0.5,
         ));
         assert_eq!(topk.transfer_count(), 1);
+    }
+
+    #[test]
+    fn execute_work_is_a_pure_function_of_the_run_index() {
+        let ds = crate::data::synthetic::default_dataset(16, 3);
+        let prior = crate::model::Prior::paper();
+        let ctx = JobContext {
+            job: AbcJob::new(64, 16, ds.observed.flatten(), &prior, ds.consts()),
+            tolerance: ds.default_tolerance * 10.0,
+            strategy: ReturnStrategy::Outfeed { chunk: 16 },
+            seeds: SeedSequence::new(42),
+        };
+        let backend = NativeBackend::new();
+        let mut e1 = backend.open_engine(0, &ctx.job).unwrap();
+        let mut e2 = backend.open_engine(9, &ctx.job).unwrap();
+        // same job + run on different devices → bit-identical transfer
+        let a = execute_work(e1.as_mut(), &ctx, 0, 0, 5).unwrap();
+        let b = execute_work(e2.as_mut(), &ctx, 3, 9, 5).unwrap();
+        assert_eq!(a.transfer, b.transfer);
+        assert_eq!(a.samples, 64);
+        assert_eq!((b.job, b.device, b.run), (3, 9, 5));
     }
 }

@@ -1,24 +1,35 @@
-//! The leader: run distribution, host filtering, stop control.
+//! The leader: one inference job's public driver.
+//!
+//! Since the scheduler refactor, the leader no longer owns a private
+//! worker fleet: [`Coordinator::run`] submits a single [`JobSpec`] to a
+//! [`Scheduler`] whose pool size is `config.devices`. Running many jobs
+//! on one shared pool — the multi-scenario study — goes through
+//! [`crate::scheduler`] directly; the per-job results are identical
+//! either way (the scheduler's determinism contract).
 
-use super::device::{worker_main, DeviceReport, WorkerSpec};
-use super::postproc::filter_transfer;
 use super::AcceptedSample;
-use crate::backend::{AbcJob, Backend, NativeBackend};
+use crate::backend::{Backend, NativeBackend};
 use crate::config::RunConfig;
 use crate::data::Dataset;
-use crate::metrics::{RunMetrics, Stopwatch};
+use crate::metrics::RunMetrics;
 use crate::model::Prior;
-use crate::rng::SeedSequence;
+use crate::scheduler::{JobSpec, Scheduler};
 use crate::{Error, Result};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 
-/// When the leader stops the fleet.
+/// When a job is finished.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StopRule {
-    /// Stop once at least this many samples are accepted (the paper's
+    /// Finish once at least this many samples are accepted (the paper's
     /// mode: "repeat until the target number of posterior samples").
-    /// In-flight runs may overshoot; all accepted samples are kept.
+    ///
+    /// Decided deterministically at run-order boundaries: the job
+    /// completes at the smallest run count `b` whose cumulative
+    /// accepted count reaches the target, and keeps exactly the samples
+    /// of runs `0..b` — equal to an [`StopRule::ExactRuns`]`(b)` result
+    /// and independent of worker count or pool composition. In-flight
+    /// runs beyond `b` still execute and are counted in metrics, but
+    /// contribute no samples.
     AcceptedTarget(usize),
     /// Execute exactly this many runs, then stop — fully deterministic
     /// for a given master seed, used by benches and property tests.
@@ -107,110 +118,19 @@ impl Coordinator {
         &self.dataset
     }
 
-    /// Run the inference job until `stop` is satisfied.
+    /// Run the inference job until `stop` is satisfied: a single-job
+    /// schedule over a pool of `config.devices` workers.
     pub fn run(&self, stop: StopRule) -> Result<InferenceResult> {
-        let tolerance = self.tolerance();
-        let cfg = &self.config;
-        let truncated = self.dataset.truncated(cfg.days);
-        let job = AbcJob::new(
-            cfg.batch_per_device,
-            cfg.days,
-            truncated.observed.flatten(),
-            &self.prior,
-            truncated.consts(),
-        );
-        let seeds = SeedSequence::new(cfg.seed);
-
-        let next_run = Arc::new(AtomicU64::new(0));
-        let stop_flag = Arc::new(AtomicBool::new(false));
-        let run_budget = match stop {
-            StopRule::ExactRuns(r) => r,
-            StopRule::AcceptedTarget(_) => cfg.max_runs,
-        };
-        let (tx, rx) = mpsc::channel::<Result<DeviceReport>>();
-
-        let total_sw = Stopwatch::start();
-        let mut handles = Vec::with_capacity(cfg.devices);
-        for device in 0..cfg.devices as u32 {
-            let spec = WorkerSpec {
-                device,
-                backend: self.backend.clone(),
-                job: job.clone(),
-                tolerance,
-                strategy: cfg.return_strategy,
-                seeds,
-                next_run: next_run.clone(),
-                run_budget,
-                stop: stop_flag.clone(),
-                tx: tx.clone(),
-            };
-            handles.push(std::thread::spawn(move || worker_main(spec)));
-        }
-        drop(tx); // leader keeps only rx; channel closes when workers exit
-
-        let mut accepted: Vec<AcceptedSample> = Vec::new();
-        let mut leader_metrics = RunMetrics::default();
-        let mut first_error: Option<Error> = None;
-
-        for msg in rx.iter() {
-            match msg {
-                Ok(report) => {
-                    let sw = Stopwatch::start();
-                    filter_transfer(
-                        &report.transfer,
-                        tolerance,
-                        report.device,
-                        report.run,
-                        &mut accepted,
-                    );
-                    leader_metrics.host_postproc += sw.elapsed();
-                    leader_metrics.samples_accepted =
-                        accepted.len() as u64;
-
-                    if let StopRule::AcceptedTarget(target) = stop {
-                        if accepted.len() >= target {
-                            stop_flag.store(true, Ordering::Relaxed);
-                        }
-                    }
-                }
-                Err(e) => {
-                    // Remember the first failure and stop the fleet.
-                    if first_error.is_none() {
-                        first_error = Some(e);
-                    }
-                    stop_flag.store(true, Ordering::Relaxed);
-                }
-            }
-        }
-
-        let mut metrics = leader_metrics;
-        for handle in handles {
-            let device_metrics = handle
-                .join()
-                .map_err(|_| Error::Coordinator("device worker panicked".into()))?;
-            metrics.merge(&device_metrics);
-        }
-        metrics.samples_accepted = accepted.len() as u64;
-        metrics.total = total_sw.elapsed();
-
-        if let Some(e) = first_error {
-            return Err(e);
-        }
-        if let StopRule::AcceptedTarget(target) = stop {
-            if accepted.len() < target && cfg.max_runs > 0 {
-                return Err(Error::Coordinator(format!(
-                    "run budget {} exhausted with only {}/{} accepted samples \
-                     (tolerance {tolerance} too tight?)",
-                    cfg.max_runs,
-                    accepted.len(),
-                    target
-                )));
-            }
-        }
-
-        // Deterministic order regardless of worker scheduling.
-        accepted.sort_by_key(|s| (s.run, s.index));
-        Ok(InferenceResult { accepted, metrics, tolerance })
+        let job = JobSpec::new(
+            self.dataset.name.clone(),
+            self.config.clone(),
+            self.dataset.clone(),
+            self.prior.clone(),
+            stop,
+        )?;
+        let scheduler = Scheduler::new(self.backend.clone(), self.config.devices);
+        let mut report = scheduler.run(vec![job])?;
+        report.jobs.pop().expect("single-job schedule").outcome
     }
 
     /// Convenience: run until `n` samples are accepted.

@@ -28,17 +28,24 @@
 //! filters transferred chunks by tolerance on the host, accumulates
 //! accepted samples, and stops the fleet once the target is reached.
 //!
-//! Reproducibility: the run key depends only on the *global run index*
-//! (not on which device executed it) and every backend's run is a pure
-//! function of the key, so the sample stream is a deterministic
+//! Reproducibility: the run key depends only on the *job-local run
+//! index* (not on which device executed it) and every backend's run is
+//! a pure function of the key, so the sample stream is a deterministic
 //! function of the master seed. With a fixed run budget
 //! ([`Coordinator::run_exact`]) the accepted set is exactly
 //! reproducible across any device count, chunk size or return strategy —
 //! the property the `prop_coordinator` and `native_backend` suites pin
 //! down.
+//!
+//! Since the scheduler refactor, `Coordinator::run` is a thin wrapper
+//! over [`crate::scheduler::Scheduler`] with a single job: device
+//! workers are *job-agnostic pool workers* (each work item carries its
+//! job's context and RNG key namespace) and any number of inference
+//! jobs can share one pool — see the `scheduler` module and DESIGN.md
+//! §7.
 
 pub mod autotune;
-mod device;
+pub(crate) mod device;
 mod leader;
 mod outfeed;
 mod postproc;

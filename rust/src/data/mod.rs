@@ -20,6 +20,38 @@ pub mod synthetic;
 pub use series::ObservedSeries;
 
 use crate::model::InitialCondition;
+use crate::{Error, Result};
+
+/// Resolve a dataset by configuration name — the single resolver shared
+/// by the CLI (`repro`) and the scheduler
+/// ([`crate::scheduler::JobSpec::from_scenario`]):
+///
+/// * `synthetic` — the standard synthetic benchmark, generated at least
+///   49 days long so any paper-sized fit window fits,
+/// * an embedded country name ([`embedded::by_name`] aliases included),
+/// * a path to an observed-series CSV file
+///   ([`ObservedSeries::from_csv_file`] layout).
+pub fn resolve(name: &str, days: usize) -> Result<Dataset> {
+    if name == "synthetic" {
+        return Ok(synthetic::default_dataset(days.max(49), 0x5eed));
+    }
+    if let Some(ds) = embedded::by_name(name) {
+        return Ok(ds);
+    }
+    if std::path::Path::new(name).exists() {
+        let observed = ObservedSeries::from_csv_file(name)?;
+        return Ok(Dataset {
+            name: name.to_string(),
+            population: 60_000_000.0,
+            default_tolerance: 5e4,
+            observed,
+        });
+    }
+    Err(Error::Config(format!(
+        "unknown dataset `{name}` (expected `synthetic`, an embedded country, \
+         or a CSV file path)"
+    )))
+}
 
 /// A named dataset: observed series + the constants the model needs.
 #[derive(Debug, Clone, PartialEq)]
@@ -71,6 +103,16 @@ impl Dataset {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn resolve_covers_synthetic_embedded_and_rejects_unknown() {
+        assert_eq!(resolve("synthetic", 16).unwrap().days(), 49); // 49-day floor
+        assert_eq!(resolve("synthetic", 60).unwrap().days(), 60);
+        assert_eq!(resolve("italy", 49).unwrap().name, "italy");
+        assert_eq!(resolve("nz", 49).unwrap().name, "new_zealand");
+        let err = resolve("atlantis", 49).unwrap_err().to_string();
+        assert!(err.contains("atlantis"), "{err}");
+    }
 
     #[test]
     fn dataset_initial_condition_comes_from_day0() {

@@ -33,6 +33,7 @@
 //! | [`backend`] | pluggable execution: native host engine / compiled PJRT |
 //! | `runtime` (feature `pjrt`) | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | parallel ABC engine: leader, device workers, outfeed, top-k |
+//! | [`scheduler`] | multi-scenario scheduler: many ABC jobs on one shared worker pool |
 //! | [`abc`] | ABC/SMC-ABC algorithm layer: tolerances, posterior store, prediction |
 //! | [`model`] | pure-Rust reference simulator (CPU baseline + validation oracle) |
 //! | [`data`] | JHU-format loader, embedded country series, synthetic generator |
@@ -56,6 +57,7 @@ pub mod report;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scheduler;
 pub mod stats;
 pub mod util;
 

@@ -28,7 +28,7 @@ use abc_ipu::abc::{predict::predict, smc, Posterior};
 use abc_ipu::backend::{self, AbcJob, Backend};
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::Coordinator;
-use abc_ipu::data::{embedded, synthetic, Dataset, ObservedSeries};
+use abc_ipu::data::{embedded, Dataset};
 use abc_ipu::hwmodel::{
     batch_sweep, gpu_kernel_table, ipu_compute_set_table, liveness_curve, per_tile_memory,
     scaling_table, DeviceSpec, Workload,
@@ -107,23 +107,9 @@ fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
 }
 
 fn load_dataset(name: &str, days: usize) -> Result<Dataset> {
-    let ds = if name == "synthetic" {
-        synthetic::default_dataset(days.max(16).max(49), 0x5eed)
-    } else if let Some(ds) = embedded::by_name(name) {
-        ds
-    } else if std::path::Path::new(name).exists() {
-        let observed = ObservedSeries::from_csv_file(name)?;
-        Dataset {
-            name: name.to_string(),
-            population: 60_000_000.0,
-            default_tolerance: 5e4,
-            observed,
-        }
-    } else {
-        return Err(Error::Config(format!(
-            "unknown dataset `{name}` (no embedded country, not a file)"
-        )));
-    };
+    // Shared resolver (synthetic / embedded / CSV path) — the same one
+    // the scheduler's scenario resolution uses, so the two cannot drift.
+    let ds = abc_ipu::data::resolve(name, days)?;
     if ds.days() < days {
         return Err(Error::Config(format!(
             "dataset `{}` has {} days < requested {days}",

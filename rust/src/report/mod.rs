@@ -91,6 +91,52 @@ impl Table {
     }
 }
 
+/// Paper-Fig-6-style side-by-side posterior comparison: one column per
+/// scenario/country, one row per model parameter (cells `mean ± std`),
+/// plus header rows for the accepted-sample count and the median
+/// accepted distance. Built from the demuxed results of one
+/// multi-scenario schedule (`crate::scheduler`).
+pub fn scenario_comparison(
+    title: impl Into<String>,
+    results: &[(&str, &crate::abc::Posterior)],
+) -> Table {
+    let header: Vec<&str> = std::iter::once("parameter")
+        .chain(results.iter().map(|&(name, _)| name))
+        .collect();
+    let mut table = Table::new(title, &header);
+
+    let mut count_row = vec!["accepted n".to_string()];
+    let mut dist_row = vec!["median distance".to_string()];
+    for (_, posterior) in results {
+        count_row.push(posterior.len().to_string());
+        if posterior.is_empty() {
+            dist_row.push("-".into());
+        } else {
+            dist_row.push(format!("{:.3e}", posterior.distance_summary().median));
+        }
+    }
+    table.row(&count_row);
+    table.row(&dist_row);
+
+    for (p, name) in crate::model::PARAM_NAMES.iter().enumerate() {
+        let mut row = vec![(*name).to_string()];
+        for (_, posterior) in results {
+            if posterior.is_empty() {
+                row.push("-".into());
+            } else {
+                let xs = posterior.marginal(p);
+                row.push(format!(
+                    "{:.3} ± {:.3}",
+                    crate::stats::mean(&xs),
+                    crate::stats::std_dev(&xs)
+                ));
+            }
+        }
+        table.row(&row);
+    }
+    table
+}
+
 /// Write a CSV series to `reports/<name>.csv`, creating the directory.
 pub fn write_csv(dir: impl AsRef<Path>, name: &str, csv: &str) -> crate::Result<std::path::PathBuf> {
     let dir = dir.as_ref();
@@ -162,6 +208,33 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512 B");
         assert_eq!(fmt_bytes(2048), "2.0 KB");
         assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MB");
+    }
+
+    #[test]
+    fn scenario_comparison_shape() {
+        use crate::abc::Posterior;
+        use crate::coordinator::AcceptedSample;
+        let sample = |v: f32, d: f32| AcceptedSample {
+            theta: [v; 8],
+            distance: d,
+            device: 0,
+            run: 0,
+            index: 0,
+        };
+        let a = Posterior::new(vec![sample(0.2, 10.0), sample(0.4, 20.0)]);
+        let empty = Posterior::new(Vec::new());
+        let results = vec![("italy", &a), ("usa", &empty)];
+        let t = scenario_comparison("Fig 6 analogue", &results);
+        // 2 summary rows + 8 parameter rows
+        assert_eq!(t.len(), 10);
+        let r = t.render();
+        assert!(r.contains("italy"));
+        assert!(r.contains("usa"));
+        assert!(r.contains("alpha0"));
+        assert!(r.contains("0.300 ± 0.141")); // mean ± sample std of {0.2, 0.4}
+        let csv = t.to_csv();
+        assert!(csv.starts_with("parameter,italy,usa\n"));
+        assert!(csv.contains("accepted n,2,0\n"));
     }
 
     #[test]

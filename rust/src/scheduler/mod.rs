@@ -1,0 +1,543 @@
+//! Multi-scenario inference scheduler: many ABC jobs, one worker pool.
+//!
+//! The paper's closing demonstration runs inference for three countries;
+//! a naive multi-country study is a sequential loop of solo
+//! [`Coordinator`](crate::coordinator::Coordinator) runs that leaves
+//! workers idle at every job's tail. This subsystem multiplexes any
+//! number of **jobs** — (dataset × prior × tolerance × stop-rule)
+//! scenarios — across **one shared pool** of backend device workers:
+//!
+//! ```text
+//!          ┌─────────────────────── scheduler leader ───────────────────────┐
+//!          │ per-job demux: tolerance filter · deterministic run frontier   │
+//!          │ stop-rule decisions · per-job metrics · dispatcher control     │
+//!          └─────────▲───────────────────────────────────────▲──────────────┘
+//!                    │ mpsc: job-tagged reports               │
+//!   ┌──────────────┐ │   ┌────────────── dispatcher ──────────┴───┐
+//!   │ pool worker 0│─┘   │ round-robin (job, run) issue · budgets │
+//!   │ engines: j0,j2│◄───│ finish/shutdown control                │
+//!   └──────────────┘     └────────────────────────────────────────┘
+//! ```
+//!
+//! **Determinism contract.** Each job owns an RNG key namespace rooted
+//! at its config seed; run keys depend only on the job-local run index.
+//! Results demux per job and are finalized in *run order* behind a
+//! deterministic frontier, so a job's accepted set is a pure function
+//! of its `JobSpec` — bit-identical to a solo `Coordinator::run` of the
+//! same spec, regardless of pool size, job mix, submission order or how
+//! work interleaves (pinned by `tests/prop_scheduler.rs`).
+//!
+//! Stop rules are decided at the frontier:
+//! * [`StopRule::ExactRuns`]`(r)` — exactly runs `0..r` are issued and
+//!   kept.
+//! * [`StopRule::AcceptedTarget`]`(n)` — the job completes at the
+//!   smallest run-count boundary `b` whose cumulative accepted count
+//!   reaches `n`; the result equals a solo `ExactRuns(b)`. Runs beyond
+//!   `b` that were already in flight still execute and are counted in
+//!   the job's metrics, but contribute no samples.
+
+mod pool;
+
+use crate::backend::{AbcJob, Backend, NativeBackend};
+use crate::config::{RunConfig, ScenarioConfig};
+use crate::coordinator::device::JobContext;
+use crate::coordinator::{filter_transfer, AcceptedSample, InferenceResult, StopRule};
+use crate::data::Dataset;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::model::Prior;
+use crate::rng::SeedSequence;
+use crate::{Error, Result};
+use pool::{pool_worker_main, Dispatcher, PoolMessage, PoolWorkerSpec};
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// One inference job submitted to the scheduler.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Display name for demuxed reporting (results are returned in
+    /// submission order, so names need not be unique).
+    pub name: String,
+    /// Full run configuration; `config.seed` roots the job's private
+    /// RNG key namespace.
+    pub config: RunConfig,
+    /// Dataset to fit.
+    pub dataset: Dataset,
+    /// Prior box to sample from.
+    pub prior: Prior,
+    /// When the job is finished.
+    pub stop: StopRule,
+}
+
+impl JobSpec {
+    /// Build and validate a job.
+    pub fn new(
+        name: impl Into<String>,
+        config: RunConfig,
+        dataset: Dataset,
+        prior: Prior,
+        stop: StopRule,
+    ) -> Result<Self> {
+        let spec = Self { name: name.into(), config, dataset, prior, stop };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Resolve a [`ScenarioConfig`] (from [`crate::config::ScenarioSet`])
+    /// into a runnable job with the paper prior, using the same dataset
+    /// resolver as the `repro` CLI ([`crate::data::resolve`]: synthetic,
+    /// embedded country, or CSV file path).
+    pub fn from_scenario(scenario: &ScenarioConfig) -> Result<Self> {
+        let dataset = crate::data::resolve(&scenario.config.dataset, scenario.config.days)?;
+        Self::new(
+            scenario.name.clone(),
+            scenario.config.clone(),
+            dataset,
+            Prior::paper(),
+            scenario.stop,
+        )
+    }
+
+    /// Validate config/dataset consistency (same checks as
+    /// [`crate::coordinator::Coordinator::new`]).
+    pub fn validate(&self) -> Result<()> {
+        self.config.validate()?;
+        if self.dataset.days() < self.config.days {
+            return Err(Error::Config(format!(
+                "dataset `{}` has {} days, config wants {}",
+                self.dataset.name,
+                self.dataset.days(),
+                self.config.days
+            )));
+        }
+        Ok(())
+    }
+
+    /// Effective tolerance (config override or dataset default).
+    pub fn tolerance(&self) -> f32 {
+        self.config.tolerance.unwrap_or(self.dataset.default_tolerance)
+    }
+
+    /// The shared per-work-item context of this job.
+    fn context(&self) -> JobContext {
+        let cfg = &self.config;
+        let truncated = self.dataset.truncated(cfg.days);
+        JobContext {
+            job: AbcJob::new(
+                cfg.batch_per_device,
+                cfg.days,
+                truncated.observed.flatten(),
+                &self.prior,
+                truncated.consts(),
+            ),
+            tolerance: self.tolerance(),
+            strategy: cfg.return_strategy,
+            seeds: SeedSequence::new(cfg.seed),
+        }
+    }
+
+    /// How many runs the dispatcher may issue (`None` = until finished).
+    fn issue_budget(&self) -> Option<u64> {
+        match self.stop {
+            StopRule::ExactRuns(r) => Some(r),
+            StopRule::AcceptedTarget(_) => {
+                (self.config.max_runs > 0).then_some(self.config.max_runs)
+            }
+        }
+    }
+}
+
+/// Outcome of one scheduled job, in submission order.
+#[derive(Debug)]
+pub struct JobRun {
+    /// The job's name as submitted.
+    pub name: String,
+    /// The job's result, or its individual failure (budget exhaustion,
+    /// engine error) — one failed job does not fail its pool-mates.
+    pub outcome: Result<InferenceResult>,
+}
+
+/// Result of one [`Scheduler::run`] call.
+#[derive(Debug)]
+pub struct ScheduleReport {
+    /// Per-job outcomes, in submission order.
+    pub jobs: Vec<JobRun>,
+    /// Wall-clock of the whole schedule.
+    pub wall: Duration,
+    /// Pool-side metrics merged across workers (total = slowest worker).
+    pub pool_metrics: RunMetrics,
+}
+
+impl ScheduleReport {
+    /// Successful results as `(name, result)` pairs, submission order.
+    pub fn successes(&self) -> impl Iterator<Item = (&str, &InferenceResult)> {
+        self.jobs
+            .iter()
+            .filter_map(|j| j.outcome.as_ref().ok().map(|r| (j.name.as_str(), r)))
+    }
+
+    /// The first failed job, if any.
+    pub fn first_error(&self) -> Option<&Error> {
+        self.jobs.iter().find_map(|j| j.outcome.as_ref().err())
+    }
+
+    /// Unpack every outcome, erroring on the first failed job.
+    pub fn into_results(self) -> Result<Vec<(String, InferenceResult)>> {
+        self.jobs
+            .into_iter()
+            .map(|j| j.outcome.map(|r| (j.name, r)))
+            .collect()
+    }
+}
+
+/// Per-job demux state on the leader side.
+struct JobProgress {
+    name: String,
+    tolerance: f32,
+    stop: StopRule,
+    /// Issue budget (`None` = unlimited); mirrors the dispatcher slot.
+    budget: Option<u64>,
+    /// Per-run outcomes not yet absorbed by the frontier: the accepted
+    /// samples of a completed run, or the error that killed it. Keeping
+    /// failures in run order makes job failure as deterministic as
+    /// success — an error on an overshoot run cannot fail a job that
+    /// already completed, regardless of message arrival order.
+    pending: BTreeMap<u64, Result<Vec<AcceptedSample>>>,
+    /// All runs `< frontier` are finalized into `accepted`.
+    frontier: u64,
+    accepted: Vec<AcceptedSample>,
+    metrics: RunMetrics,
+    done: bool,
+    failed: Option<Error>,
+    finished_at: Option<Duration>,
+}
+
+/// The multi-job inference scheduler: a shared pool of `workers`
+/// backend device workers serving any number of jobs.
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    backend: Arc<dyn Backend>,
+    workers: usize,
+}
+
+impl Scheduler {
+    /// A scheduler over `workers` pool workers on `backend`.
+    pub fn new(backend: Arc<dyn Backend>, workers: usize) -> Self {
+        Self { backend, workers: workers.max(1) }
+    }
+
+    /// Convenience: a scheduler on the dependency-free native backend.
+    pub fn native(workers: usize) -> Self {
+        Self::new(Arc::new(NativeBackend::new()), workers)
+    }
+
+    /// Pool size.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The backend in use.
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    /// Resolve scenarios (see [`crate::config::ScenarioSet`]) and run
+    /// them as one schedule.
+    pub fn run_scenarios(&self, scenarios: &[ScenarioConfig]) -> Result<ScheduleReport> {
+        let jobs = scenarios
+            .iter()
+            .map(JobSpec::from_scenario)
+            .collect::<Result<Vec<_>>>()?;
+        self.run(jobs)
+    }
+
+    /// Run `jobs` to completion on the shared pool.
+    ///
+    /// Returns `Err` only for pool-level failures (no jobs, invalid
+    /// specs, a worker thread lost); per-job failures land in the
+    /// matching [`JobRun::outcome`].
+    pub fn run(&self, jobs: Vec<JobSpec>) -> Result<ScheduleReport> {
+        if jobs.is_empty() {
+            return Err(Error::Config("scheduler needs at least one job".into()));
+        }
+        let total_sw = Stopwatch::start();
+
+        let mut progress: Vec<JobProgress> = Vec::with_capacity(jobs.len());
+        let mut slots: Vec<(Arc<JobContext>, Option<u64>)> = Vec::with_capacity(jobs.len());
+        for spec in &jobs {
+            spec.validate()?;
+            let budget = spec.issue_budget();
+            slots.push((Arc::new(spec.context()), budget));
+            progress.push(JobProgress {
+                name: spec.name.clone(),
+                tolerance: spec.tolerance(),
+                stop: spec.stop,
+                budget,
+                pending: BTreeMap::new(),
+                frontier: 0,
+                accepted: Vec::new(),
+                metrics: RunMetrics::default(),
+                // ExactRuns(0) asks for nothing: decided before any work.
+                done: matches!(spec.stop, StopRule::ExactRuns(0)),
+                failed: None,
+                finished_at: None,
+            });
+        }
+
+        let dispatcher = Arc::new(Dispatcher::new(slots));
+        // ExactRuns(0) jobs are complete before any work exists (their
+        // budget of Some(0) already issues nothing); decide them now so
+        // the schedule can terminate without waiting for reports.
+        let mut open_jobs = 0usize;
+        for (i, p) in progress.iter_mut().enumerate() {
+            if p.done {
+                p.finished_at = Some(total_sw.elapsed());
+                dispatcher.finish_job(i as u32);
+            } else {
+                open_jobs += 1;
+            }
+        }
+        if open_jobs == 0 {
+            dispatcher.shutdown();
+        }
+
+        let (tx, rx) = mpsc::channel::<PoolMessage>();
+        let mut handles = Vec::with_capacity(self.workers);
+        for device in 0..self.workers as u32 {
+            let spec = PoolWorkerSpec {
+                device,
+                backend: self.backend.clone(),
+                dispatcher: dispatcher.clone(),
+                tx: tx.clone(),
+            };
+            handles.push(std::thread::spawn(move || pool_worker_main(spec)));
+        }
+        drop(tx); // leader keeps only rx; channel closes when workers exit
+
+        for msg in rx.iter() {
+            // Normalize both message kinds into a per-run outcome, then
+            // absorb outcomes strictly in run order at the frontier —
+            // success *and* failure are decided deterministically.
+            let (job_id, run, outcome): (u32, u64, Result<Vec<AcceptedSample>>) = match msg {
+                PoolMessage::Report(report) => {
+                    let Some(p) = progress.get_mut(report.job as usize) else { continue };
+                    if p.failed.is_some() {
+                        continue; // job already failed; drop stragglers
+                    }
+                    // Per-job metrics attribution. Overshoot reports of
+                    // an already-decided AcceptedTarget job still count
+                    // (those runs did execute), matching the historical
+                    // solo-coordinator accounting.
+                    p.metrics.runs += 1;
+                    p.metrics.samples_simulated += report.samples;
+                    p.metrics.device_exec += report.exec_time;
+                    p.metrics.bytes_to_host += report.transfer.wire_bytes();
+                    p.metrics.transfers += report.transfer.transfer_count();
+                    p.metrics.transfers_skipped += report.chunks_skipped;
+                    if p.done {
+                        continue; // overshoot: counters only, samples discarded
+                    }
+                    let sw = Stopwatch::start();
+                    let mut samples = Vec::new();
+                    filter_transfer(
+                        &report.transfer,
+                        p.tolerance,
+                        report.device,
+                        report.run,
+                        &mut samples,
+                    );
+                    p.metrics.host_postproc += sw.elapsed();
+                    (report.job, report.run, Ok(samples))
+                }
+                PoolMessage::JobError { job, run, error } => {
+                    let Some(p) = progress.get_mut(job as usize) else { continue };
+                    if p.done || p.failed.is_some() {
+                        continue; // error on an overshoot run: job outcome already decided
+                    }
+                    (job, run, Err(error))
+                }
+            };
+
+            let p = progress.get_mut(job_id as usize).expect("job id checked above");
+            p.pending.insert(run, outcome);
+            while !p.done {
+                let Some(next) = p.pending.remove(&p.frontier) else { break };
+                let run_samples = match next {
+                    Err(e) => {
+                        // This run is the earliest unresolved one, so
+                        // failing here is as deterministic as the error
+                        // itself: the stop rule provably cannot be
+                        // satisfied by any earlier run.
+                        p.failed = Some(e);
+                        p.done = true;
+                        break;
+                    }
+                    Ok(run_samples) => run_samples,
+                };
+                p.accepted.extend(run_samples);
+                p.frontier += 1;
+                match p.stop {
+                    StopRule::ExactRuns(r) => {
+                        if p.frontier >= r {
+                            p.done = true;
+                        }
+                    }
+                    StopRule::AcceptedTarget(target) => {
+                        if p.accepted.len() >= target {
+                            p.done = true;
+                        } else if p.budget.map_or(false, |b| p.frontier >= b) {
+                            p.failed = Some(Error::Coordinator(format!(
+                                "job `{}`: run budget {} exhausted with only \
+                                 {}/{} accepted samples (tolerance {} too tight?)",
+                                p.name,
+                                p.budget.unwrap_or(0),
+                                p.accepted.len(),
+                                target,
+                                p.tolerance
+                            )));
+                            p.done = true;
+                        }
+                    }
+                }
+            }
+            if p.done && p.finished_at.is_none() {
+                p.finished_at = Some(total_sw.elapsed());
+                dispatcher.finish_job(job_id);
+                open_jobs -= 1;
+                if open_jobs == 0 {
+                    dispatcher.shutdown();
+                }
+            }
+        }
+
+        let mut pool_metrics = RunMetrics::default();
+        for handle in handles {
+            let worker_metrics = handle
+                .join()
+                .map_err(|_| Error::Coordinator("pool worker thread lost".into()))?;
+            pool_metrics.merge(&worker_metrics);
+        }
+
+        let wall = total_sw.elapsed();
+        let jobs_out = progress
+            .into_iter()
+            .map(|mut p| {
+                let outcome = if let Some(e) = p.failed.take() {
+                    Err(e)
+                } else if !p.done {
+                    Err(Error::Coordinator(format!(
+                        "job `{}` starved: worker pool exited before its stop \
+                         rule was satisfied",
+                        p.name
+                    )))
+                } else {
+                    // Deterministic order regardless of pool scheduling.
+                    p.accepted.sort_by_key(|s| (s.run, s.index));
+                    p.metrics.samples_accepted = p.accepted.len() as u64;
+                    p.metrics.total = p.finished_at.unwrap_or(wall);
+                    Ok(InferenceResult {
+                        accepted: p.accepted,
+                        metrics: p.metrics,
+                        tolerance: p.tolerance,
+                    })
+                };
+                JobRun { name: p.name, outcome }
+            })
+            .collect();
+
+        Ok(ScheduleReport { jobs: jobs_out, wall, pool_metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ReturnStrategy;
+    use crate::data::synthetic;
+
+    fn spec(name: &str, seed: u64, stop: StopRule) -> JobSpec {
+        let dataset = synthetic::default_dataset(16, 0x5eed);
+        let tolerance = dataset.default_tolerance * 30.0;
+        let config = RunConfig {
+            dataset: "synthetic".into(),
+            tolerance: Some(tolerance),
+            devices: 1,
+            batch_per_device: 400,
+            days: 16,
+            return_strategy: ReturnStrategy::Outfeed { chunk: 100 },
+            seed,
+            ..Default::default()
+        };
+        JobSpec::new(name, config, dataset, Prior::paper(), stop).unwrap()
+    }
+
+    #[test]
+    fn empty_schedule_is_an_error() {
+        let err = Scheduler::native(2).run(Vec::new()).unwrap_err().to_string();
+        assert!(err.contains("at least one job"), "{err}");
+    }
+
+    #[test]
+    fn three_jobs_share_one_pool_and_demux() {
+        let jobs = vec![
+            spec("a", 1, StopRule::ExactRuns(3)),
+            spec("b", 2, StopRule::ExactRuns(2)),
+            spec("c", 3, StopRule::ExactRuns(4)),
+        ];
+        let report = Scheduler::native(2).run(jobs).unwrap();
+        assert_eq!(report.jobs.len(), 3);
+        let names: Vec<&str> = report.jobs.iter().map(|j| j.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        let runs: Vec<u64> = report
+            .successes()
+            .map(|(_, r)| r.metrics.runs)
+            .collect();
+        assert_eq!(runs, vec![3, 2, 4]);
+        // the pool executed exactly the union of the jobs' runs
+        assert_eq!(report.pool_metrics.runs, 9);
+        assert!(report.first_error().is_none());
+    }
+
+    #[test]
+    fn exact_runs_zero_completes_empty() {
+        let report = Scheduler::native(2)
+            .run(vec![spec("empty", 7, StopRule::ExactRuns(0))])
+            .unwrap();
+        let result = report.jobs.into_iter().next().unwrap().outcome.unwrap();
+        assert!(result.accepted.is_empty());
+        assert_eq!(result.metrics.runs, 0);
+    }
+
+    #[test]
+    fn budget_exhaustion_fails_only_the_affected_job() {
+        let mut starved = spec("starved", 5, StopRule::AcceptedTarget(10));
+        starved.config.tolerance = Some(1e-3); // impossible ε
+        starved.config.max_runs = 2;
+        let healthy = spec("healthy", 6, StopRule::ExactRuns(3));
+        let report = Scheduler::native(2).run(vec![starved, healthy]).unwrap();
+        let err = report.jobs[0].outcome.as_ref().unwrap_err().to_string();
+        assert!(err.contains("budget"), "{err}");
+        let ok = report.jobs[1].outcome.as_ref().unwrap();
+        assert_eq!(ok.metrics.runs, 3);
+    }
+
+    #[test]
+    fn scenario_resolution_rejects_unknown_dataset() {
+        let sc = ScenarioConfig {
+            name: "x".into(),
+            config: RunConfig { dataset: "atlantis".into(), ..Default::default() },
+            stop: StopRule::ExactRuns(1),
+        };
+        let err = JobSpec::from_scenario(&sc).unwrap_err().to_string();
+        assert!(err.contains("atlantis"), "{err}");
+    }
+
+    #[test]
+    fn into_results_propagates_job_failures() {
+        let mut starved = spec("starved", 5, StopRule::AcceptedTarget(10));
+        starved.config.tolerance = Some(1e-3);
+        starved.config.max_runs = 1;
+        let report = Scheduler::native(1).run(vec![starved]).unwrap();
+        assert!(report.into_results().is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! The shared worker pool: work dispatch and the job-agnostic worker.
+//!
+//! A [`Dispatcher`] hands out [`WorkItem`]s — `(job, run)` pairs — to
+//! any free worker, round-robin across the jobs that can still issue
+//! runs so no scenario starves (fairness; DESIGN.md §7). Workers are
+//! job-agnostic: each opens engines lazily, one per distinct job it
+//! encounters (engines are thread-local state — mandatory on the PJRT
+//! path, harmless on the native one), executes the claimed run and
+//! ships the tagged [`DeviceReport`] back to the scheduler leader.
+//!
+//! Shutdown protocol: the leader calls [`Dispatcher::finish_job`] the
+//! moment a job's outcome is decided (stop-rule satisfied, budget
+//! exhausted, or failed) so no further runs are issued for it, and
+//! [`Dispatcher::shutdown`] once every job is decided; `next` then
+//! returns `None` and workers exit, closing the report channel.
+
+use crate::backend::{AbcEngine, Backend};
+use crate::coordinator::device::{execute_work, JobContext};
+use crate::coordinator::DeviceReport;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::Error;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+
+/// One unit of work: execute job `job`'s run number `run`.
+pub(crate) struct WorkItem {
+    /// Scheduler-local job id (index into the submission order).
+    pub job: u32,
+    /// Job-local run index (the RNG key namespace coordinate).
+    pub run: u64,
+    /// Shared job context (engine definition, ε, strategy, seeds).
+    pub ctx: Arc<JobContext>,
+}
+
+/// Per-job issuing state inside the dispatcher.
+struct JobSlot {
+    ctx: Arc<JobContext>,
+    /// Next run index to hand out.
+    next_run: u64,
+    /// Hard cap on issued runs (`None` = issue until finished). A cap
+    /// of `Some(0)` issues nothing — there is deliberately no sentinel
+    /// value, so `ExactRuns(0)` needs no special-casing here.
+    budget: Option<u64>,
+    /// Whether the job may still issue new runs.
+    issuing: bool,
+}
+
+impl JobSlot {
+    fn issuable(&self) -> bool {
+        self.issuing && self.budget.map_or(true, |b| self.next_run < b)
+    }
+}
+
+struct DispatchState {
+    slots: Vec<JobSlot>,
+    /// Round-robin cursor over `slots` (fairness across jobs).
+    cursor: usize,
+    shutdown: bool,
+}
+
+/// Work queue shared by the scheduler leader and the pool workers.
+pub(crate) struct Dispatcher {
+    state: Mutex<DispatchState>,
+    wake: Condvar,
+}
+
+fn lock(m: &Mutex<DispatchState>) -> MutexGuard<'_, DispatchState> {
+    // A worker panicking mid-run is converted into a job failure before
+    // the lock is re-taken, so poisoning carries no torn state here.
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+impl Dispatcher {
+    /// A dispatcher over `(context, issue budget)` pairs; job ids are
+    /// the submission indices. `None` means "issue until finished".
+    pub fn new(jobs: Vec<(Arc<JobContext>, Option<u64>)>) -> Self {
+        let slots = jobs
+            .into_iter()
+            .map(|(ctx, budget)| JobSlot { ctx, next_run: 0, budget, issuing: true })
+            .collect();
+        Self {
+            state: Mutex::new(DispatchState { slots, cursor: 0, shutdown: false }),
+            wake: Condvar::new(),
+        }
+    }
+
+    /// Claim the next work item, round-robin across issuable jobs.
+    /// Blocks while no job can issue work; returns `None` on shutdown.
+    pub fn next(&self) -> Option<WorkItem> {
+        let mut st = lock(&self.state);
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            let n = st.slots.len();
+            for probe in 0..n {
+                let i = (st.cursor + probe) % n;
+                if st.slots[i].issuable() {
+                    let run = st.slots[i].next_run;
+                    st.slots[i].next_run += 1;
+                    st.cursor = (i + 1) % n;
+                    let ctx = st.slots[i].ctx.clone();
+                    return Some(WorkItem { job: i as u32, run, ctx });
+                }
+            }
+            st = self
+                .wake
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Stop issuing new runs for `job` (outcome decided). In-flight
+    /// runs still complete and report; the leader ignores what it no
+    /// longer needs.
+    pub fn finish_job(&self, job: u32) {
+        let mut st = lock(&self.state);
+        if let Some(slot) = st.slots.get_mut(job as usize) {
+            slot.issuing = false;
+        }
+    }
+
+    /// Jobs that can no longer issue work. Workers use this to evict
+    /// cached engines of decided jobs, bounding per-worker engine
+    /// residency to *active* jobs (on the PJRT path an engine is
+    /// per-device program residency — O(workers × all jobs) otherwise).
+    pub fn retired(&self) -> Vec<u32> {
+        let st = lock(&self.state);
+        st.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| !slot.issuing)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    /// Make `next` return `None` everywhere and wake blocked workers.
+    pub fn shutdown(&self) {
+        let mut st = lock(&self.state);
+        st.shutdown = true;
+        drop(st);
+        self.wake.notify_all();
+    }
+}
+
+/// What a pool worker sends to the scheduler leader.
+pub(crate) enum PoolMessage {
+    /// One executed run, tagged with its job.
+    Report(DeviceReport),
+    /// Work item `(job, run)` failed (engine open/run failure). Carries
+    /// the run index so the leader can decide the failure at the job's
+    /// deterministic run frontier instead of on message-arrival order —
+    /// an error on an overshoot run must not fail an already-complete
+    /// job depending on thread timing.
+    JobError { job: u32, run: u64, error: Error },
+}
+
+/// Everything a pool worker thread needs; plain data so it can be
+/// moved into the thread.
+pub(crate) struct PoolWorkerSpec {
+    pub device: u32,
+    pub backend: Arc<dyn Backend>,
+    pub dispatcher: Arc<Dispatcher>,
+    pub tx: mpsc::Sender<PoolMessage>,
+}
+
+/// Pool worker body: claim work items until shutdown, opening one
+/// engine per distinct job on this thread. Failures (including panics
+/// inside a backend) are demoted to per-job errors so one broken job
+/// cannot take down the other scenarios sharing the pool.
+pub(crate) fn pool_worker_main(spec: PoolWorkerSpec) -> RunMetrics {
+    let mut metrics = RunMetrics::default();
+    let total_sw = Stopwatch::start();
+    let mut engines: HashMap<u32, Box<dyn AbcEngine>> = HashMap::new();
+
+    while let Some(item) = spec.dispatcher.next() {
+        // Evict engines of jobs whose outcome is decided (keep the one
+        // the claimed item needs, even if its job was just retired).
+        if !engines.is_empty() {
+            for id in spec.dispatcher.retired() {
+                if id != item.job {
+                    engines.remove(&id);
+                }
+            }
+        }
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || -> crate::Result<DeviceReport> {
+                let engine = match engines.entry(item.job) {
+                    std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        v.insert(spec.backend.open_engine(spec.device, &item.ctx.job)?)
+                    }
+                };
+                execute_work(engine.as_mut(), &item.ctx, item.job, spec.device, item.run)
+            },
+        ));
+        let result = match outcome {
+            Ok(r) => r,
+            Err(_) => {
+                // Engine state is unknown after a panic — drop it.
+                engines.remove(&item.job);
+                Err(Error::Coordinator(format!(
+                    "pool worker {} panicked executing run {} of job {}",
+                    spec.device, item.run, item.job
+                )))
+            }
+        };
+        match result {
+            Ok(report) => {
+                metrics.runs += 1;
+                metrics.samples_simulated += report.samples;
+                metrics.device_exec += report.exec_time;
+                metrics.bytes_to_host += report.transfer.wire_bytes();
+                metrics.transfers += report.transfer.transfer_count();
+                metrics.transfers_skipped += report.chunks_skipped;
+                if spec.tx.send(PoolMessage::Report(report)).is_err() {
+                    break; // leader hung up
+                }
+            }
+            Err(error) => {
+                spec.dispatcher.finish_job(item.job);
+                let msg = PoolMessage::JobError { job: item.job, run: item.run, error };
+                if spec.tx.send(msg).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+
+    metrics.total = total_sw.elapsed();
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::AbcJob;
+    use crate::config::ReturnStrategy;
+    use crate::model::Prior;
+    use crate::rng::SeedSequence;
+
+    fn ctx(seed: u64) -> Arc<JobContext> {
+        let prior = Prior::paper();
+        Arc::new(JobContext {
+            job: AbcJob::new(10, 4, vec![0.0; 12], &prior, [155.0, 2.0, 3.0, 6e7]),
+            tolerance: 1.0,
+            strategy: ReturnStrategy::Outfeed { chunk: 10 },
+            seeds: SeedSequence::new(seed),
+        })
+    }
+
+    #[test]
+    fn round_robin_interleaves_jobs_and_respects_budgets() {
+        let d = Dispatcher::new(vec![(ctx(1), Some(2)), (ctx(2), Some(3))]);
+        let order: Vec<(u32, u64)> = (0..5)
+            .map(|_| {
+                let w = d.next().expect("work available");
+                (w.job, w.run)
+            })
+            .collect();
+        // fair alternation until job 0's budget (2 runs) is exhausted
+        assert_eq!(order, vec![(0, 0), (1, 0), (0, 1), (1, 1), (1, 2)]);
+        d.shutdown();
+        assert!(d.next().is_none());
+    }
+
+    #[test]
+    fn zero_budget_issues_nothing() {
+        let d = Arc::new(Dispatcher::new(vec![(ctx(1), Some(0)), (ctx(2), Some(1))]));
+        // only job 1's single run is ever issuable
+        assert_eq!(d.next().map(|w| (w.job, w.run)), Some((1, 0)));
+        d.shutdown();
+        assert!(d.next().is_none());
+    }
+
+    #[test]
+    fn finish_job_stops_issuing_and_shutdown_wakes_waiters() {
+        let d = Arc::new(Dispatcher::new(vec![(ctx(1), None)]));
+        assert_eq!(d.next().map(|w| (w.job, w.run)), Some((0, 0)));
+        assert!(d.retired().is_empty());
+        d.finish_job(0);
+        assert_eq!(d.retired(), vec![0]);
+        // no issuable work left → a blocked `next` must wake on shutdown
+        let d2 = d.clone();
+        let h = std::thread::spawn(move || d2.next().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        d.shutdown();
+        assert!(h.join().unwrap());
+    }
+}

@@ -20,9 +20,16 @@ pub fn std_dev(xs: &[f32]) -> f64 {
 }
 
 /// Linear-interpolated percentile, `p` in [0, 100]. Sorts a copy.
+///
+/// Edge cases: an empty slice has no order statistics — returns NaN
+/// (callers that require a value must check emptiness, as
+/// [`Summary::of`] does); a single-element slice returns that element
+/// for every `p`; `p = 0` / `p = 100` return min / max exactly.
 pub fn percentile(xs: &[f32], p: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty slice");
     assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+    if xs.is_empty() {
+        return f64::NAN;
+    }
     let mut sorted: Vec<f32> = xs.to_vec();
     sorted.sort_by(f32::total_cmp);
     let rank = p / 100.0 * (sorted.len() - 1) as f64;
@@ -84,6 +91,33 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 10.0);
         let xs = [3.0f32, 1.0, 2.0]; // unsorted input
         assert_eq!(percentile(&xs, 50.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_nan_not_panic() {
+        assert!(percentile(&[], 0.0).is_nan());
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[], 100.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_single_element_for_all_quantiles() {
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5);
+        }
+    }
+
+    #[test]
+    fn percentile_boundary_quantiles_are_min_and_max() {
+        let xs = [9.0f32, -3.0, 4.0, 0.5];
+        assert_eq!(percentile(&xs, 0.0), -3.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn percentile_rejects_out_of_range_p() {
+        percentile(&[1.0], 100.5);
     }
 
     #[test]

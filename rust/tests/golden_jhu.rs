@@ -1,0 +1,125 @@
+//! Golden-file test for JHU CSV ingestion.
+//!
+//! Parses the bundled `data/jhu_sample/time_series_covid19_*` CSVs and
+//! snapshots the derived model [`Dataset`] series (onset-aligned active
+//! / recovered / deaths, 49-day fit window) against checked-in
+//! expectations under `tests/golden/`. Any drift in CSV splitting,
+//! province aggregation, onset alignment or the A = C − R − D
+//! derivation shows up as a diff against the golden file.
+//!
+//! Regenerate the snapshots after an *intentional* change with:
+//!
+//! ```text
+//! GOLDEN_REGEN=1 cargo test --test golden_jhu
+//! ```
+
+use abc_ipu::data::jhu::{JhuDataset, ONSET_THRESHOLD};
+use std::path::{Path, PathBuf};
+
+const FIT_DAYS: usize = 49;
+
+/// (JHU country name, population) — the paper's three countries.
+const COUNTRIES: &[(&str, f32)] = &[
+    ("Italy", 60_360_000.0),
+    ("US", 331_000_000.0),
+    ("New Zealand", 4_920_000.0),
+];
+
+fn golden_path(slug: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(format!("jhu_{slug}_49d.csv"))
+}
+
+#[test]
+fn jhu_ingestion_matches_golden_snapshots() {
+    let sample_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("data/jhu_sample");
+    assert!(
+        sample_dir.exists(),
+        "bundled JHU sample missing at {}",
+        sample_dir.display()
+    );
+    let jhu = JhuDataset::load_dir(&sample_dir).expect("bundled sample parses");
+
+    for &(country, population) in COUNTRIES {
+        let ds = jhu
+            .country_dataset(country, population, FIT_DAYS, ONSET_THRESHOLD)
+            .unwrap_or_else(|e| panic!("{country}: {e}"));
+        assert_eq!(ds.days(), FIT_DAYS, "{country}");
+
+        // Counts are integral and < 2^24, so every value is exactly
+        // representable in f32 and formats without a fractional part.
+        let mut derived = String::from("day,active,recovered,deaths\n");
+        for t in 0..ds.days() {
+            let (a, r, d) = (
+                ds.observed.active[t],
+                ds.observed.recovered[t],
+                ds.observed.deaths[t],
+            );
+            for v in [a, r, d] {
+                assert_eq!(v, v.trunc(), "{country} day {t}: non-integral count {v}");
+                assert!(v < (1 << 24) as f32, "{country} day {t}: {v} exceeds f32 exact-int range");
+            }
+            derived.push_str(&format!("{t},{a},{r},{d}\n"));
+        }
+
+        let slug = country.to_ascii_lowercase().replace(' ', "_");
+        let path = golden_path(&slug);
+        if std::env::var("GOLDEN_REGEN").is_ok() {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &derived).unwrap();
+            eprintln!("regenerated {}", path.display());
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!(
+                "missing golden snapshot {} ({e}); run with GOLDEN_REGEN=1 to create it",
+                path.display()
+            )
+        });
+        assert_eq!(
+            derived, want,
+            "{country}: derived series drifted from {}",
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn golden_snapshots_are_internally_consistent() {
+    // The checked-in goldens themselves must satisfy the dataset
+    // invariants the rest of the stack assumes.
+    for &(country, _) in COUNTRIES {
+        let slug = country.to_ascii_lowercase().replace(' ', "_");
+        let text = std::fs::read_to_string(golden_path(&slug))
+            .unwrap_or_else(|e| panic!("{country}: golden missing: {e}"));
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some("day,active,recovered,deaths"));
+        let mut prev_r = f64::NEG_INFINITY;
+        let mut prev_d = f64::NEG_INFINITY;
+        let mut day0_total = 0.0f64;
+        let mut rows = 0usize;
+        for (i, line) in lines.enumerate() {
+            let cells: Vec<f64> = line
+                .split(',')
+                .map(|c| c.parse().expect("numeric cell"))
+                .collect();
+            assert_eq!(cells.len(), 4, "{country} line {i}");
+            assert_eq!(cells[0] as usize, i, "{country}: day column contiguous");
+            let (a, r, d) = (cells[1], cells[2], cells[3]);
+            assert!(a >= 0.0 && r >= 0.0 && d >= 0.0, "{country} day {i}");
+            // cumulative compartments are monotone
+            assert!(r >= prev_r, "{country} recovered day {i}");
+            assert!(d >= prev_d, "{country} deaths day {i}");
+            prev_r = r;
+            prev_d = d;
+            if i == 0 {
+                day0_total = a + r + d;
+            }
+            rows += 1;
+        }
+        assert_eq!(rows, FIT_DAYS, "{country}");
+        // onset rule: day-0 cumulative detected cases >= 100
+        assert!(day0_total >= 100.0, "{country}: day0 total {day0_total}");
+    }
+}

@@ -1,0 +1,189 @@
+//! Property tests for the multi-scenario scheduler's determinism
+//! contract: per-job results are **bit-identical** to solo
+//! `Coordinator::run` outputs, no matter how many workers share the
+//! pool, how many jobs ride along, or in which order jobs are
+//! submitted (ISSUE 2 / DESIGN.md §7).
+//!
+//! Worker counts cover 1/2/4 plus `$ABC_IPU_TEST_WORKERS` when set
+//! (the CI matrix leg pins 1 and 4 explicitly).
+
+mod common;
+
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::{AcceptedSample, Coordinator, StopRule};
+use abc_ipu::data::synthetic;
+use abc_ipu::model::Prior;
+use abc_ipu::scheduler::{JobSpec, Scheduler};
+use common::native_backend;
+use std::collections::BTreeMap;
+
+/// Full identity of a sample, bit-exact θ and distance included. The
+/// `device` field is deliberately excluded: it records which pool
+/// worker happened to execute the run (provenance, not contract).
+fn fingerprints(samples: &[AcceptedSample]) -> Vec<(u64, u32, [u32; 8], u32)> {
+    samples
+        .iter()
+        .map(|s| (s.run, s.index, s.theta.map(f32::to_bits), s.distance.to_bits()))
+        .collect()
+}
+
+fn worker_counts() -> Vec<usize> {
+    let mut counts = vec![1, 2, 4];
+    if let Some(n) = std::env::var("ABC_IPU_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        if !counts.contains(&n) {
+            counts.push(n);
+        }
+    }
+    counts
+}
+
+/// A job over a synthetic dataset; jobs differ in data, seed, ε and
+/// return strategy so cross-job contamination cannot cancel out.
+fn job(name: &str, data_seed: u64, master_seed: u64, tol_mult: f32, stop: StopRule) -> JobSpec {
+    let dataset = synthetic::default_dataset(16, data_seed);
+    let strategy = match master_seed % 3 {
+        0 => ReturnStrategy::Outfeed { chunk: 800 },
+        1 => ReturnStrategy::Outfeed { chunk: 93 },
+        _ => ReturnStrategy::TopK { k: 800 }, // k = batch: drops nothing
+    };
+    let config = RunConfig {
+        dataset: "synthetic".into(),
+        tolerance: Some(dataset.default_tolerance * tol_mult),
+        devices: 2,
+        batch_per_device: 800,
+        days: 16,
+        return_strategy: strategy,
+        seed: master_seed,
+        max_runs: 400,
+        ..Default::default()
+    };
+    JobSpec::new(name, config, dataset, Prior::paper(), stop).unwrap()
+}
+
+fn study() -> Vec<JobSpec> {
+    vec![
+        job("a", 0x5eed, 100, 30.0, StopRule::ExactRuns(5)),
+        job("b", 0xBEEF, 101, 25.0, StopRule::ExactRuns(6)),
+        job("c", 0xCAFE, 102, 35.0, StopRule::ExactRuns(4)),
+    ]
+}
+
+/// Solo reference: each job run by its own `Coordinator` (which uses
+/// `config.devices` = 2 workers), exactly as a sequential study would.
+fn solo_reference(jobs: &[JobSpec]) -> BTreeMap<String, Vec<(u64, u32, [u32; 8], u32)>> {
+    jobs.iter()
+        .map(|spec| {
+            let coord = Coordinator::new(
+                native_backend(),
+                spec.config.clone(),
+                spec.dataset.clone(),
+                spec.prior.clone(),
+            )
+            .unwrap();
+            let result = coord.run(spec.stop).unwrap();
+            assert!(
+                !result.accepted.is_empty(),
+                "job {}: tolerance too tight for a meaningful test",
+                spec.name
+            );
+            (spec.name.clone(), fingerprints(&result.accepted))
+        })
+        .collect()
+}
+
+#[test]
+fn shared_pool_results_bit_equal_solo_across_worker_counts() {
+    let jobs = study();
+    let reference = solo_reference(&jobs);
+    for workers in worker_counts() {
+        let report = Scheduler::new(native_backend(), workers).run(jobs.clone()).unwrap();
+        assert_eq!(report.jobs.len(), jobs.len());
+        for j in &report.jobs {
+            let got = fingerprints(&j.outcome.as_ref().unwrap().accepted);
+            assert_eq!(
+                &got, &reference[&j.name],
+                "job {} diverged from its solo run at {workers} workers",
+                j.name
+            );
+        }
+    }
+}
+
+#[test]
+fn submission_order_is_irrelevant() {
+    let jobs = study();
+    let reference = solo_reference(&jobs);
+    let orders: [[usize; 3]; 3] = [[0, 1, 2], [2, 1, 0], [1, 2, 0]];
+    for order in orders {
+        let shuffled: Vec<JobSpec> = order.iter().map(|&i| jobs[i].clone()).collect();
+        let report = Scheduler::new(native_backend(), 3).run(shuffled).unwrap();
+        for j in &report.jobs {
+            let got = fingerprints(&j.outcome.as_ref().unwrap().accepted);
+            assert_eq!(
+                &got, &reference[&j.name],
+                "job {} diverged under submission order {order:?}",
+                j.name
+            );
+        }
+    }
+}
+
+#[test]
+fn accepted_target_is_deterministic_across_pool_sizes() {
+    // AcceptedTarget is decided at a deterministic run frontier, so the
+    // accepted set (not just its size) must be identical for any pool.
+    let jobs: Vec<JobSpec> = vec![
+        job("t1", 0x5eed, 200, 30.0, StopRule::AcceptedTarget(12)),
+        job("t2", 0xBEEF, 201, 25.0, StopRule::AcceptedTarget(9)),
+        job("t3", 0xCAFE, 202, 35.0, StopRule::AcceptedTarget(15)),
+    ];
+    let mut reference: Option<BTreeMap<String, Vec<(u64, u32, [u32; 8], u32)>>> = None;
+    for workers in worker_counts() {
+        let report = Scheduler::new(native_backend(), workers).run(jobs.clone()).unwrap();
+        let got: BTreeMap<String, Vec<(u64, u32, [u32; 8], u32)>> = report
+            .jobs
+            .iter()
+            .map(|j| {
+                let r = j.outcome.as_ref().unwrap();
+                assert!(r.accepted.len() >= 9, "job {} under target", j.name);
+                (j.name.clone(), fingerprints(&r.accepted))
+            })
+            .collect();
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => assert_eq!(&got, want, "workers={workers}"),
+        }
+    }
+}
+
+#[test]
+fn accepted_target_in_pool_equals_solo_coordinator() {
+    // The same AcceptedTarget job, solo vs sharing a pool with noisy
+    // neighbours, keeps the identical accepted set.
+    let target_job = job("t", 0x5eed, 300, 30.0, StopRule::AcceptedTarget(10));
+    let solo = Coordinator::new(
+        native_backend(),
+        target_job.config.clone(),
+        target_job.dataset.clone(),
+        target_job.prior.clone(),
+    )
+    .unwrap()
+    .run(target_job.stop)
+    .unwrap();
+
+    let noisy = vec![
+        job("noise1", 0xBEEF, 301, 25.0, StopRule::ExactRuns(7)),
+        target_job.clone(),
+        job("noise2", 0xCAFE, 302, 35.0, StopRule::ExactRuns(3)),
+    ];
+    let report = Scheduler::new(native_backend(), 4).run(noisy).unwrap();
+    let pooled = report.jobs[1].outcome.as_ref().unwrap();
+    assert_eq!(
+        fingerprints(&pooled.accepted),
+        fingerprints(&solo.accepted),
+        "sharing the pool changed an AcceptedTarget job's result"
+    );
+}
