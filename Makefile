@@ -7,7 +7,7 @@
 ARTIFACTS_DIR ?= $(CURDIR)/artifacts
 PYTHON ?= python3
 
-.PHONY: build test doc examples bench artifacts artifacts-quick fmt clean
+.PHONY: build test doc examples bench bench-hot artifacts artifacts-quick fmt clean
 
 ## cargo build --release (native backend, zero external deps)
 build:
@@ -26,9 +26,15 @@ examples:
 	cargo build --release --examples
 
 ## run the in-tree bench suites (native parts; PJRT parts need
-## --features pjrt + artifacts)
+## --features pjrt + artifacts). The hot_path suite also writes the
+## repo-root BENCH_hot_path.json perf-trajectory artifact (lane-width
+## samples/sec vs the scalar baseline — DESIGN.md §8).
 bench:
 	cargo bench
+
+## just the hot-path suite + BENCH_hot_path.json (what the CI smoke runs)
+bench-hot:
+	cargo bench --bench hot_path
 
 ## AOT-lower the XLA graphs (HLO text + manifest) for --features pjrt.
 ## Referenced by lib.rs and the integration tests; requires jax.

@@ -49,6 +49,21 @@ fn main() {
         best.0
     ));
 
+    // measured: lane-width axis at one representative batch (width is a
+    // pure performance knob — results are bit-identical across widths,
+    // DESIGN.md §8; a set $ABC_IPU_LANES collapses the axis, harmlessly)
+    let lane_batch = 16_000usize;
+    for width in [1usize, 4, 8, 16] {
+        let job =
+            AbcJob::new(lane_batch, 49, observed.clone(), &prior, consts).with_lanes(width);
+        let mut engine = backend.open_engine(0, &job).expect("engine");
+        let mut key = 100u32;
+        suite.bench(format!("native_abc_b{lane_batch}_lanes{width}"), 1, 3, || {
+            key += 1;
+            engine.run([key, 2]).expect("run");
+        });
+    }
+
     // measured: compiled PJRT graph at every AOT-compiled batch
     #[cfg(feature = "pjrt")]
     if harness::require_artifacts("batch_sweep (PJRT part)") {

@@ -107,6 +107,25 @@ impl Suite {
     }
 }
 
+/// Whether the quick-bench mode is on (`ABC_IPU_BENCH_QUICK=1`): CI
+/// smoke legs shrink workloads/iterations but keep every measurement
+/// and artifact shape identical.
+pub fn quick() -> bool {
+    std::env::var("ABC_IPU_BENCH_QUICK").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+/// Write a perf-trajectory artifact at the repository root
+/// (`BENCH_<suite>.json` convention — machine-readable samples/sec
+/// numbers that outlive the per-run CSVs under `reports/`). Returns the
+/// path written.
+pub fn write_repo_json(file_name: &str, json: &str) -> std::path::PathBuf {
+    let mut path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    path.pop(); // rust/ → repo root
+    path.push(file_name);
+    std::fs::write(&path, json).expect("write bench json artifact");
+    path
+}
+
 /// Locate artifacts (same logic as the library's default).
 pub fn artifacts_dir() -> std::path::PathBuf {
     abc_ipu::backend::default_artifacts_dir()

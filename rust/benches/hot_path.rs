@@ -1,10 +1,20 @@
 //! Hot-path microbenchmarks (the §Perf working set).
 //!
 //! Covers every L3 component that sits on the per-run critical path:
-//! host RNG, scalar simulator (CPU baseline inner loop), the native
+//! host RNG, scalar simulator (CPU baseline inner loop), the
+//! lane-batched SoA kernel across widths 1/4/8/16 (the paper's
+//! vectorize-across-trajectories axis, DESIGN.md §8), the native
 //! backend's batched run, chunk scan, top-k selection, transfer
 //! filtering, and (with `--features pjrt` + artifacts) the per-run PJRT
 //! dispatch overhead.
+//!
+//! Besides the usual `reports/bench_hot_path.csv`, this suite writes
+//! the repo-root **`BENCH_hot_path.json`** perf-trajectory artifact:
+//! samples/sec for the single-thread scalar baseline and for the lane
+//! engine at each width on two explicit thread axes — 1 thread (the
+//! width/SoA axis in isolation) and auto threads (the full engine,
+//! whose widest-width speedup is the headline the CI bench smoke
+//! checks). `ABC_IPU_BENCH_QUICK=1` shrinks iterations for smoke runs.
 
 #[path = "harness.rs"]
 mod harness;
@@ -12,37 +22,79 @@ mod harness;
 use abc_ipu::backend::{AbcJob, AbcRunOutput, Backend, NativeBackend};
 use abc_ipu::coordinator::{chunk_batch, filter_transfer, top_k_selection, Transfer};
 use abc_ipu::data::synthetic;
+use abc_ipu::model::lanes::{resolve_parallelism, scalar_reference, LaneEngine};
 use abc_ipu::model::{Prior, Simulator};
 use abc_ipu::rng::Xoshiro256;
 
+const DAYS: usize = 49;
+const LANE_WIDTHS: [usize; 4] = [1, 4, 8, 16];
+
 fn main() {
+    let quick = harness::quick();
     let mut suite = harness::Suite::new("hot_path");
 
     // RNG throughput
     let mut rng = Xoshiro256::seed_from(0);
     let mut buf = vec![0f32; 245_000]; // one 1k-sample day-noise slab (49*5*1000)
-    suite.bench("rng_fill_normal_245k", 2, 20, || {
+    suite.bench("rng_fill_normal_245k", 2, if quick { 5 } else { 20 }, || {
         rng.fill_normal_f32(&mut buf);
     });
 
     // scalar simulator: one trajectory + fused distance
-    let ds = synthetic::default_dataset(49, 0x5eed);
+    let ds = synthetic::default_dataset(DAYS, 0x5eed);
     let observed = ds.observed.flatten();
     let sim = Simulator::new(ds.initial_condition());
     let prior = Prior::paper();
     let mut r2 = Xoshiro256::seed_from(1);
-    suite.bench("cpu_sim_distance_1_sample_49d", 10, 2000, || {
+    suite.bench("cpu_sim_distance_1_sample_49d", 10, if quick { 300 } else { 2000 }, || {
         let theta = prior.sample(&mut r2);
-        let _ = sim.distance(&theta, &observed, 49, &mut r2);
+        let _ = sim.distance(&theta, &observed, DAYS, &mut r2).expect("distance");
     });
+
+    // the scalar CPU baseline for the lane comparison: the per-sample
+    // Simulator loop with per-lane streams, one thread — exactly the
+    // oracle the lane engine is bit-welded to
+    let scalar_batch = if quick { 500 } else { 2_000 };
+    let mut key = 0u32;
+    suite.bench(format!("scalar_oracle_b{scalar_batch}_d49"), 1, if quick { 2 } else { 5 }, || {
+        key += 1;
+        scalar_reference(&sim, &prior, &observed, DAYS, scalar_batch, [key, 0])
+            .expect("scalar reference");
+    });
+
+    // lane engine across widths, at 1 thread (isolates the width/SoA
+    // axis against the scalar baseline) and at auto threads (the
+    // full-engine configuration whose speedup the artifact headlines).
+    // Neither knob ever changes the results.
+    let lane_batch = if quick { 2_000 } else { 10_000 };
+    let threads = resolve_parallelism(0);
+    let thread_axis: Vec<usize> = if threads == 1 { vec![1] } else { vec![1, threads] };
+    for width in LANE_WIDTHS {
+        for &t in &thread_axis {
+            let engine =
+                LaneEngine::new(ds.initial_condition(), width).with_parallelism(t);
+            let mut key = 0u32;
+            suite.bench(
+                format!("lane_engine_b{lane_batch}_w{width}_t{t}"),
+                1,
+                if quick { 2 } else { 5 },
+                || {
+                    key += 1;
+                    engine
+                        .sample_distance_batch(&prior, &observed, DAYS, lane_batch, [key, 1])
+                        .expect("lane run");
+                },
+            );
+        }
+    }
 
     // native backend: one batched run end-to-end (the default engine's
     // per-run cost the coordinator sees)
     let backend = NativeBackend::new();
-    let job = AbcJob::new(1_000, 49, observed.clone(), &prior, ds.consts());
+    let job = AbcJob::new(1_000, DAYS, observed.clone(), &prior, ds.consts());
     let mut engine = backend.open_engine(0, &job).expect("engine");
     let mut key = 0u32;
-    suite.bench("native_abc_run_b1000_d49", 1, 10, || {
+    suite.bench("native_abc_run_b1000_d49", 1, if quick { 3 } else { 10 }, || {
         key += 1;
         engine.run([key, 0]).expect("run");
     });
@@ -53,15 +105,15 @@ fn main() {
         thetas: (0..800_000).map(|_| r3.uniform() as f32).collect(),
         distances: (0..100_000).map(|_| r3.uniform() as f32).collect(),
     };
-    suite.bench("chunk_batch_100k_c10k", 3, 100, || {
+    suite.bench("chunk_batch_100k_c10k", 3, if quick { 20 } else { 100 }, || {
         let _ = chunk_batch(&out, 10_000, 1e-4);
     });
-    suite.bench("top_k_100k_k5", 3, 100, || {
+    suite.bench("top_k_100k_k5", 3, if quick { 20 } else { 100 }, || {
         let _ = top_k_selection(&out, 5, 1e-4);
     });
     let (chunks, _) = chunk_batch(&out, 10_000, 0.5);
     let transfer = Transfer::Chunks(chunks);
-    suite.bench("filter_transfer_50k_accepted", 3, 30, || {
+    suite.bench("filter_transfer_50k_accepted", 3, if quick { 10 } else { 30 }, || {
         let mut acc = Vec::new();
         filter_transfer(&transfer, 0.5, 0, 0, &mut acc);
     });
@@ -94,5 +146,65 @@ fn main() {
             ));
         }
     }
+
+    // ---- BENCH_hot_path.json: the perf-trajectory artifact ----
+    // Two explicit axes against the same 1-thread scalar baseline:
+    // `lanes_single_thread` isolates the width/SoA staging cost, and
+    // `lanes` is the full engine at auto threads — the headline
+    // `widest` speedup therefore includes the thread axis (recorded in
+    // every row), as DESIGN.md §8 documents.
+    let scalar_mean = suite
+        .get(&format!("scalar_oracle_b{scalar_batch}_d49"))
+        .expect("scalar baseline measured")
+        .mean_s;
+    let scalar_sps = scalar_batch as f64 / scalar_mean;
+    let row = |width: usize, t: usize| -> (String, f64) {
+        let mean = suite
+            .get(&format!("lane_engine_b{lane_batch}_w{width}_t{t}"))
+            .expect("lane configuration measured")
+            .mean_s;
+        let sps = lane_batch as f64 / mean;
+        let speedup = sps / scalar_sps;
+        (
+            format!(
+                "    {{\"width\": {width}, \"threads\": {t}, \
+                 \"samples_per_sec\": {sps:.1}, \"speedup_vs_scalar\": {speedup:.3}}}"
+            ),
+            speedup,
+        )
+    };
+    let mut lane_rows = String::new();
+    let mut single_rows = String::new();
+    let mut widest_speedup = 0.0f64;
+    for (i, &width) in LANE_WIDTHS.iter().enumerate() {
+        let (full, speedup) = row(width, threads);
+        let (single, _) = row(width, 1);
+        if width == LANE_WIDTHS[LANE_WIDTHS.len() - 1] {
+            widest_speedup = speedup;
+        }
+        if i > 0 {
+            lane_rows.push_str(",\n");
+            single_rows.push_str(",\n");
+        }
+        lane_rows.push_str(&full);
+        single_rows.push_str(&single);
+    }
+    let json = format!(
+        "{{\n  \"suite\": \"hot_path\",\n  \"days\": {DAYS},\n  \"batch\": {lane_batch},\n  \
+         \"quick\": {quick},\n  \
+         \"scalar_baseline\": {{\"name\": \"scalar_oracle_1thread\", \
+         \"batch\": {scalar_batch}, \"samples_per_sec\": {scalar_sps:.1}}},\n  \
+         \"lanes\": [\n{lane_rows}\n  ],\n  \
+         \"lanes_single_thread\": [\n{single_rows}\n  ],\n  \
+         \"widest\": {{\"width\": {}, \"threads\": {threads}, \
+         \"speedup_vs_scalar\": {widest_speedup:.3}}}\n}}\n",
+        LANE_WIDTHS[LANE_WIDTHS.len() - 1]
+    );
+    let path = harness::write_repo_json("BENCH_hot_path.json", &json);
+    suite.note(format!(
+        "perf artifact → {} (widest lane speedup {widest_speedup:.2}x over the \
+         1-thread scalar baseline, at {threads} engine threads)",
+        path.display()
+    ));
     suite.finish();
 }

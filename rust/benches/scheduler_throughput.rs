@@ -1,4 +1,5 @@
-//! Shared-pool vs sequential-loop wall clock for a multi-job study.
+//! Shared-pool vs sequential-loop wall clock for a multi-job study,
+//! swept over the simulation kernel's lane width.
 //!
 //! The workload is shaped like the paper's closing demonstration: J
 //! independent inference jobs (different data seeds/tolerances), each
@@ -6,7 +7,9 @@
 //! penalty per job (ceil(R/W) waves each, idle workers in the last
 //! wave); the shared pool pipelines all J·R runs (ceil(J·R/W) waves) —
 //! wall-clock drops while every job's accepted set stays bit-identical
-//! (the scheduler determinism contract, pinned by tests).
+//! (the scheduler determinism contract, pinned by tests). The lane-width
+//! axis shows the same contract holding while the per-run kernel cost
+//! changes (widths never change results — DESIGN.md §8).
 //!
 //! ```text
 //! cargo bench --bench scheduler_throughput
@@ -30,8 +33,10 @@ const JOBS: usize = 6;
 const RUNS_PER_JOB: u64 = 5;
 const BATCH: usize = 20_000;
 const DAYS: usize = 16;
+/// Lane widths to sweep (`$ABC_IPU_LANES`, when set, collapses the axis).
+const LANE_WIDTHS: [usize; 2] = [1, 8];
 
-fn job_specs() -> Vec<JobSpec> {
+fn job_specs(lanes: usize) -> Vec<JobSpec> {
     (0..JOBS as u64)
         .map(|j| {
             let dataset = synthetic::default_dataset(DAYS, 0x5eed ^ j);
@@ -43,6 +48,7 @@ fn job_specs() -> Vec<JobSpec> {
                 days: DAYS,
                 return_strategy: ReturnStrategy::Outfeed { chunk: BATCH / 10 },
                 seed: 0xAB0 + j,
+                lanes,
                 ..Default::default()
             };
             JobSpec::new(
@@ -61,48 +67,56 @@ fn main() {
     let mut suite = harness::Suite::new("scheduler_throughput");
     let backend = Arc::new(NativeBackend::new());
 
-    // Sequential loop: one solo coordinator per job, W devices each.
-    let specs = job_specs();
-    let t0 = Instant::now();
-    let mut sequential_samples = 0u64;
-    for spec in &specs {
-        let coord = Coordinator::new(
-            backend.clone(),
-            spec.config.clone(),
-            spec.dataset.clone(),
-            spec.prior.clone(),
-        )
-        .expect("coordinator");
-        let r = coord.run(spec.stop).expect("solo run");
-        sequential_samples += r.metrics.samples_simulated;
+    for lanes in LANE_WIDTHS {
+        // Sequential loop: one solo coordinator per job, W devices each.
+        let specs = job_specs(lanes);
+        let t0 = Instant::now();
+        let mut sequential_samples = 0u64;
+        for spec in &specs {
+            let coord = Coordinator::new(
+                backend.clone(),
+                spec.config.clone(),
+                spec.dataset.clone(),
+                spec.prior.clone(),
+            )
+            .expect("coordinator");
+            let r = coord.run(spec.stop).expect("solo run");
+            sequential_samples += r.metrics.samples_simulated;
+        }
+        let sequential = t0.elapsed().as_secs_f64();
+        suite.record(
+            format!("sequential_loop_{JOBS}jobs_{WORKERS}workers_lanes{lanes}"),
+            sequential,
+        );
+
+        // Shared pool: all jobs multiplexed over the same W workers.
+        let scheduler = Scheduler::new(backend.clone(), WORKERS);
+        let t0 = Instant::now();
+        let report = scheduler.run(job_specs(lanes)).expect("schedule");
+        let shared = t0.elapsed().as_secs_f64();
+        suite.record(
+            format!("shared_pool_{JOBS}jobs_{WORKERS}workers_lanes{lanes}"),
+            shared,
+        );
+
+        assert!(report.first_error().is_none(), "schedule had failing jobs");
+        let shared_samples = report.pool_metrics.samples_simulated;
+        assert_eq!(
+            shared_samples, sequential_samples,
+            "both modes must simulate the identical workload"
+        );
+
+        let speedup = sequential / shared.max(1e-12);
+        suite.note(format!(
+            "lanes={lanes}: {JOBS} jobs x {RUNS_PER_JOB} runs x {BATCH} samples on \
+             {WORKERS} workers; shared-pool speedup {speedup:.2}x (expect > 1: \
+             sequential pays ceil(R/W) waves per job, shared pays ceil(J*R/W) total)"
+        ));
+        suite.note(format!(
+            "lanes={lanes} throughput: sequential {:.2} Msamples/s, shared {:.2} Msamples/s",
+            sequential_samples as f64 / sequential / 1e6,
+            shared_samples as f64 / shared / 1e6
+        ));
     }
-    let sequential = t0.elapsed().as_secs_f64();
-    suite.record(format!("sequential_loop_{JOBS}jobs_{WORKERS}workers"), sequential);
-
-    // Shared pool: all jobs multiplexed over the same W workers.
-    let scheduler = Scheduler::new(backend, WORKERS);
-    let t0 = Instant::now();
-    let report = scheduler.run(job_specs()).expect("schedule");
-    let shared = t0.elapsed().as_secs_f64();
-    suite.record(format!("shared_pool_{JOBS}jobs_{WORKERS}workers"), shared);
-
-    assert!(report.first_error().is_none(), "schedule had failing jobs");
-    let shared_samples = report.pool_metrics.samples_simulated;
-    assert_eq!(
-        shared_samples, sequential_samples,
-        "both modes must simulate the identical workload"
-    );
-
-    let speedup = sequential / shared.max(1e-12);
-    suite.note(format!(
-        "{JOBS} jobs x {RUNS_PER_JOB} runs x {BATCH} samples on {WORKERS} workers; \
-         shared-pool speedup {speedup:.2}x (expect > 1: sequential pays \
-         ceil(R/W) waves per job, shared pays ceil(J*R/W) total)"
-    ));
-    suite.note(format!(
-        "throughput: sequential {:.2} Msamples/s, shared {:.2} Msamples/s",
-        sequential_samples as f64 / sequential / 1e6,
-        shared_samples as f64 / shared / 1e6
-    ));
     suite.finish();
 }

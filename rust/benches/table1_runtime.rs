@@ -55,7 +55,8 @@ fn main() {
     let mut rng = Xoshiro256::seed_from(1);
     let cpu_batch = 2_000usize;
     suite.bench(format!("cpu_scalar_baseline_b{cpu_batch}_d49"), 1, 3, || {
-        simulate_distance_batch(&sim, &prior, &observed, 49, cpu_batch, &mut rng);
+        simulate_distance_batch(&sim, &prior, &observed, 49, cpu_batch, &mut rng)
+            .expect("valid geometry");
     });
 
     // per-sample normalization (the Table-1 comparison axis)

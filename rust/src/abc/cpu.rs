@@ -1,21 +1,25 @@
 //! CPU baseline engine (Table 1's "2×CPU" rows).
 //!
 //! Runs the identical parallel-ABC dataflow — batched runs, tolerance
-//! filter, run-until-N-accepted — as a single-threaded host loop. It
-//! shares [`crate::backend::native::abc_run`] with the native
-//! coordinator backend and derives run keys the same way the leader
-//! does (`SeedSequence::key(0, run)`), so for a given master seed this
-//! baseline produces the *bit-identical* sample stream the N-worker
-//! native coordinator produces — it is the exact oracle the
-//! `native_backend` integration suite compares against, and the
-//! measured comparator the paper's CPU rows represent (their original
-//! code ran on Xeon HPC clusters).
+//! filter, run-until-N-accepted — as one host loop without the
+//! coordinator's worker pool. It shares
+//! [`crate::backend::native::abc_run`] (the lane-batched kernel, auto
+//! knobs — lane width and intra-run threads never change results) with
+//! the native coordinator backend and derives run keys the same way the
+//! leader does (`SeedSequence::key(0, run)`), so for a given master
+//! seed this baseline produces the *bit-identical* sample stream the
+//! N-worker native coordinator produces — it is the exact oracle the
+//! `native_backend` integration suite compares against. The paper's
+//! truly scalar pre-acceleration comparator (their original code ran on
+//! Xeon HPC clusters) is `model::lanes::scalar_reference` /
+//! `model::simulate_distance_batch`, measured by the bench suites.
 
 use crate::backend::native::abc_run;
 use crate::coordinator::AcceptedSample;
 use crate::data::Dataset;
 use crate::metrics::{RunMetrics, Stopwatch};
-use crate::model::{Prior, Simulator};
+use crate::model::lanes::LaneEngine;
+use crate::model::Prior;
 use crate::rng::SeedSequence;
 
 /// Result of a CPU-baseline inference.
@@ -46,7 +50,10 @@ pub fn run_until(
 ) -> CpuResult {
     let days = dataset.days();
     let observed = dataset.observed.flatten();
-    let sim = Simulator::new(dataset.initial_condition());
+    // engine built once (construction reads the env knobs): auto lane
+    // width — width never changes results, so the oracle match with any
+    // coordinator lane configuration is unconditional
+    let engine = LaneEngine::auto(dataset.initial_condition(), 0);
     let seeds = SeedSequence::new(seed);
 
     let mut accepted = Vec::new();
@@ -57,7 +64,8 @@ pub fn run_until(
         // same key derivation as the coordinator's device workers
         let key = seeds.key(0, run);
         let sw = Stopwatch::start();
-        let out = abc_run(&sim, prior, &observed, days, batch, key);
+        let out = abc_run(&engine, prior, &observed, days, batch, key)
+            .expect("cpu baseline: dataset-consistent job geometry");
         for (index, &d) in out.distances.iter().enumerate() {
             if d <= tolerance {
                 accepted.push(AcceptedSample {

@@ -17,9 +17,13 @@
 //!   artifact path: AOT-compiled XLA graphs executed through PJRT.
 //!
 //! Reproducibility contract: a backend's ABC run must be a pure
-//! function of `(job, key)`. The coordinator derives keys from the
-//! *global run index* only, so for any conforming backend the sample
-//! stream is independent of device count and worker scheduling.
+//! function of `(job, key)` — and, sample by sample, of
+//! `(job, key, lane)`: the native path derives one counter-keyed RNG
+//! stream per lane (`rng::lane_rng`), so outputs are additionally
+//! invariant to the lane width and intra-run thread count
+//! (DESIGN.md §8). The coordinator derives keys from the *global run
+//! index* only, so for any conforming backend the sample stream is
+//! independent of device count and worker scheduling.
 
 pub mod native;
 #[cfg(feature = "pjrt")]
@@ -75,10 +79,16 @@ pub struct AbcJob {
     pub prior_high: Theta,
     /// `(A0, R0, D0, P)` — initial condition + population.
     pub consts: [f32; 4],
+    /// Requested lane width for lane-batched engines (`0` = auto; the
+    /// `$ABC_IPU_LANES` env override wins either way). A pure
+    /// performance knob: results are bit-identical for every width
+    /// (DESIGN.md §8).
+    pub lanes: usize,
 }
 
 impl AbcJob {
-    /// Bind a job from its parts (the common construction shape).
+    /// Bind a job from its parts (the common construction shape); lane
+    /// width starts at auto — pin it with [`AbcJob::with_lanes`].
     pub fn new(
         batch: usize,
         days: usize,
@@ -93,7 +103,14 @@ impl AbcJob {
             prior_low: *prior.low(),
             prior_high: *prior.high(),
             consts,
+            lanes: 0,
         }
+    }
+
+    /// Pin the requested lane width (`0` = auto).
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes;
+        self
     }
 
     /// Validate internal consistency (shapes, bounds).
@@ -111,9 +128,17 @@ impl AbcJob {
                 got: format!("{} elements", self.observed.len()),
             });
         }
+        if self.lanes > MAX_LANE_WIDTH {
+            return Err(Error::Config(format!(
+                "lane width {} exceeds the {MAX_LANE_WIDTH} cap (0 means auto)",
+                self.lanes
+            )));
+        }
         Ok(())
     }
 }
+
+pub use crate::model::lanes::MAX_LANE_WIDTH;
 
 /// One device's ABC engine: executes one batched run per call.
 ///
@@ -250,11 +275,16 @@ mod tests {
             prior_low: [0.0; 8],
             prior_high: [1.0; 8],
             consts: [155.0, 2.0, 3.0, 6e7],
+            lanes: 0,
         };
         job.validate().unwrap();
+        job.clone().with_lanes(16).validate().unwrap();
 
         let mut bad = job.clone();
         bad.observed.truncate(5);
+        assert!(bad.validate().is_err());
+
+        let bad = job.clone().with_lanes(MAX_LANE_WIDTH + 1);
         assert!(bad.validate().is_err());
 
         let mut bad = job;

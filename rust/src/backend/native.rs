@@ -1,23 +1,29 @@
 //! The native backend: pure-Rust tau-leaping simulation on the host.
 //!
 //! This is the zero-dependency default. Each device worker thread gets
-//! its own [`AbcEngine`] wrapping the scalar [`Simulator`]; a run's
-//! entire randomness is derived from the run key by splitting the
-//! 64-bit key into a xoshiro256++ seed, so a run is a pure function of
-//! `(job, key)` — the same discipline the compiled threefry graphs
-//! follow, which is what makes N-worker runs bit-deterministic and lets
-//! the CPU baseline double as an exact oracle for the coordinator (see
-//! `abc::cpu`, which shares [`abc_run`]).
+//! its own [`AbcEngine`] wrapping the lane-batched SoA kernel
+//! ([`crate::model::lanes::LaneEngine`]); every sample ("lane") of a
+//! run draws from a private counter-derived stream
+//! (`rng::lane_rng(key, lane)`), so a sample is a pure function of
+//! `(job, key, lane)` — the same discipline the compiled threefry
+//! graphs follow. That is what makes N-worker runs bit-deterministic,
+//! makes results invariant to the lane width and intra-run thread
+//! count, and lets the poolless `abc::cpu` baseline (which shares
+//! [`abc_run`]) double as an exact oracle for the coordinator.
 //!
-//! Performance notes: the per-sample loop reuses the
-//! auto-vectorization-friendly `Simulator::distance` fused kernel (no
-//! trajectory materialization), and parallelism comes from the
-//! coordinator's device workers — one engine per thread, no intra-run
-//! threading to keep determinism trivial.
+//! Performance notes: the inner loop is the SoA lane kernel
+//! (DESIGN.md §8); inter-run parallelism comes from the coordinator's
+//! device workers, and *intra*-run parallelism from the lane engine's
+//! deterministic lane-group threading — opt-in via
+//! `$ABC_IPU_SIM_THREADS` (default 1 here, so N device workers don't
+//! oversubscribe the host). The lane width defaults to auto and can be
+//! pinned per job (`AbcJob::lanes`, `RunConfig::lanes`) or globally
+//! (`$ABC_IPU_LANES`).
 
 use super::{AbcEngine, AbcJob, AbcRunOutput, Backend};
+use crate::model::lanes::LaneEngine;
 use crate::model::{InitialCondition, Prior, Simulator, N_COMPARTMENTS, N_PARAMS, N_TRANSITIONS};
-use crate::rng::{splitmix64, Xoshiro256};
+use crate::rng::{key_u64, splitmix64, Xoshiro256};
 use crate::{Error, Result};
 
 /// The pure-Rust host backend (the default).
@@ -41,46 +47,49 @@ fn initial_condition(consts: &[f32; 4]) -> InitialCondition {
     }
 }
 
-/// Fold a `u32[2]` run key into one 64-bit word.
-#[inline]
-fn key_u64(key: [u32; 2]) -> u64 {
-    ((key[0] as u64) << 32) | key[1] as u64
-}
-
-/// The host RNG for a run key: all of a native run's randomness flows
-/// from here, so the run is a pure function of the key.
+/// The host RNG for a run key — the *whole-run* stream family.
+///
+/// Since the lane refactor the ABC hot path draws per-lane streams
+/// instead, so nothing in the library consumes this family; it is
+/// retained deliberately as the reserved run-level stream (the family
+/// the `rng::lane_rng` salt is defined against — `tests/rng_streams.rs`
+/// pins the separation) for backends or tools that need one
+/// run-granular host stream per key.
 pub fn key_rng(key: [u32; 2]) -> Xoshiro256 {
     Xoshiro256::seed_from(splitmix64(key_u64(key)))
 }
 
-/// One batched ABC run from a run key: sample `batch` θ from `prior`,
-/// simulate `days`, return `(thetas, distances)`.
+/// One batched ABC run from a run key: sample `batch` θ from `prior`
+/// (one counter-derived stream per lane), simulate `days` on the
+/// lane-batched SoA kernel, return `(thetas, distances)`.
+///
+/// The engine carries the lane width and intra-run thread count
+/// (`LaneEngine::auto(ic, lanes)` resolves `AbcJob::lanes` /
+/// `$ABC_IPU_LANES` / `$ABC_IPU_SIM_THREADS`); both are pure
+/// performance knobs — the output is bit-identical for every width and
+/// thread count and equal to `model::lanes::scalar_reference` over the
+/// scalar oracle. Construct the engine once and reuse it across runs —
+/// engine construction is what touches the environment.
 ///
 /// Shared verbatim by the native coordinator engine and the `abc::cpu`
 /// baseline — by construction the two produce bit-identical streams for
 /// the same key, which the `native_backend` integration suite pins down.
 pub fn abc_run(
-    sim: &Simulator,
+    engine: &LaneEngine,
     prior: &Prior,
     observed: &[f32],
     days: usize,
     batch: usize,
     key: [u32; 2],
-) -> AbcRunOutput {
-    let mut rng = key_rng(key);
-    let mut thetas = Vec::with_capacity(batch * N_PARAMS);
-    let mut distances = Vec::with_capacity(batch);
-    for _ in 0..batch {
-        let theta = prior.sample(&mut rng);
-        distances.push(sim.distance(&theta, observed, days, &mut rng));
-        thetas.extend_from_slice(&theta);
-    }
-    AbcRunOutput { thetas, distances }
+) -> Result<AbcRunOutput> {
+    let (thetas, distances) =
+        engine.sample_distance_batch(prior, observed, days, batch, key)?;
+    Ok(AbcRunOutput { thetas, distances })
 }
 
-/// One worker's native engine: owns the simulator and the job binding.
+/// One worker's native engine: owns the lane engine and the job binding.
 struct NativeEngine {
-    sim: Simulator,
+    engine: LaneEngine,
     prior: Prior,
     observed: Vec<f32>,
     days: usize,
@@ -93,14 +102,7 @@ impl AbcEngine for NativeEngine {
     }
 
     fn run(&mut self, key: [u32; 2]) -> Result<AbcRunOutput> {
-        Ok(abc_run(
-            &self.sim,
-            &self.prior,
-            &self.observed,
-            self.days,
-            self.batch,
-            key,
-        ))
+        abc_run(&self.engine, &self.prior, &self.observed, self.days, self.batch, key)
     }
 }
 
@@ -112,7 +114,7 @@ impl Backend for NativeBackend {
     fn open_engine(&self, _device: u32, job: &AbcJob) -> Result<Box<dyn AbcEngine>> {
         job.validate()?;
         Ok(Box::new(NativeEngine {
-            sim: Simulator::new(initial_condition(&job.consts)),
+            engine: LaneEngine::auto(initial_condition(&job.consts), job.lanes),
             prior: Prior::new(job.prior_low, job.prior_high)?,
             observed: job.observed.clone(),
             days: job.days,
@@ -142,7 +144,7 @@ impl Backend for NativeBackend {
             theta.copy_from_slice(&thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
             // independent stream per rollout, deterministic in (key, i)
             let mut rng = Xoshiro256::seed_from(splitmix64(key_u64(key) ^ splitmix64(i as u64)));
-            out.extend_from_slice(&sim.trajectory(&theta, days, &mut rng));
+            out.extend_from_slice(&sim.trajectory(&theta, days, &mut rng)?);
         }
         Ok(out)
     }
@@ -203,6 +205,7 @@ mod tests {
             prior_low: *prior.low(),
             prior_high: *prior.high(),
             consts: ds.consts(),
+            lanes: 0,
         }
     }
 
@@ -216,6 +219,23 @@ mod tests {
         assert_eq!(a, b, "same key on different engines must match bit-wise");
         let c = e1.run([5, 7]).unwrap();
         assert_ne!(a.thetas, c.thetas);
+    }
+
+    #[test]
+    fn run_is_invariant_to_the_job_lane_width() {
+        // lane width is a pure performance knob: any pinned width (which
+        // $ABC_IPU_LANES may collapse, harmlessly) yields identical bits
+        let backend = NativeBackend::new();
+        let mut reference: Option<AbcRunOutput> = None;
+        for width in [1usize, 4, 16] {
+            let mut engine =
+                backend.open_engine(0, &job(100).with_lanes(width)).unwrap();
+            let out = engine.run([9, 9]).unwrap();
+            match &reference {
+                None => reference = Some(out),
+                Some(want) => assert_eq!(&out, want, "lane width {width}"),
+            }
+        }
     }
 
     #[test]

@@ -61,6 +61,10 @@ pub struct RunConfig {
     /// Hard cap on total runs across all devices (0 = unlimited); guards
     /// against a tolerance so tight nothing is ever accepted.
     pub max_runs: u64,
+    /// Lane width of the native SoA simulation kernel (`0` = auto;
+    /// `$ABC_IPU_LANES` overrides either way). Performance-only:
+    /// results are bit-identical for every width (DESIGN.md §8).
+    pub lanes: usize,
 }
 
 impl Default for RunConfig {
@@ -76,6 +80,7 @@ impl Default for RunConfig {
             return_strategy: ReturnStrategy::default(),
             seed: 0xC0FFEE,
             max_runs: 0,
+            lanes: 0,
         }
     }
 }
@@ -121,6 +126,13 @@ impl RunConfig {
                 return Err(Error::Config(format!("tolerance must be > 0, got {tol}")));
             }
         }
+        if self.lanes > crate::backend::MAX_LANE_WIDTH {
+            return Err(Error::Config(format!(
+                "lanes {} exceeds the {} cap (0 means auto)",
+                self.lanes,
+                crate::backend::MAX_LANE_WIDTH
+            )));
+        }
         Ok(())
     }
 
@@ -157,6 +169,9 @@ impl RunConfig {
         }
         if let Some(n) = v.get("max_runs") {
             cfg.max_runs = n.as_f64()? as u64;
+        }
+        if let Some(n) = v.get("lanes") {
+            cfg.lanes = n.as_usize()?;
         }
         if let Some(rs) = v.get("return_strategy") {
             let mode = rs.req("mode")?.as_str()?;
@@ -200,6 +215,7 @@ impl RunConfig {
         m.insert("days".into(), Json::Num(self.days as f64));
         m.insert("seed".into(), Json::Num(self.seed as f64));
         m.insert("max_runs".into(), Json::Num(self.max_runs as f64));
+        m.insert("lanes".into(), Json::Num(self.lanes as f64));
         let mut rs = BTreeMap::new();
         match self.return_strategy {
             ReturnStrategy::Outfeed { chunk } => {
@@ -383,10 +399,21 @@ mod tests {
             return_strategy: ReturnStrategy::TopK { k: 5 },
             tolerance: Some(2e5),
             seed: 99,
+            lanes: 16,
             ..RunConfig::default()
         };
         let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn lanes_knob_defaults_parses_and_validates() {
+        assert_eq!(RunConfig::default().lanes, 0);
+        let cfg = RunConfig::from_json(r#"{"lanes": 8}"#).unwrap();
+        assert_eq!(cfg.lanes, 8);
+        let mut cfg = RunConfig::default();
+        cfg.lanes = crate::backend::MAX_LANE_WIDTH + 1;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -32,11 +32,16 @@ pub fn generate(
 ) -> Dataset {
     let sim = Simulator::new(ic);
     let mut rng = Xoshiro256::seed_from(seed);
-    let observed = sim.trajectory(theta_star, days, &mut rng);
+    let observed = sim
+        .trajectory(theta_star, days, &mut rng)
+        .expect("synthetic generation needs days >= 1");
 
     // Calibrate the tolerance: distance of fresh θ* rollouts to the data.
     let mut dists: Vec<f32> = (0..32)
-        .map(|_| sim.distance(theta_star, &observed, days, &mut rng))
+        .map(|_| {
+            sim.distance(theta_star, &observed, days, &mut rng)
+                .expect("observed layout is generated to match")
+        })
         .collect();
     dists.sort_by(f32::total_cmp);
     let median = dists[dists.len() / 2].max(1.0);
@@ -93,7 +98,8 @@ mod tests {
         let mut rng = Xoshiro256::seed_from(99);
         let accepted = (0..64)
             .filter(|_| {
-                sim.distance(&DEFAULT_THETA_STAR, &flat, 30, &mut rng) <= d.default_tolerance
+                sim.distance(&DEFAULT_THETA_STAR, &flat, 30, &mut rng).unwrap()
+                    <= d.default_tolerance
             })
             .count();
         assert!(accepted > 32, "θ* acceptance too low: {accepted}/64");

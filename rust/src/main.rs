@@ -62,13 +62,15 @@ commands (paper experiment in brackets):
 common flags: --backend native|pjrt  --artifacts DIR  --reports DIR
 infer flags:  --dataset NAME --tolerance F --samples N --devices N
               --batch N --days N --chunk N --top-k K --seed N --max-runs N
-              --config FILE (JSON RunConfig; CLI flags override)
+              --lanes W (SoA kernel lane width, 0 = auto; results are
+              width-invariant) --config FILE (JSON RunConfig; CLI flags
+              override)
 ";
 
 /// Flags shared by inference-shaped commands.
 const INFER_FLAGS: &[&str] = &[
     "artifacts", "reports", "backend", "dataset", "tolerance", "samples", "devices", "batch",
-    "days", "chunk", "top-k", "seed", "max-runs", "config",
+    "days", "chunk", "top-k", "seed", "max-runs", "lanes", "config",
 ];
 
 fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
@@ -94,6 +96,7 @@ fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
     cfg.days = a.parse_or("days", cfg.days)?;
     cfg.seed = a.parse_or("seed", cfg.seed)?;
     cfg.max_runs = a.parse_or("max-runs", cfg.max_runs)?;
+    cfg.lanes = a.parse_or("lanes", cfg.lanes)?;
     if let Some(k) = a.parse_opt::<usize>("top-k")? {
         cfg.return_strategy = ReturnStrategy::TopK { k };
     } else if let Some(chunk) = a.parse_opt::<usize>("chunk")? {

@@ -1,0 +1,427 @@
+//! Lane-batched structure-of-arrays simulation engine.
+//!
+//! This is the host-side analogue of the paper's core trick (§3.1):
+//! instead of simulating one trajectory at a time, the engine steps `W`
+//! trajectories ("lanes") per day-iteration over SoA state — one `[W]`
+//! slab per compartment — the exact data layout a SIMD or accelerator
+//! kernel wants. Three design rules make it trustworthy:
+//!
+//! 1. **Counter-derived per-lane streams.** Lane `i` of a run draws all
+//!    of its randomness from [`crate::rng::lane_rng`]`(key, i)` — a
+//!    private stream hashed from `(run key, lane index)`. Every sampled
+//!    θ and distance is therefore a pure function of `(job, key, lane)`.
+//! 2. **Width invariance.** The lane width `W` (and the thread count)
+//!    only changes how lanes are *grouped*, never which stream a lane
+//!    reads or which operations it applies — results are bit-identical
+//!    across widths 1/4/8/16/… and bit-identical to the scalar
+//!    [`Simulator`] oracle driven with the same per-lane streams
+//!    ([`scalar_reference`]). `tests/prop_lanes.rs` pins this.
+//! 3. **One arithmetic definition.** Per-lane dynamics delegate to the
+//!    very same [`super::step`] / [`super::sq_distance_day`] /
+//!    [`InitialCondition::init_state`] the scalar oracle uses, so the
+//!    oracle weld is by construction, not by floating-point luck. A
+//!    future SIMD-intrinsic or accelerator kernel replaces the inner
+//!    loop and must keep passing the differential suite.
+//!
+//! Because lanes are independent pure functions, the engine can also
+//! split lane *groups* across threads deterministically — the paper's
+//! "many tiles" axis — without touching the reproducibility contract
+//! (the old native-backend rule "no intra-run threading, to keep
+//! determinism trivial" is obsolete: per-lane keying makes intra-run
+//! parallelism deterministic by construction). See DESIGN.md §8.
+
+use super::{
+    sq_distance_day, step, InitialCondition, Prior, Simulator, State, Theta, N_COMPARTMENTS,
+    N_OBSERVED, N_PARAMS, N_TRANSITIONS,
+};
+use crate::rng::{lane_rng, Xoshiro256};
+use crate::{Error, Result};
+
+/// Default lane width when the job/config leaves it at 0 ("auto").
+pub const AUTO_LANE_WIDTH: usize = 8;
+
+/// Upper bound on a lane width — wide enough for any realistic
+/// SIMD/tile geometry, tight enough to catch a typo'd value before it
+/// sizes the SoA slabs. One policy for every path: `AbcJob`/`RunConfig`
+/// validation rejects larger values, and [`resolve_width`] /
+/// [`LaneEngine::new`] clamp (the `$ABC_IPU_LANES` override included).
+pub const MAX_LANE_WIDTH: usize = 65_536;
+
+/// Environment override for the lane width (`0` or unset = honour the
+/// requested/auto width). The CI lane matrix pins 1 and 8.
+pub const LANES_ENV: &str = "ABC_IPU_LANES";
+
+/// Environment override for intra-run worker threads (`0` = one thread
+/// per available core; unset = the caller's requested default, which is
+/// 1 on the coordinator/engine paths — see [`LaneEngine::auto`]).
+pub const THREADS_ENV: &str = "ABC_IPU_SIM_THREADS";
+
+/// Resolve an effective lane width: `$ABC_IPU_LANES` wins when set to a
+/// positive integer (`0`/unset/unparseable honour the request), then
+/// the requested value, then [`AUTO_LANE_WIDTH`] (requested `0` =
+/// auto). Width is a performance knob only — results are
+/// width-invariant — so the override is always safe.
+pub fn resolve_width(requested: usize) -> usize {
+    let requested = std::env::var(LANES_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(requested);
+    if requested >= 1 {
+        requested.min(MAX_LANE_WIDTH)
+    } else {
+        AUTO_LANE_WIDTH
+    }
+}
+
+/// Resolve the intra-run thread count: `$ABC_IPU_SIM_THREADS`, then the
+/// requested value; `0` (from either) means one thread per available
+/// core. Like the width, this is a pure performance knob.
+pub fn resolve_parallelism(requested: usize) -> usize {
+    let requested = std::env::var(THREADS_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(requested);
+    if requested >= 1 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// The lane-batched SoA engine for one initial condition.
+///
+/// `width` and `parallelism` shape execution only; outputs depend on
+/// `(ic, prior, observed, days, batch, key)` alone.
+#[derive(Debug, Clone)]
+pub struct LaneEngine {
+    ic: InitialCondition,
+    width: usize,
+    parallelism: usize,
+}
+
+impl LaneEngine {
+    /// An engine with an explicit lane width (clamped to
+    /// `[1, MAX_LANE_WIDTH]`) and no intra-run threading. Explicit
+    /// widths ignore `$ABC_IPU_LANES`, so differential tests can pin
+    /// specific widths under any environment.
+    pub fn new(ic: InitialCondition, width: usize) -> Self {
+        Self { ic, width: width.clamp(1, MAX_LANE_WIDTH), parallelism: 1 }
+    }
+
+    /// The production (engine-path) configuration: width from
+    /// [`resolve_width`]`(requested)`; intra-run threading defaults to
+    /// **1** because coordinator/scheduler device workers already
+    /// parallelize across runs — N workers each spawning one thread per
+    /// core would oversubscribe the host. Opt in with
+    /// `$ABC_IPU_SIM_THREADS` (`0` = one per core) when running few
+    /// devices on a many-core host; the hot-path bench requests auto
+    /// threads explicitly.
+    pub fn auto(ic: InitialCondition, requested_width: usize) -> Self {
+        Self {
+            ic,
+            width: resolve_width(requested_width),
+            parallelism: resolve_parallelism(1),
+        }
+    }
+
+    /// Override the intra-run thread count (clamped to >= 1).
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = threads.max(1);
+        self
+    }
+
+    /// The configured lane width.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The configured intra-run thread count.
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// The initial condition lanes are anchored to.
+    pub fn initial_condition(&self) -> &InitialCondition {
+        &self.ic
+    }
+
+    /// One batched ABC run: sample `batch` θ from `prior` (one private
+    /// stream per lane), simulate `days`, and return
+    /// `(thetas [batch, 8] row-major, distances [batch])` — bit-identical
+    /// to [`scalar_reference`] for every width and thread count.
+    pub fn sample_distance_batch(
+        &self,
+        prior: &Prior,
+        observed: &[f32],
+        days: usize,
+        batch: usize,
+        key: [u32; 2],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if days == 0 || batch == 0 {
+            return Err(Error::Config(format!(
+                "lane engine needs batch >= 1 and days >= 1 (got {batch}x{days})"
+            )));
+        }
+        if observed.len() != N_OBSERVED * days {
+            return Err(Error::ShapeMismatch {
+                what: "lane engine observed series".to_string(),
+                want: format!("{} elements ([3, {days}])", N_OBSERVED * days),
+                got: format!("{} elements", observed.len()),
+            });
+        }
+
+        let width = self.width.min(batch);
+        let groups = batch.div_ceil(width);
+        let mut thetas = vec![0.0f32; batch * N_PARAMS];
+        let mut distances = vec![0.0f32; batch];
+
+        let threads = self.parallelism.min(groups);
+        if threads <= 1 {
+            for (g, (theta_out, dist_out)) in thetas
+                .chunks_mut(width * N_PARAMS)
+                .zip(distances.chunks_mut(width))
+                .enumerate()
+            {
+                self.run_group(prior, observed, days, key, g * width, theta_out, dist_out);
+            }
+        } else {
+            // Deterministic intra-run parallelism: each lane group is a
+            // pure function of (key, lane range) and writes a private
+            // output slice, so any partition of the groups over threads
+            // produces identical bits. Contiguous shares keep the
+            // per-thread observed/state working sets cache-friendly.
+            let mut work: Vec<(usize, &mut [f32], &mut [f32])> = thetas
+                .chunks_mut(width * N_PARAMS)
+                .zip(distances.chunks_mut(width))
+                .enumerate()
+                .map(|(g, (theta_out, dist_out))| (g * width, theta_out, dist_out))
+                .collect();
+            let share = work.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                while !work.is_empty() {
+                    let take = share.min(work.len());
+                    let part: Vec<(usize, &mut [f32], &mut [f32])> =
+                        work.drain(..take).collect();
+                    scope.spawn(move || {
+                        for (lane0, theta_out, dist_out) in part {
+                            self.run_group(
+                                prior, observed, days, key, lane0, theta_out, dist_out,
+                            );
+                        }
+                    });
+                }
+            });
+        }
+        Ok((thetas, distances))
+    }
+
+    /// Simulate one group of `dist_out.len()` lanes starting at global
+    /// lane index `lane0`, writing θ and distances into the group's
+    /// output slices.
+    fn run_group(
+        &self,
+        prior: &Prior,
+        observed: &[f32],
+        days: usize,
+        key: [u32; 2],
+        lane0: usize,
+        theta_out: &mut [f32],
+        dist_out: &mut [f32],
+    ) {
+        let w = dist_out.len();
+        debug_assert_eq!(theta_out.len(), w * N_PARAMS);
+
+        // Group-local buffers are allocated per group rather than reused
+        // from per-thread scratch: at realistic geometries the ~9 small
+        // allocations are <1% of a group's simulation cost (W·days
+        // tau-leap days, each with a powf and 2.5 Box–Muller pairs per
+        // lane), and locality keeps the threaded path trivially correct.
+        let mut rngs: Vec<Xoshiro256> =
+            (0..w).map(|l| lane_rng(key, (lane0 + l) as u64)).collect();
+        // Per-lane draw order mirrors the scalar oracle exactly: 8 prior
+        // uniforms first, then 5 normals per simulated day.
+        let thetas: Vec<Theta> = rngs.iter_mut().map(|r| prior.sample(r)).collect();
+
+        let mut state = LaneState::init(&self.ic, &thetas, w);
+        let mut acc: Vec<f32> =
+            (0..w).map(|l| sq_distance_day(&state.lane(l), observed, 0, days)).collect();
+        // Noise slab in the kernel's native [5, W] layout (transition-major).
+        let mut noise = vec![0.0f32; N_TRANSITIONS * w];
+        for t in 1..days {
+            for (l, rng) in rngs.iter_mut().enumerate() {
+                for k in 0..N_TRANSITIONS {
+                    noise[k * w + l] = rng.normal_f32();
+                }
+            }
+            // Fused step + distance, like the scalar oracle's loop: one
+            // gather and one scatter per lane-day, accumulating the
+            // residual from the freshly-stepped state before scatter.
+            for l in 0..w {
+                let z: [f32; N_TRANSITIONS] = std::array::from_fn(|k| noise[k * w + l]);
+                let next = step(&state.lane(l), &thetas[l], &z, self.ic.population);
+                acc[l] += sq_distance_day(&next, observed, t, days);
+                state.set_lane(l, &next);
+            }
+        }
+        for (l, a) in acc.iter().enumerate() {
+            dist_out[l] = a.sqrt();
+            theta_out[l * N_PARAMS..(l + 1) * N_PARAMS].copy_from_slice(&thetas[l]);
+        }
+    }
+}
+
+/// Structure-of-arrays state: `slabs[c][l]` is compartment `c` of lane
+/// `l` — the `[6, W]` layout of the accelerator kernels.
+struct LaneState {
+    slabs: [Vec<f32>; N_COMPARTMENTS],
+}
+
+impl LaneState {
+    /// Day-0 state for every lane, via the scalar oracle's
+    /// [`InitialCondition::init_state`].
+    fn init(ic: &InitialCondition, thetas: &[Theta], w: usize) -> Self {
+        let mut slabs: [Vec<f32>; N_COMPARTMENTS] = std::array::from_fn(|_| vec![0.0f32; w]);
+        for (l, theta) in thetas.iter().enumerate() {
+            let s = ic.init_state(theta);
+            for (c, v) in s.iter().enumerate() {
+                slabs[c][l] = *v;
+            }
+        }
+        Self { slabs }
+    }
+
+    /// Gather lane `l` as a scalar state vector.
+    #[inline]
+    fn lane(&self, l: usize) -> State {
+        std::array::from_fn(|c| self.slabs[c][l])
+    }
+
+    /// Scatter a scalar state vector into lane `l`.
+    #[inline]
+    fn set_lane(&mut self, l: usize, s: &State) {
+        for (c, v) in s.iter().enumerate() {
+            self.slabs[c][l] = *v;
+        }
+    }
+}
+
+/// The scalar-oracle run: the identical per-lane stream discipline
+/// driven through the scalar [`Simulator`] — for sample `i`, a fresh
+/// `lane_rng(key, i)` samples θ then feeds the fused distance kernel.
+/// [`LaneEngine::sample_distance_batch`] must reproduce this
+/// bit-for-bit at every width and thread count (`tests/prop_lanes.rs`);
+/// it is the validation baseline every accelerated path is welded to.
+pub fn scalar_reference(
+    sim: &Simulator,
+    prior: &Prior,
+    observed: &[f32],
+    days: usize,
+    batch: usize,
+    key: [u32; 2],
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut thetas = Vec::with_capacity(batch * N_PARAMS);
+    let mut distances = Vec::with_capacity(batch);
+    for lane in 0..batch {
+        let mut rng = lane_rng(key, lane as u64);
+        let theta = prior.sample(&mut rng);
+        distances.push(sim.distance(&theta, observed, days, &mut rng)?);
+        thetas.extend_from_slice(&theta);
+    }
+    Ok((thetas, distances))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ic() -> InitialCondition {
+        InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 }
+    }
+
+    fn observed(days: usize) -> Vec<f32> {
+        // any [3, days] block works as an observation for these tests
+        (0..N_OBSERVED * days).map(|i| (i % 97) as f32 * 3.0).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn widths_and_threads_are_bit_invariant_and_match_the_oracle() {
+        let days = 9;
+        let batch = 23; // deliberately not a multiple of any width
+        let obs = observed(days);
+        let prior = Prior::paper();
+        let sim = Simulator::new(ic());
+        let (wt, wd) =
+            scalar_reference(&sim, &prior, &obs, days, batch, [11, 12]).unwrap();
+        for width in [1usize, 4, 8, 16] {
+            for threads in [1usize, 3] {
+                let engine = LaneEngine::new(ic(), width).with_parallelism(threads);
+                let (t, d) = engine
+                    .sample_distance_batch(&prior, &obs, days, batch, [11, 12])
+                    .unwrap();
+                assert_eq!(bits(&t), bits(&wt), "thetas at width {width} x{threads}");
+                assert_eq!(bits(&d), bits(&wd), "distances at width {width} x{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_day_and_single_sample_edges() {
+        let prior = Prior::paper();
+        let obs = observed(1);
+        let sim = Simulator::new(ic());
+        let (wt, wd) = scalar_reference(&sim, &prior, &obs, 1, 1, [0, 5]).unwrap();
+        let (t, d) = LaneEngine::new(ic(), 16)
+            .sample_distance_batch(&prior, &obs, 1, 1, [0, 5])
+            .unwrap();
+        assert_eq!(bits(&t), bits(&wt));
+        assert_eq!(bits(&d), bits(&wd));
+        assert_eq!(t.len(), N_PARAMS);
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_decorrelate_lanes() {
+        let prior = Prior::paper();
+        let obs = observed(6);
+        let engine = LaneEngine::new(ic(), 4);
+        let (a, _) = engine.sample_distance_batch(&prior, &obs, 6, 12, [1, 2]).unwrap();
+        let (b, _) = engine.sample_distance_batch(&prior, &obs, 6, 12, [1, 3]).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shape_and_geometry_errors_are_typed() {
+        let prior = Prior::paper();
+        let engine = LaneEngine::new(ic(), 8);
+        assert!(engine.sample_distance_batch(&prior, &[], 0, 4, [0, 0]).is_err());
+        assert!(engine.sample_distance_batch(&prior, &observed(4), 4, 0, [0, 0]).is_err());
+        let err = engine
+            .sample_distance_batch(&prior, &observed(3), 4, 4, [0, 0])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shape mismatch"), "{err}");
+    }
+
+    #[test]
+    fn width_zero_clamps_and_accessors_report() {
+        let engine = LaneEngine::new(ic(), 0).with_parallelism(0);
+        assert_eq!(engine.width(), 1);
+        assert_eq!(engine.parallelism(), 1);
+        assert_eq!(engine.initial_condition().a0, 155.0);
+    }
+
+    #[test]
+    fn resolved_knobs_are_at_least_one() {
+        // env-agnostic: whatever ABC_IPU_LANES / ABC_IPU_SIM_THREADS are
+        // set to in this process, resolution must land on >= 1
+        assert!(resolve_width(0) >= 1);
+        assert!(resolve_width(16) >= 1);
+        assert!(resolve_parallelism(0) >= 1);
+        assert!(resolve_parallelism(2) >= 1);
+    }
+}

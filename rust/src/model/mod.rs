@@ -9,16 +9,26 @@
 //! 1. the **CPU baseline** of Table 1 (scalar per-sample loop — what the
 //!    paper ran on Xeon clusters before acceleration),
 //! 2. the **validation oracle** for the accelerator path from the Rust
-//!    side (integration tests drive `onestep` with the same inputs),
+//!    side (integration tests drive `onestep` with the same inputs, and
+//!    the lane-batched [`lanes::LaneEngine`] is pinned bit-for-bit to
+//!    [`lanes::scalar_reference`] over the scalar [`Simulator`]),
 //! 3. the **synthetic ground-truth generator** for parameter-recovery
 //!    experiments.
+//!
+//! The production hot path is [`lanes`]: a structure-of-arrays kernel
+//! stepping `W` trajectories per day-iteration with counter-derived
+//! per-lane RNG streams (DESIGN.md §8). The scalar [`Simulator`] stays
+//! as the reference implementation the lane engine — and every future
+//! SIMD/accelerator backend — is validated against.
 
 mod distance;
 pub mod epi;
+pub mod lanes;
 mod prior;
 mod simulator;
 
 pub use distance::{euclidean_distance, sq_distance_day};
+pub use lanes::LaneEngine;
 pub use prior::Prior;
 pub use simulator::{simulate_distance_batch, simulate_traj, Simulator};
 

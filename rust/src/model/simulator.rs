@@ -9,6 +9,7 @@
 
 use super::{InitialCondition, State, Theta, N_OBSERVED};
 use crate::rng::Xoshiro256;
+use crate::{Error, Result};
 
 /// Host-side simulator for one initial condition.
 #[derive(Debug, Clone)]
@@ -32,8 +33,17 @@ impl Simulator {
     /// by the artifacts and the observed data).
     ///
     /// Day 0 is the anchored initial condition; each subsequent day is
-    /// one tau-leap update, matching `ref.simulate`.
-    pub fn trajectory(&self, theta: &Theta, days: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    /// one tau-leap update, matching `ref.simulate`. Errors on
+    /// `days == 0` — this oracle sits under differential suites whose
+    /// degenerate-geometry behaviour must be a typed refusal, not a
+    /// debug-only assertion.
+    pub fn trajectory(
+        &self,
+        theta: &Theta,
+        days: usize,
+        rng: &mut Xoshiro256,
+    ) -> Result<Vec<f32>> {
+        check_days(days)?;
         let mut out = vec![0.0f32; N_OBSERVED * days];
         let mut state = self.ic.init_state(theta);
         self.record(&state, 0, days, &mut out);
@@ -42,15 +52,18 @@ impl Simulator {
             state = super::step(&state, theta, &z, self.ic.population);
             self.record(&state, t, days, &mut out);
         }
-        out
+        Ok(out)
     }
 
     /// Simulate one trajectory and return its Euclidean distance to
     /// `observed` (layout `[3, days]`), never materializing the
     /// trajectory — the host analogue of the fused Pallas kernel.
+    /// Errors on `days == 0` or an `observed` block whose length is not
+    /// `3 * days`.
     pub fn distance(&self, theta: &Theta, observed: &[f32], days: usize,
-                    rng: &mut Xoshiro256) -> f32 {
-        debug_assert_eq!(observed.len(), N_OBSERVED * days);
+                    rng: &mut Xoshiro256) -> Result<f32> {
+        check_days(days)?;
+        check_observed(observed, days)?;
         let mut state = self.ic.init_state(theta);
         let mut acc = super::sq_distance_day(&state, observed, 0, days);
         for t in 1..days {
@@ -58,12 +71,14 @@ impl Simulator {
             state = super::step(&state, theta, &z, self.ic.population);
             acc += super::sq_distance_day(&state, observed, t, days);
         }
-        acc.sqrt()
+        Ok(acc.sqrt())
     }
 
-    /// Full state trajectory `[6, days]` row-major (tests, liveness model).
+    /// Full state trajectory `[6, days]` row-major (tests, liveness
+    /// model). Errors on `days == 0`, like its siblings.
     pub fn full_trajectory(&self, theta: &Theta, days: usize,
-                           rng: &mut Xoshiro256) -> Vec<f32> {
+                           rng: &mut Xoshiro256) -> Result<Vec<f32>> {
+        check_days(days)?;
         let mut out = vec![0.0f32; 6 * days];
         let mut state = self.ic.init_state(theta);
         for (c, &v) in state.iter().enumerate() {
@@ -76,7 +91,7 @@ impl Simulator {
                 out[c * days + t] = v;
             }
         }
-        out
+        Ok(out)
     }
 
     #[inline]
@@ -86,6 +101,29 @@ impl Simulator {
         out[days + t] = state[R];
         out[2 * days + t] = state[D];
     }
+}
+
+/// `days >= 1`: day 0 is the anchored initial condition, so an empty
+/// fit window has no meaning.
+fn check_days(days: usize) -> Result<()> {
+    if days == 0 {
+        return Err(Error::Config(
+            "simulator needs days >= 1 (day 0 anchors the initial condition)".to_string(),
+        ));
+    }
+    Ok(())
+}
+
+/// `observed` must be a `[3, days]` row-major block.
+fn check_observed(observed: &[f32], days: usize) -> Result<()> {
+    if observed.len() != N_OBSERVED * days {
+        return Err(Error::ShapeMismatch {
+            what: "simulator observed series".to_string(),
+            want: format!("{} elements ([3, {days}])", N_OBSERVED * days),
+            got: format!("{} elements", observed.len()),
+        });
+    }
+    Ok(())
 }
 
 /// CPU baseline for one full ABC run: sample `batch` θ from `prior`,
@@ -98,21 +136,21 @@ pub fn simulate_distance_batch(
     days: usize,
     batch: usize,
     rng: &mut Xoshiro256,
-) -> (Vec<Theta>, Vec<f32>) {
+) -> Result<(Vec<Theta>, Vec<f32>)> {
     let mut thetas = Vec::with_capacity(batch);
     let mut dists = Vec::with_capacity(batch);
     for _ in 0..batch {
         let theta = prior.sample(rng);
-        dists.push(sim.distance(&theta, observed, days, rng));
+        dists.push(sim.distance(&theta, observed, days, rng)?);
         thetas.push(theta);
     }
-    (thetas, dists)
+    Ok((thetas, dists))
 }
 
 /// Simulate `thetas` trajectories (posterior predictive), returning each
 /// as a `[3, days]` row-major vector.
 pub fn simulate_traj(sim: &Simulator, thetas: &[Theta], days: usize,
-                     rng: &mut Xoshiro256) -> Vec<Vec<f32>> {
+                     rng: &mut Xoshiro256) -> Result<Vec<Vec<f32>>> {
     thetas.iter().map(|t| sim.trajectory(t, days, rng)).collect()
 }
 
@@ -136,7 +174,7 @@ mod tests {
     fn trajectory_layout_and_anchor() {
         let mut rng = Xoshiro256::seed_from(0);
         let days = 20;
-        let traj = sim().trajectory(&THETA, days, &mut rng);
+        let traj = sim().trajectory(&THETA, days, &mut rng).unwrap();
         assert_eq!(traj.len(), 3 * days);
         assert_eq!(traj[0], 155.0); // A day 0
         assert_eq!(traj[days], 2.0); // R day 0
@@ -147,12 +185,12 @@ mod tests {
     fn distance_matches_trajectory_distance() {
         let days = 25;
         let mut rng = Xoshiro256::seed_from(1);
-        let observed = sim().trajectory(&THETA, days, &mut rng);
+        let observed = sim().trajectory(&THETA, days, &mut rng).unwrap();
         // identical RNG stream for both paths
         let mut r1 = Xoshiro256::seed_from(2);
         let mut r2 = Xoshiro256::seed_from(2);
-        let traj = sim().trajectory(&THETA, days, &mut r1);
-        let d_fused = sim().distance(&THETA, &observed, days, &mut r2);
+        let traj = sim().trajectory(&THETA, days, &mut r1).unwrap();
+        let d_fused = sim().distance(&THETA, &observed, days, &mut r2).unwrap();
         let d_bulk = euclidean_distance(&traj, &observed);
         assert!((d_fused - d_bulk).abs() / d_bulk.max(1.0) < 1e-5);
     }
@@ -161,9 +199,9 @@ mod tests {
     fn distance_to_self_with_same_seed_is_zero() {
         let days = 15;
         let mut r1 = Xoshiro256::seed_from(3);
-        let observed = sim().trajectory(&THETA, days, &mut r1);
+        let observed = sim().trajectory(&THETA, days, &mut r1).unwrap();
         let mut r2 = Xoshiro256::seed_from(3);
-        let d = sim().distance(&THETA, &observed, days, &mut r2);
+        let d = sim().distance(&THETA, &observed, days, &mut r2).unwrap();
         assert_eq!(d, 0.0);
     }
 
@@ -171,9 +209,9 @@ mod tests {
     fn batch_respects_prior_bounds() {
         let prior = Prior::paper();
         let mut rng = Xoshiro256::seed_from(4);
-        let observed = sim().trajectory(&THETA, 10, &mut rng);
+        let observed = sim().trajectory(&THETA, 10, &mut rng).unwrap();
         let (thetas, dists) =
-            simulate_distance_batch(&sim(), &prior, &observed, 10, 500, &mut rng);
+            simulate_distance_batch(&sim(), &prior, &observed, 10, 500, &mut rng).unwrap();
         assert_eq!(thetas.len(), 500);
         assert_eq!(dists.len(), 500);
         for t in &thetas {
@@ -185,10 +223,39 @@ mod tests {
     }
 
     #[test]
+    fn zero_days_is_a_typed_config_error() {
+        let mut rng = Xoshiro256::seed_from(6);
+        let err = sim().trajectory(&THETA, 0, &mut rng).unwrap_err();
+        assert!(matches!(err, crate::Error::Config(_)), "{err}");
+        let err = sim().distance(&THETA, &[], 0, &mut rng).unwrap_err();
+        assert!(matches!(err, crate::Error::Config(_)), "{err}");
+        let err = sim().full_trajectory(&THETA, 0, &mut rng).unwrap_err();
+        assert!(matches!(err, crate::Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn observed_length_mismatch_is_a_typed_shape_error() {
+        let mut rng = Xoshiro256::seed_from(7);
+        let err = sim().distance(&THETA, &[0.0; 10], 4, &mut rng).unwrap_err();
+        match err {
+            crate::Error::ShapeMismatch { want, got, .. } => {
+                assert!(want.contains("12"), "{want}");
+                assert!(got.contains("10"), "{got}");
+            }
+            other => panic!("expected ShapeMismatch, got {other}"),
+        }
+        // the error path must not consume randomness
+        let mut a = Xoshiro256::seed_from(8);
+        let b = Xoshiro256::seed_from(8);
+        let _ = sim().distance(&THETA, &[0.0; 5], 4, &mut a);
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn full_trajectory_conserves_population() {
         let mut rng = Xoshiro256::seed_from(5);
         let days = 30;
-        let full = sim().full_trajectory(&THETA, days, &mut rng);
+        let full = sim().full_trajectory(&THETA, days, &mut rng).unwrap();
         for t in 0..days {
             let total: f32 = (0..6).map(|c| full[c * days + t]).sum();
             assert!((total - 60_000_000.0).abs() / 60_000_000.0 < 1e-5);

@@ -13,6 +13,14 @@
 //!    with Box–Muller normals. This is *not* meant to match JAX's
 //!    threefry stream (bit-exact kernel comparison goes through the
 //!    `onestep` artifact with explicit noise instead).
+//!
+//! On top of the `(device, run)` key routing sits the **lane** level:
+//! [`lane_rng`] derives one independent host stream per `(run key,
+//! lane index)` pair, so every sample of a batched run owns a private,
+//! counter-derived stream. That makes a sample a pure function of
+//! `(job, key, lane)` — the property the lane-batched SoA kernel
+//! (`model::lanes`, DESIGN.md §8) builds its width-invariance and
+//! deterministic intra-run parallelism on.
 
 mod xoshiro;
 
@@ -51,6 +59,32 @@ impl SeedSequence {
     }
 }
 
+/// Fold a `u32[2]` run key into one 64-bit word (the layout the
+/// compiled threefry graphs take their key in).
+#[inline]
+pub fn key_u64(key: [u32; 2]) -> u64 {
+    ((key[0] as u64) << 32) | key[1] as u64
+}
+
+/// Domain-separation salt for the per-lane stream family, so lane
+/// streams can never collide with the whole-run stream
+/// (`backend::native::key_rng`) or the per-rollout predict streams,
+/// which hash the same key without this salt.
+const LANE_STREAM_SALT: u64 = 0x1a5e_c0de_5eed_ab0c;
+
+/// The host RNG for lane `lane` of the run keyed by `key`.
+///
+/// Counter-derived: `splitmix64(key ⊕ splitmix64(salt ⊕ lane))` seeds a
+/// private xoshiro256++ stream per `(key, lane)` pair, so any lane's
+/// stream can be regenerated without materializing the others and a
+/// sample's randomness is a pure function of `(key, lane)` — never of
+/// the lane width, group geometry or thread schedule that happens to
+/// execute it (the `model::lanes` width-invariance contract, pinned by
+/// `tests/prop_lanes.rs` and `tests/rng_streams.rs`).
+pub fn lane_rng(key: [u32; 2], lane: u64) -> Xoshiro256 {
+    Xoshiro256::seed_from(splitmix64(key_u64(key) ^ splitmix64(LANE_STREAM_SALT ^ lane)))
+}
+
 /// SplitMix64 finalizer: the standard 64-bit avalanche hash.
 pub fn splitmix64(mut z: u64) -> u64 {
     z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
@@ -87,6 +121,36 @@ mod tests {
         let a = SeedSequence::new(1).key(0, 0);
         let b = SeedSequence::new(2).key(0, 0);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn key_u64_layout() {
+        assert_eq!(key_u64([1, 2]), (1u64 << 32) | 2);
+        assert_eq!(key_u64([0, 0]), 0);
+    }
+
+    #[test]
+    fn lane_rng_is_deterministic_and_lane_sensitive() {
+        let mut a = lane_rng([3, 4], 7);
+        let mut b = lane_rng([3, 4], 7);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = lane_rng([3, 4], 8);
+        let mut d = lane_rng([3, 5], 7);
+        let mut a2 = lane_rng([3, 4], 7);
+        let first = a2.next_u64();
+        assert_ne!(first, c.next_u64());
+        assert_ne!(first, d.next_u64());
+    }
+
+    #[test]
+    fn lane_streams_prefix_disjoint_over_small_grid() {
+        let mut seen = HashSet::new();
+        for key_lo in 0..8u32 {
+            for lane in 0..64u64 {
+                let mut r = lane_rng([0xABC, key_lo], lane);
+                assert!(seen.insert((r.next_u64(), r.next_u64())), "collision {key_lo}/{lane}");
+            }
+        }
     }
 
     #[test]

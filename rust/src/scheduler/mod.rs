@@ -129,7 +129,8 @@ impl JobSpec {
                 truncated.observed.flatten(),
                 &self.prior,
                 truncated.consts(),
-            ),
+            )
+            .with_lanes(cfg.lanes),
             tolerance: self.tolerance(),
             strategy: cfg.return_strategy,
             seeds: SeedSequence::new(cfg.seed),

@@ -3,10 +3,110 @@
 //! Includes a tiny property-testing harness (offline stand-in for
 //! `proptest`): deterministic random case generation over `Xoshiro256`
 //! with first-failure reporting of the seed, so failures reproduce.
+//! Also hosts the fixture/builder helpers the determinism suites share
+//! (`native_backend`, `prop_scheduler`, `prop_lanes`, `recovery`):
+//! sample fingerprints, `ABC_IPU_TEST_WORKERS` plumbing and a synthetic
+//! job builder.
 #![allow(dead_code)] // each test binary uses a different helper subset
 
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::{AcceptedSample, StopRule};
+use abc_ipu::data::Dataset;
+use abc_ipu::model::Prior;
 use abc_ipu::rng::Xoshiro256;
+use abc_ipu::scheduler::JobSpec;
 use std::path::PathBuf;
+
+/// Full identity of an accepted sample: `(run, index, θ bits, distance
+/// bits)` — bit-exact, and deliberately excluding the `device` field,
+/// which records which pool worker happened to execute the run
+/// (provenance, never part of the reproducibility contract).
+pub type Fingerprint = (u64, u32, [u32; 8], u32);
+
+/// Fingerprint an accepted-sample set for bit-exact comparison.
+pub fn fingerprints(samples: &[AcceptedSample]) -> Vec<Fingerprint> {
+    samples
+        .iter()
+        .map(|s| (s.run, s.index, s.theta.map(f32::to_bits), s.distance.to_bits()))
+        .collect()
+}
+
+/// Pool size for scheduler-driven suites: `$ABC_IPU_TEST_WORKERS`
+/// (the CI matrix leg) or `default`.
+pub fn pool_workers(default: usize) -> usize {
+    std::env::var("ABC_IPU_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Worker counts a determinism sweep should cover: 1/2/4 plus
+/// `$ABC_IPU_TEST_WORKERS` when it names something else.
+pub fn worker_counts() -> Vec<usize> {
+    let mut counts = vec![1, 2, 4];
+    let env = pool_workers(0);
+    if env > 0 && !counts.contains(&env) {
+        counts.push(env);
+    }
+    counts
+}
+
+/// Builder for synthetic-dataset inference jobs — the fixture shape
+/// `native_backend`, `prop_scheduler`, `prop_lanes` and `recovery`
+/// previously each re-implemented. Field defaults give a small,
+/// CPU-friendly job; override what the test pins down.
+pub struct JobBuilder {
+    pub dataset: Dataset,
+    pub seed: u64,
+    pub tol_mult: f32,
+    pub devices: usize,
+    pub batch: usize,
+    pub days: usize,
+    pub strategy: ReturnStrategy,
+    pub max_runs: u64,
+    pub lanes: usize,
+}
+
+impl JobBuilder {
+    /// Defaults over `dataset`: its full day span, 2 devices, batch 800,
+    /// ε = 30 × the dataset tolerance, chunked outfeed, auto lanes.
+    pub fn new(dataset: Dataset) -> Self {
+        let days = dataset.days();
+        Self {
+            dataset,
+            seed: 0xFEED,
+            tol_mult: 30.0,
+            devices: 2,
+            batch: 800,
+            days,
+            strategy: ReturnStrategy::Outfeed { chunk: 800 },
+            max_runs: 400,
+            lanes: 0,
+        }
+    }
+
+    /// The `RunConfig` this builder describes.
+    pub fn config(&self) -> RunConfig {
+        RunConfig {
+            dataset: "synthetic".into(),
+            tolerance: Some(self.dataset.default_tolerance * self.tol_mult),
+            devices: self.devices,
+            batch_per_device: self.batch,
+            days: self.days,
+            return_strategy: self.strategy,
+            seed: self.seed,
+            max_runs: self.max_runs,
+            lanes: self.lanes,
+            ..Default::default()
+        }
+    }
+
+    /// A validated scheduler job over the paper prior.
+    pub fn spec(&self, name: &str, stop: StopRule) -> JobSpec {
+        JobSpec::new(name, self.config(), self.dataset.clone(), Prior::paper(), stop)
+            .expect("valid synthetic job spec")
+    }
+}
 
 /// Locate the artifacts directory for tests (repo root / env override).
 pub fn artifacts_dir() -> PathBuf {

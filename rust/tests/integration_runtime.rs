@@ -33,7 +33,7 @@ fn observed_16() -> Vec<f32> {
     // deterministic synthetic observation over 16 days
     let theta: Theta = [0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83];
     let mut rng = Xoshiro256::seed_from(7);
-    Simulator::new(ic()).trajectory(&theta, 16, &mut rng)
+    Simulator::new(ic()).trajectory(&theta, 16, &mut rng).unwrap()
 }
 
 #[test]

@@ -15,41 +15,24 @@ mod common;
 
 use abc_ipu::abc::{predict::predict, Posterior};
 use abc_ipu::config::{ReturnStrategy, RunConfig};
-use abc_ipu::coordinator::{AcceptedSample, Coordinator, StopRule};
+use abc_ipu::coordinator::{Coordinator, StopRule};
 use abc_ipu::data::{synthetic, Dataset};
 use abc_ipu::model::Prior;
-use common::native_backend;
+use common::{fingerprints, native_backend, Fingerprint, JobBuilder};
 
 fn dataset() -> Dataset {
     synthetic::default_dataset(16, 0x5eed)
 }
 
 fn config(devices: usize, strategy: ReturnStrategy, tolerance: f32) -> RunConfig {
-    RunConfig {
-        dataset: "synthetic".into(),
-        tolerance: Some(tolerance),
-        devices,
-        batch_per_device: 1000,
-        days: 16,
-        return_strategy: strategy,
-        seed: 0xFEED,
-        ..Default::default()
-    }
-}
-
-/// Full identity of a sample, bit-exact θ and distance included.
-fn fingerprints(samples: &[AcceptedSample]) -> Vec<(u64, u32, [u32; 8], u32)> {
-    samples
-        .iter()
-        .map(|s| {
-            (
-                s.run,
-                s.index,
-                s.theta.map(f32::to_bits),
-                s.distance.to_bits(),
-            )
-        })
-        .collect()
+    let mut builder = JobBuilder::new(dataset());
+    builder.devices = devices;
+    builder.batch = 1000;
+    builder.strategy = strategy;
+    let mut cfg = builder.config();
+    cfg.tolerance = Some(tolerance);
+    cfg.max_runs = 0; // these suites bound work via stop rules instead
+    cfg
 }
 
 /// A tolerance that accepts a workable fraction on the synthetic set.
@@ -60,7 +43,7 @@ fn tolerance() -> f32 {
 #[test]
 fn exact_runs_bit_deterministic_across_device_counts() {
     let tol = tolerance();
-    let mut reference: Option<Vec<(u64, u32, [u32; 8], u32)>> = None;
+    let mut reference: Option<Vec<Fingerprint>> = None;
     for devices in [1usize, 2, 4] {
         let cfg = config(devices, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
         let coord = Coordinator::new(native_backend(), cfg, dataset(), Prior::paper()).unwrap();
@@ -85,7 +68,7 @@ fn exact_runs_bit_deterministic_across_return_strategies() {
         // k=1000 = whole batch: top-k cannot drop accepted samples
         ReturnStrategy::TopK { k: 1000 },
     ];
-    let mut reference: Option<Vec<(u64, u32, [u32; 8], u32)>> = None;
+    let mut reference: Option<Vec<Fingerprint>> = None;
     for strategy in strategies {
         let cfg = config(2, strategy, tol);
         let coord = Coordinator::new(native_backend(), cfg, dataset(), Prior::paper()).unwrap();

@@ -1,0 +1,163 @@
+//! Differential property suite for the lane-batched SoA kernel
+//! (ISSUE 3 / DESIGN.md §8).
+//!
+//! The contract under test: a batched ABC run's output is a pure
+//! function of `(job, key, lane)` —
+//!
+//! * the [`LaneEngine`] is **bit-identical to the scalar
+//!   [`Simulator`] oracle** ([`scalar_reference`]) over randomized
+//!   `(θ-box, days, batch, key)`,
+//! * bit-identical **across lane widths 1/4/8/16** and across intra-run
+//!   thread counts,
+//! * and through the full stack: native engines with pinned per-job
+//!   widths agree, and scheduler-pool runs stay bit-identical to solo
+//!   coordinator runs for every lane width.
+
+mod common;
+
+use abc_ipu::backend::{AbcJob, Backend, NativeBackend};
+use abc_ipu::coordinator::{Coordinator, StopRule};
+use abc_ipu::data::synthetic;
+use abc_ipu::model::lanes::{scalar_reference, LaneEngine};
+use abc_ipu::model::{InitialCondition, Prior, Simulator, Theta, PRIOR_HIGH};
+use abc_ipu::scheduler::Scheduler;
+use common::{
+    fingerprints, native_backend, prop_cases, worker_counts, Fingerprint, JobBuilder,
+};
+
+/// The lane widths the invariance contract is pinned at.
+const WIDTHS: [usize; 4] = [1, 4, 8, 16];
+
+fn ic() -> InitialCondition {
+    InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn lane_engine_bit_equals_scalar_oracle_across_widths_and_threads() {
+    let sim = Simulator::new(ic());
+    prop_cases("lane_vs_oracle", 12, |rng| {
+        let days = 1 + rng.below(20) as usize;
+        let batch = 1 + rng.below(70) as usize;
+        let key = [rng.next_u64() as u32, rng.next_u64() as u32];
+        // a random sub-box of the paper prior
+        let lo: Theta =
+            std::array::from_fn(|i| rng.uniform() as f32 * 0.3 * PRIOR_HIGH[i]);
+        let hi: Theta = std::array::from_fn(|i| {
+            lo[i] + (rng.uniform() as f32).max(0.05) * (PRIOR_HIGH[i] - lo[i])
+        });
+        let prior = Prior::new(lo, hi).unwrap();
+        // an arbitrary [3, days] observation block
+        let observed: Vec<f32> =
+            (0..3 * days).map(|_| (rng.uniform() * 1e4) as f32).collect();
+
+        let (oracle_thetas, oracle_dists) =
+            scalar_reference(&sim, &prior, &observed, days, batch, key).unwrap();
+        assert!(oracle_dists.iter().all(|d| d.is_finite()));
+        for width in WIDTHS {
+            for threads in [1usize, 3] {
+                let engine = LaneEngine::new(ic(), width).with_parallelism(threads);
+                let (thetas, dists) = engine
+                    .sample_distance_batch(&prior, &observed, days, batch, key)
+                    .unwrap();
+                assert_eq!(
+                    bits(&thetas),
+                    bits(&oracle_thetas),
+                    "θ diverged: width {width} x{threads} threads, days {days}, batch {batch}"
+                );
+                assert_eq!(
+                    bits(&dists),
+                    bits(&oracle_dists),
+                    "distance diverged: width {width} x{threads} threads, days {days}, batch {batch}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn tail_groups_and_overwide_lanes_match_the_oracle() {
+    // batch deliberately smaller than / coprime to the width, so the
+    // last (or only) group is partial
+    let sim = Simulator::new(ic());
+    let prior = Prior::paper();
+    let days = 7;
+    let observed: Vec<f32> = (0..3 * days).map(|i| i as f32 * 11.0).collect();
+    for (batch, width) in [(10usize, 16usize), (37, 8), (5, 4), (1, 16)] {
+        let (ot, od) =
+            scalar_reference(&sim, &prior, &observed, days, batch, [7, 8]).unwrap();
+        let (t, d) = LaneEngine::new(ic(), width)
+            .sample_distance_batch(&prior, &observed, days, batch, [7, 8])
+            .unwrap();
+        assert_eq!(bits(&t), bits(&ot), "batch {batch} width {width}");
+        assert_eq!(bits(&d), bits(&od), "batch {batch} width {width}");
+    }
+}
+
+#[test]
+fn native_engines_with_pinned_job_widths_agree() {
+    // Full backend plumbing: AbcJob::lanes is a pure performance knob.
+    // (When $ABC_IPU_LANES is set — the CI lane matrix — it collapses
+    // every request to one width, which this invariance makes harmless.)
+    let ds = synthetic::default_dataset(12, 0xAB);
+    let prior = Prior::paper();
+    let backend = NativeBackend::new();
+    let base = AbcJob::new(300, 12, ds.observed.flatten(), &prior, ds.consts());
+    let mut reference = None;
+    for width in WIDTHS {
+        let mut engine = backend
+            .open_engine(0, &base.clone().with_lanes(width))
+            .unwrap();
+        let out = engine.run([3, 14]).unwrap();
+        match &reference {
+            None => reference = Some(out),
+            Some(want) => assert_eq!(&out, want, "job lane width {width}"),
+        }
+    }
+}
+
+#[test]
+fn pool_runs_stay_bit_identical_to_solo_for_every_lane_width() {
+    let mut cross_width: Option<Vec<Fingerprint>> = None;
+    for width in WIDTHS {
+        let mut builder = JobBuilder::new(synthetic::default_dataset(12, 0x5eed));
+        builder.batch = 400;
+        builder.lanes = width;
+        let spec = builder.spec(&format!("lanes{width}"), StopRule::ExactRuns(4));
+
+        let solo = Coordinator::new(
+            native_backend(),
+            spec.config.clone(),
+            spec.dataset.clone(),
+            spec.prior.clone(),
+        )
+        .unwrap()
+        .run(spec.stop)
+        .unwrap();
+        let solo_fp = fingerprints(&solo.accepted);
+        assert!(!solo_fp.is_empty(), "tolerance too tight for the test");
+
+        for workers in worker_counts() {
+            let report = Scheduler::new(native_backend(), workers)
+                .run(vec![spec.clone()])
+                .unwrap();
+            let pooled = report.jobs[0].outcome.as_ref().unwrap();
+            assert_eq!(
+                fingerprints(&pooled.accepted),
+                solo_fp,
+                "pool ({workers} workers) diverged from solo at lane width {width}"
+            );
+        }
+
+        // ...and the result itself must not depend on the width at all
+        match &cross_width {
+            None => cross_width = Some(solo_fp),
+            Some(want) => {
+                assert_eq!(&solo_fp, want, "solo result changed with lane width {width}")
+            }
+        }
+    }
+}

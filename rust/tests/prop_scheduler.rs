@@ -9,58 +9,25 @@
 
 mod common;
 
-use abc_ipu::config::{ReturnStrategy, RunConfig};
-use abc_ipu::coordinator::{AcceptedSample, Coordinator, StopRule};
+use abc_ipu::config::ReturnStrategy;
+use abc_ipu::coordinator::{Coordinator, StopRule};
 use abc_ipu::data::synthetic;
-use abc_ipu::model::Prior;
 use abc_ipu::scheduler::{JobSpec, Scheduler};
-use common::native_backend;
+use common::{fingerprints, native_backend, worker_counts, Fingerprint, JobBuilder};
 use std::collections::BTreeMap;
-
-/// Full identity of a sample, bit-exact θ and distance included. The
-/// `device` field is deliberately excluded: it records which pool
-/// worker happened to execute the run (provenance, not contract).
-fn fingerprints(samples: &[AcceptedSample]) -> Vec<(u64, u32, [u32; 8], u32)> {
-    samples
-        .iter()
-        .map(|s| (s.run, s.index, s.theta.map(f32::to_bits), s.distance.to_bits()))
-        .collect()
-}
-
-fn worker_counts() -> Vec<usize> {
-    let mut counts = vec![1, 2, 4];
-    if let Some(n) = std::env::var("ABC_IPU_TEST_WORKERS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-    {
-        if !counts.contains(&n) {
-            counts.push(n);
-        }
-    }
-    counts
-}
 
 /// A job over a synthetic dataset; jobs differ in data, seed, ε and
 /// return strategy so cross-job contamination cannot cancel out.
 fn job(name: &str, data_seed: u64, master_seed: u64, tol_mult: f32, stop: StopRule) -> JobSpec {
-    let dataset = synthetic::default_dataset(16, data_seed);
-    let strategy = match master_seed % 3 {
+    let mut builder = JobBuilder::new(synthetic::default_dataset(16, data_seed));
+    builder.seed = master_seed;
+    builder.tol_mult = tol_mult;
+    builder.strategy = match master_seed % 3 {
         0 => ReturnStrategy::Outfeed { chunk: 800 },
         1 => ReturnStrategy::Outfeed { chunk: 93 },
         _ => ReturnStrategy::TopK { k: 800 }, // k = batch: drops nothing
     };
-    let config = RunConfig {
-        dataset: "synthetic".into(),
-        tolerance: Some(dataset.default_tolerance * tol_mult),
-        devices: 2,
-        batch_per_device: 800,
-        days: 16,
-        return_strategy: strategy,
-        seed: master_seed,
-        max_runs: 400,
-        ..Default::default()
-    };
-    JobSpec::new(name, config, dataset, Prior::paper(), stop).unwrap()
+    builder.spec(name, stop)
 }
 
 fn study() -> Vec<JobSpec> {
@@ -73,7 +40,7 @@ fn study() -> Vec<JobSpec> {
 
 /// Solo reference: each job run by its own `Coordinator` (which uses
 /// `config.devices` = 2 workers), exactly as a sequential study would.
-fn solo_reference(jobs: &[JobSpec]) -> BTreeMap<String, Vec<(u64, u32, [u32; 8], u32)>> {
+fn solo_reference(jobs: &[JobSpec]) -> BTreeMap<String, Vec<Fingerprint>> {
     jobs.iter()
         .map(|spec| {
             let coord = Coordinator::new(
@@ -140,10 +107,10 @@ fn accepted_target_is_deterministic_across_pool_sizes() {
         job("t2", 0xBEEF, 201, 25.0, StopRule::AcceptedTarget(9)),
         job("t3", 0xCAFE, 202, 35.0, StopRule::AcceptedTarget(15)),
     ];
-    let mut reference: Option<BTreeMap<String, Vec<(u64, u32, [u32; 8], u32)>>> = None;
+    let mut reference: Option<BTreeMap<String, Vec<Fingerprint>>> = None;
     for workers in worker_counts() {
         let report = Scheduler::new(native_backend(), workers).run(jobs.clone()).unwrap();
-        let got: BTreeMap<String, Vec<(u64, u32, [u32; 8], u32)>> = report
+        let got: BTreeMap<String, Vec<Fingerprint>> = report
             .jobs
             .iter()
             .map(|j| {

@@ -16,12 +16,12 @@
 
 mod common;
 
-use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::config::ReturnStrategy;
 use abc_ipu::coordinator::StopRule;
 use abc_ipu::data::synthetic::{self, DEFAULT_THETA_STAR};
 use abc_ipu::model::{Prior, N_PARAMS, PARAM_NAMES};
 use abc_ipu::scheduler::{JobSpec, Scheduler};
-use common::native_backend;
+use common::{fingerprints, native_backend, pool_workers, JobBuilder};
 
 const DAYS: usize = 16;
 const BATCH: usize = 2_000;
@@ -43,29 +43,17 @@ fn scenario(name: &str, data_seed: u64, master_seed: u64) -> JobSpec {
         data_seed,
         2.0,
     );
-    let config = RunConfig {
-        dataset: "synthetic".into(),
-        // ×30 over the θ*-self-distance scale: loose enough to accept a
-        // workable fraction on a CPU host, tight enough to concentrate
-        // the identified marginals around θ*.
-        tolerance: Some(dataset.default_tolerance * 30.0),
-        devices: 1,
-        batch_per_device: BATCH,
-        days: DAYS,
-        return_strategy: ReturnStrategy::Outfeed { chunk: BATCH / 10 },
-        seed: master_seed,
-        max_runs: 1_500,
-        ..Default::default()
-    };
-    JobSpec::new(name, config, dataset, Prior::paper(), StopRule::AcceptedTarget(TARGET))
-        .unwrap()
-}
-
-fn pool_workers() -> usize {
-    std::env::var("ABC_IPU_TEST_WORKERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(4)
+    let mut builder = JobBuilder::new(dataset);
+    // ×30 over the θ*-self-distance scale: loose enough to accept a
+    // workable fraction on a CPU host, tight enough to concentrate
+    // the identified marginals around θ*.
+    builder.tol_mult = 30.0;
+    builder.devices = 1;
+    builder.batch = BATCH;
+    builder.strategy = ReturnStrategy::Outfeed { chunk: BATCH / 10 };
+    builder.seed = master_seed;
+    builder.max_runs = 1_500;
+    builder.spec(name, StopRule::AcceptedTarget(TARGET))
 }
 
 #[test]
@@ -76,7 +64,7 @@ fn posterior_credible_boxes_cover_theta_star() {
         scenario("recovery-c", 0xC0C0A, 1003),
     ];
     let n_jobs = jobs.len();
-    let report = Scheduler::new(native_backend(), pool_workers())
+    let report = Scheduler::new(native_backend(), pool_workers(4))
         .run(jobs)
         .unwrap();
     assert_eq!(report.jobs.len(), n_jobs);
@@ -127,7 +115,7 @@ fn recovery_study_is_reproducible() {
     // The statistical assertion above is only trustworthy if the study
     // is deterministic: same seeds → bit-identical accepted sets.
     let run = || {
-        Scheduler::new(native_backend(), pool_workers())
+        Scheduler::new(native_backend(), pool_workers(4))
             .run(vec![scenario("repro", 0xA11CE, 2024)])
             .unwrap()
             .jobs
@@ -138,11 +126,5 @@ fn recovery_study_is_reproducible() {
     };
     let a = run();
     let b = run();
-    let fp = |r: &abc_ipu::coordinator::InferenceResult| -> Vec<(u64, u32, [u32; 8])> {
-        r.accepted
-            .iter()
-            .map(|s| (s.run, s.index, s.theta.map(f32::to_bits)))
-            .collect()
-    };
-    assert_eq!(fp(&a), fp(&b));
+    assert_eq!(fingerprints(&a.accepted), fingerprints(&b.accepted));
 }
