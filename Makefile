@@ -7,7 +7,7 @@
 ARTIFACTS_DIR ?= $(CURDIR)/artifacts
 PYTHON ?= python3
 
-.PHONY: build test doc examples bench bench-hot artifacts artifacts-quick fmt clean
+.PHONY: build test doc examples bench bench-hot bench-scaling artifacts artifacts-quick fmt clean
 
 ## cargo build --release (native backend, zero external deps)
 build:
@@ -35,6 +35,11 @@ bench:
 ## just the hot-path suite + BENCH_hot_path.json (what the CI smoke runs)
 bench-hot:
 	cargo bench --bench hot_path
+
+## measured Table-7 sweep: one sharded job across a growing pool
+## (DESIGN.md §9); writes the repo-root BENCH_scaling.json artifact
+bench-scaling:
+	cargo bench --bench scaling_sweep
 
 ## AOT-lower the XLA graphs (HLO text + manifest) for --features pjrt.
 ## Referenced by lib.rs and the integration tests; requires jax.

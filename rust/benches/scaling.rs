@@ -44,7 +44,8 @@ fn main() {
             let tp = r.metrics.samples_simulated as f64 / secs;
             let base_tp = *base.get_or_insert(tp);
             suite.record(format!("measured_n{n}_chunked{chunked}"), secs);
-            let model = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n], chunk, 1);
+            let model = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n], chunk, 1)
+                .expect("bench workload fits the Mk1 model");
             suite.note(format!(
                 "n={n} chunked={chunked}: measured speedup {:.2}, model speedup {:.2} \
                  (overhead {:.1}%)",
@@ -57,7 +58,8 @@ fn main() {
     // the paper's 16-device points, model-only (we cap measured at 8
     // workers to avoid host oversubscription artifacts)
     for chunk in [1_000usize, 10_000] {
-        let m = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[16], chunk, 2);
+        let m = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[16], chunk, 2)
+            .expect("bench workload fits the Mk1 model");
         suite.note(format!(
             "model 16 devices chunk={chunk}: speedup {:.2} vs 2 (paper: {} → {})",
             m[0].speedup,

@@ -1,0 +1,51 @@
+//! Measured Table 7: one sharded job scaling across the worker pool.
+//!
+//! Unlike `benches/scaling.rs` (which scales by issuing whole runs to
+//! more workers), this sweep exercises **single-job sharding**
+//! (DESIGN.md §9): each run's batch is split into `n` contiguous lane
+//! ranges executed concurrently on `n` pool workers — the same
+//! simulate-everywhere-then-merge structure the paper measures across
+//! 2→16 IPUs. Weak scaling: per-device batch constant, chunked vs
+//! unchunked outfeeds, measured speedup/overhead next to the
+//! `hwmodel::scaling` projection for real Mk1 IPU-Links.
+//!
+//! Writes the repo-root **`BENCH_scaling.json`** artifact (via
+//! `report::scaling`, the same substrate the schema smoke in
+//! `tests/prop_shards.rs` pins) plus the usual
+//! `reports/bench_scaling_sweep.csv`. `ABC_IPU_BENCH_QUICK=1` shrinks
+//! the sweep for CI smoke runs without changing the artifact shape.
+//! Run via `make bench-scaling`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use abc_ipu::report::scaling::{measure_scaling, scaling_json, ScalingSweepConfig};
+
+fn main() {
+    let quick = harness::quick();
+    let mut suite = harness::Suite::new("scaling_sweep");
+    let cfg = ScalingSweepConfig::preset(quick);
+
+    let points = measure_scaling(&cfg).expect("scaling sweep");
+    for p in &points {
+        suite.record(
+            format!("sharded_n{}_chunked{}", p.devices, p.chunked),
+            p.seconds,
+        );
+        suite.note(format!(
+            "n={} chunked={}: measured speedup {:.2} (overhead {:+.1}%), \
+             Mk1 model speedup {:.2} (overhead {:.1}%)",
+            p.devices,
+            p.chunked,
+            p.speedup,
+            p.overhead * 100.0,
+            p.predicted_speedup,
+            p.predicted_overhead * 100.0,
+        ));
+    }
+
+    let json = scaling_json(&cfg, &points);
+    let path = harness::write_repo_json("BENCH_scaling.json", &json);
+    println!("BENCH_scaling.json written to {}", path.display());
+    suite.finish();
+}

@@ -59,7 +59,8 @@ fn main() -> abc_ipu::Result<()> {
             let secs = r.metrics.total.as_secs_f64();
             let throughput = r.metrics.samples_simulated as f64 / secs;
             let base_tp = *base.get_or_insert(throughput);
-            let model = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n], chunk, device_counts[0]);
+            let model =
+                scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n], chunk, device_counts[0])?;
             table.row(&[
                 n.to_string(),
                 if chunked { chunk.to_string() } else { "=batch".into() },

@@ -17,7 +17,11 @@
 //! stage `s` of country B instead of idling the pool between
 //! per-country runs. Per-scenario results are bit-identical to looping
 //! [`run_smc`] scenario by scenario (the scheduler's determinism
-//! contract).
+//! contract). Each stage job inherits the scenario's
+//! `RunConfig::shards`, so with sharding enabled every stage's
+//! population additionally fans out *within* the stage across the pool
+//! — bit-identically to the unsharded schedule
+//! ([`crate::scheduler::shard`], pinned by `tests/prop_shards.rs`).
 
 use super::Posterior;
 use crate::backend::Backend;

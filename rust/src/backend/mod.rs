@@ -23,7 +23,11 @@
 //! invariant to the lane width and intra-run thread count
 //! (DESIGN.md §8). The coordinator derives keys from the *global run
 //! index* only, so for any conforming backend the sample stream is
-//! independent of device count and worker scheduling.
+//! independent of device count and worker scheduling. Per-lane purity
+//! is also what makes [`AbcEngine::run_range`] — executing one
+//! contiguous lane range of a run, the single-job sharding seam
+//! (DESIGN.md §9) — bit-identical to the matching slice of the full
+//! run for every backend.
 
 pub mod native;
 #[cfg(feature = "pjrt")]
@@ -84,6 +88,12 @@ pub struct AbcJob {
     /// performance knob: results are bit-identical for every width
     /// (DESIGN.md §8).
     pub lanes: usize,
+    /// Requested single-job shard count: how many contiguous lane
+    /// ranges each run is split into so one job can ride the whole
+    /// worker pool (`0` = auto, i.e. solo; `$ABC_IPU_SHARDS` wins
+    /// either way). A pure performance knob: the merged stream is
+    /// bit-identical for every shard count (DESIGN.md §9).
+    pub shards: usize,
 }
 
 impl AbcJob {
@@ -104,12 +114,19 @@ impl AbcJob {
             prior_high: *prior.high(),
             consts,
             lanes: 0,
+            shards: 0,
         }
     }
 
     /// Pin the requested lane width (`0` = auto).
     pub fn with_lanes(mut self, lanes: usize) -> Self {
         self.lanes = lanes;
+        self
+    }
+
+    /// Pin the requested single-job shard count (`0` = auto/solo).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
         self
     }
 
@@ -134,17 +151,33 @@ impl AbcJob {
                 self.lanes
             )));
         }
+        if self.shards > MAX_SHARDS {
+            return Err(Error::Config(format!(
+                "shard count {} exceeds the {MAX_SHARDS} cap (0 means auto/solo)",
+                self.shards
+            )));
+        }
         Ok(())
     }
 }
 
 pub use crate::model::lanes::MAX_LANE_WIDTH;
 
+/// Upper bound on a requested single-job shard count — far beyond any
+/// realistic pool, tight enough to catch a typo'd value before it sizes
+/// leader assemblies. Owned here (not in `scheduler::shard`, which
+/// re-exports it) so `AbcJob` validation keeps one-way layering:
+/// `scheduler` depends on `backend`, never the reverse.
+pub const MAX_SHARDS: usize = 4_096;
+
 /// One device's ABC engine: executes one batched run per call.
 ///
 /// `run` must be a pure function of the key — calling it twice with the
 /// same key yields bit-identical output, and outputs for distinct keys
-/// are statistically independent.
+/// are statistically independent. Sample by sample, the output must be
+/// a pure function of `(job, key, lane)` — which is what makes
+/// [`AbcEngine::run_range`] (the single-job sharding seam, DESIGN.md
+/// §9) well-defined for any engine.
 pub trait AbcEngine {
     /// Batch size B of this engine.
     fn batch(&self) -> usize;
@@ -152,6 +185,32 @@ pub trait AbcEngine {
     /// Execute one run: sample B thetas from the job's prior box,
     /// simulate, and return `(thetas, distances)`.
     fn run(&mut self, key: [u32; 2]) -> Result<AbcRunOutput>;
+
+    /// Execute only lanes `[lane0, lane0 + len)` of the run keyed
+    /// `key` — one *shard* of the run. Must be bit-identical to the
+    /// corresponding slice of `run(key)`; `lane0 + len` must not exceed
+    /// [`AbcEngine::batch`].
+    ///
+    /// The default implementation executes the full batch and slices —
+    /// conforming for any engine whose `run` honours the per-lane
+    /// purity contract (an artifact-compiled backend with baked-in
+    /// shapes takes this path: correct, but without intra-run savings).
+    /// Engines that can skip work, like the native lane engine, should
+    /// override it.
+    fn run_range(&mut self, key: [u32; 2], lane0: usize, len: usize) -> Result<AbcRunOutput> {
+        let full = self.run(key)?;
+        if lane0 + len > full.batch() {
+            return Err(Error::ShapeMismatch {
+                what: "run_range lanes".to_string(),
+                want: format!("lane0 + len <= batch ({})", full.batch()),
+                got: format!("[{lane0}, {})", lane0 + len),
+            });
+        }
+        Ok(AbcRunOutput {
+            thetas: full.thetas[lane0 * N_PARAMS..(lane0 + len) * N_PARAMS].to_vec(),
+            distances: full.distances[lane0..lane0 + len].to_vec(),
+        })
+    }
 }
 
 /// An execution backend: per-device engines plus the non-ABC entry
@@ -276,9 +335,11 @@ mod tests {
             prior_high: [1.0; 8],
             consts: [155.0, 2.0, 3.0, 6e7],
             lanes: 0,
+            shards: 0,
         };
         job.validate().unwrap();
         job.clone().with_lanes(16).validate().unwrap();
+        job.clone().with_shards(8).validate().unwrap();
 
         let mut bad = job.clone();
         bad.observed.truncate(5);
@@ -287,9 +348,38 @@ mod tests {
         let bad = job.clone().with_lanes(MAX_LANE_WIDTH + 1);
         assert!(bad.validate().is_err());
 
+        let bad = job.clone().with_shards(MAX_SHARDS + 1);
+        assert!(bad.validate().is_err());
+
         let mut bad = job;
         bad.batch = 0;
         assert!(bad.validate().is_err());
+    }
+
+    /// The provided `run_range` (full run + slice) must agree with the
+    /// matching slice of `run` for an engine that only implements `run`
+    /// — the conformance path artifact backends ride.
+    #[test]
+    fn default_run_range_slices_the_full_run() {
+        struct CountingEngine;
+        impl AbcEngine for CountingEngine {
+            fn batch(&self) -> usize {
+                6
+            }
+            fn run(&mut self, key: [u32; 2]) -> Result<AbcRunOutput> {
+                // deterministic in (key, lane): lane i carries i + key[1]
+                let distances: Vec<f32> =
+                    (0..6).map(|i| (i + key[1] as usize) as f32).collect();
+                let thetas: Vec<f32> = (0..48).map(|i| i as f32).collect();
+                Ok(AbcRunOutput { thetas, distances })
+            }
+        }
+        let mut e = CountingEngine;
+        let full = e.run([0, 3]).unwrap();
+        let part = e.run_range([0, 3], 2, 3).unwrap();
+        assert_eq!(part.distances, full.distances[2..5]);
+        assert_eq!(part.thetas, full.thetas[16..40]);
+        assert!(e.run_range([0, 3], 4, 3).is_err());
     }
 
     #[test]

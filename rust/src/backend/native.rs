@@ -104,6 +104,29 @@ impl AbcEngine for NativeEngine {
     fn run(&mut self, key: [u32; 2]) -> Result<AbcRunOutput> {
         abc_run(&self.engine, &self.prior, &self.observed, self.days, self.batch, key)
     }
+
+    /// Shard seam override: simulate only the requested lanes instead
+    /// of slicing a full run — per-lane streams make the two paths
+    /// bit-identical (`model::lanes::sample_distance_range`), so a
+    /// K-sharded run costs what a solo run costs, split K ways.
+    fn run_range(&mut self, key: [u32; 2], lane0: usize, len: usize) -> Result<AbcRunOutput> {
+        if lane0 + len > self.batch {
+            return Err(Error::ShapeMismatch {
+                what: "native run_range lanes".to_string(),
+                want: format!("lane0 + len <= batch ({})", self.batch),
+                got: format!("[{lane0}, {})", lane0 + len),
+            });
+        }
+        let (thetas, distances) = self.engine.sample_distance_range(
+            &self.prior,
+            &self.observed,
+            self.days,
+            lane0,
+            len,
+            key,
+        )?;
+        Ok(AbcRunOutput { thetas, distances })
+    }
 }
 
 impl Backend for NativeBackend {
@@ -206,7 +229,24 @@ mod tests {
             prior_high: *prior.high(),
             consts: ds.consts(),
             lanes: 0,
+            shards: 0,
         }
+    }
+
+    #[test]
+    fn run_range_matches_the_full_run_slice() {
+        let backend = NativeBackend::new();
+        let mut engine = backend.open_engine(0, &job(40)).unwrap();
+        let full = engine.run([7, 8]).unwrap();
+        for (lane0, len) in [(0usize, 40usize), (0, 13), (13, 14), (27, 13), (39, 1)] {
+            let part = engine.run_range([7, 8], lane0, len).unwrap();
+            assert_eq!(part.distances, full.distances[lane0..lane0 + len]);
+            assert_eq!(
+                part.thetas,
+                full.thetas[lane0 * N_PARAMS..(lane0 + len) * N_PARAMS]
+            );
+        }
+        assert!(engine.run_range([7, 8], 30, 11).is_err());
     }
 
     #[test]

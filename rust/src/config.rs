@@ -65,6 +65,12 @@ pub struct RunConfig {
     /// `$ABC_IPU_LANES` overrides either way). Performance-only:
     /// results are bit-identical for every width (DESIGN.md §8).
     pub lanes: usize,
+    /// Single-job shard count: each run's batch is split into this many
+    /// contiguous lane ranges executed concurrently across the worker
+    /// pool (`0` = auto, i.e. solo; `$ABC_IPU_SHARDS` overrides either
+    /// way; clamped to the batch). Performance-only: the merged result
+    /// is bit-identical for every shard count (DESIGN.md §9).
+    pub shards: usize,
 }
 
 impl Default for RunConfig {
@@ -81,6 +87,7 @@ impl Default for RunConfig {
             seed: 0xC0FFEE,
             max_runs: 0,
             lanes: 0,
+            shards: 0,
         }
     }
 }
@@ -133,6 +140,13 @@ impl RunConfig {
                 crate::backend::MAX_LANE_WIDTH
             )));
         }
+        if self.shards > crate::backend::MAX_SHARDS {
+            return Err(Error::Config(format!(
+                "shards {} exceeds the {} cap (0 means auto/solo)",
+                self.shards,
+                crate::backend::MAX_SHARDS
+            )));
+        }
         Ok(())
     }
 
@@ -172,6 +186,9 @@ impl RunConfig {
         }
         if let Some(n) = v.get("lanes") {
             cfg.lanes = n.as_usize()?;
+        }
+        if let Some(n) = v.get("shards") {
+            cfg.shards = n.as_usize()?;
         }
         if let Some(rs) = v.get("return_strategy") {
             let mode = rs.req("mode")?.as_str()?;
@@ -216,6 +233,7 @@ impl RunConfig {
         m.insert("seed".into(), Json::Num(self.seed as f64));
         m.insert("max_runs".into(), Json::Num(self.max_runs as f64));
         m.insert("lanes".into(), Json::Num(self.lanes as f64));
+        m.insert("shards".into(), Json::Num(self.shards as f64));
         let mut rs = BTreeMap::new();
         match self.return_strategy {
             ReturnStrategy::Outfeed { chunk } => {
@@ -400,6 +418,7 @@ mod tests {
             tolerance: Some(2e5),
             seed: 99,
             lanes: 16,
+            shards: 3,
             ..RunConfig::default()
         };
         let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
@@ -413,6 +432,18 @@ mod tests {
         assert_eq!(cfg.lanes, 8);
         let mut cfg = RunConfig::default();
         cfg.lanes = crate::backend::MAX_LANE_WIDTH + 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn shards_knob_defaults_parses_and_validates() {
+        assert_eq!(RunConfig::default().shards, 0);
+        let cfg = RunConfig::from_json(r#"{"shards": 4}"#).unwrap();
+        assert_eq!(cfg.shards, 4);
+        let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed.shards, 4);
+        let mut cfg = RunConfig::default();
+        cfg.shards = crate::backend::MAX_SHARDS + 1;
         assert!(cfg.validate().is_err());
     }
 

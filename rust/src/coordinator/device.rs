@@ -8,13 +8,18 @@
 //! per-*run* rather than per-*pool*:
 //!
 //! * [`JobContext`] — everything that binds a work item to its job,
-//! * [`execute_work`] — run one work item on an already-open engine:
-//!   derive the run key, execute the batched ABC run, apply the
-//!   device-side half of the sample-return strategy (conditional
-//!   chunked outfeed or Top-k selection, paper §3.2),
+//!   including its single-job shard plan
+//!   ([`crate::scheduler::shard::ShardPlan`], DESIGN.md §9),
+//! * [`execute_work`] — run one work item (one *shard* of one run; the
+//!   solo case is the 1-shard plan) on an already-open engine: derive
+//!   the run key, execute the claimed lane range of the batched ABC
+//!   run, apply the device-side half of the sample-return strategy
+//!   (conditional chunked outfeed or Top-k selection, paper §3.2) with
+//!   global sample indices,
 //! * [`Transfer`] / [`DeviceReport`] — what crosses the device→host
-//!   boundary, tagged with the job it belongs to so the leader can
-//!   demux results per job.
+//!   boundary, tagged with the `(job, run, shard)` it belongs to so
+//!   the leader can demux results per job and assemble runs at the
+//!   shard-merge frontier.
 //!
 //! Reproducibility: the run key is `seeds.key(0, run)` — a function of
 //! the job's master seed and the job-local run index only, never of the
@@ -28,6 +33,7 @@ use crate::backend::{AbcEngine, AbcJob, AbcRunOutput};
 use crate::config::ReturnStrategy;
 use crate::metrics::Stopwatch;
 use crate::rng::SeedSequence;
+use crate::scheduler::shard::{resolve_shards, ShardPlan};
 use crate::Result;
 use std::time::Duration;
 
@@ -72,70 +78,116 @@ pub(crate) struct JobContext {
     /// The job's private RNG key namespace, rooted at the job's master
     /// seed. Keys depend only on the job-local run index.
     pub seeds: SeedSequence,
+    /// The job's single-job shard plan: each run executes as
+    /// `plan.shards()` work items over contiguous lane ranges
+    /// (DESIGN.md §9). The 1-shard plan is the solo path.
+    pub plan: ShardPlan,
 }
 
-/// One run's report from a pool worker to the leader.
+impl JobContext {
+    /// Bind a context, resolving the effective shard count from the
+    /// job's requested value (`$ABC_IPU_SHARDS` wins; clamped to the
+    /// batch — same knob discipline as the lane width).
+    pub fn new(
+        job: AbcJob,
+        tolerance: f32,
+        strategy: ReturnStrategy,
+        seeds: SeedSequence,
+    ) -> Self {
+        let plan = ShardPlan::new(job.batch, resolve_shards(job.shards));
+        Self { job, tolerance, strategy, seeds, plan }
+    }
+
+    /// Effective shard count K of this job.
+    pub fn shards(&self) -> u32 {
+        self.plan.shards() as u32
+    }
+}
+
+/// One executed work item's report — one shard of one run — from a
+/// pool worker to the leader.
 #[derive(Debug)]
 pub struct DeviceReport {
     /// Scheduler-local id of the job this run belongs to (results demux
     /// on this; 0 for a solo `Coordinator::run`).
     pub job: u32,
-    /// Which pool worker ("device") executed the run. Provenance only —
-    /// never part of the reproducibility contract.
+    /// Which pool worker ("device") executed the shard. Provenance only
+    /// — never part of the reproducibility contract.
     pub device: u32,
     /// Job-local run index.
     pub run: u64,
-    /// Engine execution time of this run.
+    /// Shard index within the run (`0..K`; always 0 on the solo path).
+    pub shard: u32,
+    /// Engine execution time of this shard.
     pub exec_time: Duration,
-    /// Filtered device→host payload.
+    /// Filtered device→host payload (global sample indices).
     pub transfer: Transfer,
     /// Chunks skipped by the conditional outfeed (0 for top-k).
     pub chunks_skipped: u64,
-    /// Samples simulated (= batch size).
+    /// Samples simulated (= the shard's lane-range length).
     pub samples: u64,
 }
 
 /// Apply the device-side half of the sample-return strategy to one
-/// run's raw output. Returns the transfer plus the skipped-chunk count.
+/// shard's raw output, whose first lane is global sample `lane0` —
+/// chunk offsets / top-k indices are rebased so the transfer carries
+/// *global* indices and shard merging is pure concatenation/re-selection
+/// (DESIGN.md §9). Returns the transfer plus the skipped-chunk count.
+/// The solo path is `lane0 = 0` over the full batch.
 pub(crate) fn apply_return_strategy(
     out: &AbcRunOutput,
     strategy: ReturnStrategy,
     tolerance: f32,
+    lane0: u32,
 ) -> (Transfer, u64) {
     match strategy {
         ReturnStrategy::Outfeed { chunk } => {
-            let (chunks, skipped) = chunk_batch(out, chunk, tolerance);
+            let (mut chunks, skipped) = chunk_batch(out, chunk, tolerance);
+            for c in &mut chunks {
+                c.offset += lane0;
+            }
             (Transfer::Chunks(chunks), skipped)
         }
         ReturnStrategy::TopK { k } => {
-            (Transfer::TopK(top_k_selection(out, k, tolerance)), 0)
+            let mut sel = top_k_selection(out, k, tolerance);
+            for i in &mut sel.indices {
+                *i += lane0;
+            }
+            (Transfer::TopK(sel), 0)
         }
     }
 }
 
-/// Execute one work item — run `run` of job `job` — on an engine that
-/// was opened for this job on the calling worker's thread.
+/// Execute one work item — shard `shard` of run `run` of job `job` —
+/// on an engine that was opened for this job on the calling worker's
+/// thread.
 pub(crate) fn execute_work(
     engine: &mut dyn AbcEngine,
     ctx: &JobContext,
     job: u32,
     device: u32,
     run: u64,
+    shard: u32,
 ) -> Result<DeviceReport> {
-    // Key depends only on the job's seed and the job-local run index →
-    // the sample stream is scheduling- and pool-independent (see the
-    // module docs above and `coordinator` module docs).
+    // Key depends only on the job's seed and the job-local run index —
+    // *every shard of a run shares the run's key* and differs only in
+    // its lane range — so the sample stream is scheduling-, pool- and
+    // shard-independent (see the module docs above and `coordinator`
+    // module docs).
     let key = ctx.seeds.key(0, run);
+    let range = ctx.plan.range(shard);
 
     let sw = Stopwatch::start();
-    let out = engine.run(key)?;
+    let out = engine.run_range(key, range.lane0, range.len)?;
     let exec_time = sw.elapsed();
 
-    let (transfer, skipped) = apply_return_strategy(&out, ctx.strategy, ctx.tolerance);
+    let (transfer, skipped) =
+        apply_return_strategy(&out, ctx.strategy, ctx.tolerance, range.lane0 as u32);
     Ok(DeviceReport {
         job,
         device,
         run,
+        shard,
         exec_time,
         transfer,
         chunks_skipped: skipped,
@@ -172,20 +224,66 @@ mod tests {
     fn execute_work_is_a_pure_function_of_the_run_index() {
         let ds = crate::data::synthetic::default_dataset(16, 3);
         let prior = crate::model::Prior::paper();
-        let ctx = JobContext {
-            job: AbcJob::new(64, 16, ds.observed.flatten(), &prior, ds.consts()),
-            tolerance: ds.default_tolerance * 10.0,
-            strategy: ReturnStrategy::Outfeed { chunk: 16 },
-            seeds: SeedSequence::new(42),
-        };
+        let ctx = JobContext::new(
+            AbcJob::new(64, 16, ds.observed.flatten(), &prior, ds.consts()),
+            ds.default_tolerance * 10.0,
+            ReturnStrategy::Outfeed { chunk: 16 },
+            SeedSequence::new(42),
+        );
         let backend = NativeBackend::new();
         let mut e1 = backend.open_engine(0, &ctx.job).unwrap();
         let mut e2 = backend.open_engine(9, &ctx.job).unwrap();
         // same job + run on different devices → bit-identical transfer
-        let a = execute_work(e1.as_mut(), &ctx, 0, 0, 5).unwrap();
-        let b = execute_work(e2.as_mut(), &ctx, 3, 9, 5).unwrap();
+        let a = execute_work(e1.as_mut(), &ctx, 0, 0, 5, 0).unwrap();
+        let b = execute_work(e2.as_mut(), &ctx, 3, 9, 5, 0).unwrap();
         assert_eq!(a.transfer, b.transfer);
-        assert_eq!(a.samples, 64);
-        assert_eq!((b.job, b.device, b.run), (3, 9, 5));
+        assert_eq!((b.job, b.device, b.run, b.shard), (3, 9, 5, 0));
+    }
+
+    #[test]
+    fn sharded_work_items_cover_the_run_with_global_indices() {
+        let ds = crate::data::synthetic::default_dataset(16, 3);
+        let prior = crate::model::Prior::paper();
+        let job = AbcJob::new(64, 16, ds.observed.flatten(), &prior, ds.consts())
+            .with_shards(3);
+        let tolerance = ds.default_tolerance * 10.0;
+        let strategy = ReturnStrategy::Outfeed { chunk: 16 };
+        let mut ctx =
+            JobContext::new(job, tolerance, strategy, SeedSequence::new(42));
+        // pin K=3 regardless of the $ABC_IPU_SHARDS environment, so the
+        // assertion below is stable under the CI shard matrix
+        ctx.plan = ShardPlan::new(ctx.job.batch, 3);
+
+        let backend = NativeBackend::new();
+        let mut solo = backend.open_engine(0, &ctx.job).unwrap();
+        let solo_ctx = JobContext { plan: ShardPlan::new(64, 1), ..ctx.clone() };
+        let want = execute_work(solo.as_mut(), &solo_ctx, 0, 0, 7, 0).unwrap();
+        let mut want_samples = Vec::new();
+        crate::coordinator::filter_transfer(&want.transfer, tolerance, 0, 7, &mut want_samples);
+
+        let mut merged = Vec::new();
+        let mut samples_total = 0u64;
+        for shard in 0..ctx.shards() {
+            let mut e = backend.open_engine(1, &ctx.job).unwrap();
+            let report = execute_work(e.as_mut(), &ctx, 0, 1, 7, shard).unwrap();
+            samples_total += report.samples;
+            crate::coordinator::filter_transfer(
+                &report.transfer,
+                tolerance,
+                1,
+                7,
+                &mut merged,
+            );
+        }
+        assert_eq!(samples_total, 64);
+        merged.sort_by_key(|s| (s.run, s.index));
+        want_samples.sort_by_key(|s| (s.run, s.index));
+        let key = |s: &crate::coordinator::AcceptedSample| {
+            (s.run, s.index, s.theta.map(f32::to_bits), s.distance.to_bits())
+        };
+        assert_eq!(
+            merged.iter().map(key).collect::<Vec<_>>(),
+            want_samples.iter().map(key).collect::<Vec<_>>()
+        );
     }
 }

@@ -5,7 +5,11 @@
 //! [`Scheduler`] whose pool size is `config.devices`. Running many jobs
 //! on one shared pool — the multi-scenario study — goes through
 //! [`crate::scheduler`] directly; the per-job results are identical
-//! either way (the scheduler's determinism contract).
+//! either way (the scheduler's determinism contract). With
+//! `config.shards > 1` (or `$ABC_IPU_SHARDS`) each run is split into
+//! contiguous lane ranges executed concurrently across those workers —
+//! single-job data parallelism with a bit-identical merged result
+//! ([`crate::scheduler::shard`], DESIGN.md §9).
 
 use super::AcceptedSample;
 use crate::backend::{Backend, NativeBackend};
@@ -28,8 +32,9 @@ pub enum StopRule {
     /// accepted count reaches the target, and keeps exactly the samples
     /// of runs `0..b` — equal to an [`StopRule::ExactRuns`]`(b)` result
     /// and independent of worker count or pool composition. In-flight
-    /// runs beyond `b` still execute and are counted in metrics, but
-    /// contribute no samples.
+    /// work beyond `b` still executes and is counted in the volume
+    /// metrics (samples, device time), but contributes no samples;
+    /// `metrics.runs` counts only the `b` finalized runs.
     AcceptedTarget(usize),
     /// Execute exactly this many runs, then stop — fully deterministic
     /// for a given master seed, used by benches and property tests.

@@ -42,7 +42,10 @@
 //! workers are *job-agnostic pool workers* (each work item carries its
 //! job's context and RNG key namespace) and any number of inference
 //! jobs can share one pool — see the `scheduler` module and DESIGN.md
-//! §7.
+//! §7. The converse also holds: one job can shard each run's batch
+//! across the whole pool (`RunConfig::shards` / `$ABC_IPU_SHARDS`)
+//! with a bit-identical merged result — the measured Table-7 axis —
+//! see [`crate::scheduler::shard`] and DESIGN.md §9.
 
 pub mod autotune;
 pub(crate) mod device;
@@ -56,7 +59,7 @@ pub use device::{DeviceReport, Transfer};
 pub use leader::{Coordinator, InferenceResult, StopRule};
 pub use outfeed::{chunk_batch, OutfeedChunk};
 pub use postproc::{filter_transfer, PostprocStats};
-pub use topk::top_k_selection;
+pub use topk::{merge_selections, top_k_selection, TopKSelection};
 
 use crate::model::Theta;
 

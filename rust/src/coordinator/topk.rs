@@ -36,20 +36,29 @@ impl TopKSelection {
 /// accepted count at `tolerance`.
 ///
 /// Selection is a partial sort (`select_nth_unstable`) — O(batch) — the
-/// host analogue of the device-side top-k reduction.
+/// host analogue of the device-side top-k reduction. It orders by
+/// `(distance, index)` — a *total* order over the batch — so the
+/// selected set is a pure function of the distance multiset, ties
+/// included. That determinism is what lets per-shard selections of a
+/// sharded run be re-merged into the exact solo selection
+/// ([`merge_selections`], DESIGN.md §9); distance-only ordering would
+/// leave tie membership at the k-boundary to pivoting accidents.
 pub fn top_k_selection(out: &AbcRunOutput, k: usize, tolerance: f32) -> TopKSelection {
     let batch = out.batch();
     let k = k.min(batch);
     let accepted_count = out.distances.iter().filter(|&&d| d <= tolerance).count() as u32;
 
+    let by_distance_then_index = |a: &u32, b: &u32| {
+        out.distances[*a as usize]
+            .total_cmp(&out.distances[*b as usize])
+            .then(a.cmp(b))
+    };
     let mut order: Vec<u32> = (0..batch as u32).collect();
     if k < batch {
-        order.select_nth_unstable_by(k - 1, |&a, &b| {
-            out.distances[a as usize].total_cmp(&out.distances[b as usize])
-        });
+        order.select_nth_unstable_by(k - 1, by_distance_then_index);
         order.truncate(k);
     }
-    order.sort_by(|&a, &b| out.distances[a as usize].total_cmp(&out.distances[b as usize]));
+    order.sort_by(by_distance_then_index);
 
     let mut thetas = Vec::with_capacity(k * 8);
     let mut distances = Vec::with_capacity(k);
@@ -59,6 +68,38 @@ pub fn top_k_selection(out: &AbcRunOutput, k: usize, tolerance: f32) -> TopKSele
         distances.push(out.distances[i]);
     }
     TopKSelection { accepted_count, indices: order, thetas, distances }
+}
+
+/// Merge per-shard top-k selections of one run into the selection the
+/// solo run would have produced (the run-frontier merge of single-job
+/// sharding, `scheduler::shard` / DESIGN.md §9).
+///
+/// Shards carry *global* sample indices over disjoint lane ranges, and
+/// each shard's entries are its `min(k, len)` lowest by `(distance,
+/// index)` — so every member of the global top-k is present among the
+/// candidates, and re-ordering the union by the same total order
+/// reconstructs the solo selection exactly, ties included. The exact
+/// accepted count sums across shards because ranges partition the run.
+pub fn merge_selections(parts: &[TopKSelection], k: usize) -> TopKSelection {
+    let accepted_count = parts.iter().map(|s| s.accepted_count).sum();
+    let mut candidates: Vec<(f32, u32, usize, usize)> = Vec::new();
+    for (p, sel) in parts.iter().enumerate() {
+        for (i, (&d, &index)) in sel.distances.iter().zip(&sel.indices).enumerate() {
+            candidates.push((d, index, p, i));
+        }
+    }
+    candidates.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    candidates.truncate(k);
+
+    let mut indices = Vec::with_capacity(candidates.len());
+    let mut thetas = Vec::with_capacity(candidates.len() * 8);
+    let mut distances = Vec::with_capacity(candidates.len());
+    for (d, index, p, i) in candidates {
+        indices.push(index);
+        thetas.extend_from_slice(&parts[p].thetas[i * 8..(i + 1) * 8]);
+        distances.push(d);
+    }
+    TopKSelection { accepted_count, indices, thetas, distances }
 }
 
 #[cfg(test)]
@@ -102,11 +143,68 @@ mod tests {
     }
 
     #[test]
-    fn handles_ties_deterministically_by_distance() {
+    fn handles_ties_deterministically_by_distance_then_index() {
         let out = run_output(vec![1.0, 1.0, 1.0, 1.0]);
         let sel = top_k_selection(&out, 2, 2.0);
         assert_eq!(sel.distances, vec![1.0, 1.0]);
         assert_eq!(sel.accepted_count, 4);
+        // (distance, index) total order: ties resolve to lowest indices
+        assert_eq!(sel.indices, vec![0, 1]);
+    }
+
+    /// Slice `out` into contiguous ranges and select per-shard with
+    /// global indices — the device-side half a sharded run performs.
+    fn shard_selections(
+        out: &AbcRunOutput,
+        bounds: &[usize],
+        k: usize,
+        tol: f32,
+    ) -> Vec<TopKSelection> {
+        let mut sels = Vec::new();
+        let mut lane0 = 0usize;
+        for &end in bounds {
+            let sub = AbcRunOutput {
+                thetas: out.thetas[lane0 * 8..end * 8].to_vec(),
+                distances: out.distances[lane0..end].to_vec(),
+            };
+            let mut sel = top_k_selection(&sub, k, tol);
+            for i in &mut sel.indices {
+                *i += lane0 as u32;
+            }
+            sels.push(sel);
+            lane0 = end;
+        }
+        sels
+    }
+
+    #[test]
+    fn merged_shard_selections_equal_the_solo_selection() {
+        let out = run_output(vec![5.0, 1.0, 4.0, 0.5, 3.0, 0.5, 2.0]);
+        let solo = top_k_selection(&out, 3, 1.0);
+        for bounds in [vec![7], vec![3, 7], vec![2, 4, 7], vec![1, 2, 3, 4, 5, 6, 7]] {
+            let sels = shard_selections(&out, &bounds, 3, 1.0);
+            assert_eq!(merge_selections(&sels, 3), solo, "shards {bounds:?}");
+        }
+    }
+
+    #[test]
+    fn merged_ties_at_the_k_boundary_match_solo() {
+        // four equal distances straddling a shard edge: (distance,
+        // index) ordering must pick the same two in both paths
+        let out = run_output(vec![9.0, 1.0, 1.0, 1.0, 1.0, 9.0]);
+        let solo = top_k_selection(&out, 2, 0.5);
+        let sels = shard_selections(&out, &[3, 6], 2, 0.5);
+        let merged = merge_selections(&sels, 2);
+        assert_eq!(merged, solo);
+        assert_eq!(merged.indices, vec![1, 2]);
+    }
+
+    #[test]
+    fn merge_k_beyond_batch_keeps_everything() {
+        let out = run_output(vec![3.0, 1.0, 2.0]);
+        let solo = top_k_selection(&out, 10, 1.5);
+        let sels = shard_selections(&out, &[1, 3], 10, 1.5);
+        assert_eq!(merge_selections(&sels, 10), solo);
     }
 
     #[test]

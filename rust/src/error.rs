@@ -30,6 +30,9 @@ pub enum Error {
     /// The coordinator was asked for something it cannot deliver
     /// (e.g. more accepted samples than the budget allows).
     Coordinator(String),
+    /// The analytical hardware model cannot produce a prediction
+    /// (e.g. a per-device workload that overflows device memory).
+    HwModel(String),
 }
 
 impl fmt::Display for Error {
@@ -47,6 +50,7 @@ impl fmt::Display for Error {
             }
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::HwModel(m) => write!(f, "hardware model error: {m}"),
         }
     }
 }

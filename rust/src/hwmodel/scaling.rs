@@ -8,6 +8,7 @@
 //! post-processing.
 
 use super::{DeviceSpec, Workload};
+use crate::{Error, Result};
 
 /// One row of the Table-7-style scaling study.
 #[derive(Debug, Clone, PartialEq)]
@@ -36,16 +37,28 @@ fn sync_overhead(devices: usize, syncs_per_run: f64) -> f64 {
 /// Predict a scaling table over `device_counts`, mirroring Table 7:
 /// per-device batch stays constant (weak scaling), `chunk` sets the
 /// sync granularity.
+///
+/// Errors with [`Error::HwModel`] when the per-device workload does
+/// not fit the device (its working set overflows on-chip/main memory,
+/// the same OOM wall `roofline::time_per_run` models) — the scaling
+/// question is ill-posed for a workload that cannot run at all.
 pub fn scaling_table(
     per_device: &DeviceSpec,
     w_per_device: &Workload,
     device_counts: &[usize],
     chunk: usize,
     base_devices: usize,
-) -> Vec<ScalingPoint> {
-    let t_base_run = per_device
-        .time_per_run(w_per_device)
-        .expect("per-device workload must fit");
+) -> Result<Vec<ScalingPoint>> {
+    let t_base_run = per_device.time_per_run(w_per_device).ok_or_else(|| {
+        Error::HwModel(format!(
+            "per-device workload (batch {} x {} days, {} device memory) \
+             does not fit `{}`: no time-per-run prediction",
+            w_per_device.batch,
+            w_per_device.days,
+            crate::report::fmt_bytes(w_per_device.device_memory_bytes() as u64),
+            per_device.name
+        ))
+    })?;
     let chunked = chunk < w_per_device.batch;
     let syncs = if chunked {
         (w_per_device.batch as f64 / chunk as f64).ceil()
@@ -54,7 +67,7 @@ pub fn scaling_table(
     };
 
     let base_time = t_base_run + sync_overhead(base_devices, syncs);
-    device_counts
+    Ok(device_counts
         .iter()
         .map(|&n| {
             let t = t_base_run + sync_overhead(n, syncs);
@@ -69,7 +82,7 @@ pub fn scaling_table(
                 overhead: 1.0 - speedup / perfect,
             }
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]
@@ -83,7 +96,7 @@ mod tests {
     #[test]
     fn near_linear_scaling() {
         let (d, w) = setup();
-        let pts = scaling_table(&d, &w, &[2, 4, 8, 16], 10_000, 2);
+        let pts = scaling_table(&d, &w, &[2, 4, 8, 16], 10_000, 2).unwrap();
         // Table 7: 16 IPUs vs 2 → speedup ≈ 7.4 (8 perfect, ≤ 8 % off)
         let p16 = &pts[3];
         assert!((6.5..8.0).contains(&p16.speedup), "speedup {}", p16.speedup);
@@ -93,8 +106,8 @@ mod tests {
     #[test]
     fn unchunked_scales_better() {
         let (d, w) = setup();
-        let chunked = scaling_table(&d, &w, &[16], 10_000, 2);
-        let unchunked = scaling_table(&d, &w, &[16], w.batch, 2);
+        let chunked = scaling_table(&d, &w, &[16], 10_000, 2).unwrap();
+        let unchunked = scaling_table(&d, &w, &[16], w.batch, 2).unwrap();
         assert!(!unchunked[0].chunked);
         assert!(chunked[0].chunked);
         assert!(unchunked[0].speedup > chunked[0].speedup);
@@ -105,7 +118,7 @@ mod tests {
     #[test]
     fn overhead_grows_with_devices_when_chunked() {
         let (d, w) = setup();
-        let pts = scaling_table(&d, &w, &[2, 4, 8, 16], 10_000, 2);
+        let pts = scaling_table(&d, &w, &[2, 4, 8, 16], 10_000, 2).unwrap();
         for win in pts.windows(2) {
             assert!(win[1].overhead >= win[0].overhead - 1e-12);
         }
@@ -114,8 +127,19 @@ mod tests {
     #[test]
     fn base_config_speedup_is_one() {
         let (d, w) = setup();
-        let pts = scaling_table(&d, &w, &[2], 10_000, 2);
+        let pts = scaling_table(&d, &w, &[2], 10_000, 2).unwrap();
         assert!((pts[0].speedup - 1.0).abs() < 1e-12);
         assert!(pts[0].overhead.abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_workload_is_a_typed_error_not_a_panic() {
+        // 2M samples overflow the Mk1 IPU's on-chip memory (the OOM
+        // wall `roofline` models); previously this `expect`-panicked.
+        let d = DeviceSpec::mk1_ipu();
+        let w = Workload::analytic(2_000_000, 49);
+        let err = scaling_table(&d, &w, &[2, 4], 10_000, 2).unwrap_err();
+        assert!(matches!(err, crate::Error::HwModel(_)));
+        assert!(err.to_string().contains("does not fit"), "{err}");
     }
 }

@@ -33,7 +33,7 @@
 //! | [`backend`] | pluggable execution: native host engine / compiled PJRT |
 //! | `runtime` (feature `pjrt`) | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | parallel ABC engine: leader, device workers, outfeed, top-k |
-//! | [`scheduler`] | multi-scenario scheduler: many ABC jobs on one shared worker pool |
+//! | [`scheduler`] | multi-scenario scheduler: many ABC jobs on one shared worker pool; single-job sharding (`scheduler::shard`) fans one job across it |
 //! | [`abc`] | ABC/SMC-ABC algorithm layer: tolerances, posterior store, prediction |
 //! | [`model`] | pure-Rust reference simulator (CPU baseline + validation oracle) |
 //! | [`data`] | JHU-format loader, embedded country series, synthetic generator |

@@ -63,14 +63,18 @@ common flags: --backend native|pjrt  --artifacts DIR  --reports DIR
 infer flags:  --dataset NAME --tolerance F --samples N --devices N
               --batch N --days N --chunk N --top-k K --seed N --max-runs N
               --lanes W (SoA kernel lane width, 0 = auto; results are
-              width-invariant) --config FILE (JSON RunConfig; CLI flags
+              width-invariant) --shards K (split each run's batch into K
+              lane ranges across the worker pool, 0 = solo; results are
+              shard-invariant) --config FILE (JSON RunConfig; CLI flags
               override)
+scale flags:  --device-counts N,N,...  --sharded (scale ONE sharded job
+              across the pool — the measured Table-7 mode)
 ";
 
 /// Flags shared by inference-shaped commands.
 const INFER_FLAGS: &[&str] = &[
     "artifacts", "reports", "backend", "dataset", "tolerance", "samples", "devices", "batch",
-    "days", "chunk", "top-k", "seed", "max-runs", "lanes", "config",
+    "days", "chunk", "top-k", "seed", "max-runs", "lanes", "shards", "config",
 ];
 
 fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
@@ -97,6 +101,7 @@ fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
     cfg.seed = a.parse_or("seed", cfg.seed)?;
     cfg.max_runs = a.parse_or("max-runs", cfg.max_runs)?;
     cfg.lanes = a.parse_or("lanes", cfg.lanes)?;
+    cfg.shards = a.parse_or("shards", cfg.shards)?;
     if let Some(k) = a.parse_opt::<usize>("top-k")? {
         cfg.return_strategy = ReturnStrategy::TopK { k };
     } else if let Some(chunk) = a.parse_opt::<usize>("chunk")? {
@@ -514,7 +519,11 @@ fn cmd_tolerance_sweep(argv: Vec<String>) -> Result<()> {
 fn cmd_scale(argv: Vec<String>) -> Result<()> {
     let mut flags = INFER_FLAGS.to_vec();
     flags.push("device-counts");
-    let a = parse(argv, &flags, &[])?;
+    let a = parse(argv, &flags, &["sharded"])?;
+    // --sharded: scale ONE job across the pool (each run split into
+    // n shards) instead of issuing whole runs to n workers — the
+    // measured Table-7 mode (DESIGN.md §9, `make bench-scaling`).
+    let sharded = a.has("sharded");
     let base = infer_config(&a)?;
     let counts: Vec<usize> = a
         .get_or("device-counts", "1,2,4,8")
@@ -539,6 +548,9 @@ fn cmd_scale(argv: Vec<String>) -> Result<()> {
             let chunk = if chunked { (batch / 10).max(1) } else { batch };
             let mut cfg = base.clone();
             cfg.devices = n;
+            if sharded {
+                cfg.shards = n;
+            }
             cfg.return_strategy = ReturnStrategy::Outfeed { chunk };
             if cfg.max_runs == 0 {
                 cfg.max_runs = 400;
@@ -548,7 +560,8 @@ fn cmd_scale(argv: Vec<String>) -> Result<()> {
             let throughput =
                 r.metrics.samples_simulated as f64 / r.metrics.total.as_secs_f64();
             let base_tp = *base_throughput.get_or_insert(throughput);
-            let model = scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n.max(1)], chunk, counts[0]);
+            let model =
+                scaling_table(&DeviceSpec::mk1_ipu(), &w, &[n.max(1)], chunk, counts[0])?;
             t.row(&[
                 n.to_string(),
                 if chunked { format!("{chunk}") } else { "=batch".into() },

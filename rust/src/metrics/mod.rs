@@ -34,7 +34,13 @@ impl Stopwatch {
 /// Aggregated metrics of one inference job.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunMetrics {
-    /// Number of accelerator runs executed (across all devices).
+    /// Number of logical accelerator runs finalized at the job's run
+    /// frontier (across all devices). Shard-invariant: a run split
+    /// into `K` lane-range shards (DESIGN.md §9) still counts once,
+    /// with `device_exec` summing over its shards; overshoot work past
+    /// an `AcceptedTarget` decision adds to the volume metrics but not
+    /// here. (Worker-side pool metrics count claimed work items
+    /// instead — `K` per run.)
     pub runs: u64,
     /// Samples simulated in total.
     pub samples_simulated: u64,

@@ -158,9 +158,28 @@ impl LaneEngine {
         batch: usize,
         key: [u32; 2],
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        if days == 0 || batch == 0 {
+        self.sample_distance_range(prior, observed, days, 0, batch, key)
+    }
+
+    /// One contiguous lane range of a batched run: lanes
+    /// `[lane0, lane0 + len)`, i.e. the shard seam of
+    /// `backend::AbcEngine::run_range` (DESIGN.md §9). Because lane `i`
+    /// draws only from `lane_rng(key, i)`, the output is bit-identical
+    /// to the matching slice of the full-batch run — group boundaries
+    /// shift with `lane0`, but the width-invariance contract makes that
+    /// irrelevant. `sample_distance_batch` is the `lane0 = 0` case.
+    pub fn sample_distance_range(
+        &self,
+        prior: &Prior,
+        observed: &[f32],
+        days: usize,
+        lane0: usize,
+        len: usize,
+        key: [u32; 2],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if days == 0 || len == 0 {
             return Err(Error::Config(format!(
-                "lane engine needs batch >= 1 and days >= 1 (got {batch}x{days})"
+                "lane engine needs len >= 1 and days >= 1 (got {len}x{days})"
             )));
         }
         if observed.len() != N_OBSERVED * days {
@@ -171,10 +190,10 @@ impl LaneEngine {
             });
         }
 
-        let width = self.width.min(batch);
-        let groups = batch.div_ceil(width);
-        let mut thetas = vec![0.0f32; batch * N_PARAMS];
-        let mut distances = vec![0.0f32; batch];
+        let width = self.width.min(len);
+        let groups = len.div_ceil(width);
+        let mut thetas = vec![0.0f32; len * N_PARAMS];
+        let mut distances = vec![0.0f32; len];
 
         let threads = self.parallelism.min(groups);
         if threads <= 1 {
@@ -183,7 +202,15 @@ impl LaneEngine {
                 .zip(distances.chunks_mut(width))
                 .enumerate()
             {
-                self.run_group(prior, observed, days, key, g * width, theta_out, dist_out);
+                self.run_group(
+                    prior,
+                    observed,
+                    days,
+                    key,
+                    lane0 + g * width,
+                    theta_out,
+                    dist_out,
+                );
             }
         } else {
             // Deterministic intra-run parallelism: each lane group is a
@@ -195,7 +222,7 @@ impl LaneEngine {
                 .chunks_mut(width * N_PARAMS)
                 .zip(distances.chunks_mut(width))
                 .enumerate()
-                .map(|(g, (theta_out, dist_out))| (g * width, theta_out, dist_out))
+                .map(|(g, (theta_out, dist_out))| (lane0 + g * width, theta_out, dist_out))
                 .collect();
             let share = work.len().div_ceil(threads);
             std::thread::scope(|scope| {
@@ -382,6 +409,39 @@ mod tests {
         assert_eq!(bits(&d), bits(&wd));
         assert_eq!(t.len(), N_PARAMS);
         assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn range_runs_are_slices_of_the_full_batch() {
+        let days = 7;
+        let batch = 19;
+        let obs = observed(days);
+        let prior = Prior::paper();
+        let engine = LaneEngine::new(ic(), 4);
+        let (ft, fd) = engine
+            .sample_distance_batch(&prior, &obs, days, batch, [2, 9])
+            .unwrap();
+        // ranges deliberately misaligned with the lane width
+        for (lane0, len) in [(0usize, 19usize), (0, 7), (7, 6), (13, 6), (18, 1), (3, 11)] {
+            for threads in [1usize, 3] {
+                let e = engine.clone().with_parallelism(threads);
+                let (t, d) = e
+                    .sample_distance_range(&prior, &obs, days, lane0, len, [2, 9])
+                    .unwrap();
+                assert_eq!(
+                    bits(&d),
+                    bits(&fd[lane0..lane0 + len]),
+                    "distances [{lane0}, {}) x{threads}",
+                    lane0 + len
+                );
+                assert_eq!(
+                    bits(&t),
+                    bits(&ft[lane0 * N_PARAMS..(lane0 + len) * N_PARAMS]),
+                    "thetas [{lane0}, {}) x{threads}",
+                    lane0 + len
+                );
+            }
+        }
     }
 
     #[test]

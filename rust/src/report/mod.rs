@@ -2,8 +2,12 @@
 //!
 //! Every bench/example regenerates a paper table or figure; this module
 //! renders them in a consistent, diff-friendly format: aligned text
-//! tables for the terminal plus CSV files for the
-//! figure series.
+//! tables for the terminal plus CSV files for the figure series. The
+//! [`scaling`] submodule is the measured-Table-7 substrate behind the
+//! repo-root `BENCH_scaling.json` artifact (single-job sharding,
+//! DESIGN.md §9).
+
+pub mod scaling;
 
 use std::fmt::Write as _;
 use std::path::Path;

@@ -20,7 +20,14 @@
 //! counter-derived stream. That makes a sample a pure function of
 //! `(job, key, lane)` — the property the lane-batched SoA kernel
 //! (`model::lanes`, DESIGN.md §8) builds its width-invariance and
-//! deterministic intra-run parallelism on.
+//! deterministic intra-run parallelism on, and the property that makes
+//! **single-job sharding** (`scheduler::shard`, DESIGN.md §9) a pure
+//! merge-discipline problem rather than an RNG problem: a shard
+//! executing lanes `[a, b)` of a run reads exactly the streams the
+//! solo run would have read for those lanes — every shard of a run
+//! shares the run's key and differs only in its lane range — so the
+//! merged `(θ, distance, acceptance)` stream is bit-identical for any
+//! shard count and any completion order.
 
 mod xoshiro;
 

@@ -27,27 +27,40 @@
 //! same spec, regardless of pool size, job mix, submission order or how
 //! work interleaves (pinned by `tests/prop_scheduler.rs`).
 //!
+//! **Single-job sharding.** A job may additionally split each run's
+//! batch into `K` contiguous lane ranges ([`shard`], DESIGN.md §9) so
+//! that *one* job rides the whole pool: each shard is its own work
+//! item, and the leader assembles a run's `K` shard transfers before
+//! the frontier absorbs it ([`shard::merge_shard_transfers`]). Because
+//! every sample is a pure function of `(job, key, lane)`, the merged
+//! stream is bit-identical to the solo run for any `K`, any pool size
+//! and any completion order (pinned by `tests/prop_shards.rs`).
+//!
 //! Stop rules are decided at the frontier:
 //! * [`StopRule::ExactRuns`]`(r)` — exactly runs `0..r` are issued and
 //!   kept.
 //! * [`StopRule::AcceptedTarget`]`(n)` — the job completes at the
 //!   smallest run-count boundary `b` whose cumulative accepted count
-//!   reaches `n`; the result equals a solo `ExactRuns(b)`. Runs beyond
-//!   `b` that were already in flight still execute and are counted in
-//!   the job's metrics, but contribute no samples.
+//!   reaches `n`; the result equals a solo `ExactRuns(b)`. Work beyond
+//!   `b` that was already in flight still executes and is counted in
+//!   the job's volume metrics (samples, device time), but contributes
+//!   no samples; `metrics.runs` counts only the `b` frontier-finalized
+//!   runs, so it is shard-invariant (DESIGN.md §9).
 
 mod pool;
+pub mod shard;
 
 use crate::backend::{AbcJob, Backend, NativeBackend};
-use crate::config::{RunConfig, ScenarioConfig};
+use crate::config::{ReturnStrategy, RunConfig, ScenarioConfig};
 use crate::coordinator::device::JobContext;
-use crate::coordinator::{filter_transfer, AcceptedSample, InferenceResult, StopRule};
+use crate::coordinator::{filter_transfer, AcceptedSample, InferenceResult, StopRule, Transfer};
 use crate::data::Dataset;
 use crate::metrics::{RunMetrics, Stopwatch};
 use crate::model::Prior;
 use crate::rng::SeedSequence;
 use crate::{Error, Result};
 use pool::{pool_worker_main, Dispatcher, PoolMessage, PoolWorkerSpec};
+use shard::{merge_shard_transfers, ShardPlan};
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -118,23 +131,27 @@ impl JobSpec {
         self.config.tolerance.unwrap_or(self.dataset.default_tolerance)
     }
 
-    /// The shared per-work-item context of this job.
+    /// The shared per-work-item context of this job. The effective
+    /// shard count is resolved here (`$ABC_IPU_SHARDS` over
+    /// `config.shards`, clamped to the batch) so dispatcher and leader
+    /// agree on one plan.
     fn context(&self) -> JobContext {
         let cfg = &self.config;
         let truncated = self.dataset.truncated(cfg.days);
-        JobContext {
-            job: AbcJob::new(
+        JobContext::new(
+            AbcJob::new(
                 cfg.batch_per_device,
                 cfg.days,
                 truncated.observed.flatten(),
                 &self.prior,
                 truncated.consts(),
             )
-            .with_lanes(cfg.lanes),
-            tolerance: self.tolerance(),
-            strategy: cfg.return_strategy,
-            seeds: SeedSequence::new(cfg.seed),
-        }
+            .with_lanes(cfg.lanes)
+            .with_shards(cfg.shards),
+            self.tolerance(),
+            cfg.return_strategy,
+            SeedSequence::new(cfg.seed),
+        )
     }
 
     /// How many runs the dispatcher may issue (`None` = until finished).
@@ -191,17 +208,41 @@ impl ScheduleReport {
     }
 }
 
+/// One run's in-flight shard transfers on the leader side, slotted by
+/// shard index (each with the worker that executed it) — arrival order
+/// is irrelevant by construction.
+struct RunAssembly {
+    parts: Vec<Option<(u32, Transfer)>>,
+    received: u32,
+}
+
+impl RunAssembly {
+    fn new(shards: u32) -> Self {
+        Self { parts: (0..shards).map(|_| None).collect(), received: 0 }
+    }
+}
+
 /// Per-job demux state on the leader side.
 struct JobProgress {
     name: String,
     tolerance: f32,
     stop: StopRule,
+    /// Device-side return strategy (needed to merge shard transfers).
+    strategy: ReturnStrategy,
+    /// The job's shard plan (needed to re-attribute merged samples to
+    /// the worker that simulated their lane range).
+    plan: ShardPlan,
+    /// Effective shard count K of the job's plan.
+    shards: u32,
     /// Issue budget (`None` = unlimited); mirrors the dispatcher slot.
     budget: Option<u64>,
+    /// Runs with some but not all of their K shard transfers in:
+    /// completed assemblies merge, host-filter and move to `pending`.
+    assembling: BTreeMap<u64, RunAssembly>,
     /// Per-run outcomes not yet absorbed by the frontier: the accepted
-    /// samples of a completed run, or the error that killed it. Keeping
-    /// failures in run order makes job failure as deterministic as
-    /// success — an error on an overshoot run cannot fail a job that
+    /// samples of a fully-assembled run, or the error that killed it.
+    /// Keeping failures in run order makes job failure as deterministic
+    /// as success — an error on an overshoot run cannot fail a job that
     /// already completed, regardless of message arrival order.
     pending: BTreeMap<u64, Result<Vec<AcceptedSample>>>,
     /// All runs `< frontier` are finalized into `accepted`.
@@ -268,12 +309,16 @@ impl Scheduler {
         for spec in &jobs {
             spec.validate()?;
             let budget = spec.issue_budget();
-            slots.push((Arc::new(spec.context()), budget));
+            let ctx = Arc::new(spec.context());
             progress.push(JobProgress {
                 name: spec.name.clone(),
                 tolerance: spec.tolerance(),
                 stop: spec.stop,
+                strategy: ctx.strategy,
+                plan: ctx.plan.clone(),
+                shards: ctx.shards(),
                 budget,
+                assembling: BTreeMap::new(),
                 pending: BTreeMap::new(),
                 frontier: 0,
                 accepted: Vec::new(),
@@ -283,6 +328,7 @@ impl Scheduler {
                 failed: None,
                 finished_at: None,
             });
+            slots.push((ctx, budget));
         }
 
         let dispatcher = Arc::new(Dispatcher::new(slots));
@@ -318,18 +364,26 @@ impl Scheduler {
         for msg in rx.iter() {
             // Normalize both message kinds into a per-run outcome, then
             // absorb outcomes strictly in run order at the frontier —
-            // success *and* failure are decided deterministically.
+            // success *and* failure are decided deterministically. A
+            // sharded job's run yields an outcome only once all K shard
+            // transfers assembled and merged (slotted by shard index,
+            // so completion order is irrelevant — DESIGN.md §9).
             let (job_id, run, outcome): (u32, u64, Result<Vec<AcceptedSample>>) = match msg {
                 PoolMessage::Report(report) => {
                     let Some(p) = progress.get_mut(report.job as usize) else { continue };
                     if p.failed.is_some() {
                         continue; // job already failed; drop stragglers
                     }
-                    // Per-job metrics attribution. Overshoot reports of
-                    // an already-decided AcceptedTarget job still count
-                    // (those runs did execute), matching the historical
-                    // solo-coordinator accounting.
-                    p.metrics.runs += 1;
+                    // Per-job metrics attribution. Work volume
+                    // (samples, exec time, transfer counters) counts
+                    // per executed shard — overshoot shards of an
+                    // already-decided AcceptedTarget job included:
+                    // they did execute. `runs` is counted at the
+                    // frontier instead (logical, fully-merged runs
+                    // only), so it is shard-invariant and
+                    // `samples_simulated >= runs x batch` holds at
+                    // every K even when an overshoot run executed only
+                    // some of its shards.
                     p.metrics.samples_simulated += report.samples;
                     p.metrics.device_exec += report.exec_time;
                     p.metrics.bytes_to_host += report.transfer.wire_bytes();
@@ -338,23 +392,61 @@ impl Scheduler {
                     if p.done {
                         continue; // overshoot: counters only, samples discarded
                     }
+                    if p.pending.contains_key(&report.run) {
+                        continue; // run already decided (a shard-mate errored)
+                    }
+                    let shards = p.shards;
+                    let assembly = p
+                        .assembling
+                        .entry(report.run)
+                        .or_insert_with(|| RunAssembly::new(shards));
+                    let slot = &mut assembly.parts[report.shard as usize];
+                    if slot.is_none() {
+                        *slot = Some((report.device, report.transfer));
+                        assembly.received += 1;
+                    }
+                    if assembly.received < shards {
+                        continue; // run not fully assembled yet
+                    }
+                    let assembly = p.assembling.remove(&report.run).expect("assembly present");
                     let sw = Stopwatch::start();
+                    let mut devices = Vec::with_capacity(shards as usize);
+                    let parts: Vec<Transfer> = assembly
+                        .parts
+                        .into_iter()
+                        .map(|slot| {
+                            let (device, transfer) = slot.expect("all received");
+                            devices.push(device);
+                            transfer
+                        })
+                        .collect();
+                    let transfer = merge_shard_transfers(parts, p.strategy);
                     let mut samples = Vec::new();
-                    filter_transfer(
-                        &report.transfer,
-                        p.tolerance,
-                        report.device,
-                        report.run,
-                        &mut samples,
-                    );
+                    filter_transfer(&transfer, p.tolerance, 0, report.run, &mut samples);
+                    // Device provenance per sample: the worker that
+                    // executed the shard owning its lane — not the
+                    // arrival-order accident of whichever report
+                    // completed the assembly.
+                    for s in &mut samples {
+                        let shard = p.plan.shard_of(s.index as usize);
+                        s.device = devices[shard as usize];
+                    }
                     p.metrics.host_postproc += sw.elapsed();
                     (report.job, report.run, Ok(samples))
                 }
                 PoolMessage::JobError { job, run, error } => {
                     let Some(p) = progress.get_mut(job as usize) else { continue };
-                    if p.done || p.failed.is_some() {
-                        continue; // error on an overshoot run: job outcome already decided
+                    if p.done || p.failed.is_some() || p.pending.contains_key(&run) {
+                        continue; // job or run outcome already decided
                     }
+                    // The run can never assemble; decide it now (still
+                    // at the deterministic run frontier) and drop any
+                    // shard-mates already collected. The *failing run*
+                    // is deterministic; if several shards of the same
+                    // run fail concurrently, the surfaced error
+                    // instance is first-arrival (the others are dropped
+                    // by the pending guard above).
+                    p.assembling.remove(&run);
                     (job, run, Err(error))
                 }
             };
@@ -377,6 +469,7 @@ impl Scheduler {
                 };
                 p.accepted.extend(run_samples);
                 p.frontier += 1;
+                p.metrics.runs += 1;
                 match p.stop {
                     StopRule::ExactRuns(r) => {
                         if p.frontier >= r {
@@ -493,9 +586,13 @@ mod tests {
             .successes()
             .map(|(_, r)| r.metrics.runs)
             .collect();
+        // per-job `runs` counts logical runs — invariant even when
+        // $ABC_IPU_SHARDS forces a shard count onto these jobs
         assert_eq!(runs, vec![3, 2, 4]);
-        // the pool executed exactly the union of the jobs' runs
-        assert_eq!(report.pool_metrics.runs, 9);
+        // the pool executed exactly the union of the jobs' runs, as
+        // K work items per run (K = 1 unless the env overrides it)
+        assert!(report.pool_metrics.runs >= 9);
+        assert_eq!(report.pool_metrics.runs % 9, 0);
         assert!(report.first_error().is_none());
     }
 

@@ -1,12 +1,16 @@
 //! The shared worker pool: work dispatch and the job-agnostic worker.
 //!
-//! A [`Dispatcher`] hands out [`WorkItem`]s — `(job, run)` pairs — to
-//! any free worker, round-robin across the jobs that can still issue
-//! runs so no scenario starves (fairness; DESIGN.md §7). Workers are
-//! job-agnostic: each opens engines lazily, one per distinct job it
-//! encounters (engines are thread-local state — mandatory on the PJRT
-//! path, harmless on the native one), executes the claimed run and
-//! ships the tagged [`DeviceReport`] back to the scheduler leader.
+//! A [`Dispatcher`] hands out [`WorkItem`]s — `(job, run, shard)`
+//! triples — to any free worker, round-robin across the jobs that can
+//! still issue work so no scenario starves (fairness; DESIGN.md §7).
+//! A job whose shard plan has `K > 1` issues each run as `K` work
+//! items over contiguous lane ranges, in `(run, shard)` order — which
+//! is what lets *one* job saturate the whole pool (single-job
+//! sharding, DESIGN.md §9). Workers are job-agnostic: each opens
+//! engines lazily, one per distinct job it encounters (engines are
+//! thread-local state — mandatory on the PJRT path, harmless on the
+//! native one), executes the claimed lane range and ships the tagged
+//! [`DeviceReport`] back to the scheduler leader.
 //!
 //! Shutdown protocol: the leader calls [`Dispatcher::finish_job`] the
 //! moment a job's outcome is decided (stop-rule satisfied, budget
@@ -22,13 +26,16 @@ use crate::Error;
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 
-/// One unit of work: execute job `job`'s run number `run`.
+/// One unit of work: execute shard `shard` of job `job`'s run `run`.
 pub(crate) struct WorkItem {
     /// Scheduler-local job id (index into the submission order).
     pub job: u32,
     /// Job-local run index (the RNG key namespace coordinate).
     pub run: u64,
-    /// Shared job context (engine definition, ε, strategy, seeds).
+    /// Shard index within the run (`0..ctx.shards()`; lane range via
+    /// `ctx.plan`). Always 0 for an unsharded job.
+    pub shard: u32,
+    /// Shared job context (engine definition, ε, strategy, seeds, plan).
     pub ctx: Arc<JobContext>,
 }
 
@@ -37,7 +44,12 @@ struct JobSlot {
     ctx: Arc<JobContext>,
     /// Next run index to hand out.
     next_run: u64,
-    /// Hard cap on issued runs (`None` = issue until finished). A cap
+    /// Next shard of `next_run` to hand out; wraps to the next run
+    /// after `ctx.shards()` — so issue order is `(run, shard)`
+    /// lexicographic and a run's shards are fully issued before the
+    /// next run starts.
+    next_shard: u32,
+    /// Hard cap on issued *runs* (`None` = issue until finished). A cap
     /// of `Some(0)` issues nothing — there is deliberately no sentinel
     /// value, so `ExactRuns(0)` needs no special-casing here.
     budget: Option<u64>,
@@ -48,6 +60,18 @@ struct JobSlot {
 impl JobSlot {
     fn issuable(&self) -> bool {
         self.issuing && self.budget.map_or(true, |b| self.next_run < b)
+    }
+
+    /// Claim this slot's next `(run, shard)` pair (caller checked
+    /// `issuable`).
+    fn claim(&mut self) -> (u64, u32) {
+        let claimed = (self.next_run, self.next_shard);
+        self.next_shard += 1;
+        if self.next_shard >= self.ctx.shards() {
+            self.next_shard = 0;
+            self.next_run += 1;
+        }
+        claimed
     }
 }
 
@@ -76,7 +100,13 @@ impl Dispatcher {
     pub fn new(jobs: Vec<(Arc<JobContext>, Option<u64>)>) -> Self {
         let slots = jobs
             .into_iter()
-            .map(|(ctx, budget)| JobSlot { ctx, next_run: 0, budget, issuing: true })
+            .map(|(ctx, budget)| JobSlot {
+                ctx,
+                next_run: 0,
+                next_shard: 0,
+                budget,
+                issuing: true,
+            })
             .collect();
         Self {
             state: Mutex::new(DispatchState { slots, cursor: 0, shutdown: false }),
@@ -96,11 +126,10 @@ impl Dispatcher {
             for probe in 0..n {
                 let i = (st.cursor + probe) % n;
                 if st.slots[i].issuable() {
-                    let run = st.slots[i].next_run;
-                    st.slots[i].next_run += 1;
+                    let (run, shard) = st.slots[i].claim();
                     st.cursor = (i + 1) % n;
                     let ctx = st.slots[i].ctx.clone();
-                    return Some(WorkItem { job: i as u32, run, ctx });
+                    return Some(WorkItem { job: i as u32, run, shard, ctx });
                 }
             }
             st = self
@@ -145,13 +174,13 @@ impl Dispatcher {
 
 /// What a pool worker sends to the scheduler leader.
 pub(crate) enum PoolMessage {
-    /// One executed run, tagged with its job.
+    /// One executed work item — a shard of a run — tagged with its job.
     Report(DeviceReport),
-    /// Work item `(job, run)` failed (engine open/run failure). Carries
-    /// the run index so the leader can decide the failure at the job's
-    /// deterministic run frontier instead of on message-arrival order —
-    /// an error on an overshoot run must not fail an already-complete
-    /// job depending on thread timing.
+    /// Work item `(job, run, shard)` failed (engine open/run failure).
+    /// Carries the run index so the leader can decide the failure at
+    /// the job's deterministic run frontier instead of on
+    /// message-arrival order — an error on an overshoot run must not
+    /// fail an already-complete job depending on thread timing.
     JobError { job: u32, run: u64, error: Error },
 }
 
@@ -191,7 +220,14 @@ pub(crate) fn pool_worker_main(spec: PoolWorkerSpec) -> RunMetrics {
                         v.insert(spec.backend.open_engine(spec.device, &item.ctx.job)?)
                     }
                 };
-                execute_work(engine.as_mut(), &item.ctx, item.job, spec.device, item.run)
+                execute_work(
+                    engine.as_mut(),
+                    &item.ctx,
+                    item.job,
+                    spec.device,
+                    item.run,
+                    item.shard,
+                )
             },
         ));
         let result = match outcome {
@@ -200,8 +236,8 @@ pub(crate) fn pool_worker_main(spec: PoolWorkerSpec) -> RunMetrics {
                 // Engine state is unknown after a panic — drop it.
                 engines.remove(&item.job);
                 Err(Error::Coordinator(format!(
-                    "pool worker {} panicked executing run {} of job {}",
-                    spec.device, item.run, item.job
+                    "pool worker {} panicked executing run {} (shard {}) of job {}",
+                    spec.device, item.run, item.shard, item.job
                 )))
             }
         };
@@ -240,13 +276,21 @@ mod tests {
     use crate::rng::SeedSequence;
 
     fn ctx(seed: u64) -> Arc<JobContext> {
+        ctx_sharded(seed, 1)
+    }
+
+    /// A context with a pinned K-shard plan (bypassing the
+    /// $ABC_IPU_SHARDS resolution so dispatcher tests are env-stable).
+    fn ctx_sharded(seed: u64, shards: usize) -> Arc<JobContext> {
         let prior = Prior::paper();
-        Arc::new(JobContext {
-            job: AbcJob::new(10, 4, vec![0.0; 12], &prior, [155.0, 2.0, 3.0, 6e7]),
-            tolerance: 1.0,
-            strategy: ReturnStrategy::Outfeed { chunk: 10 },
-            seeds: SeedSequence::new(seed),
-        })
+        let mut ctx = JobContext::new(
+            AbcJob::new(10, 4, vec![0.0; 12], &prior, [155.0, 2.0, 3.0, 6e7]),
+            1.0,
+            ReturnStrategy::Outfeed { chunk: 10 },
+            SeedSequence::new(seed),
+        );
+        ctx.plan = crate::scheduler::shard::ShardPlan::new(ctx.job.batch, shards);
+        Arc::new(ctx)
     }
 
     #[test]
@@ -260,6 +304,22 @@ mod tests {
             .collect();
         // fair alternation until job 0's budget (2 runs) is exhausted
         assert_eq!(order, vec![(0, 0), (1, 0), (0, 1), (1, 1), (1, 2)]);
+        d.shutdown();
+        assert!(d.next().is_none());
+    }
+
+    #[test]
+    fn sharded_jobs_issue_every_shard_of_a_run_before_the_next_run() {
+        let d = Dispatcher::new(vec![(ctx_sharded(1, 3), Some(2))]);
+        let order: Vec<(u64, u32)> = (0..6)
+            .map(|_| {
+                let w = d.next().expect("work available");
+                assert_eq!(w.job, 0);
+                (w.run, w.shard)
+            })
+            .collect();
+        assert_eq!(order, vec![(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]);
+        // budget of 2 runs = 6 shard items, then the slot is dry
         d.shutdown();
         assert!(d.next().is_none());
     }

@@ -1,0 +1,274 @@
+//! Single-job data-parallel sharding: split one run's batch over the pool.
+//!
+//! The scheduler multiplexes many jobs over one worker pool, but before
+//! this module a single [`AbcJob`](crate::backend::AbcJob) run executed
+//! on exactly one worker — the pool parallelized *across* jobs, never
+//! *within* one. Sharding closes that gap, turning the paper's Table-7
+//! claim (one inference run scaling across 16 IPUs with ≤ 8 % overhead)
+//! from a prediction of [`crate::hwmodel::scaling_table`] into something
+//! the repo can measure (`benches/scaling_sweep.rs` → `BENCH_scaling.json`).
+//!
+//! A [`ShardPlan`] splits the run's batch `[0, B)` into `K` contiguous
+//! lane ranges. Each shard of a run is an independent work item: it
+//! executes `engine.run_range(key, lane0, len)` on whichever pool
+//! worker claims it, applies the device-side return strategy to its
+//! sub-batch with *global* sample indices, and reports back. The
+//! scheduler leader holds per-run assemblies and merges the `K` shard
+//! transfers at the run frontier ([`merge_shard_transfers`]) before
+//! host filtering.
+//!
+//! **Why the merged stream is bit-identical to the solo run for any
+//! `K` and any completion order.** Every sample ("lane") of a run is a
+//! pure function of `(job, key, lane)` — its randomness comes from the
+//! counter-derived stream [`crate::rng::lane_rng`]`(key, lane)`, never
+//! from the batch geometry that happens to execute it (the
+//! width-invariance contract of [`crate::model::lanes`], DESIGN.md §8).
+//! A shard therefore computes exactly the lanes `[lane0, lane0+len)` of
+//! the solo run, bit for bit. Merging is pure bookkeeping:
+//!
+//! * **Outfeed**: shard chunks carry global offsets and shards cover
+//!   disjoint ascending ranges, so concatenating them in shard order
+//!   reproduces the solo acceptance stream exactly. (Chunk *boundaries*
+//!   are shard-local — a solo chunk straddling a shard edge arrives as
+//!   two chunks — so transfer-count metrics vary with `K` while the
+//!   accepted `(θ, distance, run, index)` stream does not.)
+//! * **Top-k**: selection orders by `(distance, index)` — a total order
+//!   — so the global k lowest are each within their own shard's k
+//!   lowest, and [`crate::coordinator::merge_selections`] reconstructs
+//!   the solo selection exactly, ties included.
+//!
+//! Completion order cannot matter because the leader assembles parts by
+//! shard slot, not by arrival, and only merges once all `K` are present.
+//!
+//! The shard count is a pure performance knob, resolved like the lane
+//! width: `$ABC_IPU_SHARDS` (the CI shard matrix pins 1 and 3) wins
+//! over the requested [`AbcJob::shards`](crate::backend::AbcJob) /
+//! [`RunConfig::shards`](crate::config::RunConfig) / `--shards` value;
+//! `0` means auto (solo). `tests/prop_shards.rs` pins the whole
+//! contract differentially against solo runs.
+
+use crate::config::ReturnStrategy;
+use crate::coordinator::{merge_selections, OutfeedChunk, Transfer};
+
+/// Environment override for the shard count (`0` or unset = honour the
+/// requested value). Like `$ABC_IPU_LANES`, always safe: results are
+/// shard-invariant.
+pub const SHARDS_ENV: &str = "ABC_IPU_SHARDS";
+
+/// Upper bound on a requested shard count — owned by [`crate::backend`]
+/// (it guards `AbcJob` validation, which must not depend on this higher
+/// layer) and re-exported here as the sharding module's vocabulary.
+/// [`ShardPlan::new`] additionally clamps to the batch.
+pub use crate::backend::MAX_SHARDS;
+
+/// Resolve an effective shard count: `$ABC_IPU_SHARDS` wins when set to
+/// a positive integer (`0`/unset/unparseable honour the request), then
+/// the requested value; `0` from either means auto, which is solo
+/// (1 shard). Capped at [`MAX_SHARDS`].
+pub fn resolve_shards(requested: usize) -> usize {
+    let requested = std::env::var(SHARDS_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(requested);
+    if requested >= 1 {
+        requested.min(MAX_SHARDS)
+    } else {
+        1
+    }
+}
+
+/// One shard's contiguous lane range within a run's batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    /// Shard index, `0..K`.
+    pub shard: u32,
+    /// First global lane (sample index) of the range.
+    pub lane0: usize,
+    /// Number of lanes in the range (>= 1).
+    pub len: usize,
+}
+
+/// The shard plan of one job: `K` contiguous, disjoint, near-equal lane
+/// ranges covering the run batch `[0, B)` exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    batch: usize,
+    ranges: Vec<ShardRange>,
+}
+
+impl ShardPlan {
+    /// Plan `shards` contiguous ranges over a batch of `batch` lanes.
+    ///
+    /// The count is clamped to `[1, batch]` (a shard must own at least
+    /// one lane); the first `batch % K` shards get one extra lane so
+    /// sizes differ by at most one.
+    pub fn new(batch: usize, shards: usize) -> Self {
+        let k = shards.clamp(1, batch.max(1));
+        let base = batch / k;
+        let extra = batch % k;
+        let mut ranges = Vec::with_capacity(k);
+        let mut lane0 = 0usize;
+        for s in 0..k {
+            let len = base + usize::from(s < extra);
+            ranges.push(ShardRange { shard: s as u32, lane0, len });
+            lane0 += len;
+        }
+        Self { batch, ranges }
+    }
+
+    /// Number of shards `K`.
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The batch the plan covers.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// All ranges, ascending by `lane0`.
+    pub fn ranges(&self) -> &[ShardRange] {
+        &self.ranges
+    }
+
+    /// The range of shard `shard` (panics if out of plan).
+    pub fn range(&self, shard: u32) -> ShardRange {
+        self.ranges[shard as usize]
+    }
+
+    /// The shard owning global lane `lane` (panics if `lane` is outside
+    /// the batch). Ranges are contiguous and ascending, so this is a
+    /// binary search.
+    pub fn shard_of(&self, lane: usize) -> u32 {
+        assert!(lane < self.batch, "lane {lane} outside batch {}", self.batch);
+        self.ranges.partition_point(|r| r.lane0 + r.len <= lane) as u32
+    }
+}
+
+/// Merge the `K` per-shard transfers of one run (in shard order) into
+/// the transfer the solo run would have produced — the run-frontier
+/// merge of the sharding contract (module docs above).
+///
+/// * Outfeed: concatenate chunk lists; shard chunks already carry
+///   global offsets and shards are ascending disjoint ranges.
+/// * Top-k: re-select the global k lowest by `(distance, index)` from
+///   the per-shard selections ([`merge_selections`]).
+///
+/// `parts` must hold exactly the job's shard count in shard order; a
+/// single part passes through untouched (the solo fast path).
+pub fn merge_shard_transfers(mut parts: Vec<Transfer>, strategy: ReturnStrategy) -> Transfer {
+    if parts.len() == 1 {
+        return parts.pop().expect("one part");
+    }
+    // A variant mismatch is unreachable by construction — a job's
+    // strategy is shared by every shard of every run — so both arms
+    // treat it as the programming error it would be.
+    match strategy {
+        ReturnStrategy::Outfeed { .. } => {
+            let mut chunks: Vec<OutfeedChunk> = Vec::new();
+            for part in parts {
+                match part {
+                    Transfer::Chunks(cs) => chunks.extend(cs),
+                    Transfer::TopK(_) => unreachable!(
+                        "shard transfer variant mismatch: top-k part under outfeed strategy"
+                    ),
+                }
+            }
+            Transfer::Chunks(chunks)
+        }
+        ReturnStrategy::TopK { k } => {
+            let sels: Vec<_> = parts
+                .into_iter()
+                .map(|part| match part {
+                    Transfer::TopK(sel) => sel,
+                    Transfer::Chunks(_) => unreachable!(
+                        "shard transfer variant mismatch: outfeed part under top-k strategy"
+                    ),
+                })
+                .collect();
+            Transfer::TopK(merge_selections(&sels, k))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_covers_batch_contiguously_and_near_equally() {
+        for (batch, shards) in [(800, 3), (7, 7), (10, 4), (1, 1), (100, 1), (5, 8)] {
+            let plan = ShardPlan::new(batch, shards);
+            assert!(plan.shards() >= 1 && plan.shards() <= batch.min(shards.max(1)));
+            let mut next = 0usize;
+            let (mut min_len, mut max_len) = (usize::MAX, 0usize);
+            for (i, r) in plan.ranges().iter().enumerate() {
+                assert_eq!(r.shard, i as u32);
+                assert_eq!(r.lane0, next, "contiguous at {batch}x{shards}");
+                assert!(r.len >= 1);
+                min_len = min_len.min(r.len);
+                max_len = max_len.max(r.len);
+                next += r.len;
+            }
+            assert_eq!(next, batch, "covers the batch at {batch}x{shards}");
+            assert!(max_len - min_len <= 1, "near-equal at {batch}x{shards}");
+        }
+    }
+
+    #[test]
+    fn shard_of_inverts_the_ranges() {
+        for (batch, shards) in [(801usize, 3usize), (10, 4), (7, 7), (100, 1)] {
+            let plan = ShardPlan::new(batch, shards);
+            for r in plan.ranges() {
+                for lane in r.lane0..r.lane0 + r.len {
+                    assert_eq!(plan.shard_of(lane), r.shard, "lane {lane}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_clamps_shards_to_batch() {
+        let plan = ShardPlan::new(3, 100);
+        assert_eq!(plan.shards(), 3);
+        assert_eq!(plan.range(2), ShardRange { shard: 2, lane0: 2, len: 1 });
+    }
+
+    #[test]
+    fn zero_shards_means_solo() {
+        let plan = ShardPlan::new(10, 0);
+        assert_eq!(plan.shards(), 1);
+        assert_eq!(plan.range(0), ShardRange { shard: 0, lane0: 0, len: 10 });
+    }
+
+    #[test]
+    fn resolved_shard_count_is_at_least_one() {
+        // env-agnostic: whatever ABC_IPU_SHARDS is set to in this
+        // process, resolution must land on >= 1 and under the cap
+        for requested in [0usize, 1, 3, MAX_SHARDS + 5] {
+            let k = resolve_shards(requested);
+            assert!((1..=MAX_SHARDS).contains(&k), "requested {requested} -> {k}");
+        }
+    }
+
+    #[test]
+    fn single_part_merges_to_itself() {
+        let chunk = OutfeedChunk { offset: 4, thetas: vec![0.0; 8], distances: vec![1.0] };
+        let t = Transfer::Chunks(vec![chunk.clone()]);
+        let merged =
+            merge_shard_transfers(vec![t], ReturnStrategy::Outfeed { chunk: 10 });
+        assert_eq!(merged, Transfer::Chunks(vec![chunk]));
+    }
+
+    #[test]
+    fn outfeed_parts_concatenate_in_shard_order() {
+        let c0 = OutfeedChunk { offset: 0, thetas: vec![0.0; 8], distances: vec![1.0] };
+        let c1 = OutfeedChunk { offset: 5, thetas: vec![1.0; 8], distances: vec![2.0] };
+        let merged = merge_shard_transfers(
+            vec![Transfer::Chunks(vec![c0.clone()]), Transfer::Chunks(vec![c1.clone()])],
+            ReturnStrategy::Outfeed { chunk: 5 },
+        );
+        assert_eq!(merged, Transfer::Chunks(vec![c0, c1]));
+    }
+}

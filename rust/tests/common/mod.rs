@@ -55,6 +55,7 @@ pub fn worker_counts() -> Vec<usize> {
 /// `native_backend`, `prop_scheduler`, `prop_lanes` and `recovery`
 /// previously each re-implemented. Field defaults give a small,
 /// CPU-friendly job; override what the test pins down.
+#[derive(Clone)]
 pub struct JobBuilder {
     pub dataset: Dataset,
     pub seed: u64,
@@ -65,6 +66,7 @@ pub struct JobBuilder {
     pub strategy: ReturnStrategy,
     pub max_runs: u64,
     pub lanes: usize,
+    pub shards: usize,
 }
 
 impl JobBuilder {
@@ -82,6 +84,7 @@ impl JobBuilder {
             strategy: ReturnStrategy::Outfeed { chunk: 800 },
             max_runs: 400,
             lanes: 0,
+            shards: 0,
         }
     }
 
@@ -97,6 +100,7 @@ impl JobBuilder {
             seed: self.seed,
             max_runs: self.max_runs,
             lanes: self.lanes,
+            shards: self.shards,
             ..Default::default()
         }
     }

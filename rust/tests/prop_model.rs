@@ -195,6 +195,7 @@ fn prop_json_config_roundtrip() {
             seed: rng.next_u64() >> 12,
             max_runs: rng.below(10_000),
             lanes: rng.below(64) as usize,
+            shards: rng.below(64) as usize,
         };
         let parsed = abc_ipu::config::RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(parsed, cfg);

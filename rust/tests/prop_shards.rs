@@ -1,0 +1,297 @@
+//! Differential suite for single-job sharding (ISSUE 4 / DESIGN.md §9):
+//! a job whose runs are split into K contiguous lane ranges and merged
+//! at the scheduler's run frontier must produce an accepted-sample
+//! stream **bit-identical** to the solo (unsharded) run — for every
+//! shard count, every pool size, both return strategies, and however
+//! shard completions interleave — including end-to-end through
+//! `run_smc`, and with the `BENCH_scaling.json` substrate emitting a
+//! well-formed measured-vs-predicted artifact.
+//!
+//! Completion-order coverage comes from geometry, not luck: with
+//! shards > workers every worker claims shards of several runs and
+//! arrival order at the leader scrambles across repetitions, while the
+//! slot-indexed run assembly must keep the merge order fixed. The CI
+//! shard matrix additionally pins `$ABC_IPU_SHARDS` to 1 and 3 over
+//! this suite (the env override collapses requested counts, harmlessly
+//! — results are shard-invariant by contract).
+
+mod common;
+
+use abc_ipu::config::ReturnStrategy;
+use abc_ipu::coordinator::{Coordinator, StopRule};
+use abc_ipu::data::synthetic;
+use abc_ipu::report::scaling::{measure_scaling, scaling_json, ScalingSweepConfig};
+use abc_ipu::scheduler::shard::{resolve_shards, ShardPlan, MAX_SHARDS};
+use abc_ipu::scheduler::Scheduler;
+use abc_ipu::util::json::Json;
+use common::{fingerprints, native_backend, Fingerprint, JobBuilder};
+
+/// A synthetic job with a batch/chunk geometry chosen to be awkward:
+/// batch 801 is not a multiple of any tested shard count, and chunk 93
+/// misaligns outfeed chunk boundaries with every shard edge.
+fn builder(strategy: ReturnStrategy) -> JobBuilder {
+    let mut b = JobBuilder::new(synthetic::default_dataset(16, 0x5eed));
+    b.batch = 801;
+    b.strategy = strategy;
+    b.seed = 0xD15C;
+    b
+}
+
+/// Solo reference: the identical spec, 1 worker, shards left at 0
+/// (auto/solo — though `$ABC_IPU_SHARDS` may raise it, which the
+/// contract makes harmless).
+fn solo_reference(b: &JobBuilder, stop: StopRule) -> Vec<Fingerprint> {
+    let mut solo = b.clone();
+    solo.devices = 1;
+    solo.shards = 0;
+    let spec = solo.spec("solo", stop);
+    let result = Coordinator::new(
+        native_backend(),
+        spec.config.clone(),
+        spec.dataset.clone(),
+        spec.prior.clone(),
+    )
+    .unwrap()
+    .run(spec.stop)
+    .unwrap();
+    assert!(
+        !result.accepted.is_empty(),
+        "solo reference accepted nothing: tolerance too tight for a meaningful test"
+    );
+    fingerprints(&result.accepted)
+}
+
+/// The sharded job on a pool, fingerprinted.
+fn sharded(b: &JobBuilder, stop: StopRule, workers: usize, shards: usize) -> Vec<Fingerprint> {
+    let mut sb = b.clone();
+    sb.shards = shards;
+    let spec = sb.spec("sharded", stop);
+    let report = Scheduler::new(native_backend(), workers).run(vec![spec]).unwrap();
+    let result = report.jobs.into_iter().next().unwrap().outcome.unwrap();
+    fingerprints(&result.accepted)
+}
+
+#[test]
+fn sharded_outfeed_job_bit_equals_solo_for_every_geometry() {
+    let b = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let stop = StopRule::ExactRuns(5);
+    let want = solo_reference(&b, stop);
+    for workers in [1usize, 4] {
+        for shards in [1usize, 2, 3, 8] {
+            let got = sharded(&b, stop, workers, shards);
+            assert_eq!(
+                got, want,
+                "outfeed run diverged at {workers} workers x {shards} shards"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_topk_job_bit_equals_solo_for_every_geometry() {
+    // k far below the accepted count: the merged global re-selection
+    // must drop exactly the samples the solo selection drops
+    let b = builder(ReturnStrategy::TopK { k: 7 });
+    let stop = StopRule::ExactRuns(5);
+    let want = solo_reference(&b, stop);
+    for workers in [1usize, 4] {
+        for shards in [1usize, 2, 3, 8] {
+            let got = sharded(&b, stop, workers, shards);
+            assert_eq!(
+                got, want,
+                "top-k run diverged at {workers} workers x {shards} shards"
+            );
+        }
+    }
+}
+
+#[test]
+fn accepted_target_stop_rule_is_shard_invariant() {
+    // AcceptedTarget decisions happen at the run frontier *after* the
+    // shard merge, so the accepted set must not depend on K either.
+    let b = builder(ReturnStrategy::Outfeed { chunk: 801 });
+    let stop = StopRule::AcceptedTarget(12);
+    let want = solo_reference(&b, stop);
+    for workers in [1usize, 4] {
+        for shards in [2usize, 3, 8] {
+            let got = sharded(&b, stop, workers, shards);
+            assert_eq!(
+                got, want,
+                "AcceptedTarget diverged at {workers} workers x {shards} shards"
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_completion_interleaving_cannot_reorder_the_merge() {
+    // shards (8) > workers (3): every worker holds shards of multiple
+    // in-flight runs and the leader sees arrivals scrambled by thread
+    // timing; across repetitions the merged stream must never move.
+    let b = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let stop = StopRule::ExactRuns(4);
+    let want = solo_reference(&b, stop);
+    for repetition in 0..5 {
+        let got = sharded(&b, stop, 3, 8);
+        assert_eq!(got, want, "merge moved on repetition {repetition}");
+    }
+}
+
+#[test]
+fn sharded_job_rides_along_with_pool_mates() {
+    // one sharded job + unsharded neighbours on a shared pool: demux
+    // and shard assembly must not contaminate either side
+    let b = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let stop = StopRule::ExactRuns(4);
+    let want_sharded = solo_reference(&b, stop);
+
+    let mut neighbour = JobBuilder::new(synthetic::default_dataset(16, 0xBEEF));
+    neighbour.seed = 0xB0B;
+    let want_neighbour = {
+        let spec = neighbour.spec("n-solo", StopRule::ExactRuns(3));
+        let r = Coordinator::new(
+            native_backend(),
+            spec.config.clone(),
+            spec.dataset.clone(),
+            spec.prior.clone(),
+        )
+        .unwrap()
+        .run(spec.stop)
+        .unwrap();
+        fingerprints(&r.accepted)
+    };
+
+    let mut sb = b.clone();
+    sb.shards = 3;
+    let jobs = vec![
+        neighbour.spec("neighbour", StopRule::ExactRuns(3)),
+        sb.spec("sharded", stop),
+    ];
+    let report = Scheduler::new(native_backend(), 4).run(jobs).unwrap();
+    let got_neighbour =
+        fingerprints(&report.jobs[0].outcome.as_ref().unwrap().accepted);
+    let got_sharded = fingerprints(&report.jobs[1].outcome.as_ref().unwrap().accepted);
+    assert_eq!(got_neighbour, want_neighbour, "neighbour contaminated");
+    assert_eq!(got_sharded, want_sharded, "sharded job contaminated");
+}
+
+#[test]
+fn smc_stages_fan_over_shards_bit_identically() {
+    use abc_ipu::abc::smc::{run_smc, SmcConfig};
+
+    let ds = synthetic::default_dataset(16, 0x5eed);
+    let mut b = JobBuilder::new(ds.clone());
+    b.batch = 500;
+    b.strategy = ReturnStrategy::Outfeed { chunk: 500 };
+    b.devices = 4;
+    let smc = SmcConfig { stages: 1, samples_per_stage: 10, ..Default::default() };
+
+    let posterior_bits = |shards: usize| {
+        let mut cfg = b.config();
+        cfg.shards = shards;
+        let result = run_smc(native_backend(), cfg, ds.clone(), &smc).unwrap();
+        let bits: Vec<[u32; 8]> = result
+            .final_posterior()
+            .samples()
+            .iter()
+            .map(|s| s.theta.map(f32::to_bits))
+            .collect();
+        (result.tolerances(), bits)
+    };
+    let want = posterior_bits(1);
+    for shards in [2usize, 3] {
+        assert_eq!(posterior_bits(shards), want, "SMC diverged at {shards} shards");
+    }
+}
+
+#[test]
+fn samples_simulated_accounting_is_shard_invariant() {
+    let b = builder(ReturnStrategy::Outfeed { chunk: 801 });
+    let stop = StopRule::ExactRuns(3);
+    for shards in [1usize, 3, 8] {
+        let mut sb = b.clone();
+        sb.shards = shards;
+        let spec = sb.spec("acct", stop);
+        let report = Scheduler::new(native_backend(), 2).run(vec![spec]).unwrap();
+        let result = report.jobs.into_iter().next().unwrap().outcome.unwrap();
+        // shard ranges partition each run exactly: 3 runs x batch 801
+        assert_eq!(result.metrics.samples_simulated, 3 * 801, "shards = {shards}");
+        // per-job `runs` counts logical runs, shard-invariantly
+        assert_eq!(result.metrics.runs, 3, "shards = {shards}");
+    }
+}
+
+#[test]
+fn plan_and_env_resolution_are_sane() {
+    // env-agnostic: whatever $ABC_IPU_SHARDS is, resolution lands in
+    // [1, MAX_SHARDS] and plans always partition the batch exactly
+    assert!((1..=MAX_SHARDS).contains(&resolve_shards(0)));
+    assert!((1..=MAX_SHARDS).contains(&resolve_shards(3)));
+    let plan = ShardPlan::new(801, 8);
+    assert_eq!(plan.ranges().iter().map(|r| r.len).sum::<usize>(), 801);
+    assert_eq!(plan.range(0).lane0, 0);
+}
+
+/// BENCH_scaling.json schema smoke, alongside the CI BENCH_hot_path
+/// check: the artifact substrate must emit every field, finite
+/// overheads, and a predicted-speedup column that grows with devices
+/// for the unchunked rows (the model's Table-7 shape). Measured
+/// speedup is asserted monotone with slack — wall-clock on a shared
+/// test host is informative, not exact.
+#[test]
+fn bench_scaling_artifact_schema_and_monotonicity() {
+    let cfg = ScalingSweepConfig {
+        batch_per_device: 400,
+        days: 8,
+        runs: 2,
+        device_counts: vec![1, 2],
+        seed: 0x5eed,
+    };
+    let points = measure_scaling(&cfg).unwrap();
+    assert_eq!(points.len(), cfg.device_counts.len() * 2);
+
+    let doc = Json::parse(&scaling_json(&cfg, &points)).unwrap();
+    assert_eq!(doc.req("suite").unwrap().as_str().unwrap(), "scaling");
+    for field in ["batch_per_device", "days", "runs"] {
+        assert!(doc.req(field).unwrap().as_usize().unwrap() > 0, "{field}");
+    }
+    let table = doc.req("table").unwrap().as_arr().unwrap();
+    assert_eq!(table.len(), points.len());
+    for row in table {
+        for field in [
+            "devices",
+            "seconds",
+            "samples",
+            "samples_per_sec",
+            "speedup",
+            "overhead",
+            "predicted_speedup",
+            "predicted_overhead",
+        ] {
+            let v = row.req(field).unwrap().as_f64().unwrap();
+            assert!(v.is_finite(), "{field} not finite: {v}");
+        }
+        row.req("chunked").unwrap().as_bool().unwrap();
+        assert!(row.req("speedup").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    // unchunked rows: predicted speedup strictly monotone in devices
+    // (the hwmodel column is deterministic), measured monotone with a
+    // 25% slack against shared-host timing noise
+    let unchunked: Vec<_> = points.iter().filter(|p| !p.chunked).collect();
+    for w in unchunked.windows(2) {
+        assert!(
+            w[1].predicted_speedup > w[0].predicted_speedup,
+            "predicted speedup not monotone: {} -> {}",
+            w[0].predicted_speedup,
+            w[1].predicted_speedup
+        );
+        assert!(
+            w[1].speedup >= w[0].speedup * 0.75,
+            "measured speedup collapsed: {} -> {}",
+            w[0].speedup,
+            w[1].speedup
+        );
+        assert!(w[1].predicted_overhead.is_finite() && w[1].predicted_overhead < 0.5);
+    }
+}
