@@ -67,7 +67,7 @@ fn main() {
     // full-engine configuration whose speedup the artifact headlines).
     // Neither knob ever changes the results.
     let lane_batch = if quick { 2_000 } else { 10_000 };
-    let threads = resolve_parallelism(0);
+    let threads = resolve_parallelism(0).expect("valid $ABC_IPU_SIM_THREADS");
     let thread_axis: Vec<usize> = if threads == 1 { vec![1] } else { vec![1, threads] };
     for width in LANE_WIDTHS {
         for &t in &thread_axis {

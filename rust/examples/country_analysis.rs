@@ -112,7 +112,7 @@ fn main() -> abc_ipu::Result<()> {
         // 4. histograms (Figs 8-9)
         let mut csv = String::from("param,bin_center,count,density\n");
         for p in 0..8 {
-            let h = posterior.histogram(p, 20);
+            let h = posterior.histogram(p, 20)?;
             for (i, &c) in h.counts().iter().enumerate() {
                 csv.push_str(&format!(
                     "{},{},{},{}\n",

@@ -79,7 +79,7 @@ fn main() -> abc_ipu::Result<()> {
     );
 
     // 3. Posterior diagnostics (contraction, KS from prior, modality).
-    let report = diagnose(&posterior, &prior);
+    let report = diagnose(&posterior, &prior)?;
     print!("{}", report.to_table().render());
     println!("data-informed parameters (contraction < 0.7): {:?}",
              report.informed(0.7));

@@ -64,7 +64,9 @@ fn main() -> abc_ipu::Result<()> {
         );
     }
 
-    let posterior: &Posterior = result.final_posterior();
+    let posterior: &Posterior = result
+        .final_posterior()
+        .ok_or_else(|| Error::Coordinator("smc produced no stages".into()))?;
     println!("\nrecovery (final stage, {} samples):", posterior.len());
     println!("  {:<7} {:>9} {:>9} {:>9} {:>9}  in 5-95 band?", "param", "θ*", "mean", "p5", "p95");
     let mut well_identified_hits = 0;

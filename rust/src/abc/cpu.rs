@@ -21,6 +21,7 @@ use crate::metrics::{RunMetrics, Stopwatch};
 use crate::model::lanes::LaneEngine;
 use crate::model::Prior;
 use crate::rng::SeedSequence;
+use crate::Result;
 
 /// Result of a CPU-baseline inference.
 #[derive(Debug, Clone)]
@@ -47,13 +48,13 @@ pub fn run_until(
     target: usize,
     seed: u64,
     max_runs: u64,
-) -> CpuResult {
+) -> Result<CpuResult> {
     let days = dataset.days();
     let observed = dataset.observed.flatten();
     // engine built once (construction reads the env knobs): auto lane
     // width — width never changes results, so the oracle match with any
     // coordinator lane configuration is unconditional
-    let engine = LaneEngine::auto(dataset.initial_condition(), 0);
+    let engine = LaneEngine::auto(dataset.initial_condition(), 0)?;
     let seeds = SeedSequence::new(seed);
 
     let mut accepted = Vec::new();
@@ -64,8 +65,7 @@ pub fn run_until(
         // same key derivation as the coordinator's device workers
         let key = seeds.key(0, run);
         let sw = Stopwatch::start();
-        let out = abc_run(&engine, prior, &observed, days, batch, key)
-            .expect("cpu baseline: dataset-consistent job geometry");
+        let out = abc_run(&engine, prior, &observed, days, batch, key)?;
         for (index, &d) in out.distances.iter().enumerate() {
             if d <= tolerance {
                 accepted.push(AcceptedSample {
@@ -84,7 +84,7 @@ pub fn run_until(
     }
     metrics.samples_accepted = accepted.len() as u64;
     metrics.total = total.elapsed();
-    CpuResult { accepted, metrics }
+    Ok(CpuResult { accepted, metrics })
 }
 
 #[cfg(test)]
@@ -96,7 +96,7 @@ mod tests {
     fn accepts_target_on_synthetic_data() {
         let ds = synthetic::default_dataset(16, 0);
         let prior = Prior::paper();
-        let r = run_until(&ds, &prior, ds.default_tolerance * 50.0, 2_000, 5, 1, 0);
+        let r = run_until(&ds, &prior, ds.default_tolerance * 50.0, 2_000, 5, 1, 0).unwrap();
         assert!(r.accepted.len() >= 5);
         assert!(r.metrics.runs >= 1);
         for s in &r.accepted {
@@ -109,8 +109,8 @@ mod tests {
     fn deterministic_for_seed() {
         let ds = synthetic::default_dataset(16, 0);
         let prior = Prior::paper();
-        let a = run_until(&ds, &prior, 1e9, 100, 10, 42, 0);
-        let b = run_until(&ds, &prior, 1e9, 100, 10, 42, 0);
+        let a = run_until(&ds, &prior, 1e9, 100, 10, 42, 0).unwrap();
+        let b = run_until(&ds, &prior, 1e9, 100, 10, 42, 0).unwrap();
         assert_eq!(a.accepted.len(), b.accepted.len());
         for (x, y) in a.accepted.iter().zip(&b.accepted) {
             assert_eq!(x.theta, y.theta);
@@ -122,8 +122,8 @@ mod tests {
     fn different_seeds_decorrelate() {
         let ds = synthetic::default_dataset(16, 0);
         let prior = Prior::paper();
-        let a = run_until(&ds, &prior, 1e9, 100, 10, 42, 0);
-        let b = run_until(&ds, &prior, 1e9, 100, 10, 43, 0);
+        let a = run_until(&ds, &prior, 1e9, 100, 10, 42, 0).unwrap();
+        let b = run_until(&ds, &prior, 1e9, 100, 10, 43, 0).unwrap();
         assert_ne!(a.accepted[0].theta, b.accepted[0].theta);
     }
 
@@ -132,7 +132,7 @@ mod tests {
         let ds = synthetic::default_dataset(16, 0);
         let prior = Prior::paper();
         // impossible tolerance, bounded budget
-        let r = run_until(&ds, &prior, 1e-6, 100, 10, 0, 3);
+        let r = run_until(&ds, &prior, 1e-6, 100, 10, 0, 3).unwrap();
         assert_eq!(r.metrics.runs, 3);
         assert!(r.accepted.is_empty());
     }

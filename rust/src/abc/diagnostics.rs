@@ -11,6 +11,7 @@
 use super::Posterior;
 use crate::model::{Prior, N_PARAMS, PARAM_NAMES};
 use crate::stats::percentile;
+use crate::{Error, Result};
 
 /// Diagnostics for one parameter's marginal.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,8 +82,12 @@ pub fn pearson(xs: &[f32], ys: &[f32]) -> f64 {
 }
 
 /// Diagnose a posterior against the prior it was sampled under.
-pub fn diagnose(posterior: &Posterior, prior: &Prior) -> DiagnosticReport {
-    assert!(!posterior.is_empty(), "cannot diagnose an empty posterior");
+/// Errors (typed, not a panic) on an empty posterior — reachable from
+/// report paths whenever an inference accepted nothing.
+pub fn diagnose(posterior: &Posterior, prior: &Prior) -> Result<DiagnosticReport> {
+    if posterior.is_empty() {
+        return Err(Error::Config("cannot diagnose an empty posterior".into()));
+    }
     let marginals = (0..N_PARAMS)
         .map(|p| {
             let xs = posterior.marginal(p);
@@ -91,16 +96,16 @@ pub fn diagnose(posterior: &Posterior, prior: &Prior) -> DiagnosticReport {
             let p5 = percentile(&xs, 5.0);
             let p95 = percentile(&xs, 95.0);
             let prior_width = (hi - lo).max(f64::MIN_POSITIVE);
-            MarginalDiagnostic {
+            Ok(MarginalDiagnostic {
                 name: PARAM_NAMES[p],
                 mean: crate::stats::mean(&xs),
                 ci90: (p5, p95),
                 contraction: ((p95 - p5) / (0.9 * prior_width)).min(f64::MAX),
                 ks_from_prior: ks_against_uniform(&xs, lo, hi),
-                modes: posterior.histogram(p, 20).modes(0.5),
-            }
+                modes: posterior.histogram(p, 20)?.modes(0.5),
+            })
         })
-        .collect();
+        .collect::<Result<Vec<_>>>()?;
 
     let mut correlations = vec![0.0; N_PARAMS * N_PARAMS];
     let cols: Vec<Vec<f32>> = (0..N_PARAMS).map(|p| posterior.marginal(p)).collect();
@@ -110,7 +115,7 @@ pub fn diagnose(posterior: &Posterior, prior: &Prior) -> DiagnosticReport {
                 if i == j { 1.0 } else { pearson(&cols[i], &cols[j]) };
         }
     }
-    DiagnosticReport { marginals, correlations, samples: posterior.len() }
+    Ok(DiagnosticReport { marginals, correlations, samples: posterior.len() })
 }
 
 impl DiagnosticReport {
@@ -182,6 +187,13 @@ mod tests {
     }
 
     #[test]
+    fn empty_posterior_is_a_typed_error_not_a_panic() {
+        let err = diagnose(&Posterior::new(Vec::new()), &Prior::paper()).unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+        assert!(err.to_string().contains("empty posterior"));
+    }
+
+    #[test]
     fn ks_of_uniform_sample_is_small() {
         let mut rng = Xoshiro256::seed_from(1);
         let xs: Vec<f32> = (0..5000).map(|_| rng.uniform() as f32).collect();
@@ -208,7 +220,7 @@ mod tests {
     fn prior_shaped_posterior_shows_no_contraction() {
         let prior = Prior::paper();
         let p = posterior_from(2000, |rng| prior.sample(rng));
-        let report = diagnose(&p, &prior);
+        let report = diagnose(&p, &prior).unwrap();
         for m in &report.marginals {
             assert!(m.contraction > 0.85, "{}: {}", m.name, m.contraction);
             assert!(m.ks_from_prior < 0.05, "{}: {}", m.name, m.ks_from_prior);
@@ -225,7 +237,7 @@ mod tests {
             t[3] = t[3].clamp(0.0, 1.0);
             t
         });
-        let report = diagnose(&p, &prior);
+        let report = diagnose(&p, &prior).unwrap();
         let beta = &report.marginals[3];
         assert!(beta.contraction < 0.05, "{}", beta.contraction);
         assert!(beta.ks_from_prior > 0.8);
@@ -236,7 +248,7 @@ mod tests {
     fn correlations_symmetric_with_unit_diagonal() {
         let prior = Prior::paper();
         let p = posterior_from(500, |rng| prior.sample(rng));
-        let r = diagnose(&p, &prior);
+        let r = diagnose(&p, &prior).unwrap();
         for i in 0..N_PARAMS {
             assert_eq!(r.correlations[i * N_PARAMS + i], 1.0);
             for j in 0..N_PARAMS {
@@ -256,7 +268,7 @@ mod tests {
             t[7] = (t[1] / 50.0).clamp(0.0, 2.0);
             t
         });
-        let r = diagnose(&p, &prior);
+        let r = diagnose(&p, &prior).unwrap();
         let (i, j, c) = r.strongest_correlation();
         assert_eq!((i, j), (1, 7));
         assert!(c > 0.9);
@@ -266,7 +278,7 @@ mod tests {
     fn table_renders_all_params() {
         let prior = Prior::paper();
         let p = posterior_from(100, |rng| prior.sample(rng));
-        let t = diagnose(&p, &prior).to_table();
+        let t = diagnose(&p, &prior).unwrap().to_table();
         assert_eq!(t.len(), 8);
     }
 }

@@ -63,10 +63,11 @@ impl Posterior {
     }
 
     /// Fig 8/9-style histogram of parameter `p` over its prior range.
-    pub fn histogram(&self, p: usize, bins: usize) -> Histogram {
-        let mut h = Histogram::new(0.0, PRIOR_HIGH[p] as f64, bins);
+    /// Errors on a zero bin count (a user-reachable report knob).
+    pub fn histogram(&self, p: usize, bins: usize) -> crate::Result<Histogram> {
+        let mut h = Histogram::new(0.0, PRIOR_HIGH[p] as f64, bins)?;
         h.add_all(&self.marginal(p));
-        h
+        Ok(h)
     }
 
     /// Per-parameter [min, max] box of the samples — the SMC-ABC
@@ -131,10 +132,12 @@ mod tests {
     fn marginal_and_histogram() {
         let p = posterior();
         assert_eq!(p.marginal(1), vec![30.0, 40.0]);
-        let h = p.histogram(1, 10); // range [0, 100], bins of 10
+        let h = p.histogram(1, 10).unwrap(); // range [0, 100], bins of 10
         assert_eq!(h.counts()[3], 1);
         assert_eq!(h.counts()[4], 1);
         assert_eq!(h.outliers(), 0);
+        // zero bins surfaces the histogram's typed error
+        assert!(p.histogram(1, 0).is_err());
     }
 
     #[test]

@@ -25,6 +25,9 @@
 
 use super::Posterior;
 use crate::backend::Backend;
+use crate::checkpoint::{
+    self, CheckpointConfig, SmcScenarioSnapshot, SmcSnapshot, SmcStageSnapshot,
+};
 use crate::config::RunConfig;
 use crate::coordinator::StopRule;
 use crate::data::Dataset;
@@ -97,9 +100,13 @@ pub struct SmcResult {
 }
 
 impl SmcResult {
-    /// The final (tightest-tolerance) posterior.
-    pub fn final_posterior(&self) -> &Posterior {
-        &self.stages.last().expect("at least one stage").posterior
+    /// The final (tightest-tolerance) posterior, or `None` for an empty
+    /// stage list. Results returned by [`run_smc`] /
+    /// [`run_smc_scenarios`] always carry at least one stage, but the
+    /// struct is constructible with none — a safe accessor keeps that
+    /// from being a latent panic on anyone assembling results by hand.
+    pub fn final_posterior(&self) -> Option<&Posterior> {
+        self.stages.last().map(|s| &s.posterior)
     }
 
     /// The tolerance sequence, decreasing.
@@ -128,6 +135,40 @@ struct ScenarioState {
     stages: Vec<SmcStage>,
 }
 
+/// Tighten a stage's tolerance toward `quantile` of its accepted
+/// distances, never by less than 5 %.
+///
+/// Non-finite distances are filtered out first: `percentile` sorts NaN
+/// last under `total_cmp`, so a single NaN would silently become the
+/// high-quantile answer and `min(current * 0.95)` would then mask it as
+/// an ordinary refinement — absorbing a numerical blow-up into the
+/// schedule. If no finite distance remains, or the refined ε is not
+/// finite-positive, the study stops with a typed error instead.
+fn refine_tolerance(
+    name: &str,
+    distances: &[f32],
+    quantile: f64,
+    current: f32,
+) -> Result<f32> {
+    let finite: Vec<f32> =
+        distances.iter().copied().filter(|d| d.is_finite()).collect();
+    if finite.is_empty() {
+        return Err(Error::Coordinator(format!(
+            "smc `{name}`: no finite accepted distance to refine the \
+             tolerance from ({} samples, all non-finite)",
+            distances.len()
+        )));
+    }
+    let next = (percentile(&finite, quantile * 100.0) as f32).min(current * 0.95);
+    if !next.is_finite() || next <= 0.0 {
+        return Err(Error::Coordinator(format!(
+            "smc `{name}`: refined tolerance {next:e} is not finite-positive \
+             (current ε {current:e}, quantile {quantile})"
+        )));
+    }
+    Ok(next)
+}
+
 /// Run SMC-ABC for many scenarios, fanning every stage out across one
 /// shared pool of `workers` device workers.
 ///
@@ -137,16 +178,46 @@ struct ScenarioState {
 /// construction — stage `s+1`'s prior box and ε come from stage `s`).
 /// The first failing job (e.g. budget exhaustion) aborts the study with
 /// that job's error.
+///
+/// Checkpointing resolves from the first scenario's config (and
+/// `$ABC_IPU_CHECKPOINT`): see
+/// [`run_smc_scenarios_with_checkpoint`].
 pub fn run_smc_scenarios(
     backend: Arc<dyn Backend>,
     scenarios: &[SmcScenario],
     smc: &SmcConfig,
     workers: usize,
 ) -> Result<Vec<(String, SmcResult)>> {
+    let ckpt = match scenarios.first() {
+        Some(s) => checkpoint::resolve(&s.config)?,
+        None => None,
+    };
+    run_smc_scenarios_with_checkpoint(backend, scenarios, smc, workers, ckpt)
+}
+
+/// [`run_smc_scenarios`] with an explicit checkpoint policy.
+///
+/// With a policy set, the study writes two kinds of snapshot
+/// (DESIGN.md §10): the **study snapshot** at `ckpt.path` after every
+/// completed stage (per-scenario prior box, ε, stage records — all f32
+/// state bit-exact), and a **stage snapshot** at
+/// [`CheckpointConfig::stage_path`] while a stage's schedule is in
+/// flight. On resume, completed stages restore from the study snapshot
+/// (no work replays) and the in-flight stage resumes mid-schedule from
+/// its stage snapshot — the combined result is bit-identical to a
+/// straight-through run for any interrupt point.
+pub fn run_smc_scenarios_with_checkpoint(
+    backend: Arc<dyn Backend>,
+    scenarios: &[SmcScenario],
+    smc: &SmcConfig,
+    workers: usize,
+    ckpt: Option<CheckpointConfig>,
+) -> Result<Vec<(String, SmcResult)>> {
     if scenarios.is_empty() {
         return Err(Error::Config("smc needs at least one scenario".into()));
     }
     smc.validate()?;
+    let fingerprint = checkpoint::smc_fingerprint(scenarios, smc);
 
     let mut states: Vec<ScenarioState> = scenarios
         .iter()
@@ -157,8 +228,16 @@ pub fn run_smc_scenarios(
         })
         .collect();
 
-    let scheduler = Scheduler::new(backend, workers);
-    for stage in 0..=smc.stages {
+    // Resume: restore the refinement state of every completed stage.
+    let mut start_stage = 0usize;
+    if let Some(c) = &ckpt {
+        if c.resume && c.path.exists() {
+            let snap = SmcSnapshot::load(&c.path)?;
+            restore_study(&mut states, &mut start_stage, scenarios, fingerprint, &snap)?;
+        }
+    }
+
+    for stage in start_stage..=smc.stages {
         // Fan out: one job per scenario, all sharing the pool.
         let mut jobs = Vec::with_capacity(scenarios.len());
         for (scenario, state) in scenarios.iter().zip(&states) {
@@ -179,9 +258,26 @@ pub fn run_smc_scenarios(
                 StopRule::AcceptedTarget(smc.samples_per_stage),
             )?);
         }
+        // Stage schedules never read the job configs' checkpoint knobs:
+        // the study-level policy owns the files. With a policy set, the
+        // in-flight stage snapshots to its own sibling path and resumes
+        // from it; without one, checkpointing is off entirely.
+        let scheduler = match &ckpt {
+            Some(c) => Scheduler::new(backend.clone(), workers).with_checkpoint(
+                CheckpointConfig {
+                    path: c.stage_path(stage),
+                    interval: c.interval,
+                    resume: c.resume,
+                    interrupt_after: c.interrupt_after,
+                },
+            ),
+            None => Scheduler::new(backend.clone(), workers).without_checkpoint(),
+        };
         let report = scheduler.run(jobs)?;
 
-        for (state, job) in states.iter_mut().zip(report.jobs) {
+        for ((scenario, state), job) in
+            scenarios.iter().zip(states.iter_mut()).zip(report.jobs)
+        {
             let result = job.outcome?;
             let posterior = Posterior::new(result.accepted.clone());
             state.stages.push(SmcStage {
@@ -208,9 +304,18 @@ pub fn run_smc_scenarios(
             state.prior = Prior::new(low, high)?;
             let dists: Vec<f32> =
                 posterior.samples().iter().map(|s| s.distance).collect();
-            let next = percentile(&dists, smc.quantile * 100.0) as f32;
-            // guard: ε must strictly decrease but not collapse to zero
-            state.tolerance = next.min(state.tolerance * 0.95).max(f32::MIN_POSITIVE);
+            state.tolerance =
+                refine_tolerance(&scenario.name, &dists, smc.quantile, state.tolerance)?;
+        }
+
+        if let Some(c) = &ckpt {
+            // Persist the study state the *next* stage will start from,
+            // then drop this stage's (now redundant) schedule snapshot.
+            // Order matters for crash safety: once the study snapshot
+            // says `stages_done = stage + 1`, the stage file is never
+            // read again, so a crash between the two writes is benign.
+            study_snapshot(fingerprint, stage + 1, scenarios, &states).save(&c.path)?;
+            let _ = std::fs::remove_file(c.stage_path(stage));
         }
     }
     Ok(scenarios
@@ -218,6 +323,92 @@ pub fn run_smc_scenarios(
         .zip(states)
         .map(|(s, st)| (s.name.clone(), SmcResult { stages: st.stages }))
         .collect())
+}
+
+/// Rebuild per-scenario refinement state from a study snapshot,
+/// validating that the snapshot belongs to this exact study.
+fn restore_study(
+    states: &mut [ScenarioState],
+    start_stage: &mut usize,
+    scenarios: &[SmcScenario],
+    fingerprint: u64,
+    snap: &SmcSnapshot,
+) -> Result<()> {
+    if snap.fingerprint != fingerprint {
+        return Err(Error::Config(format!(
+            "smc checkpoint fingerprint {:016x} does not match this study \
+             ({fingerprint:016x}): different scenarios or refinement schedule",
+            snap.fingerprint
+        )));
+    }
+    if snap.scenarios.len() != scenarios.len() {
+        return Err(Error::Config(format!(
+            "smc checkpoint holds {} scenarios, study has {}",
+            snap.scenarios.len(),
+            scenarios.len()
+        )));
+    }
+    *start_stage = snap.stages_done;
+    for ((state, scenario), sc) in
+        states.iter_mut().zip(scenarios).zip(&snap.scenarios)
+    {
+        if sc.name != scenario.name {
+            return Err(Error::Config(format!(
+                "smc checkpoint scenario `{}` does not match submitted `{}`",
+                sc.name, scenario.name
+            )));
+        }
+        state.prior = Prior::new(sc.prior_low, sc.prior_high)?;
+        state.tolerance = sc.tolerance;
+        state.stages = sc
+            .stages
+            .iter()
+            .map(|st| SmcStage {
+                stage: st.stage,
+                tolerance: st.tolerance,
+                posterior: Posterior::new(st.samples.clone()),
+                prior_low: st.prior_low,
+                prior_high: st.prior_high,
+                runs: st.runs,
+            })
+            .collect();
+    }
+    Ok(())
+}
+
+/// Serialize the current refinement state of every scenario.
+fn study_snapshot(
+    fingerprint: u64,
+    stages_done: usize,
+    scenarios: &[SmcScenario],
+    states: &[ScenarioState],
+) -> SmcSnapshot {
+    SmcSnapshot {
+        fingerprint,
+        stages_done,
+        scenarios: scenarios
+            .iter()
+            .zip(states)
+            .map(|(sc, st)| SmcScenarioSnapshot {
+                name: sc.name.clone(),
+                tolerance: st.tolerance,
+                prior_low: *st.prior.low(),
+                prior_high: *st.prior.high(),
+                stages: st
+                    .stages
+                    .iter()
+                    .map(|s| SmcStageSnapshot {
+                        stage: s.stage,
+                        tolerance: s.tolerance,
+                        runs: s.runs,
+                        prior_low: s.prior_low,
+                        prior_high: s.prior_high,
+                        samples: s.posterior.samples().to_vec(),
+                    })
+                    .collect(),
+            })
+            .collect(),
+    }
 }
 
 /// Run SMC-ABC for one dataset on the parallel coordinator over any
@@ -275,6 +466,50 @@ mod tests {
     }
 
     #[test]
+    fn empty_smc_result_has_no_final_posterior() {
+        // regression: this was an `expect` panic on a hand-assembled
+        // (or deserialized) result with no stages
+        assert!(SmcResult { stages: Vec::new() }.final_posterior().is_none());
+    }
+
+    #[test]
+    fn refine_tolerance_filters_non_finite_distances() {
+        // regression: one NaN sorts last under total_cmp, so the high
+        // quantile used to *be* the NaN — and min(current * 0.95) then
+        // silently replaced it with an ordinary-looking refinement
+        let next = refine_tolerance("x", &[1.0, f32::NAN, 3.0], 1.0, 100.0).unwrap();
+        assert_eq!(next, 3.0);
+        let next = refine_tolerance("x", &[2.0, f32::INFINITY], 1.0, 100.0).unwrap();
+        assert_eq!(next, 2.0);
+    }
+
+    #[test]
+    fn refine_tolerance_errors_when_nothing_finite_remains() {
+        let err = refine_tolerance("italy", &[f32::NAN, f32::INFINITY], 0.5, 1.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("italy") && err.contains("finite"), "{err}");
+        assert!(matches!(
+            refine_tolerance("italy", &[], 0.5, 1.0).unwrap_err(),
+            Error::Coordinator(_)
+        ));
+    }
+
+    #[test]
+    fn refine_tolerance_rejects_collapse_to_non_positive() {
+        let err = refine_tolerance("x", &[0.0, 0.0], 1.0, 1.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("finite-positive"), "{err}");
+    }
+
+    #[test]
+    fn refine_tolerance_always_tightens_by_at_least_five_percent() {
+        assert_eq!(refine_tolerance("x", &[99.0], 1.0, 100.0).unwrap(), 95.0);
+        assert_eq!(refine_tolerance("x", &[10.0], 1.0, 100.0).unwrap(), 10.0);
+    }
+
+    #[test]
     fn default_schedule_sane() {
         let smc = SmcConfig::default();
         assert!(smc.stages >= 1);
@@ -290,7 +525,7 @@ mod tests {
         let smc = SmcConfig { stages: 0, samples_per_stage: 8, ..Default::default() };
         let result = run_smc(native(), cfg, ds, &smc).unwrap();
         assert_eq!(result.stages.len(), 1);
-        assert!(result.final_posterior().len() >= 8);
+        assert!(result.final_posterior().expect("one stage").len() >= 8);
     }
 
     #[test]
@@ -325,12 +560,14 @@ mod tests {
             assert_eq!(fanned_result.tolerances(), solo.tolerances(), "{name}");
             let f: Vec<[u32; 8]> = fanned_result
                 .final_posterior()
+                .expect("stages present")
                 .samples()
                 .iter()
                 .map(|s| s.theta.map(f32::to_bits))
                 .collect();
             let s: Vec<[u32; 8]> = solo
                 .final_posterior()
+                .expect("stages present")
                 .samples()
                 .iter()
                 .map(|s| s.theta.map(f32::to_bits))

@@ -137,7 +137,7 @@ impl Backend for NativeBackend {
     fn open_engine(&self, _device: u32, job: &AbcJob) -> Result<Box<dyn AbcEngine>> {
         job.validate()?;
         Ok(Box::new(NativeEngine {
-            engine: LaneEngine::auto(initial_condition(&job.consts), job.lanes),
+            engine: LaneEngine::auto(initial_condition(&job.consts), job.lanes)?,
             prior: Prior::new(job.prior_low, job.prior_high)?,
             observed: job.observed.clone(),
             days: job.days,

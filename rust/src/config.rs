@@ -71,6 +71,20 @@ pub struct RunConfig {
     /// way; clamped to the batch). Performance-only: the merged result
     /// is bit-identical for every shard count (DESIGN.md §9).
     pub shards: usize,
+    /// Crash-safe checkpoint file (`None` = checkpointing off;
+    /// `$ABC_IPU_CHECKPOINT` overrides either way, empty = off). The
+    /// leader snapshots run-frontier state here and `resume` restores
+    /// it with bit-identical replay (DESIGN.md §10).
+    pub checkpoint: Option<String>,
+    /// Snapshot cadence: write after this many frontier-finalized runs
+    /// (≥ 1; values of 0 are treated as 1). Each snapshot serializes
+    /// the full accepted stream, so long jobs accumulating many
+    /// thousands of samples should raise this above the default of 1 to
+    /// keep leader-side snapshot cost off the per-run path.
+    pub checkpoint_interval: u64,
+    /// Resume from an existing checkpoint file instead of starting
+    /// fresh (`--resume`). Ignored when no checkpoint path is set.
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -88,6 +102,9 @@ impl Default for RunConfig {
             max_runs: 0,
             lanes: 0,
             shards: 0,
+            checkpoint: None,
+            checkpoint_interval: 1,
+            resume: false,
         }
     }
 }
@@ -190,6 +207,18 @@ impl RunConfig {
         if let Some(n) = v.get("shards") {
             cfg.shards = n.as_usize()?;
         }
+        if let Some(c) = v.get("checkpoint") {
+            cfg.checkpoint = match c {
+                Json::Null => None,
+                other => Some(other.as_str()?.to_string()),
+            };
+        }
+        if let Some(n) = v.get("checkpoint_interval") {
+            cfg.checkpoint_interval = n.as_u64()?;
+        }
+        if let Some(b) = v.get("resume") {
+            cfg.resume = b.as_bool()?;
+        }
         if let Some(rs) = v.get("return_strategy") {
             let mode = rs.req("mode")?.as_str()?;
             cfg.return_strategy = match mode {
@@ -234,6 +263,18 @@ impl RunConfig {
         m.insert("max_runs".into(), Json::Num(self.max_runs as f64));
         m.insert("lanes".into(), Json::Num(self.lanes as f64));
         m.insert("shards".into(), Json::Num(self.shards as f64));
+        m.insert(
+            "checkpoint".into(),
+            match &self.checkpoint {
+                Some(p) => Json::Str(p.clone()),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "checkpoint_interval".into(),
+            Json::Num(self.checkpoint_interval as f64),
+        );
+        m.insert("resume".into(), Json::Bool(self.resume));
         let mut rs = BTreeMap::new();
         match self.return_strategy {
             ReturnStrategy::Outfeed { chunk } => {
@@ -452,6 +493,26 @@ mod tests {
         let cfg = RunConfig::default();
         let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn checkpoint_knobs_default_parse_and_round_trip() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.checkpoint, None);
+        assert_eq!(cfg.checkpoint_interval, 1);
+        assert!(!cfg.resume);
+        let cfg = RunConfig::from_json(
+            r#"{"checkpoint": "run/ckpt.json", "checkpoint_interval": 5, "resume": true}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint.as_deref(), Some("run/ckpt.json"));
+        assert_eq!(cfg.checkpoint_interval, 5);
+        assert!(cfg.resume);
+        let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed, cfg);
+        // explicit null disables
+        let cfg = RunConfig::from_json(r#"{"checkpoint": null}"#).unwrap();
+        assert_eq!(cfg.checkpoint, None);
     }
 
     #[test]

@@ -87,15 +87,16 @@ pub(crate) struct JobContext {
 impl JobContext {
     /// Bind a context, resolving the effective shard count from the
     /// job's requested value (`$ABC_IPU_SHARDS` wins; clamped to the
-    /// batch — same knob discipline as the lane width).
+    /// batch — same knob discipline as the lane width). Errors if the
+    /// environment override is malformed.
     pub fn new(
         job: AbcJob,
         tolerance: f32,
         strategy: ReturnStrategy,
         seeds: SeedSequence,
-    ) -> Self {
-        let plan = ShardPlan::new(job.batch, resolve_shards(job.shards));
-        Self { job, tolerance, strategy, seeds, plan }
+    ) -> Result<Self> {
+        let plan = ShardPlan::new(job.batch, resolve_shards(job.shards)?);
+        Ok(Self { job, tolerance, strategy, seeds, plan })
     }
 
     /// Effective shard count K of this job.
@@ -229,7 +230,8 @@ mod tests {
             ds.default_tolerance * 10.0,
             ReturnStrategy::Outfeed { chunk: 16 },
             SeedSequence::new(42),
-        );
+        )
+        .unwrap();
         let backend = NativeBackend::new();
         let mut e1 = backend.open_engine(0, &ctx.job).unwrap();
         let mut e2 = backend.open_engine(9, &ctx.job).unwrap();
@@ -249,7 +251,7 @@ mod tests {
         let tolerance = ds.default_tolerance * 10.0;
         let strategy = ReturnStrategy::Outfeed { chunk: 16 };
         let mut ctx =
-            JobContext::new(job, tolerance, strategy, SeedSequence::new(42));
+            JobContext::new(job, tolerance, strategy, SeedSequence::new(42)).unwrap();
         // pin K=3 regardless of the $ABC_IPU_SHARDS environment, so the
         // assertion below is stable under the CI shard matrix
         ctx.plan = ShardPlan::new(ctx.job.batch, 3);

@@ -10,6 +10,14 @@
 //! contiguous lane ranges executed concurrently across those workers —
 //! single-job data parallelism with a bit-identical merged result
 //! ([`crate::scheduler::shard`], DESIGN.md §9).
+//!
+//! **Crash safety.** With `config.checkpoint` set (or
+//! `$ABC_IPU_CHECKPOINT`), the scheduler the leader submits to
+//! snapshots the job's run-frontier state at the configured interval;
+//! `config.resume` restores it, and the resumed accepted stream is
+//! bit-identical to an uninterrupted run
+//! ([`crate::checkpoint`], DESIGN.md §10). The restored frontier is
+//! reported in [`RunMetrics::resumed_runs`].
 
 use super::AcceptedSample;
 use crate::backend::{Backend, NativeBackend};
@@ -125,6 +133,10 @@ impl Coordinator {
 
     /// Run the inference job until `stop` is satisfied: a single-job
     /// schedule over a pool of `config.devices` workers.
+    ///
+    /// Checkpoint/resume follows `config.checkpoint` /
+    /// `config.resume` / `$ABC_IPU_CHECKPOINT` (the scheduler resolves
+    /// them — see [`crate::checkpoint`]).
     pub fn run(&self, stop: StopRule) -> Result<InferenceResult> {
         let job = JobSpec::new(
             self.dataset.name.clone(),

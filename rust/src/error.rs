@@ -33,6 +33,14 @@ pub enum Error {
     /// The analytical hardware model cannot produce a prediction
     /// (e.g. a per-device workload that overflows device memory).
     HwModel(String),
+    /// A schedule was deliberately interrupted (the simulated-crash
+    /// test/CI knob, `CheckpointConfig::interrupt_after`) after this
+    /// many newly finalized runs; the on-disk checkpoint, if one was
+    /// configured, allows a bit-identical resume.
+    Interrupted {
+        /// Runs finalized by this invocation before the interrupt.
+        runs: u64,
+    },
 }
 
 impl fmt::Display for Error {
@@ -51,6 +59,12 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::HwModel(m) => write!(f, "hardware model error: {m}"),
+            Error::Interrupted { runs } => write!(
+                f,
+                "schedule interrupted (simulated crash) after {runs} newly \
+                 finalized runs; rerun with --resume to continue from the \
+                 checkpoint"
+            ),
         }
     }
 }

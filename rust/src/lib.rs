@@ -34,6 +34,7 @@
 //! | `runtime` (feature `pjrt`) | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | parallel ABC engine: leader, device workers, outfeed, top-k |
 //! | [`scheduler`] | multi-scenario scheduler: many ABC jobs on one shared worker pool; single-job sharding (`scheduler::shard`) fans one job across it |
+//! | [`checkpoint`] | crash-safe snapshot/resume of run-frontier state with bit-identical deterministic replay |
 //! | [`abc`] | ABC/SMC-ABC algorithm layer: tolerances, posterior store, prediction |
 //! | [`model`] | pure-Rust reference simulator (CPU baseline + validation oracle) |
 //! | [`data`] | JHU-format loader, embedded country series, synthetic generator |
@@ -46,6 +47,7 @@
 
 pub mod abc;
 pub mod backend;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;

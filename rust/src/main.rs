@@ -67,6 +67,11 @@ infer flags:  --dataset NAME --tolerance F --samples N --devices N
               lane ranges across the worker pool, 0 = solo; results are
               shard-invariant) --config FILE (JSON RunConfig; CLI flags
               override)
+resume flags: --checkpoint FILE (crash-safe frontier snapshots; or
+              $ABC_IPU_CHECKPOINT) --checkpoint-interval N (snapshot
+              every N finalized runs, default 1) --resume (continue from
+              the snapshot; the resumed result is bit-identical to an
+              uninterrupted run)
 scale flags:  --device-counts N,N,...  --sharded (scale ONE sharded job
               across the pool — the measured Table-7 mode)
 ";
@@ -75,7 +80,11 @@ scale flags:  --device-counts N,N,...  --sharded (scale ONE sharded job
 const INFER_FLAGS: &[&str] = &[
     "artifacts", "reports", "backend", "dataset", "tolerance", "samples", "devices", "batch",
     "days", "chunk", "top-k", "seed", "max-runs", "lanes", "shards", "config",
+    "checkpoint", "checkpoint-interval",
 ];
+
+/// Boolean flags shared by the commands that run resumable jobs.
+const RESUME_BOOLS: &[&str] = &["resume"];
 
 fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
     let mut cfg = match a.get("config") {
@@ -102,6 +111,14 @@ fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
     cfg.max_runs = a.parse_or("max-runs", cfg.max_runs)?;
     cfg.lanes = a.parse_or("lanes", cfg.lanes)?;
     cfg.shards = a.parse_or("shards", cfg.shards)?;
+    if let Some(path) = a.get("checkpoint") {
+        // --checkpoint "" disables a config-file checkpoint
+        cfg.checkpoint = (!path.is_empty()).then(|| path.to_string());
+    }
+    cfg.checkpoint_interval = a.parse_or("checkpoint-interval", cfg.checkpoint_interval)?;
+    if a.has("resume") {
+        cfg.resume = true;
+    }
     if let Some(k) = a.parse_opt::<usize>("top-k")? {
         cfg.return_strategy = ReturnStrategy::TopK { k };
     } else if let Some(chunk) = a.parse_opt::<usize>("chunk")? {
@@ -149,6 +166,13 @@ fn backend_from_flag(a: &ParsedArgs) -> Result<Arc<dyn Backend>> {
 fn print_result(result: &abc_ipu::coordinator::InferenceResult) {
     let m = &result.metrics;
     let post = Posterior::new(result.accepted.clone());
+    if m.resumed_runs > 0 {
+        println!(
+            "resumed from checkpoint at run frontier {} (runs 0..{} restored, \
+             not re-executed)",
+            m.resumed_runs, m.resumed_runs
+        );
+    }
     println!(
         "accepted {} samples in {} ({} runs, {} simulated, acceptance {:.2e})",
         post.len(),
@@ -224,7 +248,7 @@ fn parse(argv: Vec<String>, values: &[&'static str], bools: &[&'static str])
 }
 
 fn cmd_infer(argv: Vec<String>) -> Result<()> {
-    let a = parse(argv, INFER_FLAGS, &[])?;
+    let a = parse(argv, INFER_FLAGS, RESUME_BOOLS)?;
     let cfg = infer_config(&a)?;
     let ds = load_dataset(&cfg.dataset, cfg.days)?;
     let samples = cfg.accepted_samples;
@@ -274,7 +298,7 @@ fn cmd_table1(argv: Vec<String>) -> Result<()> {
         samples.min(10),
         7,
         50,
-    );
+    )?;
 
     let mut t = Table::new(
         "Table 1 (measured on this host + projected via hwmodel)",
@@ -618,7 +642,7 @@ fn cmd_countries(argv: Vec<String>) -> Result<()> {
         write_csv(&reports, &format!("fig7_{}", ds.name), &pred.to_csv())?;
         let mut csv = String::from("param,bin_center,count,density\n");
         for p in 0..8 {
-            let h = post.histogram(p, 20);
+            let h = post.histogram(p, 20)?;
             for (i, &c) in h.counts().iter().enumerate() {
                 csv.push_str(&format!(
                     "{},{},{},{}\n",
@@ -693,7 +717,7 @@ fn cmd_autotune(argv: Vec<String>) -> Result<()> {
 fn cmd_smc(argv: Vec<String>) -> Result<()> {
     let mut flags = INFER_FLAGS.to_vec();
     flags.push("stages");
-    let a = parse(argv, &flags, &[])?;
+    let a = parse(argv, &flags, RESUME_BOOLS)?;
     let cfg = infer_config(&a)?;
     let stages: usize = a.parse_or("stages", 3)?;
     let ds = load_dataset(&cfg.dataset, cfg.days)?;

@@ -58,6 +58,12 @@ pub struct RunMetrics {
     pub transfers: u64,
     /// Chunks skipped because they contained no accepted sample.
     pub transfers_skipped: u64,
+    /// Run frontier this job was restored from when the schedule
+    /// resumed from a checkpoint (`crate::checkpoint`, DESIGN.md §10);
+    /// `0` for a fresh start. Runs `< resumed_runs` were finalized by a
+    /// previous invocation — their samples are in the result, but their
+    /// wall-clock is not in this invocation's `total`.
+    pub resumed_runs: u64,
 }
 
 impl RunMetrics {
@@ -101,7 +107,9 @@ impl RunMetrics {
     }
 
     /// Merge another device/job's metrics into this one (durations add;
-    /// `total` takes the max since devices run concurrently).
+    /// `total` and `resumed_runs` take the max — devices run
+    /// concurrently, and a merged report resumes from the furthest
+    /// restored frontier).
     pub fn merge(&mut self, other: &RunMetrics) {
         self.runs += other.runs;
         self.samples_simulated += other.samples_simulated;
@@ -112,6 +120,7 @@ impl RunMetrics {
         self.bytes_to_host += other.bytes_to_host;
         self.transfers += other.transfers;
         self.transfers_skipped += other.transfers_skipped;
+        self.resumed_runs = self.resumed_runs.max(other.resumed_runs);
     }
 }
 
@@ -167,6 +176,15 @@ mod tests {
         assert_eq!(a.total, Duration::from_secs(3));
         assert_eq!(a.device_exec, Duration::from_secs(3));
         assert_eq!(a.bytes_to_host, 128);
+    }
+
+    #[test]
+    fn merge_takes_the_furthest_resume_frontier() {
+        let mut a = RunMetrics { resumed_runs: 2, ..Default::default() };
+        a.merge(&RunMetrics { resumed_runs: 7, ..Default::default() });
+        assert_eq!(a.resumed_runs, 7);
+        a.merge(&RunMetrics::default());
+        assert_eq!(a.resumed_runs, 7);
     }
 
     #[test]

@@ -36,6 +36,16 @@
 //! stream is bit-identical to the solo run for any `K`, any pool size
 //! and any completion order (pinned by `tests/prop_shards.rs`).
 //!
+//! **Crash safety.** With a checkpoint policy
+//! ([`Scheduler::with_checkpoint`], or the first job's
+//! `RunConfig::checkpoint` / `$ABC_IPU_CHECKPOINT`), the leader
+//! persists every job's run-frontier state at a configurable cadence
+//! and a resumed schedule re-issues exactly the lost `(run, shard)`
+//! work items — the resumed merged stream is bit-identical to an
+//! uninterrupted run for any pool geometry or interrupt point
+//! ([`crate::checkpoint`], DESIGN.md §10, pinned by
+//! `tests/prop_checkpoint.rs`).
+//!
 //! Stop rules are decided at the frontier:
 //! * [`StopRule::ExactRuns`]`(r)` — exactly runs `0..r` are issued and
 //!   kept.
@@ -51,6 +61,9 @@ mod pool;
 pub mod shard;
 
 use crate::backend::{AbcJob, Backend, NativeBackend};
+use crate::checkpoint::{
+    self, AssemblySnapshot, CheckpointConfig, JobSnapshot, ScheduleSnapshot,
+};
 use crate::config::{ReturnStrategy, RunConfig, ScenarioConfig};
 use crate::coordinator::device::JobContext;
 use crate::coordinator::{filter_transfer, AcceptedSample, InferenceResult, StopRule, Transfer};
@@ -59,7 +72,7 @@ use crate::metrics::{RunMetrics, Stopwatch};
 use crate::model::Prior;
 use crate::rng::SeedSequence;
 use crate::{Error, Result};
-use pool::{pool_worker_main, Dispatcher, PoolMessage, PoolWorkerSpec};
+use pool::{pool_worker_main, Dispatcher, JobSlotInit, PoolMessage, PoolWorkerSpec};
 use shard::{merge_shard_transfers, ShardPlan};
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc};
@@ -134,8 +147,8 @@ impl JobSpec {
     /// The shared per-work-item context of this job. The effective
     /// shard count is resolved here (`$ABC_IPU_SHARDS` over
     /// `config.shards`, clamped to the batch) so dispatcher and leader
-    /// agree on one plan.
-    fn context(&self) -> JobContext {
+    /// agree on one plan; a malformed override is a typed error.
+    fn context(&self) -> Result<JobContext> {
         let cfg = &self.config;
         let truncated = self.dataset.truncated(cfg.days);
         JobContext::new(
@@ -254,18 +267,52 @@ struct JobProgress {
     finished_at: Option<Duration>,
 }
 
+/// Where a schedule's checkpoint policy comes from.
+#[derive(Debug, Clone)]
+enum CheckpointPolicy {
+    /// Resolve from the first job's `RunConfig` (and the
+    /// `$ABC_IPU_CHECKPOINT` override) at `run` time — the default, so
+    /// `Coordinator::run` and `repro infer --checkpoint` work without
+    /// extra plumbing.
+    FromJobConfig,
+    /// Never checkpoint, regardless of job configs (used by SMC stage
+    /// schedules, whose checkpointing is orchestrated one level up).
+    Disabled,
+    /// Use exactly this policy.
+    Explicit(CheckpointConfig),
+}
+
 /// The multi-job inference scheduler: a shared pool of `workers`
 /// backend device workers serving any number of jobs.
 #[derive(Debug, Clone)]
 pub struct Scheduler {
     backend: Arc<dyn Backend>,
     workers: usize,
+    checkpoint: CheckpointPolicy,
 }
 
 impl Scheduler {
     /// A scheduler over `workers` pool workers on `backend`.
     pub fn new(backend: Arc<dyn Backend>, workers: usize) -> Self {
-        Self { backend, workers: workers.max(1) }
+        Self {
+            backend,
+            workers: workers.max(1),
+            checkpoint: CheckpointPolicy::FromJobConfig,
+        }
+    }
+
+    /// Pin an explicit checkpoint policy, overriding whatever the job
+    /// configs request (see [`crate::checkpoint`], DESIGN.md §10).
+    pub fn with_checkpoint(mut self, ckpt: CheckpointConfig) -> Self {
+        self.checkpoint = CheckpointPolicy::Explicit(ckpt);
+        self
+    }
+
+    /// Disable checkpointing regardless of job configs (SMC stage
+    /// schedules use this: the study-level checkpoint owns the files).
+    pub fn without_checkpoint(mut self) -> Self {
+        self.checkpoint = CheckpointPolicy::Disabled;
+        self
     }
 
     /// Convenience: a scheduler on the dependency-free native backend.
@@ -296,21 +343,51 @@ impl Scheduler {
     /// Run `jobs` to completion on the shared pool.
     ///
     /// Returns `Err` only for pool-level failures (no jobs, invalid
-    /// specs, a worker thread lost); per-job failures land in the
-    /// matching [`JobRun::outcome`].
+    /// specs, a worker thread lost, a checkpoint that cannot be
+    /// written/restored, or a deliberate [`Error::Interrupted`]);
+    /// per-job failures land in the matching [`JobRun::outcome`].
+    ///
+    /// With a checkpoint policy in effect (explicit, or resolved from
+    /// the first job's config / `$ABC_IPU_CHECKPOINT`), the leader
+    /// snapshots every job's run-frontier state at the configured
+    /// frontier interval and once at completion; with `resume` set and
+    /// a snapshot present, jobs restore their frontier and the
+    /// dispatcher re-issues exactly the work the snapshot does not
+    /// hold. Because every sample is a pure function of
+    /// `(job, key, lane)`, the resumed merged stream is bit-identical
+    /// to an uninterrupted run for any pool size, shard count or
+    /// interrupt point (`tests/prop_checkpoint.rs`, DESIGN.md §10).
     pub fn run(&self, jobs: Vec<JobSpec>) -> Result<ScheduleReport> {
         if jobs.is_empty() {
             return Err(Error::Config("scheduler needs at least one job".into()));
         }
+        let ckpt = match &self.checkpoint {
+            CheckpointPolicy::Explicit(c) => Some(c.clone()),
+            CheckpointPolicy::Disabled => None,
+            CheckpointPolicy::FromJobConfig => checkpoint::resolve(&jobs[0].config)?,
+        };
+        let fingerprint = if ckpt.is_some() {
+            checkpoint::schedule_fingerprint(&jobs)
+        } else {
+            0
+        };
+        let restored: Option<ScheduleSnapshot> = match &ckpt {
+            Some(c) if c.resume && c.path.exists() => {
+                let snap = ScheduleSnapshot::load(&c.path)?;
+                snap.validate_for(&jobs)?;
+                Some(snap)
+            }
+            _ => None,
+        };
         let total_sw = Stopwatch::start();
 
         let mut progress: Vec<JobProgress> = Vec::with_capacity(jobs.len());
-        let mut slots: Vec<(Arc<JobContext>, Option<u64>)> = Vec::with_capacity(jobs.len());
-        for spec in &jobs {
+        let mut slots: Vec<JobSlotInit> = Vec::with_capacity(jobs.len());
+        for (i, spec) in jobs.iter().enumerate() {
             spec.validate()?;
             let budget = spec.issue_budget();
-            let ctx = Arc::new(spec.context());
-            progress.push(JobProgress {
+            let ctx = Arc::new(spec.context()?);
+            let mut p = JobProgress {
                 name: spec.name.clone(),
                 tolerance: spec.tolerance(),
                 stop: spec.stop,
@@ -327,14 +404,20 @@ impl Scheduler {
                 done: matches!(spec.stop, StopRule::ExactRuns(0)),
                 failed: None,
                 finished_at: None,
-            });
-            slots.push((ctx, budget));
+            };
+            let mut init = JobSlotInit::fresh(ctx, budget);
+            if let Some(snap) = &restored {
+                // `validate_for` pinned the job count, so indexing holds.
+                restore_job(&mut p, &mut init, &snap.jobs[i]);
+            }
+            progress.push(p);
+            slots.push(init);
         }
 
         let dispatcher = Arc::new(Dispatcher::new(slots));
-        // ExactRuns(0) jobs are complete before any work exists (their
-        // budget of Some(0) already issues nothing); decide them now so
-        // the schedule can terminate without waiting for reports.
+        // Jobs decided before any work exists — ExactRuns(0), or restored
+        // already-complete/already-exhausted frontiers — are finished now
+        // so the schedule can terminate without waiting for reports.
         let mut open_jobs = 0usize;
         for (i, p) in progress.iter_mut().enumerate() {
             if p.done {
@@ -361,7 +444,14 @@ impl Scheduler {
         }
         drop(tx); // leader keeps only rx; channel closes when workers exit
 
-        for msg in rx.iter() {
+        // Checkpoint cadence state: runs finalized since the last
+        // snapshot write, and runs finalized by *this* invocation (the
+        // interrupt_after clock — a resumed invocation counts from 0).
+        let mut runs_since_snapshot = 0u64;
+        let mut invocation_finalized = 0u64;
+        let mut abort: Option<Error> = None;
+
+        'messages: for msg in rx.iter() {
             // Normalize both message kinds into a per-run outcome, then
             // absorb outcomes strictly in run order at the frontier —
             // success *and* failure are decided deterministically. A
@@ -453,6 +543,7 @@ impl Scheduler {
 
             let p = progress.get_mut(job_id as usize).expect("job id checked above");
             p.pending.insert(run, outcome);
+            let mut finalized_now = 0u64;
             while !p.done {
                 let Some(next) = p.pending.remove(&p.frontier) else { break };
                 let run_samples = match next {
@@ -470,6 +561,7 @@ impl Scheduler {
                 p.accepted.extend(run_samples);
                 p.frontier += 1;
                 p.metrics.runs += 1;
+                finalized_now += 1;
                 match p.stop {
                     StopRule::ExactRuns(r) => {
                         if p.frontier >= r {
@@ -480,15 +572,13 @@ impl Scheduler {
                         if p.accepted.len() >= target {
                             p.done = true;
                         } else if p.budget.map_or(false, |b| p.frontier >= b) {
-                            p.failed = Some(Error::Coordinator(format!(
-                                "job `{}`: run budget {} exhausted with only \
-                                 {}/{} accepted samples (tolerance {} too tight?)",
-                                p.name,
-                                p.budget.unwrap_or(0),
+                            p.failed = Some(budget_exhausted(
+                                &p.name,
+                                p.budget,
                                 p.accepted.len(),
                                 target,
-                                p.tolerance
-                            )));
+                                p.tolerance,
+                            ));
                             p.done = true;
                         }
                     }
@@ -502,14 +592,59 @@ impl Scheduler {
                     dispatcher.shutdown();
                 }
             }
+
+            // Checkpoint hooks, after the per-job borrow is released:
+            // interval snapshot of the whole schedule's frontier state,
+            // then the simulated-crash knob — deliberately *without* a
+            // forced snapshot, so resume exercises re-execution of the
+            // runs between the last interval write and the "crash".
+            if finalized_now > 0 {
+                if let Some(c) = &ckpt {
+                    runs_since_snapshot += finalized_now;
+                    invocation_finalized += finalized_now;
+                    if runs_since_snapshot >= c.interval {
+                        if let Err(e) =
+                            snapshot_of(fingerprint, &progress).save(&c.path)
+                        {
+                            abort = Some(e);
+                            dispatcher.shutdown();
+                            break 'messages;
+                        }
+                        runs_since_snapshot = 0;
+                    }
+                    if c.interrupt_after.map_or(false, |n| invocation_finalized >= n) {
+                        abort = Some(Error::Interrupted { runs: invocation_finalized });
+                        dispatcher.shutdown();
+                        break 'messages;
+                    }
+                }
+            }
         }
 
+        drop(rx); // unblock any worker mid-send after an abort
         let mut pool_metrics = RunMetrics::default();
         for handle in handles {
             let worker_metrics = handle
                 .join()
                 .map_err(|_| Error::Coordinator("pool worker thread lost".into()))?;
             pool_metrics.merge(&worker_metrics);
+        }
+        if let Some(e) = abort {
+            return Err(e);
+        }
+        if let Some(c) = &ckpt {
+            // Final snapshot: marks every job's frontier complete, so a
+            // later resume of a finished schedule replays no work at
+            // all. A write failure here must NOT discard the completed
+            // in-memory results — the stale interval snapshot on disk
+            // still resumes bit-identically, so warn and return.
+            if let Err(e) = snapshot_of(fingerprint, &progress).save(&c.path) {
+                eprintln!(
+                    "warning: final checkpoint write to {} failed ({e}); \
+                     results are returned, the previous snapshot remains valid",
+                    c.path.display()
+                );
+            }
         }
 
         let wall = total_sw.elapsed();
@@ -540,6 +675,109 @@ impl Scheduler {
             .collect();
 
         Ok(ScheduleReport { jobs: jobs_out, wall, pool_metrics })
+    }
+}
+
+/// The deterministic budget-exhaustion failure of an
+/// [`StopRule::AcceptedTarget`] job — produced identically whether the
+/// exhausted frontier is reached live or restored from a checkpoint.
+fn budget_exhausted(
+    name: &str,
+    budget: Option<u64>,
+    accepted: usize,
+    target: usize,
+    tolerance: f32,
+) -> Error {
+    Error::Coordinator(format!(
+        "job `{name}`: run budget {} exhausted with only \
+         {accepted}/{target} accepted samples (tolerance {tolerance} too tight?)",
+        budget.unwrap_or(0),
+    ))
+}
+
+/// Restore one job's frontier state from its snapshot: accepted stream,
+/// counters, partially-assembled sharded runs (whose present shards the
+/// dispatcher must not re-issue), and a deterministic replay of the
+/// stop-rule decision over the restored state.
+fn restore_job(p: &mut JobProgress, init: &mut JobSlotInit, snap: &JobSnapshot) {
+    p.frontier = snap.frontier;
+    p.accepted = snap.accepted.clone();
+    p.metrics = snap.metrics.clone();
+    p.metrics.resumed_runs = snap.frontier;
+    init.start_run = snap.frontier;
+    // Replay the stop rule over the restored frontier — the same
+    // decisions the frontier loop would have made live, so a restored
+    // complete (or budget-exhausted) job never waits for work.
+    match p.stop {
+        StopRule::ExactRuns(r) => {
+            p.done = p.frontier >= r;
+        }
+        StopRule::AcceptedTarget(target) => {
+            if p.accepted.len() >= target {
+                p.done = true;
+            } else if p.budget.map_or(false, |b| p.frontier >= b) {
+                p.failed = Some(budget_exhausted(
+                    &p.name,
+                    p.budget,
+                    p.accepted.len(),
+                    target,
+                    p.tolerance,
+                ));
+                p.done = true;
+            }
+        }
+    }
+    if p.done {
+        return; // leftover assemblies of overshoot runs are irrelevant
+    }
+    for a in &snap.assemblies {
+        // An assembly is only usable if it matches the resumed shard
+        // plan (resuming under a different $ABC_IPU_SHARDS changes K)
+        // and belongs to an unfinalized run; otherwise drop it and let
+        // the run re-execute — bit-identical either way.
+        if a.run < p.frontier || a.parts.len() != p.shards as usize {
+            continue;
+        }
+        let mut assembly = RunAssembly::new(p.shards);
+        for (shard, part) in a.parts.iter().enumerate() {
+            if let Some((device, transfer)) = part {
+                assembly.parts[shard] = Some((*device, transfer.clone()));
+                assembly.received += 1;
+                init.held.insert((a.run, shard as u32));
+            }
+        }
+        // A fully-received assembly would never have been saved (the
+        // leader merges it immediately); treat one defensively as
+        // absent so the run re-executes rather than double-merges.
+        if assembly.received > 0 && assembly.received < p.shards {
+            p.assembling.insert(a.run, assembly);
+        } else {
+            for shard in 0..p.shards {
+                init.held.remove(&(a.run, shard));
+            }
+        }
+    }
+}
+
+/// Serialize the schedule's current frontier state (every job) into a
+/// durable snapshot.
+fn snapshot_of(fingerprint: u64, progress: &[JobProgress]) -> ScheduleSnapshot {
+    ScheduleSnapshot {
+        fingerprint,
+        jobs: progress
+            .iter()
+            .map(|p| JobSnapshot {
+                name: p.name.clone(),
+                frontier: p.frontier,
+                accepted: p.accepted.clone(),
+                metrics: p.metrics.clone(),
+                assemblies: p
+                    .assembling
+                    .iter()
+                    .map(|(run, a)| AssemblySnapshot { run: *run, parts: a.parts.clone() })
+                    .collect(),
+            })
+            .collect(),
     }
 }
 

@@ -23,7 +23,7 @@ use crate::coordinator::device::{execute_work, JobContext};
 use crate::coordinator::DeviceReport;
 use crate::metrics::{RunMetrics, Stopwatch};
 use crate::Error;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 
 /// One unit of work: execute shard `shard` of job `job`'s run `run`.
@@ -37,6 +37,30 @@ pub(crate) struct WorkItem {
     pub shard: u32,
     /// Shared job context (engine definition, ε, strategy, seeds, plan).
     pub ctx: Arc<JobContext>,
+}
+
+/// Initial issuing state of one job slot — plain data so the scheduler
+/// leader can describe both a fresh job (start at run 0, nothing held)
+/// and a checkpoint-resumed one (start at the restored frontier,
+/// skipping `(run, shard)` items whose transfers the snapshot already
+/// holds — the fault-tolerance re-issue path, DESIGN.md §10).
+pub(crate) struct JobSlotInit {
+    /// Shared job context.
+    pub ctx: Arc<JobContext>,
+    /// Hard cap on issued runs (`None` = issue until finished).
+    pub budget: Option<u64>,
+    /// First run index to issue (the restored frontier; 0 when fresh).
+    pub start_run: u64,
+    /// `(run, shard)` work items that must *not* be issued because
+    /// their transfers were restored from the snapshot.
+    pub held: BTreeSet<(u64, u32)>,
+}
+
+impl JobSlotInit {
+    /// A fresh (non-resumed) slot.
+    pub fn fresh(ctx: Arc<JobContext>, budget: Option<u64>) -> Self {
+        Self { ctx, budget, start_run: 0, held: BTreeSet::new() }
+    }
 }
 
 /// Per-job issuing state inside the dispatcher.
@@ -55,22 +79,54 @@ struct JobSlot {
     budget: Option<u64>,
     /// Whether the job may still issue new runs.
     issuing: bool,
+    /// Restored-from-snapshot items to skip. The invariant maintained
+    /// by [`JobSlot::settle`] is that `(next_run, next_shard)` always
+    /// points at an *unheld* item, so `issuable` stays a plain budget
+    /// check; each held item is consumed (removed) exactly once.
+    held: BTreeSet<(u64, u32)>,
 }
 
 impl JobSlot {
+    fn new(init: JobSlotInit) -> Self {
+        let mut slot = Self {
+            ctx: init.ctx,
+            next_run: init.start_run,
+            next_shard: 0,
+            budget: init.budget,
+            issuing: true,
+            held: init.held,
+        };
+        slot.settle();
+        slot
+    }
+
     fn issuable(&self) -> bool {
         self.issuing && self.budget.map_or(true, |b| self.next_run < b)
+    }
+
+    /// Move the cursor to the first unheld item at or after the current
+    /// position.
+    fn settle(&mut self) {
+        while self.held.remove(&(self.next_run, self.next_shard)) {
+            self.step();
+        }
+    }
+
+    /// Advance the cursor by one `(run, shard)` item.
+    fn step(&mut self) {
+        self.next_shard += 1;
+        if self.next_shard >= self.ctx.shards() {
+            self.next_shard = 0;
+            self.next_run += 1;
+        }
     }
 
     /// Claim this slot's next `(run, shard)` pair (caller checked
     /// `issuable`).
     fn claim(&mut self) -> (u64, u32) {
         let claimed = (self.next_run, self.next_shard);
-        self.next_shard += 1;
-        if self.next_shard >= self.ctx.shards() {
-            self.next_shard = 0;
-            self.next_run += 1;
-        }
+        self.step();
+        self.settle();
         claimed
     }
 }
@@ -95,19 +151,12 @@ fn lock(m: &Mutex<DispatchState>) -> MutexGuard<'_, DispatchState> {
 }
 
 impl Dispatcher {
-    /// A dispatcher over `(context, issue budget)` pairs; job ids are
-    /// the submission indices. `None` means "issue until finished".
-    pub fn new(jobs: Vec<(Arc<JobContext>, Option<u64>)>) -> Self {
-        let slots = jobs
-            .into_iter()
-            .map(|(ctx, budget)| JobSlot {
-                ctx,
-                next_run: 0,
-                next_shard: 0,
-                budget,
-                issuing: true,
-            })
-            .collect();
+    /// A dispatcher over per-job slot initializers; job ids are the
+    /// submission indices. A budget of `None` means "issue until
+    /// finished"; a resumed slot starts at its restored frontier and
+    /// never re-issues the `(run, shard)` items its snapshot holds.
+    pub fn new(jobs: Vec<JobSlotInit>) -> Self {
+        let slots = jobs.into_iter().map(JobSlot::new).collect();
         Self {
             state: Mutex::new(DispatchState { slots, cursor: 0, shutdown: false }),
             wake: Condvar::new(),
@@ -288,14 +337,19 @@ mod tests {
             1.0,
             ReturnStrategy::Outfeed { chunk: 10 },
             SeedSequence::new(seed),
-        );
+        )
+        .unwrap();
         ctx.plan = crate::scheduler::shard::ShardPlan::new(ctx.job.batch, shards);
         Arc::new(ctx)
     }
 
+    fn fresh(ctx: Arc<JobContext>, budget: Option<u64>) -> JobSlotInit {
+        JobSlotInit::fresh(ctx, budget)
+    }
+
     #[test]
     fn round_robin_interleaves_jobs_and_respects_budgets() {
-        let d = Dispatcher::new(vec![(ctx(1), Some(2)), (ctx(2), Some(3))]);
+        let d = Dispatcher::new(vec![fresh(ctx(1), Some(2)), fresh(ctx(2), Some(3))]);
         let order: Vec<(u32, u64)> = (0..5)
             .map(|_| {
                 let w = d.next().expect("work available");
@@ -310,7 +364,7 @@ mod tests {
 
     #[test]
     fn sharded_jobs_issue_every_shard_of_a_run_before_the_next_run() {
-        let d = Dispatcher::new(vec![(ctx_sharded(1, 3), Some(2))]);
+        let d = Dispatcher::new(vec![fresh(ctx_sharded(1, 3), Some(2))]);
         let order: Vec<(u64, u32)> = (0..6)
             .map(|_| {
                 let w = d.next().expect("work available");
@@ -326,7 +380,7 @@ mod tests {
 
     #[test]
     fn zero_budget_issues_nothing() {
-        let d = Arc::new(Dispatcher::new(vec![(ctx(1), Some(0)), (ctx(2), Some(1))]));
+        let d = Arc::new(Dispatcher::new(vec![fresh(ctx(1), Some(0)), fresh(ctx(2), Some(1))]));
         // only job 1's single run is ever issuable
         assert_eq!(d.next().map(|w| (w.job, w.run)), Some((1, 0)));
         d.shutdown();
@@ -334,8 +388,47 @@ mod tests {
     }
 
     #[test]
+    fn resumed_slot_starts_at_the_frontier_and_skips_held_items() {
+        // resumed at run 2 of a 2-shard job with budget 4; the snapshot
+        // already holds (2,1) and (3,0), so exactly (2,0) and (3,1) are
+        // issued — the fault-tolerance re-issue path
+        let held = BTreeSet::from([(2u64, 1u32), (3, 0)]);
+        let d = Dispatcher::new(vec![JobSlotInit {
+            ctx: ctx_sharded(1, 2),
+            budget: Some(4),
+            start_run: 2,
+            held,
+        }]);
+        let order: Vec<(u64, u32)> = (0..2)
+            .map(|_| {
+                let w = d.next().expect("work available");
+                (w.run, w.shard)
+            })
+            .collect();
+        assert_eq!(order, vec![(2, 0), (3, 1)]);
+        d.shutdown();
+        assert!(d.next().is_none());
+    }
+
+    #[test]
+    fn resumed_slot_with_leading_held_items_settles_before_first_claim() {
+        // the very first item is held: the cursor must settle past it so
+        // `issuable` stays a plain budget check
+        let held = BTreeSet::from([(0u64, 0u32), (0, 1)]);
+        let d = Dispatcher::new(vec![JobSlotInit {
+            ctx: ctx_sharded(1, 2),
+            budget: Some(1),
+            start_run: 0,
+            held,
+        }]);
+        // every item of the single budgeted run is held -> nothing to issue
+        d.shutdown();
+        assert!(d.next().is_none());
+    }
+
+    #[test]
     fn finish_job_stops_issuing_and_shutdown_wakes_waiters() {
-        let d = Arc::new(Dispatcher::new(vec![(ctx(1), None)]));
+        let d = Arc::new(Dispatcher::new(vec![fresh(ctx(1), None)]));
         assert_eq!(d.next().map(|w| (w.job, w.run)), Some((0, 0)));
         assert!(d.retired().is_empty());
         d.finish_job(0);

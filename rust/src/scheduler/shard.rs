@@ -62,20 +62,20 @@ pub const SHARDS_ENV: &str = "ABC_IPU_SHARDS";
 pub use crate::backend::MAX_SHARDS;
 
 /// Resolve an effective shard count: `$ABC_IPU_SHARDS` wins when set to
-/// a positive integer (`0`/unset/unparseable honour the request), then
-/// the requested value; `0` from either means auto, which is solo
-/// (1 shard). Capped at [`MAX_SHARDS`].
-pub fn resolve_shards(requested: usize) -> usize {
-    let requested = std::env::var(SHARDS_ENV)
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+/// a positive integer (`0`/unset honour the request), then the
+/// requested value; `0` from either means auto, which is solo
+/// (1 shard). Capped at [`MAX_SHARDS`]. A malformed override (not a
+/// non-negative integer) is a typed [`crate::Error::Config`] — the
+/// shard count is harmless to *change* but not to silently mis-read.
+pub fn resolve_shards(requested: usize) -> crate::Result<usize> {
+    let requested = crate::util::env::usize_override(SHARDS_ENV)?
         .filter(|&v| v >= 1)
         .unwrap_or(requested);
-    if requested >= 1 {
+    Ok(if requested >= 1 {
         requested.min(MAX_SHARDS)
     } else {
         1
-    }
+    })
 }
 
 /// One shard's contiguous lane range within a run's batch.
@@ -245,11 +245,23 @@ mod tests {
     #[test]
     fn resolved_shard_count_is_at_least_one() {
         // env-agnostic: whatever ABC_IPU_SHARDS is set to in this
-        // process, resolution must land on >= 1 and under the cap
+        // process (CI pins valid values), resolution must land on >= 1
+        // and under the cap
         for requested in [0usize, 1, 3, MAX_SHARDS + 5] {
-            let k = resolve_shards(requested);
+            let k = resolve_shards(requested).unwrap();
             assert!((1..=MAX_SHARDS).contains(&k), "requested {requested} -> {k}");
         }
+    }
+
+    #[test]
+    fn malformed_shard_override_is_a_typed_error() {
+        use crate::util::env::parse_usize_override;
+        for bad in ["three", "-1", "2.5", ""] {
+            let err = parse_usize_override(SHARDS_ENV, Some(bad)).unwrap_err();
+            assert!(matches!(err, crate::Error::Config(_)), "{bad}");
+            assert!(err.to_string().contains(SHARDS_ENV), "{bad}");
+        }
+        assert_eq!(parse_usize_override(SHARDS_ENV, Some("3")).unwrap(), Some(3));
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Fixed-bin histograms (Figs 8–9 posterior marginals).
 
+use crate::{Error, Result};
+
 /// A fixed-range, equal-width histogram.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
@@ -13,12 +15,21 @@ pub struct Histogram {
 }
 
 impl Histogram {
-    /// `bins` equal-width bins over `[lo, hi]`. Panics if `bins == 0` or
-    /// `lo >= hi`.
-    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
-        assert!(bins > 0, "need at least one bin");
-        assert!(lo < hi, "empty range [{lo}, {hi})");
-        Self { lo, hi, counts: vec![0; bins], outliers: 0, total: 0 }
+    /// `bins` equal-width bins over `[lo, hi]`. A zero bin count or an
+    /// empty/inverted/non-finite range is a typed [`Error::Config`] —
+    /// both reach this constructor from user-facing report paths
+    /// (`repro countries` histogram bins, diagnostics), where an
+    /// `assert!` panic used to be the failure mode.
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Result<Self> {
+        if bins == 0 {
+            return Err(Error::Config("histogram needs at least one bin".into()));
+        }
+        if !(lo < hi) {
+            return Err(Error::Config(format!(
+                "histogram range [{lo}, {hi}) is empty"
+            )));
+        }
+        Ok(Self { lo, hi, counts: vec![0; bins], outliers: 0, total: 0 })
     }
 
     /// Add one observation. `hi` itself lands in the last bin.
@@ -107,7 +118,7 @@ mod tests {
 
     #[test]
     fn bins_cover_range() {
-        let mut h = Histogram::new(0.0, 10.0, 10);
+        let mut h = Histogram::new(0.0, 10.0, 10).unwrap();
         for i in 0..10 {
             h.add(i as f64 + 0.5);
         }
@@ -117,14 +128,14 @@ mod tests {
 
     #[test]
     fn hi_edge_folds_into_last_bin() {
-        let mut h = Histogram::new(0.0, 1.0, 4);
+        let mut h = Histogram::new(0.0, 1.0, 4).unwrap();
         h.add(1.0);
         assert_eq!(h.counts()[3], 1);
     }
 
     #[test]
     fn outliers_counted_not_binned() {
-        let mut h = Histogram::new(0.0, 1.0, 2);
+        let mut h = Histogram::new(0.0, 1.0, 2).unwrap();
         h.add(-0.1);
         h.add(1.1);
         h.add(f64::NAN);
@@ -135,7 +146,7 @@ mod tests {
 
     #[test]
     fn density_sums_to_in_range_fraction() {
-        let mut h = Histogram::new(0.0, 1.0, 4);
+        let mut h = Histogram::new(0.0, 1.0, 4).unwrap();
         h.add_all(&[0.1, 0.3, 0.6, 0.9, 2.0]);
         let sum: f64 = h.density().iter().sum();
         assert!((sum - 0.8).abs() < 1e-12);
@@ -143,14 +154,14 @@ mod tests {
 
     #[test]
     fn bin_centers() {
-        let h = Histogram::new(0.0, 1.0, 2);
+        let h = Histogram::new(0.0, 1.0, 2).unwrap();
         assert!((h.bin_center(0) - 0.25).abs() < 1e-12);
         assert!((h.bin_center(1) - 0.75).abs() < 1e-12);
     }
 
     #[test]
     fn modality_probe() {
-        let mut h = Histogram::new(0.0, 10.0, 10);
+        let mut h = Histogram::new(0.0, 10.0, 10).unwrap();
         // two well-separated bumps
         for _ in 0..50 {
             h.add(2.5);
@@ -158,7 +169,7 @@ mod tests {
         }
         assert_eq!(h.modes(0.5), 2);
         // single bump
-        let mut h1 = Histogram::new(0.0, 10.0, 10);
+        let mut h1 = Histogram::new(0.0, 10.0, 10).unwrap();
         for _ in 0..50 {
             h1.add(5.5);
         }
@@ -167,10 +178,28 @@ mod tests {
 
     #[test]
     fn csv_has_header_and_rows() {
-        let mut h = Histogram::new(0.0, 1.0, 3);
+        let mut h = Histogram::new(0.0, 1.0, 3).unwrap();
         h.add(0.5);
         let csv = h.to_csv();
         assert!(csv.starts_with("bin_center,count,density\n"));
         assert_eq!(csv.lines().count(), 4);
+    }
+
+    #[test]
+    fn invalid_geometry_is_a_typed_error_not_a_panic() {
+        // regression: these were assert! panics reachable from report
+        // paths (user-chosen bin counts / degenerate marginal ranges)
+        for (lo, hi, bins) in [
+            (0.0, 1.0, 0),            // no bins
+            (1.0, 1.0, 4),            // empty range
+            (2.0, 1.0, 4),            // inverted range
+            (f64::NAN, 1.0, 4),       // non-finite lo
+            (0.0, f64::NAN, 4),       // non-finite hi
+        ] {
+            let err = Histogram::new(lo, hi, bins).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "[{lo}, {hi}) x {bins}");
+        }
+        let err = Histogram::new(0.0, 1.0, 0).unwrap_err().to_string();
+        assert!(err.contains("bin"), "{err}");
     }
 }

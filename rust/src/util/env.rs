@@ -1,0 +1,98 @@
+//! Typed parsing of `$ABC_IPU_*` environment knobs.
+//!
+//! Every runtime knob with an environment override (`$ABC_IPU_LANES`,
+//! `$ABC_IPU_SHARDS`, `$ABC_IPU_SIM_THREADS`, `$ABC_IPU_CHECKPOINT`)
+//! resolves through here. The historical behaviour — silently falling
+//! back to the requested default when the variable held garbage — made
+//! a typo'd `ABC_IPU_SHARDS=treu3` indistinguishable from "unset",
+//! which is exactly the kind of silent misconfiguration a determinism
+//! contract cannot afford. Malformed values are now a typed
+//! [`Error::Config`] carrying the variable name and the offending
+//! value; an *unset* variable still means "honour the requested value".
+//!
+//! The parsing core is a pure function of `(name, raw value)` so the
+//! malformed cases are unit-testable without mutating process-global
+//! environment state (tests run multi-threaded; `std::env::set_var`
+//! races against every other test reading the environment).
+
+use crate::{Error, Result};
+
+/// Parse one optional counter-style environment override.
+///
+/// * `Ok(None)` — the variable is unset: honour the requested value.
+/// * `Ok(Some(v))` — the variable held a non-negative integer `v`
+///   (each knob assigns its own meaning to `0`, e.g. "auto").
+/// * `Err(Error::Config)` — the variable is set but not a non-negative
+///   integer: fail loudly instead of silently using a default.
+pub fn parse_usize_override(name: &str, raw: Option<&str>) -> Result<Option<usize>> {
+    let Some(raw) = raw else { return Ok(None) };
+    raw.trim().parse::<usize>().map(Some).map_err(|_| {
+        Error::Config(format!(
+            "malformed ${name}=`{raw}`: expected a non-negative integer \
+             (unset the variable to use the configured value)"
+        ))
+    })
+}
+
+/// Read and parse `$name` from the process environment (see
+/// [`parse_usize_override`]). A variable set to non-UTF-8 bytes counts
+/// as malformed, not unset.
+pub fn usize_override(name: &str) -> Result<Option<usize>> {
+    match std::env::var(name) {
+        Ok(v) => parse_usize_override(name, Some(&v)),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => Err(Error::Config(format!(
+            "malformed ${name}: value is not valid UTF-8"
+        ))),
+    }
+}
+
+/// Read `$name` as a non-empty string (`Ok(None)` when unset or empty —
+/// an empty path override is treated as "unset" so wrapper scripts can
+/// pass `ABC_IPU_CHECKPOINT=""` to disable checkpointing).
+pub fn string_override(name: &str) -> Result<Option<String>> {
+    match std::env::var(name) {
+        Ok(v) if v.trim().is_empty() => Ok(None),
+        Ok(v) => Ok(Some(v)),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => Err(Error::Config(format!(
+            "malformed ${name}: value is not valid UTF-8"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_honours_request() {
+        assert_eq!(parse_usize_override("X", None).unwrap(), None);
+    }
+
+    #[test]
+    fn valid_integers_parse() {
+        assert_eq!(parse_usize_override("X", Some("0")).unwrap(), Some(0));
+        assert_eq!(parse_usize_override("X", Some("8")).unwrap(), Some(8));
+        assert_eq!(parse_usize_override("X", Some(" 16 ")).unwrap(), Some(16));
+    }
+
+    #[test]
+    fn malformed_values_fail_loudly_with_the_variable_name() {
+        for bad in ["", "abc", "-1", "1.5", "8 shards", "0x10"] {
+            let err = parse_usize_override("ABC_IPU_SHARDS", Some(bad))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("ABC_IPU_SHARDS"), "{bad}: {err}");
+            assert!(err.contains("malformed"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_is_a_config_error() {
+        assert!(matches!(
+            parse_usize_override("X", Some("nope")),
+            Err(Error::Config(_))
+        ));
+    }
+}

@@ -64,6 +64,18 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// As u64 (rejects negatives/fractions), or error. Exact only up to
+    /// 2^53 — the JSON number space — which every counter serialized by
+    /// this crate stays inside; values that need all 64 bits (hashes)
+    /// are serialized as hex strings instead.
+    pub fn as_u64(&self) -> Result<u64> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(Error::Parse(format!("expected unsigned integer, got {n}")));
+        }
+        Ok(n as u64)
+    }
+
     /// As string slice, or error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
@@ -379,6 +391,17 @@ mod tests {
         assert_eq!(Json::parse("42").unwrap().as_usize().unwrap(), 42);
         assert!(Json::parse("-1").unwrap().as_usize().is_err());
         assert!(Json::parse("1.5").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn as_u64_guards() {
+        assert_eq!(Json::parse("42").unwrap().as_u64().unwrap(), 42);
+        // u32 bit patterns (the checkpoint f32 encoding) round-trip
+        let bits = f32::to_bits(-1.5e-7f32);
+        let v = Json::Num(bits as f64);
+        assert_eq!(v.as_u64().unwrap() as u32, bits);
+        assert!(Json::parse("-1").unwrap().as_u64().is_err());
+        assert!(Json::parse("1.5").unwrap().as_u64().is_err());
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! This build environment is offline with only the `xla` dependency
 //! closure vendored, so the repo carries its own minimal JSON parser
 //! ([`json`]) and CLI argument parser ([`cli`]). Both are deliberately
-//! small, fully tested, and tailored to this project's needs.
+//! small, fully tested, and tailored to this project's needs. [`env`]
+//! is the one home for `$ABC_IPU_*` knob parsing, so every override
+//! fails loudly on malformed values instead of silently defaulting.
 
 pub mod cli;
+pub mod env;
 pub mod json;

@@ -170,7 +170,8 @@ fn cpu_baseline_and_accelerator_agree_statistically() {
     let cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
     let coord = Coordinator::new(pjrt_backend(), cfg, ds.clone(), Prior::paper()).unwrap();
     let accel = coord.run_exact(10).unwrap();
-    let cpu = abc_ipu::abc::cpu::run_until(&ds, &Prior::paper(), tol, 1000, accel.accepted.len(), 99, 10);
+    let cpu = abc_ipu::abc::cpu::run_until(&ds, &Prior::paper(), tol, 1000, accel.accepted.len(), 99, 10)
+        .unwrap();
     assert!(!accel.accepted.is_empty() && !cpu.accepted.is_empty());
     // acceptance rates should agree within a generous factor
     let ra = accel.metrics.samples_accepted as f64 / accel.metrics.samples_simulated as f64;
@@ -209,7 +210,7 @@ fn smc_tolerances_strictly_decrease_and_posteriors_tighten() {
         assert!(w[1] < w[0], "tolerances must decrease: {tols:?}");
     }
     // final stage distances all under the final tolerance
-    let last = result.final_posterior();
+    let last = result.final_posterior().expect("smc stages present");
     for s in last.samples() {
         assert!(s.distance <= tols[tols.len() - 1]);
     }

@@ -102,7 +102,8 @@ fn accepted_set_matches_cpu_baseline_oracle() {
         usize::MAX,
         0xFEED,
         runs,
-    );
+    )
+    .unwrap();
     assert!(!oracle.accepted.is_empty(), "oracle found nothing — tolerance too tight");
 
     for devices in [1usize, 3] {
@@ -180,7 +181,9 @@ fn posterior_agrees_with_cpu_baseline_statistically() {
     let cfg = config(2, ReturnStrategy::Outfeed { chunk: 1000 }, tol);
     let coord = Coordinator::new(native_backend(), cfg, ds.clone(), Prior::paper()).unwrap();
     let accel = coord.run_exact(10).unwrap();
-    let cpu = abc_ipu::abc::cpu::run_until(&ds, &Prior::paper(), tol, 1000, usize::MAX, 99, 10);
+    let cpu =
+        abc_ipu::abc::cpu::run_until(&ds, &Prior::paper(), tol, 1000, usize::MAX, 99, 10)
+            .unwrap();
     assert!(!accel.accepted.is_empty() && !cpu.accepted.is_empty());
     let ra = accel.metrics.samples_accepted as f64 / accel.metrics.samples_simulated as f64;
     let rc = cpu.metrics.samples_accepted as f64 / cpu.metrics.samples_simulated as f64;
@@ -217,7 +220,7 @@ fn smc_tolerances_strictly_decrease_and_posteriors_tighten() {
         assert!(w[1] < w[0], "tolerances must decrease: {tols:?}");
     }
     // final stage distances all under the final tolerance
-    let last = result.final_posterior();
+    let last = result.final_posterior().expect("smc stages present");
     for s in last.samples() {
         assert!(s.distance <= tols[tols.len() - 1]);
     }

@@ -1,0 +1,466 @@
+//! Differential suite for crash-safe checkpoint/resume (ISSUE 5 /
+//! DESIGN.md §10): a schedule interrupted at an arbitrary run frontier
+//! and resumed from its snapshot must produce an accepted-sample stream
+//! **bit-identical** to an uninterrupted solo run — for every interrupt
+//! point, shard count, worker count and return strategy, including
+//! chained interrupts ("crash" repeatedly), coarse snapshot intervals
+//! (the gap between the last snapshot and the crash re-executes), and
+//! mid-study SMC resume.
+//!
+//! The "crash" is the scheduler's simulated-interrupt knob
+//! (`CheckpointConfig::interrupt_after`): it aborts the leader with
+//! `Error::Interrupted` after N newly finalized runs *without* writing
+//! a fresh snapshot, so resume always exercises the re-issue path for
+//! work lost between the last interval snapshot and the abort — the
+//! same state a killed process would leave on disk.
+
+mod common;
+
+use abc_ipu::abc::smc::{
+    run_smc_scenarios, run_smc_scenarios_with_checkpoint, SmcConfig, SmcScenario,
+};
+use abc_ipu::checkpoint::{CheckpointConfig, ScheduleSnapshot};
+use abc_ipu::config::ReturnStrategy;
+use abc_ipu::coordinator::{Coordinator, StopRule};
+use abc_ipu::data::synthetic;
+use abc_ipu::scheduler::Scheduler;
+use abc_ipu::Error;
+use common::{fingerprints, native_backend, pool_workers, Fingerprint, JobBuilder};
+use std::path::PathBuf;
+
+/// A unique checkpoint path per (test, tag): tests in this binary run
+/// concurrently and must never share snapshot files.
+fn ckpt_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "abc_ipu_prop_checkpoint_{}_{tag}.json",
+        std::process::id()
+    ))
+}
+
+fn cleanup(path: &PathBuf) {
+    let _ = std::fs::remove_file(path);
+}
+
+
+/// Worker counts for the resumed-side sweeps: 1 plus the CI matrix's
+/// `$ABC_IPU_TEST_WORKERS` (default 4) — so each resume-matrix leg
+/// contributes distinct pool geometries instead of re-running an
+/// identical sweep.
+fn workers_axis() -> Vec<usize> {
+    let env = pool_workers(4);
+    if env == 1 { vec![1] } else { vec![1, env] }
+}
+
+/// The awkward geometry of `prop_shards`: batch 801 is no multiple of
+/// any tested shard count, chunk 93 misaligns with every shard edge.
+fn builder(strategy: ReturnStrategy) -> JobBuilder {
+    let mut b = JobBuilder::new(synthetic::default_dataset(16, 0x5eed));
+    b.batch = 801;
+    b.strategy = strategy;
+    b.seed = 0xC4A5;
+    b
+}
+
+/// Solo, uninterrupted, checkpoint-free reference.
+fn solo_reference(b: &JobBuilder, stop: StopRule) -> Vec<Fingerprint> {
+    let mut solo = b.clone();
+    solo.devices = 1;
+    solo.shards = 0;
+    let spec = solo.spec("solo", stop);
+    let result = Coordinator::new(
+        native_backend(),
+        spec.config.clone(),
+        spec.dataset.clone(),
+        spec.prior.clone(),
+    )
+    .unwrap()
+    .run(spec.stop)
+    .unwrap();
+    assert!(
+        !result.accepted.is_empty(),
+        "solo reference accepted nothing: tolerance too tight for a meaningful test"
+    );
+    fingerprints(&result.accepted)
+}
+
+/// One scheduler invocation under an explicit checkpoint policy.
+fn run_once(
+    b: &JobBuilder,
+    stop: StopRule,
+    workers: usize,
+    shards: usize,
+    ckpt: CheckpointConfig,
+) -> abc_ipu::Result<Vec<Fingerprint>> {
+    let mut sb = b.clone();
+    sb.shards = shards;
+    let spec = sb.spec("ckpt", stop);
+    let report = Scheduler::new(native_backend(), workers)
+        .with_checkpoint(ckpt)
+        .run(vec![spec])?;
+    let result = report.jobs.into_iter().next().unwrap().outcome?;
+    Ok(fingerprints(&result.accepted))
+}
+
+/// Interrupt after `k` newly finalized runs, then resume to completion;
+/// returns the resumed fingerprints (asserting the interrupt fired).
+fn interrupt_then_resume(
+    b: &JobBuilder,
+    stop: StopRule,
+    workers: usize,
+    shards: usize,
+    interval: u64,
+    k: u64,
+    path: &PathBuf,
+) -> Vec<Fingerprint> {
+    let crash = CheckpointConfig::new(path.clone())
+        .with_interval(interval)
+        .with_interrupt_after(k);
+    let err = run_once(b, stop, workers, shards, crash)
+        .expect_err("schedule should have been interrupted");
+    assert!(
+        matches!(err, Error::Interrupted { .. }),
+        "expected a typed interrupt, got: {err}"
+    );
+    assert!(path.exists(), "interrupt left no snapshot behind");
+    let resume = CheckpointConfig::new(path.clone())
+        .with_interval(interval)
+        .with_resume(true);
+    run_once(b, stop, workers, shards, resume).expect("resume failed")
+}
+
+#[test]
+fn resumed_outfeed_runs_bit_equal_solo_for_every_interrupt_point() {
+    let b = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let stop = StopRule::ExactRuns(5);
+    let want = solo_reference(&b, stop);
+    for workers in workers_axis() {
+        for shards in [1usize, 3] {
+            for k in [1u64, 2, 4] {
+                let path =
+                    ckpt_path(&format!("outfeed_w{workers}_s{shards}_k{k}"));
+                cleanup(&path);
+                let got =
+                    interrupt_then_resume(&b, stop, workers, shards, 1, k, &path);
+                assert_eq!(
+                    got, want,
+                    "outfeed resume diverged at {workers} workers x {shards} \
+                     shards, interrupt after {k}"
+                );
+                cleanup(&path);
+            }
+        }
+    }
+}
+
+#[test]
+fn resumed_topk_runs_bit_equal_solo() {
+    // k far below the accepted count: the resumed global re-selection
+    // must drop exactly the samples the solo selection drops
+    let b = builder(ReturnStrategy::TopK { k: 7 });
+    let stop = StopRule::ExactRuns(5);
+    let want = solo_reference(&b, stop);
+    for (workers, shards, k) in [(1usize, 1usize, 2u64), (4, 3, 1), (4, 3, 3)] {
+        let path = ckpt_path(&format!("topk_w{workers}_s{shards}_k{k}"));
+        cleanup(&path);
+        let got = interrupt_then_resume(&b, stop, workers, shards, 1, k, &path);
+        assert_eq!(
+            got, want,
+            "top-k resume diverged at {workers} workers x {shards} shards, \
+             interrupt after {k}"
+        );
+        cleanup(&path);
+    }
+}
+
+#[test]
+fn accepted_target_resume_bit_equals_solo() {
+    // AcceptedTarget is the sensitive one: the resumed frontier must
+    // re-decide the stop rule at exactly the same run boundary b
+    let b = builder(ReturnStrategy::Outfeed { chunk: 801 });
+    let stop = StopRule::AcceptedTarget(12);
+    let want = solo_reference(&b, stop);
+    for (workers, shards) in [(1usize, 1usize), (4, 3)] {
+        let path = ckpt_path(&format!("target_w{workers}_s{shards}"));
+        cleanup(&path);
+        let got = interrupt_then_resume(&b, stop, workers, shards, 1, 1, &path);
+        assert_eq!(
+            got, want,
+            "AcceptedTarget resume diverged at {workers} workers x {shards} shards"
+        );
+        cleanup(&path);
+    }
+}
+
+#[test]
+fn coarse_snapshot_interval_reexecutes_the_gap_bit_identically() {
+    // snapshot every 3 runs, crash after 4: runs 3..4 are lost from the
+    // snapshot and must re-execute on resume — bit-identically
+    let b = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let stop = StopRule::ExactRuns(6);
+    let want = solo_reference(&b, stop);
+    let path = ckpt_path("coarse_interval");
+    cleanup(&path);
+    let got = interrupt_then_resume(&b, stop, 4, 3, 3, 4, &path);
+    assert_eq!(got, want, "gap re-execution diverged");
+    cleanup(&path);
+}
+
+#[test]
+fn chained_interrupts_converge_to_the_uninterrupted_result() {
+    // crash after every single finalized run until the schedule finally
+    // completes: progress must persist across every hop and the final
+    // stream must still be bit-identical
+    let b = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let stop = StopRule::ExactRuns(5);
+    let want = solo_reference(&b, stop);
+    let path = ckpt_path("chained");
+    cleanup(&path);
+    let mut hops = 0;
+    let got = loop {
+        hops += 1;
+        assert!(hops <= 30, "chained interrupts failed to converge");
+        let ckpt = CheckpointConfig::new(path.clone())
+            .with_resume(true)
+            .with_interrupt_after(1);
+        match run_once(&b, stop, 2, 3, ckpt) {
+            Ok(fp) => break fp,
+            Err(Error::Interrupted { .. }) => continue,
+            Err(e) => panic!("unexpected error on hop {hops}: {e}"),
+        }
+    };
+    assert!(hops > 2, "expected several interrupts, got {hops}");
+    assert_eq!(got, want, "chained resume diverged after {hops} hops");
+    cleanup(&path);
+}
+
+#[test]
+fn resume_of_a_completed_schedule_replays_no_work() {
+    let b = builder(ReturnStrategy::Outfeed { chunk: 801 });
+    let stop = StopRule::ExactRuns(4);
+    let path = ckpt_path("completed");
+    cleanup(&path);
+    let first = run_once(&b, stop, 2, 1, CheckpointConfig::new(path.clone())).unwrap();
+
+    let mut sb = b.clone();
+    sb.shards = 1;
+    let spec = sb.spec("ckpt", stop);
+    let report = Scheduler::new(native_backend(), 2)
+        .with_checkpoint(CheckpointConfig::new(path.clone()).with_resume(true))
+        .run(vec![spec])
+        .unwrap();
+    // the pool executed nothing: every run was restored from the snapshot
+    assert_eq!(report.pool_metrics.runs, 0, "resume re-executed work");
+    let result = report.jobs.into_iter().next().unwrap().outcome.unwrap();
+    assert_eq!(result.metrics.resumed_runs, 4);
+    assert_eq!(result.metrics.runs, 4);
+    assert_eq!(fingerprints(&result.accepted), first);
+    cleanup(&path);
+}
+
+#[test]
+fn resume_may_change_pool_geometry_but_not_the_stream() {
+    // interrupt under (1 worker, 1 shard), resume under (4 workers,
+    // 3 shards): geometry is a performance knob, the stream must not move
+    let b = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let stop = StopRule::ExactRuns(5);
+    let want = solo_reference(&b, stop);
+    let path = ckpt_path("geometry_change");
+    cleanup(&path);
+    let crash = CheckpointConfig::new(path.clone()).with_interrupt_after(2);
+    let err = run_once(&b, stop, 1, 1, crash).unwrap_err();
+    assert!(matches!(err, Error::Interrupted { .. }));
+    let resume = CheckpointConfig::new(path.clone()).with_resume(true);
+    let got = run_once(&b, stop, 4, 3, resume).unwrap();
+    assert_eq!(got, want, "geometry-changing resume diverged");
+    cleanup(&path);
+}
+
+#[test]
+fn resume_rejects_a_mismatched_job_set() {
+    let b = builder(ReturnStrategy::Outfeed { chunk: 801 });
+    let stop = StopRule::ExactRuns(3);
+    let path = ckpt_path("mismatch");
+    cleanup(&path);
+    run_once(&b, stop, 1, 1, CheckpointConfig::new(path.clone())).unwrap();
+
+    // different seed => different determinism identity => typed error
+    let mut other = b.clone();
+    other.seed = 0xBAD;
+    let err = run_once(
+        &other,
+        stop,
+        1,
+        1,
+        CheckpointConfig::new(path.clone()).with_resume(true),
+    )
+    .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    cleanup(&path);
+}
+
+#[test]
+fn resume_rejects_a_changed_prior_box() {
+    // the prior box determines θ sampling directly: resuming the same
+    // config under a different box must be a typed error, not a silent
+    // mix of two priors' samples
+    use abc_ipu::model::Prior;
+    use abc_ipu::scheduler::JobSpec;
+
+    let b = builder(ReturnStrategy::Outfeed { chunk: 801 });
+    let stop = StopRule::ExactRuns(3);
+    let path = ckpt_path("prior_mismatch");
+    cleanup(&path);
+    run_once(&b, stop, 1, 1, CheckpointConfig::new(path.clone())).unwrap();
+
+    let paper = Prior::paper();
+    let mut high = *paper.high();
+    high[0] *= 0.5; // shrink one side of the box
+    let shrunk = Prior::new(*paper.low(), high).unwrap();
+    let spec =
+        JobSpec::new("ckpt", b.config(), b.dataset.clone(), shrunk, stop).unwrap();
+    let err = Scheduler::new(native_backend(), 1)
+        .with_checkpoint(CheckpointConfig::new(path.clone()).with_resume(true))
+        .run(vec![spec])
+        .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    cleanup(&path);
+}
+
+#[test]
+fn snapshot_file_is_wellformed_and_bit_exact_on_disk() {
+    let b = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let stop = StopRule::ExactRuns(3);
+    let path = ckpt_path("wellformed");
+    cleanup(&path);
+    let fps = run_once(&b, stop, 2, 1, CheckpointConfig::new(path.clone())).unwrap();
+    let snap = ScheduleSnapshot::load(&path).unwrap();
+    assert_eq!(snap.jobs.len(), 1);
+    assert_eq!(snap.jobs[0].frontier, 3);
+    assert_eq!(fingerprints(&snap.jobs[0].accepted), fps);
+    // round-trip through text is bit-exact
+    let again = ScheduleSnapshot::from_json(&snap.to_json()).unwrap();
+    assert_eq!(again, snap);
+    cleanup(&path);
+}
+
+// ---------------------------------------------------------------------------
+// SMC mid-study resume
+// ---------------------------------------------------------------------------
+
+fn smc_scenarios() -> Vec<SmcScenario> {
+    let a = synthetic::default_dataset(16, 0x5eed);
+    let b = synthetic::default_dataset(16, 0xBEEF);
+    let mut cfg_a = JobBuilder::new(a.clone());
+    cfg_a.batch = 500;
+    cfg_a.strategy = ReturnStrategy::Outfeed { chunk: 500 };
+    let mut cfg_b = cfg_a.clone();
+    cfg_b.dataset = b.clone();
+    cfg_b.seed = 0xB0B;
+    vec![
+        SmcScenario { name: "a".into(), config: cfg_a.config(), dataset: a },
+        SmcScenario { name: "b".into(), config: cfg_b.config(), dataset: b },
+    ]
+}
+
+fn smc_bits(results: &[(String, abc_ipu::abc::smc::SmcResult)]) -> Vec<(Vec<u32>, Vec<Vec<[u32; 8]>>)> {
+    results
+        .iter()
+        .map(|(_, r)| {
+            (
+                r.tolerances().iter().map(|t| t.to_bits()).collect(),
+                r.stages
+                    .iter()
+                    .map(|s| {
+                        s.posterior
+                            .samples()
+                            .iter()
+                            .map(|smp| smp.theta.map(f32::to_bits))
+                            .collect()
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn smc_mid_study_resume_matches_straight_through() {
+    let scenarios = smc_scenarios();
+    let smc = SmcConfig { stages: 2, samples_per_stage: 10, ..Default::default() };
+    let want = smc_bits(
+        &run_smc_scenarios(native_backend(), &scenarios, &smc, 3).unwrap(),
+    );
+
+    // crash after every newly finalized run, hop until complete:
+    // interrupts land both mid-stage and across stage boundaries (each
+    // hop makes at least one unit of progress — a finalized run or a
+    // stage boundary — so the chain always converges)
+    let path = ckpt_path("smc_chain");
+    cleanup(&path);
+    let mut hops = 0;
+    let got = loop {
+        hops += 1;
+        assert!(hops <= 300, "smc chained interrupts failed to converge");
+        let ckpt = CheckpointConfig::new(path.clone())
+            .with_resume(true)
+            .with_interrupt_after(1);
+        match run_smc_scenarios_with_checkpoint(
+            native_backend(),
+            &scenarios,
+            &smc,
+            3,
+            Some(ckpt),
+        ) {
+            Ok(results) => break smc_bits(&results),
+            Err(Error::Interrupted { .. }) => continue,
+            Err(e) => panic!("unexpected smc error on hop {hops}: {e}"),
+        }
+    };
+    assert!(hops > 1, "expected at least one interrupt, got {hops}");
+    assert_eq!(got, want, "smc resume diverged after {hops} hops");
+    cleanup(&path);
+    for stage in 0..=smc.stages {
+        let _ = std::fs::remove_file(CheckpointConfig::new(path.clone()).stage_path(stage));
+    }
+}
+
+#[test]
+fn smc_single_interrupt_resume_matches_straight_through() {
+    let scenarios = smc_scenarios();
+    let smc = SmcConfig { stages: 1, samples_per_stage: 8, ..Default::default() };
+    let want = smc_bits(
+        &run_smc_scenarios(native_backend(), &scenarios, &smc, 2).unwrap(),
+    );
+
+    let path = ckpt_path("smc_single");
+    cleanup(&path);
+    let crash = CheckpointConfig::new(path.clone()).with_interrupt_after(1);
+    let err = run_smc_scenarios_with_checkpoint(
+        native_backend(),
+        &scenarios,
+        &smc,
+        2,
+        Some(crash),
+    )
+    .expect_err("study should have been interrupted");
+    assert!(matches!(err, Error::Interrupted { .. }), "{err}");
+
+    let resume = CheckpointConfig::new(path.clone()).with_resume(true);
+    let got = smc_bits(
+        &run_smc_scenarios_with_checkpoint(
+            native_backend(),
+            &scenarios,
+            &smc,
+            2,
+            Some(resume),
+        )
+        .unwrap(),
+    );
+    assert_eq!(got, want, "smc single-interrupt resume diverged");
+    cleanup(&path);
+    for stage in 0..=smc.stages {
+        let _ = std::fs::remove_file(CheckpointConfig::new(path.clone()).stage_path(stage));
+    }
+}

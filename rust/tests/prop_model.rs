@@ -138,7 +138,7 @@ fn prop_percentile_monotone_in_p() {
 fn prop_histogram_conserves_counts() {
     prop_cases("histogram total conservation", 150, |rng| {
         let bins = 1 + rng.below(40) as usize;
-        let mut h = Histogram::new(-5.0, 5.0, bins);
+        let mut h = Histogram::new(-5.0, 5.0, bins).unwrap();
         let n = rng.below(500);
         for _ in 0..n {
             h.add(rng.normal_f32() as f64 * 3.0);

@@ -192,6 +192,7 @@ fn smc_stages_fan_over_shards_bit_identically() {
         let result = run_smc(native_backend(), cfg, ds.clone(), &smc).unwrap();
         let bits: Vec<[u32; 8]> = result
             .final_posterior()
+            .expect("smc stages present")
             .samples()
             .iter()
             .map(|s| s.theta.map(f32::to_bits))
@@ -225,8 +226,8 @@ fn samples_simulated_accounting_is_shard_invariant() {
 fn plan_and_env_resolution_are_sane() {
     // env-agnostic: whatever $ABC_IPU_SHARDS is, resolution lands in
     // [1, MAX_SHARDS] and plans always partition the batch exactly
-    assert!((1..=MAX_SHARDS).contains(&resolve_shards(0)));
-    assert!((1..=MAX_SHARDS).contains(&resolve_shards(3)));
+    assert!((1..=MAX_SHARDS).contains(&resolve_shards(0).unwrap()));
+    assert!((1..=MAX_SHARDS).contains(&resolve_shards(3).unwrap()));
     let plan = ShardPlan::new(801, 8);
     assert_eq!(plan.ranges().iter().map(|r| r.len).sum::<usize>(), 801);
     assert_eq!(plan.range(0).lane0, 0);
