@@ -32,9 +32,13 @@ examples:
 bench:
 	cargo bench
 
-## just the hot-path suite + BENCH_hot_path.json (what the CI smoke runs)
+## just the hot-path suite + BENCH_hot_path.json (what the CI smoke runs).
+## target-cpu=native lets LLVM keep the F32xL element loops in vector
+## registers (exactly-rounded vector sqrt/floor/min/max, no contraction
+## without an explicit fma) — results stay bit-identical to the default
+## codegen; `cargo test` deliberately runs without it to prove that.
 bench-hot:
-	cargo bench --bench hot_path
+	RUSTFLAGS="-C target-cpu=native" cargo bench --bench hot_path
 
 ## measured Table-7 sweep: one sharded job across a growing pool
 ## (DESIGN.md §9); writes the repo-root BENCH_scaling.json artifact

@@ -9,12 +9,17 @@
 //! dispatch overhead.
 //!
 //! Besides the usual `reports/bench_hot_path.csv`, this suite writes
-//! the repo-root **`BENCH_hot_path.json`** perf-trajectory artifact:
-//! samples/sec for the single-thread scalar baseline and for the lane
-//! engine at each width on two explicit thread axes — 1 thread (the
-//! width/SoA axis in isolation) and auto threads (the full engine,
-//! whose widest-width speedup is the headline the CI bench smoke
-//! checks). `ABC_IPU_BENCH_QUICK=1` shrinks iterations for smoke runs.
+//! the repo-root **`BENCH_hot_path.json`** perf-trajectory artifact
+//! (schema v2, validated on write against
+//! `report::bench_schema::validate_hot_path` — the same contract the
+//! CI bench smoke checks via `examples/check_bench.rs`): samples/sec
+//! for the single-thread scalar baseline and for the lane engine at
+//! each width on two explicit thread axes — 1 thread (the width/SoA
+//! axis in isolation) and auto threads (the full engine, whose
+//! widest-width speedup is the headline) — plus the `simd_ratio` axis
+//! comparing the vectorized and scalar kernels (`$ABC_IPU_SIMD`,
+//! DESIGN.md §11) at widths 1/8/16 on one thread.
+//! `ABC_IPU_BENCH_QUICK=1` shrinks iterations for smoke runs.
 
 #[path = "harness.rs"]
 mod harness;
@@ -24,6 +29,7 @@ use abc_ipu::coordinator::{chunk_batch, filter_transfer, top_k_selection, Transf
 use abc_ipu::data::synthetic;
 use abc_ipu::model::lanes::{resolve_parallelism, scalar_reference, LaneEngine};
 use abc_ipu::model::{Prior, Simulator};
+use abc_ipu::report::bench_schema::{validate_hot_path, HOT_PATH_SCHEMA, RATIO_WIDTHS};
 use abc_ipu::rng::Xoshiro256;
 
 const DAYS: usize = 49;
@@ -64,15 +70,17 @@ fn main() {
 
     // lane engine across widths, at 1 thread (isolates the width/SoA
     // axis against the scalar baseline) and at auto threads (the
-    // full-engine configuration whose speedup the artifact headlines).
-    // Neither knob ever changes the results.
+    // full-engine configuration whose speedup the artifact headlines),
+    // with the vectorized kernel pinned on. None of the knobs ever
+    // change the results.
     let lane_batch = if quick { 2_000 } else { 10_000 };
     let threads = resolve_parallelism(0).expect("valid $ABC_IPU_SIM_THREADS");
     let thread_axis: Vec<usize> = if threads == 1 { vec![1] } else { vec![1, threads] };
     for width in LANE_WIDTHS {
         for &t in &thread_axis {
-            let engine =
-                LaneEngine::new(ds.initial_condition(), width).with_parallelism(t);
+            let engine = LaneEngine::new(ds.initial_condition(), width)
+                .with_parallelism(t)
+                .with_simd(true);
             let mut key = 0u32;
             suite.bench(
                 format!("lane_engine_b{lane_batch}_w{width}_t{t}"),
@@ -86,6 +94,27 @@ fn main() {
                 },
             );
         }
+    }
+
+    // the same engine with the scalar kernel pinned (`$ABC_IPU_SIMD=off`
+    // equivalent) at one thread, at the ratio widths — the denominator
+    // of the artifact's `simd_ratio` axis (kernel flavor in isolation)
+    for width in RATIO_WIDTHS {
+        let engine = LaneEngine::new(ds.initial_condition(), width)
+            .with_parallelism(1)
+            .with_simd(false);
+        let mut key = 0u32;
+        suite.bench(
+            format!("lane_engine_b{lane_batch}_w{width}_t1_nosimd"),
+            1,
+            if quick { 2 } else { 5 },
+            || {
+                key += 1;
+                engine
+                    .sample_distance_batch(&prior, &observed, DAYS, lane_batch, [key, 1])
+                    .expect("lane run (scalar kernel)");
+            },
+        );
     }
 
     // native backend: one batched run end-to-end (the default engine's
@@ -147,27 +176,30 @@ fn main() {
         }
     }
 
-    // ---- BENCH_hot_path.json: the perf-trajectory artifact ----
-    // Two explicit axes against the same 1-thread scalar baseline:
+    // ---- BENCH_hot_path.json: the perf-trajectory artifact (v2) ----
+    // Two thread axes against the same 1-thread scalar baseline:
     // `lanes_single_thread` isolates the width/SoA staging cost, and
     // `lanes` is the full engine at auto threads — the headline
     // `widest` speedup therefore includes the thread axis (recorded in
-    // every row), as DESIGN.md §8 documents.
+    // every row), as DESIGN.md §8 documents. The `simd_ratio` axis
+    // isolates the kernel flavor instead: vectorized vs scalar kernel
+    // at one thread per ratio width (DESIGN.md §11). The document is
+    // validated against the shared schema before the suite reports
+    // success, so the bench can never commit a shape CI would reject.
     let scalar_mean = suite
         .get(&format!("scalar_oracle_b{scalar_batch}_d49"))
         .expect("scalar baseline measured")
         .mean_s;
     let scalar_sps = scalar_batch as f64 / scalar_mean;
+    let sps_of = |name: String| -> f64 {
+        lane_batch as f64 / suite.get(&name).expect("lane configuration measured").mean_s
+    };
     let row = |width: usize, t: usize| -> (String, f64) {
-        let mean = suite
-            .get(&format!("lane_engine_b{lane_batch}_w{width}_t{t}"))
-            .expect("lane configuration measured")
-            .mean_s;
-        let sps = lane_batch as f64 / mean;
+        let sps = sps_of(format!("lane_engine_b{lane_batch}_w{width}_t{t}"));
         let speedup = sps / scalar_sps;
         (
             format!(
-                "    {{\"width\": {width}, \"threads\": {t}, \
+                "    {{\"width\": {width}, \"threads\": {t}, \"simd\": true, \
                  \"samples_per_sec\": {sps:.1}, \"speedup_vs_scalar\": {speedup:.3}}}"
             ),
             speedup,
@@ -189,22 +221,46 @@ fn main() {
         lane_rows.push_str(&full);
         single_rows.push_str(&single);
     }
+    let mut ratio_rows = String::new();
+    let mut ratio_at_widest = 0.0f64;
+    for (i, &width) in RATIO_WIDTHS.iter().enumerate() {
+        let on = sps_of(format!("lane_engine_b{lane_batch}_w{width}_t1"));
+        let off = sps_of(format!("lane_engine_b{lane_batch}_w{width}_t1_nosimd"));
+        let ratio = on / off;
+        ratio_at_widest = ratio;
+        if i > 0 {
+            ratio_rows.push_str(",\n");
+        }
+        ratio_rows.push_str(&format!(
+            "    {{\"width\": {width}, \"on_samples_per_sec\": {on:.1}, \
+             \"off_samples_per_sec\": {off:.1}, \"ratio\": {ratio:.4}}}"
+        ));
+    }
     let json = format!(
-        "{{\n  \"suite\": \"hot_path\",\n  \"days\": {DAYS},\n  \"batch\": {lane_batch},\n  \
+        "{{\n  \"suite\": \"hot_path\",\n  \"schema\": {HOT_PATH_SCHEMA},\n  \
+         \"harness\": \"cargo bench --bench hot_path\",\n  \
+         \"days\": {DAYS},\n  \"batch\": {lane_batch},\n  \
          \"quick\": {quick},\n  \
          \"scalar_baseline\": {{\"name\": \"scalar_oracle_1thread\", \
          \"batch\": {scalar_batch}, \"samples_per_sec\": {scalar_sps:.1}}},\n  \
          \"lanes\": [\n{lane_rows}\n  ],\n  \
          \"lanes_single_thread\": [\n{single_rows}\n  ],\n  \
+         \"simd_ratio\": [\n{ratio_rows}\n  ],\n  \
          \"widest\": {{\"width\": {}, \"threads\": {threads}, \
          \"speedup_vs_scalar\": {widest_speedup:.3}}}\n}}\n",
         LANE_WIDTHS[LANE_WIDTHS.len() - 1]
     );
+    // self-check against the shared schema contract, in quick mode too
+    if let Err(e) = validate_hot_path(&json) {
+        panic!("hot_path produced an artifact its own schema rejects: {e}");
+    }
     let path = harness::write_repo_json("BENCH_hot_path.json", &json);
     suite.note(format!(
         "perf artifact → {} (widest lane speedup {widest_speedup:.2}x over the \
-         1-thread scalar baseline, at {threads} engine threads)",
-        path.display()
+         1-thread scalar baseline at {threads} engine threads; vectorized kernel \
+         {ratio_at_widest:.2}x the scalar kernel at width {}, 1 thread)",
+        path.display(),
+        RATIO_WIDTHS[RATIO_WIDTHS.len() - 1]
     ));
     suite.finish();
 }

@@ -1,0 +1,89 @@
+//! CI gate for the repo-root `BENCH_hot_path.json` perf artifact.
+//!
+//! Validates the artifact against the shared schema contract
+//! (`report::bench_schema`, schema v2) and prints its headline numbers.
+//! Exit status is the gate: nonzero when the file is missing, the JSON
+//! is malformed, the schema version is stale, any required field is
+//! absent or non-positive — and, with `--require-simd-speedup`, when
+//! the vectorized kernel is slower than the scalar kernel at the widest
+//! ratio width (16 lanes, 1 thread).
+//!
+//! ```text
+//! cargo bench --bench hot_path        # writes BENCH_hot_path.json
+//! cargo run --release --example check_bench -- --require-simd-speedup
+//! ```
+//!
+//! Flags: `--path FILE` overrides the default artifact location
+//! (`<repo root>/BENCH_hot_path.json`).
+
+use abc_ipu::report::bench_schema::{validate_hot_path, RATIO_WIDTHS};
+use abc_ipu::util::cli::Spec;
+
+fn main() {
+    let args = match Spec::new()
+        .values(&["path"])
+        .bools(&["require-simd-speedup"])
+        .parse(std::env::args().skip(1))
+    {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("check_bench: {e}");
+            std::process::exit(2);
+        }
+    };
+    let default_path = {
+        let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        p.pop(); // rust/ → repo root
+        p.push("BENCH_hot_path.json");
+        p
+    };
+    let path = args
+        .get("path")
+        .map(std::path::PathBuf::from)
+        .unwrap_or(default_path);
+
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!(
+                "check_bench: cannot read {} ({e}) — run `make bench-hot` first",
+                path.display()
+            );
+            std::process::exit(1);
+        }
+    };
+    let summary = match validate_hot_path(&text) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("check_bench: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "{}: schema v{}{}, harness `{}`",
+        path.display(),
+        summary.schema,
+        if summary.quick { " (quick mode)" } else { "" },
+        summary.harness
+    );
+    println!(
+        "  widest lane speedup: {:.2}x over the 1-thread scalar baseline (width {})",
+        summary.widest_speedup, summary.widest_width
+    );
+    for r in &summary.simd_ratios {
+        println!(
+            "  simd ratio @ width {:>2}: {:.2}x ({:.0} vs {:.0} samples/sec, 1 thread)",
+            r.width, r.ratio, r.on_samples_per_sec, r.off_samples_per_sec
+        );
+    }
+    if args.has("require-simd-speedup") {
+        if let Err(e) = summary.require_simd_speedup() {
+            eprintln!("check_bench: {e}");
+            std::process::exit(1);
+        }
+        println!(
+            "  ok: vectorized kernel >= scalar kernel at width {}",
+            RATIO_WIDTHS[RATIO_WIDTHS.len() - 1]
+        );
+    }
+}

@@ -94,6 +94,10 @@ pub struct AbcJob {
     /// either way). A pure performance knob: the merged stream is
     /// bit-identical for every shard count (DESIGN.md §9).
     pub shards: usize,
+    /// Requested kernel for lane-batched engines: vectorized, scalar or
+    /// engine default (`$ABC_IPU_SIMD` wins either way). A pure
+    /// performance knob: the kernels are bit-identical (DESIGN.md §11).
+    pub simd: crate::model::SimdMode,
 }
 
 impl AbcJob {
@@ -115,6 +119,7 @@ impl AbcJob {
             consts,
             lanes: 0,
             shards: 0,
+            simd: crate::model::SimdMode::Auto,
         }
     }
 
@@ -127,6 +132,13 @@ impl AbcJob {
     /// Pin the requested single-job shard count (`0` = auto/solo).
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shards = shards;
+        self
+    }
+
+    /// Pin the requested kernel (`Auto` = engine default, currently
+    /// vectorized).
+    pub fn with_simd(mut self, simd: crate::model::SimdMode) -> Self {
+        self.simd = simd;
         self
     }
 
@@ -336,10 +348,12 @@ mod tests {
             consts: [155.0, 2.0, 3.0, 6e7],
             lanes: 0,
             shards: 0,
+            simd: crate::model::SimdMode::Auto,
         };
         job.validate().unwrap();
         job.clone().with_lanes(16).validate().unwrap();
         job.clone().with_shards(8).validate().unwrap();
+        job.clone().with_simd(crate::model::SimdMode::Off).validate().unwrap();
 
         let mut bad = job.clone();
         bad.observed.truncate(5);

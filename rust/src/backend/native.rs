@@ -18,10 +18,13 @@
 //! `$ABC_IPU_SIM_THREADS` (default 1 here, so N device workers don't
 //! oversubscribe the host). The lane width defaults to auto and can be
 //! pinned per job (`AbcJob::lanes`, `RunConfig::lanes`) or globally
-//! (`$ABC_IPU_LANES`).
+//! (`$ABC_IPU_LANES`); the kernel (vectorized vs scalar, DESIGN.md §11)
+//! likewise per job (`AbcJob::simd`, `RunConfig::simd`) or globally
+//! (`$ABC_IPU_SIMD`).
 
 use super::{AbcEngine, AbcJob, AbcRunOutput, Backend};
 use crate::model::lanes::LaneEngine;
+use crate::model::simd::resolve_simd;
 use crate::model::{InitialCondition, Prior, Simulator, N_COMPARTMENTS, N_PARAMS, N_TRANSITIONS};
 use crate::rng::{key_u64, splitmix64, Xoshiro256};
 use crate::{Error, Result};
@@ -137,7 +140,8 @@ impl Backend for NativeBackend {
     fn open_engine(&self, _device: u32, job: &AbcJob) -> Result<Box<dyn AbcEngine>> {
         job.validate()?;
         Ok(Box::new(NativeEngine {
-            engine: LaneEngine::auto(initial_condition(&job.consts), job.lanes)?,
+            engine: LaneEngine::auto(initial_condition(&job.consts), job.lanes)?
+                .with_simd(resolve_simd(job.simd)?),
             prior: Prior::new(job.prior_low, job.prior_high)?,
             observed: job.observed.clone(),
             days: job.days,
@@ -230,6 +234,7 @@ mod tests {
             consts: ds.consts(),
             lanes: 0,
             shards: 0,
+            simd: crate::model::SimdMode::Auto,
         }
     }
 

@@ -186,10 +186,10 @@ fn fold_config(
 /// backend, dataset (name, fit window, observed bits), batch geometry,
 /// effective tolerance bits, master seed, prior box bits, return
 /// strategy, stop rule and run budget. Deliberately **excludes**
-/// `devices`, `lanes`, `shards` and the checkpoint fields themselves —
-/// those are performance knobs under the determinism contract, so a
-/// job may be resumed on a different pool geometry and still merge
-/// bit-identically.
+/// `devices`, `lanes`, `shards`, `simd` and the checkpoint fields
+/// themselves — those are performance knobs under the determinism
+/// contract, so a job may be resumed on a different pool geometry (or
+/// kernel flavor) and still merge bit-identically.
 pub fn job_fingerprint(spec: &crate::scheduler::JobSpec) -> u64 {
     let mut h = fnv1a64(0, spec.name.as_bytes());
     h = fold_config(h, &spec.config, &spec.dataset, spec.tolerance());

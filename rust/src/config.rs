@@ -71,6 +71,11 @@ pub struct RunConfig {
     /// way; clamped to the batch). Performance-only: the merged result
     /// is bit-identical for every shard count (DESIGN.md §9).
     pub shards: usize,
+    /// Kernel selection for the native SoA engine: vectorized (`on`),
+    /// scalar (`off`) or engine default (`auto`, currently vectorized);
+    /// `$ABC_IPU_SIMD` overrides either way. Performance-only: the two
+    /// kernels are bit-identical (DESIGN.md §11).
+    pub simd: crate::model::SimdMode,
     /// Crash-safe checkpoint file (`None` = checkpointing off;
     /// `$ABC_IPU_CHECKPOINT` overrides either way, empty = off). The
     /// leader snapshots run-frontier state here and `resume` restores
@@ -102,6 +107,7 @@ impl Default for RunConfig {
             max_runs: 0,
             lanes: 0,
             shards: 0,
+            simd: crate::model::SimdMode::Auto,
             checkpoint: None,
             checkpoint_interval: 1,
             resume: false,
@@ -207,6 +213,9 @@ impl RunConfig {
         if let Some(n) = v.get("shards") {
             cfg.shards = n.as_usize()?;
         }
+        if let Some(s) = v.get("simd") {
+            cfg.simd = crate::model::SimdMode::parse(s.as_str()?)?;
+        }
         if let Some(c) = v.get("checkpoint") {
             cfg.checkpoint = match c {
                 Json::Null => None,
@@ -263,6 +272,7 @@ impl RunConfig {
         m.insert("max_runs".into(), Json::Num(self.max_runs as f64));
         m.insert("lanes".into(), Json::Num(self.lanes as f64));
         m.insert("shards".into(), Json::Num(self.shards as f64));
+        m.insert("simd".into(), Json::Str(self.simd.as_str().into()));
         m.insert(
             "checkpoint".into(),
             match &self.checkpoint {
@@ -486,6 +496,21 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.shards = crate::backend::MAX_SHARDS + 1;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn simd_knob_defaults_parses_and_round_trips() {
+        use crate::model::SimdMode;
+        assert_eq!(RunConfig::default().simd, SimdMode::Auto);
+        for (raw, want) in
+            [("on", SimdMode::On), ("off", SimdMode::Off), ("auto", SimdMode::Auto)]
+        {
+            let cfg = RunConfig::from_json(&format!(r#"{{"simd": "{raw}"}}"#)).unwrap();
+            assert_eq!(cfg.simd, want, "{raw}");
+            let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(parsed, cfg, "{raw}");
+        }
+        assert!(RunConfig::from_json(r#"{"simd": "fast"}"#).is_err());
     }
 
     #[test]

@@ -77,3 +77,68 @@ pub struct AcceptedSample {
     /// Index within the run's batch.
     pub index: u32,
 }
+
+/// Order-sensitive 64-bit fingerprint of an accepted-sample stream.
+///
+/// Chains [`crate::rng::splitmix64`] over every sample's
+/// determinism-relevant payload — `run`, `index`, each `theta[i]` bit
+/// pattern, and the `distance` bit pattern — starting from the FNV-1a
+/// 64-bit offset basis. `device` is deliberately excluded: which worker
+/// simulated a run is a scheduling accident, not part of the
+/// determinism contract (see `checkpoint::job_fingerprint`).
+///
+/// Two streams fingerprint equal iff they contain bit-identical samples
+/// in the same order, which is exactly the replayable invariant the
+/// golden-stream suite (`tests/golden_streams.rs`) pins across lane
+/// widths, shard counts, and the `$ABC_IPU_SIMD` kernel knob.
+pub fn stream_fingerprint(samples: &[AcceptedSample]) -> u64 {
+    use crate::rng::splitmix64;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a 64-bit offset basis
+    for s in samples {
+        h = splitmix64(h ^ s.run);
+        h = splitmix64(h ^ s.index as u64);
+        for x in s.theta {
+            h = splitmix64(h ^ x.to_bits() as u64);
+        }
+        h = splitmix64(h ^ s.distance.to_bits() as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(run: u64, index: u32, device: u32, bias: f32) -> AcceptedSample {
+        AcceptedSample {
+            theta: std::array::from_fn(|i| bias + i as f32 * 0.25),
+            distance: bias * 3.0 + 1.0,
+            device,
+            run,
+            index,
+        }
+    }
+
+    #[test]
+    fn fingerprint_ignores_device_but_not_order_or_payload() {
+        let a = vec![sample(0, 0, 0, 0.5), sample(1, 3, 0, 1.5)];
+        // same stream attributed to different devices → identical print
+        let b = vec![sample(0, 0, 7, 0.5), sample(1, 3, 2, 1.5)];
+        assert_eq!(stream_fingerprint(&a), stream_fingerprint(&b));
+
+        // order matters
+        let swapped = vec![a[1], a[0]];
+        assert_ne!(stream_fingerprint(&a), stream_fingerprint(&swapped));
+
+        // any payload bit matters
+        let mut tweaked = a.clone();
+        tweaked[1].distance = f32::from_bits(tweaked[1].distance.to_bits() ^ 1);
+        assert_ne!(stream_fingerprint(&a), stream_fingerprint(&tweaked));
+        let mut retheta = a.clone();
+        retheta[0].theta[4] += 1.0;
+        assert_ne!(stream_fingerprint(&a), stream_fingerprint(&retheta));
+
+        // empty stream pins to the offset basis
+        assert_eq!(stream_fingerprint(&[]), 0xcbf2_9ce4_8422_2325);
+    }
+}

@@ -5,6 +5,7 @@
 //! used by the fused host path (and the fused Pallas kernel), which
 //! avoids materializing trajectories.
 
+use super::simd::F32xL;
 use super::{State, N_OBSERVED};
 
 /// Euclidean distance between two `[3, days]` row-major series.
@@ -30,6 +31,28 @@ pub fn sq_distance_day(state: &State, observed: &[f32], t: usize, days: usize) -
     let da = state[A] - observed[t];
     let dr = state[R] - observed[days + t];
     let dd = state[D] - observed[2 * days + t];
+    da * da + dr * dr + dd * dd
+}
+
+/// Vector form of [`sq_distance_day`]: the squared day-`t` residual for
+/// a whole vector of lanes at once, given the observable compartments
+/// as lane vectors. The day's observations broadcast (every lane
+/// compares against the same data), and the expression tree is the
+/// scalar one — `(da·da + dr·dr) + dd·dd` — so each lane equals the
+/// scalar call bit-for-bit.
+#[inline]
+pub fn sq_distance_day_lanes(
+    a: F32xL,
+    r: F32xL,
+    d: F32xL,
+    observed: &[f32],
+    t: usize,
+    days: usize,
+) -> F32xL {
+    debug_assert_eq!(observed.len(), N_OBSERVED * days);
+    let da = a - F32xL::splat(observed[t]);
+    let dr = r - F32xL::splat(observed[days + t]);
+    let dd = d - F32xL::splat(observed[2 * days + t]);
     da * da + dr * dr + dd * dd
 }
 
@@ -61,6 +84,34 @@ mod tests {
         }
         let bulk = euclidean_distance(&traj, &observed);
         assert!((total.sqrt() - bulk).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lane_residual_equals_scalar_per_lane() {
+        use crate::model::simd::VLEN;
+        let days = 5;
+        let observed: Vec<f32> = (0..15).map(|i| i as f32 * 2.5).collect();
+        // VLEN distinct states, gathered into lane vectors
+        let states: Vec<State> = (0..VLEN)
+            .map(|l| {
+                let x = l as f32;
+                [0.0, 0.0, 10.0 + x * 3.0, 5.0 - x, 1.0 + x * 0.5, 0.0]
+            })
+            .collect();
+        use crate::model::state_idx::{A, D, R};
+        let a = F32xL::load(&states.iter().map(|s| s[A]).collect::<Vec<_>>());
+        let r = F32xL::load(&states.iter().map(|s| s[R]).collect::<Vec<_>>());
+        let d = F32xL::load(&states.iter().map(|s| s[D]).collect::<Vec<_>>());
+        for t in 0..days {
+            let v = sq_distance_day_lanes(a, r, d, &observed, t, days);
+            for (l, s) in states.iter().enumerate() {
+                assert_eq!(
+                    v.lane(l).to_bits(),
+                    sq_distance_day(s, &observed, t, days).to_bits(),
+                    "day {t} lane {l}"
+                );
+            }
+        }
     }
 
     #[test]

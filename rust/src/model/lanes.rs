@@ -16,12 +16,15 @@
 //!    across widths 1/4/8/16/… and bit-identical to the scalar
 //!    [`Simulator`] oracle driven with the same per-lane streams
 //!    ([`scalar_reference`]). `tests/prop_lanes.rs` pins this.
-//! 3. **One arithmetic definition.** Per-lane dynamics delegate to the
-//!    very same [`super::step`] / [`super::sq_distance_day`] /
-//!    [`InitialCondition::init_state`] the scalar oracle uses, so the
-//!    oracle weld is by construction, not by floating-point luck. A
-//!    future SIMD-intrinsic or accelerator kernel replaces the inner
-//!    loop and must keep passing the differential suite.
+//! 3. **One arithmetic definition.** The scalar kernel path delegates
+//!    to the very same [`super::step`] / [`super::sq_distance_day`] /
+//!    [`InitialCondition::init_state`] the scalar oracle uses, and the
+//!    vectorized path ([`super::simd`], DESIGN.md §11) mirrors those
+//!    expression trees op-for-op over [`F32xL`] lanes — IEEE-exact ops
+//!    plus per-element libm transcendentals, so the oracle weld is by
+//!    construction, not by floating-point luck. Both kernels are kept:
+//!    `$ABC_IPU_SIMD` / the per-job [`SimdMode`] pick one, and the
+//!    differential suites pin them bit-identical.
 //!
 //! Because lanes are independent pure functions, the engine can also
 //! split lane *groups* across threads deterministically — the paper's
@@ -30,11 +33,12 @@
 //! determinism trivial" is obsolete: per-lane keying makes intra-run
 //! parallelism deterministic by construction). See DESIGN.md §8.
 
+use super::simd::{self, resolve_simd, F32xL, SimdMode, VLEN};
 use super::{
-    sq_distance_day, step, InitialCondition, Prior, Simulator, State, Theta, N_COMPARTMENTS,
-    N_OBSERVED, N_PARAMS, N_TRANSITIONS,
+    sq_distance_day, sq_distance_day_lanes, step, InitialCondition, Prior, Simulator, State,
+    Theta, N_COMPARTMENTS, N_OBSERVED, N_PARAMS, N_TRANSITIONS,
 };
-use crate::rng::{lane_rng, Xoshiro256};
+use crate::rng::{box_muller, lane_rng, Xoshiro256};
 use crate::{Error, Result};
 
 /// Default lane width when the job/config leaves it at 0 ("auto").
@@ -89,43 +93,57 @@ pub fn resolve_parallelism(requested: usize) -> Result<usize> {
 
 /// The lane-batched SoA engine for one initial condition.
 ///
-/// `width` and `parallelism` shape execution only; outputs depend on
-/// `(ic, prior, observed, days, batch, key)` alone.
+/// `width`, `parallelism` and `simd` shape execution only; outputs
+/// depend on `(ic, prior, observed, days, batch, key)` alone.
 #[derive(Debug, Clone)]
 pub struct LaneEngine {
     ic: InitialCondition,
     width: usize,
     parallelism: usize,
+    simd: bool,
 }
 
 impl LaneEngine {
     /// An engine with an explicit lane width (clamped to
-    /// `[1, MAX_LANE_WIDTH]`) and no intra-run threading. Explicit
-    /// widths ignore `$ABC_IPU_LANES`, so differential tests can pin
-    /// specific widths under any environment.
+    /// `[1, MAX_LANE_WIDTH]`), no intra-run threading and the
+    /// vectorized kernel. Explicit widths ignore `$ABC_IPU_LANES`, so
+    /// differential tests can pin specific widths under any environment
+    /// (pin the kernel too with [`LaneEngine::with_simd`]).
     pub fn new(ic: InitialCondition, width: usize) -> Self {
-        Self { ic, width: width.clamp(1, MAX_LANE_WIDTH), parallelism: 1 }
+        Self { ic, width: width.clamp(1, MAX_LANE_WIDTH), parallelism: 1, simd: true }
     }
 
     /// The production (engine-path) configuration: width from
-    /// [`resolve_width`]`(requested)`; intra-run threading defaults to
-    /// **1** because coordinator/scheduler device workers already
-    /// parallelize across runs — N workers each spawning one thread per
-    /// core would oversubscribe the host. Opt in with
-    /// `$ABC_IPU_SIM_THREADS` (`0` = one per core) when running few
-    /// devices on a many-core host; the hot-path bench requests auto
-    /// threads explicitly.
+    /// [`resolve_width`]`(requested)`; kernel from
+    /// [`resolve_simd`]`(Auto)` (vectorized unless `$ABC_IPU_SIMD=off`);
+    /// intra-run threading defaults to **1** because
+    /// coordinator/scheduler device workers already parallelize across
+    /// runs — N workers each spawning one thread per core would
+    /// oversubscribe the host. Opt in with `$ABC_IPU_SIM_THREADS`
+    /// (`0` = one per core) when running few devices on a many-core
+    /// host; the hot-path bench requests auto threads explicitly.
     pub fn auto(ic: InitialCondition, requested_width: usize) -> Result<Self> {
         Ok(Self {
             ic,
             width: resolve_width(requested_width)?,
             parallelism: resolve_parallelism(1)?,
+            simd: resolve_simd(SimdMode::Auto)?,
         })
     }
 
     /// Override the intra-run thread count (clamped to >= 1).
     pub fn with_parallelism(mut self, threads: usize) -> Self {
         self.parallelism = threads.max(1);
+        self
+    }
+
+    /// Hard-pin the kernel choice (`true` = vectorized, `false` =
+    /// scalar), ignoring `$ABC_IPU_SIMD` — the differential suites use
+    /// this to compare both kernels inside one process. Production
+    /// paths pass [`resolve_simd`]`(job.simd)` instead, so the
+    /// environment keeps the last word there.
+    pub fn with_simd(mut self, simd: bool) -> Self {
+        self.simd = simd;
         self
     }
 
@@ -137,6 +155,11 @@ impl LaneEngine {
     /// The configured intra-run thread count.
     pub fn parallelism(&self) -> usize {
         self.parallelism
+    }
+
+    /// Whether the vectorized kernel is selected.
+    pub fn simd_enabled(&self) -> bool {
+        self.simd
     }
 
     /// The initial condition lanes are anchored to.
@@ -243,8 +266,30 @@ impl LaneEngine {
 
     /// Simulate one group of `dist_out.len()` lanes starting at global
     /// lane index `lane0`, writing θ and distances into the group's
-    /// output slices.
+    /// output slices. Dispatches to the vectorized or scalar kernel —
+    /// bit-identical by the §11 rules, pinned by `tests/prop_lanes.rs`
+    /// and `tests/golden_streams.rs`.
     fn run_group(
+        &self,
+        prior: &Prior,
+        observed: &[f32],
+        days: usize,
+        key: [u32; 2],
+        lane0: usize,
+        theta_out: &mut [f32],
+        dist_out: &mut [f32],
+    ) {
+        if self.simd {
+            self.run_group_simd(prior, observed, days, key, lane0, theta_out, dist_out)
+        } else {
+            self.run_group_scalar(prior, observed, days, key, lane0, theta_out, dist_out)
+        }
+    }
+
+    /// The scalar kernel: per-lane delegation to the oracle's
+    /// [`super::step`] / [`super::sq_distance_day`]. Kept as the
+    /// always-available reference path (`$ABC_IPU_SIMD=off`).
+    fn run_group_scalar(
         &self,
         prior: &Prior,
         observed: &[f32],
@@ -292,6 +337,165 @@ impl LaneEngine {
         for (l, a) in acc.iter().enumerate() {
             dist_out[l] = a.sqrt();
             theta_out[l * N_PARAMS..(l + 1) * N_PARAMS].copy_from_slice(&thetas[l]);
+        }
+    }
+
+    /// The vectorized kernel: whole [`F32xL`] vectors iterate over the
+    /// `[6, W]` compartment, `[8, W]` θ and `[5, W]` noise slabs, with a
+    /// masked scalar tail for `W % VLEN != 0` (partial loads pad, partial
+    /// stores mask — pad lanes never touch an RNG and are never written
+    /// back). Noise comes from [`NoiseSlab`], the row-at-a-time Box–Muller
+    /// fill that preserves each lane's exact scalar draw order.
+    fn run_group_simd(
+        &self,
+        prior: &Prior,
+        observed: &[f32],
+        days: usize,
+        key: [u32; 2],
+        lane0: usize,
+        theta_out: &mut [f32],
+        dist_out: &mut [f32],
+    ) {
+        use super::state_idx::{A, D, R};
+        let w = dist_out.len();
+        debug_assert_eq!(theta_out.len(), w * N_PARAMS);
+
+        let mut rngs: Vec<Xoshiro256> =
+            (0..w).map(|l| lane_rng(key, (lane0 + l) as u64)).collect();
+        let thetas: Vec<Theta> = rngs.iter_mut().map(|r| prior.sample(r)).collect();
+        // θ transposed into [8, W] slabs so vector chunks load straight.
+        let mut theta_slabs: [Vec<f32>; N_PARAMS] = std::array::from_fn(|_| vec![0.0f32; w]);
+        for (l, theta) in thetas.iter().enumerate() {
+            for (p, v) in theta.iter().enumerate() {
+                theta_slabs[p][l] = *v;
+            }
+        }
+
+        let mut state = LaneState::init(&self.ic, &thetas, w);
+        let mut acc = vec![0.0f32; w];
+        // Day-0 residual straight off the init slabs.
+        for c in (0..w).step_by(VLEN) {
+            let end = (c + VLEN).min(w);
+            let res = sq_distance_day_lanes(
+                F32xL::load_partial(&state.slabs[A][c..end], 0.0),
+                F32xL::load_partial(&state.slabs[R][c..end], 0.0),
+                F32xL::load_partial(&state.slabs[D][c..end], 0.0),
+                observed,
+                0,
+                days,
+            );
+            res.store_partial(&mut acc[c..end]);
+        }
+
+        let population = F32xL::splat(self.ic.population);
+        let mut noise = vec![0.0f32; N_TRANSITIONS * w];
+        let mut slab = NoiseSlab::new(w);
+        for t in 1..days {
+            slab.fill_day(&mut rngs, &mut noise);
+            for c in (0..w).step_by(VLEN) {
+                let end = (c + VLEN).min(w);
+                // Pad lanes load a fill of 0.0 — they compute harmless
+                // garbage that the partial stores below never write.
+                let s: [F32xL; N_COMPARTMENTS] = std::array::from_fn(|comp| {
+                    F32xL::load_partial(&state.slabs[comp][c..end], 0.0)
+                });
+                let th: [F32xL; N_PARAMS] = std::array::from_fn(|p| {
+                    F32xL::load_partial(&theta_slabs[p][c..end], 0.0)
+                });
+                let z: [F32xL; N_TRANSITIONS] = std::array::from_fn(|k| {
+                    F32xL::load_partial(&noise[k * w + c..k * w + end], 0.0)
+                });
+                let next = simd::step_lanes(&s, &th, &z, population);
+                let res = sq_distance_day_lanes(next[A], next[R], next[D], observed, t, days);
+                let sum = F32xL::load_partial(&acc[c..end], 0.0) + res;
+                sum.store_partial(&mut acc[c..end]);
+                for (comp, row) in next.iter().enumerate() {
+                    row.store_partial(&mut state.slabs[comp][c..end]);
+                }
+            }
+        }
+        for c in (0..w).step_by(VLEN) {
+            let end = (c + VLEN).min(w);
+            let d = F32xL::load_partial(&acc[c..end], 0.0).sqrt();
+            d.store_partial(&mut dist_out[c..end]);
+        }
+        for (l, theta) in thetas.iter().enumerate() {
+            theta_out[l * N_PARAMS..(l + 1) * N_PARAMS].copy_from_slice(theta);
+        }
+    }
+}
+
+/// Row-at-a-time Box–Muller fill for the `[5, W]` noise slab — the
+/// vectorized form of `W` independent [`Xoshiro256::normal_f32`] lanes.
+///
+/// Correctness rests on two facts. First, each lane owns a private RNG,
+/// so interleaving *across* lanes (draw `u1` for every lane, then `u2`
+/// for every lane) cannot change any lane's within-stream draw order —
+/// which stays exactly the scalar `u1, u2, u1, u2, …`. Second, every
+/// lane of a group draws the same count of normals per day (5) and
+/// uniforms in between (prior sampling never touches the spare cache),
+/// so the Box–Muller spare parity is **group-wide**: either every lane
+/// has a cached spare or none does, and one `have_spare` flag replaces
+/// `W` per-lane `Option`s. Rows are then filled pair-wise — spare row
+/// first when present, then `(primary, secondary)` row pairs via
+/// [`box_muller`] (the same arithmetic the scalar path calls), with an
+/// odd last row banking its secondaries as the next day's spares.
+struct NoiseSlab {
+    /// Cached second Box–Muller normal per lane (f64, pre-cast).
+    spare: Vec<f64>,
+    /// Group-wide spare parity (see above).
+    have_spare: bool,
+    /// Scratch rows for the uniform draws of one pair round.
+    u1: Vec<f64>,
+    u2: Vec<f64>,
+}
+
+impl NoiseSlab {
+    fn new(w: usize) -> Self {
+        Self {
+            spare: vec![0.0; w],
+            have_spare: false,
+            u1: vec![0.0; w],
+            u2: vec![0.0; w],
+        }
+    }
+
+    /// Fill one day's `[5, W]` slab (`out[k * w + l]` = transition `k`
+    /// of lane `l`), drawing from each lane's RNG in exactly the order
+    /// the scalar `normal_f32` loop would.
+    fn fill_day(&mut self, rngs: &mut [Xoshiro256], out: &mut [f32]) {
+        let w = rngs.len();
+        debug_assert_eq!(out.len(), N_TRANSITIONS * w);
+        let mut k = 0;
+        if self.have_spare {
+            for (l, &s) in self.spare.iter().enumerate() {
+                out[l] = s as f32;
+            }
+            self.have_spare = false;
+            k = 1;
+        }
+        while k < N_TRANSITIONS {
+            for (l, rng) in rngs.iter_mut().enumerate() {
+                self.u1[l] = 1.0 - rng.uniform();
+                self.u2[l] = rng.uniform();
+            }
+            if k + 1 < N_TRANSITIONS {
+                // full pair: primary row k, secondary row k+1
+                for l in 0..w {
+                    let (primary, secondary) = box_muller(self.u1[l], self.u2[l]);
+                    out[k * w + l] = primary as f32;
+                    out[(k + 1) * w + l] = secondary as f32;
+                }
+            } else {
+                // odd last row: bank the secondaries for the next day
+                for l in 0..w {
+                    let (primary, secondary) = box_muller(self.u1[l], self.u2[l]);
+                    out[k * w + l] = primary as f32;
+                    self.spare[l] = secondary;
+                }
+                self.have_spare = true;
+            }
+            k += 2;
         }
     }
 }
@@ -498,5 +702,67 @@ mod tests {
         // valid values keep their historical meaning
         assert_eq!(parse_usize_override(LANES_ENV, Some("8")).unwrap(), Some(8));
         assert_eq!(parse_usize_override(LANES_ENV, None).unwrap(), None);
+    }
+
+    #[test]
+    fn noise_slab_fill_is_bit_identical_to_per_lane_normals() {
+        // The vectorized Box–Muller fill must reproduce the scalar
+        // lane-major fill exactly — including the spare-cache parity
+        // across consecutive days and partial (tail-group) widths.
+        for w in [1usize, 3, 7, 8, 16] {
+            let mut slab_rngs: Vec<Xoshiro256> =
+                (0..w).map(|l| lane_rng([5, 6], l as u64)).collect();
+            let mut scalar_rngs: Vec<Xoshiro256> =
+                (0..w).map(|l| lane_rng([5, 6], l as u64)).collect();
+            // lanes enter a day loop after 8 prior uniforms, like a run
+            for rng in slab_rngs.iter_mut().chain(scalar_rngs.iter_mut()) {
+                for _ in 0..N_PARAMS {
+                    rng.uniform();
+                }
+            }
+            let mut slab = NoiseSlab::new(w);
+            let mut got = vec![0.0f32; N_TRANSITIONS * w];
+            let mut want = vec![0.0f32; N_TRANSITIONS * w];
+            for day in 0..6 {
+                slab.fill_day(&mut slab_rngs, &mut got);
+                for (l, rng) in scalar_rngs.iter_mut().enumerate() {
+                    for k in 0..N_TRANSITIONS {
+                        want[k * w + l] = rng.normal_f32();
+                    }
+                }
+                let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb, "width {w} day {day}");
+            }
+            // and the underlying generators stay in lockstep
+            for (a, b) in slab_rngs.iter_mut().zip(scalar_rngs.iter_mut()) {
+                assert_eq!(a.next_u64(), b.next_u64(), "width {w}: stream drift");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_and_scalar_kernels_are_bit_identical() {
+        let days = 11;
+        let batch = 29; // tail group at every tested width
+        let obs = observed(days);
+        let prior = Prior::paper();
+        for width in [1usize, 4, 7, 8, 16] {
+            let on = LaneEngine::new(ic(), width).with_simd(true);
+            let off = LaneEngine::new(ic(), width).with_simd(false);
+            let (t_on, d_on) =
+                on.sample_distance_batch(&prior, &obs, days, batch, [21, 42]).unwrap();
+            let (t_off, d_off) =
+                off.sample_distance_batch(&prior, &obs, days, batch, [21, 42]).unwrap();
+            assert_eq!(bits(&t_on), bits(&t_off), "thetas at width {width}");
+            assert_eq!(bits(&d_on), bits(&d_off), "distances at width {width}");
+        }
+    }
+
+    #[test]
+    fn simd_knob_defaults_and_accessor() {
+        assert!(LaneEngine::new(ic(), 8).simd_enabled());
+        assert!(!LaneEngine::new(ic(), 8).with_simd(false).simd_enabled());
+        assert!(LaneEngine::new(ic(), 8).with_simd(false).with_simd(true).simd_enabled());
     }
 }

@@ -17,19 +17,23 @@
 //!
 //! The production hot path is [`lanes`]: a structure-of-arrays kernel
 //! stepping `W` trajectories per day-iteration with counter-derived
-//! per-lane RNG streams (DESIGN.md §8). The scalar [`Simulator`] stays
-//! as the reference implementation the lane engine — and every future
+//! per-lane RNG streams (DESIGN.md §8), vectorized over the [`simd`]
+//! abstraction (DESIGN.md §11) with the scalar kernel kept as the
+//! always-available oracle path. The scalar [`Simulator`] stays as the
+//! reference implementation the lane engine — and every future
 //! SIMD/accelerator backend — is validated against.
 
 mod distance;
 pub mod epi;
 pub mod lanes;
 mod prior;
+pub mod simd;
 mod simulator;
 
-pub use distance::{euclidean_distance, sq_distance_day};
+pub use distance::{euclidean_distance, sq_distance_day, sq_distance_day_lanes};
 pub use lanes::LaneEngine;
 pub use prior::Prior;
+pub use simd::SimdMode;
 pub use simulator::{simulate_distance_batch, simulate_traj, Simulator};
 
 /// Number of model parameters (eq. 1).

@@ -1,0 +1,488 @@
+//! Portable f32 vector abstraction for the lane-engine hot path.
+//!
+//! [`F32xL`] wraps a `[f32; VLEN]` and exposes exactly the operations
+//! the tau-leap kernel needs (add/sub/mul/div, unfused [`F32xL::fma`],
+//! [`F32xL::sqrt`], [`F32xL::ln`], [`F32xL::powf`], [`F32xL::floor`],
+//! [`F32xL::min`]/[`F32xL::max`], [`F32xL::le`] + [`MaskxL::select`]).
+//! It is written in portable stable Rust — every operation is a plain
+//! element-wise loop over the array, which LLVM auto-vectorizes into
+//! SSE/AVX/NEON packed instructions — so a `std::simd` or intrinsics
+//! backend can drop in later behind the same API.
+//!
+//! # Bit-identity rules
+//!
+//! The lane engine's contract is *bit-identity* with the scalar oracle
+//! ([`super::lanes::scalar_reference`]), so this module is deliberately
+//! restricted to operations whose vector form is bit-identical to the
+//! scalar form:
+//!
+//! * **IEEE-exact ops** (`+ - * /`, `sqrt`, `floor`, `min`, `max`) are
+//!   correctly rounded per IEEE 754, so a packed lane equals the scalar
+//!   instruction bit-for-bit.
+//! * **[`F32xL::fma`] is unfused** — `a * b + c` with *two* roundings,
+//!   matching what the scalar kernel writes. A hardware FMA (one
+//!   rounding) would silently change results; if a backend ever fuses,
+//!   the differential suites (`tests/prop_lanes.rs`,
+//!   `tests/golden_streams.rs`) fail loudly.
+//! * **Transcendentals** (`ln`, `powf`) stay per-element calls into the
+//!   exact same `f32`/libm routines the scalar path uses. They are
+//!   *not* required to be correctly rounded by IEEE — only calling the
+//!   identical implementation guarantees identical bits, so a future
+//!   vector-math library (SVML, SLEEF) must NOT be substituted here
+//!   without re-blessing the golden fingerprints.
+//!
+//! `tests/simd_units.rs` pins the element-wise scalar equality property
+//! for every op, including denormals, ±0.0 and NaN payloads.
+//!
+//! # The `$ABC_IPU_SIMD` knob
+//!
+//! [`SimdMode`] is the per-job request (`RunConfig::simd` /
+//! `AbcJob::simd`), [`resolve_simd`] the one resolution policy:
+//! `$ABC_IPU_SIMD=on|off` overrides everything (the CI simd matrix),
+//! `auto`/unset honours the job knob, and `Auto` means **on** — the
+//! vectorized path is the production default, the scalar path the
+//! always-available oracle. Like `lanes`/`shards`, the knob is pure
+//! performance: results are bit-identical either way, so checkpoint
+//! fingerprints exclude it and a snapshot written with simd off resumes
+//! cleanly with simd on (`tests/prop_checkpoint.rs`).
+
+use crate::{Error, Result};
+
+/// Vector width (f32 lanes) of [`F32xL`]. 8 × f32 = one AVX2 register;
+/// on narrower ISAs LLVM splits the element loops into two SSE/NEON ops.
+pub const VLEN: usize = 8;
+
+/// Environment override for the simd path (`on`/`1`/`true`/`yes`,
+/// `off`/`0`/`false`/`no`; `auto`/empty/unset = honour the job knob).
+pub const SIMD_ENV: &str = "ABC_IPU_SIMD";
+
+/// Per-job simd request, resolved by [`resolve_simd`]. Serialized in
+/// `RunConfig` JSON as `"simd": "on" | "off" | "auto"`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Force the vectorized kernel.
+    On,
+    /// Force the scalar kernel (the oracle path).
+    Off,
+    /// Let the engine decide (currently: vectorized).
+    #[default]
+    Auto,
+}
+
+impl SimdMode {
+    /// Parse the JSON/CLI spelling. Case-insensitive; errors on
+    /// anything but `on`/`off`/`auto`.
+    pub fn parse(raw: &str) -> Result<Self> {
+        match raw.trim().to_ascii_lowercase().as_str() {
+            "on" => Ok(SimdMode::On),
+            "off" => Ok(SimdMode::Off),
+            "auto" => Ok(SimdMode::Auto),
+            _ => Err(Error::Config(format!(
+                "invalid simd mode `{raw}`: expected `on`, `off` or `auto`"
+            ))),
+        }
+    }
+
+    /// The canonical spelling (`parse` round-trips it).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdMode::On => "on",
+            SimdMode::Off => "off",
+            SimdMode::Auto => "auto",
+        }
+    }
+}
+
+/// Resolve whether the vectorized kernel runs: `$ABC_IPU_SIMD` wins
+/// when set to a boolean (`auto`/empty/unset defer), then the requested
+/// mode; `Auto` enables the vectorized path. Malformed values are a
+/// typed [`Error::Config`], never a silent fallback — the same policy
+/// as `lanes::resolve_width`.
+pub fn resolve_simd(requested: SimdMode) -> Result<bool> {
+    Ok(match crate::util::env::bool_override(SIMD_ENV)? {
+        Some(forced) => forced,
+        None => requested != SimdMode::Off,
+    })
+}
+
+/// A vector of [`VLEN`] f32 lanes. See the module docs for the
+/// bit-identity rules every operation obeys.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F32xL([f32; VLEN]);
+
+impl F32xL {
+    /// All lanes set to `v`.
+    #[inline]
+    pub fn splat(v: f32) -> Self {
+        Self([v; VLEN])
+    }
+
+    /// Load the first [`VLEN`] elements of `src` (panics if shorter —
+    /// full chunks only; tails go through [`F32xL::load_partial`]).
+    #[inline]
+    pub fn load(src: &[f32]) -> Self {
+        Self(std::array::from_fn(|i| src[i]))
+    }
+
+    /// Load `min(src.len(), VLEN)` lanes from `src`, padding the rest
+    /// with `fill`. The masked-tail loader: padded lanes compute
+    /// garbage that [`F32xL::store_partial`] never writes back.
+    #[inline]
+    pub fn load_partial(src: &[f32], fill: f32) -> Self {
+        Self(std::array::from_fn(|i| if i < src.len() { src[i] } else { fill }))
+    }
+
+    /// Store all [`VLEN`] lanes into `dst` (panics if shorter).
+    #[inline]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..VLEN].copy_from_slice(&self.0);
+    }
+
+    /// Store the first `min(dst.len(), VLEN)` lanes — the masked-tail
+    /// writer paired with [`F32xL::load_partial`]: lanes beyond
+    /// `dst.len()` are dropped, so tail-pad garbage never escapes.
+    #[inline]
+    pub fn store_partial(self, dst: &mut [f32]) {
+        let n = dst.len().min(VLEN);
+        dst[..n].copy_from_slice(&self.0[..n]);
+    }
+
+    /// The lanes as a plain array.
+    #[inline]
+    pub fn to_array(self) -> [f32; VLEN] {
+        self.0
+    }
+
+    /// One lane's value.
+    #[inline]
+    pub fn lane(self, i: usize) -> f32 {
+        self.0[i]
+    }
+
+    /// Unfused multiply-add `self * b + c`: **two** roundings, exactly
+    /// the scalar expression — never a hardware FMA (see module docs).
+    #[inline]
+    pub fn fma(self, b: Self, c: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] * b.0[i] + c.0[i]))
+    }
+
+    /// Element-wise `f32::sqrt` (IEEE correctly rounded).
+    #[inline]
+    pub fn sqrt(self) -> Self {
+        Self(self.0.map(f32::sqrt))
+    }
+
+    /// Element-wise `f32::ln` (same libm routine as the scalar path).
+    #[inline]
+    pub fn ln(self) -> Self {
+        Self(self.0.map(f32::ln))
+    }
+
+    /// Element-wise `f32::powf` (same libm routine as the scalar path).
+    #[inline]
+    pub fn powf(self, e: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i].powf(e.0[i])))
+    }
+
+    /// Element-wise `f32::floor`.
+    #[inline]
+    pub fn floor(self) -> Self {
+        Self(self.0.map(f32::floor))
+    }
+
+    /// Element-wise `f32::min` (IEEE minNum: a single NaN lane yields
+    /// the other operand, like the scalar clamps).
+    #[inline]
+    pub fn min(self, o: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i].min(o.0[i])))
+    }
+
+    /// Element-wise `f32::max` (IEEE maxNum, matching the scalar path).
+    #[inline]
+    pub fn max(self, o: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i].max(o.0[i])))
+    }
+
+    /// Element-wise `self <= o` (false for NaN, like the scalar `<=`).
+    #[inline]
+    pub fn le(self, o: Self) -> MaskxL {
+        MaskxL(std::array::from_fn(|i| self.0[i] <= o.0[i]))
+    }
+}
+
+impl std::ops::Add for F32xL {
+    type Output = Self;
+    #[inline]
+    fn add(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] + rhs.0[i]))
+    }
+}
+
+impl std::ops::Sub for F32xL {
+    type Output = Self;
+    #[inline]
+    fn sub(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] - rhs.0[i]))
+    }
+}
+
+impl std::ops::Mul for F32xL {
+    type Output = Self;
+    #[inline]
+    fn mul(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] * rhs.0[i]))
+    }
+}
+
+impl std::ops::Div for F32xL {
+    type Output = Self;
+    #[inline]
+    fn div(self, rhs: Self) -> Self {
+        Self(std::array::from_fn(|i| self.0[i] / rhs.0[i]))
+    }
+}
+
+/// A per-lane boolean mask, produced by comparisons ([`F32xL::le`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MaskxL([bool; VLEN]);
+
+impl MaskxL {
+    /// All lanes set to `v`.
+    #[inline]
+    pub fn splat(v: bool) -> Self {
+        Self([v; VLEN])
+    }
+
+    /// Lane-wise `if self { if_true } else { if_false }` — bitwise lane
+    /// selection, no arithmetic, so NaN payloads pass through intact.
+    #[inline]
+    pub fn select(self, if_true: F32xL, if_false: F32xL) -> F32xL {
+        F32xL(std::array::from_fn(|i| {
+            if self.0[i] {
+                if_true.0[i]
+            } else {
+                if_false.0[i]
+            }
+        }))
+    }
+
+    /// Whether any lane is set.
+    #[inline]
+    pub fn any(self) -> bool {
+        self.0.iter().any(|&b| b)
+    }
+
+    /// Whether every lane is set.
+    #[inline]
+    pub fn all(self) -> bool {
+        self.0.iter().all(|&b| b)
+    }
+}
+
+/// Vector form of [`super::response_rate`] (eq. 4): identical
+/// expression tree, so each lane equals the scalar call bit-for-bit.
+#[inline]
+pub fn response_rate_lanes(theta: &[F32xL; super::N_PARAMS], a: F32xL, r: F32xL, d: F32xL) -> F32xL {
+    use super::theta_idx::*;
+    let total = (a + r + d).max(F32xL::splat(0.0));
+    theta[ALPHA0] + theta[ALPHA] / (F32xL::splat(1.0) + total.powf(theta[N_EXP]))
+}
+
+/// Vector form of [`super::hazard`] (eq. 5), op-for-op.
+#[inline]
+pub fn hazard_lanes(
+    state: &[F32xL; super::N_COMPARTMENTS],
+    theta: &[F32xL; super::N_PARAMS],
+    population: F32xL,
+) -> [F32xL; super::N_TRANSITIONS] {
+    use super::state_idx::*;
+    use super::theta_idx::*;
+    let g = response_rate_lanes(theta, state[A], state[R], state[D]);
+    [
+        g * state[S] * state[I] / population,
+        theta[GAMMA] * state[I],
+        theta[BETA] * state[A],
+        theta[DELTA] * state[A],
+        theta[BETA] * theta[ETA] * state[I],
+    ]
+}
+
+/// Vector form of [`super::sample_transition`]:
+/// `max(floor(h + sqrt(h)·z), 0)` with the same two-rounding
+/// multiply-add as the scalar expression.
+#[inline]
+pub fn sample_transition_lanes(h: F32xL, z: F32xL) -> F32xL {
+    let zero = F32xL::splat(0.0);
+    let h = h.max(zero);
+    (h + h.sqrt() * z).floor().max(zero)
+}
+
+/// Vector form of [`super::step`]: one tau-leap day for [`VLEN`] lanes
+/// at once, with the scalar kernel's exact clamp priority (n2 before n5
+/// out of I, n3 before n4 out of A).
+#[inline]
+pub fn step_lanes(
+    state: &[F32xL; super::N_COMPARTMENTS],
+    theta: &[F32xL; super::N_PARAMS],
+    z: &[F32xL; super::N_TRANSITIONS],
+    population: F32xL,
+) -> [F32xL; super::N_COMPARTMENTS] {
+    use super::state_idx::*;
+    let h = hazard_lanes(state, theta, population);
+    let raw: [F32xL; super::N_TRANSITIONS] =
+        std::array::from_fn(|i| sample_transition_lanes(h[i], z[i]));
+    let n1 = raw[0].min(state[S]);
+    let n2 = raw[1].min(state[I]);
+    let n5 = raw[4].min(state[I] - n2);
+    let n3 = raw[2].min(state[A]);
+    let n4 = raw[3].min(state[A] - n3);
+    [
+        state[S] - n1,
+        state[I] + n1 - n2 - n5,
+        state[A] + n2 - n3 - n4,
+        state[R] + n3,
+        state[D] + n4,
+        state[RU] + n5,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splat_load_store_roundtrip() {
+        let xs: Vec<f32> = (0..VLEN).map(|i| i as f32 * 1.5 - 3.0).collect();
+        let v = F32xL::load(&xs);
+        let mut out = vec![0.0f32; VLEN];
+        v.store(&mut out);
+        assert_eq!(out, xs);
+        assert_eq!(F32xL::splat(2.5).to_array(), [2.5; VLEN]);
+        assert_eq!(v.lane(3), xs[3]);
+    }
+
+    #[test]
+    fn partial_load_pads_and_partial_store_masks() {
+        let src = [1.0f32, 2.0, 3.0];
+        let v = F32xL::load_partial(&src, 99.0);
+        assert_eq!(&v.to_array()[..3], &src);
+        assert!(v.to_array()[3..].iter().all(|&x| x == 99.0));
+        let mut dst = [-1.0f32; 3];
+        F32xL::splat(7.0).store_partial(&mut dst);
+        assert_eq!(dst, [7.0; 3]);
+        // oversized dst: only VLEN lanes written
+        let mut wide = [-1.0f32; VLEN + 2];
+        F32xL::splat(7.0).store_partial(&mut wide);
+        assert_eq!(&wide[..VLEN], &[7.0; VLEN]);
+        assert_eq!(&wide[VLEN..], &[-1.0; 2]);
+    }
+
+    #[test]
+    fn arithmetic_is_elementwise_scalar() {
+        let a = F32xL::load(&[1.0, -2.0, 0.5, 1e-40, -0.0, 3.25, 1e30, 7.0]);
+        let b = F32xL::load(&[2.0, 0.25, -8.0, 3.0, 5.0, -1.0, 1e-30, 0.125]);
+        for i in 0..VLEN {
+            let (x, y) = (a.lane(i), b.lane(i));
+            assert_eq!((a + b).lane(i).to_bits(), (x + y).to_bits());
+            assert_eq!((a - b).lane(i).to_bits(), (x - y).to_bits());
+            assert_eq!((a * b).lane(i).to_bits(), (x * y).to_bits());
+            assert_eq!((a / b).lane(i).to_bits(), (x / y).to_bits());
+            assert_eq!(a.min(b).lane(i).to_bits(), x.min(y).to_bits());
+            assert_eq!(a.max(b).lane(i).to_bits(), x.max(y).to_bits());
+        }
+    }
+
+    #[test]
+    fn fma_is_unfused() {
+        // a = 1 + 2^-12, so a*a = 1 + 2^-11 + 2^-24 exactly; the f32
+        // rounding drops the 2^-24 (tie-to-even), so the unfused
+        // a*a - 1 is exactly 2^-11 while a fused mul_add keeps the
+        // 2^-24. The kernel contract is the *unfused* result.
+        let a = 1.0f32 + f32::EPSILON * 2048.0; // 1 + 2^-12
+        let c = -1.0f32;
+        let unfused = a * a + c;
+        let got = F32xL::splat(a).fma(F32xL::splat(a), F32xL::splat(c));
+        for i in 0..VLEN {
+            assert_eq!(got.lane(i).to_bits(), unfused.to_bits());
+        }
+        // and the fused result really is different on this input, so
+        // the assertion above is not vacuous
+        assert_ne!(a.mul_add(a, c).to_bits(), unfused.to_bits());
+    }
+
+    #[test]
+    fn transcendentals_match_scalar_calls() {
+        let xs = [0.5f32, 1.0, 2.0, 123.456, 1e-4, 1e4, 0.9999, 42.0];
+        let v = F32xL::load(&xs);
+        let e = F32xL::load(&[0.6f32, 2.0, 0.5, 1.5, 0.1, 1.0, 3.0, 0.0]);
+        for i in 0..VLEN {
+            assert_eq!(v.sqrt().lane(i).to_bits(), xs[i].sqrt().to_bits());
+            assert_eq!(v.ln().lane(i).to_bits(), xs[i].ln().to_bits());
+            assert_eq!(v.floor().lane(i).to_bits(), xs[i].floor().to_bits());
+            assert_eq!(v.powf(e).lane(i).to_bits(), xs[i].powf(e.lane(i)).to_bits());
+        }
+    }
+
+    #[test]
+    fn mask_select_and_reductions() {
+        let a = F32xL::load(&[1.0, 5.0, 3.0, 0.0, -1.0, 2.0, 2.0, 9.0]);
+        let b = F32xL::splat(2.0);
+        let m = a.le(b);
+        let picked = m.select(a, b);
+        for i in 0..VLEN {
+            let want = if a.lane(i) <= 2.0 { a.lane(i) } else { 2.0 };
+            assert_eq!(picked.lane(i), want);
+        }
+        assert!(m.any() && !m.all());
+        assert!(MaskxL::splat(true).all());
+        assert!(!MaskxL::splat(false).any());
+    }
+
+    #[test]
+    fn mode_parse_round_trips_and_rejects_garbage() {
+        for mode in [SimdMode::On, SimdMode::Off, SimdMode::Auto] {
+            assert_eq!(SimdMode::parse(mode.as_str()).unwrap(), mode);
+        }
+        assert_eq!(SimdMode::parse(" ON ").unwrap(), SimdMode::On);
+        assert_eq!(SimdMode::default(), SimdMode::Auto);
+        for bad in ["", "fast", "1simd", "onoff"] {
+            assert!(matches!(SimdMode::parse(bad), Err(Error::Config(_))), "{bad}");
+        }
+    }
+
+    #[test]
+    fn step_lanes_equals_scalar_step_per_lane() {
+        use crate::model::{step, InitialCondition, Prior};
+        use crate::rng::lane_rng;
+        let ic = InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 };
+        let prior = Prior::paper();
+        let mut states = [[0.0f32; crate::model::N_COMPARTMENTS]; VLEN];
+        let mut thetas = [[0.0f32; crate::model::N_PARAMS]; VLEN];
+        let mut zs = [[0.0f32; crate::model::N_TRANSITIONS]; VLEN];
+        for l in 0..VLEN {
+            let mut rng = lane_rng([9, 9], l as u64);
+            thetas[l] = prior.sample(&mut rng);
+            states[l] = ic.init_state(&thetas[l]);
+            for z in &mut zs[l] {
+                *z = rng.normal_f32();
+            }
+        }
+        let vs: [F32xL; crate::model::N_COMPARTMENTS] =
+            std::array::from_fn(|c| F32xL(std::array::from_fn(|l| states[l][c])));
+        let vt: [F32xL; crate::model::N_PARAMS] =
+            std::array::from_fn(|p| F32xL(std::array::from_fn(|l| thetas[l][p])));
+        let vz: [F32xL; crate::model::N_TRANSITIONS] =
+            std::array::from_fn(|k| F32xL(std::array::from_fn(|l| zs[l][k])));
+        let next = step_lanes(&vs, &vt, &vz, F32xL::splat(ic.population));
+        for l in 0..VLEN {
+            let want = step(&states[l], &thetas[l], &zs[l], ic.population);
+            for c in 0..crate::model::N_COMPARTMENTS {
+                assert_eq!(
+                    next[c].lane(l).to_bits(),
+                    want[c].to_bits(),
+                    "lane {l} compartment {c}"
+                );
+            }
+        }
+    }
+}

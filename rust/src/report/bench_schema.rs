@@ -1,0 +1,354 @@
+//! Schema validation for the repo-root `BENCH_hot_path.json` artifact.
+//!
+//! The hot-path bench (`benches/hot_path.rs`) writes a perf-trajectory
+//! artifact whose shape is a contract shared by three consumers: the
+//! bench's own self-check after writing, the CI bench smoke
+//! (`examples/check_bench.rs`), and human readers of the committed
+//! artifact. This module is the single definition of that contract —
+//! schema version [`HOT_PATH_SCHEMA`], required fields, and the
+//! vectorized-vs-scalar ratio rows at [`RATIO_WIDTHS`] — so the three
+//! can never drift apart silently.
+//!
+//! Schema v2 (the `$ABC_IPU_SIMD` kernel axis, DESIGN.md §11) adds:
+//! a `schema` version number, a `harness` provenance string (what
+//! actually produced the numbers), a boolean `simd` flag on every lane
+//! row, and a `simd_ratio` array comparing the vectorized and scalar
+//! kernels at widths 1/8/16 on a single thread.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Current schema version of `BENCH_hot_path.json`. Bump whenever the
+/// artifact shape changes; the validator rejects anything else as
+/// stale, which is what forces the committed artifact to be
+/// regenerated alongside shape changes.
+pub const HOT_PATH_SCHEMA: u64 = 2;
+
+/// Lane widths the `simd_ratio` axis must cover, in order.
+pub const RATIO_WIDTHS: [usize; 3] = [1, 8, 16];
+
+/// One `simd_ratio` row: vectorized vs scalar kernel throughput at a
+/// fixed lane width, single-threaded (isolating the kernel axis).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimdRatio {
+    /// Lane width of the comparison.
+    pub width: usize,
+    /// Vectorized-kernel throughput (`$ABC_IPU_SIMD=on`).
+    pub on_samples_per_sec: f64,
+    /// Scalar-kernel throughput (`$ABC_IPU_SIMD=off`).
+    pub off_samples_per_sec: f64,
+    /// `on / off` — the samples/sec multiple the vectorized kernel buys.
+    pub ratio: f64,
+}
+
+/// The validated summary of a `BENCH_hot_path.json` document.
+#[derive(Debug, Clone)]
+pub struct HotPathSummary {
+    /// Schema version (always [`HOT_PATH_SCHEMA`] after validation).
+    pub schema: u64,
+    /// Whether the run was a quick-mode (CI smoke) measurement.
+    pub quick: bool,
+    /// Provenance of the numbers (which harness measured them).
+    pub harness: String,
+    /// Widest lane width measured.
+    pub widest_width: usize,
+    /// Headline speedup of the widest configuration over the
+    /// single-thread scalar baseline.
+    pub widest_speedup: f64,
+    /// The vectorized-vs-scalar rows, one per [`RATIO_WIDTHS`] entry.
+    pub simd_ratios: Vec<SimdRatio>,
+}
+
+impl HotPathSummary {
+    /// The simd-on/simd-off ratio at `width`, if measured.
+    pub fn ratio_at(&self, width: usize) -> Option<f64> {
+        self.simd_ratios.iter().find(|r| r.width == width).map(|r| r.ratio)
+    }
+
+    /// CI gate: the vectorized kernel must not be slower than the
+    /// scalar kernel at the widest ratio width (16 lanes). Quick-mode
+    /// numbers on shared runners are noisy, so the bar is ≥ 1.0, not
+    /// the committed artifact's full multiple.
+    pub fn require_simd_speedup(&self) -> Result<()> {
+        let width = RATIO_WIDTHS[RATIO_WIDTHS.len() - 1];
+        let ratio = self
+            .ratio_at(width)
+            .ok_or_else(|| bad(format!("no simd_ratio row at width {width}")))?;
+        if ratio < 1.0 {
+            return Err(bad(format!(
+                "vectorized kernel slower than scalar at width {width}: \
+                 ratio {ratio:.3} < 1.0"
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn bad(msg: impl std::fmt::Display) -> Error {
+    Error::Parse(format!("BENCH_hot_path.json: {msg}"))
+}
+
+fn finite_pos(v: &Json, what: &str) -> Result<f64> {
+    let n = v.as_f64().map_err(|e| bad(format!("{what}: {e}")))?;
+    if !n.is_finite() || n <= 0.0 {
+        return Err(bad(format!("{what} must be finite and > 0, got {n}")));
+    }
+    Ok(n)
+}
+
+fn lane_row(row: &Json, axis: &str, i: usize) -> Result<(usize, f64)> {
+    let what = |field: &str| format!("{axis}[{i}].{field}");
+    let width = row
+        .req("width")
+        .and_then(Json::as_usize)
+        .map_err(|e| bad(format!("{}: {e}", what("width"))))?;
+    if width == 0 {
+        return Err(bad(format!("{} must be >= 1", what("width"))));
+    }
+    let threads = row
+        .req("threads")
+        .and_then(Json::as_usize)
+        .map_err(|e| bad(format!("{}: {e}", what("threads"))))?;
+    if threads == 0 {
+        return Err(bad(format!("{} must be >= 1", what("threads"))));
+    }
+    // the v2 kernel flag must be present on every row
+    row.req("simd")
+        .and_then(Json::as_bool)
+        .map_err(|e| bad(format!("{}: {e}", what("simd"))))?;
+    finite_pos(row.req("samples_per_sec").map_err(|e| bad(e))?, &what("samples_per_sec"))?;
+    let speedup =
+        finite_pos(row.req("speedup_vs_scalar").map_err(|e| bad(e))?, &what("speedup_vs_scalar"))?;
+    Ok((width, speedup))
+}
+
+/// Validate a `BENCH_hot_path.json` document against schema v2.
+///
+/// Rejects (with a message naming the offending field): malformed
+/// JSON, a missing or stale `schema` version, a missing/empty `harness`
+/// provenance string, missing or non-positive throughput numbers,
+/// lane rows without the `simd` kernel flag, a `simd_ratio` axis that
+/// does not cover exactly [`RATIO_WIDTHS`] in order, and ratio rows
+/// whose `ratio` disagrees with `on/off` by more than 1%.
+pub fn validate_hot_path(text: &str) -> Result<HotPathSummary> {
+    let doc = Json::parse(text).map_err(|e| bad(e))?;
+
+    let suite = doc.req("suite").and_then(Json::as_str).map_err(|e| bad(e))?;
+    if suite != "hot_path" {
+        return Err(bad(format!("suite `{suite}` != `hot_path`")));
+    }
+    let schema = match doc.get("schema") {
+        None => {
+            return Err(bad(format!(
+                "missing `schema` (pre-v{HOT_PATH_SCHEMA} artifact) — \
+                 regenerate with `make bench-hot`"
+            )))
+        }
+        Some(v) => v.as_u64().map_err(|e| bad(format!("schema: {e}")))?,
+    };
+    if schema != HOT_PATH_SCHEMA {
+        return Err(bad(format!(
+            "stale schema {schema}, expected {HOT_PATH_SCHEMA} — \
+             regenerate with `make bench-hot`"
+        )));
+    }
+    let harness = doc.req("harness").and_then(Json::as_str).map_err(|e| bad(e))?;
+    if harness.trim().is_empty() {
+        return Err(bad("empty `harness` provenance string"));
+    }
+    let quick = doc.req("quick").and_then(Json::as_bool).map_err(|e| bad(e))?;
+    for field in ["days", "batch"] {
+        let n = doc.req(field).and_then(Json::as_usize).map_err(|e| bad(e))?;
+        if n == 0 {
+            return Err(bad(format!("{field} must be >= 1")));
+        }
+    }
+    finite_pos(
+        doc.req("scalar_baseline")
+            .and_then(|b| b.req("samples_per_sec"))
+            .map_err(|e| bad(e))?,
+        "scalar_baseline.samples_per_sec",
+    )?;
+
+    let mut widest_width = 0usize;
+    for axis in ["lanes", "lanes_single_thread"] {
+        let rows = doc.req(axis).and_then(Json::as_arr).map_err(|e| bad(e))?;
+        if rows.is_empty() {
+            return Err(bad(format!("empty `{axis}` array")));
+        }
+        for (i, row) in rows.iter().enumerate() {
+            let (width, _) = lane_row(row, axis, i)?;
+            widest_width = widest_width.max(width);
+        }
+    }
+
+    let ratio_rows = doc.req("simd_ratio").and_then(Json::as_arr).map_err(|e| bad(e))?;
+    let mut simd_ratios = Vec::with_capacity(ratio_rows.len());
+    for (i, row) in ratio_rows.iter().enumerate() {
+        let width = row
+            .req("width")
+            .and_then(Json::as_usize)
+            .map_err(|e| bad(format!("simd_ratio[{i}].width: {e}")))?;
+        let on = finite_pos(
+            row.req("on_samples_per_sec").map_err(|e| bad(e))?,
+            &format!("simd_ratio[{i}].on_samples_per_sec"),
+        )?;
+        let off = finite_pos(
+            row.req("off_samples_per_sec").map_err(|e| bad(e))?,
+            &format!("simd_ratio[{i}].off_samples_per_sec"),
+        )?;
+        let ratio = finite_pos(
+            row.req("ratio").map_err(|e| bad(e))?,
+            &format!("simd_ratio[{i}].ratio"),
+        )?;
+        let recomputed = on / off;
+        if (ratio - recomputed).abs() > 0.01 * recomputed {
+            return Err(bad(format!(
+                "simd_ratio[{i}].ratio {ratio} inconsistent with \
+                 on/off = {recomputed:.4}"
+            )));
+        }
+        simd_ratios.push(SimdRatio {
+            width,
+            on_samples_per_sec: on,
+            off_samples_per_sec: off,
+            ratio,
+        });
+    }
+    let got: Vec<usize> = simd_ratios.iter().map(|r| r.width).collect();
+    if got != RATIO_WIDTHS {
+        return Err(bad(format!("simd_ratio widths {got:?} != required {RATIO_WIDTHS:?}")));
+    }
+
+    let widest = doc.req("widest").map_err(|e| bad(e))?;
+    let ww = widest
+        .req("width")
+        .and_then(Json::as_usize)
+        .map_err(|e| bad(format!("widest.width: {e}")))?;
+    if ww != widest_width {
+        return Err(bad(format!(
+            "widest.width {ww} != widest measured lane width {widest_width}"
+        )));
+    }
+    let widest_speedup =
+        finite_pos(widest.req("speedup_vs_scalar").map_err(|e| bad(e))?, "widest.speedup_vs_scalar")?;
+
+    Ok(HotPathSummary {
+        schema,
+        quick,
+        harness: harness.to_string(),
+        widest_width,
+        widest_speedup,
+        simd_ratios,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal valid v2 document.
+    fn valid_doc() -> String {
+        let row = |w: usize, t: usize, simd: bool, sps: f64, sp: f64| {
+            format!(
+                "{{\"width\": {w}, \"threads\": {t}, \"simd\": {simd}, \
+                 \"samples_per_sec\": {sps}, \"speedup_vs_scalar\": {sp}}}"
+            )
+        };
+        let ratio = |w: usize, on: f64, off: f64| {
+            format!(
+                "{{\"width\": {w}, \"on_samples_per_sec\": {on}, \
+                 \"off_samples_per_sec\": {off}, \"ratio\": {:.4}}}",
+                on / off
+            )
+        };
+        format!(
+            "{{\"suite\": \"hot_path\", \"schema\": {HOT_PATH_SCHEMA}, \
+             \"harness\": \"cargo bench --bench hot_path\", \
+             \"days\": 49, \"batch\": 10000, \"quick\": false, \
+             \"scalar_baseline\": {{\"name\": \"scalar_oracle_1thread\", \
+             \"batch\": 2000, \"samples_per_sec\": 50000.0}}, \
+             \"lanes\": [{}, {}],\n \"lanes_single_thread\": [{}, {}], \
+             \"simd_ratio\": [{}, {}, {}], \
+             \"widest\": {{\"width\": 16, \"threads\": 4, \
+             \"speedup_vs_scalar\": 6.0}}}}",
+            row(1, 4, true, 60000.0, 1.2),
+            row(16, 4, true, 300000.0, 6.0),
+            row(1, 1, true, 55000.0, 1.1),
+            row(16, 1, true, 150000.0, 3.0),
+            ratio(1, 55000.0, 50000.0),
+            ratio(8, 120000.0, 70000.0),
+            ratio(16, 150000.0, 80000.0),
+        )
+    }
+
+    #[test]
+    fn valid_document_passes_and_summarizes() {
+        let s = validate_hot_path(&valid_doc()).unwrap();
+        assert_eq!(s.schema, HOT_PATH_SCHEMA);
+        assert!(!s.quick);
+        assert_eq!(s.widest_width, 16);
+        assert_eq!(s.widest_speedup, 6.0);
+        assert_eq!(s.simd_ratios.len(), 3);
+        assert!(s.ratio_at(16).unwrap() > 1.0);
+        s.require_simd_speedup().unwrap();
+    }
+
+    #[test]
+    fn missing_schema_is_a_stale_artifact() {
+        let doc = valid_doc().replace(&format!("\"schema\": {HOT_PATH_SCHEMA}, "), "");
+        let err = validate_hot_path(&doc).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
+        assert!(err.contains("bench-hot"), "{err}");
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let doc = valid_doc()
+            .replace(&format!("\"schema\": {HOT_PATH_SCHEMA}"), "\"schema\": 1");
+        let err = validate_hot_path(&doc).unwrap_err().to_string();
+        assert!(err.contains("stale schema 1"), "{err}");
+    }
+
+    #[test]
+    fn lane_rows_must_carry_the_simd_flag() {
+        let doc = valid_doc().replacen("\"simd\": true, ", "", 1);
+        let err = validate_hot_path(&doc).unwrap_err().to_string();
+        assert!(err.contains("simd"), "{err}");
+    }
+
+    #[test]
+    fn ratio_axis_must_cover_the_required_widths() {
+        let doc = valid_doc().replace("\"width\": 8,", "\"width\": 4,");
+        let err = validate_hot_path(&doc).unwrap_err().to_string();
+        assert!(err.contains("simd_ratio widths"), "{err}");
+    }
+
+    #[test]
+    fn inconsistent_ratio_is_rejected() {
+        let doc = valid_doc().replace("\"ratio\": 1.8750", "\"ratio\": 0.9000");
+        let err = validate_hot_path(&doc).unwrap_err().to_string();
+        assert!(err.contains("inconsistent"), "{err}");
+    }
+
+    #[test]
+    fn speedup_gate_fires_when_vectorized_is_slower() {
+        // swap on/off at width 16 → ratio < 1
+        let doc = valid_doc()
+            .replace(
+                "\"width\": 16, \"on_samples_per_sec\": 150000",
+                "\"width\": 16, \"on_samples_per_sec\": 60000",
+            )
+            .replace("\"ratio\": 1.8750", "\"ratio\": 0.7500");
+        let s = validate_hot_path(&doc).unwrap();
+        let err = s.require_simd_speedup().unwrap_err().to_string();
+        assert!(err.contains("slower than scalar"), "{err}");
+    }
+
+    #[test]
+    fn malformed_json_and_wrong_suite_fail() {
+        assert!(validate_hot_path("{").is_err());
+        let doc = valid_doc().replace("\"hot_path\"", "\"scaling\"");
+        assert!(validate_hot_path(&doc).is_err());
+    }
+}

@@ -5,8 +5,11 @@
 //! tables for the terminal plus CSV files for the figure series. The
 //! [`scaling`] submodule is the measured-Table-7 substrate behind the
 //! repo-root `BENCH_scaling.json` artifact (single-job sharding,
-//! DESIGN.md §9).
+//! DESIGN.md §9), and [`bench_schema`] is the shared validator for the
+//! `BENCH_hot_path.json` artifact the hot-path bench and the CI bench
+//! smoke both check against (DESIGN.md §11).
 
+pub mod bench_schema;
 pub mod scaling;
 
 use std::fmt::Write as _;

@@ -31,7 +31,7 @@
 
 mod xoshiro;
 
-pub use xoshiro::Xoshiro256;
+pub use xoshiro::{box_muller, Xoshiro256};
 
 /// Derives per-(device, run) keys from a master seed.
 ///

@@ -82,10 +82,9 @@ impl Xoshiro256 {
         // u1 in (0,1] so ln never sees 0.
         let u1 = 1.0 - self.uniform();
         let u2 = self.uniform();
-        let r = (-2.0 * u1.ln()).sqrt();
-        let (sin, cos) = (std::f64::consts::TAU * u2).sin_cos();
-        self.spare_normal = Some((r * sin).to_bits());
-        r * cos
+        let (primary, secondary) = box_muller(u1, u2);
+        self.spare_normal = Some(secondary.to_bits());
+        primary
     }
 
     /// Standard normal as f32 (matches the accelerator's f32 noise).
@@ -104,6 +103,23 @@ impl Xoshiro256 {
     pub fn split(&mut self) -> Xoshiro256 {
         Xoshiro256::seed_from(self.next_u64())
     }
+}
+
+/// The Box–Muller pair `(r·cos(τ·u2), r·sin(τ·u2))` with
+/// `r = sqrt(-2·ln(u1))`.
+///
+/// The **one** arithmetic definition of the transform: both the scalar
+/// [`Xoshiro256::normal`] and the lane engine's vectorized noise-slab
+/// fill (`model::lanes`) call it, so the two paths are bit-identical by
+/// construction rather than by floating-point luck. `u1` must lie in
+/// `(0, 1]` (the generator guarantees it via `1 - uniform()`); `u1 → 0`
+/// overflows `r` to `+inf` and `u1 = 1` collapses `r` to `0` — the
+/// extremes `tests/simd_units.rs` pins.
+#[inline]
+pub fn box_muller(u1: f64, u2: f64) -> (f64, f64) {
+    let r = (-2.0 * u1.ln()).sqrt();
+    let (sin, cos) = (std::f64::consts::TAU * u2).sin_cos();
+    (r * cos, r * sin)
 }
 
 #[cfg(test)]

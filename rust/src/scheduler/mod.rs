@@ -160,7 +160,8 @@ impl JobSpec {
                 truncated.consts(),
             )
             .with_lanes(cfg.lanes)
-            .with_shards(cfg.shards),
+            .with_shards(cfg.shards)
+            .with_simd(cfg.simd),
             self.tolerance(),
             cfg.return_strategy,
             SeedSequence::new(cfg.seed),

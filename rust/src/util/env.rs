@@ -1,7 +1,8 @@
 //! Typed parsing of `$ABC_IPU_*` environment knobs.
 //!
 //! Every runtime knob with an environment override (`$ABC_IPU_LANES`,
-//! `$ABC_IPU_SHARDS`, `$ABC_IPU_SIM_THREADS`, `$ABC_IPU_CHECKPOINT`)
+//! `$ABC_IPU_SHARDS`, `$ABC_IPU_SIM_THREADS`, `$ABC_IPU_SIMD`,
+//! `$ABC_IPU_CHECKPOINT`)
 //! resolves through here. The historical behaviour — silently falling
 //! back to the requested default when the variable held garbage — made
 //! a typo'd `ABC_IPU_SHARDS=treu3` indistinguishable from "unset",
@@ -40,6 +41,42 @@ pub fn parse_usize_override(name: &str, raw: Option<&str>) -> Result<Option<usiz
 pub fn usize_override(name: &str) -> Result<Option<usize>> {
     match std::env::var(name) {
         Ok(v) => parse_usize_override(name, Some(&v)),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => Err(Error::Config(format!(
+            "malformed ${name}: value is not valid UTF-8"
+        ))),
+    }
+}
+
+/// Parse one optional boolean-style environment override (the
+/// `$ABC_IPU_SIMD` family).
+///
+/// * `Ok(None)` — unset, empty or `auto`: honour the requested value.
+/// * `Ok(Some(true))` — `on` / `1` / `true` / `yes`.
+/// * `Ok(Some(false))` — `off` / `0` / `false` / `no`.
+/// * `Err(Error::Config)` — anything else: fail loudly, same policy as
+///   [`parse_usize_override`].
+///
+/// Tokens are trimmed and case-insensitive.
+pub fn parse_bool_override(name: &str, raw: Option<&str>) -> Result<Option<bool>> {
+    let Some(raw) = raw else { return Ok(None) };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Ok(None),
+        "on" | "1" | "true" | "yes" => Ok(Some(true)),
+        "off" | "0" | "false" | "no" => Ok(Some(false)),
+        _ => Err(Error::Config(format!(
+            "malformed ${name}=`{raw}`: expected on/off/auto (or 1/0, \
+             true/false, yes/no; unset the variable to use the \
+             configured value)"
+        ))),
+    }
+}
+
+/// Read and parse `$name` from the process environment (see
+/// [`parse_bool_override`]).
+pub fn bool_override(name: &str) -> Result<Option<bool>> {
+    match std::env::var(name) {
+        Ok(v) => parse_bool_override(name, Some(&v)),
         Err(std::env::VarError::NotPresent) => Ok(None),
         Err(std::env::VarError::NotUnicode(_)) => Err(Error::Config(format!(
             "malformed ${name}: value is not valid UTF-8"
@@ -94,5 +131,32 @@ mod tests {
             parse_usize_override("X", Some("nope")),
             Err(Error::Config(_))
         ));
+    }
+
+    #[test]
+    fn bool_unset_empty_and_auto_defer() {
+        for raw in [None, Some(""), Some("  "), Some("auto"), Some("AUTO")] {
+            assert_eq!(parse_bool_override("X", raw).unwrap(), None, "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn bool_spellings_parse_case_insensitively() {
+        for on in ["on", "ON", "1", "true", "True", "yes", " on "] {
+            assert_eq!(parse_bool_override("X", Some(on)).unwrap(), Some(true), "{on}");
+        }
+        for off in ["off", "OFF", "0", "false", "no", " Off "] {
+            assert_eq!(parse_bool_override("X", Some(off)).unwrap(), Some(false), "{off}");
+        }
+    }
+
+    #[test]
+    fn bool_malformed_fails_loudly_with_the_variable_name() {
+        for bad in ["fast", "2", "-1", "onn", "tru", "simd"] {
+            let err = parse_bool_override("ABC_IPU_SIMD", Some(bad)).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{bad}");
+            let msg = err.to_string();
+            assert!(msg.contains("ABC_IPU_SIMD") && msg.contains("malformed"), "{bad}: {msg}");
+        }
     }
 }

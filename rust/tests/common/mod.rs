@@ -67,6 +67,7 @@ pub struct JobBuilder {
     pub max_runs: u64,
     pub lanes: usize,
     pub shards: usize,
+    pub simd: abc_ipu::model::SimdMode,
 }
 
 impl JobBuilder {
@@ -85,6 +86,7 @@ impl JobBuilder {
             max_runs: 400,
             lanes: 0,
             shards: 0,
+            simd: abc_ipu::model::SimdMode::Auto,
         }
     }
 
@@ -101,6 +103,7 @@ impl JobBuilder {
             max_runs: self.max_runs,
             lanes: self.lanes,
             shards: self.shards,
+            simd: self.simd,
             ..Default::default()
         }
     }

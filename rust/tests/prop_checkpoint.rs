@@ -2,7 +2,9 @@
 //! DESIGN.md §10): a schedule interrupted at an arbitrary run frontier
 //! and resumed from its snapshot must produce an accepted-sample stream
 //! **bit-identical** to an uninterrupted solo run — for every interrupt
-//! point, shard count, worker count and return strategy, including
+//! point, shard count, worker count, return strategy and simd kernel
+//! flavor (a snapshot written with the scalar kernel resumes under the
+//! vectorized kernel, DESIGN.md §11), including
 //! chained interrupts ("crash" repeatedly), coarse snapshot intervals
 //! (the gap between the last snapshot and the crash re-executes), and
 //! mid-study SMC resume.
@@ -272,6 +274,30 @@ fn resume_may_change_pool_geometry_but_not_the_stream() {
     let resume = CheckpointConfig::new(path.clone()).with_resume(true);
     let got = run_once(&b, stop, 4, 3, resume).unwrap();
     assert_eq!(got, want, "geometry-changing resume diverged");
+    cleanup(&path);
+}
+
+#[test]
+fn resume_across_simd_kernel_change_bit_equals_solo() {
+    // snapshot written with the scalar kernel, resumed with the
+    // vectorized kernel: like `lanes`/`shards`, the `simd` knob is
+    // excluded from the job fingerprint because the two kernels are
+    // bit-identical (DESIGN.md §11) — so the stream must not move
+    use abc_ipu::model::SimdMode;
+    let mut off = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    off.simd = SimdMode::Off;
+    let stop = StopRule::ExactRuns(5);
+    let want = solo_reference(&off, stop);
+    let path = ckpt_path("simd_change");
+    cleanup(&path);
+    let crash = CheckpointConfig::new(path.clone()).with_interrupt_after(2);
+    let err = run_once(&off, stop, 2, 1, crash).unwrap_err();
+    assert!(matches!(err, Error::Interrupted { .. }), "{err}");
+    let mut on = off.clone();
+    on.simd = SimdMode::On;
+    let resume = CheckpointConfig::new(path.clone()).with_resume(true);
+    let got = run_once(&on, stop, 2, 1, resume).unwrap();
+    assert_eq!(got, want, "simd-kernel-changing resume diverged");
     cleanup(&path);
 }
 

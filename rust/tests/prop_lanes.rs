@@ -7,11 +7,12 @@
 //! * the [`LaneEngine`] is **bit-identical to the scalar
 //!   [`Simulator`] oracle** ([`scalar_reference`]) over randomized
 //!   `(θ-box, days, batch, key)`,
-//! * bit-identical **across lane widths 1/4/8/16** and across intra-run
-//!   thread counts,
+//! * bit-identical **across lane widths 1/4/8/16**, across intra-run
+//!   thread counts, and **across the simd kernel axis** (vectorized vs
+//!   scalar kernel, `$ABC_IPU_SIMD` / `SimdMode`, DESIGN.md §11),
 //! * and through the full stack: native engines with pinned per-job
-//!   widths agree, and scheduler-pool runs stay bit-identical to solo
-//!   coordinator runs for every lane width.
+//!   widths/kernels agree, and scheduler-pool runs stay bit-identical
+//!   to solo coordinator runs for every lane width.
 
 mod common;
 
@@ -19,7 +20,7 @@ use abc_ipu::backend::{AbcJob, Backend, NativeBackend};
 use abc_ipu::coordinator::{Coordinator, StopRule};
 use abc_ipu::data::synthetic;
 use abc_ipu::model::lanes::{scalar_reference, LaneEngine};
-use abc_ipu::model::{InitialCondition, Prior, Simulator, Theta, PRIOR_HIGH};
+use abc_ipu::model::{InitialCondition, Prior, SimdMode, Simulator, Theta, PRIOR_HIGH};
 use abc_ipu::scheduler::Scheduler;
 use common::{
     fingerprints, native_backend, prop_cases, worker_counts, Fingerprint, JobBuilder,
@@ -59,20 +60,26 @@ fn lane_engine_bit_equals_scalar_oracle_across_widths_and_threads() {
         assert!(oracle_dists.iter().all(|d| d.is_finite()));
         for width in WIDTHS {
             for threads in [1usize, 3] {
-                let engine = LaneEngine::new(ic(), width).with_parallelism(threads);
-                let (thetas, dists) = engine
-                    .sample_distance_batch(&prior, &observed, days, batch, key)
-                    .unwrap();
-                assert_eq!(
-                    bits(&thetas),
-                    bits(&oracle_thetas),
-                    "θ diverged: width {width} x{threads} threads, days {days}, batch {batch}"
-                );
-                assert_eq!(
-                    bits(&dists),
-                    bits(&oracle_dists),
-                    "distance diverged: width {width} x{threads} threads, days {days}, batch {batch}"
-                );
+                for simd in [true, false] {
+                    let engine = LaneEngine::new(ic(), width)
+                        .with_parallelism(threads)
+                        .with_simd(simd);
+                    let (thetas, dists) = engine
+                        .sample_distance_batch(&prior, &observed, days, batch, key)
+                        .unwrap();
+                    assert_eq!(
+                        bits(&thetas),
+                        bits(&oracle_thetas),
+                        "θ diverged: width {width} x{threads} threads simd {simd}, \
+                         days {days}, batch {batch}"
+                    );
+                    assert_eq!(
+                        bits(&dists),
+                        bits(&oracle_dists),
+                        "distance diverged: width {width} x{threads} threads simd {simd}, \
+                         days {days}, batch {batch}"
+                    );
+                }
             }
         }
     });
@@ -89,11 +96,14 @@ fn tail_groups_and_overwide_lanes_match_the_oracle() {
     for (batch, width) in [(10usize, 16usize), (37, 8), (5, 4), (1, 16)] {
         let (ot, od) =
             scalar_reference(&sim, &prior, &observed, days, batch, [7, 8]).unwrap();
-        let (t, d) = LaneEngine::new(ic(), width)
-            .sample_distance_batch(&prior, &observed, days, batch, [7, 8])
-            .unwrap();
-        assert_eq!(bits(&t), bits(&ot), "batch {batch} width {width}");
-        assert_eq!(bits(&d), bits(&od), "batch {batch} width {width}");
+        for simd in [true, false] {
+            let (t, d) = LaneEngine::new(ic(), width)
+                .with_simd(simd)
+                .sample_distance_batch(&prior, &observed, days, batch, [7, 8])
+                .unwrap();
+            assert_eq!(bits(&t), bits(&ot), "batch {batch} width {width} simd {simd}");
+            assert_eq!(bits(&d), bits(&od), "batch {batch} width {width} simd {simd}");
+        }
     }
 }
 
@@ -108,24 +118,32 @@ fn native_engines_with_pinned_job_widths_agree() {
     let base = AbcJob::new(300, 12, ds.observed.flatten(), &prior, ds.consts());
     let mut reference = None;
     for width in WIDTHS {
-        let mut engine = backend
-            .open_engine(0, &base.clone().with_lanes(width))
-            .unwrap();
-        let out = engine.run([3, 14]).unwrap();
-        match &reference {
-            None => reference = Some(out),
-            Some(want) => assert_eq!(&out, want, "job lane width {width}"),
+        for simd in [SimdMode::On, SimdMode::Off, SimdMode::Auto] {
+            let mut engine = backend
+                .open_engine(0, &base.clone().with_lanes(width).with_simd(simd))
+                .unwrap();
+            let out = engine.run([3, 14]).unwrap();
+            match &reference {
+                None => reference = Some(out),
+                Some(want) => {
+                    assert_eq!(&out, want, "job lane width {width} simd {simd:?}")
+                }
+            }
         }
     }
 }
 
 #[test]
 fn pool_runs_stay_bit_identical_to_solo_for_every_lane_width() {
+    // each width paired with an alternating kernel flavor, so one
+    // cross-configuration fingerprint pins widths AND the simd axis
+    let kernel_axis = [SimdMode::On, SimdMode::Off, SimdMode::Off, SimdMode::On];
     let mut cross_width: Option<Vec<Fingerprint>> = None;
-    for width in WIDTHS {
+    for (width, simd) in WIDTHS.into_iter().zip(kernel_axis) {
         let mut builder = JobBuilder::new(synthetic::default_dataset(12, 0x5eed));
         builder.batch = 400;
         builder.lanes = width;
+        builder.simd = simd;
         let spec = builder.spec(&format!("lanes{width}"), StopRule::ExactRuns(4));
 
         let solo = Coordinator::new(

@@ -196,6 +196,18 @@ fn prop_json_config_roundtrip() {
             max_runs: rng.below(10_000),
             lanes: rng.below(64) as usize,
             shards: rng.below(64) as usize,
+            simd: match rng.below(3) {
+                0 => abc_ipu::model::SimdMode::On,
+                1 => abc_ipu::model::SimdMode::Off,
+                _ => abc_ipu::model::SimdMode::Auto,
+            },
+            checkpoint: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(format!("ckpt{}.json", rng.below(100)))
+            },
+            checkpoint_interval: 1 + rng.below(1_000),
+            resume: rng.below(2) == 0,
         };
         let parsed = abc_ipu::config::RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(parsed, cfg);

@@ -1,0 +1,222 @@
+//! Unit-level pins for the `model::simd` vector abstraction
+//! (DESIGN.md §11).
+//!
+//! The lane engine's vectorized kernel is only allowed to exist because
+//! every `F32xL` operation is bit-identical to the scalar `f32` op it
+//! packs — this suite pins that property element-wise over random bit
+//! patterns (including denormals, ±0.0, infinities and NaN payloads),
+//! pins the masked-tail load/store contract (pad lanes never escape),
+//! and pins the `rng::box_muller` extremes the noise transform depends
+//! on (`u1 → 0`, `u1 = 1`, and the smallest value `uniform()` can
+//! actually produce).
+
+mod common;
+
+use abc_ipu::model::simd::{F32xL, VLEN};
+use abc_ipu::rng::{box_muller, Xoshiro256};
+use common::prop_cases;
+
+/// A random f32 whose *bit pattern* is uniform over a menagerie of
+/// interesting classes: normal values, denormals, ±0.0, ±inf, NaNs
+/// with random payloads.
+fn random_bits_f32(rng: &mut Xoshiro256) -> f32 {
+    match rng.below(8) {
+        // plain finite values around 1
+        0 | 1 | 2 => (rng.uniform() as f32 - 0.5) * 8.0,
+        // full random bit pattern (hits NaNs, infs, denormals, huge)
+        3 | 4 => f32::from_bits(rng.next_u64() as u32),
+        // denormals: zero exponent, random mantissa, random sign
+        5 => f32::from_bits((rng.next_u64() as u32) & 0x807f_ffff),
+        // signed zeros
+        6 => {
+            if rng.below(2) == 0 {
+                0.0
+            } else {
+                -0.0
+            }
+        }
+        // huge magnitudes near overflow
+        _ => f32::from_bits(0x7e80_0000 | (rng.next_u64() as u32 & 0x007f_ffff)),
+    }
+}
+
+fn random_vec(rng: &mut Xoshiro256) -> ([f32; VLEN], F32xL) {
+    let xs: [f32; VLEN] = std::array::from_fn(|_| random_bits_f32(rng));
+    (xs, F32xL::load(&xs))
+}
+
+/// Bitwise equality, except both-NaN (payloads may legitimately differ
+/// between a folded constant and a runtime op; sameness of *class* is
+/// the contract there).
+fn bit_eq(got: f32, want: f32, ctx: &str) {
+    if got.is_nan() && want.is_nan() {
+        return;
+    }
+    assert_eq!(got.to_bits(), want.to_bits(), "{ctx}: got {got:?}, want {want:?}");
+}
+
+#[test]
+fn prop_every_op_is_elementwise_scalar_bit_identical() {
+    prop_cases("F32xL ops == scalar f32 ops, bit for bit", 300, |rng| {
+        let (xs, a) = random_vec(rng);
+        let (ys, b) = random_vec(rng);
+        let (zs, c) = random_vec(rng);
+        for i in 0..VLEN {
+            let (x, y, z) = (xs[i], ys[i], zs[i]);
+            bit_eq((a + b).lane(i), x + y, "add");
+            bit_eq((a - b).lane(i), x - y, "sub");
+            bit_eq((a * b).lane(i), x * y, "mul");
+            bit_eq((a / b).lane(i), x / y, "div");
+            bit_eq(a.fma(b, c).lane(i), x * y + z, "fma (unfused)");
+            bit_eq(a.sqrt().lane(i), x.sqrt(), "sqrt");
+            bit_eq(a.ln().lane(i), x.ln(), "ln");
+            bit_eq(a.powf(b).lane(i), x.powf(y), "powf");
+            bit_eq(a.floor().lane(i), x.floor(), "floor");
+            bit_eq(a.min(b).lane(i), x.min(y), "min");
+            bit_eq(a.max(b).lane(i), x.max(y), "max");
+            assert_eq!(a.le(b).select(a, b).lane(i).to_bits(), {
+                // the scalar spelling of the same select
+                if x <= y {
+                    x.to_bits()
+                } else {
+                    y.to_bits()
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn denormals_and_signed_zeros_survive_bit_exactly() {
+    let denorm = f32::from_bits(1); // smallest positive denormal
+    let xs = [denorm, -denorm, 0.0, -0.0, f32::MIN_POSITIVE, 1.0, -1.0, 2.0];
+    let v = F32xL::load(&xs);
+    // identity-ish ops keep the exact bit patterns (incl. -0.0's sign)
+    let kept = v + F32xL::splat(0.0);
+    // IEEE: -0.0 + 0.0 = +0.0, everything else unchanged
+    for i in 0..VLEN {
+        bit_eq(kept.lane(i), xs[i] + 0.0, "x + 0.0");
+    }
+    let scaled = v * F32xL::splat(1.0);
+    for i in 0..VLEN {
+        bit_eq(scaled.lane(i), xs[i] * 1.0, "x * 1.0");
+    }
+    // denormal arithmetic (gradual underflow) matches scalar
+    let half = v * F32xL::splat(0.5);
+    for i in 0..VLEN {
+        bit_eq(half.lane(i), xs[i] * 0.5, "denormal halving");
+    }
+    // min/max order ±0.0 the same way the scalar ops do
+    let zeros = F32xL::load(&[0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0]);
+    let nzeros = F32xL::load(&[-0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0]);
+    for i in 0..VLEN {
+        bit_eq(zeros.min(nzeros).lane(i), zeros.lane(i).min(nzeros.lane(i)), "min ±0");
+        bit_eq(zeros.max(nzeros).lane(i), zeros.lane(i).max(nzeros.lane(i)), "max ±0");
+    }
+}
+
+#[test]
+fn nan_behaves_like_the_scalar_op_never_leaks_extra() {
+    let nan = f32::NAN;
+    let xs = [nan, 1.0, nan, -2.0, 0.0, nan, 5.0, nan];
+    let ys = [2.0, nan, nan, 3.0, nan, 0.5, 1.5, -0.0];
+    let a = F32xL::load(&xs);
+    let b = F32xL::load(&ys);
+    for i in 0..VLEN {
+        let (x, y) = (xs[i], ys[i]);
+        // arithmetic: NaN iff the scalar op is NaN
+        assert_eq!((a + b).lane(i).is_nan(), (x + y).is_nan(), "add lane {i}");
+        assert_eq!((a * b).lane(i).is_nan(), (x * y).is_nan(), "mul lane {i}");
+        // IEEE minNum/maxNum: a single NaN operand yields the *other*
+        // operand — NaN does not propagate through the kernel clamps
+        bit_eq(a.min(b).lane(i), x.min(y), "min with NaN");
+        bit_eq(a.max(b).lane(i), x.max(y), "max with NaN");
+        // comparisons are false for NaN, exactly like scalar `<=`
+        assert_eq!(a.le(b).select(a, b).lane(i).to_bits(), {
+            if x <= y {
+                x.to_bits()
+            } else {
+                y.to_bits()
+            }
+        });
+    }
+    // a NaN-free lane stays NaN-free no matter what its neighbours do
+    let clean = F32xL::load(&[1.0; VLEN]);
+    let mixed = (clean + a) * b; // NaN in some lanes
+    for i in 0..VLEN {
+        let want = (1.0 + xs[i]) * ys[i];
+        assert_eq!(mixed.lane(i).is_nan(), want.is_nan(), "lane {i} independence");
+    }
+}
+
+#[test]
+fn masked_tail_pad_lanes_never_escape() {
+    // every tail length the chunked kernel can produce
+    for len in 1..VLEN {
+        let src: Vec<f32> = (0..len).map(|i| 1.0 + i as f32).collect();
+        // pad with NaN: the most hostile fill — if a pad lane ever
+        // reached a stored slot, the NaN would be unmissable
+        let v = F32xL::load_partial(&src, f32::NAN);
+        for (i, &s) in src.iter().enumerate() {
+            assert_eq!(v.lane(i), s);
+        }
+        for i in len..VLEN {
+            assert!(v.lane(i).is_nan(), "pad lane {i} should hold the fill");
+        }
+        // arithmetic on the padded vector: pad lanes compute garbage
+        let out = (v * v + F32xL::splat(1.0)).sqrt();
+        let mut dst = vec![-7.0f32; len + 2]; // sentinels beyond the tail
+        out.store_partial(&mut dst[..len]);
+        for (i, &s) in src.iter().enumerate() {
+            let want = (s * s + 1.0).sqrt();
+            assert_eq!(dst[i].to_bits(), want.to_bits(), "live lane {i} (len {len})");
+            assert!(!dst[i].is_nan());
+        }
+        assert_eq!(&dst[len..], &[-7.0, -7.0], "sentinels past the tail (len {len})");
+    }
+}
+
+#[test]
+fn box_muller_extremes_are_pinned() {
+    // u1 = 2^-53: the smallest value `1 - uniform()` can take (uniform
+    // has 53-bit resolution), i.e. the largest normal the generator can
+    // ever emit: r = sqrt(-2 ln 2^-53) = sqrt(106 ln 2) ≈ 8.5723
+    let tiny = 1.0f64 / (1u64 << 53) as f64;
+    let (p, s) = box_muller(tiny, 0.0);
+    assert!(p.is_finite() && s.is_finite());
+    let r = (p * p + s * s).sqrt();
+    assert!((r - (106.0f64 * std::f64::consts::LN_2).sqrt()).abs() < 1e-9, "r = {r}");
+    assert!(r > 8.5 && r < 8.6);
+
+    // u1 → 0 exactly: ln 0 = -inf, radius = inf. The production path
+    // can never feed this (u1 = 1 - uniform() ∈ (0, 1]), and the
+    // non-finite output is why that guarantee matters.
+    let (p0, _s0) = box_muller(0.0, 0.0);
+    assert!(!p0.is_finite(), "u1 = 0 must blow up, got {p0}");
+
+    // u1 = 1: ln 1 = 0, radius 0 — both outputs are (signed) zero
+    let (p1, s1) = box_muller(1.0, 0.37);
+    assert_eq!(p1.abs(), 0.0);
+    assert_eq!(s1.abs(), 0.0);
+
+    // angle sweep at fixed radius: primary² + secondary² = r² (cos/sin
+    // pair from the same angle), pinning the (cos, sin) assignment order
+    let (pc, ps) = box_muller(0.5, 0.0); // angle 0: cos=1, sin=0
+    assert!(ps.abs() < 1e-15 && pc > 0.0);
+    assert!((pc - (-2.0f64 * 0.5f64.ln()).sqrt()).abs() < 1e-15);
+}
+
+#[test]
+fn rng_normal_is_box_muller_by_construction() {
+    // normal() must equal box_muller(1 - uniform(), uniform()) drawn
+    // from the same stream state — primary first, banked secondary next
+    let mut a = Xoshiro256::seed_from(0xD06_F00D);
+    let mut b = Xoshiro256::seed_from(0xD06_F00D);
+    for round in 0..64 {
+        let u1 = 1.0 - b.uniform();
+        let u2 = b.uniform();
+        let (primary, secondary) = box_muller(u1, u2);
+        assert_eq!(a.normal().to_bits(), primary.to_bits(), "round {round} primary");
+        assert_eq!(a.normal().to_bits(), secondary.to_bits(), "round {round} secondary");
+    }
+}

@@ -1,0 +1,312 @@
+/* Independent C reference for the golden-stream fixture
+ * (rust/tests/golden/streams.json, consumed by tests/golden_streams.rs).
+ *
+ * Ports the exact numeric pipeline of the Rust scalar oracle
+ * (model::lanes::scalar_reference over model::Simulator::distance) —
+ * splitmix64, xoshiro256++, the Box-Muller normal with spare caching,
+ * the per-(key, lane) stream derivation, the uniform prior sample, and
+ * the f32 tau-leap step — operation-for-operation, so two independent
+ * implementations (this file and tools/golden_ref.py) must agree bit
+ * for bit before a fingerprint is allowed into the fixture.
+ *
+ * Shares libm with the Rust binaries on this platform (glibc): f32
+ * powf, f64 log/sin/cos are the only correctly-rounded-not-guaranteed
+ * calls, and their observed bit patterns are emitted as the canaries
+ * the Rust test gates its absolute pins on.
+ *
+ * Build & run:
+ *   gcc -O2 -ffp-contract=off -o golden_ref tools/golden_ref.c -lm
+ *   ./golden_ref            # distance stats, tolerance candidates
+ *   ./golden_ref <tol>      # accepted counts + stream fingerprint
+ */
+#include <inttypes.h>
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+
+/* ---- rng/mod.rs + rng/xoshiro.rs ---- */
+
+static uint64_t splitmix64(uint64_t z) {
+    z += 0x9e3779b97f4a7c15ULL;
+    z = (z ^ (z >> 30)) * 0xbf58476d1ce4e5b9ULL;
+    z = (z ^ (z >> 27)) * 0x94d049bb133111ebULL;
+    return z ^ (z >> 31);
+}
+
+static uint64_t rotl64(uint64_t x, int k) { return (x << k) | (x >> (64 - k)); }
+
+typedef struct {
+    uint64_t s[4];
+    int have_spare;
+    double spare;
+} Xo;
+
+static Xo xo_seed_from(uint64_t seed) {
+    Xo r;
+    uint64_t z = seed;
+    for (int i = 0; i < 4; i++) {
+        z += 0x9e3779b97f4a7c15ULL;
+        r.s[i] = splitmix64(z);
+    }
+    if (!(r.s[0] | r.s[1] | r.s[2] | r.s[3])) r.s[0] = 1;
+    r.have_spare = 0;
+    r.spare = 0.0;
+    return r;
+}
+
+static uint64_t xo_next(Xo *r) {
+    uint64_t result = rotl64(r->s[0] + r->s[3], 23) + r->s[0];
+    uint64_t t = r->s[1] << 17;
+    r->s[2] ^= r->s[0];
+    r->s[3] ^= r->s[1];
+    r->s[1] ^= r->s[2];
+    r->s[0] ^= r->s[3];
+    r->s[2] ^= t;
+    r->s[3] = rotl64(r->s[3], 45);
+    return result;
+}
+
+static double xo_uniform(Xo *r) {
+    return (double)(xo_next(r) >> 11) * (1.0 / 9007199254740992.0);
+}
+
+#define TAU 0x1.921fb54442d18p+2 /* std::f64::consts::TAU */
+
+static void box_muller(double u1, double u2, double *primary, double *secondary) {
+    double r = sqrt(-2.0 * log(u1));
+    double ang = TAU * u2;
+    *primary = r * cos(ang);
+    *secondary = r * sin(ang);
+}
+
+static double xo_normal(Xo *r) {
+    if (r->have_spare) {
+        r->have_spare = 0;
+        return r->spare;
+    }
+    double u1 = 1.0 - xo_uniform(r);
+    double u2 = xo_uniform(r);
+    double primary, secondary;
+    box_muller(u1, u2, &primary, &secondary);
+    r->spare = secondary;
+    r->have_spare = 1;
+    return primary;
+}
+
+static float xo_normal_f32(Xo *r) { return (float)xo_normal(r); }
+
+/* SeedSequence::key(device, run) */
+static void seed_key(uint64_t master, uint32_t device, uint64_t run, uint32_t key[2]) {
+    uint64_t mixed =
+        splitmix64(master ^ splitmix64(((uint64_t)device << 32) ^ rotl64(run, 17)));
+    key[0] = (uint32_t)(mixed >> 32);
+    key[1] = (uint32_t)mixed;
+}
+
+static uint64_t key_u64(const uint32_t key[2]) {
+    return ((uint64_t)key[0] << 32) | (uint64_t)key[1];
+}
+
+#define LANE_STREAM_SALT 0x1a5ec0de5eedab0cULL
+
+static Xo lane_rng(const uint32_t key[2], uint64_t lane) {
+    return xo_seed_from(splitmix64(key_u64(key) ^ splitmix64(LANE_STREAM_SALT ^ lane)));
+}
+
+/* ---- model/mod.rs ---- */
+
+static const float PRIOR_LOW[8] = {0, 0, 0, 0, 0, 0, 0, 0};
+static const float PRIOR_HIGH[8] = {1.0f, 100.0f, 2.0f, 1.0f, 1.0f, 1.0f, 1.0f, 2.0f};
+
+static void prior_sample(Xo *r, float theta[8]) {
+    for (int i = 0; i < 8; i++)
+        theta[i] = PRIOR_LOW[i] + (PRIOR_HIGH[i] - PRIOR_LOW[i]) * (float)xo_uniform(r);
+}
+
+/* state = [S, I, A, R, D, RU]; theta = [alpha0, alpha, n, beta, gamma,
+ * delta, eta, kappa] */
+static void init_state(float a0, float r0, float d0, float population,
+                       const float theta[8], float state[6]) {
+    float i0 = theta[7] * a0;
+    float s0 = population - (a0 + r0 + d0 + i0);
+    state[0] = s0;
+    state[1] = i0;
+    state[2] = a0;
+    state[3] = r0;
+    state[4] = d0;
+    state[5] = 0.0f;
+}
+
+static float response_rate(const float theta[8], float a, float r, float d) {
+    float total = fmaxf(a + r + d, 0.0f);
+    return theta[0] + theta[1] / (1.0f + powf(total, theta[2]));
+}
+
+static void hazard(const float state[6], const float theta[8], float population,
+                   float h[5]) {
+    float g = response_rate(theta, state[2], state[3], state[4]);
+    h[0] = g * state[0] * state[1] / population;
+    h[1] = theta[4] * state[1];
+    h[2] = theta[3] * state[2];
+    h[3] = theta[5] * state[2];
+    h[4] = theta[3] * theta[6] * state[1];
+}
+
+static float sample_transition(float h, float z) {
+    float hh = fmaxf(h, 0.0f);
+    return fmaxf(floorf(hh + sqrtf(hh) * z), 0.0f);
+}
+
+static void step(const float state[6], const float theta[8], const float z[5],
+                 float population, float next[6]) {
+    float h[5], raw[5];
+    hazard(state, theta, population, h);
+    for (int i = 0; i < 5; i++) raw[i] = sample_transition(h[i], z[i]);
+    float n1 = fminf(raw[0], state[0]);
+    float n2 = fminf(raw[1], state[1]);
+    float n5 = fminf(raw[4], state[1] - n2);
+    float n3 = fminf(raw[2], state[2]);
+    float n4 = fminf(raw[3], state[2] - n3);
+    next[0] = state[0] - n1;
+    next[1] = state[1] + n1 - n2 - n5;
+    next[2] = state[2] + n2 - n3 - n4;
+    next[3] = state[3] + n3;
+    next[4] = state[4] + n4;
+    next[5] = state[5] + n5;
+}
+
+static float sq_distance_day(const float state[6], const float *observed, int t,
+                             int days) {
+    float da = state[2] - observed[t];
+    float dr = state[3] - observed[days + t];
+    float dd = state[4] - observed[2 * days + t];
+    return da * da + dr * dr + dd * dd;
+}
+
+/* Simulator::distance (the fused per-day path) */
+static float distance(const float theta[8], const float *observed, int days,
+                      float a0, float r0, float d0, float population, Xo *rng) {
+    float state[6], next[6], z[5];
+    init_state(a0, r0, d0, population, theta, state);
+    float acc = sq_distance_day(state, observed, 0, days);
+    for (int t = 1; t < days; t++) {
+        for (int k = 0; k < 5; k++) z[k] = xo_normal_f32(rng);
+        step(state, theta, z, population, next);
+        memcpy(state, next, sizeof(state[0]) * 6);
+        acc += sq_distance_day(state, observed, t, days);
+    }
+    return sqrtf(acc);
+}
+
+/* ---- the golden scenario (tests/golden_streams.rs) ---- */
+
+#define G_SEED 0x601D5EEDULL
+#define G_DAYS 12
+#define G_BATCH 256
+#define G_RUNS 3
+#define G_POPULATION 1000000.0f
+
+static void golden_observed(float *obs /* [3 * G_DAYS] */) {
+    for (int t = 0; t < G_DAYS; t++) {
+        obs[t] = (float)(150 + 20 * t + ((t * t * 7) % 45));
+        obs[G_DAYS + t] = (float)(5 + 3 * t + ((t * 5) % 11));
+        obs[2 * G_DAYS + t] = (float)(1 + t + ((t * 3) % 7));
+    }
+}
+
+static uint32_t f32_bits(float x) {
+    uint32_t b;
+    memcpy(&b, &x, 4);
+    return b;
+}
+
+static uint64_t f64_bits(double x) {
+    uint64_t b;
+    memcpy(&b, &x, 8);
+    return b;
+}
+
+static int cmp_f32(const void *a, const void *b) {
+    float x = *(const float *)a, y = *(const float *)b;
+    return (x > y) - (x < y);
+}
+
+int main(int argc, char **argv) {
+    /* libm canaries: the exact calls whose rounding the pipeline leans
+     * on (f32 powf in response_rate; f64 log/sin/cos in Box-Muller).
+     * The Rust golden test recomputes these and skips its absolute pins
+     * with a loud message if any bit differs (foreign libm). */
+    printf("canary powf(1.7, 0.6)  f32 bits 0x%08" PRIx32 "\n",
+           f32_bits(powf(1.7f, 0.6f)));
+    printf("canary powf(123.45, 1.77) f32 bits 0x%08" PRIx32 "\n",
+           f32_bits(powf(123.45f, 1.77f)));
+    printf("canary ln(0.37)        f64 bits 0x%016" PRIx64 "\n", f64_bits(log(0.37)));
+    printf("canary sin(2.5)        f64 bits 0x%016" PRIx64 "\n", f64_bits(sin(2.5)));
+    printf("canary cos(2.5)        f64 bits 0x%016" PRIx64 "\n", f64_bits(cos(2.5)));
+
+    float obs[3 * G_DAYS];
+    golden_observed(obs);
+    float a0 = obs[0], r0 = obs[G_DAYS], d0 = obs[2 * G_DAYS];
+    printf("ic a0=%g r0=%g d0=%g population=%g\n", a0, r0, d0, (double)G_POPULATION);
+
+    static float dists[G_RUNS][G_BATCH];
+    static float thetas[G_RUNS][G_BATCH][8];
+    for (uint64_t run = 0; run < G_RUNS; run++) {
+        uint32_t key[2];
+        seed_key(G_SEED, 0, run, key);
+        for (uint64_t lane = 0; lane < G_BATCH; lane++) {
+            Xo rng = lane_rng(key, lane);
+            prior_sample(&rng, thetas[run][lane]);
+            dists[run][lane] = distance(thetas[run][lane], obs, G_DAYS, a0, r0, d0,
+                                        G_POPULATION, &rng);
+        }
+    }
+
+    if (argc < 2) {
+        /* stats mode: help pick an exactly-representable tolerance */
+        static float all[G_RUNS * G_BATCH];
+        memcpy(all, dists, sizeof(all));
+        qsort(all, G_RUNS * G_BATCH, sizeof(float), cmp_f32);
+        int n = G_RUNS * G_BATCH;
+        printf("distances: min=%.6f max=%.6f\n", all[0], all[n - 1]);
+        for (int pct = 5; pct <= 40; pct += 5)
+            printf("  p%02d = %.6f\n", pct, all[n * pct / 100]);
+        /* first few raw values for cross-checking against the Python port */
+        for (int l = 0; l < 4; l++)
+            printf("run0 lane%d d bits 0x%08" PRIx32 " theta0 bits 0x%08" PRIx32 "\n",
+                   l, f32_bits(dists[0][l]), f32_bits(thetas[0][l][0]));
+        return 0;
+    }
+
+    float tol = strtof(argv[1], NULL);
+    printf("tolerance %.6f (bits 0x%08" PRIx32 ")\n", tol, f32_bits(tol));
+
+    /* coordinator::stream_fingerprint over the accepted stream in
+     * (run, index) order */
+    uint64_t h = 0xcbf29ce484222325ULL;
+    int accepted_total = 0;
+    for (uint64_t run = 0; run < G_RUNS; run++) {
+        int accepted_run = 0;
+        for (uint32_t lane = 0; lane < G_BATCH; lane++) {
+            float d = dists[run][lane];
+            if (d <= tol) {
+                accepted_run++;
+                accepted_total++;
+                h = splitmix64(h ^ run);
+                h = splitmix64(h ^ (uint64_t)lane);
+                for (int i = 0; i < 8; i++)
+                    h = splitmix64(h ^ (uint64_t)f32_bits(thetas[run][lane][i]));
+                h = splitmix64(h ^ (uint64_t)f32_bits(d));
+                if (accepted_total <= 3)
+                    printf("accept run=%" PRIu64 " index=%u d bits 0x%08" PRIx32 "\n",
+                           run, lane, f32_bits(d));
+            }
+        }
+        printf("run %" PRIu64 ": accepted %d / %d\n", run, accepted_run, G_BATCH);
+    }
+    printf("accepted total %d\n", accepted_total);
+    printf("stream fingerprint 0x%016" PRIx64 "\n", h);
+    return 0;
+}

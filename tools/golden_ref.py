@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""Independent Python port of the golden-stream pipeline.
+
+Second implementation, deliberately written against the Rust sources
+rather than against tools/golden_ref.c, so the two can cross-check each
+other bit for bit before a fingerprint is committed to
+rust/tests/golden/streams.json.
+
+f32 semantics come from numpy float32 (IEEE-754 single, round to
+nearest); the correctly-rounded-not-guaranteed calls (f32 powf, f64
+log/sin/cos) go through ctypes into the same glibc libm the Rust
+binaries link, so bit-level agreement with the Rust oracle is by
+construction, not by luck.
+
+Usage:  python3 tools/golden_ref.py [tolerance]
+"""
+
+import ctypes
+import ctypes.util
+import math
+import struct
+import sys
+
+import numpy as np
+
+_libm = ctypes.CDLL(ctypes.util.find_library("m"))
+_libm.powf.restype = ctypes.c_float
+_libm.powf.argtypes = [ctypes.c_float, ctypes.c_float]
+_libm.log.restype = ctypes.c_double
+_libm.log.argtypes = [ctypes.c_double]
+_libm.sin.restype = ctypes.c_double
+_libm.sin.argtypes = [ctypes.c_double]
+_libm.cos.restype = ctypes.c_double
+_libm.cos.argtypes = [ctypes.c_double]
+
+F = np.float32
+MASK64 = (1 << 64) - 1
+GOLDEN_GAMMA = 0x9E3779B97F4A7C15
+TAU = 6.283185307179586476925286766559
+
+
+def splitmix64(z):
+    z = (z + GOLDEN_GAMMA) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def rotl64(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Xoshiro256:
+    def __init__(self, seed):
+        z = seed & MASK64
+        self.s = []
+        for _ in range(4):
+            z = (z + GOLDEN_GAMMA) & MASK64
+            self.s.append(splitmix64(z))
+        if not any(self.s):
+            self.s[0] = 1
+        self.spare = None
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl64((s[0] + s[3]) & MASK64, 23) + s[0]) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl64(s[3], 45)
+        return result
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self):
+        if self.spare is not None:
+            out, self.spare = self.spare, None
+            return out
+        u1 = 1.0 - self.uniform()
+        u2 = self.uniform()
+        r = math.sqrt(-2.0 * _libm.log(u1))
+        ang = TAU * u2
+        primary = r * _libm.cos(ang)
+        self.spare = r * _libm.sin(ang)
+        return primary
+
+    def normal_f32(self):
+        return F(self.normal())
+
+
+def seed_key(master, device, run):
+    mixed = splitmix64(master ^ splitmix64(((device << 32) ^ rotl64(run, 17)) & MASK64))
+    return [(mixed >> 32) & 0xFFFFFFFF, mixed & 0xFFFFFFFF]
+
+
+def key_u64(key):
+    return ((key[0] << 32) | key[1]) & MASK64
+
+
+LANE_STREAM_SALT = 0x1A5EC0DE5EEDAB0C
+
+
+def lane_rng(key, lane):
+    return Xoshiro256(splitmix64(key_u64(key) ^ splitmix64(LANE_STREAM_SALT ^ lane)))
+
+
+PRIOR_HIGH = [F(1.0), F(100.0), F(2.0), F(1.0), F(1.0), F(1.0), F(1.0), F(2.0)]
+
+
+def prior_sample(rng):
+    return [F(F(0.0) + (hi - F(0.0)) * F(rng.uniform())) for hi in PRIOR_HIGH]
+
+
+def powf(x, y):
+    return F(_libm.powf(float(x), float(y)))
+
+
+def init_state(a0, r0, d0, population, theta):
+    i0 = F(theta[7] * a0)
+    s0 = F(population - F(F(F(a0 + r0) + d0) + i0))
+    return [s0, i0, a0, r0, d0, F(0.0)]
+
+
+def response_rate(theta, a, r, d):
+    total = np.maximum(F(F(a + r) + d), F(0.0))
+    return F(theta[0] + F(theta[1] / F(F(1.0) + powf(total, theta[2]))))
+
+
+def hazard(state, theta, population):
+    g = response_rate(theta, state[2], state[3], state[4])
+    return [
+        F(F(F(g * state[0]) * state[1]) / population),
+        F(theta[4] * state[1]),
+        F(theta[3] * state[2]),
+        F(theta[5] * state[2]),
+        F(F(theta[3] * theta[6]) * state[1]),
+    ]
+
+
+def sample_transition(h, z):
+    hh = np.maximum(h, F(0.0))
+    return np.maximum(np.floor(F(hh + F(np.sqrt(hh) * z))), F(0.0))
+
+
+def step(state, theta, z, population):
+    h = hazard(state, theta, population)
+    raw = [sample_transition(h[i], z[i]) for i in range(5)]
+    n1 = np.minimum(raw[0], state[0])
+    n2 = np.minimum(raw[1], state[1])
+    n5 = np.minimum(raw[4], F(state[1] - n2))
+    n3 = np.minimum(raw[2], state[2])
+    n4 = np.minimum(raw[3], F(state[2] - n3))
+    return [
+        F(state[0] - n1),
+        F(F(F(state[1] + n1) - n2) - n5),
+        F(F(F(state[2] + n2) - n3) - n4),
+        F(state[3] + n3),
+        F(state[4] + n4),
+        F(state[5] + n5),
+    ]
+
+
+def sq_distance_day(state, observed, t, days):
+    da = F(state[2] - observed[t])
+    dr = F(state[3] - observed[days + t])
+    dd = F(state[4] - observed[2 * days + t])
+    return F(F(F(da * da) + F(dr * dr)) + F(dd * dd))
+
+
+def distance(theta, observed, days, a0, r0, d0, population, rng):
+    state = init_state(a0, r0, d0, population, theta)
+    acc = sq_distance_day(state, observed, 0, days)
+    for t in range(1, days):
+        z = [rng.normal_f32() for _ in range(5)]
+        state = step(state, theta, z, population)
+        acc = F(acc + sq_distance_day(state, observed, t, days))
+    return F(np.sqrt(acc))
+
+
+SEED = 0x601D5EED
+DAYS = 12
+BATCH = 256
+RUNS = 3
+POPULATION = F(1_000_000.0)
+
+
+def golden_observed():
+    active = [F(150 + 20 * t + ((t * t * 7) % 45)) for t in range(DAYS)]
+    recovered = [F(5 + 3 * t + ((t * 5) % 11)) for t in range(DAYS)]
+    deaths = [F(1 + t + ((t * 3) % 7)) for t in range(DAYS)]
+    return active + recovered + deaths
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", float(x)))[0]
+
+
+def main():
+    obs = golden_observed()
+    a0, r0, d0 = obs[0], obs[DAYS], obs[2 * DAYS]
+    print(f"canary powf(1.7, 0.6)  f32 bits 0x{f32_bits(_libm.powf(1.7, 0.6)):08x}")
+    dists, thetas = [], []
+    for run in range(RUNS):
+        key = seed_key(SEED, 0, run)
+        drow, trow = [], []
+        for lane in range(BATCH):
+            rng = lane_rng(key, lane)
+            theta = prior_sample(rng)
+            d = distance(theta, obs, DAYS, a0, r0, d0, POPULATION, rng)
+            trow.append(theta)
+            drow.append(d)
+        dists.append(drow)
+        thetas.append(trow)
+
+    if len(sys.argv) < 2:
+        flat = sorted(float(d) for row in dists for d in row)
+        n = len(flat)
+        print(f"distances: min={flat[0]:.6f} max={flat[-1]:.6f}")
+        for pct in range(5, 45, 5):
+            print(f"  p{pct:02d} = {flat[n * pct // 100]:.6f}")
+        for lane in range(4):
+            print(
+                f"run0 lane{lane} d bits 0x{f32_bits(dists[0][lane]):08x} "
+                f"theta0 bits 0x{f32_bits(thetas[0][lane][0]):08x}"
+            )
+        return
+
+    tol = F(float(sys.argv[1]))
+    h = 0xCBF29CE484222325
+    total = 0
+    for run in range(RUNS):
+        accepted = 0
+        for lane in range(BATCH):
+            d = dists[run][lane]
+            if d <= tol:
+                accepted += 1
+                total += 1
+                h = splitmix64(h ^ run)
+                h = splitmix64(h ^ lane)
+                for x in thetas[run][lane]:
+                    h = splitmix64(h ^ f32_bits(x))
+                h = splitmix64(h ^ f32_bits(d))
+        print(f"run {run}: accepted {accepted} / {BATCH}")
+    print(f"accepted total {total}")
+    print(f"stream fingerprint 0x{h:016x}")
+
+
+if __name__ == "__main__":
+    main()
