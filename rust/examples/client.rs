@@ -1,0 +1,119 @@
+//! Example client for the `repro serve` daemon — also the CI serve
+//! smoke's driver.
+//!
+//! Submits a `RunConfig` JSON file (or a small synthetic default) to a
+//! running daemon, polls the job to completion, prints its status, and
+//! writes the served posterior CSV — the exact bytes the `repro infer`
+//! CLI path writes for the same config, which is what the CI smoke
+//! `cmp`s.
+//!
+//! ```text
+//! repro serve --port 9090 &
+//! cargo run --release --example client -- 127.0.0.1:9090 job.json out.csv
+//! cargo run --release --example client -- 127.0.0.1:9090 --shutdown
+//! ```
+//!
+//! Arguments: `<addr> [config.json] [out.csv]`, or `<addr> --shutdown`
+//! to stop the daemon.
+
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::server::client::request;
+use abc_ipu::util::json::Json;
+use abc_ipu::{Error, Result};
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let addr = args
+        .first()
+        .ok_or_else(|| Error::Config("usage: client <addr> [config.json] [out.csv] | <addr> --shutdown".into()))?
+        .clone();
+
+    if args.iter().any(|a| a == "--shutdown") {
+        let (code, body) = request(&addr, "POST", "/v1/shutdown", None)?;
+        println!("shutdown: {code} {body}");
+        return Ok(());
+    }
+
+    let config = match args.get(1) {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig {
+            dataset: "synthetic".into(),
+            tolerance: Some(2e6),
+            devices: 1,
+            batch_per_device: 400,
+            days: 16,
+            return_strategy: ReturnStrategy::Outfeed { chunk: 100 },
+            accepted_samples: 40,
+            seed: 7,
+            max_runs: 400,
+            ..Default::default()
+        },
+    };
+
+    let (code, body) = request(&addr, "GET", "/v1/healthz", None)?;
+    if code != 200 {
+        return Err(Error::Config(format!("daemon at {addr} is not healthy: {code} {body}")));
+    }
+    println!("daemon: {body}");
+
+    let (code, body) = request(&addr, "POST", "/v1/jobs", Some(&config.to_json()))?;
+    if code != 200 {
+        return Err(Error::Config(format!("submission rejected: {code} {body}")));
+    }
+    let receipt = Json::parse(&body)?;
+    let id = receipt.req("id")?.as_u64()?;
+    println!(
+        "job {id} submitted (cached: {}, fingerprint {})",
+        receipt.req("cached")?.as_bool()?,
+        receipt.req("fingerprint")?.as_str()?
+    );
+
+    // Poll to a terminal state, reporting progress as the stream grows.
+    let deadline = Instant::now() + Duration::from_secs(600);
+    let status = loop {
+        let (code, body) = request(&addr, "GET", &format!("/v1/jobs/{id}"), None)?;
+        if code != 200 {
+            return Err(Error::Config(format!("status poll failed: {code} {body}")));
+        }
+        let status = Json::parse(&body)?;
+        let state = status.req("state")?.as_str()?.to_string();
+        if state != "running" {
+            break status;
+        }
+        println!(
+            "  running: {} accepted over {} runs",
+            status.req("accepted")?.as_u64()?,
+            status.req("runs")?.as_u64()?
+        );
+        if Instant::now() > deadline {
+            return Err(Error::Config(format!("job {id} still running after 600 s")));
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    };
+    let state = status.req("state")?.as_str()?;
+    println!("job {id}: {state} ({} accepted)", status.req("accepted")?.as_u64()?);
+    if state != "done" {
+        return Err(Error::Config(format!("job {id} ended {state}: {}", status.to_string())));
+    }
+
+    let (code, body) = request(&addr, "GET", &format!("/v1/jobs/{id}/posterior"), None)?;
+    if code != 200 {
+        return Err(Error::Config(format!("posterior fetch failed: {code} {body}")));
+    }
+    let posterior = Json::parse(&body)?;
+    for p in posterior.req("params")?.as_arr()? {
+        println!(
+            "  {:<7} mean {:8.4}  (p5 {:8.4}, p95 {:8.4})",
+            p.req("param")?.as_str()?,
+            p.req("mean")?.as_f64()?,
+            p.req("p5")?.as_f64()?,
+            p.req("p95")?.as_f64()?
+        );
+    }
+    if let Some(out) = args.get(2) {
+        std::fs::write(out, posterior.req("csv")?.as_str()?)?;
+        println!("served posterior CSV written to {out}");
+    }
+    Ok(())
+}

@@ -232,6 +232,81 @@ pub fn smc_fingerprint(
     h
 }
 
+/// A [`job_fingerprint`]-keyed cache of completed inference results.
+///
+/// Because the fingerprint folds in everything that determines a job's
+/// accepted stream (and *only* that — pool geometry and kernel knobs
+/// are excluded), two submissions with equal fingerprints are
+/// guaranteed bit-identical results under the determinism contract, so
+/// the second can be answered without simulating anything. This is the
+/// dedupe story of the `repro serve` daemon
+/// ([`crate::scheduler::service`], DESIGN.md §12); entries are shared
+/// as `Arc`s so a hit clones a pointer, not a sample stream.
+///
+/// Note the fingerprint includes the job *name*: a resubmission must
+/// carry the same name (or none, letting the server derive it from the
+/// dataset) to hit.
+#[derive(Debug, Default)]
+pub struct ResultCache {
+    entries: BTreeMap<u64, std::sync::Arc<crate::coordinator::InferenceResult>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ResultCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up a fingerprint, counting the hit or miss.
+    pub fn lookup(
+        &mut self,
+        fingerprint: u64,
+    ) -> Option<std::sync::Arc<crate::coordinator::InferenceResult>> {
+        match self.entries.get(&fingerprint) {
+            Some(r) => {
+                self.hits += 1;
+                Some(r.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace — the determinism contract makes replacement
+    /// a no-op in value terms) the result for a fingerprint.
+    pub fn insert(
+        &mut self,
+        fingerprint: u64,
+        result: std::sync::Arc<crate::coordinator::InferenceResult>,
+    ) {
+        self.entries.insert(fingerprint, result);
+    }
+
+    /// Number of cached results.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Lookups answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that found nothing so far.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Snapshot data model
 // ---------------------------------------------------------------------------
@@ -392,6 +467,20 @@ fn sample_from(v: &Json) -> Result<AcceptedSample> {
         theta,
         distance: f32_from(&row[3 + N_PARAMS])?,
     })
+}
+
+/// Serialize one accepted sample in the flat checkpoint layout
+/// (`[run, index, device, θ bits × 8, distance bits]`, f32 fields as
+/// IEEE-754 bit patterns). Public so the `server` streaming endpoint
+/// and its client speak exactly the wire encoding the checkpoint
+/// round-trip tests already pin (DESIGN.md §10/§12).
+pub fn sample_to_json(s: &AcceptedSample) -> Json {
+    sample_json(s)
+}
+
+/// Inverse of [`sample_to_json`]; rejects rows of the wrong arity.
+pub fn sample_from_json(v: &Json) -> Result<AcceptedSample> {
+    sample_from(v)
 }
 
 fn samples_json(samples: &[AcceptedSample]) -> Json {
@@ -879,6 +968,38 @@ mod tests {
                 }],
             }],
         }
+    }
+
+    #[test]
+    fn result_cache_counts_hits_and_shares_entries() {
+        use crate::coordinator::InferenceResult;
+        use std::sync::Arc;
+        let mut cache = ResultCache::new();
+        assert!(cache.is_empty());
+        assert!(cache.lookup(7).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let result = Arc::new(InferenceResult {
+            accepted: vec![sample(0, 1, 0.5)],
+            metrics: RunMetrics::default(),
+            tolerance: 2.0,
+        });
+        cache.insert(7, result.clone());
+        assert_eq!(cache.len(), 1);
+        let hit = cache.lookup(7).expect("cached");
+        // a hit shares the stored allocation, it does not copy samples
+        assert!(Arc::ptr_eq(&hit, &result));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(cache.lookup(8).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+    }
+
+    #[test]
+    fn sample_codec_public_wrappers_round_trip_and_reject_bad_arity() {
+        let s = sample(3, 9, -0.75);
+        let parsed = sample_from_json(&sample_to_json(&s)).unwrap();
+        assert_eq!(parsed, s);
+        let err = sample_from_json(&Json::Arr(vec![num(1), num(2)])).unwrap_err();
+        assert!(err.to_string().contains("fields"), "{err}");
     }
 
     #[test]

@@ -175,7 +175,15 @@ impl RunConfig {
 
     /// Parse from a JSON document.
     pub fn from_json(text: &str) -> Result<Self> {
-        let v = Json::parse(text)?;
+        Self::from_value(&Json::parse(text)?)
+    }
+
+    /// Parse from an already-parsed JSON value. Split from
+    /// [`from_json`](Self::from_json) so callers that embed a config in
+    /// a larger document — the `serve` daemon's submission body carries
+    /// sibling keys like `name` — can parse once and hand the value
+    /// over. Unknown keys are ignored (same policy as `from_json`).
+    pub fn from_value(v: &Json) -> Result<Self> {
         let mut cfg = RunConfig::default();
         if let Some(d) = v.get("dataset") {
             cfg.dataset = d.as_str()?.to_string();

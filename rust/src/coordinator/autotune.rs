@@ -52,21 +52,36 @@ pub fn autotune_batch(
     }
     let prior = Prior::paper();
     let mut points = Vec::with_capacity(batches.len());
+    // A sweep tolerates individual bad rungs — a zero batch (division
+    // by zero below) or an engine that fails to open/run — and selects
+    // over what measured. Only an empty outcome is an error: a tuner
+    // that panicked here would take down a long-running caller (the
+    // `serve` daemon) on a misbehaving backend.
+    let mut first_error: Option<Error> = None;
     for batch in batches {
-        let job = AbcJob::new(batch, days, observed.to_vec(), &prior, *consts);
-        let mut engine = backend.open_engine(0, &job)?;
-        // warmup (compile + caches)
-        engine.run([7, 0])?;
-        let sw = Stopwatch::start();
-        for i in 0..reps.max(1) {
-            engine.run([7, i + 1])?;
+        if batch == 0 {
+            continue;
         }
-        let time_per_run = sw.seconds() / reps.max(1) as f64;
-        points.push(TunePoint {
-            batch,
-            time_per_run,
-            per_sample: time_per_run / batch as f64,
-        });
+        let job = AbcJob::new(batch, days, observed.to_vec(), &prior, *consts);
+        let measured = (|| -> Result<TunePoint> {
+            let mut engine = backend.open_engine(0, &job)?;
+            // warmup (compile + caches)
+            engine.run([7, 0])?;
+            let sw = Stopwatch::start();
+            for i in 0..reps.max(1) {
+                engine.run([7, i + 1])?;
+            }
+            let time_per_run = sw.seconds() / reps.max(1) as f64;
+            Ok(TunePoint {
+                batch,
+                time_per_run,
+                per_sample: time_per_run / batch as f64,
+            })
+        })();
+        match measured {
+            Ok(point) => points.push(point),
+            Err(e) => first_error = first_error.or(Some(e)),
+        }
     }
     let best = points
         .iter()
@@ -74,7 +89,16 @@ pub fn autotune_batch(
         .min_by(|a, b| a.per_sample.total_cmp(&b.per_sample))
         // if nothing fits the budget, take the smallest batch
         .or_else(|| points.first())
-        .expect("non-empty");
+        .ok_or_else(|| match first_error {
+            Some(e) => Error::Config(format!(
+                "autotune measured no batch variant for {days} days \
+                 (every rung failed; first error: {e})"
+            )),
+            None => Error::Config(format!(
+                "autotune measured no batch variant for {days} days \
+                 (the backend's ladder held only zero-sized batches)"
+            )),
+        })?;
     Ok(TuneResult { best_batch: best.batch, points })
 }
 
@@ -105,6 +129,77 @@ mod tests {
         assert_eq!(pick(f64::INFINITY), 10_000); // best per-sample
         assert_eq!(pick(0.01), 1_000); // latency budget excludes 10k
         assert_eq!(pick(0.0001), 1_000); // nothing fits → smallest
+    }
+
+    /// A backend whose ladder and engines misbehave on demand:
+    /// `ladder` is advertised verbatim, and every `open_engine` fails
+    /// when `broken` is set.
+    #[derive(Debug)]
+    struct FaultyBackend {
+        ladder: Vec<usize>,
+        broken: bool,
+    }
+
+    impl Backend for FaultyBackend {
+        fn name(&self) -> &'static str {
+            "faulty"
+        }
+        fn open_engine(&self, _device: u32, job: &AbcJob) -> Result<Box<dyn crate::backend::AbcEngine>> {
+            if self.broken {
+                return Err(Error::Config("engine refused to open".into()));
+            }
+            NativeBackend::new().open_engine(0, job)
+        }
+        fn predict(
+            &self,
+            _key: [u32; 2],
+            _thetas: &[f32],
+            _consts: &[f32; 4],
+            _days: usize,
+        ) -> Result<Vec<f32>> {
+            Err(Error::Config("unused".into()))
+        }
+        fn onestep(
+            &self,
+            _states: &[f32],
+            _thetas: &[f32],
+            _z: &[f32],
+            _consts: &[f32; 4],
+        ) -> Result<Vec<f32>> {
+            Err(Error::Config("unused".into()))
+        }
+        fn abc_batches(&self, _days: usize) -> Vec<usize> {
+            self.ladder.clone()
+        }
+    }
+
+    fn tune(backend: &dyn Backend) -> Result<TuneResult> {
+        let ds = synthetic::default_dataset(16, 0x5eed);
+        let observed = ds.observed.flatten();
+        autotune_batch(backend, &observed, &ds.consts(), 16, f64::INFINITY, 1)
+    }
+
+    #[test]
+    fn zero_only_ladder_is_a_typed_config_error_not_a_panic() {
+        let err = tune(&FaultyBackend { ladder: vec![0, 0], broken: false }).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("zero-sized"), "{err}");
+    }
+
+    #[test]
+    fn all_error_sweep_is_a_typed_config_error_naming_the_cause() {
+        let err = tune(&FaultyBackend { ladder: vec![100, 200], broken: true }).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        let msg = err.to_string();
+        assert!(msg.contains("every rung failed"), "{msg}");
+        assert!(msg.contains("engine refused to open"), "{msg}");
+    }
+
+    #[test]
+    fn zero_rungs_are_skipped_but_good_rungs_still_measure() {
+        let result = tune(&FaultyBackend { ladder: vec![0, 64, 0], broken: false }).unwrap();
+        assert_eq!(result.points.len(), 1);
+        assert_eq!(result.best_batch, 64);
     }
 
     #[test]

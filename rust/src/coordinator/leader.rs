@@ -147,7 +147,18 @@ impl Coordinator {
         )?;
         let scheduler = Scheduler::new(self.backend.clone(), self.config.devices);
         let mut report = scheduler.run(vec![job])?;
-        report.jobs.pop().expect("single-job schedule").outcome
+        // A single-job schedule reports exactly one outcome; if the
+        // report comes back empty anyway (a cancelled or torn-down
+        // schedule), degrade to a typed error — a long-running caller
+        // (the `serve` daemon) must never die on an unwrap here.
+        match report.jobs.pop() {
+            Some(job) => job.outcome,
+            None => Err(Error::Coordinator(format!(
+                "schedule for job `{}` returned no outcome (schedule \
+                 cancelled before the job was decided)",
+                self.dataset.name
+            ))),
+        }
     }
 
     /// Convenience: run until `n` samples are accepted.

@@ -33,7 +33,8 @@
 //! | [`backend`] | pluggable execution: native host engine / compiled PJRT |
 //! | `runtime` (feature `pjrt`) | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | parallel ABC engine: leader, device workers, outfeed, top-k |
-//! | [`scheduler`] | multi-scenario scheduler: many ABC jobs on one shared worker pool; single-job sharding (`scheduler::shard`) fans one job across it |
+//! | [`scheduler`] | multi-scenario scheduler: many ABC jobs on one shared worker pool; single-job sharding (`scheduler::shard`) fans one job across it; incremental submission service (`scheduler::service`) keeps the pool alive between jobs |
+//! | [`server`] | inference-as-a-service HTTP/JSON daemon over the incremental scheduler (`repro serve`) |
 //! | [`checkpoint`] | crash-safe snapshot/resume of run-frontier state with bit-identical deterministic replay |
 //! | [`abc`] | ABC/SMC-ABC algorithm layer: tolerances, posterior store, prediction |
 //! | [`model`] | pure-Rust reference simulator (CPU baseline + validation oracle) |
@@ -60,6 +61,7 @@ pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
+pub mod server;
 pub mod stats;
 pub mod util;
 

@@ -35,6 +35,8 @@ use abc_ipu::hwmodel::{
 };
 use abc_ipu::model::{Prior, PARAM_NAMES};
 use abc_ipu::report::{fmt_bytes, fmt_secs, write_csv, Table};
+use abc_ipu::scheduler::service::InferenceService;
+use abc_ipu::server::HttpServer;
 use abc_ipu::util::cli::{ParsedArgs, Spec};
 use abc_ipu::{Error, Result};
 use std::path::PathBuf;
@@ -57,6 +59,7 @@ commands (paper experiment in brackets):
   energy            iso-power samples/joule table
   autotune          measure + pick best batch variant
   smc               SMC-ABC refinement schedule
+  serve             inference-as-a-service HTTP daemon (DESIGN.md §12)
   info              backend + dataset inventory
 
 common flags: --backend native|pjrt  --artifacts DIR  --reports DIR
@@ -74,6 +77,9 @@ resume flags: --checkpoint FILE (crash-safe frontier snapshots; or
               uninterrupted run)
 scale flags:  --device-counts N,N,...  --sharded (scale ONE sharded job
               across the pool — the measured Table-7 mode)
+serve flags:  --port N (0 = OS-assigned; $ABC_IPU_PORT overrides)
+              --workers N (pool size, default 2); submit RunConfig JSON
+              to POST /v1/jobs, stop with POST /v1/shutdown
 ";
 
 /// Flags shared by inference-shaped commands.
@@ -229,6 +235,7 @@ fn main() {
         "energy" => cmd_energy(argv),
         "autotune" => cmd_autotune(argv),
         "smc" => cmd_smc(argv),
+        "serve" => cmd_serve(argv),
         "info" => cmd_info(argv),
         other => {
             eprint!("{USAGE}");
@@ -743,6 +750,26 @@ fn cmd_smc(argv: Vec<String>) -> Result<()> {
     }
     print!("{}", t.render());
     Ok(())
+}
+
+/// Inference-as-a-service: a long-running daemon over one shared worker
+/// pool with incremental submission, streaming, dedupe and cancellation
+/// (DESIGN.md §12).
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let a = parse(argv, &["artifacts", "backend", "port", "workers"], &[])?;
+    let port = abc_ipu::server::resolve_port(a.parse_or("port", 0)?)?;
+    let workers: usize = a.parse_or("workers", 2)?;
+    let engine = backend_from_flag(&a)?;
+    let service = InferenceService::start(engine, workers);
+    let server = HttpServer::bind(port, service)?;
+    println!(
+        "serving inference on http://{} (`{}` backend, {} workers)",
+        server.local_addr()?,
+        server.service().backend_name(),
+        server.service().workers()
+    );
+    println!("POST /v1/jobs to submit a RunConfig; POST /v1/shutdown to stop");
+    server.serve()
 }
 
 fn cmd_info(argv: Vec<String>) -> Result<()> {

@@ -6,6 +6,8 @@
 //! quantities inside the coordinator; [`Stopwatch`] is the measuring
 //! primitive.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// A simple stopwatch around `Instant`.
@@ -106,6 +108,28 @@ impl RunMetrics {
         self.transfers_skipped as f64 / total as f64
     }
 
+    /// Wire shape of these metrics (the `serve` daemon's `/v1/metrics`
+    /// payload): counters as numbers, durations as f64 seconds, plus
+    /// the derived `acceptance_rate`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("runs".into(), Json::Num(self.runs as f64));
+        m.insert("samples_simulated".into(), Json::Num(self.samples_simulated as f64));
+        m.insert("samples_accepted".into(), Json::Num(self.samples_accepted as f64));
+        m.insert("total_seconds".into(), Json::Num(self.total.as_secs_f64()));
+        m.insert("device_exec_seconds".into(), Json::Num(self.device_exec.as_secs_f64()));
+        m.insert(
+            "host_postproc_seconds".into(),
+            Json::Num(self.host_postproc.as_secs_f64()),
+        );
+        m.insert("bytes_to_host".into(), Json::Num(self.bytes_to_host as f64));
+        m.insert("transfers".into(), Json::Num(self.transfers as f64));
+        m.insert("transfers_skipped".into(), Json::Num(self.transfers_skipped as f64));
+        m.insert("resumed_runs".into(), Json::Num(self.resumed_runs as f64));
+        m.insert("acceptance_rate".into(), Json::Num(self.acceptance_rate()));
+        Json::Obj(m)
+    }
+
     /// Merge another device/job's metrics into this one (durations add;
     /// `total` and `resumed_runs` take the max — devices run
     /// concurrently, and a merged report resumes from the furthest
@@ -185,6 +209,27 @@ mod tests {
         assert_eq!(a.resumed_runs, 7);
         a.merge(&RunMetrics::default());
         assert_eq!(a.resumed_runs, 7);
+    }
+
+    #[test]
+    fn to_json_carries_counters_and_seconds() {
+        let m = RunMetrics {
+            runs: 4,
+            samples_simulated: 400,
+            samples_accepted: 10,
+            total: Duration::from_millis(500),
+            bytes_to_host: 128,
+            ..Default::default()
+        };
+        let v = m.to_json();
+        assert_eq!(v.req("runs").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(v.req("bytes_to_host").unwrap().as_u64().unwrap(), 128);
+        assert!((v.req("total_seconds").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        assert!(
+            (v.req("acceptance_rate").unwrap().as_f64().unwrap() - 0.025).abs() < 1e-12
+        );
+        // the wire form itself round-trips through the parser
+        assert!(Json::parse(&v.to_string()).is_ok());
     }
 
     #[test]

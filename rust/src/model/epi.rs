@@ -8,6 +8,7 @@
 //! a fit.
 
 use super::{response_rate, state_idx, theta_idx, InitialCondition, Theta};
+use crate::{Error, Result};
 
 /// Effective reproduction number at a given state.
 ///
@@ -62,6 +63,65 @@ pub fn posterior_r0(thetas: &[Theta], ic: &InitialCondition) -> Vec<f32> {
     thetas.iter().map(|t| r0(t, ic)).collect()
 }
 
+/// Empirical exponential growth rate (per day) of an observed daily
+/// case series: the least-squares slope of `ln(cases)` over the day
+/// index, fitted over the strictly-positive counts (zero days carry no
+/// log information).
+///
+/// Typed failure, not a panic: a series with fewer than two positive
+/// counts has no fittable slope and returns [`Error::Config`] — the
+/// guard that lets a long-running caller (the `serve` daemon) survive
+/// degenerate observed data.
+pub fn series_growth_rate(cases: &[f32]) -> Result<f32> {
+    let pts: Vec<(f32, f32)> = cases
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0.0)
+        .map(|(day, &c)| (day as f32, c.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return Err(Error::Config(format!(
+            "observed series has {} positive count(s); a growth rate \
+             needs at least 2",
+            pts.len()
+        )));
+    }
+    let n = pts.len() as f32;
+    let mean_x = pts.iter().map(|(x, _)| x).sum::<f32>() / n;
+    let mean_y = pts.iter().map(|(_, y)| y).sum::<f32>() / n;
+    let mut cov = 0.0f32;
+    let mut var = 0.0f32;
+    for (x, y) in &pts {
+        cov += (x - mean_x) * (y - mean_y);
+        var += (x - mean_x) * (x - mean_x);
+    }
+    if var <= 0.0 {
+        return Err(Error::Config(
+            "observed series has no day spread to fit a growth rate over".into(),
+        ));
+    }
+    Ok(cov / var)
+}
+
+/// Empirical case doubling time in days from an observed daily series.
+///
+/// The series-level companion of [`doubling_time`]: fit the growth
+/// rate with [`series_growth_rate`], then `ln 2 / r`. A flat or
+/// declining series (r ≤ 0) has no doubling time and returns
+/// [`Error::Config`] rather than panicking — observed data is user
+/// input, and a shrinking epidemic is a legitimate series to submit.
+pub fn series_doubling_time(cases: &[f32]) -> Result<f32> {
+    let r = series_growth_rate(cases)?;
+    if r <= 0.0 {
+        return Err(Error::Config(format!(
+            "observed series is not growing (fitted growth rate \
+             {r:.3e}/day): flat or declining case counts have no \
+             doubling time"
+        )));
+    }
+    Ok(std::f32::consts::LN_2 / r)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,9 +146,45 @@ mod tests {
         let d = doubling_time(&THETA, &ic());
         assert!(r > 1.0);
         assert!(g > 0.0);
-        let d = d.expect("growing epidemic must have a doubling time");
         // this θ implies a very fast early epidemic (g ≈ 2/day)
-        assert!((0.1..60.0).contains(&d), "doubling {d} days");
+        assert!(
+            matches!(d, Some(d) if (0.1..60.0).contains(&d)),
+            "doubling {d:?} days"
+        );
+    }
+
+    #[test]
+    fn declining_series_is_a_typed_error_not_a_panic() {
+        let declining: Vec<f32> = (0..14).map(|d| 1000.0 * (-0.2 * d as f32).exp()).collect();
+        let err = series_doubling_time(&declining).unwrap_err();
+        assert!(matches!(err, crate::Error::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("not growing"), "{err}");
+        // the growth rate itself still fits fine — it is just negative
+        assert!(series_growth_rate(&declining).unwrap() < 0.0);
+    }
+
+    #[test]
+    fn flat_and_degenerate_series_are_typed_errors() {
+        let flat = [100.0f32; 10];
+        assert!(series_doubling_time(&flat).is_err());
+        // all-zero: not enough positive counts to fit a slope at all
+        let err = series_growth_rate(&[0.0, 0.0, 0.0]).unwrap_err();
+        assert!(matches!(err, crate::Error::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("positive count"), "{err}");
+        assert!(series_growth_rate(&[5.0]).is_err());
+    }
+
+    #[test]
+    fn growing_series_recovers_its_rate_and_doubling_time() {
+        // exact exponential at r = 0.1/day, with zero-count gaps that
+        // the fit must skip rather than poison with ln(0)
+        let mut series: Vec<f32> = (0..20).map(|d| 10.0 * (0.1 * d as f32).exp()).collect();
+        series[3] = 0.0;
+        series[11] = 0.0;
+        let r = series_growth_rate(&series).unwrap();
+        assert!((r - 0.1).abs() < 1e-3, "fitted r = {r}");
+        let d = series_doubling_time(&series).unwrap();
+        assert!((d - std::f32::consts::LN_2 / 0.1).abs() < 0.1, "doubling {d}");
     }
 
     #[test]

@@ -144,6 +144,43 @@ pub fn scenario_comparison(
     table
 }
 
+/// Wire shape of a posterior's per-parameter summaries (the `serve`
+/// daemon's `/v1/jobs/{id}/posterior` payload): one object per model
+/// parameter with mean/std/p5/median/p95, plus the accepted count and
+/// distance summary. Empty-safe: an empty posterior yields an empty
+/// `params` array instead of tripping [`crate::stats::Summary::of`]'s
+/// empty-input panic — a served job cancelled before its first
+/// acceptance is a legitimate thing to ask the posterior of.
+pub fn posterior_summary_json(posterior: &crate::abc::Posterior) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let summary_obj = |s: &crate::stats::Summary| {
+        let mut m = BTreeMap::new();
+        m.insert("mean".to_string(), Json::Num(s.mean));
+        m.insert("std_dev".to_string(), Json::Num(s.std_dev));
+        m.insert("p5".to_string(), Json::Num(s.p5));
+        m.insert("median".to_string(), Json::Num(s.median));
+        m.insert("p95".to_string(), Json::Num(s.p95));
+        Json::Obj(m)
+    };
+    let mut out = BTreeMap::new();
+    out.insert("accepted".to_string(), Json::Num(posterior.len() as f64));
+    let mut params = Vec::new();
+    if !posterior.is_empty() {
+        for (name, s) in posterior.summaries() {
+            let mut p = BTreeMap::new();
+            p.insert("param".to_string(), Json::Str(name.to_string()));
+            if let Json::Obj(stats) = summary_obj(&s) {
+                p.extend(stats);
+            }
+            params.push(Json::Obj(p));
+        }
+        out.insert("distance".to_string(), summary_obj(&posterior.distance_summary()));
+    }
+    out.insert("params".to_string(), Json::Arr(params));
+    Json::Obj(out)
+}
+
 /// Write a CSV series to `reports/<name>.csv`, creating the directory.
 pub fn write_csv(dir: impl AsRef<Path>, name: &str, csv: &str) -> crate::Result<std::path::PathBuf> {
     let dir = dir.as_ref();
@@ -242,6 +279,36 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.starts_with("parameter,italy,usa\n"));
         assert!(csv.contains("accepted n,2,0\n"));
+    }
+
+    #[test]
+    fn posterior_summary_json_is_empty_safe_and_shaped() {
+        use crate::abc::Posterior;
+        use crate::coordinator::AcceptedSample;
+        let empty = posterior_summary_json(&Posterior::new(Vec::new()));
+        assert_eq!(empty.req("accepted").unwrap().as_u64().unwrap(), 0);
+        assert!(empty.req("params").unwrap().as_arr().unwrap().is_empty());
+        assert!(empty.get("distance").is_none());
+
+        let sample = |v: f32, d: f32| AcceptedSample {
+            theta: [v; 8],
+            distance: d,
+            device: 0,
+            run: 0,
+            index: 0,
+        };
+        let p = Posterior::new(vec![sample(0.2, 10.0), sample(0.4, 20.0)]);
+        let v = posterior_summary_json(&p);
+        assert_eq!(v.req("accepted").unwrap().as_u64().unwrap(), 2);
+        let params = v.req("params").unwrap().as_arr().unwrap();
+        assert_eq!(params.len(), 8);
+        assert_eq!(params[0].req("param").unwrap().as_str().unwrap(), "alpha0");
+        assert!((params[0].req("mean").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-6);
+        assert!(
+            (v.req("distance").unwrap().req("median").unwrap().as_f64().unwrap() - 15.0)
+                .abs()
+                < 1e-6
+        );
     }
 
     #[test]

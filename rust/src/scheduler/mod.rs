@@ -46,6 +46,14 @@
 //! ([`crate::checkpoint`], DESIGN.md §10, pinned by
 //! `tests/prop_checkpoint.rs`).
 //!
+//! **Incremental submission.** [`Scheduler::run`] takes a closed job
+//! list; the [`service`] submodule keeps the same pool/leader/frontier
+//! machinery alive in a long-running [`service::InferenceService`],
+//! where jobs arrive one at a time over the dispatcher's
+//! append-a-slot path, can be cancelled mid-flight, and identical
+//! submissions dedupe against a fingerprint-keyed result cache — the
+//! substrate of the `repro serve` daemon (DESIGN.md §12).
+//!
 //! Stop rules are decided at the frontier:
 //! * [`StopRule::ExactRuns`]`(r)` — exactly runs `0..r` are issued and
 //!   kept.
@@ -58,6 +66,7 @@
 //!   runs, so it is shard-invariant (DESIGN.md §9).
 
 mod pool;
+pub mod service;
 pub mod shard;
 
 use crate::backend::{AbcJob, Backend, NativeBackend};

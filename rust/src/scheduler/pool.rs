@@ -188,6 +188,23 @@ impl Dispatcher {
         }
     }
 
+    /// Append a new job slot while the pool is running and return its
+    /// job id (the slot index — the incremental-submission analogue of
+    /// the submission-order ids `new` assigns). Unlike
+    /// [`Dispatcher::finish_job`], which never wakes anyone (removing
+    /// work cannot unblock a waiting worker), adding work must
+    /// `notify_all`: an idle pool is parked in [`Dispatcher::next`]'s
+    /// condvar wait and would otherwise never see the new job
+    /// (`scheduler::service`, DESIGN.md §12).
+    pub fn add_job(&self, init: JobSlotInit) -> u32 {
+        let mut st = lock(&self.state);
+        st.slots.push(JobSlot::new(init));
+        let id = (st.slots.len() - 1) as u32;
+        drop(st);
+        self.wake.notify_all();
+        id
+    }
+
     /// Stop issuing new runs for `job` (outcome decided). In-flight
     /// runs still complete and report; the leader ignores what it no
     /// longer needs.
@@ -422,6 +439,22 @@ mod tests {
             held,
         }]);
         // every item of the single budgeted run is held -> nothing to issue
+        d.shutdown();
+        assert!(d.next().is_none());
+    }
+
+    #[test]
+    fn add_job_wakes_a_parked_worker_and_extends_the_slot_table() {
+        // an empty dispatcher parks `next` until work arrives
+        let d = Arc::new(Dispatcher::new(Vec::new()));
+        let d2 = d.clone();
+        let h = std::thread::spawn(move || d2.next().map(|w| (w.job, w.run)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(d.add_job(fresh(ctx(9), Some(1))), 0);
+        assert_eq!(h.join().unwrap(), Some((0, 0)));
+        // slot ids keep counting from where the table left off
+        assert_eq!(d.add_job(fresh(ctx(10), Some(1))), 1);
+        assert_eq!(d.next().map(|w| (w.job, w.run)), Some((1, 0)));
         d.shutdown();
         assert!(d.next().is_none());
     }

@@ -1,0 +1,763 @@
+//! Inference-as-a-service: the long-running, incremental-submission
+//! face of the scheduler.
+//!
+//! [`Scheduler::run`](super::Scheduler::run) takes a closed job list
+//! and tears the pool down when the last job is decided. An
+//! [`InferenceService`] keeps exactly the same machinery — job-agnostic
+//! pool workers, one demux leader, per-job deterministic run frontiers —
+//! alive indefinitely:
+//!
+//! ```text
+//!   submit(config) ──► validate · fingerprint · cache lookup
+//!        │                         │ miss                │ hit
+//!        │                         ▼                     ▼
+//!        │              dispatcher.add_job()    answered from the
+//!        │              (wakes parked workers)  ResultCache, no work
+//!        ▼                         │            issued at all
+//!   JobStatus / SampleBatch ◄── leader thread (frontier demux)
+//! ```
+//!
+//! **Determinism.** A served job's accepted stream is bit-identical to
+//! a solo [`Coordinator::run_until`](crate::coordinator::Coordinator)
+//! of the same `RunConfig` — same frontier absorption as the batch
+//! scheduler, for any pool size, submission interleaving or poll
+//! timing. The one addition: each run's samples are sorted by in-run
+//! index *at absorption* (the batch path sorts once at the end), so the
+//! accepted prefix a polling client has already seen is final — later
+//! polls only append (`tests/serve.rs` pins served == solo).
+//!
+//! **Dedupe.** Submissions are keyed by
+//! [`checkpoint::job_fingerprint`](crate::checkpoint::job_fingerprint):
+//! an identical resubmission is answered from the
+//! [`ResultCache`](crate::checkpoint::ResultCache) without issuing any
+//! work — the receipt says `cached: true` and the job is born `Done`.
+//!
+//! **Cancellation ordering.** [`InferenceService::cancel`] takes the
+//! state lock, marks the job terminal and stops the dispatcher issuing
+//! for it, in that order; the leader drops reports for terminal jobs
+//! under the same lock. So once `cancel` returns, the job's accepted
+//! stream never grows again — in-flight work items still execute (a
+//! claimed item cannot be recalled) but can only feed volume counters.
+//!
+//! The HTTP surface over this API lives in [`crate::server`]
+//! (DESIGN.md §12).
+
+use super::pool::{pool_worker_main, Dispatcher, JobSlotInit, PoolMessage, PoolWorkerSpec};
+use super::shard::{merge_shard_transfers, ShardPlan};
+use super::{budget_exhausted, JobSpec, RunAssembly};
+use crate::backend::Backend;
+use crate::checkpoint::{self, ResultCache};
+use crate::config::{ReturnStrategy, RunConfig};
+use crate::coordinator::{
+    filter_transfer, stream_fingerprint, AcceptedSample, InferenceResult, StopRule, Transfer,
+};
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::model::Prior;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Lifecycle of a served job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted; issuing and/or absorbing work on the pool.
+    Running,
+    /// Stop rule satisfied; the result is available (and cached).
+    Done,
+    /// Cancelled before its stop rule was satisfied.
+    Cancelled,
+    /// Failed with the contained error rendering. (The message, not the
+    /// [`Error`]: errors are not clonable, statuses are.)
+    Failed(String),
+}
+
+impl JobState {
+    /// Wire label: `running`, `done`, `cancelled` or `failed`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed(_) => "failed",
+        }
+    }
+
+    /// Whether the job can make no further progress.
+    pub fn terminal(&self) -> bool {
+        !matches!(self, JobState::Running)
+    }
+}
+
+/// What `submit` hands back immediately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitReceipt {
+    /// Service-wide job id (also the dispatcher slot index).
+    pub id: u32,
+    /// Whether the job was answered from the fingerprint cache.
+    pub cached: bool,
+    /// The job's [`checkpoint::job_fingerprint`] — the cache key.
+    pub fingerprint: u64,
+}
+
+/// Point-in-time public view of one served job.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    /// Service-wide job id.
+    pub id: u32,
+    /// Job name (submitted, or derived from the dataset).
+    pub name: String,
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Whether the job was answered from the fingerprint cache.
+    pub cached: bool,
+    /// The job's fingerprint / cache key.
+    pub fingerprint: u64,
+    /// Accepted samples absorbed so far (final prefix — never reordered).
+    pub accepted: usize,
+    /// Frontier-finalized runs so far.
+    pub runs: u64,
+    /// Effective tolerance ε.
+    pub tolerance: f32,
+}
+
+/// One page of a job's accepted stream, from a requested offset.
+#[derive(Debug, Clone)]
+pub struct SampleBatch {
+    /// Samples `offset..total`, in final `(run, index)` order.
+    pub samples: Vec<AcceptedSample>,
+    /// The (clamped) offset these samples start at.
+    pub offset: usize,
+    /// Accepted samples absorbed so far.
+    pub total: usize,
+    /// Whether the job is terminal (the stream will not grow).
+    pub done: bool,
+    /// [`stream_fingerprint`] of the whole stream, once terminal.
+    pub fingerprint: Option<u64>,
+}
+
+/// Aggregated service-level metrics (the `/v1/metrics` payload).
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    /// Jobs ever submitted (including cache hits).
+    pub submitted: u64,
+    /// Jobs currently running.
+    pub running: u64,
+    /// Jobs completed.
+    pub done: u64,
+    /// Jobs cancelled.
+    pub cancelled: u64,
+    /// Jobs failed.
+    pub failed: u64,
+    /// Distinct results held by the fingerprint cache.
+    pub cache_entries: u64,
+    /// Submissions answered from the cache.
+    pub cache_hits: u64,
+    /// Per-job [`RunMetrics`] merged across all jobs (durations add,
+    /// `total` takes the max — jobs run concurrently).
+    pub pool: RunMetrics,
+}
+
+/// Leader-side state of one served job — the incremental sibling of the
+/// batch scheduler's `JobProgress`, plus lifecycle/caching fields.
+struct ServiceJob {
+    name: String,
+    fingerprint: u64,
+    tolerance: f32,
+    stop: StopRule,
+    strategy: ReturnStrategy,
+    plan: ShardPlan,
+    shards: u32,
+    budget: Option<u64>,
+    assembling: BTreeMap<u64, RunAssembly>,
+    pending: BTreeMap<u64, Result<Vec<AcceptedSample>>>,
+    frontier: u64,
+    accepted: Vec<AcceptedSample>,
+    metrics: RunMetrics,
+    state: JobState,
+    cached: bool,
+    result: Option<Arc<InferenceResult>>,
+    started_at: Duration,
+    finished_at: Option<Duration>,
+}
+
+impl ServiceJob {
+    fn status(&self, id: u32) -> JobStatus {
+        JobStatus {
+            id,
+            name: self.name.clone(),
+            state: self.state.clone(),
+            cached: self.cached,
+            fingerprint: self.fingerprint,
+            accepted: self.accepted.len(),
+            runs: self.metrics.runs,
+            tolerance: self.tolerance,
+        }
+    }
+
+    /// Seal the job's metrics at `now` (idempotent bookkeeping shared
+    /// by completion, failure and cancellation).
+    fn seal(&mut self, now: Duration) {
+        self.finished_at = Some(now);
+        self.metrics.samples_accepted = self.accepted.len() as u64;
+        self.metrics.total = now.saturating_sub(self.started_at);
+        self.assembling.clear();
+        self.pending.clear();
+    }
+}
+
+struct ServiceState {
+    jobs: Vec<ServiceJob>,
+    cache: ResultCache,
+    shutting_down: bool,
+}
+
+fn lock_state(m: &Mutex<ServiceState>) -> MutexGuard<'_, ServiceState> {
+    // Panics inside backends are demoted to job errors before any lock
+    // is re-taken (pool.rs), so poisoning carries no torn state.
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// A long-running inference service over one shared worker pool.
+///
+/// Start with [`InferenceService::start`]; submit any number of
+/// [`RunConfig`]s over time; poll status/samples; [`cancel`] what you
+/// no longer need; [`shutdown`] joins every thread. Dropping the last
+/// handle shuts down implicitly.
+///
+/// [`cancel`]: InferenceService::cancel
+/// [`shutdown`]: InferenceService::shutdown
+pub struct InferenceService {
+    backend_name: &'static str,
+    workers: usize,
+    dispatcher: Arc<Dispatcher>,
+    state: Arc<Mutex<ServiceState>>,
+    clock: Stopwatch,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for InferenceService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("InferenceService")
+            .field("backend", &self.backend_name)
+            .field("workers", &self.workers)
+            .finish_non_exhaustive()
+    }
+}
+
+impl InferenceService {
+    /// Spawn `workers` pool workers (min 1) on `backend` plus the demux
+    /// leader, all parked until the first submission arrives.
+    pub fn start(backend: Arc<dyn Backend>, workers: usize) -> Arc<Self> {
+        let workers = workers.max(1);
+        let dispatcher = Arc::new(Dispatcher::new(Vec::new()));
+        let state = Arc::new(Mutex::new(ServiceState {
+            jobs: Vec::new(),
+            cache: ResultCache::new(),
+            shutting_down: false,
+        }));
+        let clock = Stopwatch::start();
+        let (tx, rx) = mpsc::channel::<PoolMessage>();
+        let mut threads = Vec::with_capacity(workers + 1);
+        for device in 0..workers as u32 {
+            let spec = PoolWorkerSpec {
+                device,
+                backend: backend.clone(),
+                dispatcher: dispatcher.clone(),
+                tx: tx.clone(),
+            };
+            threads.push(std::thread::spawn(move || {
+                pool_worker_main(spec);
+            }));
+        }
+        drop(tx); // the channel closes when the workers exit
+        {
+            let state = state.clone();
+            let dispatcher = dispatcher.clone();
+            threads
+                .push(std::thread::spawn(move || leader_main(rx, state, dispatcher, clock)));
+        }
+        Arc::new(Self {
+            backend_name: backend.name(),
+            workers,
+            dispatcher,
+            state,
+            clock,
+            threads: Mutex::new(threads),
+        })
+    }
+
+    /// Pool size.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Name of the backend every pool worker runs.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// Submit one job: validate, fingerprint, dedupe against the result
+    /// cache, and otherwise hand it to the pool. Returns immediately —
+    /// poll [`status`](Self::status) / [`samples`](Self::samples) for
+    /// progress. `name` defaults to the dataset name; note the name is
+    /// part of the fingerprint, so dedupe requires resubmitting under
+    /// the same (or again no) name. The job runs to
+    /// [`StopRule::AcceptedTarget`]`(config.accepted_samples)` — the
+    /// same rule the `repro infer` CLI applies, which is what makes a
+    /// served stream comparable to a CLI run byte for byte.
+    pub fn submit(&self, config: RunConfig, name: Option<String>) -> Result<SubmitReceipt> {
+        if config.backend != self.backend_name {
+            return Err(Error::Config(format!(
+                "this server's pool runs the `{}` backend; submit with \
+                 \"backend\": \"{}\" (got `{}`)",
+                self.backend_name, self.backend_name, config.backend
+            )));
+        }
+        let stop = StopRule::AcceptedTarget(config.accepted_samples);
+        let dataset = crate::data::resolve(&config.dataset, config.days)?;
+        let name = name.unwrap_or_else(|| dataset.name.clone());
+        let spec = JobSpec::new(name, config, dataset, Prior::paper(), stop)?;
+        let fingerprint = checkpoint::job_fingerprint(&spec);
+        let budget = spec.issue_budget();
+        let ctx = Arc::new(spec.context()?);
+        // Everything below holds the state lock so the jobs table and
+        // the dispatcher slot table stay index-aligned under concurrent
+        // submissions (lock order is always state → dispatcher; the
+        // dispatcher never takes the state lock).
+        let mut st = lock_state(&self.state);
+        if st.shutting_down {
+            return Err(Error::Config("server is shutting down; submission rejected".into()));
+        }
+        let id = st.jobs.len() as u32;
+        let now = self.clock.elapsed();
+        let cached = st.cache.lookup(fingerprint);
+        let mut job = ServiceJob {
+            name: spec.name.clone(),
+            fingerprint,
+            tolerance: spec.tolerance(),
+            stop: spec.stop,
+            strategy: ctx.strategy,
+            plan: ctx.plan.clone(),
+            shards: ctx.shards(),
+            budget,
+            assembling: BTreeMap::new(),
+            pending: BTreeMap::new(),
+            frontier: 0,
+            accepted: Vec::new(),
+            metrics: RunMetrics::default(),
+            state: JobState::Running,
+            cached: false,
+            result: None,
+            started_at: now,
+            finished_at: None,
+        };
+        let is_hit = if let Some(result) = cached {
+            // Born done: the determinism contract guarantees this is
+            // the byte-identical stream a fresh run would produce.
+            job.frontier = result.metrics.runs;
+            job.accepted = result.accepted.clone();
+            job.metrics = result.metrics.clone();
+            job.state = JobState::Done;
+            job.cached = true;
+            job.result = Some(result);
+            job.finished_at = Some(now);
+            job.budget = Some(0);
+            true
+        } else {
+            false
+        };
+        st.jobs.push(job);
+        // Even a cache hit takes a (zero-budget, immediately retired)
+        // dispatcher slot: job ids must stay equal to slot indices.
+        let slot_budget = if is_hit { Some(0) } else { budget };
+        let slot = self.dispatcher.add_job(JobSlotInit::fresh(ctx, slot_budget));
+        debug_assert_eq!(slot, id, "jobs table and dispatcher slots diverged");
+        if is_hit {
+            self.dispatcher.finish_job(id);
+        }
+        Ok(SubmitReceipt { id, cached: is_hit, fingerprint })
+    }
+
+    /// Status of one job, or `None` for an unknown id.
+    pub fn status(&self, id: u32) -> Option<JobStatus> {
+        let st = lock_state(&self.state);
+        st.jobs.get(id as usize).map(|j| j.status(id))
+    }
+
+    /// Statuses of every job, in submission order.
+    pub fn jobs(&self) -> Vec<JobStatus> {
+        let st = lock_state(&self.state);
+        st.jobs.iter().enumerate().map(|(i, j)| j.status(i as u32)).collect()
+    }
+
+    /// The accepted stream from `offset` on, or `None` for an unknown
+    /// id. Offsets past the end clamp to an empty page. Because the
+    /// absorbed prefix is final, repeated polls at increasing offsets
+    /// reconstruct exactly the solo-run stream.
+    pub fn samples(&self, id: u32, offset: usize) -> Option<SampleBatch> {
+        let st = lock_state(&self.state);
+        let job = st.jobs.get(id as usize)?;
+        let total = job.accepted.len();
+        let offset = offset.min(total);
+        let done = job.state.terminal();
+        Some(SampleBatch {
+            samples: job.accepted[offset..].to_vec(),
+            offset,
+            total,
+            done,
+            fingerprint: if done { Some(stream_fingerprint(&job.accepted)) } else { None },
+        })
+    }
+
+    /// The completed result of a `Done` job (shared, not copied), or
+    /// `None` when the id is unknown or the job is not (yet) done.
+    pub fn result(&self, id: u32) -> Option<Arc<InferenceResult>> {
+        let st = lock_state(&self.state);
+        st.jobs.get(id as usize).and_then(|j| j.result.clone())
+    }
+
+    /// Cancel a running job: stop issuing its runs, drop its in-flight
+    /// state, mark it `Cancelled`. Terminal jobs are left as they are
+    /// (cancelling twice, or cancelling a completed job, is a no-op).
+    /// Returns the post-cancel status, or `None` for an unknown id.
+    /// Once this returns, the job's accepted stream will never grow.
+    pub fn cancel(&self, id: u32) -> Option<JobStatus> {
+        let mut st = lock_state(&self.state);
+        let job = st.jobs.get_mut(id as usize)?;
+        if job.state == JobState::Running {
+            job.state = JobState::Cancelled;
+            job.seal(self.clock.elapsed());
+            self.dispatcher.finish_job(id);
+        }
+        Some(job.status(id))
+    }
+
+    /// Aggregated service metrics.
+    pub fn metrics(&self) -> ServiceMetrics {
+        let st = lock_state(&self.state);
+        let mut m = ServiceMetrics {
+            submitted: st.jobs.len() as u64,
+            cache_entries: st.cache.len() as u64,
+            cache_hits: st.cache.hits(),
+            ..ServiceMetrics::default()
+        };
+        for job in &st.jobs {
+            match job.state {
+                JobState::Running => m.running += 1,
+                JobState::Done => m.done += 1,
+                JobState::Cancelled => m.cancelled += 1,
+                JobState::Failed(_) => m.failed += 1,
+            }
+            m.pool.merge(&job.metrics);
+        }
+        m
+    }
+
+    /// Poll `id` until it reaches a terminal state or `timeout` passes;
+    /// returns the last observed status (`None` for an unknown id). A
+    /// convenience for tests, examples and synchronous callers — the
+    /// HTTP surface polls remotely instead.
+    pub fn wait_terminal(&self, id: u32, timeout: Duration) -> Option<JobStatus> {
+        let sw = Stopwatch::start();
+        loop {
+            let status = self.status(id)?;
+            if status.state.terminal() || sw.elapsed() >= timeout {
+                return Some(status);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Stop the pool and join every thread (idempotent). Running jobs
+    /// are cancelled; further submissions are rejected.
+    pub fn shutdown(&self) {
+        {
+            let mut st = lock_state(&self.state);
+            st.shutting_down = true;
+            let now = self.clock.elapsed();
+            for (id, job) in st.jobs.iter_mut().enumerate() {
+                if job.state == JobState::Running {
+                    job.state = JobState::Cancelled;
+                    job.seal(now);
+                    self.dispatcher.finish_job(id as u32);
+                }
+            }
+        }
+        self.dispatcher.shutdown();
+        let handles: Vec<JoinHandle<()>> = {
+            let mut t = self
+                .threads
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            std::mem::take(&mut *t)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The service's demux leader: the batch scheduler's message loop
+/// (scheduler/mod.rs) reshaped around a shared, lock-guarded jobs table
+/// that grows while the loop runs. Exits when the report channel
+/// closes, i.e. when the workers exit after `Dispatcher::shutdown`.
+fn leader_main(
+    rx: mpsc::Receiver<PoolMessage>,
+    state: Arc<Mutex<ServiceState>>,
+    dispatcher: Arc<Dispatcher>,
+    clock: Stopwatch,
+) {
+    for msg in rx.iter() {
+        let mut guard = lock_state(&state);
+        let st = &mut *guard;
+        // Normalize both message kinds into a per-run outcome, then
+        // absorb outcomes strictly in run order at the frontier — the
+        // same deterministic demux as the batch scheduler.
+        let (job_id, run, outcome): (u32, u64, Result<Vec<AcceptedSample>>) = match msg {
+            PoolMessage::Report(report) => {
+                let Some(job) = st.jobs.get_mut(report.job as usize) else { continue };
+                if matches!(job.state, JobState::Failed(_)) {
+                    continue; // job already failed; drop stragglers
+                }
+                // Work volume counts per executed shard, overshoot and
+                // post-cancel stragglers included: they did execute.
+                job.metrics.samples_simulated += report.samples;
+                job.metrics.device_exec += report.exec_time;
+                job.metrics.bytes_to_host += report.transfer.wire_bytes();
+                job.metrics.transfers += report.transfer.transfer_count();
+                job.metrics.transfers_skipped += report.chunks_skipped;
+                if job.state.terminal() {
+                    continue; // done or cancelled: counters only
+                }
+                if job.pending.contains_key(&report.run) {
+                    continue; // run already decided (a shard-mate errored)
+                }
+                let shards = job.shards;
+                let assembly = job
+                    .assembling
+                    .entry(report.run)
+                    .or_insert_with(|| RunAssembly::new(shards));
+                let slot = &mut assembly.parts[report.shard as usize];
+                if slot.is_none() {
+                    *slot = Some((report.device, report.transfer));
+                    assembly.received += 1;
+                }
+                if assembly.received < shards {
+                    continue; // run not fully assembled yet
+                }
+                let assembly = job.assembling.remove(&report.run).expect("assembly present");
+                let sw = Stopwatch::start();
+                let mut devices = Vec::with_capacity(shards as usize);
+                let parts: Vec<Transfer> = assembly
+                    .parts
+                    .into_iter()
+                    .map(|slot| {
+                        let (device, transfer) = slot.expect("all received");
+                        devices.push(device);
+                        transfer
+                    })
+                    .collect();
+                let transfer = merge_shard_transfers(parts, job.strategy);
+                let mut samples = Vec::new();
+                filter_transfer(&transfer, job.tolerance, 0, report.run, &mut samples);
+                for s in &mut samples {
+                    let shard = job.plan.shard_of(s.index as usize);
+                    s.device = devices[shard as usize];
+                }
+                job.metrics.host_postproc += sw.elapsed();
+                (report.job, report.run, Ok(samples))
+            }
+            PoolMessage::JobError { job: id, run, error } => {
+                let Some(job) = st.jobs.get_mut(id as usize) else { continue };
+                if job.state.terminal() || job.pending.contains_key(&run) {
+                    continue; // job or run outcome already decided
+                }
+                job.assembling.remove(&run);
+                (id, run, Err(error))
+            }
+        };
+
+        let job = st.jobs.get_mut(job_id as usize).expect("job id checked above");
+        job.pending.insert(run, outcome);
+        while job.state == JobState::Running {
+            let Some(next) = job.pending.remove(&job.frontier) else { break };
+            let mut run_samples = match next {
+                Err(e) => {
+                    // Earliest unresolved run — failing here is as
+                    // deterministic as the error itself.
+                    job.state = JobState::Failed(e.to_string());
+                    break;
+                }
+                Ok(run_samples) => run_samples,
+            };
+            // Streaming invariant: a run's samples can arrive in
+            // strategy-dependent order (top-k rank order); sort by
+            // in-run index *now*, so the absorbed prefix is final the
+            // moment it is appended. Runs absorb in ascending order, so
+            // the full stream ends up in the exact `(run, index)` order
+            // the batch scheduler produces with its single final sort.
+            run_samples.sort_by_key(|s| s.index);
+            job.accepted.extend(run_samples);
+            job.frontier += 1;
+            job.metrics.runs += 1;
+            match job.stop {
+                StopRule::ExactRuns(r) => {
+                    if job.frontier >= r {
+                        job.state = JobState::Done;
+                    }
+                }
+                StopRule::AcceptedTarget(target) => {
+                    if job.accepted.len() >= target {
+                        job.state = JobState::Done;
+                    } else if job.budget.map_or(false, |b| job.frontier >= b) {
+                        let e = budget_exhausted(
+                            &job.name,
+                            job.budget,
+                            job.accepted.len(),
+                            target,
+                            job.tolerance,
+                        );
+                        job.state = JobState::Failed(e.to_string());
+                    }
+                }
+            }
+        }
+        if job.state.terminal() && job.finished_at.is_none() {
+            job.seal(clock.elapsed());
+            if job.state == JobState::Done {
+                let result = Arc::new(InferenceResult {
+                    accepted: job.accepted.clone(),
+                    metrics: job.metrics.clone(),
+                    tolerance: job.tolerance,
+                });
+                job.result = Some(result.clone());
+                st.cache.insert(job.fingerprint, result);
+            }
+            dispatcher.finish_job(job_id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::Coordinator;
+    use crate::data::synthetic;
+
+    fn small_config(seed: u64) -> (RunConfig, crate::data::Dataset) {
+        let dataset = synthetic::default_dataset(16, 0x5eed);
+        let config = RunConfig {
+            dataset: "synthetic".into(),
+            tolerance: Some(dataset.default_tolerance * 30.0),
+            devices: 1,
+            batch_per_device: 400,
+            days: 16,
+            return_strategy: ReturnStrategy::Outfeed { chunk: 100 },
+            accepted_samples: 40,
+            seed,
+            max_runs: 400,
+            ..Default::default()
+        };
+        (config, dataset)
+    }
+
+    fn service(workers: usize) -> Arc<InferenceService> {
+        InferenceService::start(Arc::new(NativeBackend::new()), workers)
+    }
+
+    #[test]
+    fn served_stream_is_bit_identical_to_solo_and_pages_stably() {
+        let (config, dataset) = small_config(21);
+        let solo = Coordinator::native(config.clone(), dataset, Prior::paper())
+            .unwrap()
+            .run_until(config.accepted_samples)
+            .unwrap();
+
+        let svc = service(2);
+        let receipt = svc.submit(config, None).unwrap();
+        assert!(!receipt.cached);
+        let status = svc
+            .wait_terminal(receipt.id, Duration::from_secs(120))
+            .expect("job exists");
+        assert_eq!(status.state, JobState::Done, "{status:?}");
+
+        let page = svc.samples(receipt.id, 0).unwrap();
+        assert!(page.done);
+        assert_eq!(page.total, solo.accepted.len());
+        assert_eq!(page.fingerprint, Some(stream_fingerprint(&solo.accepted)));
+        // offset paging returns exactly the tail, and past-the-end clamps
+        let tail = svc.samples(receipt.id, page.total - 3).unwrap();
+        assert_eq!(tail.samples.len(), 3);
+        assert_eq!(svc.samples(receipt.id, page.total + 10).unwrap().samples.len(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn duplicate_submission_hits_the_cache_without_new_work() {
+        let (config, _) = small_config(22);
+        let svc = service(2);
+        let first = svc.submit(config.clone(), None).unwrap();
+        svc.wait_terminal(first.id, Duration::from_secs(120)).unwrap();
+        let runs_before = svc.metrics().pool.runs;
+
+        let second = svc.submit(config.clone(), None).unwrap();
+        assert!(second.cached);
+        assert_eq!(second.fingerprint, first.fingerprint);
+        let status = svc.status(second.id).unwrap();
+        assert_eq!(status.state, JobState::Done);
+        assert!(status.cached);
+        assert_eq!(svc.metrics().cache_hits, 1);
+        // the cached job re-reports the original's run count, but the
+        // *first* job's counters did not move: nothing was re-simulated
+        assert_eq!(svc.metrics().pool.runs, runs_before + runs_before);
+        assert_eq!(svc.status(first.id).unwrap().runs * 2, svc.metrics().pool.runs);
+
+        // a different name is a different fingerprint — a miss
+        let renamed = svc.submit(config, Some("other".into())).unwrap();
+        assert!(!renamed.cached);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cancel_freezes_the_stream_and_unknown_ids_are_none() {
+        let (mut config, _) = small_config(23);
+        config.tolerance = Some(1e-3); // impossible ε: the job never finishes
+        config.max_runs = 0;
+        let svc = service(2);
+        let receipt = svc.submit(config, Some("doomed".into())).unwrap();
+        let cancelled = svc.cancel(receipt.id).unwrap();
+        assert_eq!(cancelled.state, JobState::Cancelled);
+        let frozen = svc.samples(receipt.id, 0).unwrap();
+        assert!(frozen.done);
+        // cancel is idempotent, and the service keeps serving
+        assert_eq!(svc.cancel(receipt.id).unwrap().state, JobState::Cancelled);
+        assert!(svc.status(99).is_none());
+        assert!(svc.cancel(99).is_none());
+        assert!(svc.samples(99, 0).is_none());
+        let m = svc.metrics();
+        assert_eq!((m.submitted, m.cancelled), (1, 1));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submissions_after_shutdown_and_wrong_backend_are_rejected() {
+        let (config, _) = small_config(24);
+        let svc = service(1);
+        let mut wrong = config.clone();
+        wrong.backend = "pjrt".into();
+        let err = svc.submit(wrong, None).unwrap_err().to_string();
+        assert!(err.contains("backend"), "{err}");
+        svc.shutdown();
+        let err = svc.submit(config, None).unwrap_err().to_string();
+        assert!(err.contains("shutting down"), "{err}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal HTTP/1.1 client for the serve daemon.
+//!
+//! Just enough protocol to talk to [`super::HttpServer`] — one request
+//! per connection, `Connection: close`, JSON bodies — shared by the
+//! integration suite (`tests/serve.rs`), the example client
+//! (`examples/client.rs`) and the CI serve smoke, so all three speak
+//! through the same code path.
+
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// How long one request round-trip may take end to end. Generous — a
+/// job submission returns a receipt immediately; nothing long-running
+/// happens on the daemon's request path.
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Issue one request against `addr` (e.g. `127.0.0.1:9090`) and return
+/// `(status code, body)`. `body = None` sends an empty body (the daemon
+/// only reads `Content-Length` bytes either way).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(TIMEOUT))?;
+    stream.set_write_timeout(Some(TIMEOUT))?;
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    parse_response(&raw)
+}
+
+/// Split a raw HTTP/1.1 response into `(status code, body)`. Separated
+/// from the socket I/O so the parsing is unit-testable.
+pub fn parse_response(raw: &str) -> Result<(u16, String)> {
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| Error::Parse("response has no header/body separator".into()))?;
+    let status_line = head.lines().next().unwrap_or("");
+    let code = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| Error::Parse(format!("bad status line `{status_line}`")))?;
+    Ok((code, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_parsing_extracts_code_and_body() {
+        let raw = "HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}";
+        assert_eq!(parse_response(raw).unwrap(), (200, "{}".to_string()));
+        let raw = "HTTP/1.1 404 Not Found\r\n\r\n";
+        assert_eq!(parse_response(raw).unwrap(), (404, String::new()));
+    }
+
+    #[test]
+    fn malformed_responses_are_typed_errors() {
+        for bad in ["", "HTTP/1.1 200 OK", "garbage\r\n\r\nbody", "HTTP/1.1 x OK\r\n\r\n"] {
+            assert!(parse_response(bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,0 +1,514 @@
+//! Inference-as-a-service HTTP surface (DESIGN.md §12).
+//!
+//! A dependency-free HTTP/1.1 + JSON daemon over
+//! [`std::net::TcpListener`], fronting a long-running
+//! [`InferenceService`]: submit [`RunConfig`]s over a socket, poll job
+//! status, stream the accepted samples incrementally, fetch posterior
+//! summaries, cancel, and read service metrics. Bodies are parsed and
+//! rendered with the in-tree [`crate::util::json`] parser — the daemon
+//! keeps the crate's zero-dependency contract.
+//!
+//! | method | path | effect |
+//! |---|---|---|
+//! | GET  | `/v1/healthz` | liveness + backend/pool identity |
+//! | POST | `/v1/jobs` | submit a `RunConfig` body (optional `name` key) |
+//! | GET  | `/v1/jobs` | all job statuses, submission order |
+//! | GET  | `/v1/jobs/{id}` | one job's status |
+//! | GET  | `/v1/jobs/{id}/samples?offset=N` | accepted stream from `N` on |
+//! | GET  | `/v1/jobs/{id}/posterior` | posterior summaries + CSV (done jobs) |
+//! | POST | `/v1/jobs/{id}/cancel` | cancel (idempotent) |
+//! | GET  | `/v1/metrics` | service + merged pool metrics |
+//! | POST | `/v1/shutdown` | stop accepting, drain, exit `serve()` |
+//!
+//! **Protocol discipline.** Every response is `Connection: close` JSON.
+//! Malformed requests are `400`, unknown ids `404`, a known path with
+//! the wrong method `405`, a posterior asked of an unfinished job `409`
+//! — and a panic anywhere in request handling is caught and returned
+//! as `500`, never a dead daemon (the whole point of this PR's
+//! panic-site sweep). The accept loop is sequential: every endpoint is
+//! non-blocking against the service (submission returns a receipt, the
+//! pool runs on its own threads), so one connection at a time is
+//! enough and keeps the surface free of per-connection thread litter.
+//!
+//! **Determinism at the wire.** Sample rows use the checkpoint codec's
+//! exact-bits layout ([`checkpoint::sample_to_json`]), and 64-bit
+//! fingerprints travel as 16-digit hex strings (JSON numbers are f64 —
+//! 2^53 — so hashes would silently round). `tests/serve.rs` pins a
+//! served stream byte-identical to a solo CLI run.
+
+pub mod client;
+
+use crate::checkpoint;
+use crate::config::RunConfig;
+use crate::report::posterior_summary_json;
+use crate::scheduler::service::{InferenceService, JobState, JobStatus, SampleBatch};
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Environment override for the listen port (wins over `--port`, the
+/// same precedence as every other `$ABC_IPU_*` knob).
+pub const PORT_ENV: &str = "ABC_IPU_PORT";
+
+/// Largest accepted request body (a submission body is well under 1 KiB;
+/// the cap only bounds hostile or accidental payloads).
+const MAX_BODY: usize = 1 << 20;
+
+/// Per-connection socket timeout. Generous: the slowest legitimate
+/// round-trip is a large sample page, not a slow client.
+const SOCKET_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Resolve the listen port: `$ABC_IPU_PORT` wins over `flag` (use `0`
+/// to let the OS pick an ephemeral port). Malformed or out-of-range
+/// values fail loudly ([`crate::util::env`] policy).
+pub fn resolve_port(flag: u16) -> Result<u16> {
+    port_from_override(crate::util::env::usize_override(PORT_ENV)?, flag)
+}
+
+/// Pure core of [`resolve_port`], unit-testable without touching
+/// process-global environment state.
+fn port_from_override(env: Option<usize>, flag: u16) -> Result<u16> {
+    match env {
+        Some(v) if v > u16::MAX as usize => Err(Error::Config(format!(
+            "malformed ${PORT_ENV}=`{v}`: a TCP port is at most {}",
+            u16::MAX
+        ))),
+        Some(v) => Ok(v as u16),
+        None => Ok(flag),
+    }
+}
+
+/// One parsed HTTP request — only the parts the daemon routes on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Parse one HTTP/1.1 request: request line, headers (only
+/// `Content-Length` is honoured, case-insensitively), then exactly that
+/// many body bytes. Anything malformed is a typed [`Error::Parse`] the
+/// caller answers with `400` — never a panic.
+fn read_request(r: &mut impl BufRead) -> Result<Request> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| Error::Parse("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| Error::Parse(format!("request line `{}` has no path", line.trim())))?
+        .to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        if r.read_line(&mut header)? == 0 {
+            break; // EOF ends the header block like a blank line does
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((key, value)) = header.split_once(':') {
+            if key.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().map_err(|_| {
+                    Error::Parse(format!("bad Content-Length `{}`", value.trim()))
+                })?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(Error::Parse(format!(
+            "request body of {content_length} bytes exceeds the {MAX_BODY}-byte cap"
+        )));
+    }
+    let mut buf = vec![0u8; content_length];
+    r.read_exact(&mut buf)?;
+    let body = String::from_utf8(buf)
+        .map_err(|_| Error::Parse("request body is not valid UTF-8".into()))?;
+    Ok(Request { method, path, body })
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        _ => "OK",
+    }
+}
+
+fn write_response(mut stream: &TcpStream, code: u16, body: &Json) -> std::io::Result<()> {
+    let body = body.to_string();
+    write!(
+        stream,
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        status_text(code),
+        body.len()
+    )
+}
+
+fn err_body(msg: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m)
+}
+
+/// 64-bit fingerprints travel as 16-digit hex strings: JSON numbers
+/// are f64 and would round anything above 2^53.
+fn hex64(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn status_json(s: &JobStatus) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(s.id as f64));
+    m.insert("name".to_string(), Json::Str(s.name.clone()));
+    m.insert("state".to_string(), Json::Str(s.state.label().to_string()));
+    if let JobState::Failed(msg) = &s.state {
+        m.insert("error".to_string(), Json::Str(msg.clone()));
+    }
+    m.insert("cached".to_string(), Json::Bool(s.cached));
+    m.insert("fingerprint".to_string(), hex64(s.fingerprint));
+    m.insert("accepted".to_string(), Json::Num(s.accepted as f64));
+    m.insert("runs".to_string(), Json::Num(s.runs as f64));
+    m.insert("tolerance".to_string(), Json::Num(s.tolerance as f64));
+    Json::Obj(m)
+}
+
+fn samples_json(id: u32, batch: &SampleBatch) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("offset".to_string(), Json::Num(batch.offset as f64));
+    m.insert("total".to_string(), Json::Num(batch.total as f64));
+    m.insert("done".to_string(), Json::Bool(batch.done));
+    m.insert(
+        "samples".to_string(),
+        Json::Arr(batch.samples.iter().map(checkpoint::sample_to_json).collect()),
+    );
+    m.insert(
+        "fingerprint".to_string(),
+        batch.fingerprint.map(hex64).unwrap_or(Json::Null),
+    );
+    Json::Obj(m)
+}
+
+/// Parse `offset=N` out of a query string (`None` query → 0).
+fn parse_offset(query: Option<&str>) -> Result<usize> {
+    let Some(query) = query else { return Ok(0) };
+    for pair in query.split('&') {
+        if let Some((key, value)) = pair.split_once('=') {
+            if key == "offset" {
+                return value.parse().map_err(|_| {
+                    Error::Parse(format!("bad offset `{value}`: expected an unsigned integer"))
+                });
+            }
+        }
+    }
+    Ok(0)
+}
+
+/// Route one request to a `(status code, body)` answer. Pure against
+/// the service API — no sockets — so the whole table is unit-testable.
+fn route(service: &InferenceService, req: &Request, stop: &AtomicBool) -> (u16, Json) {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (req.path.as_str(), None),
+    };
+    let segments: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    let method = req.method.as_str();
+    // Lazy on purpose: the handler body must not run (cancel! shutdown!)
+    // when the method is wrong.
+    let need = |want: &str, hit: &dyn Fn() -> (u16, Json)| -> (u16, Json) {
+        if method == want {
+            hit()
+        } else {
+            (405, err_body(&format!("{path} expects {want}")))
+        }
+    };
+    match segments.as_slice() {
+        ["v1", "healthz"] => need("GET", &|| {
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("backend".to_string(), Json::Str(service.backend_name().to_string()));
+            m.insert("workers".to_string(), Json::Num(service.workers() as f64));
+            m.insert("jobs".to_string(), Json::Num(service.jobs().len() as f64));
+            (200, Json::Obj(m))
+        }),
+        ["v1", "jobs"] => match method {
+            "GET" => (200, Json::Arr(service.jobs().iter().map(status_json).collect())),
+            "POST" => submit(service, &req.body),
+            _ => (405, err_body("POST to submit, GET to list")),
+        },
+        ["v1", "jobs", id] => match id.parse::<u32>() {
+            Err(_) => (404, err_body(&format!("bad job id `{id}`"))),
+            Ok(id) => need("GET", &|| match service.status(id) {
+                Some(s) => (200, status_json(&s)),
+                None => (404, err_body(&format!("no job {id}"))),
+            }),
+        },
+        ["v1", "jobs", id, "samples"] => match (id.parse::<u32>(), parse_offset(query)) {
+            (Err(_), _) => (404, err_body(&format!("bad job id `{id}`"))),
+            (_, Err(e)) => (400, err_body(&e.to_string())),
+            (Ok(id), Ok(offset)) => need("GET", &|| match service.samples(id, offset) {
+                Some(batch) => (200, samples_json(id, &batch)),
+                None => (404, err_body(&format!("no job {id}"))),
+            }),
+        },
+        ["v1", "jobs", id, "posterior"] => match id.parse::<u32>() {
+            Err(_) => (404, err_body(&format!("bad job id `{id}`"))),
+            Ok(id) => need("GET", &|| posterior(service, id)),
+        },
+        ["v1", "jobs", id, "cancel"] => match id.parse::<u32>() {
+            Err(_) => (404, err_body(&format!("bad job id `{id}`"))),
+            Ok(id) => need("POST", &|| match service.cancel(id) {
+                Some(s) => (200, status_json(&s)),
+                None => (404, err_body(&format!("no job {id}"))),
+            }),
+        },
+        ["v1", "metrics"] => need("GET", &|| {
+            let m = service.metrics();
+            let mut o = BTreeMap::new();
+            o.insert("submitted".to_string(), Json::Num(m.submitted as f64));
+            o.insert("running".to_string(), Json::Num(m.running as f64));
+            o.insert("done".to_string(), Json::Num(m.done as f64));
+            o.insert("cancelled".to_string(), Json::Num(m.cancelled as f64));
+            o.insert("failed".to_string(), Json::Num(m.failed as f64));
+            o.insert("cache_entries".to_string(), Json::Num(m.cache_entries as f64));
+            o.insert("cache_hits".to_string(), Json::Num(m.cache_hits as f64));
+            o.insert("pool".to_string(), m.pool.to_json());
+            (200, Json::Obj(o))
+        }),
+        ["v1", "shutdown"] => need("POST", &|| {
+            stop.store(true, Ordering::SeqCst);
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("shutting_down".to_string(), Json::Bool(true));
+            (200, Json::Obj(m))
+        }),
+        _ => (404, err_body(&format!("no route for {path}"))),
+    }
+}
+
+/// `POST /v1/jobs`: the body is a [`RunConfig`] JSON document, plus an
+/// optional sibling `name` key (unknown keys are ignored by the config
+/// parser, so the two can share one object).
+fn submit(service: &InferenceService, body: &str) -> (u16, Json) {
+    let v = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return (400, err_body(&e.to_string())),
+    };
+    let config = match RunConfig::from_value(&v) {
+        Ok(c) => c,
+        Err(e) => return (400, err_body(&e.to_string())),
+    };
+    let name = match v.get("name") {
+        None => None,
+        Some(n) => match n.as_str() {
+            Ok(s) => Some(s.to_string()),
+            Err(e) => return (400, err_body(&e.to_string())),
+        },
+    };
+    match service.submit(config, name) {
+        Ok(receipt) => {
+            let mut m = BTreeMap::new();
+            m.insert("id".to_string(), Json::Num(receipt.id as f64));
+            m.insert("cached".to_string(), Json::Bool(receipt.cached));
+            m.insert("fingerprint".to_string(), hex64(receipt.fingerprint));
+            (200, Json::Obj(m))
+        }
+        // Submission errors are user errors (bad config, wrong backend,
+        // shutdown raced) — 400, and the daemon keeps serving.
+        Err(e) => (400, err_body(&e.to_string())),
+    }
+}
+
+/// `GET /v1/jobs/{id}/posterior`: summaries + the exact CSV the `repro
+/// infer` CLI writes, so a client (or the CI smoke) can byte-compare
+/// the two paths. Not-yet-done jobs answer `409` with their status.
+fn posterior(service: &InferenceService, id: u32) -> (u16, Json) {
+    let Some(status) = service.status(id) else {
+        return (404, err_body(&format!("no job {id}")));
+    };
+    let Some(result) = service.result(id) else {
+        return (409, status_json(&status));
+    };
+    let post = crate::abc::Posterior::new(result.accepted.clone());
+    let mut m = match posterior_summary_json(&post) {
+        Json::Obj(m) => m,
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("summary".to_string(), other);
+            m
+        }
+    };
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("fingerprint".to_string(), hex64(status.fingerprint));
+    m.insert("tolerance".to_string(), Json::Num(result.tolerance as f64));
+    m.insert("csv".to_string(), Json::Str(post.to_csv()));
+    (200, Json::Obj(m))
+}
+
+/// The HTTP daemon: a bound listener plus the service it fronts.
+#[derive(Debug)]
+pub struct HttpServer {
+    listener: TcpListener,
+    service: Arc<InferenceService>,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind `127.0.0.1:port` (`0` → OS-assigned ephemeral port; read it
+    /// back with [`local_addr`](Self::local_addr)).
+    pub fn bind(port: u16, service: Arc<InferenceService>) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        Ok(Self { listener, service, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// The fronted service.
+    pub fn service(&self) -> &Arc<InferenceService> {
+        &self.service
+    }
+
+    /// Serve until `POST /v1/shutdown` arrives, then shut the service
+    /// down (cancelling running jobs, joining the pool) and return.
+    /// Sequential accept loop — see the module docs for why that is
+    /// enough. One misbehaving connection gets an error response (or a
+    /// dropped socket); it never takes the daemon down.
+    pub fn serve(&self) -> Result<()> {
+        for conn in self.listener.incoming() {
+            if let Ok(stream) = conn {
+                let _ = self.handle(stream);
+            }
+            // The shutdown request is itself the connection that wakes
+            // this loop, so checking after handling sees its effect.
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        self.service.shutdown();
+        Ok(())
+    }
+
+    fn handle(&self, stream: TcpStream) -> std::io::Result<()> {
+        let _ = stream.set_read_timeout(Some(SOCKET_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(SOCKET_TIMEOUT));
+        let mut reader = BufReader::new(&stream);
+        let (code, body) = match read_request(&mut reader) {
+            Err(e) => (400, err_body(&e.to_string())),
+            // The daemon must outlive any bug in request handling: a
+            // panic is caught and degraded to a 500 response.
+            Ok(req) => match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                route(&self.service, &req, &self.stop)
+            })) {
+                Ok(answer) => answer,
+                Err(_) => (500, err_body("internal panic while handling the request")),
+            },
+        };
+        write_response(&stream, code, &body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use std::io::Cursor;
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request { method: method.into(), path: path.into(), body: body.into() }
+    }
+
+    fn service() -> Arc<InferenceService> {
+        InferenceService::start(Arc::new(NativeBackend::new()), 1)
+    }
+
+    #[test]
+    fn request_parsing_round_trips_and_rejects_garbage() {
+        let raw = "POST /v1/jobs HTTP/1.1\r\nHost: x\r\ncontent-length: 4\r\n\r\n{\"a\"";
+        let r = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(r, req("POST", "/v1/jobs", "{\"a\""));
+
+        // no body, headers end at EOF
+        let r = read_request(&mut Cursor::new("GET /v1/healthz HTTP/1.1\r\n\r\n")).unwrap();
+        assert_eq!((r.method.as_str(), r.body.as_str()), ("GET", ""));
+
+        for bad in ["", "\r\n", "GET\r\n\r\n"] {
+            assert!(read_request(&mut Cursor::new(bad)).is_err(), "{bad:?}");
+        }
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        let err = read_request(&mut Cursor::new(huge)).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+        assert!(read_request(&mut Cursor::new("POST / H\r\nContent-Length: x\r\n\r\n"))
+            .is_err());
+    }
+
+    #[test]
+    fn port_override_wins_and_validates_range() {
+        assert_eq!(port_from_override(None, 9090).unwrap(), 9090);
+        assert_eq!(port_from_override(Some(8080), 9090).unwrap(), 8080);
+        assert_eq!(port_from_override(Some(0), 9090).unwrap(), 0);
+        let err = port_from_override(Some(70_000), 0).unwrap_err().to_string();
+        assert!(err.contains("65535"), "{err}");
+    }
+
+    #[test]
+    fn offset_query_parses_and_rejects() {
+        assert_eq!(parse_offset(None).unwrap(), 0);
+        assert_eq!(parse_offset(Some("offset=12")).unwrap(), 12);
+        assert_eq!(parse_offset(Some("x=1&offset=3")).unwrap(), 3);
+        assert_eq!(parse_offset(Some("x=1")).unwrap(), 0);
+        assert!(parse_offset(Some("offset=-1")).is_err());
+        assert!(parse_offset(Some("offset=abc")).is_err());
+    }
+
+    #[test]
+    fn routing_answers_the_documented_codes() {
+        let svc = service();
+        let stop = AtomicBool::new(false);
+        let r = |request: &Request| route(&svc, request, &stop);
+
+        assert_eq!(r(&req("GET", "/v1/healthz", "")).0, 200);
+        assert_eq!(r(&req("POST", "/v1/healthz", "")).0, 405);
+        assert_eq!(r(&req("GET", "/v1/nope", "")).0, 404);
+        assert_eq!(r(&req("GET", "/v1/jobs/0", "")).0, 404); // no jobs yet
+        assert_eq!(r(&req("GET", "/v1/jobs/zzz", "")).0, 404);
+        assert_eq!(r(&req("GET", "/v1/jobs/0/samples", "")).0, 404);
+        assert_eq!(r(&req("POST", "/v1/jobs/0/cancel", "")).0, 404);
+        assert_eq!(r(&req("DELETE", "/v1/jobs", "")).0, 405);
+        // malformed and invalid submissions are 400s, not panics
+        assert_eq!(r(&req("POST", "/v1/jobs", "{not json")).0, 400);
+        assert_eq!(r(&req("POST", "/v1/jobs", r#"{"devices": 0}"#)).0, 400);
+        assert_eq!(r(&req("POST", "/v1/jobs", r#"{"name": 7}"#)).0, 400);
+        assert_eq!(r(&req("GET", "/v1/metrics", "")).0, 200);
+        // a wrong-method hit on a side-effecting route must not fire it
+        assert_eq!(r(&req("GET", "/v1/shutdown", "")).0, 405);
+        assert!(!stop.load(Ordering::SeqCst));
+        assert_eq!(r(&req("POST", "/v1/shutdown", "")).0, 200);
+        assert!(stop.load(Ordering::SeqCst));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn fingerprints_travel_as_hex_strings() {
+        assert_eq!(hex64(0xdead_beef).to_string(), "\"00000000deadbeef\"");
+    }
+}

@@ -1,0 +1,242 @@
+//! Integration suite for the inference-as-a-service daemon: a real
+//! socket, real HTTP, and the determinism contract at the wire —
+//! served posterior bit-identical to a solo CLI-path run, duplicate
+//! submissions answered from the fingerprint cache, mid-run cancel,
+//! and malformed input answered with 4xx instead of a dead daemon.
+
+use abc_ipu::abc::Posterior;
+use abc_ipu::backend::NativeBackend;
+use abc_ipu::checkpoint::sample_from_json;
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::coordinator::{stream_fingerprint, AcceptedSample, Coordinator};
+use abc_ipu::data::synthetic;
+use abc_ipu::model::Prior;
+use abc_ipu::scheduler::service::InferenceService;
+use abc_ipu::server::{client, HttpServer};
+use abc_ipu::util::json::Json;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A small, fast job on the deterministic synthetic dataset.
+fn small_config(seed: u64) -> (RunConfig, abc_ipu::data::Dataset) {
+    let dataset = synthetic::default_dataset(16, 0x5eed);
+    let config = RunConfig {
+        dataset: "synthetic".into(),
+        tolerance: Some(dataset.default_tolerance * 30.0),
+        devices: 1,
+        batch_per_device: 400,
+        days: 16,
+        return_strategy: ReturnStrategy::Outfeed { chunk: 100 },
+        accepted_samples: 40,
+        seed,
+        max_runs: 400,
+        ..Default::default()
+    };
+    (config, dataset)
+}
+
+/// Boot a daemon on an ephemeral port; returns its address and the
+/// serve-loop handle (joined after `POST /v1/shutdown`).
+fn start_server(workers: usize) -> (String, JoinHandle<()>) {
+    let service = InferenceService::start(Arc::new(NativeBackend::new()), workers);
+    let server = HttpServer::bind(0, service).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("bound address").to_string();
+    let handle = std::thread::spawn(move || server.serve().expect("serve loop"));
+    (addr, handle)
+}
+
+fn get(addr: &str, path: &str) -> (u16, Json) {
+    let (code, body) = client::request(addr, "GET", path, None).expect("request");
+    (code, Json::parse(&body).expect("json body"))
+}
+
+fn post(addr: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let (code, body) = client::request(addr, "POST", path, body).expect("request");
+    (code, Json::parse(&body).expect("json body"))
+}
+
+fn shutdown(addr: &str, handle: JoinHandle<()>) {
+    let (code, _) = post(addr, "/v1/shutdown", None);
+    assert_eq!(code, 200);
+    handle.join().expect("serve loop exits cleanly");
+}
+
+/// Poll a job's status until it leaves `running` (or time out).
+fn wait_terminal(addr: &str, id: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (code, status) = get(addr, &format!("/v1/jobs/{id}"));
+        assert_eq!(code, 200, "{status:?}");
+        if status.req("state").unwrap().as_str().unwrap() != "running" {
+            return status;
+        }
+        assert!(Instant::now() < deadline, "job {id} never finished: {status:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn parse_samples(page: &Json) -> Vec<AcceptedSample> {
+    page.req("samples")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| sample_from_json(row).expect("wire sample decodes"))
+        .collect()
+}
+
+#[test]
+fn served_posterior_is_bit_identical_to_the_solo_cli_path() {
+    let (config, dataset) = small_config(31);
+    // the solo reference: exactly what `repro infer` runs and writes
+    let solo = Coordinator::native(config.clone(), dataset, Prior::paper())
+        .unwrap()
+        .run_until(config.accepted_samples)
+        .unwrap();
+    let solo_csv = Posterior::new(solo.accepted.clone()).to_csv();
+
+    let (addr, handle) = start_server(2);
+    let (code, health) = get(&addr, "/v1/healthz");
+    assert_eq!(code, 200);
+    assert_eq!(health.req("backend").unwrap().as_str().unwrap(), "native");
+
+    let (code, receipt) = post(&addr, "/v1/jobs", Some(&config.to_json()));
+    assert_eq!(code, 200, "{receipt:?}");
+    assert!(!receipt.req("cached").unwrap().as_bool().unwrap());
+    let id = receipt.req("id").unwrap().as_u64().unwrap();
+
+    let status = wait_terminal(&addr, id);
+    assert_eq!(status.req("state").unwrap().as_str().unwrap(), "done", "{status:?}");
+
+    // the full served stream decodes to the solo stream, bit for bit
+    let (code, page) = get(&addr, &format!("/v1/jobs/{id}/samples"));
+    assert_eq!(code, 200);
+    assert!(page.req("done").unwrap().as_bool().unwrap());
+    let served = parse_samples(&page);
+    assert_eq!(served, solo.accepted);
+    assert_eq!(
+        page.req("fingerprint").unwrap().as_str().unwrap(),
+        format!("{:016x}", stream_fingerprint(&solo.accepted))
+    );
+
+    // incremental polling: a later offset returns exactly the tail
+    let tail_at = served.len() - 3;
+    let (_, tail) = get(&addr, &format!("/v1/jobs/{id}/samples?offset={tail_at}"));
+    assert_eq!(parse_samples(&tail), solo.accepted[tail_at..].to_vec());
+
+    // the posterior endpoint serves the CLI's exact CSV bytes
+    let (code, posterior) = get(&addr, &format!("/v1/jobs/{id}/posterior"));
+    assert_eq!(code, 200);
+    assert_eq!(posterior.req("csv").unwrap().as_str().unwrap(), solo_csv);
+    assert_eq!(posterior.req("params").unwrap().as_arr().unwrap().len(), 8);
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn duplicate_submission_is_a_cache_hit_with_no_new_simulation() {
+    let (config, _) = small_config(32);
+    let (addr, handle) = start_server(2);
+
+    let (_, first) = post(&addr, "/v1/jobs", Some(&config.to_json()));
+    let first_id = first.req("id").unwrap().as_u64().unwrap();
+    wait_terminal(&addr, first_id);
+    let (_, metrics) = get(&addr, "/v1/metrics");
+    let runs_before = metrics.req("pool").unwrap().req("runs").unwrap().as_u64().unwrap();
+
+    let (code, second) = post(&addr, "/v1/jobs", Some(&config.to_json()));
+    assert_eq!(code, 200);
+    assert!(second.req("cached").unwrap().as_bool().unwrap());
+    assert_eq!(
+        second.req("fingerprint").unwrap().as_str().unwrap(),
+        first.req("fingerprint").unwrap().as_str().unwrap()
+    );
+    let second_id = second.req("id").unwrap().as_u64().unwrap();
+    let status = wait_terminal(&addr, second_id);
+    assert_eq!(status.req("state").unwrap().as_str().unwrap(), "done");
+    assert!(status.req("cached").unwrap().as_bool().unwrap());
+
+    // served results agree, and the pool did no new work: the cached
+    // job re-reports the original's run count (doubling the merged
+    // total) instead of adding freshly simulated runs on top
+    let (_, metrics) = get(&addr, "/v1/metrics");
+    assert_eq!(metrics.req("cache_hits").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(
+        metrics.req("pool").unwrap().req("runs").unwrap().as_u64().unwrap(),
+        2 * runs_before
+    );
+    let (_, a) = get(&addr, &format!("/v1/jobs/{first_id}/samples"));
+    let (_, b) = get(&addr, &format!("/v1/jobs/{second_id}/samples"));
+    assert_eq!(parse_samples(&a), parse_samples(&b));
+
+    // a renamed resubmission is a different fingerprint — a miss
+    let mut body = config.to_json();
+    body.insert_str(1, "\"name\": \"renamed\", ");
+    let (_, third) = post(&addr, "/v1/jobs", Some(&body));
+    assert!(!third.req("cached").unwrap().as_bool().unwrap());
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn cancel_freezes_a_running_job_and_the_daemon_keeps_serving() {
+    let (mut config, _) = small_config(33);
+    config.tolerance = Some(1e-3); // impossible ε: never finishes on its own
+    config.max_runs = 0;
+    let (addr, handle) = start_server(2);
+
+    let (_, receipt) = post(&addr, "/v1/jobs", Some(&config.to_json()));
+    let id = receipt.req("id").unwrap().as_u64().unwrap();
+    let (code, cancelled) = post(&addr, &format!("/v1/jobs/{id}/cancel"), None);
+    assert_eq!(code, 200);
+    assert_eq!(cancelled.req("state").unwrap().as_str().unwrap(), "cancelled");
+
+    // the stream is frozen and final; cancel is idempotent over HTTP
+    let (_, page) = get(&addr, &format!("/v1/jobs/{id}/samples"));
+    assert!(page.req("done").unwrap().as_bool().unwrap());
+    let (_, again) = post(&addr, &format!("/v1/jobs/{id}/cancel"), None);
+    assert_eq!(again.req("state").unwrap().as_str().unwrap(), "cancelled");
+
+    // a cancelled job has no posterior: 409 + its status, not a panic
+    let (code, conflict) = get(&addr, &format!("/v1/jobs/{id}/posterior"));
+    assert_eq!(code, 409);
+    assert_eq!(conflict.req("state").unwrap().as_str().unwrap(), "cancelled");
+
+    // the daemon is still healthy and can run a real job afterwards
+    let (code, health) = get(&addr, "/v1/healthz");
+    assert_eq!(code, 200);
+    assert!(health.req("ok").unwrap().as_bool().unwrap());
+    let (fresh, _) = small_config(34);
+    let (_, receipt) = post(&addr, "/v1/jobs", Some(&fresh.to_json()));
+    let status = wait_terminal(&addr, receipt.req("id").unwrap().as_u64().unwrap());
+    assert_eq!(status.req("state").unwrap().as_str().unwrap(), "done");
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn malformed_requests_get_4xx_answers_never_a_dead_daemon() {
+    let (addr, handle) = start_server(1);
+
+    // malformed JSON body
+    let (code, err) = post(&addr, "/v1/jobs", Some("{this is not json"));
+    assert_eq!(code, 400);
+    assert!(err.req("error").unwrap().as_str().unwrap().contains("json"));
+    // config that fails validation (the old autotune/batch==0 class)
+    let (code, _) = post(&addr, "/v1/jobs", Some(r#"{"devices": 0}"#));
+    assert_eq!(code, 400);
+    let (code, _) = post(&addr, "/v1/jobs", Some(r#"{"backend": "pjrt"}"#));
+    assert_eq!(code, 400); // this pool runs the native backend
+    // unknown routes, ids and methods
+    assert_eq!(get(&addr, "/v1/so/very/missing").0, 404);
+    assert_eq!(get(&addr, "/v1/jobs/99").0, 404);
+    assert_eq!(get(&addr, "/v1/jobs/99/samples?offset=abc").0, 400);
+    assert_eq!(post(&addr, "/v1/healthz", None).0, 405);
+    // ... and after all that abuse, the daemon still serves
+    let (code, health) = get(&addr, "/v1/healthz");
+    assert_eq!(code, 200);
+    assert!(health.req("ok").unwrap().as_bool().unwrap());
+
+    shutdown(&addr, handle);
+}
