@@ -1,0 +1,472 @@
+//! Likelihood-free ABC-MCMC (Marjoram et al. 2003) as an
+//! [`InferenceMethod`].
+//!
+//! The chain targets the ABC posterior `π(θ | d(x, x_obs) ≤ ε)` under
+//! the paper's uniform box prior. Each step proposes
+//! `θ' = θ + scale · width ⊙ z` (Gaussian kernel, per-parameter width
+//! from the prior box), simulates one pseudo-dataset at θ', and
+//! accepts iff the simulation lands within ε. With a symmetric
+//! proposal and a uniform prior, the Metropolis–Hastings ratio
+//! collapses to the indicator: out-of-box proposals reject with
+//! probability 1 (no simulation is spent on them), in-box proposals
+//! accept exactly when the distance clears ε. The visited states —
+//! including repeats when a proposal rejects — are the posterior
+//! sample; dwell time is what weights a sticky state correctly.
+//!
+//! Scheduling: chains initialize from a rejection stage (the first
+//! `chains` accepted samples of a prior-wide job), then every step
+//! fans the in-box proposals of all chains × scenarios out as one
+//! schedule of single-run point-prior jobs (`Prior::new(θ', θ')`
+//! samples θ' exactly). Determinism: proposal noise and simulation
+//! seeds are counter-keyed from (scenario seed, chain, step) alone —
+//! never from run order — so the chain trajectory is bit-identical
+//! for any pool geometry (pinned by `tests/prop_methods.rs`).
+
+use super::method::{InferenceMethod, MethodOutcome, MethodScenario};
+use super::Posterior;
+use crate::config::ReturnStrategy;
+use crate::coordinator::{AcceptedSample, InferenceResult, StopRule};
+use crate::model::{Prior, Theta, N_PARAMS};
+use crate::rng::{splitmix64, Xoshiro256};
+use crate::scheduler::JobSpec;
+use crate::{Error, Result};
+
+/// Domain separators keeping the chain's three random streams (init
+/// sampling, proposal noise, step simulation) mutually independent
+/// even though all derive from one scenario seed.
+const MCMC_INIT_SALT: u64 = 0x4D43_4D43_1717_A5A5;
+const MCMC_PROPOSAL_SALT: u64 = 0x9E3C_7791_ACC3_5EED;
+const MCMC_SIM_SALT: u64 = 0x51B7_0CA5_7E11_0B0E;
+
+/// Lanes simulated per step job (one run). Only lane 0's
+/// pseudo-dataset decides the Metropolis test — single-replicate
+/// Marjoram ABC-MCMC — but a modest batch keeps step jobs shaped like
+/// every other engine job (sharding, outfeed chunking) instead of a
+/// degenerate 1-lane special case.
+const STEP_BATCH: usize = 64;
+
+/// Configuration of an ABC-MCMC run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct McmcConfig {
+    /// Independent chains per scenario.
+    pub chains: usize,
+    /// Steps per chain after initialization.
+    pub steps: usize,
+    /// Proposal standard deviation as a fraction of each parameter's
+    /// prior box width.
+    pub proposal_scale: f32,
+}
+
+impl Default for McmcConfig {
+    fn default() -> Self {
+        Self { chains: 4, steps: 40, proposal_scale: 0.1 }
+    }
+}
+
+impl McmcConfig {
+    /// Validate chain/scale constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.chains == 0 {
+            return Err(Error::Config("mcmc needs at least one chain".into()));
+        }
+        if !self.proposal_scale.is_finite() || self.proposal_scale <= 0.0 {
+            return Err(Error::Config(format!(
+                "mcmc proposal_scale {} must be finite and positive",
+                self.proposal_scale
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One chain's current state.
+#[derive(Debug, Clone, Copy)]
+struct ChainState {
+    theta: Theta,
+    distance: f32,
+}
+
+/// Per-scenario chain ensemble.
+struct ScenarioChains {
+    /// The fixed acceptance tolerance ε (resolved at init).
+    tolerance: f32,
+    chains: Vec<ChainState>,
+    /// Every post-decision chain state, step-major then chain-order —
+    /// the MCMC posterior sample, repeats included.
+    visited: Vec<AcceptedSample>,
+}
+
+/// A proposal whose simulation job is in flight, mapping the job (by
+/// submission position) back to its (scenario, chain).
+struct PendingStep {
+    scenario: usize,
+    chain: usize,
+    proposal: Theta,
+}
+
+/// ABC-MCMC over one or more scenarios.
+pub struct AbcMcmc {
+    scenarios: Vec<MethodScenario>,
+    mcmc: McmcConfig,
+    state: Vec<ScenarioChains>,
+    /// Next step index (0-based); meaningful once `initialized`.
+    step: usize,
+    initialized: bool,
+    pending: Vec<PendingStep>,
+}
+
+/// One standard-normal draw via Box–Muller. `1 - uniform()` maps the
+/// generator's `[0, 1)` to `(0, 1]`, keeping `ln` finite.
+fn standard_normal(rng: &mut Xoshiro256) -> f64 {
+    let u1 = 1.0 - rng.uniform();
+    let u2 = rng.uniform();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// Counter-mix of (chain, step) for per-step key derivation.
+fn mix_chain_step(chain: usize, step: usize) -> u64 {
+    (chain as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (step as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+}
+
+impl AbcMcmc {
+    /// Set up an MCMC run over `scenarios`.
+    pub fn new(scenarios: Vec<MethodScenario>, mcmc: McmcConfig) -> Result<Self> {
+        if scenarios.is_empty() {
+            return Err(Error::Config("mcmc needs at least one scenario".into()));
+        }
+        mcmc.validate()?;
+        Ok(Self {
+            scenarios,
+            mcmc,
+            state: Vec::new(),
+            step: 0,
+            initialized: false,
+            pending: Vec::new(),
+        })
+    }
+
+    /// The init stage: one prior-wide rejection job per scenario whose
+    /// first `chains` accepted samples seed the chains.
+    fn init_jobs(&self) -> Result<Vec<JobSpec>> {
+        self.scenarios
+            .iter()
+            .map(|s| {
+                let mut cfg = s.config.clone();
+                // salt the init stream so a comparison run's rejection
+                // baseline (same seed) stays an independent replicate
+                cfg.seed = splitmix64(s.config.seed ^ MCMC_INIT_SALT);
+                JobSpec::new(
+                    format!("{}/init", s.name),
+                    cfg,
+                    s.dataset.clone(),
+                    Prior::paper(),
+                    StopRule::AcceptedTarget(self.mcmc.chains),
+                )
+            })
+            .collect()
+    }
+
+    fn absorb_init(&mut self, results: Vec<(String, InferenceResult)>) -> Result<()> {
+        if results.len() != self.scenarios.len() {
+            return Err(Error::Coordinator(format!(
+                "mcmc init returned {} results for {} scenarios",
+                results.len(),
+                self.scenarios.len()
+            )));
+        }
+        for (scenario, (_name, result)) in self.scenarios.iter().zip(results) {
+            if result.accepted.len() < self.mcmc.chains {
+                return Err(Error::Coordinator(format!(
+                    "mcmc `{}`: init accepted {} of {} requested chain starts \
+                     (raise max_runs or loosen the tolerance {:e})",
+                    scenario.name,
+                    result.accepted.len(),
+                    self.mcmc.chains,
+                    result.tolerance
+                )));
+            }
+            // first `chains` samples of the deterministic accepted
+            // stream — the same inits for any pool geometry
+            let chains: Vec<ChainState> = result.accepted[..self.mcmc.chains]
+                .iter()
+                .map(|s| ChainState { theta: s.theta, distance: s.distance })
+                .collect();
+            let visited = chains
+                .iter()
+                .enumerate()
+                .map(|(ci, c)| AcceptedSample {
+                    theta: c.theta,
+                    distance: c.distance,
+                    device: 0,
+                    run: 0,
+                    index: ci as u32,
+                })
+                .collect();
+            self.state.push(ScenarioChains {
+                tolerance: result.tolerance,
+                chains,
+                visited,
+            });
+        }
+        self.initialized = true;
+        Ok(())
+    }
+
+    /// Gaussian proposal for one chain at `step`, keyed purely by
+    /// (seed, chain, step).
+    fn propose(&self, theta: &Theta, seed: u64, chain: usize, step: usize) -> Theta {
+        let mut rng = Xoshiro256::seed_from(splitmix64(
+            seed ^ MCMC_PROPOSAL_SALT ^ mix_chain_step(chain, step),
+        ));
+        let prior = Prior::paper();
+        let mut out = *theta;
+        for p in 0..N_PARAMS {
+            let z = standard_normal(&mut rng) as f32;
+            let width = prior.high()[p] - prior.low()[p];
+            out[p] += self.mcmc.proposal_scale * width * z;
+        }
+        out
+    }
+
+    /// Jobs for the current step: one single-run point-prior job per
+    /// in-box proposal. Fills `self.pending` in submission order.
+    fn step_jobs(&mut self) -> Result<Vec<JobSpec>> {
+        let step = self.step;
+        let prior = Prior::paper();
+        let mut jobs = Vec::new();
+        self.pending.clear();
+        for (si, (scenario, sc)) in
+            self.scenarios.iter().zip(&self.state).enumerate()
+        {
+            for (ci, chain) in sc.chains.iter().enumerate() {
+                let proposal =
+                    self.propose(&chain.theta, scenario.config.seed, ci, step);
+                if !prior.contains(&proposal) {
+                    // uniform prior: the MH ratio is 0 outside the box —
+                    // auto-reject without spending a simulation
+                    continue;
+                }
+                let mut cfg = scenario.config.clone();
+                cfg.tolerance = Some(sc.tolerance);
+                cfg.seed =
+                    splitmix64(scenario.config.seed ^ MCMC_SIM_SALT ^ mix_chain_step(ci, step));
+                cfg.devices = 1;
+                cfg.batch_per_device = STEP_BATCH;
+                cfg.return_strategy = ReturnStrategy::Outfeed { chunk: STEP_BATCH };
+                cfg.accepted_samples = 1;
+                cfg.max_runs = 1;
+                self.pending.push(PendingStep { scenario: si, chain: ci, proposal });
+                jobs.push(JobSpec::new(
+                    format!("{}/c{ci}/s{step}", scenario.name),
+                    cfg,
+                    scenario.dataset.clone(),
+                    // a point prior: every lane samples θ' exactly
+                    Prior::new(proposal, proposal)?,
+                    StopRule::ExactRuns(1),
+                )?);
+            }
+        }
+        Ok(jobs)
+    }
+
+    /// Apply one step's accept/reject decisions and record the
+    /// post-decision state of every chain (also for auto-rejected
+    /// chains, whose entry repeats the current state).
+    fn finish_step(&mut self, results: Vec<(String, InferenceResult)>) -> Result<()> {
+        let pending = std::mem::take(&mut self.pending);
+        if results.len() != pending.len() {
+            return Err(Error::Coordinator(format!(
+                "mcmc step {} returned {} results for {} proposals",
+                self.step,
+                results.len(),
+                pending.len()
+            )));
+        }
+        for (p, (_name, result)) in pending.into_iter().zip(results) {
+            // lane 0 of the single run is the chain's one pseudo-dataset;
+            // its presence in the accepted stream IS the ε test
+            let hit = result
+                .accepted
+                .iter()
+                .find(|s| s.run == 0 && s.index == 0);
+            if let Some(s) = hit {
+                self.state[p.scenario].chains[p.chain] =
+                    ChainState { theta: s.theta, distance: s.distance };
+            }
+        }
+        let run = (self.step + 1) as u64;
+        for sc in &mut self.state {
+            for (ci, chain) in sc.chains.iter().enumerate() {
+                sc.visited.push(AcceptedSample {
+                    theta: chain.theta,
+                    distance: chain.distance,
+                    device: 0,
+                    run,
+                    index: ci as u32,
+                });
+            }
+        }
+        self.step += 1;
+        Ok(())
+    }
+}
+
+impl InferenceMethod for AbcMcmc {
+    fn name(&self) -> &'static str {
+        "mcmc"
+    }
+
+    fn stage_index(&self) -> usize {
+        if self.initialized {
+            self.step + 1
+        } else {
+            0
+        }
+    }
+
+    fn stage_jobs(&mut self) -> Result<Vec<JobSpec>> {
+        if !self.initialized {
+            return self.init_jobs();
+        }
+        while self.step < self.mcmc.steps {
+            let jobs = self.step_jobs()?;
+            if !jobs.is_empty() {
+                return Ok(jobs);
+            }
+            // every proposal left the box: a full auto-reject step —
+            // apply it locally, no schedule needed
+            self.finish_step(Vec::new())?;
+        }
+        Ok(Vec::new())
+    }
+
+    fn absorb(&mut self, results: Vec<(String, InferenceResult)>) -> Result<()> {
+        if !self.initialized {
+            self.absorb_init(results)
+        } else {
+            self.finish_step(results)
+        }
+    }
+
+    fn outcomes(&mut self) -> Result<Vec<(String, MethodOutcome)>> {
+        if !self.initialized {
+            return Err(Error::Coordinator(
+                "mcmc outcomes requested before the init stage ran".into(),
+            ));
+        }
+        let state = std::mem::take(&mut self.state);
+        Ok(self
+            .scenarios
+            .iter()
+            .zip(state)
+            .map(|(s, sc)| {
+                (
+                    s.name.clone(),
+                    MethodOutcome {
+                        posterior: Posterior::new(sc.visited),
+                        tolerance: sc.tolerance,
+                    },
+                )
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::method::drive;
+    use super::*;
+    use crate::backend::{Backend, NativeBackend};
+    use crate::config::RunConfig;
+    use std::sync::Arc;
+
+    fn scenario(seed: u64) -> MethodScenario {
+        let dataset = crate::data::synthetic::default_dataset(16, 0x5eed);
+        let config = RunConfig {
+            dataset: "synthetic".into(),
+            tolerance: Some(dataset.default_tolerance * 30.0),
+            devices: 2,
+            batch_per_device: 500,
+            days: 16,
+            return_strategy: ReturnStrategy::Outfeed { chunk: 500 },
+            seed,
+            max_runs: 400,
+            ..Default::default()
+        };
+        MethodScenario { name: "synthetic".into(), config, dataset }
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(McmcConfig { chains: 0, ..Default::default() }.validate().is_err());
+        assert!(McmcConfig { proposal_scale: 0.0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(McmcConfig { proposal_scale: f32::NAN, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(McmcConfig::default().validate().is_ok());
+        assert!(matches!(
+            AbcMcmc::new(Vec::new(), McmcConfig::default()).unwrap_err(),
+            Error::Config(_)
+        ));
+    }
+
+    #[test]
+    fn standard_normal_is_deterministic_and_roughly_centered() {
+        let mut rng = Xoshiro256::seed_from(42);
+        let draws: Vec<f64> = (0..2000).map(|_| standard_normal(&mut rng)).collect();
+        let mut rng2 = Xoshiro256::seed_from(42);
+        let again: Vec<f64> = (0..2000).map(|_| standard_normal(&mut rng2)).collect();
+        assert_eq!(draws, again);
+        let mean = draws.iter().sum::<f64>() / draws.len() as f64;
+        let var = draws.iter().map(|z| (z - mean) * (z - mean)).sum::<f64>()
+            / draws.len() as f64;
+        assert!(mean.abs() < 0.1, "{mean}");
+        assert!((var - 1.0).abs() < 0.15, "{var}");
+        assert!(draws.iter().all(|z| z.is_finite()));
+    }
+
+    #[test]
+    fn proposals_are_counter_keyed_pure_functions() {
+        let m = AbcMcmc::new(vec![scenario(7)], McmcConfig::default()).unwrap();
+        let theta = [0.5f32; N_PARAMS];
+        let a = m.propose(&theta, 7, 0, 3);
+        let b = m.propose(&theta, 7, 0, 3);
+        assert_eq!(a.map(f32::to_bits), b.map(f32::to_bits));
+        // distinct chains and steps decorrelate
+        assert_ne!(a.map(f32::to_bits), m.propose(&theta, 7, 1, 3).map(f32::to_bits));
+        assert_ne!(a.map(f32::to_bits), m.propose(&theta, 7, 0, 4).map(f32::to_bits));
+    }
+
+    #[test]
+    fn outcomes_before_init_is_a_typed_error() {
+        let mut m = AbcMcmc::new(vec![scenario(1)], McmcConfig::default()).unwrap();
+        assert!(matches!(m.outcomes().unwrap_err(), Error::Coordinator(_)));
+    }
+
+    #[test]
+    fn chain_runs_end_to_end_with_dwell_time_semantics() {
+        let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+        let mcmc = McmcConfig { chains: 2, steps: 5, ..Default::default() };
+        let mut m = AbcMcmc::new(vec![scenario(0xFEED)], mcmc.clone()).unwrap();
+        drive(backend, 2, &mut m, None).unwrap();
+        let outcomes = m.outcomes().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        let posterior = &outcomes[0].1.posterior;
+        // every chain records exactly one state per step plus its init
+        assert_eq!(posterior.len(), mcmc.chains * (mcmc.steps + 1));
+        let eps = outcomes[0].1.tolerance;
+        for s in posterior.samples() {
+            // visited states are always inside the box and within ε
+            assert!(Prior::paper().contains(&s.theta), "{:?}", s.theta);
+            assert!(s.distance <= eps, "{} > {eps}", s.distance);
+        }
+        // step-major, chain-minor record order: run = step, index = chain
+        for (i, s) in posterior.samples().iter().enumerate() {
+            assert_eq!(s.run as usize, i / mcmc.chains);
+            assert_eq!(s.index as usize, i % mcmc.chains);
+        }
+    }
+}

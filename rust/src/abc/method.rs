@@ -1,0 +1,258 @@
+//! The `InferenceMethod` seam: many SBI methods, one harness.
+//!
+//! `sbibm` (Lueckmann et al.) and the SBI-vs-MCMC comparisons of
+//! Bazarova et al. both argue that method comparisons are only
+//! meaningful when every method runs over the *same* simulator budget
+//! accounting, worker pool, and determinism contract. This module is
+//! that seam for us: an inference method is a state machine that
+//! repeatedly proposes a batch of simulator jobs ([`JobSpec`]s), the
+//! shared [`Scheduler`] pool executes them (bit-identically to a solo
+//! run, for any pool geometry), and the method absorbs the results
+//! into its next-stage state.
+//!
+//! Implementations (DESIGN.md §13):
+//! - [`super::smc::SmcAbc`] — box-restricted, ESS-adaptive weighted
+//!   population SMC (the paper's scheme, upgraded);
+//! - [`super::rejection::RejectionAbc`] — single-stage rejection-ABC,
+//!   the baseline every comparison needs;
+//! - [`super::mcmc::AbcMcmc`] — likelihood-free ABC-MCMC (Marjoram et
+//!   al.), Gaussian proposals riding the same engine one step-job at a
+//!   time.
+//!
+//! The [`drive`] loop is the single scheduler-facing driver: it owns
+//! per-stage checkpoint placement, budget accounting
+//! ([`MethodStats`]), and error propagation, so a method
+//! implementation never touches the pool directly.
+
+use super::Posterior;
+use crate::backend::Backend;
+use crate::checkpoint::CheckpointConfig;
+use crate::coordinator::InferenceResult;
+use crate::scheduler::{JobSpec, Scheduler};
+use crate::util::env::string_override;
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Environment override for the inference method; wins over config and
+/// CLI (the same precedence as every other `ABC_IPU_*` knob).
+pub const METHOD_ENV: &str = "ABC_IPU_METHOD";
+
+/// Which inference method runs a config. Selected by JSON `"method"`,
+/// CLI `--method`, or [`METHOD_ENV`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MethodKind {
+    /// Plain rejection-ABC at a fixed tolerance — the paper's base
+    /// loop and the default (existing configs keep their meaning).
+    #[default]
+    Rejection,
+    /// ESS-adaptive weighted SMC-ABC with systematic resampling.
+    Smc,
+    /// Likelihood-free ABC-MCMC (Marjoram et al. 2003).
+    Mcmc,
+}
+
+impl MethodKind {
+    /// Parse a method name (as accepted from JSON, CLI and env).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "rejection" => Ok(Self::Rejection),
+            "smc" => Ok(Self::Smc),
+            "mcmc" => Ok(Self::Mcmc),
+            other => Err(Error::Config(format!(
+                "unknown inference method `{other}`: expected rejection|smc|mcmc"
+            ))),
+        }
+    }
+
+    /// Canonical lowercase name (round-trips through [`Self::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Rejection => "rejection",
+            Self::Smc => "smc",
+            Self::Mcmc => "mcmc",
+        }
+    }
+
+    /// Resolve the effective method: [`METHOD_ENV`] wins over the
+    /// configured value, mirroring the lane/simd/shard knobs.
+    pub fn resolve(configured: Self) -> Result<Self> {
+        match string_override(METHOD_ENV)? {
+            Some(s) => Self::parse(&s),
+            None => Ok(configured),
+        }
+    }
+}
+
+/// One scenario a method fits: a named (config, dataset) pair. The
+/// method-agnostic twin of [`super::smc::SmcScenario`].
+#[derive(Debug, Clone)]
+pub struct MethodScenario {
+    /// Scenario name (usually the dataset name); prefixes job names.
+    pub name: String,
+    /// Base run configuration (per-stage seeds derive from its seed).
+    pub config: crate::config::RunConfig,
+    /// Dataset to fit.
+    pub dataset: crate::data::Dataset,
+}
+
+/// A method's final per-scenario answer.
+#[derive(Debug, Clone)]
+pub struct MethodOutcome {
+    /// The posterior sample the method settles on. For MCMC this is
+    /// the visited chain states (including repeats — the correct MCMC
+    /// marginal weights a sticky state by its dwell time).
+    pub posterior: Posterior,
+    /// The final (tightest) tolerance the posterior was accepted under.
+    pub tolerance: f32,
+}
+
+/// Shared-harness budget accounting, identical across methods so
+/// comparison rows are apples-to-apples.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MethodStats {
+    /// Scheduler round-trips (stages for SMC, 1 + steps-with-jobs for
+    /// MCMC, 1 for rejection).
+    pub stages: usize,
+    /// Accelerator runs consumed across the whole pool.
+    pub runs: u64,
+    /// Simulator calls (lanes simulated) — the `sbibm` x-axis.
+    pub simulator_calls: u64,
+    /// Wall-clock of the whole drive loop.
+    pub wall: Duration,
+}
+
+/// An inference method as a schedulable state machine.
+///
+/// The contract with [`drive`]: `stage_jobs` returns the next batch of
+/// jobs (empty = converged/done); the driver runs them on the shared
+/// pool and hands the per-job results back to `absorb` in submission
+/// order. Determinism: every job a method emits must derive its seed
+/// purely from (scenario seed, stage/step counters), so the emitted
+/// job set — and therefore each job's bit-exact result stream — is
+/// invariant to pool geometry.
+pub trait InferenceMethod {
+    /// Canonical method name (matches [`MethodKind::as_str`]).
+    fn name(&self) -> &'static str;
+
+    /// Index of the stage the next [`Self::stage_jobs`] call issues;
+    /// names the in-flight stage's checkpoint sibling file
+    /// ([`CheckpointConfig::stage_path`]).
+    fn stage_index(&self) -> usize;
+
+    /// Restore method state from a study snapshot at `ckpt.path`.
+    /// Methods without durable state accept the default no-op.
+    fn restore(&mut self, ckpt: &CheckpointConfig) -> Result<()> {
+        let _ = ckpt;
+        Ok(())
+    }
+
+    /// Emit the next stage's jobs; empty means the method is done.
+    fn stage_jobs(&mut self) -> Result<Vec<JobSpec>>;
+
+    /// Absorb one stage's per-job results, in submission order.
+    fn absorb(&mut self, results: Vec<(String, InferenceResult)>) -> Result<()>;
+
+    /// Persist method state after a completed stage (study snapshot).
+    fn save(&self, ckpt: &CheckpointConfig) -> Result<()> {
+        let _ = ckpt;
+        Ok(())
+    }
+
+    /// Drain the per-scenario outcomes once [`Self::stage_jobs`] has
+    /// returned empty.
+    fn outcomes(&mut self) -> Result<Vec<(String, MethodOutcome)>>;
+}
+
+/// Drive a method to completion over one shared worker pool.
+///
+/// Every stage becomes one schedule on a pool of `workers`; per-stage
+/// checkpointing (when a policy is given) mirrors the SMC study
+/// layout from DESIGN.md §10 — the in-flight stage snapshots to
+/// [`CheckpointConfig::stage_path`], the method's own snapshot at
+/// `ckpt.path` records completed stages, and resume restores the
+/// method state first so only the interrupted stage replays. The
+/// first failing job aborts the drive with that job's error.
+pub fn drive(
+    backend: Arc<dyn Backend>,
+    workers: usize,
+    method: &mut dyn InferenceMethod,
+    ckpt: Option<&CheckpointConfig>,
+) -> Result<MethodStats> {
+    let start = std::time::Instant::now();
+    let mut stats = MethodStats::default();
+    if let Some(c) = ckpt {
+        if c.resume && c.path.exists() {
+            method.restore(c)?;
+        }
+    }
+    loop {
+        let stage = method.stage_index();
+        let jobs = method.stage_jobs()?;
+        if jobs.is_empty() {
+            break;
+        }
+        // Stage schedules never read the job configs' checkpoint
+        // knobs: the method-level policy owns the files.
+        let scheduler = match ckpt {
+            Some(c) => Scheduler::new(backend.clone(), workers).with_checkpoint(
+                CheckpointConfig {
+                    path: c.stage_path(stage),
+                    interval: c.interval,
+                    resume: c.resume,
+                    interrupt_after: c.interrupt_after,
+                },
+            ),
+            None => Scheduler::new(backend.clone(), workers).without_checkpoint(),
+        };
+        let report = scheduler.run(jobs)?;
+        stats.stages += 1;
+        stats.runs += report.pool_metrics.runs;
+        let mut results = Vec::with_capacity(report.jobs.len());
+        for run in report.jobs {
+            let result = run.outcome?;
+            stats.simulator_calls += result.metrics.samples_simulated;
+            results.push((run.name, result));
+        }
+        method.absorb(results)?;
+        if let Some(c) = ckpt {
+            // Snapshot-then-remove ordering is the crash-safety
+            // argument of DESIGN.md §10: once the method snapshot says
+            // this stage is done, its stage file is never read again.
+            method.save(c)?;
+            let _ = std::fs::remove_file(c.stage_path(stage));
+        }
+    }
+    stats.wall = start.elapsed();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_round_trip_through_parse() {
+        for kind in [MethodKind::Rejection, MethodKind::Smc, MethodKind::Mcmc] {
+            assert_eq!(MethodKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        // parse is forgiving about case and whitespace (env/CLI input)
+        assert_eq!(MethodKind::parse("  SMC ").unwrap(), MethodKind::Smc);
+        assert_eq!(MethodKind::parse("Rejection").unwrap(), MethodKind::Rejection);
+    }
+
+    #[test]
+    fn unknown_method_is_a_typed_config_error() {
+        let err = MethodKind::parse("nuts").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("nuts") && msg.contains("rejection|smc|mcmc"), "{msg}");
+    }
+
+    #[test]
+    fn default_method_is_rejection() {
+        // existing configs carry no "method" key: they must keep
+        // meaning what they meant before this seam existed
+        assert_eq!(MethodKind::default(), MethodKind::Rejection);
+    }
+}

@@ -4,19 +4,33 @@
 //!   (Table 8 means, Fig 8/9 histograms).
 //! - [`predict`]: posterior-predictive trajectories with percentile
 //!   bands (Fig 7).
+//! - [`method`]: the `InferenceMethod` seam — every SBI method below
+//!   runs as a schedulable state machine over one shared worker pool
+//!   (DESIGN.md §13).
 //! - [`smc`]: SMC-ABC — the decreasing-tolerance refinement the paper
-//!   references (§2.2, Drovandi & Pettitt).
+//!   references (§2.2, Drovandi & Pettitt), upgraded to ESS-adaptive
+//!   weighted population SMC with systematic resampling.
+//! - [`rejection`]: the single-stage rejection-ABC baseline.
+//! - [`mcmc`]: likelihood-free ABC-MCMC (Marjoram et al. 2003).
 //! - [`cpu`]: the pure-host CPU baseline engine (Table 1's CPU rows),
 //!   sharing the coordinator's return-strategy semantics.
 
 pub mod cpu;
 pub mod diagnostics;
+pub mod mcmc;
+pub mod method;
 pub mod pilot;
 pub mod predict;
+pub mod rejection;
 pub mod smc;
 
 mod posterior;
 
 pub use diagnostics::{diagnose, DiagnosticReport};
+pub use mcmc::{AbcMcmc, McmcConfig};
+pub use method::{
+    drive, InferenceMethod, MethodKind, MethodOutcome, MethodScenario, MethodStats,
+};
 pub use pilot::{calibrate_tolerance, PilotCalibration};
 pub use posterior::Posterior;
+pub use rejection::RejectionAbc;

@@ -1,0 +1,163 @@
+//! Plain rejection-ABC as an [`InferenceMethod`].
+//!
+//! The baseline every method comparison needs (`sbibm` calls it REJ):
+//! sample θ from the full paper prior, simulate, accept when the
+//! distance clears the fixed tolerance — exactly the paper's base
+//! loop, expressed through the method seam so it shares the pool,
+//! budget accounting and comparison harness with SMC and MCMC. A
+//! single stage: one [`JobSpec`] per scenario, stopping at the
+//! scenario's `accepted_samples` target.
+
+use super::method::{InferenceMethod, MethodOutcome, MethodScenario};
+use super::Posterior;
+use crate::coordinator::{InferenceResult, StopRule};
+use crate::model::Prior;
+use crate::scheduler::JobSpec;
+use crate::{Error, Result};
+
+/// Single-stage rejection-ABC over one or more scenarios.
+pub struct RejectionAbc {
+    scenarios: Vec<MethodScenario>,
+    issued: bool,
+    outcomes: Vec<(String, MethodOutcome)>,
+}
+
+impl RejectionAbc {
+    /// Set up a rejection run over `scenarios`.
+    pub fn new(scenarios: Vec<MethodScenario>) -> Result<Self> {
+        if scenarios.is_empty() {
+            return Err(Error::Config(
+                "rejection-abc needs at least one scenario".into(),
+            ));
+        }
+        Ok(Self { scenarios, issued: false, outcomes: Vec::new() })
+    }
+}
+
+impl InferenceMethod for RejectionAbc {
+    fn name(&self) -> &'static str {
+        "rejection"
+    }
+
+    fn stage_index(&self) -> usize {
+        usize::from(self.issued)
+    }
+
+    fn stage_jobs(&mut self) -> Result<Vec<JobSpec>> {
+        if self.issued {
+            return Ok(Vec::new());
+        }
+        self.issued = true;
+        self.scenarios
+            .iter()
+            .map(|s| {
+                JobSpec::new(
+                    s.name.clone(),
+                    s.config.clone(),
+                    s.dataset.clone(),
+                    Prior::paper(),
+                    StopRule::AcceptedTarget(s.config.accepted_samples),
+                )
+            })
+            .collect()
+    }
+
+    fn absorb(&mut self, results: Vec<(String, InferenceResult)>) -> Result<()> {
+        for (name, result) in results {
+            let tolerance = result.tolerance;
+            self.outcomes.push((
+                name,
+                MethodOutcome {
+                    posterior: Posterior::new(result.accepted),
+                    tolerance,
+                },
+            ));
+        }
+        Ok(())
+    }
+
+    fn outcomes(&mut self) -> Result<Vec<(String, MethodOutcome)>> {
+        if !self.issued {
+            return Err(Error::Coordinator(
+                "rejection-abc outcomes requested before the stage ran".into(),
+            ));
+        }
+        Ok(std::mem::take(&mut self.outcomes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::method::drive;
+    use super::*;
+    use crate::backend::{Backend, NativeBackend};
+    use crate::config::{ReturnStrategy, RunConfig};
+    use std::sync::Arc;
+
+    fn scenario(seed: u64) -> MethodScenario {
+        let dataset = crate::data::synthetic::default_dataset(16, 0x5eed);
+        let config = RunConfig {
+            dataset: "synthetic".into(),
+            tolerance: Some(dataset.default_tolerance * 30.0),
+            devices: 2,
+            batch_per_device: 500,
+            days: 16,
+            return_strategy: ReturnStrategy::Outfeed { chunk: 500 },
+            seed,
+            accepted_samples: 12,
+            max_runs: 400,
+            ..Default::default()
+        };
+        MethodScenario { name: "synthetic".into(), config, dataset }
+    }
+
+    #[test]
+    fn empty_scenario_list_is_rejected() {
+        assert!(matches!(
+            RejectionAbc::new(Vec::new()).unwrap_err(),
+            Error::Config(_)
+        ));
+    }
+
+    #[test]
+    fn outcomes_before_running_is_a_typed_error() {
+        let mut m = RejectionAbc::new(vec![scenario(1)]).unwrap();
+        assert!(matches!(m.outcomes().unwrap_err(), Error::Coordinator(_)));
+    }
+
+    #[test]
+    fn drives_to_target_and_matches_solo_coordinator() {
+        let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+        let sc = scenario(0xFEED);
+        let mut m = RejectionAbc::new(vec![sc.clone()]).unwrap();
+        let stats = drive(backend.clone(), 2, &mut m, None).unwrap();
+        assert_eq!(stats.stages, 1);
+        assert!(stats.runs > 0 && stats.simulator_calls > 0);
+        let outcomes = m.outcomes().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        let (name, outcome) = &outcomes[0];
+        assert_eq!(name, "synthetic");
+        assert!(outcome.posterior.len() >= 12);
+
+        // the method seam adds nothing to the stream: bit-identical to
+        // the plain coordinator running the same job solo
+        let solo = crate::coordinator::Coordinator::new(
+            backend,
+            sc.config,
+            sc.dataset,
+            Prior::paper(),
+        )
+        .unwrap()
+        .run(StopRule::AcceptedTarget(12))
+        .unwrap();
+        let a: Vec<[u32; 8]> = outcome
+            .posterior
+            .samples()
+            .iter()
+            .map(|s| s.theta.map(f32::to_bits))
+            .collect();
+        let b: Vec<[u32; 8]> =
+            solo.accepted.iter().map(|s| s.theta.map(f32::to_bits)).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -11,6 +11,18 @@
 //! expressible as the AOT-compiled uniform sampler (an adaptation
 //! documented in DESIGN.md §2).
 //!
+//! Since the method seam landed (DESIGN.md §13) the stage transition
+//! is a *weighted population* step: every accepted particle carries an
+//! Epanechnikov distance-kernel importance weight
+//! `w_i = 1 − (d_i/ε)²`, the effective sample size
+//! `ESS = (Σw)²/Σw²` diagnoses weight degeneracy, and when
+//! `ESS < N/2` the population is systematically resampled (one
+//! counter-keyed uniform, low-variance) before the next stage's
+//! proposal box and tolerance are computed from it. The raw accepted
+//! stream — not the resampled population — remains each stage's
+//! recorded posterior, so the bit-identity contracts below are
+//! untouched; resampling only steers *where the next stage looks*.
+//!
 //! Multi-scenario studies go through [`run_smc_scenarios`]: every
 //! stage fans *all* scenarios out as one schedule on a shared worker
 //! pool ([`crate::scheduler`]), so stage `s` of country A overlaps
@@ -23,17 +35,18 @@
 //! — bit-identically to the unsharded schedule
 //! ([`crate::scheduler::shard`], pinned by `tests/prop_shards.rs`).
 
+use super::method::{drive, InferenceMethod, MethodOutcome};
 use super::Posterior;
 use crate::backend::Backend;
 use crate::checkpoint::{
     self, CheckpointConfig, SmcScenarioSnapshot, SmcSnapshot, SmcStageSnapshot,
 };
 use crate::config::RunConfig;
-use crate::coordinator::StopRule;
+use crate::coordinator::{AcceptedSample, InferenceResult, StopRule};
 use crate::data::Dataset;
 use crate::model::{Prior, Theta, N_PARAMS};
-use crate::scheduler::{JobSpec, Scheduler};
-use crate::stats::percentile;
+use crate::scheduler::JobSpec;
+use crate::stats::try_percentile;
 use crate::{Error, Result};
 use std::sync::Arc;
 
@@ -83,13 +96,18 @@ pub struct SmcStage {
     pub stage: usize,
     /// Tolerance used.
     pub tolerance: f32,
-    /// Posterior of this stage.
+    /// Posterior of this stage (the raw accepted stream, unresampled).
     pub posterior: Posterior,
     /// Prior box used for this stage.
     pub prior_low: Theta,
     pub prior_high: Theta,
     /// Accelerator runs consumed.
     pub runs: u64,
+    /// Epanechnikov importance weight of each accepted sample, aligned
+    /// with `posterior.samples()`.
+    pub weights: Vec<f32>,
+    /// Effective sample size `(Σw)²/Σw²` of `weights`.
+    pub ess: f32,
 }
 
 /// Full SMC-ABC result.
@@ -138,12 +156,14 @@ struct ScenarioState {
 /// Tighten a stage's tolerance toward `quantile` of its accepted
 /// distances, never by less than 5 %.
 ///
-/// Non-finite distances are filtered out first: `percentile` sorts NaN
-/// last under `total_cmp`, so a single NaN would silently become the
-/// high-quantile answer and `min(current * 0.95)` would then mask it as
-/// an ordinary refinement — absorbing a numerical blow-up into the
-/// schedule. If no finite distance remains, or the refined ε is not
-/// finite-positive, the study stops with a typed error instead.
+/// Non-finite distances are filtered out first: the percentile sorts
+/// NaN last under `total_cmp`, so a single NaN would silently become
+/// the high-quantile answer and `min(current * 0.95)` would then mask
+/// it as an ordinary refinement — absorbing a numerical blow-up into
+/// the schedule. If no finite distance remains, or the refined ε is
+/// not finite-positive, the study stops with a typed error instead.
+/// The quantile flows through [`try_percentile`], so a malformed value
+/// degrades to `Error::Config` rather than a dead worker.
 fn refine_tolerance(
     name: &str,
     distances: &[f32],
@@ -159,7 +179,8 @@ fn refine_tolerance(
             distances.len()
         )));
     }
-    let next = (percentile(&finite, quantile * 100.0) as f32).min(current * 0.95);
+    let next =
+        (try_percentile(&finite, quantile * 100.0)? as f32).min(current * 0.95);
     if !next.is_finite() || next <= 0.0 {
         return Err(Error::Coordinator(format!(
             "smc `{name}`: refined tolerance {next:e} is not finite-positive \
@@ -167,6 +188,281 @@ fn refine_tolerance(
         )));
     }
     Ok(next)
+}
+
+/// Domain separator for the per-stage resampling uniform, keeping it
+/// independent of the simulation key streams derived from the same
+/// scenario seed.
+const RESAMPLE_SALT: u64 = 0x5CA1_AB1E_0E55_D00D;
+
+/// Epanechnikov distance-kernel importance weight of each accepted
+/// sample: `w_i = 1 − (d_i/ε)²`, in `[0, 1]` (the engine only accepts
+/// `d ≤ ε`). The proposal-vs-prior density ratio is constant across a
+/// stage's box-uniform proposals, so it cancels in the normalization
+/// and the kernel term is the entire weight. A degenerate stage where
+/// every weight vanishes (all distances exactly ε) falls back to
+/// equal weights rather than a zero-mass population.
+fn distance_kernel_weights(samples: &[AcceptedSample], tolerance: f32) -> Vec<f32> {
+    let mut weights: Vec<f32> = samples
+        .iter()
+        .map(|s| {
+            let r = s.distance / tolerance;
+            (1.0 - r * r).max(0.0)
+        })
+        .collect();
+    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    if !samples.is_empty() && (!total.is_finite() || total <= 0.0) {
+        weights.iter_mut().for_each(|w| *w = 1.0);
+    }
+    weights
+}
+
+/// Effective sample size `(Σw)²/Σw²`, accumulated in f64 in slice
+/// order so the value is bit-identical for any pool geometry (the
+/// weight vector itself is geometry-invariant). 0 for an empty or
+/// all-zero vector; equals `n` for equal weights.
+fn effective_sample_size(weights: &[f32]) -> f32 {
+    let (mut sum, mut sq) = (0.0f64, 0.0f64);
+    for &w in weights {
+        sum += w as f64;
+        sq += (w as f64) * (w as f64);
+    }
+    if sq <= 0.0 {
+        return 0.0;
+    }
+    ((sum * sum) / sq) as f32
+}
+
+/// Systematic (low-variance) resampling: one uniform `u ∈ [0, 1)`
+/// places `n` evenly spaced pointers over the cumulative weight
+/// profile, so index `i` is drawn within ±1 of `n·w_i/Σw` times.
+/// Deterministic given `(weights, u)`; returned indices are
+/// non-decreasing.
+fn systematic_resample(weights: &[f32], u: f64) -> Vec<usize> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0usize;
+    let mut cumulative = weights[0] as f64;
+    for j in 0..n {
+        let target = total * ((u + j as f64) / n as f64);
+        // `i + 1 < n` guards float round-off at the top of the
+        // profile: the last pointer can only land on the last index.
+        while cumulative < target && i + 1 < n {
+            i += 1;
+            cumulative += weights[i] as f64;
+        }
+        out.push(i);
+    }
+    out
+}
+
+/// The stage's single resampling uniform, counter-keyed from the
+/// scenario seed and stage index alone — never from an RNG threaded
+/// through the run — so the resampled population is a pure function
+/// of (seed, stage, accepted stream) and pool==solo bit-identity
+/// survives the weighted upgrade.
+fn resample_uniform(seed: u64, stage: usize) -> f64 {
+    let mixed = crate::rng::splitmix64(
+        seed ^ RESAMPLE_SALT ^ (stage as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    crate::rng::Xoshiro256::seed_from(mixed).uniform()
+}
+
+/// ESS-adaptive weighted SMC-ABC as an [`InferenceMethod`].
+///
+/// Owns the per-scenario refinement state between stages; the shared
+/// [`drive`] loop owns the pool and the per-stage checkpoint files.
+/// The stage flow: `stage_jobs` emits one job per scenario from the
+/// current (box, ε) state; `absorb` records the stage, weights the
+/// accepted population, resamples when the ESS collapses below `N/2`,
+/// and shrinks box + ε around the (possibly resampled) survivors.
+pub struct SmcAbc {
+    scenarios: Vec<SmcScenario>,
+    smc: SmcConfig,
+    fingerprint: u64,
+    states: Vec<ScenarioState>,
+    next_stage: usize,
+}
+
+impl SmcAbc {
+    /// Validate and set up a study over `scenarios`.
+    pub fn new(scenarios: Vec<SmcScenario>, smc: SmcConfig) -> Result<Self> {
+        if scenarios.is_empty() {
+            return Err(Error::Config("smc needs at least one scenario".into()));
+        }
+        smc.validate()?;
+        let fingerprint = checkpoint::smc_fingerprint(&scenarios, &smc);
+        let states = scenarios
+            .iter()
+            .map(|s| ScenarioState {
+                prior: Prior::paper(),
+                tolerance: s.config.tolerance.unwrap_or(s.dataset.default_tolerance),
+                stages: Vec::new(),
+            })
+            .collect();
+        Ok(Self { scenarios, smc, fingerprint, states, next_stage: 0 })
+    }
+
+    /// Consume the study into per-scenario results, in scenario order.
+    pub fn into_results(self) -> Vec<(String, SmcResult)> {
+        self.scenarios
+            .iter()
+            .zip(self.states)
+            .map(|(s, st)| (s.name.clone(), SmcResult { stages: st.stages }))
+            .collect()
+    }
+}
+
+impl InferenceMethod for SmcAbc {
+    fn name(&self) -> &'static str {
+        "smc"
+    }
+
+    fn stage_index(&self) -> usize {
+        self.next_stage
+    }
+
+    fn restore(&mut self, ckpt: &CheckpointConfig) -> Result<()> {
+        let snap = SmcSnapshot::load(&ckpt.path)?;
+        restore_study(
+            &mut self.states,
+            &mut self.next_stage,
+            &self.scenarios,
+            self.fingerprint,
+            &snap,
+        )
+    }
+
+    fn stage_jobs(&mut self) -> Result<Vec<JobSpec>> {
+        let stage = self.next_stage;
+        if stage > self.smc.stages {
+            return Ok(Vec::new());
+        }
+        // Fan out: one job per scenario, all sharing the pool.
+        let mut jobs = Vec::with_capacity(self.scenarios.len());
+        for (scenario, state) in self.scenarios.iter().zip(&self.states) {
+            let mut cfg = scenario.config.clone();
+            cfg.tolerance = Some(state.tolerance);
+            // Deterministic, stage-distinct seeding. Hash-mix the stage
+            // instead of adding it: `seed + stage` would make replicate
+            // seeds s and s+1 share identical key streams in adjacent
+            // stages, silently correlating "independent" replicates.
+            cfg.seed = crate::rng::splitmix64(
+                scenario.config.seed
+                    ^ (stage as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            jobs.push(JobSpec::new(
+                scenario.name.clone(),
+                cfg,
+                scenario.dataset.clone(),
+                state.prior.clone(),
+                StopRule::AcceptedTarget(self.smc.samples_per_stage),
+            )?);
+        }
+        Ok(jobs)
+    }
+
+    fn absorb(&mut self, results: Vec<(String, InferenceResult)>) -> Result<()> {
+        let stage = self.next_stage;
+        if results.len() != self.scenarios.len() {
+            return Err(Error::Coordinator(format!(
+                "smc stage {stage} returned {} results for {} scenarios",
+                results.len(),
+                self.scenarios.len()
+            )));
+        }
+        for ((scenario, state), (_name, result)) in
+            self.scenarios.iter().zip(self.states.iter_mut()).zip(results)
+        {
+            let weights = distance_kernel_weights(&result.accepted, state.tolerance);
+            let ess = effective_sample_size(&weights);
+            let posterior = Posterior::new(result.accepted);
+            state.stages.push(SmcStage {
+                stage,
+                tolerance: state.tolerance,
+                posterior: posterior.clone(),
+                prior_low: *state.prior.low(),
+                prior_high: *state.prior.high(),
+                runs: result.metrics.runs,
+                weights: weights.clone(),
+                ess,
+            });
+
+            if stage == self.smc.stages {
+                continue;
+            }
+            // ESS-adaptive resampling: when the weighted population has
+            // degenerated below N/2 effective particles, draw the next
+            // stage's survivor set with the systematic scheme — the
+            // duplicates it introduces pull the shrunken box and the
+            // refined ε toward the high-weight (low-distance) region.
+            let accepted = posterior.samples();
+            let n = accepted.len();
+            let survivors: Vec<AcceptedSample> = if ess < n as f32 / 2.0 {
+                let u = resample_uniform(scenario.config.seed, stage);
+                systematic_resample(&weights, u)
+                    .into_iter()
+                    .map(|i| accepted[i].clone())
+                    .collect()
+            } else {
+                accepted.to_vec()
+            };
+            let survivors = Posterior::new(survivors);
+
+            // next stage: shrink the box around survivors, tighten ε
+            let (lo, hi) = survivors.bounding_box();
+            let mut low = lo;
+            let mut high = hi;
+            for p in 0..N_PARAMS {
+                let margin = (hi[p] - lo[p]) * self.smc.box_margin;
+                low[p] = (lo[p] - margin).max(state.prior.low()[p]);
+                high[p] = (hi[p] + margin).min(state.prior.high()[p]);
+            }
+            state.prior = Prior::new(low, high)?;
+            let dists: Vec<f32> =
+                survivors.samples().iter().map(|s| s.distance).collect();
+            state.tolerance = refine_tolerance(
+                &scenario.name,
+                &dists,
+                self.smc.quantile,
+                state.tolerance,
+            )?;
+        }
+        self.next_stage += 1;
+        Ok(())
+    }
+
+    fn save(&self, ckpt: &CheckpointConfig) -> Result<()> {
+        study_snapshot(self.fingerprint, self.next_stage, &self.scenarios, &self.states)
+            .save(&ckpt.path)
+    }
+
+    fn outcomes(&mut self) -> Result<Vec<(String, MethodOutcome)>> {
+        let states = std::mem::take(&mut self.states);
+        self.scenarios
+            .iter()
+            .zip(states)
+            .map(|(s, st)| {
+                let last = st.stages.last().ok_or_else(|| {
+                    Error::Coordinator(format!(
+                        "smc `{}`: outcomes requested before any stage completed",
+                        s.name
+                    ))
+                })?;
+                Ok((
+                    s.name.clone(),
+                    MethodOutcome {
+                        posterior: last.posterior.clone(),
+                        tolerance: last.tolerance,
+                    },
+                ))
+            })
+            .collect()
+    }
 }
 
 /// Run SMC-ABC for many scenarios, fanning every stage out across one
@@ -199,8 +495,8 @@ pub fn run_smc_scenarios(
 ///
 /// With a policy set, the study writes two kinds of snapshot
 /// (DESIGN.md §10): the **study snapshot** at `ckpt.path` after every
-/// completed stage (per-scenario prior box, ε, stage records — all f32
-/// state bit-exact), and a **stage snapshot** at
+/// completed stage (per-scenario prior box, ε, stage records including
+/// weights — all f32 state bit-exact), and a **stage snapshot** at
 /// [`CheckpointConfig::stage_path`] while a stage's schedule is in
 /// flight. On resume, completed stages restore from the study snapshot
 /// (no work replays) and the in-flight stage resumes mid-schedule from
@@ -213,120 +509,15 @@ pub fn run_smc_scenarios_with_checkpoint(
     workers: usize,
     ckpt: Option<CheckpointConfig>,
 ) -> Result<Vec<(String, SmcResult)>> {
-    if scenarios.is_empty() {
-        return Err(Error::Config("smc needs at least one scenario".into()));
-    }
-    smc.validate()?;
-    let fingerprint = checkpoint::smc_fingerprint(scenarios, smc);
-
-    let mut states: Vec<ScenarioState> = scenarios
-        .iter()
-        .map(|s| ScenarioState {
-            prior: Prior::paper(),
-            tolerance: s.config.tolerance.unwrap_or(s.dataset.default_tolerance),
-            stages: Vec::new(),
-        })
-        .collect();
-
-    // Resume: restore the refinement state of every completed stage.
-    let mut start_stage = 0usize;
-    if let Some(c) = &ckpt {
-        if c.resume && c.path.exists() {
-            let snap = SmcSnapshot::load(&c.path)?;
-            restore_study(&mut states, &mut start_stage, scenarios, fingerprint, &snap)?;
-        }
-    }
-
-    for stage in start_stage..=smc.stages {
-        // Fan out: one job per scenario, all sharing the pool.
-        let mut jobs = Vec::with_capacity(scenarios.len());
-        for (scenario, state) in scenarios.iter().zip(&states) {
-            let mut cfg = scenario.config.clone();
-            cfg.tolerance = Some(state.tolerance);
-            // Deterministic, stage-distinct seeding. Hash-mix the stage
-            // instead of adding it: `seed + stage` would make replicate
-            // seeds s and s+1 share identical key streams in adjacent
-            // stages, silently correlating "independent" replicates.
-            cfg.seed = crate::rng::splitmix64(
-                scenario.config.seed ^ (stage as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-            );
-            jobs.push(JobSpec::new(
-                scenario.name.clone(),
-                cfg,
-                scenario.dataset.clone(),
-                state.prior.clone(),
-                StopRule::AcceptedTarget(smc.samples_per_stage),
-            )?);
-        }
-        // Stage schedules never read the job configs' checkpoint knobs:
-        // the study-level policy owns the files. With a policy set, the
-        // in-flight stage snapshots to its own sibling path and resumes
-        // from it; without one, checkpointing is off entirely.
-        let scheduler = match &ckpt {
-            Some(c) => Scheduler::new(backend.clone(), workers).with_checkpoint(
-                CheckpointConfig {
-                    path: c.stage_path(stage),
-                    interval: c.interval,
-                    resume: c.resume,
-                    interrupt_after: c.interrupt_after,
-                },
-            ),
-            None => Scheduler::new(backend.clone(), workers).without_checkpoint(),
-        };
-        let report = scheduler.run(jobs)?;
-
-        for ((scenario, state), job) in
-            scenarios.iter().zip(states.iter_mut()).zip(report.jobs)
-        {
-            let result = job.outcome?;
-            let posterior = Posterior::new(result.accepted.clone());
-            state.stages.push(SmcStage {
-                stage,
-                tolerance: state.tolerance,
-                posterior: posterior.clone(),
-                prior_low: *state.prior.low(),
-                prior_high: *state.prior.high(),
-                runs: result.metrics.runs,
-            });
-
-            if stage == smc.stages {
-                continue;
-            }
-            // next stage: shrink the box around survivors, tighten ε
-            let (lo, hi) = posterior.bounding_box();
-            let mut low = lo;
-            let mut high = hi;
-            for p in 0..N_PARAMS {
-                let margin = (hi[p] - lo[p]) * smc.box_margin;
-                low[p] = (lo[p] - margin).max(state.prior.low()[p]);
-                high[p] = (hi[p] + margin).min(state.prior.high()[p]);
-            }
-            state.prior = Prior::new(low, high)?;
-            let dists: Vec<f32> =
-                posterior.samples().iter().map(|s| s.distance).collect();
-            state.tolerance =
-                refine_tolerance(&scenario.name, &dists, smc.quantile, state.tolerance)?;
-        }
-
-        if let Some(c) = &ckpt {
-            // Persist the study state the *next* stage will start from,
-            // then drop this stage's (now redundant) schedule snapshot.
-            // Order matters for crash safety: once the study snapshot
-            // says `stages_done = stage + 1`, the stage file is never
-            // read again, so a crash between the two writes is benign.
-            study_snapshot(fingerprint, stage + 1, scenarios, &states).save(&c.path)?;
-            let _ = std::fs::remove_file(c.stage_path(stage));
-        }
-    }
-    Ok(scenarios
-        .iter()
-        .zip(states)
-        .map(|(s, st)| (s.name.clone(), SmcResult { stages: st.stages }))
-        .collect())
+    let mut method = SmcAbc::new(scenarios.to_vec(), smc.clone())?;
+    drive(backend, workers, &mut method, ckpt.as_ref())?;
+    Ok(method.into_results())
 }
 
 /// Rebuild per-scenario refinement state from a study snapshot,
-/// validating that the snapshot belongs to this exact study.
+/// validating that the snapshot belongs to this exact study. The ESS
+/// is recomputed from the round-tripped (bit-exact) weights rather
+/// than stored — one less field to drift.
 fn restore_study(
     states: &mut [ScenarioState],
     start_stage: &mut usize,
@@ -370,6 +561,8 @@ fn restore_study(
                 prior_low: st.prior_low,
                 prior_high: st.prior_high,
                 runs: st.runs,
+                ess: effective_sample_size(&st.weights),
+                weights: st.weights.clone(),
             })
             .collect();
     }
@@ -404,6 +597,7 @@ fn study_snapshot(
                         prior_low: s.prior_low,
                         prior_high: s.prior_high,
                         samples: s.posterior.samples().to_vec(),
+                        weights: s.weights.clone(),
                     })
                     .collect(),
             })
@@ -426,8 +620,18 @@ pub fn run_smc(
         config: base_config,
         dataset,
     };
-    let mut results = run_smc_scenarios(backend, &[scenario], smc, workers)?;
-    Ok(results.pop().expect("single scenario").1)
+    let results = run_smc_scenarios(backend, &[scenario], smc, workers)?;
+    sole_result(results)
+}
+
+/// The single result of a one-scenario fan-out. An empty fan-out is a
+/// typed coordinator error (regression: this was
+/// `.pop().expect("single scenario")` — the last panic site left from
+/// the PR 5/7 sweeps reachable through a public entry point).
+fn sole_result(mut results: Vec<(String, SmcResult)>) -> Result<SmcResult> {
+    results.pop().map(|(_, r)| r).ok_or_else(|| {
+        Error::Coordinator("smc scenario fan-out returned no results".into())
+    })
 }
 
 #[cfg(test)]
@@ -473,6 +677,16 @@ mod tests {
     }
 
     #[test]
+    fn sole_result_of_empty_fanout_is_a_typed_error() {
+        // regression: `run_smc` used `.pop().expect("single scenario")`
+        let err = sole_result(Vec::new()).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err}");
+        assert!(err.to_string().contains("no results"), "{err}");
+        let ok = sole_result(vec![("x".into(), SmcResult { stages: Vec::new() })]);
+        assert!(ok.unwrap().stages.is_empty());
+    }
+
+    #[test]
     fn refine_tolerance_filters_non_finite_distances() {
         // regression: one NaN sorts last under total_cmp, so the high
         // quantile used to *be* the NaN — and min(current * 0.95) then
@@ -510,6 +724,85 @@ mod tests {
     }
 
     #[test]
+    fn refine_tolerance_propagates_malformed_quantile_as_config_error() {
+        // quantile 2.0 → percentile 200: the bugfix this PR pins is
+        // that this is Error::Config, not an assert in stats::percentile
+        let err = refine_tolerance("x", &[1.0, 2.0], 2.0, 100.0).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    fn sample(distance: f32) -> AcceptedSample {
+        AcceptedSample {
+            theta: [distance; N_PARAMS],
+            distance,
+            device: 0,
+            run: 0,
+            index: 0,
+        }
+    }
+
+    #[test]
+    fn epanechnikov_weights_decrease_with_distance() {
+        let samples = vec![sample(0.0), sample(5.0), sample(10.0)];
+        let w = distance_kernel_weights(&samples, 10.0);
+        assert_eq!(w[0], 1.0); // d = 0: full weight
+        assert_eq!(w[1], 0.75); // 1 - 0.25
+        assert_eq!(w[2], 0.0); // d = ε: zero weight
+    }
+
+    #[test]
+    fn all_zero_weights_fall_back_to_equal() {
+        // every distance exactly ε: the kernel vanishes everywhere, and
+        // a zero-mass population must not poison ESS/resampling
+        let samples = vec![sample(10.0), sample(10.0)];
+        assert_eq!(distance_kernel_weights(&samples, 10.0), vec![1.0, 1.0]);
+        assert!(distance_kernel_weights(&[], 10.0).is_empty());
+    }
+
+    #[test]
+    fn ess_spans_degenerate_to_uniform() {
+        // equal weights: ESS = n
+        assert_eq!(effective_sample_size(&[0.5; 8]), 8.0);
+        // one dominant weight: ESS → 1
+        let ess = effective_sample_size(&[1.0, 1e-6, 1e-6]);
+        assert!((ess - 1.0).abs() < 1e-4, "{ess}");
+        assert_eq!(effective_sample_size(&[]), 0.0);
+        assert_eq!(effective_sample_size(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn systematic_resample_is_deterministic_and_monotone() {
+        let w = [0.1f32, 0.4, 0.2, 0.3];
+        let a = systematic_resample(&w, 0.37);
+        let b = systematic_resample(&w, 0.37);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), w.len());
+        assert!(a.windows(2).all(|p| p[0] <= p[1]), "{a:?}");
+        assert!(a.iter().all(|&i| i < w.len()));
+        assert!(systematic_resample(&[], 0.5).is_empty());
+    }
+
+    #[test]
+    fn systematic_resample_repeats_heavy_particles() {
+        // one particle carries ~all the mass: it must dominate the
+        // resampled population for any u
+        for u in [0.0, 0.25, 0.5, 0.99] {
+            let out = systematic_resample(&[0.001, 0.997, 0.001, 0.001], u);
+            let heavy = out.iter().filter(|&&i| i == 1).count();
+            assert!(heavy >= 3, "u={u}: {out:?}");
+        }
+    }
+
+    #[test]
+    fn resample_uniform_is_stage_and_seed_keyed() {
+        let u = resample_uniform(0xFEED, 0);
+        assert!((0.0..1.0).contains(&u));
+        assert_eq!(u, resample_uniform(0xFEED, 0)); // pure function
+        assert_ne!(u, resample_uniform(0xFEED, 1)); // stage-distinct
+        assert_ne!(u, resample_uniform(0xBEEF, 0)); // seed-distinct
+    }
+
+    #[test]
     fn default_schedule_sane() {
         let smc = SmcConfig::default();
         assert!(smc.stages >= 1);
@@ -525,7 +818,12 @@ mod tests {
         let smc = SmcConfig { stages: 0, samples_per_stage: 8, ..Default::default() };
         let result = run_smc(native(), cfg, ds, &smc).unwrap();
         assert_eq!(result.stages.len(), 1);
+        let stage = &result.stages[0];
         assert!(result.final_posterior().expect("one stage").len() >= 8);
+        // the weighted upgrade: weights align with the posterior and
+        // the ESS is within (0, n]
+        assert_eq!(stage.weights.len(), stage.posterior.len());
+        assert!(stage.ess > 0.0 && stage.ess <= stage.posterior.len() as f32);
     }
 
     #[test]

@@ -176,6 +176,11 @@ fn fold_config(
     h = fnv1a64(h, &cfg.seed.to_le_bytes());
     h = fnv1a64(h, &cfg.max_runs.to_le_bytes());
     h = fnv1a64(h, format!("{:?}", cfg.return_strategy).as_bytes());
+    // folded only when non-default so every fingerprint minted before
+    // the method seam existed (all implicitly rejection) stays valid
+    if cfg.method != crate::abc::method::MethodKind::Rejection {
+        h = fnv1a64(h, cfg.method.as_str().as_bytes());
+    }
     for col in dataset.truncated(cfg.days).observed.flatten() {
         h = fnv1a64(h, &col.to_bits().to_le_bytes());
     }
@@ -246,26 +251,46 @@ pub fn smc_fingerprint(
 /// Note the fingerprint includes the job *name*: a resubmission must
 /// carry the same name (or none, letting the server derive it from the
 /// dataset) to hit.
+///
+/// Capacity: a cache built with [`ResultCache::with_cap`] holds at
+/// most `cap` entries and evicts the least-recently-*used* one (a hit
+/// refreshes recency) before admitting a new fingerprint; `cap = 0`
+/// and [`ResultCache::new`] mean unbounded. A long-lived daemon must
+/// cap: every distinct submission is a distinct fingerprint, and each
+/// entry pins its full accepted stream.
 #[derive(Debug, Default)]
 pub struct ResultCache {
-    entries: BTreeMap<u64, std::sync::Arc<crate::coordinator::InferenceResult>>,
+    /// fingerprint → (last-use tick, shared result).
+    entries: BTreeMap<u64, (u64, std::sync::Arc<crate::coordinator::InferenceResult>)>,
+    cap: usize,
+    tick: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl ResultCache {
-    /// An empty cache.
+    /// An empty, unbounded cache.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Look up a fingerprint, counting the hit or miss.
+    /// An empty cache evicting least-recently-used entries beyond
+    /// `cap` (0 = unbounded).
+    pub fn with_cap(cap: usize) -> Self {
+        Self { cap, ..Self::default() }
+    }
+
+    /// Look up a fingerprint, counting the hit or miss. A hit
+    /// refreshes the entry's recency.
     pub fn lookup(
         &mut self,
         fingerprint: u64,
     ) -> Option<std::sync::Arc<crate::coordinator::InferenceResult>> {
-        match self.entries.get(&fingerprint) {
-            Some(r) => {
+        self.tick += 1;
+        match self.entries.get_mut(&fingerprint) {
+            Some((tick, r)) => {
+                *tick = self.tick;
                 self.hits += 1;
                 Some(r.clone())
             }
@@ -277,13 +302,29 @@ impl ResultCache {
     }
 
     /// Insert (or replace — the determinism contract makes replacement
-    /// a no-op in value terms) the result for a fingerprint.
+    /// a no-op in value terms) the result for a fingerprint, evicting
+    /// the least-recently-used entry first when at capacity.
     pub fn insert(
         &mut self,
         fingerprint: u64,
         result: std::sync::Arc<crate::coordinator::InferenceResult>,
     ) {
-        self.entries.insert(fingerprint, result);
+        self.tick += 1;
+        if self.cap > 0
+            && !self.entries.contains_key(&fingerprint)
+            && self.entries.len() >= self.cap
+        {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (tick, _))| *tick)
+                .map(|(&fp, _)| fp);
+            if let Some(fp) = victim {
+                self.entries.remove(&fp);
+                self.evictions += 1;
+            }
+        }
+        self.entries.insert(fingerprint, (self.tick, result));
     }
 
     /// Number of cached results.
@@ -304,6 +345,11 @@ impl ResultCache {
     /// Lookups that found nothing so far.
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    /// Entries evicted by the capacity bound so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 }
 
@@ -392,6 +438,10 @@ pub struct SmcStageSnapshot {
     pub prior_high: Theta,
     /// The stage's accepted samples (its posterior).
     pub samples: Vec<AcceptedSample>,
+    /// Epanechnikov importance weight of each accepted sample (bit-
+    /// exact, aligned with `samples`). Snapshots written before the
+    /// weighted upgrade restore as equal weights.
+    pub weights: Vec<f32>,
 }
 
 // ---------------------------------------------------------------------------
@@ -846,6 +896,10 @@ impl SmcSnapshot {
                                             "samples".into(),
                                             samples_json(&st.samples),
                                         );
+                                        sto.insert(
+                                            "weights".into(),
+                                            bits_vec(&st.weights),
+                                        );
                                         Json::Obj(sto)
                                     })
                                     .collect(),
@@ -873,13 +927,21 @@ impl SmcSnapshot {
                     .as_arr()?
                     .iter()
                     .map(|st| {
+                        let samples = samples_from(st.req("samples")?)?;
+                        // absent in snapshots written before the
+                        // weighted upgrade: restore as equal weights
+                        let weights = match st.get("weights") {
+                            Some(w) => f32_vec_from(w)?,
+                            None => vec![1.0; samples.len()],
+                        };
                         Ok(SmcStageSnapshot {
                             stage: st.req("stage")?.as_usize()?,
                             tolerance: f32_from(st.req("tolerance")?)?,
                             runs: st.req("runs")?.as_u64()?,
                             prior_low: theta_from(st.req("prior_low")?)?,
                             prior_high: theta_from(st.req("prior_high")?)?,
-                            samples: samples_from(st.req("samples")?)?,
+                            samples,
+                            weights,
                         })
                     })
                     .collect::<Result<Vec<_>>>()?;
@@ -991,6 +1053,42 @@ mod tests {
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         assert!(cache.lookup(8).is_none());
         assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        // ResultCache::new() is unbounded: no eviction, ever
+        for fp in 0..100 {
+            cache.insert(fp, result.clone());
+        }
+        assert_eq!(cache.len(), 100);
+        assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn capped_result_cache_evicts_least_recently_used() {
+        use crate::coordinator::InferenceResult;
+        use std::sync::Arc;
+        let result = Arc::new(InferenceResult {
+            accepted: vec![sample(0, 1, 0.5)],
+            metrics: RunMetrics::default(),
+            tolerance: 2.0,
+        });
+        let mut cache = ResultCache::with_cap(2);
+        cache.insert(1, result.clone());
+        cache.insert(2, result.clone());
+        // touch 1: it becomes the most recently used, 2 the LRU victim
+        assert!(cache.lookup(1).is_some());
+        cache.insert(3, result.clone());
+        assert_eq!((cache.len(), cache.evictions()), (2, 1));
+        assert!(cache.lookup(2).is_none(), "LRU entry must be evicted");
+        assert!(cache.lookup(1).is_some(), "hot entry must survive");
+        assert!(cache.lookup(3).is_some());
+        // re-inserting a resident fingerprint never evicts
+        cache.insert(3, result.clone());
+        assert_eq!((cache.len(), cache.evictions()), (2, 1));
+        // cap 0 = unbounded (the daemon's --cache-cap 0 escape hatch)
+        let mut unbounded = ResultCache::with_cap(0);
+        for fp in 0..10 {
+            unbounded.insert(fp, result.clone());
+        }
+        assert_eq!((unbounded.len(), unbounded.evictions()), (10, 0));
     }
 
     #[test]
@@ -1030,11 +1128,50 @@ mod tests {
                     prior_low: [0.0; 8],
                     prior_high: [1.0; 8],
                     samples: vec![sample(2, 4, 0.75)],
+                    weights: vec![0.8125, 1.0e-40],
                 }],
             }],
         };
         let parsed = SmcSnapshot::from_json(&snap.to_json()).unwrap();
         assert_eq!(parsed, snap);
+        // a denormal weight survived the bit encoding exactly
+        let w = &parsed.scenarios[0].stages[0].weights;
+        assert_eq!(w[1].to_bits(), 1.0e-40f32.to_bits());
+    }
+
+    #[test]
+    fn smc_snapshot_without_weights_restores_equal_weights() {
+        // forward compatibility with snapshots written before the
+        // weighted upgrade: the `weights` key is simply absent
+        let snap = SmcSnapshot {
+            fingerprint: 7,
+            stages_done: 1,
+            scenarios: vec![SmcScenarioSnapshot {
+                name: "italy".into(),
+                tolerance: 1.5e5,
+                prior_low: [0.0; 8],
+                prior_high: [1.0; 8],
+                stages: vec![SmcStageSnapshot {
+                    stage: 0,
+                    tolerance: 3e5,
+                    runs: 12,
+                    prior_low: [0.0; 8],
+                    prior_high: [1.0; 8],
+                    samples: vec![sample(2, 4, 0.75), sample(2, 5, 0.5)],
+                    weights: vec![0.5, 0.25],
+                }],
+            }],
+        };
+        // compact serialization, BTreeMap key order: `weights` sorts
+        // last in the stage object, so the separating comma precedes it
+        let stripped = snap.to_json().replace(
+            &format!(",\"weights\":{}", bits_vec(&[0.5, 0.25]).to_string()),
+            "",
+        );
+        assert!(!stripped.contains("weights"), "strip failed: {stripped}");
+        let parsed = SmcSnapshot::from_json(&stripped).unwrap();
+        assert_eq!(parsed.scenarios[0].stages[0].weights, vec![1.0, 1.0]);
+        assert_eq!(parsed.scenarios[0].stages[0].samples.len(), 2);
     }
 
     #[test]

@@ -90,6 +90,10 @@ pub struct RunConfig {
     /// Resume from an existing checkpoint file instead of starting
     /// fresh (`--resume`). Ignored when no checkpoint path is set.
     pub resume: bool,
+    /// Inference method running this config: `rejection` (default —
+    /// the paper's base loop), `smc`, or `mcmc`; `$ABC_IPU_METHOD`
+    /// overrides either way (DESIGN.md §13).
+    pub method: crate::abc::MethodKind,
 }
 
 impl Default for RunConfig {
@@ -111,6 +115,7 @@ impl Default for RunConfig {
             checkpoint: None,
             checkpoint_interval: 1,
             resume: false,
+            method: crate::abc::MethodKind::default(),
         }
     }
 }
@@ -236,6 +241,9 @@ impl RunConfig {
         if let Some(b) = v.get("resume") {
             cfg.resume = b.as_bool()?;
         }
+        if let Some(m) = v.get("method") {
+            cfg.method = crate::abc::MethodKind::parse(m.as_str()?)?;
+        }
         if let Some(rs) = v.get("return_strategy") {
             let mode = rs.req("mode")?.as_str()?;
             cfg.return_strategy = match mode {
@@ -293,6 +301,7 @@ impl RunConfig {
             Json::Num(self.checkpoint_interval as f64),
         );
         m.insert("resume".into(), Json::Bool(self.resume));
+        m.insert("method".into(), Json::Str(self.method.as_str().into()));
         let mut rs = BTreeMap::new();
         match self.return_strategy {
             ReturnStrategy::Outfeed { chunk } => {
@@ -519,6 +528,23 @@ mod tests {
             assert_eq!(parsed, cfg, "{raw}");
         }
         assert!(RunConfig::from_json(r#"{"simd": "fast"}"#).is_err());
+    }
+
+    #[test]
+    fn method_knob_defaults_parses_and_round_trips() {
+        use crate::abc::MethodKind;
+        assert_eq!(RunConfig::default().method, MethodKind::Rejection);
+        for (raw, want) in [
+            ("rejection", MethodKind::Rejection),
+            ("smc", MethodKind::Smc),
+            ("mcmc", MethodKind::Mcmc),
+        ] {
+            let cfg = RunConfig::from_json(&format!(r#"{{"method": "{raw}"}}"#)).unwrap();
+            assert_eq!(cfg.method, want, "{raw}");
+            let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(parsed, cfg, "{raw}");
+        }
+        assert!(RunConfig::from_json(r#"{"method": "nuts"}"#).is_err());
     }
 
     #[test]

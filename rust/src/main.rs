@@ -24,7 +24,10 @@
 //! paper's compiled-XLA path. Flags are `--name value` (or
 //! `--name=value`); `repro <cmd> --help` lists each command's options.
 
-use abc_ipu::abc::{predict::predict, smc, Posterior};
+use abc_ipu::abc::{
+    drive, predict::predict, smc, AbcMcmc, InferenceMethod, McmcConfig, MethodKind,
+    MethodScenario, Posterior, RejectionAbc,
+};
 use abc_ipu::backend::{self, AbcJob, Backend};
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::Coordinator;
@@ -33,9 +36,9 @@ use abc_ipu::hwmodel::{
     batch_sweep, gpu_kernel_table, ipu_compute_set_table, liveness_curve, per_tile_memory,
     scaling_table, DeviceSpec, Workload,
 };
-use abc_ipu::model::{Prior, PARAM_NAMES};
+use abc_ipu::model::{Prior, N_PARAMS, PARAM_NAMES};
 use abc_ipu::report::{fmt_bytes, fmt_secs, write_csv, Table};
-use abc_ipu::scheduler::service::InferenceService;
+use abc_ipu::scheduler::service::{InferenceService, DEFAULT_CACHE_CAP};
 use abc_ipu::server::HttpServer;
 use abc_ipu::util::cli::{ParsedArgs, Spec};
 use abc_ipu::{Error, Result};
@@ -59,12 +62,15 @@ commands (paper experiment in brackets):
   energy            iso-power samples/joule table
   autotune          measure + pick best batch variant
   smc               SMC-ABC refinement schedule
+  compare           rejection vs SMC vs MCMC on one pool (BENCH_methods.json)
   serve             inference-as-a-service HTTP daemon (DESIGN.md §12)
   info              backend + dataset inventory
 
 common flags: --backend native|pjrt  --artifacts DIR  --reports DIR
 infer flags:  --dataset NAME --tolerance F --samples N --devices N
               --batch N --days N --chunk N --top-k K --seed N --max-runs N
+              --method rejection|smc|mcmc (inference method, DESIGN.md
+              §13; $ABC_IPU_METHOD overrides)
               --lanes W (SoA kernel lane width, 0 = auto; results are
               width-invariant) --shards K (split each run's batch into K
               lane ranges across the worker pool, 0 = solo; results are
@@ -78,15 +84,19 @@ resume flags: --checkpoint FILE (crash-safe frontier snapshots; or
 scale flags:  --device-counts N,N,...  --sharded (scale ONE sharded job
               across the pool — the measured Table-7 mode)
 serve flags:  --port N (0 = OS-assigned; $ABC_IPU_PORT overrides)
-              --workers N (pool size, default 2); submit RunConfig JSON
-              to POST /v1/jobs, stop with POST /v1/shutdown
+              --workers N (pool size, default 2) --cache-cap N (result
+              cache LRU capacity, 0 = unbounded, default 256); submit
+              RunConfig JSON to POST /v1/jobs, stop with POST /v1/shutdown
+compare flags: --days N --samples N --seed N --batch N --workers N
+              --stages N (smc) --chains N --steps N (mcmc) --out FILE
+              ($ABC_IPU_BENCH_QUICK=1 shrinks the workload)
 ";
 
 /// Flags shared by inference-shaped commands.
 const INFER_FLAGS: &[&str] = &[
     "artifacts", "reports", "backend", "dataset", "tolerance", "samples", "devices", "batch",
     "days", "chunk", "top-k", "seed", "max-runs", "lanes", "shards", "config",
-    "checkpoint", "checkpoint-interval",
+    "checkpoint", "checkpoint-interval", "method",
 ];
 
 /// Boolean flags shared by the commands that run resumable jobs.
@@ -117,6 +127,9 @@ fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
     cfg.max_runs = a.parse_or("max-runs", cfg.max_runs)?;
     cfg.lanes = a.parse_or("lanes", cfg.lanes)?;
     cfg.shards = a.parse_or("shards", cfg.shards)?;
+    if let Some(m) = a.get("method") {
+        cfg.method = MethodKind::parse(m)?;
+    }
     if let Some(path) = a.get("checkpoint") {
         // --checkpoint "" disables a config-file checkpoint
         cfg.checkpoint = (!path.is_empty()).then(|| path.to_string());
@@ -235,6 +248,7 @@ fn main() {
         "energy" => cmd_energy(argv),
         "autotune" => cmd_autotune(argv),
         "smc" => cmd_smc(argv),
+        "compare" => cmd_compare(argv),
         "serve" => cmd_serve(argv),
         "info" => cmd_info(argv),
         other => {
@@ -258,8 +272,25 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
     let a = parse(argv, INFER_FLAGS, RESUME_BOOLS)?;
     let cfg = infer_config(&a)?;
     let ds = load_dataset(&cfg.dataset, cfg.days)?;
-    let samples = cfg.accepted_samples;
     let engine = resolve_backend(&a, &cfg)?;
+    // `--method` / config / $ABC_IPU_METHOD pick the algorithm; all
+    // three run over the same coordinator and worker pool (DESIGN.md
+    // §13). The rejection arm is the historical `repro infer` path,
+    // byte-for-byte.
+    match MethodKind::resolve(cfg.method)? {
+        MethodKind::Rejection => infer_rejection(&a, cfg, ds, engine),
+        MethodKind::Smc => infer_smc(&a, cfg, ds, engine),
+        MethodKind::Mcmc => infer_mcmc(&a, cfg, ds, engine),
+    }
+}
+
+fn infer_rejection(
+    a: &ParsedArgs,
+    cfg: RunConfig,
+    ds: Dataset,
+    engine: Arc<dyn Backend>,
+) -> Result<()> {
+    let samples = cfg.accepted_samples;
     let coord = Coordinator::new(engine, cfg.clone(), ds, Prior::paper())?;
     println!(
         "inferring on `{}` backend with tolerance {:.4e} on {} devices (batch {}/device)",
@@ -271,7 +302,71 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
     let result = coord.run_until(samples)?;
     print_result(&result);
     let post = Posterior::new(result.accepted);
-    let path = write_csv(reports_dir(&a), "posterior", &post.to_csv())?;
+    let path = write_csv(reports_dir(a), "posterior", &post.to_csv())?;
+    println!("posterior written to {}", path.display());
+    Ok(())
+}
+
+fn infer_smc(
+    a: &ParsedArgs,
+    cfg: RunConfig,
+    ds: Dataset,
+    engine: Arc<dyn Backend>,
+) -> Result<()> {
+    let smc_cfg = smc::SmcConfig {
+        samples_per_stage: cfg.accepted_samples,
+        ..Default::default()
+    };
+    println!(
+        "inferring with weighted SMC-ABC ({} stages) on `{}` backend",
+        smc_cfg.stages,
+        engine.name()
+    );
+    let result = smc::run_smc(engine, cfg, ds, &smc_cfg)?;
+    let last = result
+        .stages
+        .last()
+        .ok_or_else(|| Error::Coordinator("smc produced no stages".into()))?;
+    println!(
+        "final stage ε={:.4e}: accepted {} (ESS {:.1})",
+        last.tolerance,
+        last.posterior.len(),
+        last.ess
+    );
+    let path = write_csv(reports_dir(a), "posterior", &last.posterior.to_csv())?;
+    println!("posterior written to {}", path.display());
+    Ok(())
+}
+
+fn infer_mcmc(
+    a: &ParsedArgs,
+    cfg: RunConfig,
+    ds: Dataset,
+    engine: Arc<dyn Backend>,
+) -> Result<()> {
+    let workers = cfg.devices;
+    let mcmc_cfg = McmcConfig::default();
+    println!(
+        "inferring with ABC-MCMC ({} chains x {} steps) on `{}` backend",
+        mcmc_cfg.chains,
+        mcmc_cfg.steps,
+        engine.name()
+    );
+    let scenario = MethodScenario { name: ds.name.clone(), config: cfg, dataset: ds };
+    let mut method = AbcMcmc::new(vec![scenario], mcmc_cfg)?;
+    let stats = drive(engine, workers, &mut method, None)?;
+    let (_, outcome) = method
+        .outcomes()?
+        .pop()
+        .ok_or_else(|| Error::Coordinator("mcmc fan-out returned no results".into()))?;
+    println!(
+        "visited {} chain states over {} stages ({} simulated) at ε={:.4e}",
+        outcome.posterior.len(),
+        stats.stages,
+        stats.simulator_calls,
+        outcome.tolerance
+    );
+    let path = write_csv(reports_dir(a), "posterior", &outcome.posterior.to_csv())?;
     println!("posterior written to {}", path.display());
     Ok(())
 }
@@ -752,15 +847,178 @@ fn cmd_smc(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// `repro compare`: every [`InferenceMethod`] — rejection, weighted
+/// SMC, MCMC — fit to the same synthetic θ*-generated scenario on one
+/// shared worker pool, compared on θ*-recovery, wall-clock and
+/// simulator-call budget. Writes the schema-validated
+/// `BENCH_methods.json` artifact (DESIGN.md §13).
+fn cmd_compare(argv: Vec<String>) -> Result<()> {
+    use abc_ipu::report::methods::{method_comparison, methods_json, validate_methods, MethodRow};
+    let a = parse(
+        argv,
+        &[
+            "artifacts", "reports", "backend", "days", "samples", "seed", "batch",
+            "workers", "stages", "chains", "steps", "out",
+        ],
+        &[],
+    )?;
+    let quick =
+        std::env::var("ABC_IPU_BENCH_QUICK").map_or(false, |v| v != "0" && !v.is_empty());
+    let days: usize = a.parse_or("days", 16)?;
+    let samples: usize = a.parse_or("samples", if quick { 24 } else { 40 })?;
+    let seed: u64 = a.parse_or("seed", 0x5EED_C0DE)?;
+    let batch: usize = a.parse_or("batch", if quick { 1_000 } else { 2_000 })?;
+    let workers: usize = a.parse_or("workers", 2)?;
+    let stages: usize = a.parse_or("stages", if quick { 2 } else { 3 })?;
+    let chains: usize = a.parse_or("chains", if quick { 2 } else { 4 })?;
+    let steps: usize = a.parse_or("steps", if quick { 12 } else { 40 })?;
+    let out = a.get_or("out", "BENCH_methods.json");
+
+    // One shared scenario: synthetic observations generated from the
+    // known θ* (the recovery-test setup), so "recovered" means the
+    // posterior credible box covers the generating parameters.
+    let ds = abc_ipu::data::synthetic::default_dataset(days, 0x5eed);
+    let tolerance = ds.default_tolerance * 30.0;
+    let base = RunConfig {
+        dataset: "synthetic".into(),
+        tolerance: Some(tolerance),
+        devices: 1,
+        batch_per_device: batch,
+        days,
+        return_strategy: ReturnStrategy::Outfeed { chunk: (batch / 10).max(1) },
+        seed,
+        accepted_samples: samples,
+        max_runs: 4_000,
+        ..Default::default()
+    };
+    let engine = backend_from_flag(&a)?;
+    println!(
+        "comparing methods on `{}` backend: days={days} samples={samples} \
+         workers={workers} ε={tolerance:.3e}{}",
+        engine.name(),
+        if quick { " (quick)" } else { "" }
+    );
+
+    let mut rows = Vec::new();
+    let row = |name: &str,
+               outcome: &abc_ipu::abc::MethodOutcome,
+               stats: &abc_ipu::abc::MethodStats| {
+        let covered = theta_star_coverage(&outcome.posterior);
+        MethodRow {
+            method: name.to_string(),
+            accepted: outcome.posterior.len(),
+            stages: stats.stages,
+            runs: stats.runs,
+            simulator_calls: stats.simulator_calls,
+            wall_seconds: stats.wall.as_secs_f64(),
+            params_covered: covered,
+            params_total: N_PARAMS,
+            recovered: covered == N_PARAMS,
+            final_tolerance: outcome.tolerance,
+        }
+    };
+
+    {
+        let mut cfg = base.clone();
+        cfg.method = MethodKind::Rejection;
+        let scenario =
+            MethodScenario { name: ds.name.clone(), config: cfg, dataset: ds.clone() };
+        let mut m = RejectionAbc::new(vec![scenario])?;
+        let stats = drive(engine.clone(), workers, &mut m, None)?;
+        let (_, outcome) = m
+            .outcomes()?
+            .pop()
+            .ok_or_else(|| Error::Coordinator("rejection returned no outcome".into()))?;
+        rows.push(row("rejection", &outcome, &stats));
+    }
+    {
+        let mut cfg = base.clone();
+        cfg.method = MethodKind::Smc;
+        let scenario =
+            smc::SmcScenario { name: ds.name.clone(), config: cfg, dataset: ds.clone() };
+        let smc_cfg = smc::SmcConfig {
+            stages,
+            samples_per_stage: samples,
+            ..Default::default()
+        };
+        let mut m = smc::SmcAbc::new(vec![scenario], smc_cfg)?;
+        let stats = drive(engine.clone(), workers, &mut m, None)?;
+        let (_, result) = m
+            .into_results()
+            .pop()
+            .ok_or_else(|| Error::Coordinator("smc returned no outcome".into()))?;
+        let last = result
+            .stages
+            .last()
+            .ok_or_else(|| Error::Coordinator("smc produced no stages".into()))?;
+        let outcome = abc_ipu::abc::MethodOutcome {
+            posterior: last.posterior.clone(),
+            tolerance: last.tolerance,
+        };
+        rows.push(row("smc", &outcome, &stats));
+    }
+    {
+        let mut cfg = base.clone();
+        cfg.method = MethodKind::Mcmc;
+        let scenario =
+            MethodScenario { name: ds.name.clone(), config: cfg, dataset: ds.clone() };
+        let mcmc_cfg = McmcConfig { chains, steps, ..Default::default() };
+        let mut m = AbcMcmc::new(vec![scenario], mcmc_cfg)?;
+        let stats = drive(engine.clone(), workers, &mut m, None)?;
+        let (_, outcome) = m
+            .outcomes()?
+            .pop()
+            .ok_or_else(|| Error::Coordinator("mcmc returned no outcome".into()))?;
+        rows.push(row("mcmc", &outcome, &stats));
+    }
+
+    let table = method_comparison("Method comparison (shared pool, shared scenario)", &rows);
+    print!("{}", table.render());
+    write_csv(reports_dir(&a), "method_comparison", &table.to_csv())?;
+
+    let doc = methods_json(quick, days, samples, &rows).to_string();
+    validate_methods(&doc)?; // self-check against the shared schema
+    std::fs::write(&out, &doc)?;
+    println!("method comparison written to {out}");
+    Ok(())
+}
+
+/// How many parameters' posterior credible boxes (with the recovery
+/// test's slack margin) cover the synthetic generator's θ*.
+fn theta_star_coverage(post: &Posterior) -> usize {
+    use abc_ipu::data::synthetic::DEFAULT_THETA_STAR;
+    const SLACK: f32 = 0.10;
+    if post.is_empty() {
+        return 0;
+    }
+    let prior = Prior::paper();
+    let mut covered = 0;
+    for p in 0..N_PARAMS {
+        let mut lo = f32::MAX;
+        let mut hi = f32::MIN;
+        for s in post.samples() {
+            lo = lo.min(s.theta[p]);
+            hi = hi.max(s.theta[p]);
+        }
+        let slack = SLACK * (prior.high()[p] - prior.low()[p]);
+        let star = DEFAULT_THETA_STAR[p];
+        if lo - slack <= star && star <= hi + slack {
+            covered += 1;
+        }
+    }
+    covered
+}
+
 /// Inference-as-a-service: a long-running daemon over one shared worker
 /// pool with incremental submission, streaming, dedupe and cancellation
 /// (DESIGN.md §12).
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
-    let a = parse(argv, &["artifacts", "backend", "port", "workers"], &[])?;
+    let a = parse(argv, &["artifacts", "backend", "port", "workers", "cache-cap"], &[])?;
     let port = abc_ipu::server::resolve_port(a.parse_or("port", 0)?)?;
     let workers: usize = a.parse_or("workers", 2)?;
+    let cache_cap: usize = a.parse_or("cache-cap", DEFAULT_CACHE_CAP)?;
     let engine = backend_from_flag(&a)?;
-    let service = InferenceService::start(engine, workers);
+    let service = InferenceService::start_with_cache_cap(engine, workers, cache_cap);
     let server = HttpServer::bind(port, service)?;
     println!(
         "serving inference on http://{} (`{}` backend, {} workers)",

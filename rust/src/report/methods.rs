@@ -1,0 +1,356 @@
+//! Schema validation for the repo-root `BENCH_methods.json` artifact.
+//!
+//! `repro compare` runs every [`crate::abc::InferenceMethod`] —
+//! rejection-ABC, ESS-adaptive weighted SMC, ABC-MCMC — over the same
+//! synthetic scenario and worker pool, then writes one artifact
+//! comparing θ*-recovery, wall-clock and simulator-call budgets per
+//! method (DESIGN.md §13). Like [`super::bench_schema`], the shape is a
+//! contract shared by three consumers — the CLI's own self-check after
+//! writing, the CI compare smoke, and human readers of the committed
+//! artifact — and this module is its single definition.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Current schema version of `BENCH_methods.json`. Bump whenever the
+/// artifact shape changes; the validator rejects anything else as
+/// stale so the committed artifact regenerates alongside shape changes.
+pub const METHODS_SCHEMA: u64 = 1;
+
+/// Every method the artifact must cover, by canonical name, in the
+/// order `repro compare` runs them.
+pub const REQUIRED_METHODS: [&str; 3] = ["rejection", "smc", "mcmc"];
+
+/// One method's row of the comparison: what it cost and what it found.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MethodRow {
+    /// Canonical method name (one of [`REQUIRED_METHODS`]).
+    pub method: String,
+    /// Accepted/visited samples in the final posterior.
+    pub accepted: usize,
+    /// Stages the method scheduled (1 for rejection; SMC stage count;
+    /// MCMC init + step count).
+    pub stages: usize,
+    /// Frontier-finalized coordinator runs across all stages.
+    pub runs: u64,
+    /// Total pseudo-datasets simulated — the paper's cost axis.
+    pub simulator_calls: u64,
+    /// Wall-clock for the whole method, seconds.
+    pub wall_seconds: f64,
+    /// Parameters whose credible box (with slack) covers θ*.
+    pub params_covered: usize,
+    /// Parameters checked — always `PARAM_NAMES.len()`.
+    pub params_total: usize,
+    /// Whether every parameter's box covered θ*.
+    pub recovered: bool,
+    /// Final (tightest) tolerance ε the method ran at.
+    pub final_tolerance: f32,
+}
+
+/// The validated summary of a `BENCH_methods.json` document.
+#[derive(Debug, Clone)]
+pub struct MethodsSummary {
+    /// Schema version (always [`METHODS_SCHEMA`] after validation).
+    pub schema: u64,
+    /// Whether the run was a quick-mode (CI smoke) measurement.
+    pub quick: bool,
+    /// One row per method, in document order.
+    pub rows: Vec<MethodRow>,
+}
+
+impl MethodsSummary {
+    /// The row for `method`, if present.
+    pub fn row(&self, method: &str) -> Option<&MethodRow> {
+        self.rows.iter().find(|r| r.method == method)
+    }
+}
+
+/// Render the paper-style comparison table `repro compare` prints.
+pub fn method_comparison(title: impl Into<String>, rows: &[MethodRow]) -> super::Table {
+    let mut table = super::Table::new(
+        title,
+        &[
+            "method", "accepted", "stages", "runs", "sim calls", "wall",
+            "theta* coverage", "recovered", "final eps",
+        ],
+    );
+    for r in rows {
+        table.row(&[
+            r.method.clone(),
+            r.accepted.to_string(),
+            r.stages.to_string(),
+            r.runs.to_string(),
+            r.simulator_calls.to_string(),
+            super::fmt_secs(r.wall_seconds),
+            format!("{}/{}", r.params_covered, r.params_total),
+            if r.recovered { "yes".into() } else { "NO".into() },
+            format!("{:.3e}", r.final_tolerance),
+        ]);
+    }
+    table
+}
+
+/// Serialize the artifact document (`suite: "methods"`, schema
+/// [`METHODS_SCHEMA`]). `days`/`samples` record the shared scenario the
+/// rows were measured on.
+pub fn methods_json(quick: bool, days: usize, samples: usize, rows: &[MethodRow]) -> Json {
+    let mut doc = BTreeMap::new();
+    doc.insert("suite".to_string(), Json::Str("methods".into()));
+    doc.insert("schema".to_string(), Json::Num(METHODS_SCHEMA as f64));
+    doc.insert("quick".to_string(), Json::Bool(quick));
+    doc.insert("days".to_string(), Json::Num(days as f64));
+    doc.insert("samples".to_string(), Json::Num(samples as f64));
+    let rows = rows
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("method".to_string(), Json::Str(r.method.clone()));
+            o.insert("accepted".to_string(), Json::Num(r.accepted as f64));
+            o.insert("stages".to_string(), Json::Num(r.stages as f64));
+            o.insert("runs".to_string(), Json::Num(r.runs as f64));
+            o.insert(
+                "simulator_calls".to_string(),
+                Json::Num(r.simulator_calls as f64),
+            );
+            o.insert("wall_seconds".to_string(), Json::Num(r.wall_seconds));
+            o.insert("params_covered".to_string(), Json::Num(r.params_covered as f64));
+            o.insert("params_total".to_string(), Json::Num(r.params_total as f64));
+            o.insert("recovered".to_string(), Json::Bool(r.recovered));
+            o.insert(
+                "final_tolerance".to_string(),
+                Json::Num(r.final_tolerance as f64),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    doc.insert("methods".to_string(), Json::Arr(rows));
+    Json::Obj(doc)
+}
+
+fn bad(msg: impl std::fmt::Display) -> Error {
+    Error::Parse(format!("BENCH_methods.json: {msg}"))
+}
+
+/// Validate a `BENCH_methods.json` document against schema v1.
+///
+/// Rejects (naming the offending field): malformed JSON, a wrong or
+/// missing `schema`/`suite`, a `methods` array that does not cover
+/// exactly [`REQUIRED_METHODS`] (each once), rows whose `params_total`
+/// is not the model's parameter count, coverage exceeding the total,
+/// a `recovered` flag inconsistent with the coverage counts, and
+/// non-finite or non-positive tolerances / negative wall-clock.
+pub fn validate_methods(text: &str) -> Result<MethodsSummary> {
+    let doc = Json::parse(text).map_err(|e| bad(e))?;
+
+    let suite = doc.req("suite").and_then(Json::as_str).map_err(|e| bad(e))?;
+    if suite != "methods" {
+        return Err(bad(format!("suite `{suite}` != `methods`")));
+    }
+    let schema = match doc.get("schema") {
+        None => return Err(bad("missing `schema` — regenerate with `repro compare`")),
+        Some(v) => v.as_u64().map_err(|e| bad(format!("schema: {e}")))?,
+    };
+    if schema != METHODS_SCHEMA {
+        return Err(bad(format!(
+            "stale schema {schema}, expected {METHODS_SCHEMA} — \
+             regenerate with `repro compare`"
+        )));
+    }
+    let quick = doc.req("quick").and_then(Json::as_bool).map_err(|e| bad(e))?;
+    for field in ["days", "samples"] {
+        let n = doc.req(field).and_then(Json::as_usize).map_err(|e| bad(e))?;
+        if n == 0 {
+            return Err(bad(format!("{field} must be >= 1")));
+        }
+    }
+
+    let raw = doc.req("methods").and_then(Json::as_arr).map_err(|e| bad(e))?;
+    let mut rows = Vec::with_capacity(raw.len());
+    for (i, row) in raw.iter().enumerate() {
+        let what = |field: &str| format!("methods[{i}].{field}");
+        let method = row
+            .req("method")
+            .and_then(Json::as_str)
+            .map_err(|e| bad(format!("{}: {e}", what("method"))))?
+            .to_string();
+        let num = |field: &str| -> Result<u64> {
+            row.req(field)
+                .and_then(Json::as_u64)
+                .map_err(|e| bad(format!("{}: {e}", what(field))))
+        };
+        let accepted = num("accepted")? as usize;
+        let stages = num("stages")? as usize;
+        if stages == 0 {
+            return Err(bad(format!("{} must be >= 1", what("stages"))));
+        }
+        let runs = num("runs")?;
+        let simulator_calls = num("simulator_calls")?;
+        let wall_seconds = row
+            .req("wall_seconds")
+            .and_then(Json::as_f64)
+            .map_err(|e| bad(format!("{}: {e}", what("wall_seconds"))))?;
+        if !wall_seconds.is_finite() || wall_seconds < 0.0 {
+            return Err(bad(format!(
+                "{} must be finite and >= 0, got {wall_seconds}",
+                what("wall_seconds")
+            )));
+        }
+        let params_covered = num("params_covered")? as usize;
+        let params_total = num("params_total")? as usize;
+        if params_total != crate::model::PARAM_NAMES.len() {
+            return Err(bad(format!(
+                "{} is {params_total}, expected the model's {} parameters",
+                what("params_total"),
+                crate::model::PARAM_NAMES.len()
+            )));
+        }
+        if params_covered > params_total {
+            return Err(bad(format!(
+                "{} {params_covered} exceeds params_total {params_total}",
+                what("params_covered")
+            )));
+        }
+        let recovered = row
+            .req("recovered")
+            .and_then(Json::as_bool)
+            .map_err(|e| bad(format!("{}: {e}", what("recovered"))))?;
+        if recovered != (params_covered == params_total) {
+            return Err(bad(format!(
+                "{} {recovered} inconsistent with coverage {params_covered}/{params_total}",
+                what("recovered")
+            )));
+        }
+        let final_tolerance = row
+            .req("final_tolerance")
+            .and_then(Json::as_f64)
+            .map_err(|e| bad(format!("{}: {e}", what("final_tolerance"))))?
+            as f32;
+        if !final_tolerance.is_finite() || final_tolerance <= 0.0 {
+            return Err(bad(format!(
+                "{} must be finite and > 0, got {final_tolerance}",
+                what("final_tolerance")
+            )));
+        }
+        rows.push(MethodRow {
+            method,
+            accepted,
+            stages,
+            runs,
+            simulator_calls,
+            wall_seconds,
+            params_covered,
+            params_total,
+            recovered,
+            final_tolerance,
+        });
+    }
+
+    for required in REQUIRED_METHODS {
+        let n = rows.iter().filter(|r| r.method == required).count();
+        if n != 1 {
+            return Err(bad(format!(
+                "method `{required}` must appear exactly once, found {n}"
+            )));
+        }
+    }
+    if rows.len() != REQUIRED_METHODS.len() {
+        return Err(bad(format!(
+            "unexpected extra method rows: {} rows for {} required methods",
+            rows.len(),
+            REQUIRED_METHODS.len()
+        )));
+    }
+
+    Ok(MethodsSummary { schema, quick, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<MethodRow> {
+        REQUIRED_METHODS
+            .iter()
+            .enumerate()
+            .map(|(i, m)| MethodRow {
+                method: (*m).to_string(),
+                accepted: 40 + i,
+                stages: i + 1,
+                runs: 10 * (i as u64 + 1),
+                simulator_calls: 4000 * (i as u64 + 1),
+                wall_seconds: 0.5 * (i as f64 + 1.0),
+                params_covered: 8,
+                params_total: 8,
+                recovered: true,
+                final_tolerance: 3.0e4,
+            })
+            .collect()
+    }
+
+    fn valid_doc() -> String {
+        methods_json(true, 16, 40, &rows()).to_string()
+    }
+
+    #[test]
+    fn valid_document_round_trips_through_the_validator() {
+        let s = validate_methods(&valid_doc()).unwrap();
+        assert_eq!(s.schema, METHODS_SCHEMA);
+        assert!(s.quick);
+        assert_eq!(s.rows.len(), 3);
+        assert_eq!(s.rows, rows());
+        assert_eq!(s.row("smc").unwrap().stages, 2);
+        assert!(s.row("nuts").is_none());
+    }
+
+    #[test]
+    fn missing_schema_and_wrong_suite_are_rejected() {
+        let doc = valid_doc().replace(&format!("\"schema\":{METHODS_SCHEMA},"), "");
+        let err = validate_methods(&doc).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
+        let doc = valid_doc().replace("\"suite\":\"methods\"", "\"suite\":\"hot_path\"");
+        assert!(validate_methods(&doc).is_err());
+        assert!(validate_methods("{").is_err());
+    }
+
+    #[test]
+    fn every_required_method_must_appear_exactly_once() {
+        let mut partial = rows();
+        partial.retain(|r| r.method != "mcmc");
+        let doc = methods_json(true, 16, 40, &partial).to_string();
+        let err = validate_methods(&doc).unwrap_err().to_string();
+        assert!(err.contains("mcmc"), "{err}");
+
+        let mut doubled = rows();
+        doubled.push(rows()[0].clone());
+        let doc = methods_json(true, 16, 40, &doubled).to_string();
+        let err = validate_methods(&doc).unwrap_err().to_string();
+        assert!(err.contains("exactly once"), "{err}");
+    }
+
+    #[test]
+    fn wrong_param_count_and_inconsistent_recovery_are_rejected() {
+        let mut wrong = rows();
+        wrong[1].params_total = 7;
+        wrong[1].params_covered = 7;
+        let doc = methods_json(false, 16, 40, &wrong).to_string();
+        let err = validate_methods(&doc).unwrap_err().to_string();
+        assert!(err.contains("params_total"), "{err}");
+
+        let mut lying = rows();
+        lying[2].params_covered = 6; // still claims recovered: true
+        let doc = methods_json(false, 16, 40, &lying).to_string();
+        let err = validate_methods(&doc).unwrap_err().to_string();
+        assert!(err.contains("inconsistent"), "{err}");
+    }
+
+    #[test]
+    fn comparison_table_renders_one_row_per_method() {
+        let t = method_comparison("Method comparison", &rows());
+        assert_eq!(t.len(), 3);
+        let r = t.render();
+        assert!(r.contains("rejection"));
+        assert!(r.contains("8/8"));
+        assert!(r.contains("yes"));
+    }
+}

@@ -10,6 +10,7 @@
 //! smoke both check against (DESIGN.md §11).
 
 pub mod bench_schema;
+pub mod methods;
 pub mod scaling;
 
 use std::fmt::Write as _;

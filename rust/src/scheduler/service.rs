@@ -154,6 +154,8 @@ pub struct ServiceMetrics {
     pub cache_entries: u64,
     /// Submissions answered from the cache.
     pub cache_hits: u64,
+    /// Results dropped by the cache's LRU cap since startup.
+    pub cache_evictions: u64,
     /// Per-job [`RunMetrics`] merged across all jobs (durations add,
     /// `total` takes the max — jobs run concurrently).
     pub pool: RunMetrics,
@@ -219,6 +221,13 @@ fn lock_state(m: &Mutex<ServiceState>) -> MutexGuard<'_, ServiceState> {
     m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
+/// Default result-cache capacity for a served pool. A daemon accepts
+/// an unbounded job stream, so its fingerprint cache must not be
+/// unbounded too: 256 distinct results is plenty for dedupe while
+/// keeping the worst case bounded (`--cache-cap 0` opts back into
+/// unbounded for short-lived test servers).
+pub const DEFAULT_CACHE_CAP: usize = 256;
+
 /// A long-running inference service over one shared worker pool.
 ///
 /// Start with [`InferenceService::start`]; submit any number of
@@ -248,13 +257,25 @@ impl std::fmt::Debug for InferenceService {
 
 impl InferenceService {
     /// Spawn `workers` pool workers (min 1) on `backend` plus the demux
-    /// leader, all parked until the first submission arrives.
+    /// leader, all parked until the first submission arrives. The
+    /// result cache is capped at [`DEFAULT_CACHE_CAP`] — use
+    /// [`start_with_cache_cap`](Self::start_with_cache_cap) to choose.
     pub fn start(backend: Arc<dyn Backend>, workers: usize) -> Arc<Self> {
+        Self::start_with_cache_cap(backend, workers, DEFAULT_CACHE_CAP)
+    }
+
+    /// [`start`](Self::start) with an explicit result-cache capacity
+    /// (`0` = unbounded).
+    pub fn start_with_cache_cap(
+        backend: Arc<dyn Backend>,
+        workers: usize,
+        cache_cap: usize,
+    ) -> Arc<Self> {
         let workers = workers.max(1);
         let dispatcher = Arc::new(Dispatcher::new(Vec::new()));
         let state = Arc::new(Mutex::new(ServiceState {
             jobs: Vec::new(),
-            cache: ResultCache::new(),
+            cache: ResultCache::with_cap(cache_cap),
             shutting_down: false,
         }));
         let clock = Stopwatch::start();
@@ -313,6 +334,18 @@ impl InferenceService {
                 "this server's pool runs the `{}` backend; submit with \
                  \"backend\": \"{}\" (got `{}`)",
                 self.backend_name, self.backend_name, config.backend
+            )));
+        }
+        if config.method != crate::abc::MethodKind::Rejection {
+            // The incremental leader only knows how to demux the plain
+            // rejection stream; multi-stage methods run through `repro
+            // infer --method ...` / `repro compare` instead. Rejecting
+            // here keeps the served stream contract honest rather than
+            // silently running a different method than asked.
+            return Err(Error::Config(format!(
+                "the inference server only serves rejection-abc jobs; \
+                 got method `{}` — run it via the CLI instead",
+                config.method.as_str()
             )));
         }
         let stop = StopRule::AcceptedTarget(config.accepted_samples);
@@ -441,6 +474,7 @@ impl InferenceService {
             submitted: st.jobs.len() as u64,
             cache_entries: st.cache.len() as u64,
             cache_hits: st.cache.hits(),
+            cache_evictions: st.cache.evictions(),
             ..ServiceMetrics::default()
         };
         for job in &st.jobs {
@@ -745,6 +779,18 @@ mod tests {
         assert!(svc.samples(99, 0).is_none());
         let m = svc.metrics();
         assert_eq!((m.submitted, m.cancelled), (1, 1));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn non_rejection_methods_are_refused_with_a_typed_error() {
+        let (mut config, _) = small_config(25);
+        config.method = crate::abc::MethodKind::Smc;
+        let svc = service(1);
+        let err = svc.submit(config, None).unwrap_err();
+        assert!(matches!(&err, Error::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("smc"), "{err}");
+        assert_eq!(svc.metrics().submitted, 0);
         svc.shutdown();
     }
 

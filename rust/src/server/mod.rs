@@ -289,6 +289,7 @@ fn route(service: &InferenceService, req: &Request, stop: &AtomicBool) -> (u16, 
             o.insert("failed".to_string(), Json::Num(m.failed as f64));
             o.insert("cache_entries".to_string(), Json::Num(m.cache_entries as f64));
             o.insert("cache_hits".to_string(), Json::Num(m.cache_hits as f64));
+            o.insert("cache_evictions".to_string(), Json::Num(m.cache_evictions as f64));
             o.insert("pool".to_string(), m.pool.to_json());
             (200, Json::Obj(o))
         }),

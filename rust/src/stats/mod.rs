@@ -8,4 +8,4 @@ mod histogram;
 mod summary;
 
 pub use histogram::Histogram;
-pub use summary::{mean, percentile, std_dev, Summary};
+pub use summary::{mean, percentile, std_dev, try_percentile, Summary};

@@ -1,5 +1,7 @@
 //! Scalar summary statistics.
 
+use crate::{Error, Result};
+
 /// Arithmetic mean; 0 for an empty slice.
 pub fn mean(xs: &[f32]) -> f64 {
     if xs.is_empty() {
@@ -26,9 +28,22 @@ pub fn std_dev(xs: &[f32]) -> f64 {
 /// [`Summary::of`] does); a single-element slice returns that element
 /// for every `p`; `p = 0` / `p = 100` return min / max exactly.
 pub fn percentile(xs: &[f32], p: f64) -> f64 {
-    assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+    try_percentile(xs, p).expect("percentile p out of range")
+}
+
+/// Checked variant of [`percentile`]: a `p` outside `[0, 100]` (or a
+/// non-finite `p`) is a typed [`Error::Config`] instead of a panic, so
+/// a malformed quantile arriving from user-supplied configuration (the
+/// SMC tolerance-refinement path) degrades to an error the caller can
+/// report rather than a dead worker.
+pub fn try_percentile(xs: &[f32], p: f64) -> Result<f64> {
+    if !p.is_finite() || !(0.0..=100.0).contains(&p) {
+        return Err(Error::Config(format!(
+            "percentile {p} out of range: expected a value in [0, 100]"
+        )));
+    }
     if xs.is_empty() {
-        return f64::NAN;
+        return Ok(f64::NAN);
     }
     let mut sorted: Vec<f32> = xs.to_vec();
     sorted.sort_by(f32::total_cmp);
@@ -36,7 +51,7 @@ pub fn percentile(xs: &[f32], p: f64) -> f64 {
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     let frac = rank - lo as f64;
-    sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac
+    Ok(sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac)
 }
 
 /// Five-number-plus summary of a sample.
@@ -53,19 +68,30 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Summarize a sample. Panics on empty input.
+    /// Summarize a sample. Panics on empty input; callers that cannot
+    /// prove their slice is non-empty should use [`Summary::try_of`].
     pub fn of(xs: &[f32]) -> Self {
-        assert!(!xs.is_empty(), "summary of empty slice");
-        Self {
+        Self::try_of(xs).expect("summary of empty slice")
+    }
+
+    /// Checked variant of [`Summary::of`]: an empty sample is a typed
+    /// [`Error::Config`] instead of a panic.
+    pub fn try_of(xs: &[f32]) -> Result<Self> {
+        if xs.is_empty() {
+            return Err(Error::Config(
+                "summary of an empty sample: no order statistics exist".into(),
+            ));
+        }
+        Ok(Self {
             count: xs.len(),
             mean: mean(xs),
             std_dev: std_dev(xs),
             min: xs.iter().cloned().fold(f32::INFINITY, f32::min) as f64,
-            p5: percentile(xs, 5.0),
-            median: percentile(xs, 50.0),
-            p95: percentile(xs, 95.0),
+            p5: try_percentile(xs, 5.0)?,
+            median: try_percentile(xs, 50.0)?,
+            p95: try_percentile(xs, 95.0)?,
             max: xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64,
-        }
+        })
     }
 }
 
@@ -138,5 +164,30 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn summary_empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn try_percentile_is_a_typed_error_not_a_panic() {
+        // the regression this PR pins: a malformed quantile reaching the
+        // SMC refinement path must be reportable, not a dead worker
+        for bad in [-0.1, 100.5, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = try_percentile(&[1.0, 2.0], bad).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{err}");
+            assert!(err.to_string().contains("out of range"), "{err}");
+        }
+        // the checked and infallible paths agree on valid input
+        let xs = [3.0f32, 1.0, 2.0];
+        for p in [0.0, 5.0, 50.0, 95.0, 100.0] {
+            assert_eq!(try_percentile(&xs, p).unwrap(), percentile(&xs, p));
+        }
+        assert!(try_percentile(&[], 50.0).unwrap().is_nan());
+    }
+
+    #[test]
+    fn try_of_empty_is_a_typed_error() {
+        let err = Summary::try_of(&[]).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("empty"), "{err}");
+        assert_eq!(Summary::try_of(&[1.0, 2.0]).unwrap(), Summary::of(&[1.0, 2.0]));
     }
 }

@@ -1,0 +1,151 @@
+//! Determinism suite for the `InferenceMethod` seam (DESIGN.md §13).
+//!
+//! Every method's output must be a pure function of its configuration:
+//! bit-identical across worker-pool sizes and shard geometries, because
+//! all method randomness (prior draws, resampling uniforms, proposal
+//! noise) is counter-keyed from the scenario seed, never from run
+//! completion order. The CI method matrix runs this binary once per
+//! method with `$ABC_IPU_METHOD` set; unset, every test runs.
+
+mod common;
+
+use abc_ipu::abc::{
+    drive, smc, AbcMcmc, InferenceMethod, McmcConfig, MethodScenario, RejectionAbc,
+};
+use abc_ipu::config::{ReturnStrategy, RunConfig};
+use abc_ipu::data::{synthetic, Dataset};
+use common::{fingerprints, native_backend, worker_counts, Fingerprint, JobBuilder};
+
+/// Whether `method`'s tests should run under the CI method matrix:
+/// `$ABC_IPU_METHOD` unset/empty runs everything, otherwise only the
+/// matching method's tests.
+fn method_enabled(method: &str) -> bool {
+    match std::env::var("ABC_IPU_METHOD") {
+        Ok(v) if !v.is_empty() && v != method => {
+            eprintln!("skipping {method} tests: $ABC_IPU_METHOD={v}");
+            false
+        }
+        _ => true,
+    }
+}
+
+/// A small synthetic scenario, CPU-friendly, with a configurable shard
+/// geometry (0 = unsharded).
+fn fixture(shards: usize) -> (RunConfig, Dataset) {
+    let dataset = synthetic::default_dataset(14, 0x5eed);
+    let mut b = JobBuilder::new(dataset.clone());
+    b.devices = 1;
+    b.batch = 600;
+    b.strategy = ReturnStrategy::Outfeed { chunk: 200 };
+    b.seed = 0xD15C0;
+    b.max_runs = 600;
+    b.shards = shards;
+    let mut config = b.config();
+    config.accepted_samples = 16;
+    (config, dataset)
+}
+
+fn scenario(shards: usize) -> MethodScenario {
+    let (config, dataset) = fixture(shards);
+    MethodScenario { name: "methods".into(), config, dataset }
+}
+
+#[test]
+fn rejection_stream_is_bit_identical_across_pool_geometries() {
+    if !method_enabled("rejection") {
+        return;
+    }
+    let mut baseline: Option<Vec<Fingerprint>> = None;
+    for workers in worker_counts() {
+        for shards in [0usize, 3] {
+            let mut m = RejectionAbc::new(vec![scenario(shards)]).unwrap();
+            drive(native_backend(), workers, &mut m, None).unwrap();
+            let (_, outcome) = m.outcomes().unwrap().pop().unwrap();
+            assert!(
+                outcome.posterior.len() >= 16,
+                "workers={workers} shards={shards}: only {} accepted",
+                outcome.posterior.len()
+            );
+            let fp = fingerprints(outcome.posterior.samples());
+            match &baseline {
+                None => baseline = Some(fp),
+                Some(b) => {
+                    assert_eq!(&fp, b, "rejection drifted at workers={workers} shards={shards}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mcmc_chain_states_are_bit_identical_across_pool_geometries() {
+    if !method_enabled("mcmc") {
+        return;
+    }
+    let mcmc_cfg = McmcConfig { chains: 2, steps: 6, proposal_scale: 0.1 };
+    let mut baseline: Option<Vec<Fingerprint>> = None;
+    for workers in worker_counts() {
+        for shards in [0usize, 3] {
+            let mut m =
+                AbcMcmc::new(vec![scenario(shards)], mcmc_cfg.clone()).unwrap();
+            drive(native_backend(), workers, &mut m, None).unwrap();
+            let (_, outcome) = m.outcomes().unwrap().pop().unwrap();
+            // chains × (init + steps) post-decision states, repeats and all
+            assert_eq!(
+                outcome.posterior.len(),
+                mcmc_cfg.chains * (mcmc_cfg.steps + 1),
+                "workers={workers} shards={shards}"
+            );
+            let fp = fingerprints(outcome.posterior.samples());
+            match &baseline {
+                None => baseline = Some(fp),
+                Some(b) => {
+                    assert_eq!(&fp, b, "mcmc drifted at workers={workers} shards={shards}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn weighted_smc_pool_matches_solo_bit_exactly() {
+    if !method_enabled("smc") {
+        return;
+    }
+    let smc_cfg = smc::SmcConfig {
+        stages: 2,
+        samples_per_stage: 12,
+        ..Default::default()
+    };
+    let run = |workers: usize| {
+        let (config, dataset) = fixture(0);
+        let sc = smc::SmcScenario { name: "methods".into(), config, dataset };
+        let mut results = smc::run_smc_scenarios_with_checkpoint(
+            native_backend(),
+            &[sc],
+            &smc_cfg,
+            workers,
+            None,
+        )
+        .unwrap();
+        results.pop().unwrap().1
+    };
+    let solo = run(1);
+    let pool = run(4);
+    assert_eq!(solo.stages.len(), 2);
+    assert_eq!(solo.stages.len(), pool.stages.len());
+    for (a, b) in solo.stages.iter().zip(&pool.stages) {
+        assert_eq!(a.tolerance.to_bits(), b.tolerance.to_bits(), "stage {}", a.stage);
+        assert_eq!(a.ess.to_bits(), b.ess.to_bits(), "stage {}", a.stage);
+        let wa: Vec<u32> = a.weights.iter().map(|w| w.to_bits()).collect();
+        let wb: Vec<u32> = b.weights.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(wa, wb, "stage {}", a.stage);
+        assert_eq!(a.weights.len(), a.posterior.len(), "stage {}", a.stage);
+        assert_eq!(
+            fingerprints(a.posterior.samples()),
+            fingerprints(b.posterior.samples()),
+            "stage {}",
+            a.stage
+        );
+    }
+}

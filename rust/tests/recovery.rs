@@ -16,9 +16,11 @@
 
 mod common;
 
+use abc_ipu::abc::{drive, smc, AbcMcmc, InferenceMethod, McmcConfig, MethodScenario};
 use abc_ipu::config::ReturnStrategy;
-use abc_ipu::coordinator::StopRule;
+use abc_ipu::coordinator::{AcceptedSample, StopRule};
 use abc_ipu::data::synthetic::{self, DEFAULT_THETA_STAR};
+use abc_ipu::data::Dataset;
 use abc_ipu::model::{Prior, N_PARAMS, PARAM_NAMES};
 use abc_ipu::scheduler::{JobSpec, Scheduler};
 use common::{fingerprints, native_backend, pool_workers, JobBuilder};
@@ -107,6 +109,121 @@ fn posterior_credible_boxes_cover_theta_star() {
         for s in &result.accepted {
             assert!(s.distance <= result.tolerance, "{}", job.name);
         }
+    }
+}
+
+/// Method-matrix gating: `$ABC_IPU_METHOD` unset runs everything,
+/// otherwise only the matching method's recovery test.
+fn method_enabled(method: &str) -> bool {
+    match std::env::var("ABC_IPU_METHOD") {
+        Ok(v) if !v.is_empty() && v != method => {
+            eprintln!("skipping {method} recovery: $ABC_IPU_METHOD={v}");
+            false
+        }
+        _ => true,
+    }
+}
+
+/// The synthetic θ*-generated dataset the method recovery cases share.
+fn method_dataset(name: &str, data_seed: u64) -> Dataset {
+    synthetic::generate(
+        name,
+        &DEFAULT_THETA_STAR,
+        abc_ipu::model::InitialCondition {
+            a0: 155.0,
+            r0: 2.0,
+            d0: 3.0,
+            population: 60_360_000.0,
+        },
+        DAYS,
+        data_seed,
+        2.0,
+    )
+}
+
+/// Assert every parameter's credible box (with `slack` fraction of the
+/// prior width per side) covers θ*, and lies inside the prior.
+fn assert_covers_theta_star(name: &str, samples: &[AcceptedSample], slack_frac: f32) {
+    let prior = Prior::paper();
+    for p in 0..N_PARAMS {
+        let mut lo = f32::MAX;
+        let mut hi = f32::MIN;
+        for s in samples {
+            lo = lo.min(s.theta[p]);
+            hi = hi.max(s.theta[p]);
+        }
+        let slack = slack_frac * (prior.high()[p] - prior.low()[p]);
+        let star = DEFAULT_THETA_STAR[p];
+        assert!(
+            lo - slack <= star && star <= hi + slack,
+            "{name}: credible box of {} = [{lo:.4}, {hi:.4}] (± {slack:.4} slack) \
+             does not cover θ* = {star:.4}",
+            PARAM_NAMES[p]
+        );
+        assert!(lo >= prior.low()[p] && hi <= prior.high()[p], "{name}");
+    }
+}
+
+#[test]
+fn smc_posterior_credible_box_covers_theta_star() {
+    if !method_enabled("smc") {
+        return;
+    }
+    let dataset = method_dataset("smc-recovery", 0xA11CE);
+    let mut builder = JobBuilder::new(dataset.clone());
+    builder.tol_mult = 30.0;
+    builder.devices = 1;
+    builder.batch = BATCH;
+    builder.strategy = ReturnStrategy::Outfeed { chunk: BATCH / 10 };
+    builder.seed = 3001;
+    builder.max_runs = 1_500;
+    let config = builder.config();
+    let sc = smc::SmcScenario { name: "smc-recovery".into(), config, dataset };
+    let smc_cfg = smc::SmcConfig {
+        stages: 1,
+        samples_per_stage: TARGET,
+        ..Default::default()
+    };
+    let mut results = smc::run_smc_scenarios_with_checkpoint(
+        native_backend(),
+        &[sc],
+        &smc_cfg,
+        pool_workers(4),
+        None,
+    )
+    .unwrap();
+    let (_, result) = results.pop().unwrap();
+    let post = result.final_posterior().expect("one stage ran");
+    assert!(post.len() >= TARGET, "only {} accepted", post.len());
+    assert_covers_theta_star("smc-recovery", post.samples(), SLACK);
+}
+
+#[test]
+fn mcmc_posterior_credible_box_covers_theta_star() {
+    if !method_enabled("mcmc") {
+        return;
+    }
+    let dataset = method_dataset("mcmc-recovery", 0xA11CE);
+    let mut builder = JobBuilder::new(dataset.clone());
+    builder.tol_mult = 30.0;
+    builder.devices = 1;
+    builder.batch = BATCH;
+    builder.strategy = ReturnStrategy::Outfeed { chunk: BATCH / 10 };
+    builder.seed = 3002;
+    builder.max_runs = 1_500;
+    let config = builder.config();
+    let scenario = MethodScenario { name: "mcmc-recovery".into(), config, dataset };
+    let mcmc_cfg = McmcConfig { chains: 6, steps: 30, proposal_scale: 0.1 };
+    let mut m = AbcMcmc::new(vec![scenario], mcmc_cfg.clone()).unwrap();
+    drive(native_backend(), pool_workers(4), &mut m, None).unwrap();
+    let (_, outcome) = m.outcomes().unwrap().pop().unwrap();
+    assert_eq!(outcome.posterior.len(), mcmc_cfg.chains * (mcmc_cfg.steps + 1));
+    // MCMC's dwell-time posterior explores more slowly than a
+    // prior-wide rejection sweep, so it gets a slightly wider margin.
+    assert_covers_theta_star("mcmc-recovery", outcome.posterior.samples(), 0.15);
+    // every visited state respects the fixed ε
+    for s in outcome.posterior.samples() {
+        assert!(s.distance <= outcome.tolerance);
     }
 }
 

@@ -46,6 +46,19 @@ fn start_server(workers: usize) -> (String, JoinHandle<()>) {
     (addr, handle)
 }
 
+/// [`start_server`] with an explicit result-cache LRU capacity.
+fn start_server_capped(workers: usize, cache_cap: usize) -> (String, JoinHandle<()>) {
+    let service = InferenceService::start_with_cache_cap(
+        Arc::new(NativeBackend::new()),
+        workers,
+        cache_cap,
+    );
+    let server = HttpServer::bind(0, service).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("bound address").to_string();
+    let handle = std::thread::spawn(move || server.serve().expect("serve loop"));
+    (addr, handle)
+}
+
 fn get(addr: &str, path: &str) -> (u16, Json) {
     let (code, body) = client::request(addr, "GET", path, None).expect("request");
     (code, Json::parse(&body).expect("json body"))
@@ -176,6 +189,69 @@ fn duplicate_submission_is_a_cache_hit_with_no_new_simulation() {
     let (_, third) = post(&addr, "/v1/jobs", Some(&body));
     assert!(!third.req("cached").unwrap().as_bool().unwrap());
 
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn capped_result_cache_evicts_lru_and_reruns_evicted_jobs() {
+    // cap 1: the second distinct result evicts the first; a resubmission
+    // of the evicted job is a miss that re-simulates (deterministically
+    // identical), while the resident entry still answers from cache.
+    let (config_a, _) = small_config(41);
+    let (config_b, _) = small_config(42);
+    let (addr, handle) = start_server_capped(2, 1);
+
+    let (_, a) = post(&addr, "/v1/jobs", Some(&config_a.to_json()));
+    let a_id = a.req("id").unwrap().as_u64().unwrap();
+    wait_terminal(&addr, a_id);
+    let (_, m) = get(&addr, "/v1/metrics");
+    assert_eq!(m.req("cache_entries").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(m.req("cache_evictions").unwrap().as_u64().unwrap(), 0);
+
+    let (_, b) = post(&addr, "/v1/jobs", Some(&config_b.to_json()));
+    let b_id = b.req("id").unwrap().as_u64().unwrap();
+    wait_terminal(&addr, b_id);
+    let (_, m) = get(&addr, "/v1/metrics");
+    assert_eq!(m.req("cache_entries").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(m.req("cache_evictions").unwrap().as_u64().unwrap(), 1);
+    let runs_after_b = m.req("pool").unwrap().req("runs").unwrap().as_u64().unwrap();
+
+    // B is resident: a duplicate answers from cache, no new pool work
+    let (_, b2) = post(&addr, "/v1/jobs", Some(&config_b.to_json()));
+    assert!(b2.req("cached").unwrap().as_bool().unwrap());
+
+    // A was evicted: a duplicate is a miss and re-runs on the pool
+    let (_, a2) = post(&addr, "/v1/jobs", Some(&config_a.to_json()));
+    assert!(!a2.req("cached").unwrap().as_bool().unwrap());
+    let a2_id = a2.req("id").unwrap().as_u64().unwrap();
+    wait_terminal(&addr, a2_id);
+    let (_, m) = get(&addr, "/v1/metrics");
+    assert!(
+        m.req("pool").unwrap().req("runs").unwrap().as_u64().unwrap() > runs_after_b,
+        "evicted job must re-simulate"
+    );
+
+    // determinism makes eviction invisible to results: re-run == original
+    let (_, page_a) = get(&addr, &format!("/v1/jobs/{a_id}/samples"));
+    let (_, page_a2) = get(&addr, &format!("/v1/jobs/{a2_id}/samples"));
+    assert_eq!(parse_samples(&page_a), parse_samples(&page_a2));
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn non_rejection_method_submissions_answer_400() {
+    let (mut config, _) = small_config(43);
+    config.method = abc_ipu::abc::MethodKind::Mcmc;
+    let (addr, handle) = start_server(1);
+    let (code, err) = post(&addr, "/v1/jobs", Some(&config.to_json()));
+    assert_eq!(code, 400);
+    assert!(err.req("error").unwrap().as_str().unwrap().contains("mcmc"), "{err:?}");
+    // the daemon keeps serving rejection jobs afterwards
+    config.method = abc_ipu::abc::MethodKind::Rejection;
+    let (_, receipt) = post(&addr, "/v1/jobs", Some(&config.to_json()));
+    let status = wait_terminal(&addr, receipt.req("id").unwrap().as_u64().unwrap());
+    assert_eq!(status.req("state").unwrap().as_str().unwrap(), "done");
     shutdown(&addr, handle);
 }
 
