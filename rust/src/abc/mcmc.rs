@@ -160,7 +160,7 @@ impl AbcMcmc {
                     format!("{}/init", s.name),
                     cfg,
                     s.dataset.clone(),
-                    Prior::paper(),
+                    s.config.model.instance().prior(),
                     StopRule::AcceptedTarget(self.mcmc.chains),
                 )
             })
@@ -214,12 +214,20 @@ impl AbcMcmc {
     }
 
     /// Gaussian proposal for one chain at `step`, keyed purely by
-    /// (seed, chain, step).
-    fn propose(&self, theta: &Theta, seed: u64, chain: usize, step: usize) -> Theta {
+    /// (seed, chain, step). `prior` scales per-dimension step widths, so
+    /// degenerate dims (width 0 — the unused θ slots of a zoo model)
+    /// stay pinned exactly.
+    fn propose(
+        &self,
+        theta: &Theta,
+        prior: &Prior,
+        seed: u64,
+        chain: usize,
+        step: usize,
+    ) -> Theta {
         let mut rng = Xoshiro256::seed_from(splitmix64(
             seed ^ MCMC_PROPOSAL_SALT ^ mix_chain_step(chain, step),
         ));
-        let prior = Prior::paper();
         let mut out = *theta;
         for p in 0..N_PARAMS {
             let z = standard_normal(&mut rng) as f32;
@@ -233,15 +241,15 @@ impl AbcMcmc {
     /// in-box proposal. Fills `self.pending` in submission order.
     fn step_jobs(&mut self) -> Result<Vec<JobSpec>> {
         let step = self.step;
-        let prior = Prior::paper();
         let mut jobs = Vec::new();
         self.pending.clear();
         for (si, (scenario, sc)) in
             self.scenarios.iter().zip(&self.state).enumerate()
         {
+            let prior = scenario.config.model.instance().prior();
             for (ci, chain) in sc.chains.iter().enumerate() {
                 let proposal =
-                    self.propose(&chain.theta, scenario.config.seed, ci, step);
+                    self.propose(&chain.theta, &prior, scenario.config.seed, ci, step);
                 if !prior.contains(&proposal) {
                     // uniform prior: the MH ratio is 0 outside the box —
                     // auto-reject without spending a simulation

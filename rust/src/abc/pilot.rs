@@ -13,7 +13,6 @@ use crate::backend::Backend;
 use crate::config::{ReturnStrategy, RunConfig};
 use crate::coordinator::{Coordinator, StopRule};
 use crate::data::Dataset;
-use crate::model::Prior;
 use crate::stats::percentile;
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -51,7 +50,8 @@ pub fn calibrate_tolerance(
     cfg.tolerance = Some(f32::MAX);
     cfg.return_strategy = ReturnStrategy::Outfeed { chunk: cfg.batch_per_device };
     cfg.max_runs = 0;
-    let coord = Coordinator::new(backend, cfg, dataset.clone(), Prior::paper())?;
+    let prior = base.model.instance().prior();
+    let coord = Coordinator::new(backend, cfg, dataset.clone(), prior)?;
     let result = coord.run(StopRule::ExactRuns(pilot_runs))?;
     let distances: Vec<f32> = result.accepted.iter().map(|s| s.distance).collect();
     if distances.is_empty() {

@@ -11,7 +11,6 @@
 use super::method::{InferenceMethod, MethodOutcome, MethodScenario};
 use super::Posterior;
 use crate::coordinator::{InferenceResult, StopRule};
-use crate::model::Prior;
 use crate::scheduler::JobSpec;
 use crate::{Error, Result};
 
@@ -55,7 +54,7 @@ impl InferenceMethod for RejectionAbc {
                     s.name.clone(),
                     s.config.clone(),
                     s.dataset.clone(),
-                    Prior::paper(),
+                    s.config.model.instance().prior(),
                     StopRule::AcceptedTarget(s.config.accepted_samples),
                 )
             })
@@ -92,6 +91,7 @@ mod tests {
     use super::*;
     use crate::backend::{Backend, NativeBackend};
     use crate::config::{ReturnStrategy, RunConfig};
+    use crate::model::Prior;
     use std::sync::Arc;
 
     fn scenario(seed: u64) -> MethodScenario {

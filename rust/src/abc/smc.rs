@@ -299,7 +299,8 @@ impl SmcAbc {
         let states = scenarios
             .iter()
             .map(|s| ScenarioState {
-                prior: Prior::paper(),
+                // stage 0 samples the configured model's full prior box
+                prior: s.config.model.instance().prior(),
                 tolerance: s.config.tolerance.unwrap_or(s.dataset.default_tolerance),
                 stages: Vec::new(),
             })

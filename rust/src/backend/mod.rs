@@ -75,7 +75,8 @@ pub struct AbcJob {
     pub batch: usize,
     /// Fit window in days.
     pub days: usize,
-    /// Observed `[3, days]` block, row-major.
+    /// Observed `[n_observed, days]` block, row-major; the row count is
+    /// the model's observed-projection dimension (3 for `epi`).
     pub observed: Vec<f32>,
     /// Prior box lower bounds.
     pub prior_low: Theta,
@@ -98,6 +99,10 @@ pub struct AbcJob {
     /// engine default (`$ABC_IPU_SIMD` wins either way). A pure
     /// performance knob: the kernels are bit-identical (DESIGN.md §11).
     pub simd: crate::model::SimdMode,
+    /// Compartment model this job simulates (DESIGN.md §14). Unlike the
+    /// knobs above this is *not* performance-only: it selects the
+    /// dynamics, so it participates in job fingerprints and cache keys.
+    pub model: crate::model::ModelKind,
 }
 
 impl AbcJob {
@@ -120,6 +125,7 @@ impl AbcJob {
             lanes: 0,
             shards: 0,
             simd: crate::model::SimdMode::Auto,
+            model: crate::model::ModelKind::Epi,
         }
     }
 
@@ -142,6 +148,12 @@ impl AbcJob {
         self
     }
 
+    /// Pin the compartment model (defaults to `epi`).
+    pub fn with_model(mut self, model: crate::model::ModelKind) -> Self {
+        self.model = model;
+        self
+    }
+
     /// Validate internal consistency (shapes, bounds).
     pub fn validate(&self) -> Result<()> {
         if self.batch == 0 || self.days == 0 {
@@ -150,10 +162,11 @@ impl AbcJob {
                 self.batch, self.days
             )));
         }
-        if self.observed.len() != 3 * self.days {
+        let rows = self.model.instance().n_observed();
+        if self.observed.len() != rows * self.days {
             return Err(Error::ShapeMismatch {
-                what: "observed".to_string(),
-                want: format!("{} elements", 3 * self.days),
+                what: format!("observed (model `{}`)", self.model.as_str()),
+                want: format!("{} elements", rows * self.days),
                 got: format!("{} elements", self.observed.len()),
             });
         }
@@ -349,6 +362,7 @@ mod tests {
             lanes: 0,
             shards: 0,
             simd: crate::model::SimdMode::Auto,
+            model: crate::model::ModelKind::Epi,
         };
         job.validate().unwrap();
         job.clone().with_lanes(16).validate().unwrap();
@@ -358,6 +372,21 @@ mod tests {
         let mut bad = job.clone();
         bad.observed.truncate(5);
         assert!(bad.validate().is_err());
+
+        // validation is model-aware: a [3, days] epi block is the wrong
+        // shape for SIR's 2-row projection, and the error names the model
+        let bad = job.clone().with_model(crate::model::ModelKind::Sir);
+        match bad.validate().unwrap_err() {
+            Error::ShapeMismatch { what, want, .. } => {
+                assert!(what.contains("sir"), "{what}");
+                assert!(want.contains('8'), "{want}");
+            }
+            other => panic!("want ShapeMismatch, got {other:?}"),
+        }
+        // and the right shape passes
+        let mut sir = job.clone().with_model(crate::model::ModelKind::Sir);
+        sir.observed = vec![0.0; 8];
+        sir.validate().unwrap();
 
         let bad = job.clone().with_lanes(MAX_LANE_WIDTH + 1);
         assert!(bad.validate().is_err());

@@ -141,7 +141,8 @@ impl Backend for NativeBackend {
         job.validate()?;
         Ok(Box::new(NativeEngine {
             engine: LaneEngine::auto(initial_condition(&job.consts), job.lanes)?
-                .with_simd(resolve_simd(job.simd)?),
+                .with_simd(resolve_simd(job.simd)?)
+                .with_model(job.model),
             prior: Prior::new(job.prior_low, job.prior_high)?,
             observed: job.observed.clone(),
             days: job.days,
@@ -163,6 +164,9 @@ impl Backend for NativeBackend {
                 got: format!("{} elements over {days} days", thetas.len()),
             });
         }
+        // posterior prediction is an epi-only surface: the trajectory
+        // projection below is the paper's [A, R, D] block. Non-epi jobs
+        // never reach here — the CLI guards with a typed error first.
         let n = thetas.len() / N_PARAMS;
         let sim = Simulator::new(initial_condition(consts));
         let mut out = Vec::with_capacity(n * 3 * days);
@@ -235,6 +239,7 @@ mod tests {
             lanes: 0,
             shards: 0,
             simd: crate::model::SimdMode::Auto,
+            model: crate::model::ModelKind::Epi,
         }
     }
 
@@ -297,6 +302,39 @@ mod tests {
         }
         for &d in &out.distances {
             assert!(d.is_finite() && d >= 0.0);
+        }
+    }
+
+    #[test]
+    fn zoo_job_runs_end_to_end_and_matches_its_oracle() {
+        use crate::model::lanes::scalar_reference;
+        use crate::model::ModelKind;
+        let backend = NativeBackend::new();
+        for kind in ModelKind::all() {
+            let model = kind.instance();
+            let prior = model.prior();
+            let ic = InitialCondition {
+                a0: 155.0,
+                r0: 2.0,
+                d0: 3.0,
+                population: 6e7,
+            };
+            let days = 10;
+            // any well-shaped observed block works for the purity check
+            let observed = vec![50.0; model.n_observed() * days];
+            let mut j = job(64).with_model(kind);
+            j.days = days;
+            j.observed = observed.clone();
+            j.prior_low = *prior.low();
+            j.prior_high = *prior.high();
+            j.consts = [ic.a0, ic.r0, ic.d0, ic.population];
+            let mut engine = backend.open_engine(0, &j).unwrap();
+            let out = engine.run([3, 5]).unwrap();
+            let sim = Simulator::for_model(ic, kind);
+            let (want_t, want_d) =
+                scalar_reference(&sim, &prior, &observed, days, 64, [3, 5]).unwrap();
+            assert_eq!(out.thetas, want_t, "{kind:?}");
+            assert_eq!(out.distances, want_d, "{kind:?}");
         }
     }
 

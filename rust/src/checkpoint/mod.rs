@@ -181,6 +181,11 @@ fn fold_config(
     if cfg.method != crate::abc::method::MethodKind::Rejection {
         h = fnv1a64(h, cfg.method.as_str().as_bytes());
     }
+    // same pre-seam stability rule for the model zoo: every fingerprint
+    // minted before the model knob existed was implicitly `epi`
+    if cfg.model != crate::model::ModelKind::Epi {
+        h = fnv1a64(h, cfg.model.as_str().as_bytes());
+    }
     for col in dataset.truncated(cfg.days).observed.flatten() {
         h = fnv1a64(h, &col.to_bits().to_le_bytes());
     }
@@ -1210,6 +1215,31 @@ mod tests {
         assert_eq!(a, fnv1a64(0, b"abc"));
         assert_ne!(a, fnv1a64(0, b"abd"));
         assert_ne!(fnv1a64(a, b"x"), fnv1a64(a, b"y"));
+    }
+
+    #[test]
+    fn model_fold_keeps_pre_zoo_fingerprints_and_separates_models() {
+        let ds = crate::data::synthetic::default_dataset(8, 0x5eed);
+        let mut cfg = RunConfig::default();
+        cfg.days = 8;
+        let base = fold_config(0, &cfg, &ds, 100.0);
+        // the epi default folds nothing extra: bit-for-bit the pre-zoo hash
+        let mut epi = cfg.clone();
+        epi.model = crate::model::ModelKind::Epi;
+        assert_eq!(fold_config(0, &epi, &ds, 100.0), base);
+        // every non-default model gets its own fingerprint
+        let mut seen = vec![base];
+        for kind in [
+            crate::model::ModelKind::Sir,
+            crate::model::ModelKind::Seir,
+            crate::model::ModelKind::Metapop,
+        ] {
+            let mut c = cfg.clone();
+            c.model = kind;
+            let h = fold_config(0, &c, &ds, 100.0);
+            assert!(!seen.contains(&h), "{kind:?} collides");
+            seen.push(h);
+        }
     }
 
     #[test]

@@ -94,6 +94,10 @@ pub struct RunConfig {
     /// the paper's base loop), `smc`, or `mcmc`; `$ABC_IPU_METHOD`
     /// overrides either way (DESIGN.md §13).
     pub method: crate::abc::MethodKind,
+    /// Compartment model simulated by this config: `epi` (default —
+    /// the paper's 6-compartment COVID-19 model), `sir`, `seir`, or
+    /// `metapop`; `$ABC_IPU_MODEL` overrides either way (DESIGN.md §14).
+    pub model: crate::model::ModelKind,
 }
 
 impl Default for RunConfig {
@@ -116,6 +120,7 @@ impl Default for RunConfig {
             checkpoint_interval: 1,
             resume: false,
             method: crate::abc::MethodKind::default(),
+            model: crate::model::ModelKind::default(),
         }
     }
 }
@@ -244,6 +249,9 @@ impl RunConfig {
         if let Some(m) = v.get("method") {
             cfg.method = crate::abc::MethodKind::parse(m.as_str()?)?;
         }
+        if let Some(m) = v.get("model") {
+            cfg.model = crate::model::ModelKind::parse(m.as_str()?)?;
+        }
         if let Some(rs) = v.get("return_strategy") {
             let mode = rs.req("mode")?.as_str()?;
             cfg.return_strategy = match mode {
@@ -302,6 +310,7 @@ impl RunConfig {
         );
         m.insert("resume".into(), Json::Bool(self.resume));
         m.insert("method".into(), Json::Str(self.method.as_str().into()));
+        m.insert("model".into(), Json::Str(self.model.as_str().into()));
         let mut rs = BTreeMap::new();
         match self.return_strategy {
             ReturnStrategy::Outfeed { chunk } => {
@@ -545,6 +554,29 @@ mod tests {
             assert_eq!(parsed, cfg, "{raw}");
         }
         assert!(RunConfig::from_json(r#"{"method": "nuts"}"#).is_err());
+    }
+
+    #[test]
+    fn model_knob_defaults_parses_and_round_trips() {
+        use crate::model::ModelKind;
+        assert_eq!(RunConfig::default().model, ModelKind::Epi);
+        for (raw, want) in [
+            ("epi", ModelKind::Epi),
+            ("sir", ModelKind::Sir),
+            ("seir", ModelKind::Seir),
+            ("metapop", ModelKind::Metapop),
+        ] {
+            let cfg = RunConfig::from_json(&format!(r#"{{"model": "{raw}"}}"#)).unwrap();
+            assert_eq!(cfg.model, want, "{raw}");
+            let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(parsed, cfg, "{raw}");
+        }
+        // unknown model values fail loudly with a typed config error
+        let err = RunConfig::from_json(r#"{"model": "lotka"}"#).unwrap_err();
+        match err {
+            Error::Config(msg) => assert!(msg.contains("lotka"), "{msg}"),
+            other => panic!("want Error::Config, got {other:?}"),
+        }
     }
 
     #[test]

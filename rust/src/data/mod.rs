@@ -28,12 +28,20 @@ use crate::{Error, Result};
 ///
 /// * `synthetic` — the standard synthetic benchmark, generated at least
 ///   49 days long so any paper-sized fit window fits,
+/// * `synthetic-<model>` — the per-model zoo benchmark
+///   ([`synthetic::model_dataset`]) for `sir`, `seir`, `metapop`,
 /// * an embedded country name ([`embedded::by_name`] aliases included),
 /// * a path to an observed-series CSV file
 ///   ([`ObservedSeries::from_csv_file`] layout).
 pub fn resolve(name: &str, days: usize) -> Result<Dataset> {
     if name == "synthetic" {
         return Ok(synthetic::default_dataset(days.max(49), 0x5eed));
+    }
+    // per-model synthetic benchmarks: `synthetic-sir`, `synthetic-seir`,
+    // `synthetic-metapop` (`synthetic-epi` aliases plain `synthetic`)
+    if let Some(model) = name.strip_prefix("synthetic-") {
+        let kind = crate::model::ModelKind::parse(model)?;
+        return Ok(synthetic::model_dataset(kind, days.max(49), 0x5eed));
     }
     if let Some(ds) = embedded::by_name(name) {
         return Ok(ds);
@@ -112,6 +120,19 @@ mod tests {
         assert_eq!(resolve("nz", 49).unwrap().name, "new_zealand");
         let err = resolve("atlantis", 49).unwrap_err().to_string();
         assert!(err.contains("atlantis"), "{err}");
+    }
+
+    #[test]
+    fn resolve_covers_zoo_synthetics_and_rejects_unknown_models() {
+        for model in ["sir", "seir", "metapop"] {
+            let name = format!("synthetic-{model}");
+            let ds = resolve(&name, 16).unwrap();
+            assert_eq!(ds.name, name);
+            assert_eq!(ds.days(), 49); // same 49-day floor as `synthetic`
+        }
+        assert_eq!(resolve("synthetic-epi", 49).unwrap().name, "synthetic");
+        let err = resolve("synthetic-lorenz", 49).unwrap_err().to_string();
+        assert!(err.contains("lorenz"), "{err}");
     }
 
     #[test]

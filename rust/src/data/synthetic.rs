@@ -7,7 +7,7 @@
 //! goodness-of-fit on the embedded curves (DESIGN.md §1).
 
 use super::{Dataset, ObservedSeries};
-use crate::model::{InitialCondition, Simulator, Theta};
+use crate::model::{CompartmentModel, InitialCondition, ModelKind, Simulator, Theta};
 use crate::rng::Xoshiro256;
 
 /// The default generating parameters: the paper's Italy posterior means
@@ -67,6 +67,88 @@ pub fn default_dataset(days: usize, seed: u64) -> Dataset {
     )
 }
 
+/// Fold a model's `[n_observed, days]` projection into the `[3, days]`
+/// [`ObservedSeries`] storage layout, zero-padding the columns the model
+/// does not observe. The inverse is
+/// [`CompartmentModel::observed_from_series`]: because the pad columns
+/// are exactly `0.0` and case counts are non-negative, the round trip is
+/// bit-exact (`r + 0.0 == r` for every non-negative f32), which is what
+/// lets a zoo dataset reproduce its generating trajectory verbatim.
+fn series_from_projection(
+    model: &dyn CompartmentModel,
+    flat: &[f32],
+    days: usize,
+) -> ObservedSeries {
+    let row = |r: usize| flat[r * days..(r + 1) * days].to_vec();
+    let zeros = || vec![0.0f32; days];
+    let (active, recovered, deaths) = match model.n_observed() {
+        3 => (row(0), row(1), row(2)),
+        2 => (row(0), row(1), zeros()),
+        1 => (row(0), zeros(), zeros()),
+        n => unreachable!("no storage layout for a {n}-row projection"),
+    };
+    ObservedSeries::new(active, recovered, deaths).expect("generated columns share one length")
+}
+
+/// Generate a synthetic dataset for any zoo model by simulating it at
+/// the model's own canonical θ\* ([`CompartmentModel::theta_star`]).
+/// Same tolerance calibration as [`generate`]: median θ\*-rollout
+/// distance, scaled by `tolerance_factor`.
+pub fn generate_model(
+    kind: ModelKind,
+    name: &str,
+    ic: InitialCondition,
+    days: usize,
+    seed: u64,
+    tolerance_factor: f32,
+) -> Dataset {
+    let model = kind.instance();
+    let sim = Simulator::for_model(ic, kind);
+    let mut rng = Xoshiro256::seed_from(seed);
+    let theta_star = model.theta_star();
+    let flat = sim
+        .trajectory(&theta_star, days, &mut rng)
+        .expect("synthetic generation needs days >= 1");
+
+    let mut dists: Vec<f32> = (0..32)
+        .map(|_| {
+            sim.distance(&theta_star, &flat, days, &mut rng)
+                .expect("observed layout is generated to match")
+        })
+        .collect();
+    dists.sort_by(f32::total_cmp);
+    let median = dists[dists.len() / 2].max(1.0);
+
+    Dataset {
+        name: name.to_string(),
+        observed: series_from_projection(model, &flat, days),
+        population: ic.population,
+        default_tolerance: median * tolerance_factor,
+    }
+}
+
+/// The standard synthetic benchmark for a zoo model: the dataset the
+/// `synthetic-sir` / `synthetic-seir` / `synthetic-metapop` names
+/// resolve to (`epi` falls through to [`default_dataset`]). The zoo
+/// initial condition seeds cases with no prior removals so day 0 of the
+/// stored series reconstructs the generating initial condition exactly
+/// for every model (the metapop projection folds removals into its
+/// single incidence row, so a non-zero R₀/D₀ would not survive the
+/// round trip).
+pub fn model_dataset(kind: ModelKind, days: usize, seed: u64) -> Dataset {
+    match kind {
+        ModelKind::Epi => default_dataset(days, seed),
+        _ => generate_model(
+            kind,
+            &format!("synthetic-{}", kind.as_str()),
+            InitialCondition { a0: 155.0, r0: 0.0, d0: 0.0, population: 60_360_000.0 },
+            days,
+            seed,
+            2.0,
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +192,55 @@ mod tests {
         let d = default_dataset(49, 1);
         let last = d.days() - 1;
         assert!(d.observed.active[last] > 10.0 * d.observed.active[0]);
+    }
+
+    #[test]
+    fn zoo_datasets_are_deterministic_and_named() {
+        for kind in [ModelKind::Sir, ModelKind::Seir, ModelKind::Metapop] {
+            let a = model_dataset(kind, 20, 7);
+            let b = model_dataset(kind, 20, 7);
+            assert_eq!(a.observed, b.observed, "{kind:?}");
+            assert_eq!(a.default_tolerance, b.default_tolerance, "{kind:?}");
+            assert_eq!(a.name, format!("synthetic-{}", kind.as_str()));
+            assert_ne!(a.observed, model_dataset(kind, 20, 8).observed, "{kind:?}");
+        }
+        assert_eq!(model_dataset(ModelKind::Epi, 20, 7).name, "synthetic");
+    }
+
+    #[test]
+    fn zoo_datasets_round_trip_the_generating_projection() {
+        // the stored [3, days] series must fold back into the exact
+        // [n_observed, days] block the generating simulation produced —
+        // bit-for-bit, so a same-seed replay has distance exactly 0
+        for kind in ModelKind::all() {
+            let days = 12;
+            let ds = model_dataset(kind, days, 0x5eed);
+            let model = kind.instance();
+            let flat = model.observed_from_series(&ds.observed);
+            assert_eq!(flat.len(), model.n_observed() * days, "{kind:?}");
+            let sim = Simulator::for_model(ds.initial_condition(), kind);
+            let mut rng = Xoshiro256::seed_from(0x5eed);
+            let want = sim.trajectory(&model.theta_star(), days, &mut rng).unwrap();
+            assert_eq!(flat, want, "{kind:?} projection does not round-trip");
+        }
+    }
+
+    #[test]
+    fn zoo_tolerance_accepts_theta_star_often() {
+        for kind in [ModelKind::Sir, ModelKind::Seir, ModelKind::Metapop] {
+            let days = 20;
+            let ds = model_dataset(kind, days, 3);
+            let model = kind.instance();
+            let sim = Simulator::for_model(ds.initial_condition(), kind);
+            let flat = model.observed_from_series(&ds.observed);
+            let mut rng = Xoshiro256::seed_from(99);
+            let accepted = (0..64)
+                .filter(|_| {
+                    sim.distance(&model.theta_star(), &flat, days, &mut rng).unwrap()
+                        <= ds.default_tolerance
+                })
+                .count();
+            assert!(accepted > 24, "{kind:?} θ* acceptance too low: {accepted}/64");
+        }
     }
 }

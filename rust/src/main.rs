@@ -36,7 +36,7 @@ use abc_ipu::hwmodel::{
     batch_sweep, gpu_kernel_table, ipu_compute_set_table, liveness_curve, per_tile_memory,
     scaling_table, DeviceSpec, Workload,
 };
-use abc_ipu::model::{Prior, N_PARAMS, PARAM_NAMES};
+use abc_ipu::model::{ModelKind, Prior, N_PARAMS, PARAM_NAMES};
 use abc_ipu::report::{fmt_bytes, fmt_secs, write_csv, Table};
 use abc_ipu::scheduler::service::{InferenceService, DEFAULT_CACHE_CAP};
 use abc_ipu::server::HttpServer;
@@ -71,6 +71,9 @@ infer flags:  --dataset NAME --tolerance F --samples N --devices N
               --batch N --days N --chunk N --top-k K --seed N --max-runs N
               --method rejection|smc|mcmc (inference method, DESIGN.md
               §13; $ABC_IPU_METHOD overrides)
+              --model epi|sir|seir|metapop (compartment model, DESIGN.md
+              §14; $ABC_IPU_MODEL overrides; pair with
+              --dataset synthetic-<model> for a matching θ* series)
               --lanes W (SoA kernel lane width, 0 = auto; results are
               width-invariant) --shards K (split each run's batch into K
               lane ranges across the worker pool, 0 = solo; results are
@@ -96,7 +99,7 @@ compare flags: --days N --samples N --seed N --batch N --workers N
 const INFER_FLAGS: &[&str] = &[
     "artifacts", "reports", "backend", "dataset", "tolerance", "samples", "devices", "batch",
     "days", "chunk", "top-k", "seed", "max-runs", "lanes", "shards", "config",
-    "checkpoint", "checkpoint-interval", "method",
+    "checkpoint", "checkpoint-interval", "method", "model",
 ];
 
 /// Boolean flags shared by the commands that run resumable jobs.
@@ -130,6 +133,14 @@ fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
     if let Some(m) = a.get("method") {
         cfg.method = MethodKind::parse(m)?;
     }
+    if let Some(m) = a.get("model") {
+        cfg.model = ModelKind::parse(m)?;
+    }
+    // Apply $ABC_IPU_MODEL here (not per-command) so every
+    // inference-shaped command — including the epi-only guards below —
+    // sees the effective model; a malformed override is a typed error,
+    // never a silent fall-back to epi.
+    cfg.model = ModelKind::resolve(cfg.model)?;
     if let Some(path) = a.get("checkpoint") {
         // --checkpoint "" disables a config-file checkpoint
         cfg.checkpoint = (!path.is_empty()).then(|| path.to_string());
@@ -148,6 +159,21 @@ fn infer_config(a: &ParsedArgs) -> Result<RunConfig> {
             ReturnStrategy::Outfeed { chunk: chunk.min(cfg.batch_per_device) };
     }
     Ok(cfg)
+}
+
+/// Commands wired to epi-specific surfaces (the scalar CPU baseline,
+/// the embedded COVID-19 country datasets) reject zoo models loudly
+/// instead of silently fitting the wrong model (DESIGN.md §14).
+fn require_epi(cfg: &RunConfig, cmd: &str) -> Result<()> {
+    if cfg.model != ModelKind::Epi {
+        return Err(Error::Config(format!(
+            "`repro {cmd}` is specific to the `epi` model; got model `{m}` — \
+             run it without --model/$ABC_IPU_MODEL, or use \
+             `repro infer --model {m}` for zoo models",
+            m = cfg.model.as_str(),
+        )));
+    }
+    Ok(())
 }
 
 fn load_dataset(name: &str, days: usize) -> Result<Dataset> {
@@ -291,9 +317,11 @@ fn infer_rejection(
     engine: Arc<dyn Backend>,
 ) -> Result<()> {
     let samples = cfg.accepted_samples;
-    let coord = Coordinator::new(engine, cfg.clone(), ds, Prior::paper())?;
+    let prior = cfg.model.instance().prior();
+    let coord = Coordinator::new(engine, cfg.clone(), ds, prior)?;
     println!(
-        "inferring on `{}` backend with tolerance {:.4e} on {} devices (batch {}/device)",
+        "inferring model `{}` on `{}` backend with tolerance {:.4e} on {} devices (batch {}/device)",
+        cfg.model.as_str(),
         coord.backend().name(),
         coord.tolerance(),
         cfg.devices,
@@ -376,6 +404,8 @@ fn infer_mcmc(
 fn cmd_table1(argv: Vec<String>) -> Result<()> {
     let a = parse(argv, INFER_FLAGS, &[])?;
     let mut cfg = infer_config(&a)?;
+    // the measured CPU-scalar baseline (`abc::cpu`) is epi-only
+    require_epi(&cfg, "table1")?;
     cfg.return_strategy = ReturnStrategy::Outfeed { chunk: cfg.batch_per_device };
     let samples = cfg.accepted_samples.min(100);
     let batch = cfg.batch_per_device;
@@ -526,7 +556,8 @@ fn cmd_postproc(argv: Vec<String>) -> Result<()> {
     ] {
         let mut cfg = base.clone();
         cfg.return_strategy = strategy;
-        let coord = Coordinator::new(engine.clone(), cfg, ds.clone(), Prior::paper())?;
+        let coord =
+            Coordinator::new(engine.clone(), cfg, ds.clone(), base.model.instance().prior())?;
         let r = coord.run_until(base.accepted_samples)?;
         t.row(&[
             label.into(),
@@ -612,7 +643,8 @@ fn cmd_tolerance_sweep(argv: Vec<String>) -> Result<()> {
         if cfg.max_runs == 0 {
             cfg.max_runs = 400;
         }
-        let coord = Coordinator::new(engine.clone(), cfg, ds.clone(), Prior::paper())?;
+        let coord =
+            Coordinator::new(engine.clone(), cfg, ds.clone(), base.model.instance().prior())?;
         match coord.run_until(base.accepted_samples) {
             Ok(r) => {
                 t.row(&[
@@ -681,7 +713,8 @@ fn cmd_scale(argv: Vec<String>) -> Result<()> {
             if cfg.max_runs == 0 {
                 cfg.max_runs = 400;
             }
-            let coord = Coordinator::new(engine.clone(), cfg, ds.clone(), Prior::paper())?;
+            let coord =
+                Coordinator::new(engine.clone(), cfg, ds.clone(), base.model.instance().prior())?;
             let r = coord.run_until(base.accepted_samples)?;
             let throughput =
                 r.metrics.samples_simulated as f64 / r.metrics.total.as_secs_f64();
@@ -710,6 +743,8 @@ fn cmd_countries(argv: Vec<String>) -> Result<()> {
     flags.push("rollouts");
     let a = parse(argv, &flags, &[])?;
     let base = infer_config(&a)?;
+    // embedded country datasets + `predict` are epi-specific
+    require_epi(&base, "countries")?;
     let horizon: usize = a.parse_or("horizon", 120)?;
     let rollouts: usize = a.parse_or("rollouts", 200)?;
     let engine = resolve_backend(&a, &base)?;

@@ -1,0 +1,419 @@
+//! The `CompartmentModel` seam: many compartmental dynamics, one engine.
+//!
+//! gemlib (PAPERS.md) argues the machinery the paper builds for one
+//! COVID-19 model should "define, simulate, and calibrate any Markov
+//! state-transition model". This module is that seam for us: a model is
+//! a stateless description of per-day tau-leap dynamics — state
+//! dimension, noise-channel count, initial state from θ, one scalar and
+//! one lane-vector step, an observed projection and its per-day squared
+//! residual — and `model::lanes::LaneEngine`, `lanes::scalar_reference`
+//! and `backend::native` are generic over it. The historical COVID-19
+//! model becomes [`EpiModel`], delegating to the exact free functions
+//! the pre-zoo kernels called, so the refactor is bit-identical for the
+//! historical path (`tests/golden_streams.rs` pins this).
+//!
+//! # What a model must guarantee (DESIGN.md §14)
+//!
+//! The lane/shard/checkpoint bit-identity contract of DESIGN.md §§8–11
+//! only survives model plurality if every instance obeys three rules:
+//!
+//! 1. **Pure per-day step.** `step`/`step_lanes` are pure functions of
+//!    `(state, θ, z, population)` — no interior mutability, no clock,
+//!    no RNG access beyond the supplied noise. The engine owns all
+//!    randomness (one counter-derived stream per lane).
+//! 2. **Fixed noise-channel order.** A day consumes exactly
+//!    [`CompartmentModel::n_noise`] normals per lane, in a fixed channel
+//!    order; the engine draws them lane-major (scalar) or row-major
+//!    ([`super::lanes`]' `NoiseSlab`) with identical per-lane streams.
+//! 3. **No cross-lane state.** `step_lanes` must be the element-wise
+//!    image of `step` — the same expression tree over [`F32xL`] lanes,
+//!    IEEE-exact ops plus shared libm transcendentals, unfused FMA —
+//!    so every lane equals the scalar call bit-for-bit.
+//!
+//! θ stays the fixed [`Theta`] = `[f32; 8]` across models: smaller
+//! models pin unused dimensions with degenerate `[0, 0]` prior bounds
+//! (sampling still draws all 8 uniforms, preserving the per-lane draw
+//! order), so priors, checkpoint codecs, SMC weights and MCMC proposals
+//! need no per-model schema.
+
+use super::simd::F32xL;
+use super::{InitialCondition, Prior, Theta, N_PARAMS};
+use crate::data::ObservedSeries;
+use crate::util::env::string_override;
+use crate::{Error, Result};
+
+/// Environment override for the model; wins over config and CLI (the
+/// same precedence as every other `ABC_IPU_*` knob).
+pub const MODEL_ENV: &str = "ABC_IPU_MODEL";
+
+/// Which compartmental model a config runs. Selected by JSON
+/// `"model"`, CLI `--model`, or [`MODEL_ENV`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ModelKind {
+    /// The paper's 6-compartment COVID-19 model — the default
+    /// (existing configs keep their meaning).
+    #[default]
+    Epi,
+    /// Classic 3-compartment stochastic SIR.
+    Sir,
+    /// 4-compartment SEIR with a θ-controlled initial exposed pool.
+    Seir,
+    /// Multi-region SIR metapopulation: 3 ring-coupled regions,
+    /// observed = summed cumulative incidence.
+    Metapop,
+}
+
+impl ModelKind {
+    /// Parse a model name (as accepted from JSON, CLI and env).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "epi" => Ok(Self::Epi),
+            "sir" => Ok(Self::Sir),
+            "seir" => Ok(Self::Seir),
+            "metapop" => Ok(Self::Metapop),
+            other => Err(Error::Config(format!(
+                "unknown model `{other}`: expected epi|sir|seir|metapop"
+            ))),
+        }
+    }
+
+    /// Canonical lowercase name (round-trips through [`Self::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Epi => "epi",
+            Self::Sir => "sir",
+            Self::Seir => "seir",
+            Self::Metapop => "metapop",
+        }
+    }
+
+    /// Resolve the effective model: [`MODEL_ENV`] wins over the
+    /// configured value, mirroring the lane/simd/method knobs. A
+    /// malformed override is a typed [`Error::Config`], never a silent
+    /// fall-back to [`ModelKind::Epi`].
+    pub fn resolve(configured: Self) -> Result<Self> {
+        match string_override(MODEL_ENV)? {
+            Some(s) => Self::parse(&s),
+            None => Ok(configured),
+        }
+    }
+
+    /// Every shipped model, in registry order — the axis the
+    /// model-parametric differential suites iterate.
+    pub fn all() -> [ModelKind; 4] {
+        [Self::Epi, Self::Sir, Self::Seir, Self::Metapop]
+    }
+
+    /// The model's singleton instance. Models are stateless unit
+    /// structs, so `'static` references are the whole registry.
+    pub fn instance(&self) -> &'static dyn CompartmentModel {
+        match self {
+            Self::Epi => &EpiModel,
+            Self::Sir => &super::zoo::SirModel,
+            Self::Seir => &super::zoo::SeirModel,
+            Self::Metapop => &super::zoo::MetapopModel,
+        }
+    }
+}
+
+/// One compartmental tau-leap model. See the module docs for the three
+/// bit-identity rules every implementation must obey; instances are
+/// stateless (`Send + Sync` unit structs registered in
+/// [`ModelKind::instance`]).
+pub trait CompartmentModel: Send + Sync + std::fmt::Debug {
+    /// The registry tag of this model.
+    fn kind(&self) -> ModelKind;
+
+    /// Number of state compartments (the SoA slab count).
+    fn n_compartments(&self) -> usize;
+
+    /// Normals consumed per lane per simulated day, in a fixed channel
+    /// order (rule 2 above).
+    fn n_noise(&self) -> usize;
+
+    /// Rows of the observed projection: `observed` blocks are
+    /// `[n_observed, days]` row-major.
+    fn n_observed(&self) -> usize;
+
+    /// Human-readable θ dimension names (degenerate dimensions keep a
+    /// name so artifact headers stay 8 columns wide).
+    fn param_names(&self) -> &'static [&'static str; N_PARAMS];
+
+    /// The model's default prior box. Unused θ dimensions are pinned
+    /// with `low == high == 0`.
+    fn prior(&self) -> Prior;
+
+    /// A known-good generating θ\* for synthetic-data recovery tests.
+    fn theta_star(&self) -> Theta;
+
+    /// Day-0 state from the dataset anchor and θ, written into
+    /// `out[..n_compartments]`.
+    fn init_state(&self, ic: &InitialCondition, theta: &Theta, out: &mut [f32]);
+
+    /// One scalar tau-leap day: `state[..n_compartments]` →
+    /// `out[..n_compartments]` using `z[..n_noise]` normals.
+    fn step(&self, state: &[f32], theta: &Theta, z: &[f32], population: f32, out: &mut [f32]);
+
+    /// The observed projection of one state, written into
+    /// `out[..n_observed]` — the row values a trajectory records and
+    /// synthetic datasets store. Must use the same expression tree as
+    /// [`Self::sq_distance_day`], so a state's distance to its own
+    /// projection is exactly zero.
+    fn observe(&self, state: &[f32], out: &mut [f32]);
+
+    /// Squared residual of day `t` of `state` against the
+    /// `[n_observed, days]` row-major `observed` block.
+    fn sq_distance_day(&self, state: &[f32], observed: &[f32], t: usize, days: usize) -> f32;
+
+    /// The element-wise lane image of [`Self::step`] (rule 3):
+    /// `state[..n_compartments]` slabs → `out[..n_compartments]` using
+    /// `z[..n_noise]` noise rows.
+    fn step_lanes(
+        &self,
+        state: &[F32xL],
+        theta: &[F32xL; N_PARAMS],
+        z: &[F32xL],
+        population: F32xL,
+        out: &mut [F32xL],
+    );
+
+    /// The element-wise lane image of [`Self::sq_distance_day`].
+    fn sq_distance_day_lanes(
+        &self,
+        state: &[F32xL],
+        observed: &[f32],
+        t: usize,
+        days: usize,
+    ) -> F32xL;
+
+    /// Project a dataset's observed columns into this model's
+    /// `[n_observed, days]` row-major block. The epi model keeps the
+    /// historical `[A ‖ R ‖ D]` flatten; reduced models fold columns
+    /// (e.g. SIR's removed row is `recovered + deaths`).
+    fn observed_from_series(&self, series: &ObservedSeries) -> Vec<f32>;
+}
+
+/// The paper's COVID-19 model as a [`CompartmentModel`]: pure
+/// delegation to the free functions in [`super`] (`step`,
+/// `sq_distance_day`, `simd::step_lanes`, …), so the generic engine
+/// reproduces the pre-zoo kernels bit-for-bit.
+#[derive(Debug)]
+pub struct EpiModel;
+
+impl CompartmentModel for EpiModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Epi
+    }
+
+    fn n_compartments(&self) -> usize {
+        super::N_COMPARTMENTS
+    }
+
+    fn n_noise(&self) -> usize {
+        super::N_TRANSITIONS
+    }
+
+    fn n_observed(&self) -> usize {
+        super::N_OBSERVED
+    }
+
+    fn param_names(&self) -> &'static [&'static str; N_PARAMS] {
+        &super::PARAM_NAMES
+    }
+
+    fn prior(&self) -> Prior {
+        Prior::paper()
+    }
+
+    fn theta_star(&self) -> Theta {
+        crate::data::synthetic::DEFAULT_THETA_STAR
+    }
+
+    fn init_state(&self, ic: &InitialCondition, theta: &Theta, out: &mut [f32]) {
+        out[..super::N_COMPARTMENTS].copy_from_slice(&ic.init_state(theta));
+    }
+
+    fn step(&self, state: &[f32], theta: &Theta, z: &[f32], population: f32, out: &mut [f32]) {
+        let s: super::State = std::array::from_fn(|c| state[c]);
+        let zz: [f32; super::N_TRANSITIONS] = std::array::from_fn(|k| z[k]);
+        out[..super::N_COMPARTMENTS].copy_from_slice(&super::step(&s, theta, &zz, population));
+    }
+
+    fn observe(&self, state: &[f32], out: &mut [f32]) {
+        use super::state_idx::{A, D, R};
+        out[0] = state[A];
+        out[1] = state[R];
+        out[2] = state[D];
+    }
+
+    fn sq_distance_day(&self, state: &[f32], observed: &[f32], t: usize, days: usize) -> f32 {
+        let s: super::State = std::array::from_fn(|c| state[c]);
+        super::sq_distance_day(&s, observed, t, days)
+    }
+
+    fn step_lanes(
+        &self,
+        state: &[F32xL],
+        theta: &[F32xL; N_PARAMS],
+        z: &[F32xL],
+        population: F32xL,
+        out: &mut [F32xL],
+    ) {
+        let s: [F32xL; super::N_COMPARTMENTS] = std::array::from_fn(|c| state[c]);
+        let zz: [F32xL; super::N_TRANSITIONS] = std::array::from_fn(|k| z[k]);
+        out[..super::N_COMPARTMENTS]
+            .copy_from_slice(&super::simd::step_lanes(&s, theta, &zz, population));
+    }
+
+    fn sq_distance_day_lanes(
+        &self,
+        state: &[F32xL],
+        observed: &[f32],
+        t: usize,
+        days: usize,
+    ) -> F32xL {
+        use super::state_idx::{A, D, R};
+        super::sq_distance_day_lanes(state[A], state[R], state[D], observed, t, days)
+    }
+
+    fn observed_from_series(&self, series: &ObservedSeries) -> Vec<f32> {
+        series.flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::lane_rng;
+
+    #[test]
+    fn kind_parse_round_trips_and_rejects_garbage() {
+        for kind in ModelKind::all() {
+            assert_eq!(ModelKind::parse(kind.as_str()).unwrap(), kind);
+            assert_eq!(kind.instance().kind(), kind);
+        }
+        assert_eq!(ModelKind::parse(" SIR ").unwrap(), ModelKind::Sir);
+        assert_eq!(ModelKind::default(), ModelKind::Epi);
+        for bad in ["", "sirs", "covid", "epi2", "metapop4"] {
+            let err = ModelKind::parse(bad).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{bad}");
+            assert!(err.to_string().contains("unknown model"), "{bad}: {err}");
+            assert!(err.to_string().contains("epi|sir|seir|metapop"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn every_model_declares_consistent_shapes() {
+        for kind in ModelKind::all() {
+            let m = kind.instance();
+            assert!(m.n_compartments() >= 2, "{kind:?}");
+            assert!(m.n_noise() >= 1, "{kind:?}");
+            assert!((1..=super::super::N_OBSERVED).contains(&m.n_observed()), "{kind:?}");
+            // θ* must be a usable generating point: inside the prior
+            assert!(m.prior().contains(&m.theta_star()), "{kind:?}");
+            // degenerate prior dims pin θ* exactly
+            let (low, high) = (m.prior().low().clone(), m.prior().high().clone());
+            for p in 0..N_PARAMS {
+                if low[p] == high[p] {
+                    assert_eq!(m.theta_star()[p], low[p], "{kind:?} param {p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn epi_instance_is_bit_identical_to_the_free_functions() {
+        let ic = InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 };
+        let m = EpiModel;
+        let mut rng = lane_rng([3, 4], 7);
+        let theta = Prior::paper().sample(&mut rng);
+        let mut state = vec![0.0f32; m.n_compartments()];
+        m.init_state(&ic, &theta, &mut state);
+        let want0 = ic.init_state(&theta);
+        assert_eq!(state, want0.to_vec());
+        let z: Vec<f32> = (0..m.n_noise()).map(|_| rng.normal_f32()).collect();
+        let mut next = vec![0.0f32; m.n_compartments()];
+        m.step(&state, &theta, &z, ic.population, &mut next);
+        let za: [f32; crate::model::N_TRANSITIONS] = std::array::from_fn(|k| z[k]);
+        let want = crate::model::step(&want0, &theta, &za, ic.population);
+        for c in 0..m.n_compartments() {
+            assert_eq!(next[c].to_bits(), want[c].to_bits(), "compartment {c}");
+        }
+        let observed: Vec<f32> = (0..m.n_observed() * 5).map(|i| i as f32 * 2.0).collect();
+        let got = m.sq_distance_day(&next, &observed, 2, 5);
+        assert_eq!(got.to_bits(), crate::model::sq_distance_day(&want, &observed, 2, 5).to_bits());
+    }
+
+    #[test]
+    fn every_model_lane_step_is_elementwise_scalar() {
+        use crate::model::simd::VLEN;
+        for kind in ModelKind::all() {
+            let m = kind.instance();
+            let ic =
+                InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 };
+            let nc = m.n_compartments();
+            let nz = m.n_noise();
+            let mut states = vec![vec![0.0f32; nc]; VLEN];
+            let mut thetas = vec![[0.0f32; N_PARAMS]; VLEN];
+            let mut zs = vec![vec![0.0f32; nz]; VLEN];
+            for l in 0..VLEN {
+                let mut rng = lane_rng([9, 9], l as u64);
+                thetas[l] = m.prior().sample(&mut rng);
+                m.init_state(&ic, &thetas[l], &mut states[l]);
+                for z in zs[l].iter_mut() {
+                    *z = rng.normal_f32();
+                }
+            }
+            let vs: Vec<F32xL> = (0..nc)
+                .map(|c| F32xL::load(&(0..VLEN).map(|l| states[l][c]).collect::<Vec<_>>()))
+                .collect();
+            let vt: [F32xL; N_PARAMS] = std::array::from_fn(|p| {
+                F32xL::load(&(0..VLEN).map(|l| thetas[l][p]).collect::<Vec<_>>())
+            });
+            let vz: Vec<F32xL> = (0..nz)
+                .map(|k| F32xL::load(&(0..VLEN).map(|l| zs[l][k]).collect::<Vec<_>>()))
+                .collect();
+            let mut next = vec![F32xL::splat(0.0); nc];
+            m.step_lanes(&vs, &vt, &vz, F32xL::splat(ic.population), &mut next);
+            let days = 4;
+            let observed: Vec<f32> =
+                (0..m.n_observed() * days).map(|i| i as f32 * 1.5).collect();
+            for l in 0..VLEN {
+                let mut want = vec![0.0f32; nc];
+                m.step(&states[l], &thetas[l], &zs[l], ic.population, &mut want);
+                for c in 0..nc {
+                    assert_eq!(
+                        next[c].lane(l).to_bits(),
+                        want[c].to_bits(),
+                        "{kind:?} lane {l} compartment {c}"
+                    );
+                }
+                for t in 0..days {
+                    let vres = m.sq_distance_day_lanes(&next, &observed, t, days);
+                    assert_eq!(
+                        vres.lane(l).to_bits(),
+                        m.sq_distance_day(&want, &observed, t, days).to_bits(),
+                        "{kind:?} lane {l} day {t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn observed_projection_has_declared_shape() {
+        let series = ObservedSeries::new(
+            (0..6).map(|i| 10.0 + i as f32).collect(),
+            (0..6).map(|i| 2.0 * i as f32).collect(),
+            (0..6).map(|i| 0.5 * i as f32).collect(),
+        )
+        .unwrap();
+        for kind in ModelKind::all() {
+            let m = kind.instance();
+            let block = m.observed_from_series(&series);
+            assert_eq!(block.len(), m.n_observed() * 6, "{kind:?}");
+        }
+        // epi keeps the historical flatten
+        assert_eq!(EpiModel.observed_from_series(&series), series.flatten());
+    }
+}

@@ -16,15 +16,18 @@
 //!    across widths 1/4/8/16/… and bit-identical to the scalar
 //!    [`Simulator`] oracle driven with the same per-lane streams
 //!    ([`scalar_reference`]). `tests/prop_lanes.rs` pins this.
-//! 3. **One arithmetic definition.** The scalar kernel path delegates
-//!    to the very same [`super::step`] / [`super::sq_distance_day`] /
-//!    [`InitialCondition::init_state`] the scalar oracle uses, and the
-//!    vectorized path ([`super::simd`], DESIGN.md §11) mirrors those
-//!    expression trees op-for-op over [`F32xL`] lanes — IEEE-exact ops
-//!    plus per-element libm transcendentals, so the oracle weld is by
-//!    construction, not by floating-point luck. Both kernels are kept:
-//!    `$ABC_IPU_SIMD` / the per-job [`SimdMode`] pick one, and the
-//!    differential suites pin them bit-identical.
+//! 3. **One arithmetic definition.** The engine is generic over
+//!    [`CompartmentModel`] (DESIGN.md §14): the scalar kernel path
+//!    delegates to the model's [`CompartmentModel::step`] /
+//!    [`CompartmentModel::sq_distance_day`] — for the historical epi
+//!    model these are the very [`super::step`] / distance free
+//!    functions the scalar oracle uses — and the vectorized path calls
+//!    the model's element-wise lane image
+//!    ([`CompartmentModel::step_lanes`], DESIGN.md §11), IEEE-exact
+//!    ops plus per-element libm transcendentals, so the oracle weld is
+//!    by construction, not by floating-point luck. Both kernels are
+//!    kept: `$ABC_IPU_SIMD` / the per-job [`SimdMode`] pick one, and
+//!    the differential suites pin them bit-identical per model.
 //!
 //! Because lanes are independent pure functions, the engine can also
 //! split lane *groups* across threads deterministically — the paper's
@@ -33,11 +36,9 @@
 //! determinism trivial" is obsolete: per-lane keying makes intra-run
 //! parallelism deterministic by construction). See DESIGN.md §8.
 
-use super::simd::{self, resolve_simd, F32xL, SimdMode, VLEN};
-use super::{
-    sq_distance_day, sq_distance_day_lanes, step, InitialCondition, Prior, Simulator, State,
-    Theta, N_COMPARTMENTS, N_OBSERVED, N_PARAMS, N_TRANSITIONS,
-};
+use super::compartment::{CompartmentModel, ModelKind};
+use super::simd::{resolve_simd, F32xL, SimdMode, VLEN};
+use super::{InitialCondition, Prior, Simulator, Theta, N_PARAMS};
 use crate::rng::{box_muller, lane_rng, Xoshiro256};
 use crate::{Error, Result};
 
@@ -91,13 +92,15 @@ pub fn resolve_parallelism(requested: usize) -> Result<usize> {
     })
 }
 
-/// The lane-batched SoA engine for one initial condition.
+/// The lane-batched SoA engine for one initial condition and one
+/// [`CompartmentModel`].
 ///
 /// `width`, `parallelism` and `simd` shape execution only; outputs
-/// depend on `(ic, prior, observed, days, batch, key)` alone.
+/// depend on `(model, ic, prior, observed, days, batch, key)` alone.
 #[derive(Debug, Clone)]
 pub struct LaneEngine {
     ic: InitialCondition,
+    model: &'static dyn CompartmentModel,
     width: usize,
     parallelism: usize,
     simd: bool,
@@ -105,12 +108,20 @@ pub struct LaneEngine {
 
 impl LaneEngine {
     /// An engine with an explicit lane width (clamped to
-    /// `[1, MAX_LANE_WIDTH]`), no intra-run threading and the
-    /// vectorized kernel. Explicit widths ignore `$ABC_IPU_LANES`, so
-    /// differential tests can pin specific widths under any environment
-    /// (pin the kernel too with [`LaneEngine::with_simd`]).
+    /// `[1, MAX_LANE_WIDTH]`), the historical epi model, no intra-run
+    /// threading and the vectorized kernel. Explicit widths ignore
+    /// `$ABC_IPU_LANES`, so differential tests can pin specific widths
+    /// under any environment (pin the kernel too with
+    /// [`LaneEngine::with_simd`], the model with
+    /// [`LaneEngine::with_model`]).
     pub fn new(ic: InitialCondition, width: usize) -> Self {
-        Self { ic, width: width.clamp(1, MAX_LANE_WIDTH), parallelism: 1, simd: true }
+        Self {
+            ic,
+            model: ModelKind::Epi.instance(),
+            width: width.clamp(1, MAX_LANE_WIDTH),
+            parallelism: 1,
+            simd: true,
+        }
     }
 
     /// The production (engine-path) configuration: width from
@@ -125,10 +136,18 @@ impl LaneEngine {
     pub fn auto(ic: InitialCondition, requested_width: usize) -> Result<Self> {
         Ok(Self {
             ic,
+            model: ModelKind::Epi.instance(),
             width: resolve_width(requested_width)?,
             parallelism: resolve_parallelism(1)?,
             simd: resolve_simd(SimdMode::Auto)?,
         })
+    }
+
+    /// Select the compartmental model the lanes simulate. The default
+    /// is [`ModelKind::Epi`], so pre-zoo call sites keep their meaning.
+    pub fn with_model(mut self, kind: ModelKind) -> Self {
+        self.model = kind.instance();
+        self
     }
 
     /// Override the intra-run thread count (clamped to >= 1).
@@ -160,6 +179,11 @@ impl LaneEngine {
     /// Whether the vectorized kernel is selected.
     pub fn simd_enabled(&self) -> bool {
         self.simd
+    }
+
+    /// The model the lanes simulate.
+    pub fn model(&self) -> &'static dyn CompartmentModel {
+        self.model
     }
 
     /// The initial condition lanes are anchored to.
@@ -203,10 +227,14 @@ impl LaneEngine {
                 "lane engine needs len >= 1 and days >= 1 (got {len}x{days})"
             )));
         }
-        if observed.len() != N_OBSERVED * days {
+        let n_obs = self.model.n_observed();
+        if observed.len() != n_obs * days {
             return Err(Error::ShapeMismatch {
-                what: "lane engine observed series".to_string(),
-                want: format!("{} elements ([3, {days}])", N_OBSERVED * days),
+                what: format!(
+                    "lane engine observed series (model `{}`)",
+                    self.model.kind().as_str()
+                ),
+                want: format!("{} elements ([{n_obs}, {days}])", n_obs * days),
                 got: format!("{} elements", observed.len()),
             });
         }
@@ -267,8 +295,8 @@ impl LaneEngine {
     /// Simulate one group of `dist_out.len()` lanes starting at global
     /// lane index `lane0`, writing θ and distances into the group's
     /// output slices. Dispatches to the vectorized or scalar kernel —
-    /// bit-identical by the §11 rules, pinned by `tests/prop_lanes.rs`
-    /// and `tests/golden_streams.rs`.
+    /// bit-identical by the §11/§14 rules, pinned by
+    /// `tests/prop_lanes.rs` and `tests/golden_streams.rs`.
     fn run_group(
         &self,
         prior: &Prior,
@@ -286,8 +314,9 @@ impl LaneEngine {
         }
     }
 
-    /// The scalar kernel: per-lane delegation to the oracle's
-    /// [`super::step`] / [`super::sq_distance_day`]. Kept as the
+    /// The scalar kernel: per-lane delegation to the model's
+    /// [`CompartmentModel::step`] / [`CompartmentModel::sq_distance_day`]
+    /// (for epi, the oracle's free functions). Kept as the
     /// always-available reference path (`$ABC_IPU_SIMD=off`).
     fn run_group_scalar(
         &self,
@@ -299,28 +328,37 @@ impl LaneEngine {
         theta_out: &mut [f32],
         dist_out: &mut [f32],
     ) {
+        let m = self.model;
+        let (nc, nz) = (m.n_compartments(), m.n_noise());
         let w = dist_out.len();
         debug_assert_eq!(theta_out.len(), w * N_PARAMS);
 
         // Group-local buffers are allocated per group rather than reused
-        // from per-thread scratch: at realistic geometries the ~9 small
+        // from per-thread scratch: at realistic geometries the few small
         // allocations are <1% of a group's simulation cost (W·days
-        // tau-leap days, each with a powf and 2.5 Box–Muller pairs per
-        // lane), and locality keeps the threaded path trivially correct.
+        // tau-leap days, each with nz/2 Box–Muller pairs per lane), and
+        // locality keeps the threaded path trivially correct.
         let mut rngs: Vec<Xoshiro256> =
             (0..w).map(|l| lane_rng(key, (lane0 + l) as u64)).collect();
         // Per-lane draw order mirrors the scalar oracle exactly: 8 prior
-        // uniforms first, then 5 normals per simulated day.
+        // uniforms first, then n_noise normals per simulated day.
         let thetas: Vec<Theta> = rngs.iter_mut().map(|r| prior.sample(r)).collect();
 
-        let mut state = LaneState::init(&self.ic, &thetas, w);
-        let mut acc: Vec<f32> =
-            (0..w).map(|l| sq_distance_day(&state.lane(l), observed, 0, days)).collect();
-        // Noise slab in the kernel's native [5, W] layout (transition-major).
-        let mut noise = vec![0.0f32; N_TRANSITIONS * w];
+        let mut state = LaneState::init(m, &self.ic, &thetas, w);
+        let mut lane_buf = vec![0.0f32; nc];
+        let mut next_buf = vec![0.0f32; nc];
+        let mut z_buf = vec![0.0f32; nz];
+        let mut acc: Vec<f32> = (0..w)
+            .map(|l| {
+                state.lane_into(l, &mut lane_buf);
+                m.sq_distance_day(&lane_buf, observed, 0, days)
+            })
+            .collect();
+        // Noise slab in the kernel's native [nz, W] layout (channel-major).
+        let mut noise = vec![0.0f32; nz * w];
         for t in 1..days {
             for (l, rng) in rngs.iter_mut().enumerate() {
-                for k in 0..N_TRANSITIONS {
+                for k in 0..nz {
                     noise[k * w + l] = rng.normal_f32();
                 }
             }
@@ -328,10 +366,13 @@ impl LaneEngine {
             // gather and one scatter per lane-day, accumulating the
             // residual from the freshly-stepped state before scatter.
             for l in 0..w {
-                let z: [f32; N_TRANSITIONS] = std::array::from_fn(|k| noise[k * w + l]);
-                let next = step(&state.lane(l), &thetas[l], &z, self.ic.population);
-                acc[l] += sq_distance_day(&next, observed, t, days);
-                state.set_lane(l, &next);
+                state.lane_into(l, &mut lane_buf);
+                for (k, z) in z_buf.iter_mut().enumerate() {
+                    *z = noise[k * w + l];
+                }
+                m.step(&lane_buf, &thetas[l], &z_buf, self.ic.population, &mut next_buf);
+                acc[l] += m.sq_distance_day(&next_buf, observed, t, days);
+                state.set_lane(l, &next_buf);
             }
         }
         for (l, a) in acc.iter().enumerate() {
@@ -341,11 +382,12 @@ impl LaneEngine {
     }
 
     /// The vectorized kernel: whole [`F32xL`] vectors iterate over the
-    /// `[6, W]` compartment, `[8, W]` θ and `[5, W]` noise slabs, with a
-    /// masked scalar tail for `W % VLEN != 0` (partial loads pad, partial
-    /// stores mask — pad lanes never touch an RNG and are never written
-    /// back). Noise comes from [`NoiseSlab`], the row-at-a-time Box–Muller
-    /// fill that preserves each lane's exact scalar draw order.
+    /// `[nc, W]` compartment, `[8, W]` θ and `[nz, W]` noise slabs, with
+    /// a masked scalar tail for `W % VLEN != 0` (partial loads pad,
+    /// partial stores mask — pad lanes never touch an RNG and are never
+    /// written back). Noise comes from [`NoiseSlab`], the row-at-a-time
+    /// Box–Muller fill that preserves each lane's exact scalar draw
+    /// order for any channel count.
     fn run_group_simd(
         &self,
         prior: &Prior,
@@ -356,7 +398,8 @@ impl LaneEngine {
         theta_out: &mut [f32],
         dist_out: &mut [f32],
     ) {
-        use super::state_idx::{A, D, R};
+        let m = self.model;
+        let (nc, nz) = (m.n_compartments(), m.n_noise());
         let w = dist_out.len();
         debug_assert_eq!(theta_out.len(), w * N_PARAMS);
 
@@ -371,45 +414,44 @@ impl LaneEngine {
             }
         }
 
-        let mut state = LaneState::init(&self.ic, &thetas, w);
+        let mut state = LaneState::init(m, &self.ic, &thetas, w);
         let mut acc = vec![0.0f32; w];
+        let mut s_vec = vec![F32xL::splat(0.0); nc];
+        let mut next_vec = vec![F32xL::splat(0.0); nc];
+        let mut z_vec = vec![F32xL::splat(0.0); nz];
         // Day-0 residual straight off the init slabs.
         for c in (0..w).step_by(VLEN) {
             let end = (c + VLEN).min(w);
-            let res = sq_distance_day_lanes(
-                F32xL::load_partial(&state.slabs[A][c..end], 0.0),
-                F32xL::load_partial(&state.slabs[R][c..end], 0.0),
-                F32xL::load_partial(&state.slabs[D][c..end], 0.0),
-                observed,
-                0,
-                days,
-            );
+            for (comp, v) in s_vec.iter_mut().enumerate() {
+                *v = F32xL::load_partial(&state.slabs[comp][c..end], 0.0);
+            }
+            let res = m.sq_distance_day_lanes(&s_vec, observed, 0, days);
             res.store_partial(&mut acc[c..end]);
         }
 
         let population = F32xL::splat(self.ic.population);
-        let mut noise = vec![0.0f32; N_TRANSITIONS * w];
+        let mut noise = vec![0.0f32; nz * w];
         let mut slab = NoiseSlab::new(w);
         for t in 1..days {
-            slab.fill_day(&mut rngs, &mut noise);
+            slab.fill_day(&mut rngs, &mut noise, nz);
             for c in (0..w).step_by(VLEN) {
                 let end = (c + VLEN).min(w);
                 // Pad lanes load a fill of 0.0 — they compute harmless
                 // garbage that the partial stores below never write.
-                let s: [F32xL; N_COMPARTMENTS] = std::array::from_fn(|comp| {
-                    F32xL::load_partial(&state.slabs[comp][c..end], 0.0)
-                });
+                for (comp, v) in s_vec.iter_mut().enumerate() {
+                    *v = F32xL::load_partial(&state.slabs[comp][c..end], 0.0);
+                }
                 let th: [F32xL; N_PARAMS] = std::array::from_fn(|p| {
                     F32xL::load_partial(&theta_slabs[p][c..end], 0.0)
                 });
-                let z: [F32xL; N_TRANSITIONS] = std::array::from_fn(|k| {
-                    F32xL::load_partial(&noise[k * w + c..k * w + end], 0.0)
-                });
-                let next = simd::step_lanes(&s, &th, &z, population);
-                let res = sq_distance_day_lanes(next[A], next[R], next[D], observed, t, days);
+                for (k, z) in z_vec.iter_mut().enumerate() {
+                    *z = F32xL::load_partial(&noise[k * w + c..k * w + end], 0.0);
+                }
+                m.step_lanes(&s_vec, &th, &z_vec, population, &mut next_vec);
+                let res = m.sq_distance_day_lanes(&next_vec, observed, t, days);
                 let sum = F32xL::load_partial(&acc[c..end], 0.0) + res;
                 sum.store_partial(&mut acc[c..end]);
-                for (comp, row) in next.iter().enumerate() {
+                for (comp, row) in next_vec.iter().enumerate() {
                     row.store_partial(&mut state.slabs[comp][c..end]);
                 }
             }
@@ -425,21 +467,24 @@ impl LaneEngine {
     }
 }
 
-/// Row-at-a-time Box–Muller fill for the `[5, W]` noise slab — the
+/// Row-at-a-time Box–Muller fill for the `[nz, W]` noise slab — the
 /// vectorized form of `W` independent [`Xoshiro256::normal_f32`] lanes.
 ///
 /// Correctness rests on two facts. First, each lane owns a private RNG,
 /// so interleaving *across* lanes (draw `u1` for every lane, then `u2`
 /// for every lane) cannot change any lane's within-stream draw order —
 /// which stays exactly the scalar `u1, u2, u1, u2, …`. Second, every
-/// lane of a group draws the same count of normals per day (5) and
-/// uniforms in between (prior sampling never touches the spare cache),
-/// so the Box–Muller spare parity is **group-wide**: either every lane
-/// has a cached spare or none does, and one `have_spare` flag replaces
-/// `W` per-lane `Option`s. Rows are then filled pair-wise — spare row
-/// first when present, then `(primary, secondary)` row pairs via
-/// [`box_muller`] (the same arithmetic the scalar path calls), with an
-/// odd last row banking its secondaries as the next day's spares.
+/// lane of a group draws the same count of normals per day (the model's
+/// `n_noise`) and uniforms in between (prior sampling never touches the
+/// spare cache), so the Box–Muller spare parity is **group-wide**:
+/// either every lane has a cached spare or none does, and one
+/// `have_spare` flag replaces `W` per-lane `Option`s. Rows are then
+/// filled pair-wise — spare row first when present, then
+/// `(primary, secondary)` row pairs via [`box_muller`] (the same
+/// arithmetic the scalar path calls), with an odd last row banking its
+/// secondaries as the next day's spares. Even channel counts (SIR's 2,
+/// metapop's 6) therefore never bank; odd counts (epi's 5, SEIR's 3)
+/// bank exactly like the scalar `normal_f32` stream.
 struct NoiseSlab {
     /// Cached second Box–Muller normal per lane (f64, pre-cast).
     spare: Vec<f64>,
@@ -460,12 +505,12 @@ impl NoiseSlab {
         }
     }
 
-    /// Fill one day's `[5, W]` slab (`out[k * w + l]` = transition `k`
+    /// Fill one day's `[n_rows, W]` slab (`out[k * w + l]` = channel `k`
     /// of lane `l`), drawing from each lane's RNG in exactly the order
     /// the scalar `normal_f32` loop would.
-    fn fill_day(&mut self, rngs: &mut [Xoshiro256], out: &mut [f32]) {
+    fn fill_day(&mut self, rngs: &mut [Xoshiro256], out: &mut [f32], n_rows: usize) {
         let w = rngs.len();
-        debug_assert_eq!(out.len(), N_TRANSITIONS * w);
+        debug_assert_eq!(out.len(), n_rows * w);
         let mut k = 0;
         if self.have_spare {
             for (l, &s) in self.spare.iter().enumerate() {
@@ -474,12 +519,12 @@ impl NoiseSlab {
             self.have_spare = false;
             k = 1;
         }
-        while k < N_TRANSITIONS {
+        while k < n_rows {
             for (l, rng) in rngs.iter_mut().enumerate() {
                 self.u1[l] = 1.0 - rng.uniform();
                 self.u2[l] = rng.uniform();
             }
-            if k + 1 < N_TRANSITIONS {
+            if k + 1 < n_rows {
                 // full pair: primary row k, secondary row k+1
                 for l in 0..w {
                     let (primary, secondary) = box_muller(self.u1[l], self.u2[l]);
@@ -501,34 +546,43 @@ impl NoiseSlab {
 }
 
 /// Structure-of-arrays state: `slabs[c][l]` is compartment `c` of lane
-/// `l` — the `[6, W]` layout of the accelerator kernels.
+/// `l` — the `[nc, W]` layout of the accelerator kernels.
 struct LaneState {
-    slabs: [Vec<f32>; N_COMPARTMENTS],
+    slabs: Vec<Vec<f32>>,
 }
 
 impl LaneState {
-    /// Day-0 state for every lane, via the scalar oracle's
-    /// [`InitialCondition::init_state`].
-    fn init(ic: &InitialCondition, thetas: &[Theta], w: usize) -> Self {
-        let mut slabs: [Vec<f32>; N_COMPARTMENTS] = std::array::from_fn(|_| vec![0.0f32; w]);
+    /// Day-0 state for every lane, via the model's
+    /// [`CompartmentModel::init_state`].
+    fn init(
+        model: &dyn CompartmentModel,
+        ic: &InitialCondition,
+        thetas: &[Theta],
+        w: usize,
+    ) -> Self {
+        let nc = model.n_compartments();
+        let mut slabs: Vec<Vec<f32>> = (0..nc).map(|_| vec![0.0f32; w]).collect();
+        let mut buf = vec![0.0f32; nc];
         for (l, theta) in thetas.iter().enumerate() {
-            let s = ic.init_state(theta);
-            for (c, v) in s.iter().enumerate() {
+            model.init_state(ic, theta, &mut buf);
+            for (c, v) in buf.iter().enumerate() {
                 slabs[c][l] = *v;
             }
         }
         Self { slabs }
     }
 
-    /// Gather lane `l` as a scalar state vector.
+    /// Gather lane `l` into a scalar state buffer.
     #[inline]
-    fn lane(&self, l: usize) -> State {
-        std::array::from_fn(|c| self.slabs[c][l])
+    fn lane_into(&self, l: usize, out: &mut [f32]) {
+        for (c, slab) in self.slabs.iter().enumerate() {
+            out[c] = slab[l];
+        }
     }
 
-    /// Scatter a scalar state vector into lane `l`.
+    /// Scatter a scalar state buffer into lane `l`.
     #[inline]
-    fn set_lane(&mut self, l: usize, s: &State) {
+    fn set_lane(&mut self, l: usize, s: &[f32]) {
         for (c, v) in s.iter().enumerate() {
             self.slabs[c][l] = *v;
         }
@@ -538,6 +592,8 @@ impl LaneState {
 /// The scalar-oracle run: the identical per-lane stream discipline
 /// driven through the scalar [`Simulator`] — for sample `i`, a fresh
 /// `lane_rng(key, i)` samples θ then feeds the fused distance kernel.
+/// The simulator carries the model ([`Simulator::for_model`]), so this
+/// is the oracle for every zoo member.
 /// [`LaneEngine::sample_distance_batch`] must reproduce this
 /// bit-for-bit at every width and thread count (`tests/prop_lanes.rs`);
 /// it is the validation baseline every accelerated path is welded to.
@@ -563,6 +619,7 @@ pub fn scalar_reference(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::N_OBSERVED;
 
     fn ic() -> InitialCondition {
         InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 }
@@ -594,6 +651,34 @@ mod tests {
                     .unwrap();
                 assert_eq!(bits(&t), bits(&wt), "thetas at width {width} x{threads}");
                 assert_eq!(bits(&d), bits(&wd), "distances at width {width} x{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_model_matches_its_oracle_across_widths() {
+        // The in-crate smoke of the model-parametric differential
+        // matrix (tests/prop_lanes.rs runs the full one).
+        let days = 7;
+        let batch = 13;
+        for kind in ModelKind::all() {
+            let m = kind.instance();
+            let prior = m.prior();
+            let obs: Vec<f32> =
+                (0..m.n_observed() * days).map(|i| (i % 53) as f32 * 4.0).collect();
+            let sim = Simulator::for_model(ic(), kind);
+            let (wt, wd) =
+                scalar_reference(&sim, &prior, &obs, days, batch, [7, 7]).unwrap();
+            for width in [1usize, 5, 8] {
+                for simd in [false, true] {
+                    let engine =
+                        LaneEngine::new(ic(), width).with_model(kind).with_simd(simd);
+                    let (t, d) = engine
+                        .sample_distance_batch(&prior, &obs, days, batch, [7, 7])
+                        .unwrap();
+                    assert_eq!(bits(&t), bits(&wt), "{kind:?} w{width} simd={simd}");
+                    assert_eq!(bits(&d), bits(&wd), "{kind:?} w{width} simd={simd}");
+                }
             }
         }
     }
@@ -667,6 +752,14 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("shape mismatch"), "{err}");
+        // per-model shapes: a [3, days] epi block is the wrong shape
+        // for a 1-row metapop engine, and the error names the model
+        let err = LaneEngine::new(ic(), 8)
+            .with_model(ModelKind::Metapop)
+            .sample_distance_batch(&prior, &observed(4), 4, 4, [0, 0])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("metapop"), "{err}");
     }
 
     #[test]
@@ -675,6 +768,11 @@ mod tests {
         assert_eq!(engine.width(), 1);
         assert_eq!(engine.parallelism(), 1);
         assert_eq!(engine.initial_condition().a0, 155.0);
+        assert_eq!(engine.model().kind(), ModelKind::Epi);
+        assert_eq!(
+            engine.with_model(ModelKind::Seir).model().kind(),
+            ModelKind::Seir
+        );
     }
 
     #[test]
@@ -708,35 +806,43 @@ mod tests {
     fn noise_slab_fill_is_bit_identical_to_per_lane_normals() {
         // The vectorized Box–Muller fill must reproduce the scalar
         // lane-major fill exactly — including the spare-cache parity
-        // across consecutive days and partial (tail-group) widths.
-        for w in [1usize, 3, 7, 8, 16] {
-            let mut slab_rngs: Vec<Xoshiro256> =
-                (0..w).map(|l| lane_rng([5, 6], l as u64)).collect();
-            let mut scalar_rngs: Vec<Xoshiro256> =
-                (0..w).map(|l| lane_rng([5, 6], l as u64)).collect();
-            // lanes enter a day loop after 8 prior uniforms, like a run
-            for rng in slab_rngs.iter_mut().chain(scalar_rngs.iter_mut()) {
-                for _ in 0..N_PARAMS {
-                    rng.uniform();
-                }
-            }
-            let mut slab = NoiseSlab::new(w);
-            let mut got = vec![0.0f32; N_TRANSITIONS * w];
-            let mut want = vec![0.0f32; N_TRANSITIONS * w];
-            for day in 0..6 {
-                slab.fill_day(&mut slab_rngs, &mut got);
-                for (l, rng) in scalar_rngs.iter_mut().enumerate() {
-                    for k in 0..N_TRANSITIONS {
-                        want[k * w + l] = rng.normal_f32();
+        // across consecutive days and partial (tail-group) widths —
+        // for every channel count the zoo uses (even counts never
+        // bank a spare, odd counts bank every day).
+        for n_rows in [2usize, 3, 5, 6] {
+            for w in [1usize, 3, 7, 8, 16] {
+                let mut slab_rngs: Vec<Xoshiro256> =
+                    (0..w).map(|l| lane_rng([5, 6], l as u64)).collect();
+                let mut scalar_rngs: Vec<Xoshiro256> =
+                    (0..w).map(|l| lane_rng([5, 6], l as u64)).collect();
+                // lanes enter a day loop after 8 prior uniforms, like a run
+                for rng in slab_rngs.iter_mut().chain(scalar_rngs.iter_mut()) {
+                    for _ in 0..N_PARAMS {
+                        rng.uniform();
                     }
                 }
-                let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
-                let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
-                assert_eq!(gb, wb, "width {w} day {day}");
-            }
-            // and the underlying generators stay in lockstep
-            for (a, b) in slab_rngs.iter_mut().zip(scalar_rngs.iter_mut()) {
-                assert_eq!(a.next_u64(), b.next_u64(), "width {w}: stream drift");
+                let mut slab = NoiseSlab::new(w);
+                let mut got = vec![0.0f32; n_rows * w];
+                let mut want = vec![0.0f32; n_rows * w];
+                for day in 0..6 {
+                    slab.fill_day(&mut slab_rngs, &mut got, n_rows);
+                    for (l, rng) in scalar_rngs.iter_mut().enumerate() {
+                        for k in 0..n_rows {
+                            want[k * w + l] = rng.normal_f32();
+                        }
+                    }
+                    let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                    let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(gb, wb, "rows {n_rows} width {w} day {day}");
+                }
+                // and the underlying generators stay in lockstep
+                for (a, b) in slab_rngs.iter_mut().zip(scalar_rngs.iter_mut()) {
+                    assert_eq!(
+                        a.next_u64(),
+                        b.next_u64(),
+                        "rows {n_rows} width {w}: stream drift"
+                    );
+                }
             }
         }
     }

@@ -23,13 +23,16 @@
 //! reference implementation the lane engine — and every future
 //! SIMD/accelerator backend — is validated against.
 
+pub mod compartment;
 mod distance;
 pub mod epi;
 pub mod lanes;
 mod prior;
 pub mod simd;
 mod simulator;
+pub mod zoo;
 
+pub use compartment::{CompartmentModel, EpiModel, ModelKind, MODEL_ENV};
 pub use distance::{euclidean_distance, sq_distance_day, sq_distance_day_lanes};
 pub use lanes::LaneEngine;
 pub use prior::Prior;

@@ -2,25 +2,37 @@
 //!
 //! [`Simulator`] is the scalar-loop reference: it plays the role of the
 //! paper's Xeon baseline (Table 1's "2×CPU" rows) and of the oracle the
-//! accelerator path is validated against. The inner loop is written to
-//! be auto-vectorization friendly (per-sample arrays, no allocation in
-//! the day loop) — the bench suites (DESIGN.md §6) measure it as
-//! `cpu_sim_distance_1_sample_49d` / `cpu_scalar_baseline`.
+//! accelerator path is validated against. It carries a
+//! [`CompartmentModel`] (default: the historical epi model, so pre-zoo
+//! call sites keep their meaning) and delegates every per-day update to
+//! it, which makes it the scalar oracle for the whole zoo. The inner
+//! loop is written to be auto-vectorization friendly (per-sample
+//! buffers, no allocation in the day loop) — the bench suites
+//! (DESIGN.md §6) measure it as `cpu_sim_distance_1_sample_49d` /
+//! `cpu_scalar_baseline`.
 
-use super::{InitialCondition, State, Theta, N_OBSERVED};
+use super::compartment::{CompartmentModel, ModelKind};
+use super::{InitialCondition, Theta};
 use crate::rng::Xoshiro256;
 use crate::{Error, Result};
 
-/// Host-side simulator for one initial condition.
+/// Host-side simulator for one initial condition and one model.
 #[derive(Debug, Clone)]
 pub struct Simulator {
     ic: InitialCondition,
+    model: &'static dyn CompartmentModel,
 }
 
 impl Simulator {
-    /// Build a simulator for the given initial condition.
+    /// Build a simulator for the given initial condition, with the
+    /// historical epi model.
     pub fn new(ic: InitialCondition) -> Self {
-        Self { ic }
+        Self { ic, model: ModelKind::Epi.instance() }
+    }
+
+    /// Build a simulator for a specific zoo model.
+    pub fn for_model(ic: InitialCondition, kind: ModelKind) -> Self {
+        Self { ic, model: kind.instance() }
     }
 
     /// The initial condition this simulator anchors day 0 to.
@@ -28,9 +40,15 @@ impl Simulator {
         &self.ic
     }
 
+    /// The model this simulator steps.
+    pub fn model(&self) -> &'static dyn CompartmentModel {
+        self.model
+    }
+
     /// Simulate one trajectory, returning the observables row-major as
-    /// `[A; days] ++ [R; days] ++ [D; days]` (the `[3, days]` layout used
-    /// by the artifacts and the observed data).
+    /// an `[n_observed, days]` block (for epi: `[A; days] ++ [R; days]
+    /// ++ [D; days]`, the `[3, days]` layout used by the artifacts and
+    /// the observed data).
     ///
     /// Day 0 is the anchored initial condition; each subsequent day is
     /// one tau-leap update, matching `ref.simulate`. Errors on
@@ -44,49 +62,74 @@ impl Simulator {
         rng: &mut Xoshiro256,
     ) -> Result<Vec<f32>> {
         check_days(days)?;
-        let mut out = vec![0.0f32; N_OBSERVED * days];
-        let mut state = self.ic.init_state(theta);
-        self.record(&state, 0, days, &mut out);
+        let m = self.model;
+        let (nc, nz, no) = (m.n_compartments(), m.n_noise(), m.n_observed());
+        let mut out = vec![0.0f32; no * days];
+        let mut state = vec![0.0f32; nc];
+        let mut next = vec![0.0f32; nc];
+        let mut z = vec![0.0f32; nz];
+        let mut obs = vec![0.0f32; no];
+        m.init_state(&self.ic, theta, &mut state);
+        self.record(&state, 0, days, &mut obs, &mut out);
         for t in 1..days {
-            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
-            state = super::step(&state, theta, &z, self.ic.population);
-            self.record(&state, t, days, &mut out);
+            for zz in z.iter_mut() {
+                *zz = rng.normal_f32();
+            }
+            m.step(&state, theta, &z, self.ic.population, &mut next);
+            std::mem::swap(&mut state, &mut next);
+            self.record(&state, t, days, &mut obs, &mut out);
         }
         Ok(out)
     }
 
     /// Simulate one trajectory and return its Euclidean distance to
-    /// `observed` (layout `[3, days]`), never materializing the
+    /// `observed` (layout `[n_observed, days]`), never materializing the
     /// trajectory — the host analogue of the fused Pallas kernel.
     /// Errors on `days == 0` or an `observed` block whose length is not
-    /// `3 * days`.
+    /// `n_observed * days`.
     pub fn distance(&self, theta: &Theta, observed: &[f32], days: usize,
                     rng: &mut Xoshiro256) -> Result<f32> {
         check_days(days)?;
-        check_observed(observed, days)?;
-        let mut state = self.ic.init_state(theta);
-        let mut acc = super::sq_distance_day(&state, observed, 0, days);
+        check_observed(self.model, observed, days)?;
+        let m = self.model;
+        let (nc, nz) = (m.n_compartments(), m.n_noise());
+        let mut state = vec![0.0f32; nc];
+        let mut next = vec![0.0f32; nc];
+        let mut z = vec![0.0f32; nz];
+        m.init_state(&self.ic, theta, &mut state);
+        let mut acc = m.sq_distance_day(&state, observed, 0, days);
         for t in 1..days {
-            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
-            state = super::step(&state, theta, &z, self.ic.population);
-            acc += super::sq_distance_day(&state, observed, t, days);
+            for zz in z.iter_mut() {
+                *zz = rng.normal_f32();
+            }
+            m.step(&state, theta, &z, self.ic.population, &mut next);
+            std::mem::swap(&mut state, &mut next);
+            acc += m.sq_distance_day(&state, observed, t, days);
         }
         Ok(acc.sqrt())
     }
 
-    /// Full state trajectory `[6, days]` row-major (tests, liveness
-    /// model). Errors on `days == 0`, like its siblings.
+    /// Full state trajectory `[n_compartments, days]` row-major (tests,
+    /// liveness model). Errors on `days == 0`, like its siblings.
     pub fn full_trajectory(&self, theta: &Theta, days: usize,
                            rng: &mut Xoshiro256) -> Result<Vec<f32>> {
         check_days(days)?;
-        let mut out = vec![0.0f32; 6 * days];
-        let mut state = self.ic.init_state(theta);
+        let m = self.model;
+        let (nc, nz) = (m.n_compartments(), m.n_noise());
+        let mut out = vec![0.0f32; nc * days];
+        let mut state = vec![0.0f32; nc];
+        let mut next = vec![0.0f32; nc];
+        let mut z = vec![0.0f32; nz];
+        m.init_state(&self.ic, theta, &mut state);
         for (c, &v) in state.iter().enumerate() {
             out[c * days] = v;
         }
         for t in 1..days {
-            let z: [f32; 5] = std::array::from_fn(|_| rng.normal_f32());
-            state = super::step(&state, theta, &z, self.ic.population);
+            for zz in z.iter_mut() {
+                *zz = rng.normal_f32();
+            }
+            m.step(&state, theta, &z, self.ic.population, &mut next);
+            std::mem::swap(&mut state, &mut next);
             for (c, &v) in state.iter().enumerate() {
                 out[c * days + t] = v;
             }
@@ -95,11 +138,11 @@ impl Simulator {
     }
 
     #[inline]
-    fn record(&self, state: &State, t: usize, days: usize, out: &mut [f32]) {
-        use super::state_idx::*;
-        out[t] = state[A];
-        out[days + t] = state[R];
-        out[2 * days + t] = state[D];
+    fn record(&self, state: &[f32], t: usize, days: usize, obs: &mut [f32], out: &mut [f32]) {
+        self.model.observe(state, obs);
+        for (row, &v) in obs.iter().enumerate() {
+            out[row * days + t] = v;
+        }
     }
 }
 
@@ -114,12 +157,14 @@ fn check_days(days: usize) -> Result<()> {
     Ok(())
 }
 
-/// `observed` must be a `[3, days]` row-major block.
-fn check_observed(observed: &[f32], days: usize) -> Result<()> {
-    if observed.len() != N_OBSERVED * days {
+/// `observed` must be an `[n_observed, days]` row-major block for the
+/// simulator's model.
+fn check_observed(model: &dyn CompartmentModel, observed: &[f32], days: usize) -> Result<()> {
+    let no = model.n_observed();
+    if observed.len() != no * days {
         return Err(Error::ShapeMismatch {
-            what: "simulator observed series".to_string(),
-            want: format!("{} elements ([3, {days}])", N_OBSERVED * days),
+            what: format!("simulator observed series (model `{}`)", model.kind().as_str()),
+            want: format!("{} elements ([{no}, {days}])", no * days),
             got: format!("{} elements", observed.len()),
         });
     }
@@ -148,7 +193,7 @@ pub fn simulate_distance_batch(
 }
 
 /// Simulate `thetas` trajectories (posterior predictive), returning each
-/// as a `[3, days]` row-major vector.
+/// as an `[n_observed, days]` row-major vector.
 pub fn simulate_traj(sim: &Simulator, thetas: &[Theta], days: usize,
                      rng: &mut Xoshiro256) -> Result<Vec<Vec<f32>>> {
     thetas.iter().map(|t| sim.trajectory(t, days, rng)).collect()
@@ -206,6 +251,24 @@ mod tests {
     }
 
     #[test]
+    fn zoo_distance_to_self_with_same_seed_is_zero() {
+        // observe() and sq_distance_day() must share one expression
+        // tree per model: a trajectory replayed on the same stream has
+        // distance exactly 0.0, for every zoo member.
+        for kind in ModelKind::all() {
+            let s = Simulator::for_model(*sim().initial_condition(), kind);
+            let theta = s.model().theta_star();
+            let days = 15;
+            let mut r1 = Xoshiro256::seed_from(3);
+            let observed = s.trajectory(&theta, days, &mut r1).unwrap();
+            assert_eq!(observed.len(), s.model().n_observed() * days, "{kind:?}");
+            let mut r2 = Xoshiro256::seed_from(3);
+            let d = s.distance(&theta, &observed, days, &mut r2).unwrap();
+            assert_eq!(d, 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
     fn batch_respects_prior_bounds() {
         let prior = Prior::paper();
         let mut rng = Xoshiro256::seed_from(4);
@@ -241,6 +304,16 @@ mod tests {
             crate::Error::ShapeMismatch { want, got, .. } => {
                 assert!(want.contains("12"), "{want}");
                 assert!(got.contains("10"), "{got}");
+            }
+            other => panic!("expected ShapeMismatch, got {other}"),
+        }
+        // a correct epi block is the wrong shape for a 2-row SIR model
+        let s = Simulator::for_model(*sim().initial_condition(), ModelKind::Sir);
+        let err = s.distance(&THETA, &[0.0; 12], 4, &mut rng).unwrap_err();
+        match err {
+            crate::Error::ShapeMismatch { what, want, .. } => {
+                assert!(what.contains("sir"), "{what}");
+                assert!(want.contains('8'), "{want}");
             }
             other => panic!("expected ShapeMismatch, got {other}"),
         }

@@ -1,0 +1,550 @@
+//! The model zoo: [`CompartmentModel`] instances beyond the paper's
+//! COVID-19 model.
+//!
+//! Each model here is a stateless unit struct obeying the three
+//! bit-identity rules of [`super::compartment`] (pure per-day step,
+//! fixed noise-channel order, element-wise lane image). All reuse the
+//! tau-leap primitive [`super::sample_transition`] /
+//! [`simd::sample_transition_lanes`] — `max(floor(h + sqrt(h)·z), 0)`
+//! with sequential availability clamps — so every zoo member inherits
+//! the COVID kernel's numeric discipline.
+//!
+//! θ stays `[f32; 8]`: unused dimensions are pinned by degenerate
+//! `[0, 0]` prior bounds and named `unused` (artifact headers keep
+//! their 8 columns; MCMC proposals and SMC shrinkage leave zero-width
+//! dimensions fixed automatically).
+
+use super::compartment::{CompartmentModel, ModelKind};
+use super::simd::{self, F32xL};
+use super::{sample_transition, InitialCondition, Prior, Theta, N_PARAMS};
+use crate::data::ObservedSeries;
+
+/// Fold a dataset's recovered + deaths columns into one "removed" row
+/// (bit-exact for the synthetic zoo datasets, which store deaths = 0).
+fn removed_row(series: &ObservedSeries) -> Vec<f32> {
+    series
+        .recovered
+        .iter()
+        .zip(&series.deaths)
+        .map(|(r, d)| r + d)
+        .collect()
+}
+
+/// `[I-row ‖ removed-row]`, the observed block shared by SIR and SEIR.
+fn prevalence_removed_block(series: &ObservedSeries) -> Vec<f32> {
+    let mut out = Vec::with_capacity(2 * series.days());
+    out.extend_from_slice(&series.active);
+    out.extend(removed_row(series));
+    out
+}
+
+// ---------------------------------------------------------------- SIR
+
+/// Classic stochastic SIR: `S → I → R`, two noise channels
+/// (infection `β·S·I/P`, recovery `γ·I`), observed `[I ‖ R]`.
+#[derive(Debug)]
+pub struct SirModel;
+
+/// SIR θ layout: `θ[0] = β`, `θ[1] = γ`, the rest pinned at 0.
+pub mod sir_idx {
+    /// Infection rate β.
+    pub const BETA: usize = 0;
+    /// Recovery rate γ.
+    pub const GAMMA: usize = 1;
+}
+
+impl CompartmentModel for SirModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Sir
+    }
+
+    fn n_compartments(&self) -> usize {
+        3
+    }
+
+    fn n_noise(&self) -> usize {
+        2
+    }
+
+    fn n_observed(&self) -> usize {
+        2
+    }
+
+    fn param_names(&self) -> &'static [&'static str; N_PARAMS] {
+        &["beta", "gamma", "unused", "unused", "unused", "unused", "unused", "unused"]
+    }
+
+    fn prior(&self) -> Prior {
+        Prior::new([0.0; N_PARAMS], [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+            .expect("static SIR prior bounds")
+    }
+
+    fn theta_star(&self) -> Theta {
+        [0.35, 0.12, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+    }
+
+    fn init_state(&self, ic: &InitialCondition, _theta: &Theta, out: &mut [f32]) {
+        let removed = ic.r0 + ic.d0;
+        let s0 = ic.population - (ic.a0 + removed);
+        out[0] = s0;
+        out[1] = ic.a0;
+        out[2] = removed;
+    }
+
+    fn step(&self, state: &[f32], theta: &Theta, z: &[f32], population: f32, out: &mut [f32]) {
+        let (s, i, r) = (state[0], state[1], state[2]);
+        let h_inf = theta[sir_idx::BETA] * s * i / population;
+        let h_rec = theta[sir_idx::GAMMA] * i;
+        let n1 = sample_transition(h_inf, z[0]).min(s);
+        let n2 = sample_transition(h_rec, z[1]).min(i);
+        out[0] = s - n1;
+        out[1] = i + n1 - n2;
+        out[2] = r + n2;
+    }
+
+    fn observe(&self, state: &[f32], out: &mut [f32]) {
+        out[0] = state[1];
+        out[1] = state[2];
+    }
+
+    fn sq_distance_day(&self, state: &[f32], observed: &[f32], t: usize, days: usize) -> f32 {
+        let di = state[1] - observed[t];
+        let dr = state[2] - observed[days + t];
+        di * di + dr * dr
+    }
+
+    fn step_lanes(
+        &self,
+        state: &[F32xL],
+        theta: &[F32xL; N_PARAMS],
+        z: &[F32xL],
+        population: F32xL,
+        out: &mut [F32xL],
+    ) {
+        let (s, i, r) = (state[0], state[1], state[2]);
+        let h_inf = theta[sir_idx::BETA] * s * i / population;
+        let h_rec = theta[sir_idx::GAMMA] * i;
+        let n1 = simd::sample_transition_lanes(h_inf, z[0]).min(s);
+        let n2 = simd::sample_transition_lanes(h_rec, z[1]).min(i);
+        out[0] = s - n1;
+        out[1] = i + n1 - n2;
+        out[2] = r + n2;
+    }
+
+    fn sq_distance_day_lanes(
+        &self,
+        state: &[F32xL],
+        observed: &[f32],
+        t: usize,
+        days: usize,
+    ) -> F32xL {
+        let di = state[1] - F32xL::splat(observed[t]);
+        let dr = state[2] - F32xL::splat(observed[days + t]);
+        di * di + dr * dr
+    }
+
+    fn observed_from_series(&self, series: &ObservedSeries) -> Vec<f32> {
+        prevalence_removed_block(series)
+    }
+}
+
+// --------------------------------------------------------------- SEIR
+
+/// Stochastic SEIR: `S → E → I → R`, three noise channels (exposure
+/// `β·S·I/P`, onset `σ·E`, recovery `γ·I`), observed `[I ‖ R]`. The
+/// day-0 exposed pool is θ-controlled: `E₀ = θ[3] · a₀`.
+#[derive(Debug)]
+pub struct SeirModel;
+
+/// SEIR θ layout: `β, σ, γ, e0_frac`, the rest pinned at 0.
+pub mod seir_idx {
+    /// Exposure rate β.
+    pub const BETA: usize = 0;
+    /// Symptom-onset (incubation exit) rate σ.
+    pub const SIGMA: usize = 1;
+    /// Recovery rate γ.
+    pub const GAMMA: usize = 2;
+    /// Initial exposed pool as a fraction of the day-0 active count.
+    pub const E0_FRAC: usize = 3;
+}
+
+impl CompartmentModel for SeirModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Seir
+    }
+
+    fn n_compartments(&self) -> usize {
+        4
+    }
+
+    fn n_noise(&self) -> usize {
+        3
+    }
+
+    fn n_observed(&self) -> usize {
+        2
+    }
+
+    fn param_names(&self) -> &'static [&'static str; N_PARAMS] {
+        &["beta", "sigma", "gamma", "e0_frac", "unused", "unused", "unused", "unused"]
+    }
+
+    fn prior(&self) -> Prior {
+        Prior::new([0.0; N_PARAMS], [1.0, 1.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0])
+            .expect("static SEIR prior bounds")
+    }
+
+    fn theta_star(&self) -> Theta {
+        [0.42, 0.35, 0.13, 0.8, 0.0, 0.0, 0.0, 0.0]
+    }
+
+    fn init_state(&self, ic: &InitialCondition, theta: &Theta, out: &mut [f32]) {
+        let e0 = theta[seir_idx::E0_FRAC] * ic.a0;
+        let removed = ic.r0 + ic.d0;
+        let s0 = ic.population - (ic.a0 + removed + e0);
+        out[0] = s0;
+        out[1] = e0;
+        out[2] = ic.a0;
+        out[3] = removed;
+    }
+
+    fn step(&self, state: &[f32], theta: &Theta, z: &[f32], population: f32, out: &mut [f32]) {
+        let (s, e, i, r) = (state[0], state[1], state[2], state[3]);
+        let h_exp = theta[seir_idx::BETA] * s * i / population;
+        let h_on = theta[seir_idx::SIGMA] * e;
+        let h_rec = theta[seir_idx::GAMMA] * i;
+        let n1 = sample_transition(h_exp, z[0]).min(s);
+        let n2 = sample_transition(h_on, z[1]).min(e);
+        let n3 = sample_transition(h_rec, z[2]).min(i);
+        out[0] = s - n1;
+        out[1] = e + n1 - n2;
+        out[2] = i + n2 - n3;
+        out[3] = r + n3;
+    }
+
+    fn observe(&self, state: &[f32], out: &mut [f32]) {
+        out[0] = state[2];
+        out[1] = state[3];
+    }
+
+    fn sq_distance_day(&self, state: &[f32], observed: &[f32], t: usize, days: usize) -> f32 {
+        let di = state[2] - observed[t];
+        let dr = state[3] - observed[days + t];
+        di * di + dr * dr
+    }
+
+    fn step_lanes(
+        &self,
+        state: &[F32xL],
+        theta: &[F32xL; N_PARAMS],
+        z: &[F32xL],
+        population: F32xL,
+        out: &mut [F32xL],
+    ) {
+        let (s, e, i, r) = (state[0], state[1], state[2], state[3]);
+        let h_exp = theta[seir_idx::BETA] * s * i / population;
+        let h_on = theta[seir_idx::SIGMA] * e;
+        let h_rec = theta[seir_idx::GAMMA] * i;
+        let n1 = simd::sample_transition_lanes(h_exp, z[0]).min(s);
+        let n2 = simd::sample_transition_lanes(h_on, z[1]).min(e);
+        let n3 = simd::sample_transition_lanes(h_rec, z[2]).min(i);
+        out[0] = s - n1;
+        out[1] = e + n1 - n2;
+        out[2] = i + n2 - n3;
+        out[3] = r + n3;
+    }
+
+    fn sq_distance_day_lanes(
+        &self,
+        state: &[F32xL],
+        observed: &[f32],
+        t: usize,
+        days: usize,
+    ) -> F32xL {
+        let di = state[2] - F32xL::splat(observed[t]);
+        let dr = state[3] - F32xL::splat(observed[days + t]);
+        di * di + dr * dr
+    }
+
+    fn observed_from_series(&self, series: &ObservedSeries) -> Vec<f32> {
+        prevalence_removed_block(series)
+    }
+}
+
+// ------------------------------------------------------------ Metapop
+
+/// Number of coupled regions in [`MetapopModel`].
+pub const METAPOP_REGIONS: usize = 3;
+
+/// Multi-region SIR metapopulation: [`METAPOP_REGIONS`] regions on a
+/// symmetric ring, each of population `P / K`. Region `k`'s infection
+/// hazard mixes its neighbours' prevalence through `θ[2] = ε`:
+///
+/// ```text
+/// λ_k = β · S_k · (I_k + ε·(0.5·I_{k-1} + 0.5·I_{k+1})) / (P/K)
+/// ```
+///
+/// Noise order is fixed (rule 2): K infection channels, then K
+/// recovery channels. The observed projection is a single row, the
+/// summed cumulative incidence `Σ_k (I_k + R_k)` — everyone who has
+/// left S anywhere — compared against the dataset's `active` column.
+#[derive(Debug)]
+pub struct MetapopModel;
+
+/// Metapop θ layout: `β, γ, ε (mixing)`, the rest pinned at 0.
+pub mod metapop_idx {
+    /// Within-region infection rate β.
+    pub const BETA: usize = 0;
+    /// Recovery rate γ.
+    pub const GAMMA: usize = 1;
+    /// Neighbour-mixing strength ε.
+    pub const MIX: usize = 2;
+}
+
+const K: usize = METAPOP_REGIONS;
+
+impl CompartmentModel for MetapopModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Metapop
+    }
+
+    /// Compartment-major layout: `[S_0..S_K ‖ I_0..I_K ‖ R_0..R_K]`.
+    fn n_compartments(&self) -> usize {
+        3 * K
+    }
+
+    fn n_noise(&self) -> usize {
+        2 * K
+    }
+
+    fn n_observed(&self) -> usize {
+        1
+    }
+
+    fn param_names(&self) -> &'static [&'static str; N_PARAMS] {
+        &["beta", "gamma", "mix", "unused", "unused", "unused", "unused", "unused"]
+    }
+
+    fn prior(&self) -> Prior {
+        Prior::new([0.0; N_PARAMS], [1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+            .expect("static metapop prior bounds")
+    }
+
+    fn theta_star(&self) -> Theta {
+        [0.4, 0.14, 0.3, 0.0, 0.0, 0.0, 0.0, 0.0]
+    }
+
+    fn init_state(&self, ic: &InitialCondition, _theta: &Theta, out: &mut [f32]) {
+        let p_region = ic.population / K as f32;
+        let removed = ic.r0 + ic.d0;
+        for k in 0..K {
+            out[k] = p_region;
+            out[K + k] = 0.0;
+            out[2 * K + k] = 0.0;
+        }
+        // the outbreak seeds in region 0
+        out[0] = p_region - (ic.a0 + removed);
+        out[K] = ic.a0;
+        out[2 * K] = removed;
+    }
+
+    fn step(&self, state: &[f32], theta: &Theta, z: &[f32], population: f32, out: &mut [f32]) {
+        let p_region = population / K as f32;
+        let mut n_inf = [0.0f32; K];
+        let mut n_rec = [0.0f32; K];
+        for k in 0..K {
+            let (s, i) = (state[k], state[K + k]);
+            let i_prev = state[K + (k + K - 1) % K];
+            let i_next = state[K + (k + 1) % K];
+            let mix = theta[metapop_idx::MIX] * (0.5 * i_prev + 0.5 * i_next);
+            let h_inf = theta[metapop_idx::BETA] * s * (i + mix) / p_region;
+            n_inf[k] = sample_transition(h_inf, z[k]).min(s);
+        }
+        for k in 0..K {
+            let i = state[K + k];
+            let h_rec = theta[metapop_idx::GAMMA] * i;
+            n_rec[k] = sample_transition(h_rec, z[K + k]).min(i);
+        }
+        for k in 0..K {
+            out[k] = state[k] - n_inf[k];
+            out[K + k] = state[K + k] + n_inf[k] - n_rec[k];
+            out[2 * K + k] = state[2 * K + k] + n_rec[k];
+        }
+    }
+
+    fn observe(&self, state: &[f32], out: &mut [f32]) {
+        out[0] = ((state[K] + state[K + 1]) + state[K + 2])
+            + ((state[2 * K] + state[2 * K + 1]) + state[2 * K + 2]);
+    }
+
+    fn sq_distance_day(&self, state: &[f32], observed: &[f32], t: usize, days: usize) -> f32 {
+        debug_assert_eq!(observed.len(), days);
+        let incidence = ((state[K] + state[K + 1]) + state[K + 2])
+            + ((state[2 * K] + state[2 * K + 1]) + state[2 * K + 2]);
+        let d = incidence - observed[t];
+        d * d
+    }
+
+    fn step_lanes(
+        &self,
+        state: &[F32xL],
+        theta: &[F32xL; N_PARAMS],
+        z: &[F32xL],
+        population: F32xL,
+        out: &mut [F32xL],
+    ) {
+        let p_region = population / F32xL::splat(K as f32);
+        let half = F32xL::splat(0.5);
+        let mut n_inf = [F32xL::splat(0.0); K];
+        let mut n_rec = [F32xL::splat(0.0); K];
+        for k in 0..K {
+            let (s, i) = (state[k], state[K + k]);
+            let i_prev = state[K + (k + K - 1) % K];
+            let i_next = state[K + (k + 1) % K];
+            let mix = theta[metapop_idx::MIX] * (half * i_prev + half * i_next);
+            let h_inf = theta[metapop_idx::BETA] * s * (i + mix) / p_region;
+            n_inf[k] = simd::sample_transition_lanes(h_inf, z[k]).min(s);
+        }
+        for k in 0..K {
+            let i = state[K + k];
+            let h_rec = theta[metapop_idx::GAMMA] * i;
+            n_rec[k] = simd::sample_transition_lanes(h_rec, z[K + k]).min(i);
+        }
+        for k in 0..K {
+            out[k] = state[k] - n_inf[k];
+            out[K + k] = state[K + k] + n_inf[k] - n_rec[k];
+            out[2 * K + k] = state[2 * K + k] + n_rec[k];
+        }
+    }
+
+    fn sq_distance_day_lanes(
+        &self,
+        state: &[F32xL],
+        observed: &[f32],
+        t: usize,
+        days: usize,
+    ) -> F32xL {
+        debug_assert_eq!(observed.len(), days);
+        let incidence = ((state[K] + state[K + 1]) + state[K + 2])
+            + ((state[2 * K] + state[2 * K + 1]) + state[2 * K + 2]);
+        let d = incidence - F32xL::splat(observed[t]);
+        d * d
+    }
+
+    fn observed_from_series(&self, series: &ObservedSeries) -> Vec<f32> {
+        series.active.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::lane_rng;
+
+    fn ic() -> InitialCondition {
+        InitialCondition { a0: 155.0, r0: 2.0, d0: 3.0, population: 60_000_000.0 }
+    }
+
+    fn roll(m: &dyn CompartmentModel, days: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = lane_rng([1, 2], seed);
+        let theta = m.theta_star();
+        let mut states = Vec::with_capacity(days);
+        let mut state = vec![0.0f32; m.n_compartments()];
+        m.init_state(&ic(), &theta, &mut state);
+        states.push(state.clone());
+        for _ in 1..days {
+            let z: Vec<f32> = (0..m.n_noise()).map(|_| rng.normal_f32()).collect();
+            let mut next = vec![0.0f32; m.n_compartments()];
+            m.step(&state, &theta, &z, ic().population, &mut next);
+            state = next;
+            states.push(state.clone());
+        }
+        states
+    }
+
+    #[test]
+    fn sir_and_seir_conserve_population_and_stay_nonnegative() {
+        for kind in [ModelKind::Sir, ModelKind::Seir] {
+            let m = kind.instance();
+            for (t, s) in roll(m, 25, 7).iter().enumerate() {
+                let total: f32 = s.iter().sum();
+                assert!(
+                    (total - ic().population).abs() / ic().population < 1e-5,
+                    "{kind:?} day {t}: {total}"
+                );
+                assert!(s.iter().all(|&v| v >= 0.0), "{kind:?} day {t}: {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn metapop_conserves_each_region_and_spreads_to_neighbours() {
+        let m = &MetapopModel;
+        let p_region = ic().population / K as f32;
+        let states = roll(m, 40, 3);
+        for (t, s) in states.iter().enumerate() {
+            for k in 0..K {
+                let total = s[k] + s[K + k] + s[2 * K + k];
+                assert!(
+                    (total - p_region).abs() / p_region < 1e-5,
+                    "region {k} day {t}: {total}"
+                );
+            }
+        }
+        // the outbreak seeds only region 0 …
+        assert_eq!(states[0][K + 1], 0.0);
+        assert_eq!(states[0][K + 2], 0.0);
+        // … and the ε-coupling carries it into the neighbours
+        let last = states.last().unwrap();
+        assert!(last[K + 1] + last[2 * K + 1] > 0.0, "region 1 never infected");
+        assert!(last[K + 2] + last[2 * K + 2] > 0.0, "region 2 never infected");
+    }
+
+    #[test]
+    fn epidemics_actually_grow_at_theta_star() {
+        // θ* must generate an identifiable signal, not a flat line —
+        // otherwise the recovery tests would accept anything.
+        for kind in [ModelKind::Sir, ModelKind::Seir, ModelKind::Metapop] {
+            let m = kind.instance();
+            let states = roll(m, 20, 11);
+            let first = m.sq_distance_day(&states[0], &zero_observed(m, 20), 0, 20);
+            let last = m.sq_distance_day(states.last().unwrap(), &zero_observed(m, 20), 19, 20);
+            // squared distance to an all-zero series grows with the epidemic
+            assert!(last > first * 4.0, "{kind:?}: {first} → {last}");
+        }
+    }
+
+    fn zero_observed(m: &dyn CompartmentModel, days: usize) -> Vec<f32> {
+        vec![0.0; m.n_observed() * days]
+    }
+
+    #[test]
+    fn degenerate_prior_dims_sample_exactly_zero() {
+        for kind in [ModelKind::Sir, ModelKind::Seir, ModelKind::Metapop] {
+            let m = kind.instance();
+            let mut rng = lane_rng([8, 8], 0);
+            for _ in 0..50 {
+                let theta = m.prior().sample(&mut rng);
+                for p in 0..N_PARAMS {
+                    if m.prior().low()[p] == m.prior().high()[p] {
+                        assert_eq!(theta[p], m.prior().low()[p], "{kind:?} param {p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn observed_folding_matches_columns() {
+        let series = ObservedSeries::new(
+            vec![10.0, 11.0, 12.0],
+            vec![1.0, 2.0, 3.0],
+            vec![0.5, 0.5, 1.0],
+        )
+        .unwrap();
+        let sir = SirModel.observed_from_series(&series);
+        assert_eq!(sir, vec![10.0, 11.0, 12.0, 1.5, 2.5, 4.0]);
+        assert_eq!(SeirModel.observed_from_series(&series), sir);
+        assert_eq!(MetapopModel.observed_from_series(&series), vec![10.0, 11.0, 12.0]);
+    }
+}

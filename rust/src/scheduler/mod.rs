@@ -119,16 +119,17 @@ impl JobSpec {
     }
 
     /// Resolve a [`ScenarioConfig`] (from [`crate::config::ScenarioSet`])
-    /// into a runnable job with the paper prior, using the same dataset
-    /// resolver as the `repro` CLI ([`crate::data::resolve`]: synthetic,
-    /// embedded country, or CSV file path).
+    /// into a runnable job with the configured model's prior (the paper
+    /// prior for `epi`), using the same dataset resolver as the `repro`
+    /// CLI ([`crate::data::resolve`]: synthetic, embedded country, or
+    /// CSV file path).
     pub fn from_scenario(scenario: &ScenarioConfig) -> Result<Self> {
         let dataset = crate::data::resolve(&scenario.config.dataset, scenario.config.days)?;
         Self::new(
             scenario.name.clone(),
             scenario.config.clone(),
             dataset,
-            Prior::paper(),
+            scenario.config.model.instance().prior(),
             scenario.stop,
         )
     }
@@ -160,17 +161,22 @@ impl JobSpec {
     fn context(&self) -> Result<JobContext> {
         let cfg = &self.config;
         let truncated = self.dataset.truncated(cfg.days);
+        // the model projects the stored [3, days] series into its own
+        // observed block ([A‖R‖D] for epi — byte-identical to the
+        // pre-zoo flatten() path)
+        let observed = cfg.model.instance().observed_from_series(&truncated.observed);
         JobContext::new(
             AbcJob::new(
                 cfg.batch_per_device,
                 cfg.days,
-                truncated.observed.flatten(),
+                observed,
                 &self.prior,
                 truncated.consts(),
             )
             .with_lanes(cfg.lanes)
             .with_shards(cfg.shards)
-            .with_simd(cfg.simd),
+            .with_simd(cfg.simd)
+            .with_model(cfg.model),
             self.tolerance(),
             cfg.return_strategy,
             SeedSequence::new(cfg.seed),
@@ -865,6 +871,38 @@ mod tests {
         assert!(err.contains("budget"), "{err}");
         let ok = report.jobs[1].outcome.as_ref().unwrap();
         assert_eq!(ok.metrics.runs, 3);
+    }
+
+    #[test]
+    fn zoo_scenarios_resolve_with_the_model_prior_and_run() {
+        use crate::model::ModelKind;
+        for kind in [ModelKind::Sir, ModelKind::Seir, ModelKind::Metapop] {
+            let dataset_name = format!("synthetic-{}", kind.as_str());
+            let sc = ScenarioConfig {
+                name: dataset_name.clone(),
+                config: RunConfig {
+                    dataset: dataset_name,
+                    devices: 1,
+                    batch_per_device: 200,
+                    days: 12,
+                    return_strategy: ReturnStrategy::Outfeed { chunk: 50 },
+                    model: kind,
+                    ..Default::default()
+                },
+                stop: StopRule::ExactRuns(2),
+            };
+            let job = JobSpec::from_scenario(&sc).unwrap();
+            assert_eq!(job.prior, kind.instance().prior(), "{kind:?}");
+            let report = Scheduler::native(2).run(vec![job]).unwrap();
+            let result = report.jobs.into_iter().next().unwrap().outcome.unwrap();
+            assert_eq!(result.metrics.runs, 2, "{kind:?}");
+            // every accepted θ respects the model prior (degenerate
+            // dims come back exactly at their pinned value)
+            let prior = kind.instance().prior();
+            for s in &result.accepted {
+                assert!(prior.contains(&s.theta), "{kind:?}");
+            }
+        }
     }
 
     #[test]

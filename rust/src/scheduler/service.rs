@@ -52,7 +52,6 @@ use crate::coordinator::{
     filter_transfer, stream_fingerprint, AcceptedSample, InferenceResult, StopRule, Transfer,
 };
 use crate::metrics::{RunMetrics, Stopwatch};
-use crate::model::Prior;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
@@ -328,7 +327,12 @@ impl InferenceService {
     /// [`StopRule::AcceptedTarget`]`(config.accepted_samples)` — the
     /// same rule the `repro infer` CLI applies, which is what makes a
     /// served stream comparable to a CLI run byte for byte.
-    pub fn submit(&self, config: RunConfig, name: Option<String>) -> Result<SubmitReceipt> {
+    pub fn submit(&self, mut config: RunConfig, name: Option<String>) -> Result<SubmitReceipt> {
+        // Resolve the $ABC_IPU_MODEL override *here*, before
+        // fingerprinting, so the cache key and the served stream always
+        // agree on which model actually ran. A malformed override is a
+        // typed error, never a silent fall-back to `epi`.
+        config.model = crate::model::ModelKind::resolve(config.model)?;
         if config.backend != self.backend_name {
             return Err(Error::Config(format!(
                 "this server's pool runs the `{}` backend; submit with \
@@ -351,7 +355,8 @@ impl InferenceService {
         let stop = StopRule::AcceptedTarget(config.accepted_samples);
         let dataset = crate::data::resolve(&config.dataset, config.days)?;
         let name = name.unwrap_or_else(|| dataset.name.clone());
-        let spec = JobSpec::new(name, config, dataset, Prior::paper(), stop)?;
+        let prior = config.model.instance().prior();
+        let spec = JobSpec::new(name, config, dataset, prior, stop)?;
         let fingerprint = checkpoint::job_fingerprint(&spec);
         let budget = spec.issue_budget();
         let ctx = Arc::new(spec.context()?);
@@ -686,6 +691,7 @@ mod tests {
     use crate::backend::NativeBackend;
     use crate::coordinator::Coordinator;
     use crate::data::synthetic;
+    use crate::model::Prior;
 
     fn small_config(seed: u64) -> (RunConfig, crate::data::Dataset) {
         let dataset = synthetic::default_dataset(16, 0x5eed);
@@ -779,6 +785,54 @@ mod tests {
         assert!(svc.samples(99, 0).is_none());
         let m = svc.metrics();
         assert_eq!((m.submitted, m.cancelled), (1, 1));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sir_submission_serves_the_model_stream_and_separates_fingerprints() {
+        use crate::model::ModelKind;
+        let dataset = synthetic::model_dataset(ModelKind::Sir, 16, 0x5eed);
+        let config = RunConfig {
+            dataset: "synthetic-sir".into(),
+            tolerance: Some(dataset.default_tolerance * 30.0),
+            devices: 1,
+            batch_per_device: 400,
+            days: 16,
+            return_strategy: ReturnStrategy::Outfeed { chunk: 100 },
+            accepted_samples: 30,
+            seed: 77,
+            max_runs: 400,
+            model: ModelKind::Sir,
+            ..Default::default()
+        };
+        // solo oracle for the identical config
+        let solo = Coordinator::native(
+            config.clone(),
+            dataset,
+            ModelKind::Sir.instance().prior(),
+        )
+        .unwrap()
+        .run_until(config.accepted_samples)
+        .unwrap();
+
+        let svc = service(2);
+        let receipt = svc.submit(config.clone(), None).unwrap();
+        let status = svc
+            .wait_terminal(receipt.id, Duration::from_secs(120))
+            .expect("job exists");
+        assert_eq!(status.state, JobState::Done, "{status:?}");
+        let page = svc.samples(receipt.id, 0).unwrap();
+        assert_eq!(page.fingerprint, Some(stream_fingerprint(&solo.accepted)));
+
+        // the same geometry under epi is a different fingerprint: the
+        // model folds into the cache key, so no cross-model collision
+        let mut epi = config;
+        epi.dataset = "synthetic".into();
+        epi.model = ModelKind::Epi;
+        epi.tolerance = Some(1e9);
+        let other = svc.submit(epi, None).unwrap();
+        assert!(!other.cached, "epi twin must not hit the sir cache entry");
+        assert_ne!(other.fingerprint, receipt.fingerprint);
         svc.shutdown();
     }
 

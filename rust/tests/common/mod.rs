@@ -12,10 +12,26 @@
 use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::{AcceptedSample, StopRule};
 use abc_ipu::data::Dataset;
-use abc_ipu::model::Prior;
+use abc_ipu::model::ModelKind;
 use abc_ipu::rng::Xoshiro256;
 use abc_ipu::scheduler::JobSpec;
 use std::path::PathBuf;
+
+/// Run `$body` once per [`ModelKind`], with `$kind` bound to the model
+/// — the model-matrix axis the differential suites sweep (DESIGN.md
+/// §14). A plain loop-as-macro so assertion messages can interpolate
+/// `$kind` and new zoo members are picked up automatically via
+/// [`ModelKind::all`].
+macro_rules! for_each_model {
+    (|$kind:ident| $body:block) => {
+        for $kind in abc_ipu::model::ModelKind::all() {
+            eprintln!("-- model `{}`", $kind.as_str());
+            $body
+        }
+    };
+}
+#[allow(unused_imports)] // each test binary uses a different helper subset
+pub(crate) use for_each_model;
 
 /// Full identity of an accepted sample: `(run, index, θ bits, distance
 /// bits)` — bit-exact, and deliberately excluding the `device` field,
@@ -68,6 +84,7 @@ pub struct JobBuilder {
     pub lanes: usize,
     pub shards: usize,
     pub simd: abc_ipu::model::SimdMode,
+    pub model: ModelKind,
 }
 
 impl JobBuilder {
@@ -87,13 +104,26 @@ impl JobBuilder {
             lanes: 0,
             shards: 0,
             simd: abc_ipu::model::SimdMode::Auto,
+            model: ModelKind::Epi,
         }
+    }
+
+    /// A builder over `kind`'s synthetic θ*-generated dataset
+    /// (`synthetic-<kind>`), with the model knob set to match.
+    pub fn for_model(kind: ModelKind, days: usize, data_seed: u64) -> Self {
+        let mut b = Self::new(abc_ipu::data::synthetic::model_dataset(kind, days, data_seed));
+        b.model = kind;
+        b
     }
 
     /// The `RunConfig` this builder describes.
     pub fn config(&self) -> RunConfig {
         RunConfig {
-            dataset: "synthetic".into(),
+            dataset: if self.model == ModelKind::Epi {
+                "synthetic".into()
+            } else {
+                format!("synthetic-{}", self.model.as_str())
+            },
             tolerance: Some(self.dataset.default_tolerance * self.tol_mult),
             devices: self.devices,
             batch_per_device: self.batch,
@@ -104,13 +134,15 @@ impl JobBuilder {
             lanes: self.lanes,
             shards: self.shards,
             simd: self.simd,
+            model: self.model,
             ..Default::default()
         }
     }
 
-    /// A validated scheduler job over the paper prior.
+    /// A validated scheduler job over the configured model's prior.
     pub fn spec(&self, name: &str, stop: StopRule) -> JobSpec {
-        JobSpec::new(name, self.config(), self.dataset.clone(), Prior::paper(), stop)
+        let prior = self.model.instance().prior();
+        JobSpec::new(name, self.config(), self.dataset.clone(), prior, stop)
             .expect("valid synthetic job spec")
     }
 }

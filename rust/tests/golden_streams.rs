@@ -26,7 +26,7 @@ use abc_ipu::config::{ReturnStrategy, RunConfig};
 use abc_ipu::coordinator::{stream_fingerprint, AcceptedSample, Coordinator, StopRule};
 use abc_ipu::data::{Dataset, ObservedSeries};
 use abc_ipu::model::lanes::{scalar_reference, LaneEngine};
-use abc_ipu::model::{InitialCondition, Prior, SimdMode, Simulator};
+use abc_ipu::model::{InitialCondition, ModelKind, Prior, SimdMode, Simulator};
 use abc_ipu::rng::SeedSequence;
 use abc_ipu::util::json::Json;
 use common::native_backend;
@@ -38,6 +38,15 @@ const BATCH: usize = 256;
 const RUNS: u64 = 3;
 const POPULATION: f32 = 1_000_000.0;
 const TOLERANCE: f32 = 1150.0;
+
+/// One shared pin tolerance for the zoo scenarios (both sit near the
+/// epi acceptance regime, ~22% — see `tools/golden_ref.py --model`).
+const ZOO_TOLERANCE: f32 = 1100.0;
+/// Zoo members with absolute pins, cross-checked against the
+/// out-of-tree Python port (`tools/golden_ref.py --model`). Metapop has
+/// no independent port yet, so it is covered by the differential
+/// matrix (`prop_lanes`) rather than absolute pins.
+const ZOO_KINDS: [ModelKind; 2] = [ModelKind::Sir, ModelKind::Seir];
 
 const WIDTHS: [usize; 4] = [1, 4, 8, 16];
 
@@ -74,6 +83,15 @@ fn fixture_path() -> PathBuf {
 
 struct Fixture {
     canaries: Vec<(String, u64)>,
+    accepted_per_run: Vec<usize>,
+    fingerprint: u64,
+    fingerprint_all: u64,
+    models: Vec<(String, ModelFixture)>,
+}
+
+/// Per-zoo-member absolute pins (the `models` fixture section).
+struct ModelFixture {
+    tolerance: f32,
     accepted_per_run: Vec<usize>,
     fingerprint: u64,
     fingerprint_all: u64,
@@ -115,6 +133,32 @@ fn load_fixture() -> Fixture {
             .collect(),
         fingerprint: hex(&j, "fingerprint"),
         fingerprint_all: hex(&j, "fingerprint_all"),
+        models: match j.req("models") {
+            Ok(mj) => mj
+                .as_obj()
+                .unwrap()
+                .iter()
+                .map(|(name, m)| {
+                    (
+                        name.clone(),
+                        ModelFixture {
+                            tolerance: m.req("tolerance").unwrap().as_f64().unwrap() as f32,
+                            accepted_per_run: m
+                                .req("accepted_per_run")
+                                .unwrap()
+                                .as_arr()
+                                .unwrap()
+                                .iter()
+                                .map(|v| v.as_usize().unwrap())
+                                .collect(),
+                            fingerprint: hex(m, "fingerprint"),
+                            fingerprint_all: hex(m, "fingerprint_all"),
+                        },
+                    )
+                })
+                .collect(),
+            Err(_) => Vec::new(),
+        },
     }
 }
 
@@ -178,6 +222,29 @@ fn engine_stream(width: usize, simd: bool, tol: f32) -> Vec<AcceptedSample> {
     out
 }
 
+/// The accepted stream of the full job on one zoo-model engine
+/// configuration — the same scenario, with the golden series projected
+/// through the model's own observation rows.
+fn zoo_engine_stream(kind: ModelKind, width: usize, simd: bool, tol: f32) -> Vec<AcceptedSample> {
+    let model = kind.instance();
+    let prior = model.prior();
+    let observed = model.observed_from_series(&observed_series());
+    let seq = SeedSequence::new(SEED);
+    let engine = LaneEngine::new(ic(), width).with_model(kind).with_simd(simd);
+    let mut out = Vec::new();
+    for run in 0..RUNS {
+        let (thetas, dists) = engine
+            .sample_distance_batch(&prior, &observed, DAYS, BATCH, seq.key(0, run))
+            .expect("golden zoo engine run");
+        out.extend(accept(&thetas, &dists, run, tol));
+    }
+    out
+}
+
+fn per_run_counts(stream: &[AcceptedSample]) -> Vec<String> {
+    (0..RUNS).map(|r| stream.iter().filter(|s| s.run == r).count().to_string()).collect()
+}
+
 /// Bless mode: recompute every pin on this host and rewrite the fixture.
 fn maybe_bless() -> bool {
     if std::env::var("ABC_IPU_BLESS_GOLDEN").map(|v| v == "1") != Ok(true) {
@@ -185,9 +252,6 @@ fn maybe_bless() -> bool {
     }
     let stream = engine_stream(1, false, TOLERANCE);
     let all = engine_stream(1, false, f32::INFINITY);
-    let per_run: Vec<String> = (0..RUNS)
-        .map(|r| stream.iter().filter(|s| s.run == r).count().to_string())
-        .collect();
     let canaries: Vec<String> = host_canaries()
         .iter()
         .map(|(n, b)| {
@@ -195,16 +259,33 @@ fn maybe_bless() -> bool {
             format!("    \"{n}\": \"{:#0w$x}\"", b, w = width + 2)
         })
         .collect();
+    let models: Vec<String> = ZOO_KINDS
+        .iter()
+        .map(|&kind| {
+            let s = zoo_engine_stream(kind, 1, false, ZOO_TOLERANCE);
+            let a = zoo_engine_stream(kind, 1, false, f32::INFINITY);
+            format!(
+                "    \"{}\": {{\n      \"tolerance\": {ZOO_TOLERANCE:.1},\n      \
+                 \"accepted_per_run\": [{}],\n      \"fingerprint\": \"{:#018x}\",\n      \
+                 \"fingerprint_all\": \"{:#018x}\"\n    }}",
+                kind.as_str(),
+                per_run_counts(&s).join(", "),
+                stream_fingerprint(&s),
+                stream_fingerprint(&a),
+            )
+        })
+        .collect();
     let text = format!(
         "{{\n  \"scenario\": {{\n    \"seed\": \"{SEED:#x}\",\n    \"days\": {DAYS},\n    \
          \"batch\": {BATCH},\n    \"runs\": {RUNS},\n    \"population\": {POPULATION:.1},\n    \
          \"tolerance\": {TOLERANCE:.1}\n  }},\n  \"canaries\": {{\n{}\n  }},\n  \
          \"accepted_per_run\": [{}],\n  \"fingerprint\": \"{:#018x}\",\n  \
-         \"fingerprint_all\": \"{:#018x}\"\n}}\n",
+         \"fingerprint_all\": \"{:#018x}\",\n  \"models\": {{\n{}\n  }}\n}}\n",
         canaries.join(",\n"),
-        per_run.join(", "),
+        per_run_counts(&stream).join(", "),
         stream_fingerprint(&stream),
         stream_fingerprint(&all),
+        models.join(",\n"),
     );
     std::fs::write(fixture_path(), text).expect("write blessed fixture");
     eprintln!("golden_streams: blessed {} on this host", fixture_path().display());
@@ -314,6 +395,90 @@ fn scheduler_matrix_pins_the_same_fingerprint_across_shards_and_knobs() {
                          width {width} shards {shards} simd {simd:?}"
                     );
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn zoo_model_streams_pin_their_fingerprints_across_widths_and_kernels() {
+    // Absolute pins for the SIR/SEIR zoo members (DESIGN.md §14), on
+    // the same scenario as the epi pins: same seed/days/batch/runs, the
+    // golden series projected through each model's observation rows,
+    // fingerprints cross-checked by `tools/golden_ref.py --model`.
+    if std::env::var("ABC_IPU_BLESS_GOLDEN").map(|v| v == "1") == Ok(true) {
+        return; // fixture is being blessed by the engine-level test
+    }
+    let fixture = load_fixture();
+    let pins_apply = canaries_match(&fixture);
+
+    for kind in ZOO_KINDS {
+        let sim = Simulator::for_model(ic(), kind);
+        let model = kind.instance();
+        let prior = model.prior();
+        let observed = model.observed_from_series(&observed_series());
+        let seq = SeedSequence::new(SEED);
+        let mut oracle = Vec::new();
+        let mut oracle_all = Vec::new();
+        for run in 0..RUNS {
+            let (thetas, dists) =
+                scalar_reference(&sim, &prior, &observed, DAYS, BATCH, seq.key(0, run))
+                    .expect("golden zoo oracle run");
+            oracle.extend(accept(&thetas, &dists, run, ZOO_TOLERANCE));
+            oracle_all.extend(accept(&thetas, &dists, run, f32::INFINITY));
+        }
+        let oracle_fp = stream_fingerprint(&oracle);
+
+        if pins_apply {
+            let (_, pins) = fixture
+                .models
+                .iter()
+                .find(|(name, _)| name == kind.as_str())
+                .unwrap_or_else(|| {
+                    panic!(
+                        "fixture has no `models.{}` section — re-bless with \
+                         ABC_IPU_BLESS_GOLDEN=1",
+                        kind.as_str()
+                    )
+                });
+            assert_eq!(
+                pins.tolerance,
+                ZOO_TOLERANCE,
+                "{}: fixture/test tolerance drift",
+                kind.as_str()
+            );
+            for run in 0..RUNS {
+                assert_eq!(
+                    oracle.iter().filter(|s| s.run == run).count(),
+                    pins.accepted_per_run[run as usize],
+                    "{}: accepted count of run {run} drifted from the fixture",
+                    kind.as_str()
+                );
+            }
+            assert_eq!(
+                oracle_fp,
+                pins.fingerprint,
+                "{}: accepted-stream fingerprint drifted from the blessed fixture",
+                kind.as_str()
+            );
+            assert_eq!(
+                stream_fingerprint(&oracle_all),
+                pins.fingerprint_all,
+                "{}: full-stream fingerprint drifted from the blessed fixture",
+                kind.as_str()
+            );
+        }
+
+        // invariance pins, never gated
+        for width in WIDTHS {
+            for simd in [true, false] {
+                let fp = stream_fingerprint(&zoo_engine_stream(kind, width, simd, ZOO_TOLERANCE));
+                assert_eq!(
+                    fp,
+                    oracle_fp,
+                    "{}: width {width} simd {simd} diverged from oracle",
+                    kind.as_str()
+                );
             }
         }
     }

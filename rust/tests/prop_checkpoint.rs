@@ -302,6 +302,33 @@ fn resume_across_simd_kernel_change_bit_equals_solo() {
 }
 
 #[test]
+fn seir_zoo_model_resume_bit_equals_solo() {
+    // the model knob rides through the snapshot (DESIGN.md §14): a SEIR
+    // job interrupted at an arbitrary run frontier must resume under
+    // the same model and reproduce the solo stream bit-for-bit
+    use abc_ipu::model::ModelKind;
+    let mut b = JobBuilder::for_model(ModelKind::Seir, 16, 0x5eed);
+    b.batch = 801;
+    b.strategy = ReturnStrategy::Outfeed { chunk: 93 };
+    b.seed = 0xC4A5;
+    b.tol_mult = 1e6; // the whole stream is accepted: the strongest pin
+    let stop = StopRule::ExactRuns(5);
+    let want = solo_reference(&b, stop);
+    assert_eq!(want.len(), 5 * 801, "expected the full SEIR stream accepted");
+    for (workers, shards, k) in [(1usize, 1usize, 2u64), (4, 3, 3)] {
+        let path = ckpt_path(&format!("seir_w{workers}_s{shards}_k{k}"));
+        cleanup(&path);
+        let got = interrupt_then_resume(&b, stop, workers, shards, 1, k, &path);
+        assert_eq!(
+            got, want,
+            "SEIR resume diverged at {workers} workers x {shards} shards, \
+             interrupt after {k}"
+        );
+        cleanup(&path);
+    }
+}
+
+#[test]
 fn resume_rejects_a_mismatched_job_set() {
     let b = builder(ReturnStrategy::Outfeed { chunk: 801 });
     let stop = StopRule::ExactRuns(3);

@@ -23,7 +23,8 @@ use abc_ipu::model::lanes::{scalar_reference, LaneEngine};
 use abc_ipu::model::{InitialCondition, Prior, SimdMode, Simulator, Theta, PRIOR_HIGH};
 use abc_ipu::scheduler::Scheduler;
 use common::{
-    fingerprints, native_backend, prop_cases, worker_counts, Fingerprint, JobBuilder,
+    fingerprints, for_each_model, native_backend, prop_cases, worker_counts, Fingerprint,
+    JobBuilder,
 };
 
 /// The lane widths the invariance contract is pinned at.
@@ -178,4 +179,115 @@ fn pool_runs_stay_bit_identical_to_solo_for_every_lane_width() {
             }
         }
     }
+}
+
+// ---- model-zoo differential matrix (DESIGN.md §14) -----------------
+//
+// The same contracts, swept across every `ModelKind`: each model's
+// LaneEngine must be bit-identical to its own scalar oracle for every
+// lane width × kernel × thread count, and scheduler-pool runs must
+// stay bit-identical to solo runs across shard counts and pool sizes.
+
+#[test]
+fn every_zoo_model_bit_equals_its_scalar_oracle_across_widths_and_kernels() {
+    for_each_model!(|kind| {
+        let sim = Simulator::for_model(ic(), kind);
+        let model = kind.instance();
+        let prior = model.prior();
+        let rows = model.n_observed();
+        prop_cases(&format!("{}_lane_vs_oracle", kind.as_str()), 6, |rng| {
+            let days = 1 + rng.below(14) as usize;
+            let batch = 1 + rng.below(50) as usize;
+            let key = [rng.next_u64() as u32, rng.next_u64() as u32];
+            let observed: Vec<f32> =
+                (0..rows * days).map(|_| (rng.uniform() * 1e4) as f32).collect();
+
+            let (oracle_thetas, oracle_dists) =
+                scalar_reference(&sim, &prior, &observed, days, batch, key).unwrap();
+            assert!(oracle_dists.iter().all(|d| d.is_finite()));
+            for width in WIDTHS {
+                for threads in [1usize, 3] {
+                    for simd in [true, false] {
+                        let engine = LaneEngine::new(ic(), width)
+                            .with_model(kind)
+                            .with_parallelism(threads)
+                            .with_simd(simd);
+                        let (thetas, dists) = engine
+                            .sample_distance_batch(&prior, &observed, days, batch, key)
+                            .unwrap();
+                        let tag = format!(
+                            "model {} width {width} x{threads} threads simd {simd}, \
+                             days {days}, batch {batch}",
+                            kind.as_str()
+                        );
+                        assert_eq!(bits(&thetas), bits(&oracle_thetas), "θ diverged: {tag}");
+                        assert_eq!(bits(&dists), bits(&oracle_dists), "distance diverged: {tag}");
+                    }
+                }
+            }
+        });
+    });
+}
+
+#[test]
+fn every_zoo_model_pool_run_matches_solo_across_widths_shards_and_kernels() {
+    // ε is effectively infinite (tol_mult 1e6) so the *entire* stream
+    // is accepted and compared — the strongest differential pin, and
+    // immune to per-model acceptance-rate differences.
+    let kernel_axis = [SimdMode::On, SimdMode::Off, SimdMode::Off, SimdMode::On];
+    for_each_model!(|kind| {
+        let mut cross_config: Option<Vec<Fingerprint>> = None;
+        for (width, simd) in WIDTHS.into_iter().zip(kernel_axis) {
+            for shards in [1usize, 3] {
+                let mut builder = JobBuilder::for_model(kind, 12, 0x5eed);
+                builder.batch = 160;
+                builder.tol_mult = 1e6;
+                builder.lanes = width;
+                builder.simd = simd;
+                builder.shards = shards;
+                let spec = builder.spec(
+                    &format!("{}-w{width}-s{shards}", kind.as_str()),
+                    StopRule::ExactRuns(2),
+                );
+
+                let solo = Coordinator::new(
+                    native_backend(),
+                    spec.config.clone(),
+                    spec.dataset.clone(),
+                    spec.prior.clone(),
+                )
+                .unwrap()
+                .run(spec.stop)
+                .unwrap();
+                let solo_fp = fingerprints(&solo.accepted);
+                assert_eq!(solo_fp.len(), 2 * 160, "{}: stream not fully accepted", kind.as_str());
+
+                for workers in [1usize, 4] {
+                    let report = Scheduler::new(native_backend(), workers)
+                        .run(vec![spec.clone()])
+                        .unwrap();
+                    let pooled = report.jobs[0].outcome.as_ref().unwrap();
+                    assert_eq!(
+                        fingerprints(&pooled.accepted),
+                        solo_fp,
+                        "model {}: pool ({workers} workers, {shards} shards) diverged \
+                         from solo at lane width {width}",
+                        kind.as_str()
+                    );
+                }
+
+                // width/kernel/shard count must not change the stream
+                match &cross_config {
+                    None => cross_config = Some(solo_fp),
+                    Some(want) => assert_eq!(
+                        &solo_fp,
+                        want,
+                        "model {}: stream changed at width {width} simd {simd:?} \
+                         shards {shards}",
+                        kind.as_str()
+                    ),
+                }
+            }
+        }
+    });
 }

@@ -7,7 +7,7 @@ use abc_ipu::model::{
     euclidean_distance, hazard, response_rate, state_idx, step, InitialCondition, Prior,
 };
 use abc_ipu::stats::{percentile, Histogram, Summary};
-use common::{prop_cases, random_theta};
+use common::{for_each_model, prop_cases, random_theta};
 
 fn random_ic(rng: &mut abc_ipu::rng::Xoshiro256) -> InitialCondition {
     InitialCondition {
@@ -89,6 +89,77 @@ fn prop_hazard_nonnegative_and_linear_in_state() {
         // gamma*I and beta*A exactly
         assert!((h[1] - theta[4] * state[state_idx::I]).abs() <= 1e-2 * h[1].max(1.0));
         assert!((h[2] - theta[3] * state[state_idx::A]).abs() <= 1e-2 * h[2].max(1.0));
+    });
+}
+
+#[test]
+fn prop_every_model_conserves_population_and_observes_finite() {
+    // The CompartmentModel physical contract (DESIGN.md §14), at
+    // *random* prior draws rather than θ*: every model's tau-leap day
+    // conserves total population, keeps compartments non-negative, and
+    // projects finite non-negative observations.
+    for_each_model!(|kind| {
+        let model = kind.instance();
+        prop_cases(&format!("{}_conservation", kind.as_str()), 30, |rng| {
+            let prior = model.prior();
+            let theta = prior.sample(rng);
+            let ic = random_ic(rng);
+            let mut state = vec![0.0f32; model.n_compartments()];
+            model.init_state(&ic, &theta, &mut state);
+            let mut next = state.clone();
+            let mut obs = vec![0.0f32; model.n_observed()];
+            for day in 0..20 {
+                let z: Vec<f32> = (0..model.n_noise()).map(|_| rng.normal_f32()).collect();
+                model.step(&state, &theta, &z, ic.population, &mut next);
+                std::mem::swap(&mut state, &mut next);
+                let total: f32 = state.iter().sum();
+                assert!(
+                    (total - ic.population).abs() / ic.population < 1e-4,
+                    "{}: population drift on day {day}: {total} vs {}",
+                    kind.as_str(),
+                    ic.population
+                );
+                for (c, &v) in state.iter().enumerate() {
+                    assert!(
+                        v >= 0.0 && v.is_finite(),
+                        "{}: compartment {c} = {v} on day {day}",
+                        kind.as_str()
+                    );
+                }
+                model.observe(&state, &mut obs);
+                for (r, &v) in obs.iter().enumerate() {
+                    assert!(
+                        v >= 0.0 && v.is_finite(),
+                        "{}: observation row {r} = {v} on day {day}",
+                        kind.as_str()
+                    );
+                }
+            }
+        });
+    });
+}
+
+#[test]
+fn prop_every_model_prior_pins_degenerate_dims() {
+    // Unused θ dimensions have low == high, so samples and MCMC
+    // proposals stay exactly pinned — the fixed-arity Theta contract.
+    for_each_model!(|kind| {
+        let model = kind.instance();
+        let prior = model.prior();
+        prop_cases(&format!("{}_degenerate_dims", kind.as_str()), 50, |rng| {
+            let s = prior.sample(rng);
+            assert!(prior.contains(&s), "{}: sample escaped the box", kind.as_str());
+            for p in 0..8 {
+                if prior.low()[p] == prior.high()[p] {
+                    assert_eq!(
+                        s[p].to_bits(),
+                        prior.low()[p].to_bits(),
+                        "{}: degenerate dim {p} not pinned",
+                        kind.as_str()
+                    );
+                }
+            }
+        });
     });
 }
 
@@ -208,6 +279,12 @@ fn prop_json_config_roundtrip() {
             },
             checkpoint_interval: 1 + rng.below(1_000),
             resume: rng.below(2) == 0,
+            method: match rng.below(3) {
+                0 => abc_ipu::abc::MethodKind::Rejection,
+                1 => abc_ipu::abc::MethodKind::Smc,
+                _ => abc_ipu::abc::MethodKind::Mcmc,
+            },
+            model: abc_ipu::model::ModelKind::all()[rng.below(4) as usize],
         };
         let parsed = abc_ipu::config::RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(parsed, cfg);

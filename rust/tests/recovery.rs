@@ -23,7 +23,7 @@ use abc_ipu::data::synthetic::{self, DEFAULT_THETA_STAR};
 use abc_ipu::data::Dataset;
 use abc_ipu::model::{Prior, N_PARAMS, PARAM_NAMES};
 use abc_ipu::scheduler::{JobSpec, Scheduler};
-use common::{fingerprints, native_backend, pool_workers, JobBuilder};
+use common::{fingerprints, for_each_model, native_backend, pool_workers, JobBuilder};
 
 const DAYS: usize = 16;
 const BATCH: usize = 2_000;
@@ -225,6 +225,148 @@ fn mcmc_posterior_credible_box_covers_theta_star() {
     for s in outcome.posterior.samples() {
         assert!(s.distance <= outcome.tolerance);
     }
+}
+
+// ---- model-zoo θ*-recovery (DESIGN.md §14) -------------------------
+
+/// Credible-box assertion generalized over the model: prior, θ* and
+/// parameter names come from the model instance. Degenerate prior
+/// dimensions are pinned (`low == high == θ*[p]`), so they cover with
+/// zero slack by construction.
+fn assert_covers_model_theta_star(
+    kind: abc_ipu::model::ModelKind,
+    name: &str,
+    samples: &[AcceptedSample],
+    slack_frac: f32,
+) {
+    let model = kind.instance();
+    let prior = model.prior();
+    let star_theta = model.theta_star();
+    let names = model.param_names();
+    assert!(!samples.is_empty(), "{name}: no accepted samples");
+    for p in 0..N_PARAMS {
+        let mut lo = f32::MAX;
+        let mut hi = f32::MIN;
+        for s in samples {
+            lo = lo.min(s.theta[p]);
+            hi = hi.max(s.theta[p]);
+        }
+        let slack = slack_frac * (prior.high()[p] - prior.low()[p]);
+        let star = star_theta[p];
+        assert!(
+            lo - slack <= star && star <= hi + slack,
+            "{name} ({}): credible box of {} = [{lo:.4}, {hi:.4}] (± {slack:.4} slack) \
+             does not cover θ* = {star:.4}",
+            kind.as_str(),
+            names[p]
+        );
+        assert!(lo >= prior.low()[p] && hi <= prior.high()[p], "{name} ({})", kind.as_str());
+    }
+}
+
+#[test]
+fn every_zoo_model_posterior_credible_box_covers_its_theta_star() {
+    // One rejection job per model, all on one shared pool — the same
+    // end-to-end recovery contract the epi scenarios pin above, swept
+    // across the zoo (each model fits its own synthetic θ* series with
+    // its own prior).
+    let mut jobs = Vec::new();
+    let mut kinds = Vec::new();
+    for_each_model!(|kind| {
+        let mut builder = JobBuilder::for_model(kind, DAYS, 0xA11CE ^ kind.as_str().len() as u64);
+        builder.tol_mult = 30.0;
+        builder.devices = 1;
+        builder.batch = BATCH;
+        builder.strategy = ReturnStrategy::Outfeed { chunk: BATCH / 10 };
+        builder.seed = 4000 + kind.as_str().len() as u64;
+        builder.max_runs = 1_500;
+        jobs.push(builder.spec(
+            &format!("recovery-{}", kind.as_str()),
+            StopRule::AcceptedTarget(TARGET),
+        ));
+        kinds.push(kind);
+    });
+    let report = Scheduler::new(native_backend(), pool_workers(4)).run(jobs).unwrap();
+    assert_eq!(report.jobs.len(), kinds.len());
+    for (job, &kind) in report.jobs.iter().zip(&kinds) {
+        let result = job.outcome.as_ref().unwrap_or_else(|e| panic!("{}: {e}", job.name));
+        assert!(
+            result.accepted.len() >= TARGET,
+            "{}: only {} accepted",
+            job.name,
+            result.accepted.len()
+        );
+        assert_covers_model_theta_star(kind, &job.name, &result.accepted, SLACK);
+        for s in &result.accepted {
+            assert!(s.distance <= result.tolerance, "{}", job.name);
+        }
+    }
+}
+
+#[test]
+fn smc_recovers_theta_star_for_the_sir_model() {
+    if !method_enabled("smc") {
+        return;
+    }
+    let kind = abc_ipu::model::ModelKind::Sir;
+    let mut builder = JobBuilder::for_model(kind, DAYS, 0xA11CE);
+    builder.tol_mult = 30.0;
+    builder.devices = 1;
+    builder.batch = BATCH;
+    builder.strategy = ReturnStrategy::Outfeed { chunk: BATCH / 10 };
+    builder.seed = 3003;
+    builder.max_runs = 1_500;
+    let dataset = builder.dataset.clone();
+    let config = builder.config();
+    let sc = smc::SmcScenario { name: "smc-sir-recovery".into(), config, dataset };
+    let smc_cfg = smc::SmcConfig { stages: 1, samples_per_stage: TARGET, ..Default::default() };
+    let mut results = smc::run_smc_scenarios_with_checkpoint(
+        native_backend(),
+        &[sc],
+        &smc_cfg,
+        pool_workers(4),
+        None,
+    )
+    .unwrap();
+    let (_, result) = results.pop().unwrap();
+    let post = result.final_posterior().expect("one stage ran");
+    assert!(post.len() >= TARGET, "only {} accepted", post.len());
+    assert_covers_model_theta_star(kind, "smc-sir-recovery", post.samples(), SLACK);
+}
+
+#[test]
+fn mcmc_recovers_theta_star_for_the_seir_model() {
+    if !method_enabled("mcmc") {
+        return;
+    }
+    let kind = abc_ipu::model::ModelKind::Seir;
+    let mut builder = JobBuilder::for_model(kind, DAYS, 0xA11CE);
+    builder.tol_mult = 30.0;
+    builder.devices = 1;
+    builder.batch = BATCH;
+    builder.strategy = ReturnStrategy::Outfeed { chunk: BATCH / 10 };
+    builder.seed = 3004;
+    builder.max_runs = 1_500;
+    let dataset = builder.dataset.clone();
+    let config = builder.config();
+    let scenario = MethodScenario { name: "mcmc-seir-recovery".into(), config, dataset };
+    let mcmc_cfg = McmcConfig { chains: 6, steps: 30, proposal_scale: 0.1 };
+    let mut m = AbcMcmc::new(vec![scenario], mcmc_cfg.clone()).unwrap();
+    drive(native_backend(), pool_workers(4), &mut m, None).unwrap();
+    let (_, outcome) = m.outcomes().unwrap().pop().unwrap();
+    assert_eq!(outcome.posterior.len(), mcmc_cfg.chains * (mcmc_cfg.steps + 1));
+    // degenerate dims stay bit-exactly pinned through MCMC proposals
+    let model = kind.instance();
+    let prior = model.prior();
+    for s in outcome.posterior.samples() {
+        for p in 0..N_PARAMS {
+            if prior.low()[p] == prior.high()[p] {
+                assert_eq!(s.theta[p].to_bits(), prior.low()[p].to_bits());
+            }
+        }
+        assert!(s.distance <= outcome.tolerance);
+    }
+    assert_covers_model_theta_star(kind, "mcmc-seir-recovery", outcome.posterior.samples(), 0.15);
 }
 
 #[test]

@@ -256,6 +256,59 @@ fn non_rejection_method_submissions_answer_400() {
 }
 
 #[test]
+fn unknown_model_answers_400_and_sir_serves_the_cli_posterior() {
+    let (addr, handle) = start_server(2);
+
+    // an unknown `model` is a typed 400 naming the model — never a
+    // silent fall-back to `epi` (DESIGN.md §14)
+    let (code, err) = post(&addr, "/v1/jobs", Some(r#"{"model": "lotka"}"#));
+    assert_eq!(code, 400);
+    let msg = err.req("error").unwrap().as_str().unwrap();
+    assert!(msg.contains("lotka"), "{err:?}");
+    assert!(msg.contains("epi|sir|seir|metapop"), "{err:?}");
+
+    // ...and a well-formed zoo submission serves the CLI path's exact
+    // posterior for that model
+    use abc_ipu::model::ModelKind;
+    let dataset = synthetic::model_dataset(ModelKind::Sir, 16, 0x5eed);
+    let config = RunConfig {
+        dataset: "synthetic-sir".into(),
+        tolerance: Some(dataset.default_tolerance * 30.0),
+        devices: 1,
+        batch_per_device: 400,
+        days: 16,
+        return_strategy: ReturnStrategy::Outfeed { chunk: 100 },
+        accepted_samples: 30,
+        seed: 91,
+        max_runs: 400,
+        model: ModelKind::Sir,
+        ..Default::default()
+    };
+    let solo = Coordinator::native(
+        config.clone(),
+        dataset,
+        ModelKind::Sir.instance().prior(),
+    )
+    .unwrap()
+    .run_until(config.accepted_samples)
+    .unwrap();
+    let solo_csv = Posterior::new(solo.accepted.clone()).to_csv();
+
+    let (code, receipt) = post(&addr, "/v1/jobs", Some(&config.to_json()));
+    assert_eq!(code, 200, "{receipt:?}");
+    let id = receipt.req("id").unwrap().as_u64().unwrap();
+    let status = wait_terminal(&addr, id);
+    assert_eq!(status.req("state").unwrap().as_str().unwrap(), "done", "{status:?}");
+    let (_, page) = get(&addr, &format!("/v1/jobs/{id}/samples"));
+    assert_eq!(parse_samples(&page), solo.accepted);
+    let (code, posterior) = get(&addr, &format!("/v1/jobs/{id}/posterior"));
+    assert_eq!(code, 200);
+    assert_eq!(posterior.req("csv").unwrap().as_str().unwrap(), solo_csv);
+
+    shutdown(&addr, handle);
+}
+
+#[test]
 fn cancel_freezes_a_running_job_and_the_daemon_keeps_serving() {
     let (mut config, _) = small_config(33);
     config.tolerance = Some(1e-3); // impossible ε: never finishes on its own

@@ -12,7 +12,15 @@ log/sin/cos) go through ctypes into the same glibc libm the Rust
 binaries link, so bit-level agreement with the Rust oracle is by
 construction, not by luck.
 
-Usage:  python3 tools/golden_ref.py [tolerance]
+Usage:  python3 tools/golden_ref.py [tolerance] [--model epi|sir|seir]
+
+Without a tolerance, prints the distance distribution (for picking a
+pin tolerance); with one, prints the per-run accepted counts and the
+64-bit stream fingerprint committed to the fixture. `--model` selects
+the zoo member (default: the paper's epi model); the zoo scenarios
+share the epi scenario's seed/days/batch/runs and fold the golden
+recovered+deaths rows into the single "removed" row the SIR-family
+models observe (DESIGN.md §14).
 """
 
 import ctypes
@@ -110,9 +118,18 @@ def lane_rng(key, lane):
 
 PRIOR_HIGH = [F(1.0), F(100.0), F(2.0), F(1.0), F(1.0), F(1.0), F(1.0), F(2.0)]
 
+# Zoo prior boxes: unused θ dimensions are pinned by degenerate [0, 0]
+# bounds — the sample still consumes all 8 uniforms (fixed draw order).
+SIR_PRIOR_HIGH = [F(1.0), F(1.0)] + [F(0.0)] * 6
+SEIR_PRIOR_HIGH = [F(1.0), F(1.0), F(1.0), F(2.0)] + [F(0.0)] * 4
+
+
+def prior_sample_from(rng, highs):
+    return [F(F(0.0) + (hi - F(0.0)) * F(rng.uniform())) for hi in highs]
+
 
 def prior_sample(rng):
-    return [F(F(0.0) + (hi - F(0.0)) * F(rng.uniform())) for hi in PRIOR_HIGH]
+    return prior_sample_from(rng, PRIOR_HIGH)
 
 
 def powf(x, y):
@@ -181,6 +198,75 @@ def distance(theta, observed, days, a0, r0, d0, population, rng):
     return F(np.sqrt(acc))
 
 
+# ---- zoo members (rust/src/model/zoo.rs, bit-exact ports) -----------
+
+
+def sir_init(a0, r0, d0, population):
+    removed = F(r0 + d0)
+    s0 = F(population - F(a0 + removed))
+    return [s0, F(a0), removed]
+
+
+def sir_step(state, theta, z, population):
+    s, i, r = state
+    h_inf = F(F(F(theta[0] * s) * i) / population)
+    h_rec = F(theta[1] * i)
+    n1 = np.minimum(sample_transition(h_inf, z[0]), s)
+    n2 = np.minimum(sample_transition(h_rec, z[1]), i)
+    return [F(s - n1), F(F(i + n1) - n2), F(r + n2)]
+
+
+def sir_sq_day(state, observed, t, days):
+    di = F(state[1] - observed[t])
+    dr = F(state[2] - observed[days + t])
+    return F(F(di * di) + F(dr * dr))
+
+
+def seir_init(a0, r0, d0, population, theta):
+    e0 = F(theta[3] * a0)
+    removed = F(r0 + d0)
+    s0 = F(population - F(F(a0 + removed) + e0))
+    return [s0, e0, F(a0), removed]
+
+
+def seir_step(state, theta, z, population):
+    s, e, i, r = state
+    h_exp = F(F(F(theta[0] * s) * i) / population)
+    h_on = F(theta[1] * e)
+    h_rec = F(theta[2] * i)
+    n1 = np.minimum(sample_transition(h_exp, z[0]), s)
+    n2 = np.minimum(sample_transition(h_on, z[1]), e)
+    n3 = np.minimum(sample_transition(h_rec, z[2]), i)
+    return [F(s - n1), F(F(e + n1) - n2), F(F(i + n2) - n3), F(r + n3)]
+
+
+def seir_sq_day(state, observed, t, days):
+    di = F(state[2] - observed[t])
+    dr = F(state[3] - observed[days + t])
+    return F(F(di * di) + F(dr * dr))
+
+
+# (model, prior highs, n_noise, init, step, sq_distance_day)
+ZOO = {
+    "sir": (SIR_PRIOR_HIGH, 2, sir_init, sir_step, sir_sq_day),
+    "seir": (SEIR_PRIOR_HIGH, 3, seir_init, seir_step, seir_sq_day),
+}
+
+
+def zoo_distance(model, theta, observed, days, a0, r0, d0, population, rng):
+    _, n_noise, init, stepf, sqf = ZOO[model]
+    if model == "seir":
+        state = init(a0, r0, d0, population, theta)
+    else:
+        state = init(a0, r0, d0, population)
+    acc = sqf(state, observed, 0, days)
+    for t in range(1, days):
+        z = [rng.normal_f32() for _ in range(n_noise)]
+        state = stepf(state, theta, z, population)
+        acc = F(acc + sqf(state, observed, t, days))
+    return F(np.sqrt(acc))
+
+
 SEED = 0x601D5EED
 DAYS = 12
 BATCH = 256
@@ -199,9 +285,28 @@ def f32_bits(x):
     return struct.unpack("<I", struct.pack("<f", float(x)))[0]
 
 
+def zoo_observed():
+    """[active ‖ recovered+deaths]: the golden epi series projected onto
+    the SIR-family 2-row observation (prevalence, removed)."""
+    active = [F(150 + 20 * t + ((t * t * 7) % 45)) for t in range(DAYS)]
+    removed = [F((5 + 3 * t + ((t * 5) % 11)) + (1 + t + ((t * 3) % 7))) for t in range(DAYS)]
+    return active + removed
+
+
 def main():
-    obs = golden_observed()
-    a0, r0, d0 = obs[0], obs[DAYS], obs[2 * DAYS]
+    argv = sys.argv[1:]
+    model = "epi"
+    if "--model" in argv:
+        i = argv.index("--model")
+        model = argv[i + 1]
+        del argv[i : i + 2]
+    if model == "epi":
+        obs = golden_observed()
+        a0, r0, d0 = obs[0], obs[DAYS], obs[2 * DAYS]
+    else:
+        obs = zoo_observed()
+        # same ic as the epi scenario; obs day 0 == [a0, r0 + d0]
+        a0, r0, d0 = F(150.0), F(5.0), F(1.0)
     print(f"canary powf(1.7, 0.6)  f32 bits 0x{f32_bits(_libm.powf(1.7, 0.6)):08x}")
     dists, thetas = [], []
     for run in range(RUNS):
@@ -209,14 +314,18 @@ def main():
         drow, trow = [], []
         for lane in range(BATCH):
             rng = lane_rng(key, lane)
-            theta = prior_sample(rng)
-            d = distance(theta, obs, DAYS, a0, r0, d0, POPULATION, rng)
+            if model == "epi":
+                theta = prior_sample(rng)
+                d = distance(theta, obs, DAYS, a0, r0, d0, POPULATION, rng)
+            else:
+                theta = prior_sample_from(rng, ZOO[model][0])
+                d = zoo_distance(model, theta, obs, DAYS, a0, r0, d0, POPULATION, rng)
             trow.append(theta)
             drow.append(d)
         dists.append(drow)
         thetas.append(trow)
 
-    if len(sys.argv) < 2:
+    if not argv:
         flat = sorted(float(d) for row in dists for d in row)
         n = len(flat)
         print(f"distances: min={flat[0]:.6f} max={flat[-1]:.6f}")
@@ -229,7 +338,7 @@ def main():
             )
         return
 
-    tol = F(float(sys.argv[1]))
+    tol = F(float(argv[0]))
     h = 0xCBF29CE484222325
     total = 0
     for run in range(RUNS):
