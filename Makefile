@@ -7,7 +7,7 @@
 ARTIFACTS_DIR ?= $(CURDIR)/artifacts
 PYTHON ?= python3
 
-.PHONY: build test doc examples bench bench-hot bench-scaling artifacts artifacts-quick fmt clean
+.PHONY: build test test-alloc doc examples bench bench-hot bench-scaling artifacts artifacts-quick fmt clean
 
 ## cargo build --release (native backend, zero external deps)
 build:
@@ -37,8 +37,18 @@ bench:
 ## registers (exactly-rounded vector sqrt/floor/min/max, no contraction
 ## without an explicit fma) — results stay bit-identical to the default
 ## codegen; `cargo test` deliberately runs without it to prove that.
+## --features alloc-count installs the counting global allocator so the
+## bench can measure the schema-v3 `allocs_per_run` axis (counting is
+## observational: one relaxed atomic add per allocation, and the timed
+## loops don't allocate — DESIGN.md §15); without the feature the bench
+## still measures throughput but leaves the committed artifact alone.
 bench-hot:
-	RUSTFLAGS="-C target-cpu=native" cargo bench --bench hot_path
+	RUSTFLAGS="-C target-cpu=native" cargo bench --bench hot_path --features alloc-count
+
+## the zero-alloc steady-state gate: fails if a warm ExecutionPlan
+## run_into performs any heap allocation (DESIGN.md §15)
+test-alloc:
+	cargo test --release --features alloc-count --test alloc_regression
 
 ## measured Table-7 sweep: one sharded job across a growing pool
 ## (DESIGN.md §9); writes the repo-root BENCH_scaling.json artifact

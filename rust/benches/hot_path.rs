@@ -10,7 +10,7 @@
 //!
 //! Besides the usual `reports/bench_hot_path.csv`, this suite writes
 //! the repo-root **`BENCH_hot_path.json`** perf-trajectory artifact
-//! (schema v2, validated on write against
+//! (schema v3, validated on write against
 //! `report::bench_schema::validate_hot_path` — the same contract the
 //! CI bench smoke checks via `examples/check_bench.rs`): samples/sec
 //! for the single-thread scalar baseline and for the lane engine at
@@ -18,19 +18,27 @@
 //! axis in isolation) and auto threads (the full engine, whose
 //! widest-width speedup is the headline) — plus the `simd_ratio` axis
 //! comparing the vectorized and scalar kernels (`$ABC_IPU_SIMD`,
-//! DESIGN.md §11) at widths 1/8/16 on one thread.
-//! `ABC_IPU_BENCH_QUICK=1` shrinks iterations for smoke runs.
+//! DESIGN.md §11) at widths 1/8/16 on one thread, and the schema-v3
+//! `allocs_per_run` axis: heap-allocation events per warm
+//! `ExecutionPlan::run_into` (DESIGN.md §15), which the plan/arena
+//! contract pins at 0. Measuring that axis needs the counting global
+//! allocator, so the artifact is only (re)written when the bench is
+//! built with `--features alloc-count` (what `make bench-hot` does);
+//! a plain `cargo bench --bench hot_path` still measures and reports
+//! everything else. `ABC_IPU_BENCH_QUICK=1` shrinks iterations for
+//! smoke runs.
 
 #[path = "harness.rs"]
 mod harness;
 
-use abc_ipu::backend::{AbcJob, AbcRunOutput, Backend, NativeBackend};
+use abc_ipu::backend::{AbcJob, AbcRunOutput, Backend, ExecutionPlan, NativeBackend};
 use abc_ipu::coordinator::{chunk_batch, filter_transfer, top_k_selection, Transfer};
 use abc_ipu::data::synthetic;
-use abc_ipu::model::lanes::{resolve_parallelism, scalar_reference, LaneEngine};
+use abc_ipu::model::lanes::{resolve_parallelism, scalar_reference, LaneEngine, THREADS_ENV};
 use abc_ipu::model::{Prior, Simulator};
 use abc_ipu::report::bench_schema::{validate_hot_path, HOT_PATH_SCHEMA, RATIO_WIDTHS};
 use abc_ipu::rng::Xoshiro256;
+use abc_ipu::util::alloc_count;
 
 const DAYS: usize = 49;
 const LANE_WIDTHS: [usize; 4] = [1, 4, 8, 16];
@@ -128,6 +136,38 @@ fn main() {
         engine.run([key, 0]).expect("run");
     });
 
+    // steady-state allocation events per warm `ExecutionPlan::run_into`
+    // — the schema-v3 `allocs_per_run` axis (DESIGN.md §15). Only
+    // measurable when the counting allocator is installed. The contract
+    // is the single-thread steady state (pool workers run
+    // single-threaded engines; the threaded path spawns scoped threads
+    // per run by design), so the engine thread knob is pinned for this
+    // one plan compile.
+    let allocs_per_run: Option<u64> = if alloc_count::counting_enabled() {
+        let prev = std::env::var(THREADS_ENV).ok();
+        std::env::set_var(THREADS_ENV, "1");
+        let plan = ExecutionPlan::compile(&job).expect("plan");
+        match prev {
+            Some(v) => std::env::set_var(THREADS_ENV, v),
+            None => std::env::remove_var(THREADS_ENV),
+        }
+        let mut scratch = plan.scratch();
+        let mut th = vec![0.0f32; 1_000 * 8];
+        let mut di = vec![0.0f32; 1_000];
+        plan.run_into(&mut scratch, [1, 7], 0, 1_000, &mut th, &mut di).expect("warm run");
+        let reps: u64 = 32;
+        let before = alloc_count::alloc_count();
+        for k in 0..reps as u32 {
+            plan.run_into(&mut scratch, [k + 2, 7], 0, 1_000, &mut th, &mut di)
+                .expect("steady-state run");
+        }
+        let delta = alloc_count::alloc_count() - before;
+        // round up: a single allocation anywhere must not average away
+        Some(delta.div_ceil(reps))
+    } else {
+        None
+    };
+
     // device-side return strategies over a 100k batch
     let mut r3 = Xoshiro256::seed_from(2);
     let out = AbcRunOutput {
@@ -176,7 +216,7 @@ fn main() {
         }
     }
 
-    // ---- BENCH_hot_path.json: the perf-trajectory artifact (v2) ----
+    // ---- BENCH_hot_path.json: the perf-trajectory artifact (v3) ----
     // Two thread axes against the same 1-thread scalar baseline:
     // `lanes_single_thread` isolates the width/SoA staging cost, and
     // `lanes` is the full engine at auto threads — the headline
@@ -236,31 +276,42 @@ fn main() {
              \"off_samples_per_sec\": {off:.1}, \"ratio\": {ratio:.4}}}"
         ));
     }
-    let json = format!(
-        "{{\n  \"suite\": \"hot_path\",\n  \"schema\": {HOT_PATH_SCHEMA},\n  \
-         \"harness\": \"cargo bench --bench hot_path\",\n  \
-         \"days\": {DAYS},\n  \"batch\": {lane_batch},\n  \
-         \"quick\": {quick},\n  \
-         \"scalar_baseline\": {{\"name\": \"scalar_oracle_1thread\", \
-         \"batch\": {scalar_batch}, \"samples_per_sec\": {scalar_sps:.1}}},\n  \
-         \"lanes\": [\n{lane_rows}\n  ],\n  \
-         \"lanes_single_thread\": [\n{single_rows}\n  ],\n  \
-         \"simd_ratio\": [\n{ratio_rows}\n  ],\n  \
-         \"widest\": {{\"width\": {}, \"threads\": {threads}, \
-         \"speedup_vs_scalar\": {widest_speedup:.3}}}\n}}\n",
-        LANE_WIDTHS[LANE_WIDTHS.len() - 1]
-    );
-    // self-check against the shared schema contract, in quick mode too
-    if let Err(e) = validate_hot_path(&json) {
-        panic!("hot_path produced an artifact its own schema rejects: {e}");
+    match allocs_per_run {
+        Some(allocs) => {
+            let json = format!(
+                "{{\n  \"suite\": \"hot_path\",\n  \"schema\": {HOT_PATH_SCHEMA},\n  \
+                 \"harness\": \"cargo bench --bench hot_path --features alloc-count\",\n  \
+                 \"days\": {DAYS},\n  \"batch\": {lane_batch},\n  \
+                 \"quick\": {quick},\n  \
+                 \"allocs_per_run\": {allocs},\n  \
+                 \"scalar_baseline\": {{\"name\": \"scalar_oracle_1thread\", \
+                 \"batch\": {scalar_batch}, \"samples_per_sec\": {scalar_sps:.1}}},\n  \
+                 \"lanes\": [\n{lane_rows}\n  ],\n  \
+                 \"lanes_single_thread\": [\n{single_rows}\n  ],\n  \
+                 \"simd_ratio\": [\n{ratio_rows}\n  ],\n  \
+                 \"widest\": {{\"width\": {}, \"threads\": {threads}, \
+                 \"speedup_vs_scalar\": {widest_speedup:.3}}}\n}}\n",
+                LANE_WIDTHS[LANE_WIDTHS.len() - 1]
+            );
+            // self-check against the shared schema contract, in quick mode too
+            if let Err(e) = validate_hot_path(&json) {
+                panic!("hot_path produced an artifact its own schema rejects: {e}");
+            }
+            let path = harness::write_repo_json("BENCH_hot_path.json", &json);
+            suite.note(format!(
+                "perf artifact → {} (widest lane speedup {widest_speedup:.2}x over the \
+                 1-thread scalar baseline at {threads} engine threads; vectorized kernel \
+                 {ratio_at_widest:.2}x the scalar kernel at width {}, 1 thread; \
+                 {allocs} heap allocations per warm run)",
+                path.display(),
+                RATIO_WIDTHS[RATIO_WIDTHS.len() - 1]
+            ));
+        }
+        None => suite.note(format!(
+            "BENCH_hot_path.json not rewritten: the schema-v{HOT_PATH_SCHEMA} \
+             `allocs_per_run` axis needs the counting allocator — rerun via \
+             `make bench-hot` (cargo bench --bench hot_path --features alloc-count)"
+        )),
     }
-    let path = harness::write_repo_json("BENCH_hot_path.json", &json);
-    suite.note(format!(
-        "perf artifact → {} (widest lane speedup {widest_speedup:.2}x over the \
-         1-thread scalar baseline at {threads} engine threads; vectorized kernel \
-         {ratio_at_widest:.2}x the scalar kernel at width {}, 1 thread)",
-        path.display(),
-        RATIO_WIDTHS[RATIO_WIDTHS.len() - 1]
-    ));
     suite.finish();
 }

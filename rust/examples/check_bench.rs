@@ -1,16 +1,19 @@
 //! CI gate for the repo-root `BENCH_hot_path.json` perf artifact.
 //!
 //! Validates the artifact against the shared schema contract
-//! (`report::bench_schema`, schema v2) and prints its headline numbers.
+//! (`report::bench_schema`, schema v3) and prints its headline numbers.
 //! Exit status is the gate: nonzero when the file is missing, the JSON
 //! is malformed, the schema version is stale, any required field is
-//! absent or non-positive — and, with `--require-simd-speedup`, when
+//! absent or non-positive — with `--require-simd-speedup`, when
 //! the vectorized kernel is slower than the scalar kernel at the widest
-//! ratio width (16 lanes, 1 thread).
+//! ratio width (16 lanes, 1 thread) — and, with `--require-zero-alloc`,
+//! when the recorded `allocs_per_run` is above zero (the plan/arena
+//! steady-state contract, DESIGN.md §15).
 //!
 //! ```text
-//! cargo bench --bench hot_path        # writes BENCH_hot_path.json
-//! cargo run --release --example check_bench -- --require-simd-speedup
+//! make bench-hot                      # writes BENCH_hot_path.json
+//! cargo run --release --example check_bench -- \
+//!     --require-simd-speedup --require-zero-alloc
 //! ```
 //!
 //! Flags: `--path FILE` overrides the default artifact location
@@ -22,7 +25,7 @@ use abc_ipu::util::cli::Spec;
 fn main() {
     let args = match Spec::new()
         .values(&["path"])
-        .bools(&["require-simd-speedup"])
+        .bools(&["require-simd-speedup", "require-zero-alloc"])
         .parse(std::env::args().skip(1))
     {
         Ok(a) => a,
@@ -75,6 +78,17 @@ fn main() {
             "  simd ratio @ width {:>2}: {:.2}x ({:.0} vs {:.0} samples/sec, 1 thread)",
             r.width, r.ratio, r.on_samples_per_sec, r.off_samples_per_sec
         );
+    }
+    println!(
+        "  steady-state heap allocations per warm run: {}",
+        summary.allocs_per_run
+    );
+    if args.has("require-zero-alloc") {
+        if let Err(e) = summary.require_zero_alloc() {
+            eprintln!("check_bench: {e}");
+            std::process::exit(1);
+        }
+        println!("  ok: warm plan/arena run loop performs zero heap allocations");
     }
     if args.has("require-simd-speedup") {
         if let Err(e) = summary.require_simd_speedup() {

@@ -120,6 +120,13 @@ pub struct MethodStats {
     pub simulator_calls: u64,
     /// Wall-clock of the whole drive loop.
     pub wall: Duration,
+    /// Pool plan-cache hits across all stages (work items that reused a
+    /// worker's compiled `ExecutionPlan` + arena, DESIGN.md §15).
+    pub plan_hits: u64,
+    /// Pool plan compilations across all stages.
+    pub plan_misses: u64,
+    /// Cached plans evicted after their job's outcome was decided.
+    pub plan_evictions: u64,
 }
 
 /// An inference method as a schedulable state machine.
@@ -208,6 +215,9 @@ pub fn drive(
         let report = scheduler.run(jobs)?;
         stats.stages += 1;
         stats.runs += report.pool_metrics.runs;
+        stats.plan_hits += report.pool_metrics.plan_hits;
+        stats.plan_misses += report.pool_metrics.plan_misses;
+        stats.plan_evictions += report.pool_metrics.plan_evictions;
         let mut results = Vec::with_capacity(report.jobs.len());
         for run in report.jobs {
             let result = run.outcome?;

@@ -30,10 +30,12 @@
 //! run for every backend.
 
 pub mod native;
+pub mod plan;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use native::NativeBackend;
+pub use plan::ExecutionPlan;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 

@@ -22,10 +22,10 @@
 //! likewise per job (`AbcJob::simd`, `RunConfig::simd`) or globally
 //! (`$ABC_IPU_SIMD`).
 
+use super::plan::{initial_condition, ExecutionPlan};
 use super::{AbcEngine, AbcJob, AbcRunOutput, Backend};
 use crate::model::lanes::LaneEngine;
-use crate::model::simd::resolve_simd;
-use crate::model::{InitialCondition, Prior, Simulator, N_COMPARTMENTS, N_PARAMS, N_TRANSITIONS};
+use crate::model::{Prior, RunScratch, Simulator, N_COMPARTMENTS, N_PARAMS, N_TRANSITIONS};
 use crate::rng::{key_u64, splitmix64, Xoshiro256};
 use crate::{Error, Result};
 
@@ -37,16 +37,6 @@ impl NativeBackend {
     /// Create the native backend.
     pub fn new() -> Self {
         NativeBackend
-    }
-}
-
-/// Initial condition from the `(A0, R0, D0, P)` consts layout.
-fn initial_condition(consts: &[f32; 4]) -> InitialCondition {
-    InitialCondition {
-        a0: consts[0],
-        r0: consts[1],
-        d0: consts[2],
-        population: consts[3],
     }
 }
 
@@ -90,44 +80,42 @@ pub fn abc_run(
     Ok(AbcRunOutput { thetas, distances })
 }
 
-/// One worker's native engine: owns the lane engine and the job binding.
+/// One worker's native engine: the job compiled once into an
+/// [`ExecutionPlan`] plus the worker's reusable [`RunScratch`] arena —
+/// the plan/arena pair every run of the job executes against
+/// (DESIGN.md §15). Opening the engine is the expensive step (knob
+/// resolution, arena growth); each run after that is allocation-free
+/// apart from the output buffers the [`AbcEngine`] contract returns.
 struct NativeEngine {
-    engine: LaneEngine,
-    prior: Prior,
-    observed: Vec<f32>,
-    days: usize,
-    batch: usize,
+    plan: ExecutionPlan,
+    scratch: RunScratch,
 }
 
 impl AbcEngine for NativeEngine {
     fn batch(&self) -> usize {
-        self.batch
+        self.plan.batch()
     }
 
     fn run(&mut self, key: [u32; 2]) -> Result<AbcRunOutput> {
-        abc_run(&self.engine, &self.prior, &self.observed, self.days, self.batch, key)
+        self.run_range(key, 0, self.plan.batch())
     }
 
-    /// Shard seam override: simulate only the requested lanes instead
-    /// of slicing a full run — per-lane streams make the two paths
-    /// bit-identical (`model::lanes::sample_distance_range`), so a
-    /// K-sharded run costs what a solo run costs, split K ways.
+    /// Shard seam override: simulate only the requested lanes against
+    /// the plan/arena instead of slicing a full run — per-lane streams
+    /// make the two paths bit-identical
+    /// (`model::lanes::sample_distance_range_into`), so a K-sharded run
+    /// costs what a solo run costs, split K ways.
     fn run_range(&mut self, key: [u32; 2], lane0: usize, len: usize) -> Result<AbcRunOutput> {
-        if lane0 + len > self.batch {
+        if lane0 + len > self.plan.batch() {
             return Err(Error::ShapeMismatch {
                 what: "native run_range lanes".to_string(),
-                want: format!("lane0 + len <= batch ({})", self.batch),
+                want: format!("lane0 + len <= batch ({})", self.plan.batch()),
                 got: format!("[{lane0}, {})", lane0 + len),
             });
         }
-        let (thetas, distances) = self.engine.sample_distance_range(
-            &self.prior,
-            &self.observed,
-            self.days,
-            lane0,
-            len,
-            key,
-        )?;
+        let mut thetas = vec![0.0f32; len * N_PARAMS];
+        let mut distances = vec![0.0f32; len];
+        self.plan.run_into(&mut self.scratch, key, lane0, len, &mut thetas, &mut distances)?;
         Ok(AbcRunOutput { thetas, distances })
     }
 }
@@ -138,16 +126,9 @@ impl Backend for NativeBackend {
     }
 
     fn open_engine(&self, _device: u32, job: &AbcJob) -> Result<Box<dyn AbcEngine>> {
-        job.validate()?;
-        Ok(Box::new(NativeEngine {
-            engine: LaneEngine::auto(initial_condition(&job.consts), job.lanes)?
-                .with_simd(resolve_simd(job.simd)?)
-                .with_model(job.model),
-            prior: Prior::new(job.prior_low, job.prior_high)?,
-            observed: job.observed.clone(),
-            days: job.days,
-            batch: job.batch,
-        }))
+        let plan = ExecutionPlan::compile(job)?;
+        let scratch = plan.scratch();
+        Ok(Box::new(NativeEngine { plan, scratch }))
     }
 
     fn predict(
@@ -167,15 +148,18 @@ impl Backend for NativeBackend {
         // posterior prediction is an epi-only surface: the trajectory
         // projection below is the paper's [A, R, D] block. Non-epi jobs
         // never reach here — the CLI guards with a typed error first.
+        // One arena serves every rollout: the [n, 3, days] result block
+        // is the only per-call allocation.
         let n = thetas.len() / N_PARAMS;
         let sim = Simulator::new(initial_condition(consts));
-        let mut out = Vec::with_capacity(n * 3 * days);
-        for i in 0..n {
+        let mut out = vec![0.0f32; n * 3 * days];
+        let mut scratch = RunScratch::new();
+        for (i, row) in out.chunks_mut(3 * days).enumerate() {
             let mut theta = [0.0f32; N_PARAMS];
             theta.copy_from_slice(&thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
             // independent stream per rollout, deterministic in (key, i)
             let mut rng = Xoshiro256::seed_from(splitmix64(key_u64(key) ^ splitmix64(i as u64)));
-            out.extend_from_slice(&sim.trajectory(&theta, days, &mut rng)?);
+            sim.trajectory_into(&theta, days, &mut rng, &mut scratch, row)?;
         }
         Ok(out)
     }
@@ -202,15 +186,15 @@ impl Backend for NativeBackend {
                 got: format!("{} / {} elements", thetas.len(), z.len()),
             });
         }
-        let mut out = Vec::with_capacity(states.len());
-        for i in 0..n {
+        let mut out = vec![0.0f32; states.len()];
+        for (i, row) in out.chunks_mut(N_COMPARTMENTS).enumerate() {
             let mut state = [0.0f32; N_COMPARTMENTS];
             state.copy_from_slice(&states[i * N_COMPARTMENTS..(i + 1) * N_COMPARTMENTS]);
             let mut theta = [0.0f32; N_PARAMS];
             theta.copy_from_slice(&thetas[i * N_PARAMS..(i + 1) * N_PARAMS]);
             let mut noise = [0.0f32; N_TRANSITIONS];
             noise.copy_from_slice(&z[i * N_TRANSITIONS..(i + 1) * N_TRANSITIONS]);
-            out.extend_from_slice(&crate::model::step(&state, &theta, &noise, consts[3]));
+            row.copy_from_slice(&crate::model::step(&state, &theta, &noise, consts[3]));
         }
         Ok(out)
     }
@@ -308,7 +292,7 @@ mod tests {
     #[test]
     fn zoo_job_runs_end_to_end_and_matches_its_oracle() {
         use crate::model::lanes::scalar_reference;
-        use crate::model::ModelKind;
+        use crate::model::{InitialCondition, ModelKind};
         let backend = NativeBackend::new();
         for kind in ModelKind::all() {
             let model = kind.instance();

@@ -1,0 +1,326 @@
+//! The compile-once half of the execution path: [`ExecutionPlan`].
+//!
+//! The paper's IPU advantage (§3.1, Table 1) comes from a
+//! compile-once/run-many execution model: the graph is compiled and
+//! made resident once, then millions of simulations stream through it
+//! with memory kept next to compute. This module is the host-side seam
+//! for that discipline. An [`ExecutionPlan`] is everything a worker
+//! resolves *once* when it opens a job:
+//!
+//! * the bound [`LaneEngine`] — resolved compartment model instance,
+//!   effective lane width, intra-run thread count and SIMD kernel
+//!   choice (every `$ABC_IPU_*` knob is read here, never per run),
+//! * the job's prior box, observed-series projection and fit window,
+//! * the per-model slab shapes (`n_compartments`, `n_noise`,
+//!   `n_observed`) that size the scratch arena,
+//! * the shard geometry ([`ShardPlan`]) splitting the batch into
+//!   contiguous lane ranges.
+//!
+//! The run-many half is [`ExecutionPlan::run_into`]: executing one lane
+//! range against a caller-owned [`RunScratch`] arena, which a warm
+//! worker reuses run after run with zero steady-state heap allocations
+//! (DESIGN.md §15). Checkpoint fingerprints deliberately exclude plan
+//! geometry — width, threads, SIMD choice and shard count are pure
+//! performance knobs with bit-invariant outputs, so a resume may
+//! recompile a *different* plan (new environment, new pool size) and
+//! still extend the identical sample stream.
+//!
+//! Shard geometry lives here (not in `scheduler`) for the same
+//! layering reason [`MAX_SHARDS`](super::MAX_SHARDS) does: the plan of
+//! a job must not depend on the scheduler that happens to execute it —
+//! `scheduler::shard` re-exports these types and keeps the
+//! leader-side transfer merge, which does need coordinator vocabulary.
+
+use super::AbcJob;
+use crate::model::lanes::LaneEngine;
+use crate::model::simd::resolve_simd;
+use crate::model::{InitialCondition, ModelKind, Prior, RunScratch};
+use crate::{Error, Result};
+
+/// Environment override for the shard count (`0` or unset = honour the
+/// requested value). Like `$ABC_IPU_LANES`, always safe: results are
+/// shard-invariant.
+pub const SHARDS_ENV: &str = "ABC_IPU_SHARDS";
+
+use super::MAX_SHARDS;
+
+/// Resolve an effective shard count: `$ABC_IPU_SHARDS` wins when set to
+/// a positive integer (`0`/unset honour the request), then the
+/// requested value; `0` from either means auto, which is solo
+/// (1 shard). Capped at [`MAX_SHARDS`]. A malformed override (not a
+/// non-negative integer) is a typed [`crate::Error::Config`] — the
+/// shard count is harmless to *change* but not to silently mis-read.
+pub fn resolve_shards(requested: usize) -> Result<usize> {
+    let requested = crate::util::env::usize_override(SHARDS_ENV)?
+        .filter(|&v| v >= 1)
+        .unwrap_or(requested);
+    Ok(if requested >= 1 {
+        requested.min(MAX_SHARDS)
+    } else {
+        1
+    })
+}
+
+/// One shard's contiguous lane range within a run's batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    /// Shard index, `0..K`.
+    pub shard: u32,
+    /// First global lane (sample index) of the range.
+    pub lane0: usize,
+    /// Number of lanes in the range (>= 1).
+    pub len: usize,
+}
+
+/// The shard plan of one job: `K` contiguous, disjoint, near-equal lane
+/// ranges covering the run batch `[0, B)` exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    batch: usize,
+    ranges: Vec<ShardRange>,
+}
+
+impl ShardPlan {
+    /// Plan `shards` contiguous ranges over a batch of `batch` lanes.
+    ///
+    /// The count is clamped to `[1, batch]` (a shard must own at least
+    /// one lane); the first `batch % K` shards get one extra lane so
+    /// sizes differ by at most one.
+    pub fn new(batch: usize, shards: usize) -> Self {
+        let k = shards.clamp(1, batch.max(1));
+        let base = batch / k;
+        let extra = batch % k;
+        let mut ranges = Vec::with_capacity(k);
+        let mut lane0 = 0usize;
+        for s in 0..k {
+            let len = base + usize::from(s < extra);
+            ranges.push(ShardRange { shard: s as u32, lane0, len });
+            lane0 += len;
+        }
+        Self { batch, ranges }
+    }
+
+    /// Number of shards `K`.
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The batch the plan covers.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// All ranges, ascending by `lane0`.
+    pub fn ranges(&self) -> &[ShardRange] {
+        &self.ranges
+    }
+
+    /// The range of shard `shard` (panics if out of plan).
+    pub fn range(&self, shard: u32) -> ShardRange {
+        self.ranges[shard as usize]
+    }
+
+    /// The shard owning global lane `lane` (panics if `lane` is outside
+    /// the batch). Ranges are contiguous and ascending, so this is a
+    /// binary search.
+    pub fn shard_of(&self, lane: usize) -> u32 {
+        assert!(lane < self.batch, "lane {lane} outside batch {}", self.batch);
+        self.ranges.partition_point(|r| r.lane0 + r.len <= lane) as u32
+    }
+}
+
+/// Initial condition from the `(A0, R0, D0, P)` consts layout.
+pub(crate) fn initial_condition(consts: &[f32; 4]) -> InitialCondition {
+    InitialCondition {
+        a0: consts[0],
+        r0: consts[1],
+        d0: consts[2],
+        population: consts[3],
+    }
+}
+
+/// One job, compiled once: the resolved engine, problem binding and
+/// geometry every run of the job executes against (module docs above).
+///
+/// Everything environment- or resolution-dependent happens in
+/// [`ExecutionPlan::compile`]; [`ExecutionPlan::run_into`] is a pure
+/// function of `(plan, key, lane range)` and a warm [`RunScratch`].
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    engine: LaneEngine,
+    prior: Prior,
+    observed: Vec<f32>,
+    days: usize,
+    batch: usize,
+    shard_plan: ShardPlan,
+}
+
+impl ExecutionPlan {
+    /// Compile a job: validate it, resolve every performance knob
+    /// (lane width, intra-run threads, SIMD kernel, shard count — the
+    /// `$ABC_IPU_*` environment is read here and never again), bind the
+    /// model instance and prior, and fix the shard geometry.
+    pub fn compile(job: &AbcJob) -> Result<Self> {
+        job.validate()?;
+        let engine = LaneEngine::auto(initial_condition(&job.consts), job.lanes)?
+            .with_simd(resolve_simd(job.simd)?)
+            .with_model(job.model);
+        Ok(Self {
+            engine,
+            prior: Prior::new(job.prior_low, job.prior_high)?,
+            observed: job.observed.clone(),
+            days: job.days,
+            batch: job.batch,
+            shard_plan: ShardPlan::new(job.batch, resolve_shards(job.shards)?),
+        })
+    }
+
+    /// A [`RunScratch`] arena pre-grown for this plan's model shapes
+    /// and lane width — allocate once per worker, reuse every run.
+    pub fn scratch(&self) -> RunScratch {
+        self.engine.scratch()
+    }
+
+    /// Execute lanes `[lane0, lane0 + len)` of the run keyed `key`
+    /// against the caller's arena, writing θ into `theta_out`
+    /// (`len * 8` elements) and distances into `dist_out` (`len`).
+    /// With a warm scratch the whole run performs zero heap
+    /// allocations; bit-identical to the matching slice of the full
+    /// batch for every lane range (DESIGN.md §8/§9).
+    pub fn run_into(
+        &self,
+        scratch: &mut RunScratch,
+        key: [u32; 2],
+        lane0: usize,
+        len: usize,
+        theta_out: &mut [f32],
+        dist_out: &mut [f32],
+    ) -> Result<()> {
+        if lane0 + len > self.batch {
+            return Err(Error::ShapeMismatch {
+                what: "execution plan run_range lanes".to_string(),
+                want: format!("lane0 + len <= batch ({})", self.batch),
+                got: format!("[{lane0}, {})", lane0 + len),
+            });
+        }
+        self.engine.sample_distance_range_into(
+            scratch,
+            &self.prior,
+            &self.observed,
+            self.days,
+            lane0,
+            len,
+            key,
+            theta_out,
+            dist_out,
+        )
+    }
+
+    /// The resolved lane engine (width, threads, kernel, model).
+    pub fn engine(&self) -> &LaneEngine {
+        &self.engine
+    }
+
+    /// The job's prior box.
+    pub fn prior(&self) -> &Prior {
+        &self.prior
+    }
+
+    /// The observed `[n_observed, days]` projection the runs fit.
+    pub fn observed(&self) -> &[f32] {
+        &self.observed
+    }
+
+    /// Fit window in days.
+    pub fn days(&self) -> usize {
+        self.days
+    }
+
+    /// Samples per run.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The resolved shard geometry over the batch.
+    pub fn shard_plan(&self) -> &ShardPlan {
+        &self.shard_plan
+    }
+
+    /// The compiled model kind.
+    pub fn model(&self) -> ModelKind {
+        self.engine.model().kind()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{SimdMode, N_PARAMS};
+
+    fn job() -> AbcJob {
+        AbcJob {
+            batch: 24,
+            days: 6,
+            observed: vec![1.0; 3 * 6],
+            prior_low: [0.0; 8],
+            prior_high: crate::model::PRIOR_HIGH,
+            consts: [155.0, 2.0, 3.0, 6e7],
+            lanes: 4,
+            shards: 3,
+            simd: SimdMode::Auto,
+            model: ModelKind::Epi,
+        }
+    }
+
+    #[test]
+    fn compile_resolves_shapes_and_geometry() {
+        let plan = ExecutionPlan::compile(&job()).unwrap();
+        assert_eq!(plan.batch(), 24);
+        assert_eq!(plan.days(), 6);
+        assert_eq!(plan.model(), ModelKind::Epi);
+        assert_eq!(plan.observed().len(), 18);
+        // shard geometry covers the batch ($ABC_IPU_SHARDS may widen it)
+        let total: usize = plan.shard_plan().ranges().iter().map(|r| r.len).sum();
+        assert_eq!(total, 24);
+    }
+
+    #[test]
+    fn compile_rejects_invalid_jobs() {
+        let mut bad = job();
+        bad.batch = 0;
+        assert!(ExecutionPlan::compile(&bad).is_err());
+        let mut bad = job();
+        bad.observed.truncate(5);
+        assert!(ExecutionPlan::compile(&bad).is_err());
+    }
+
+    #[test]
+    fn run_into_matches_the_allocating_engine_path_and_checks_bounds() {
+        let plan = ExecutionPlan::compile(&job()).unwrap();
+        let mut scratch = plan.scratch();
+        let mut thetas = vec![0.0f32; 24 * N_PARAMS];
+        let mut dists = vec![0.0f32; 24];
+        plan.run_into(&mut scratch, [3, 4], 0, 24, &mut thetas, &mut dists).unwrap();
+        let (want_t, want_d) = plan
+            .engine()
+            .sample_distance_range(plan.prior(), plan.observed(), 6, 0, 24, [3, 4])
+            .unwrap();
+        assert_eq!(thetas, want_t);
+        assert_eq!(dists, want_d);
+        // reuse across keys is bit-invisible: a second run on the warm
+        // arena equals a fresh-arena run of the same key
+        let mut t2 = vec![0.0f32; 24 * N_PARAMS];
+        let mut d2 = vec![0.0f32; 24];
+        plan.run_into(&mut scratch, [9, 9], 0, 24, &mut t2, &mut d2).unwrap();
+        let mut cold = plan.scratch();
+        let mut t3 = vec![0.0f32; 24 * N_PARAMS];
+        let mut d3 = vec![0.0f32; 24];
+        plan.run_into(&mut cold, [9, 9], 0, 24, &mut t3, &mut d3).unwrap();
+        assert_eq!(t2, t3);
+        assert_eq!(d2, d3);
+
+        let mut t = vec![0.0f32; 8 * N_PARAMS];
+        let mut d = vec![0.0f32; 8];
+        assert!(plan.run_into(&mut scratch, [3, 4], 20, 8, &mut t, &mut d).is_err());
+    }
+}

@@ -935,6 +935,7 @@ fn cmd_compare(argv: Vec<String>) -> Result<()> {
     );
 
     let mut rows = Vec::new();
+    let mut plan_cache: Vec<(&str, abc_ipu::abc::MethodStats)> = Vec::new();
     let row = |name: &str,
                outcome: &abc_ipu::abc::MethodOutcome,
                stats: &abc_ipu::abc::MethodStats| {
@@ -964,6 +965,7 @@ fn cmd_compare(argv: Vec<String>) -> Result<()> {
             .outcomes()?
             .pop()
             .ok_or_else(|| Error::Coordinator("rejection returned no outcome".into()))?;
+        plan_cache.push(("rejection", stats));
         rows.push(row("rejection", &outcome, &stats));
     }
     {
@@ -990,6 +992,7 @@ fn cmd_compare(argv: Vec<String>) -> Result<()> {
             posterior: last.posterior.clone(),
             tolerance: last.tolerance,
         };
+        plan_cache.push(("smc", stats));
         rows.push(row("smc", &outcome, &stats));
     }
     {
@@ -1004,11 +1007,20 @@ fn cmd_compare(argv: Vec<String>) -> Result<()> {
             .outcomes()?
             .pop()
             .ok_or_else(|| Error::Coordinator("mcmc returned no outcome".into()))?;
+        plan_cache.push(("mcmc", stats));
         rows.push(row("mcmc", &outcome, &stats));
     }
 
     let table = method_comparison("Method comparison (shared pool, shared scenario)", &rows);
     print!("{}", table.render());
+    // plan-cache economics of the compile-once/run-many seam: misses
+    // are job compilations, hits are warm plan/arena reuses
+    for (name, s) in &plan_cache {
+        println!(
+            "  {name}: plan cache {} hits / {} misses / {} evictions",
+            s.plan_hits, s.plan_misses, s.plan_evictions
+        );
+    }
     write_csv(reports_dir(&a), "method_comparison", &table.to_csv())?;
 
     let doc = methods_json(quick, days, samples, &rows).to_string();
@@ -1053,7 +1065,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let workers: usize = a.parse_or("workers", 2)?;
     let cache_cap: usize = a.parse_or("cache-cap", DEFAULT_CACHE_CAP)?;
     let engine = backend_from_flag(&a)?;
-    let service = InferenceService::start_with_cache_cap(engine, workers, cache_cap);
+    let service = InferenceService::start_with_cache_cap(engine, workers, cache_cap)?;
     let server = HttpServer::bind(port, service)?;
     println!(
         "serving inference on http://{} (`{}` backend, {} workers)",

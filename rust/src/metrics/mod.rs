@@ -66,6 +66,15 @@ pub struct RunMetrics {
     /// previous invocation — their samples are in the result, but their
     /// wall-clock is not in this invocation's `total`.
     pub resumed_runs: u64,
+    /// Work items that reused a worker-cached compiled
+    /// [`ExecutionPlan`](crate::backend::ExecutionPlan) (warm plan +
+    /// scratch arena, DESIGN.md §15).
+    pub plan_hits: u64,
+    /// Plan compilations — a worker's first claimed item of a job (or a
+    /// recompilation after a panic dropped the cached engine).
+    pub plan_misses: u64,
+    /// Cached plans evicted because their job's outcome was decided.
+    pub plan_evictions: u64,
 }
 
 impl RunMetrics {
@@ -126,6 +135,9 @@ impl RunMetrics {
         m.insert("transfers".into(), Json::Num(self.transfers as f64));
         m.insert("transfers_skipped".into(), Json::Num(self.transfers_skipped as f64));
         m.insert("resumed_runs".into(), Json::Num(self.resumed_runs as f64));
+        m.insert("plan_hits".into(), Json::Num(self.plan_hits as f64));
+        m.insert("plan_misses".into(), Json::Num(self.plan_misses as f64));
+        m.insert("plan_evictions".into(), Json::Num(self.plan_evictions as f64));
         m.insert("acceptance_rate".into(), Json::Num(self.acceptance_rate()));
         Json::Obj(m)
     }
@@ -145,6 +157,9 @@ impl RunMetrics {
         self.transfers += other.transfers;
         self.transfers_skipped += other.transfers_skipped;
         self.resumed_runs = self.resumed_runs.max(other.resumed_runs);
+        self.plan_hits += other.plan_hits;
+        self.plan_misses += other.plan_misses;
+        self.plan_evictions += other.plan_evictions;
     }
 }
 
@@ -200,6 +215,30 @@ mod tests {
         assert_eq!(a.total, Duration::from_secs(3));
         assert_eq!(a.device_exec, Duration::from_secs(3));
         assert_eq!(a.bytes_to_host, 128);
+    }
+
+    #[test]
+    fn plan_cache_counters_add_on_merge_and_reach_the_wire() {
+        let mut a = RunMetrics {
+            plan_hits: 3,
+            plan_misses: 1,
+            plan_evictions: 1,
+            ..Default::default()
+        };
+        a.merge(&RunMetrics {
+            plan_hits: 2,
+            plan_misses: 2,
+            ..Default::default()
+        });
+        assert_eq!(
+            (a.plan_hits, a.plan_misses, a.plan_evictions),
+            (5, 3, 1),
+            "plan counters are additive across workers"
+        );
+        let v = a.to_json();
+        assert_eq!(v.req("plan_hits").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(v.req("plan_misses").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(v.req("plan_evictions").unwrap().as_u64().unwrap(), 1);
     }
 
     #[test]

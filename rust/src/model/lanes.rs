@@ -37,9 +37,10 @@
 //! parallelism deterministic by construction). See DESIGN.md §8.
 
 use super::compartment::{CompartmentModel, ModelKind};
+use super::scratch::RunScratch;
 use super::simd::{resolve_simd, F32xL, SimdMode, VLEN};
 use super::{InitialCondition, Prior, Simulator, Theta, N_PARAMS};
-use crate::rng::{box_muller, lane_rng, Xoshiro256};
+use crate::rng::{lane_rng, Xoshiro256};
 use crate::{Error, Result};
 
 /// Default lane width when the job/config leaves it at 0 ("auto").
@@ -191,6 +192,22 @@ impl LaneEngine {
         &self.ic
     }
 
+    /// A [`RunScratch`] arena pre-grown for this engine's model shapes
+    /// and lane width, so even the first
+    /// [`sample_distance_range_into`](Self::sample_distance_range_into)
+    /// call performs no group-local allocations. Allocate once per
+    /// worker (the compile-once half of the plan/arena seam, DESIGN.md
+    /// §15) and reuse it for every run.
+    pub fn scratch(&self) -> RunScratch {
+        let m = self.model;
+        RunScratch::with_shape(
+            m.n_compartments(),
+            m.n_noise(),
+            m.n_observed(),
+            self.width,
+        )
+    }
+
     /// One batched ABC run: sample `batch` θ from `prior` (one private
     /// stream per lane), simulate `days`, and return
     /// `(thetas [batch, 8] row-major, distances [batch])` — bit-identical
@@ -222,6 +239,50 @@ impl LaneEngine {
         len: usize,
         key: [u32; 2],
     ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut thetas = vec![0.0f32; len * N_PARAMS];
+        let mut distances = vec![0.0f32; len];
+        let mut scratch = RunScratch::new();
+        self.sample_distance_range_into(
+            &mut scratch,
+            prior,
+            observed,
+            days,
+            lane0,
+            len,
+            key,
+            &mut thetas,
+            &mut distances,
+        )?;
+        Ok((thetas, distances))
+    }
+
+    /// [`sample_distance_range`](Self::sample_distance_range) against a
+    /// caller-owned arena and output slices — the run-many half of the
+    /// plan/arena seam (DESIGN.md §15). `theta_out` must hold
+    /// `len * 8` elements and `dist_out` `len`.
+    ///
+    /// The first call grows `scratch` to this engine's group shape (or
+    /// costs nothing, if it came pre-grown from
+    /// [`scratch`](Self::scratch)); every subsequent call reuses it, and
+    /// the whole run — setup, day loop, output — performs zero heap
+    /// allocations. The zero-alloc contract is scoped to the default
+    /// single-thread engine configuration (the production worker path):
+    /// with intra-run threading enabled each scoped thread builds its
+    /// own transient arena, trading allocations back for parallelism.
+    /// Bit-identical to the allocating wrapper in every configuration.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_distance_range_into(
+        &self,
+        scratch: &mut RunScratch,
+        prior: &Prior,
+        observed: &[f32],
+        days: usize,
+        lane0: usize,
+        len: usize,
+        key: [u32; 2],
+        theta_out: &mut [f32],
+        dist_out: &mut [f32],
+    ) -> Result<()> {
         if days == 0 || len == 0 {
             return Err(Error::Config(format!(
                 "lane engine needs len >= 1 and days >= 1 (got {len}x{days})"
@@ -238,20 +299,26 @@ impl LaneEngine {
                 got: format!("{} elements", observed.len()),
             });
         }
+        if theta_out.len() != len * N_PARAMS || dist_out.len() != len {
+            return Err(Error::ShapeMismatch {
+                what: "lane engine output slices".to_string(),
+                want: format!("theta_out of {} and dist_out of {len}", len * N_PARAMS),
+                got: format!("{} / {}", theta_out.len(), dist_out.len()),
+            });
+        }
 
         let width = self.width.min(len);
         let groups = len.div_ceil(width);
-        let mut thetas = vec![0.0f32; len * N_PARAMS];
-        let mut distances = vec![0.0f32; len];
 
         let threads = self.parallelism.min(groups);
         if threads <= 1 {
-            for (g, (theta_out, dist_out)) in thetas
+            for (g, (theta_out, dist_out)) in theta_out
                 .chunks_mut(width * N_PARAMS)
-                .zip(distances.chunks_mut(width))
+                .zip(dist_out.chunks_mut(width))
                 .enumerate()
             {
                 self.run_group(
+                    scratch,
                     prior,
                     observed,
                     days,
@@ -267,9 +334,12 @@ impl LaneEngine {
             // output slice, so any partition of the groups over threads
             // produces identical bits. Contiguous shares keep the
             // per-thread observed/state working sets cache-friendly.
-            let mut work: Vec<(usize, &mut [f32], &mut [f32])> = thetas
+            // Each scoped thread owns a transient arena — the
+            // caller's scratch cannot be shared across threads, so the
+            // zero-alloc contract is scoped to the 1-thread path.
+            let mut work: Vec<(usize, &mut [f32], &mut [f32])> = theta_out
                 .chunks_mut(width * N_PARAMS)
-                .zip(distances.chunks_mut(width))
+                .zip(dist_out.chunks_mut(width))
                 .enumerate()
                 .map(|(g, (theta_out, dist_out))| (lane0 + g * width, theta_out, dist_out))
                 .collect();
@@ -280,16 +350,18 @@ impl LaneEngine {
                     let part: Vec<(usize, &mut [f32], &mut [f32])> =
                         work.drain(..take).collect();
                     scope.spawn(move || {
+                        let mut local = RunScratch::new();
                         for (lane0, theta_out, dist_out) in part {
                             self.run_group(
-                                prior, observed, days, key, lane0, theta_out, dist_out,
+                                &mut local, prior, observed, days, key, lane0, theta_out,
+                                dist_out,
                             );
                         }
                     });
                 }
             });
         }
-        Ok((thetas, distances))
+        Ok(())
     }
 
     /// Simulate one group of `dist_out.len()` lanes starting at global
@@ -297,8 +369,10 @@ impl LaneEngine {
     /// output slices. Dispatches to the vectorized or scalar kernel —
     /// bit-identical by the §11/§14 rules, pinned by
     /// `tests/prop_lanes.rs` and `tests/golden_streams.rs`.
+    #[allow(clippy::too_many_arguments)]
     fn run_group(
         &self,
+        scratch: &mut RunScratch,
         prior: &Prior,
         observed: &[f32],
         days: usize,
@@ -308,9 +382,9 @@ impl LaneEngine {
         dist_out: &mut [f32],
     ) {
         if self.simd {
-            self.run_group_simd(prior, observed, days, key, lane0, theta_out, dist_out)
+            self.run_group_simd(scratch, prior, observed, days, key, lane0, theta_out, dist_out)
         } else {
-            self.run_group_scalar(prior, observed, days, key, lane0, theta_out, dist_out)
+            self.run_group_scalar(scratch, prior, observed, days, key, lane0, theta_out, dist_out)
         }
     }
 
@@ -318,8 +392,10 @@ impl LaneEngine {
     /// [`CompartmentModel::step`] / [`CompartmentModel::sq_distance_day`]
     /// (for epi, the oracle's free functions). Kept as the
     /// always-available reference path (`$ABC_IPU_SIMD=off`).
+    #[allow(clippy::too_many_arguments)]
     fn run_group_scalar(
         &self,
+        scratch: &mut RunScratch,
         prior: &Prior,
         observed: &[f32],
         days: usize,
@@ -333,29 +409,24 @@ impl LaneEngine {
         let w = dist_out.len();
         debug_assert_eq!(theta_out.len(), w * N_PARAMS);
 
-        // Group-local buffers are allocated per group rather than reused
-        // from per-thread scratch: at realistic geometries the few small
-        // allocations are <1% of a group's simulation cost (W·days
-        // tau-leap days, each with nz/2 Box–Muller pairs per lane), and
-        // locality keeps the threaded path trivially correct.
-        let mut rngs: Vec<Xoshiro256> =
-            (0..w).map(|l| lane_rng(key, (lane0 + l) as u64)).collect();
+        // Group-local buffers come from the reusable arena: ensure()
+        // re-shapes within retained capacity, so the steady state of a
+        // warm scratch touches the allocator zero times (DESIGN.md §15).
+        scratch.ensure(nc, nz, m.n_observed(), w);
+        let RunScratch {
+            rngs, thetas, state, init_buf, lane_buf, next_buf, z_buf, acc, noise, ..
+        } = scratch;
+        rngs.extend((0..w).map(|l| lane_rng(key, (lane0 + l) as u64)));
         // Per-lane draw order mirrors the scalar oracle exactly: 8 prior
         // uniforms first, then n_noise normals per simulated day.
-        let thetas: Vec<Theta> = rngs.iter_mut().map(|r| prior.sample(r)).collect();
+        thetas.extend(rngs.iter_mut().map(|r| prior.sample(r)));
 
-        let mut state = LaneState::init(m, &self.ic, &thetas, w);
-        let mut lane_buf = vec![0.0f32; nc];
-        let mut next_buf = vec![0.0f32; nc];
-        let mut z_buf = vec![0.0f32; nz];
-        let mut acc: Vec<f32> = (0..w)
-            .map(|l| {
-                state.lane_into(l, &mut lane_buf);
-                m.sq_distance_day(&lane_buf, observed, 0, days)
-            })
-            .collect();
+        state.reinit(m, &self.ic, thetas, init_buf);
+        for l in 0..w {
+            state.lane_into(l, lane_buf);
+            acc[l] = m.sq_distance_day(lane_buf, observed, 0, days);
+        }
         // Noise slab in the kernel's native [nz, W] layout (channel-major).
-        let mut noise = vec![0.0f32; nz * w];
         for t in 1..days {
             for (l, rng) in rngs.iter_mut().enumerate() {
                 for k in 0..nz {
@@ -366,13 +437,13 @@ impl LaneEngine {
             // gather and one scatter per lane-day, accumulating the
             // residual from the freshly-stepped state before scatter.
             for l in 0..w {
-                state.lane_into(l, &mut lane_buf);
+                state.lane_into(l, lane_buf);
                 for (k, z) in z_buf.iter_mut().enumerate() {
                     *z = noise[k * w + l];
                 }
-                m.step(&lane_buf, &thetas[l], &z_buf, self.ic.population, &mut next_buf);
-                acc[l] += m.sq_distance_day(&next_buf, observed, t, days);
-                state.set_lane(l, &next_buf);
+                m.step(lane_buf, &thetas[l], z_buf, self.ic.population, next_buf);
+                acc[l] += m.sq_distance_day(next_buf, observed, t, days);
+                state.set_lane(l, next_buf);
             }
         }
         for (l, a) in acc.iter().enumerate() {
@@ -388,8 +459,10 @@ impl LaneEngine {
     /// written back). Noise comes from [`NoiseSlab`], the row-at-a-time
     /// Box–Muller fill that preserves each lane's exact scalar draw
     /// order for any channel count.
+    #[allow(clippy::too_many_arguments)]
     fn run_group_simd(
         &self,
+        scratch: &mut RunScratch,
         prior: &Prior,
         observed: &[f32],
         days: usize,
@@ -403,37 +476,37 @@ impl LaneEngine {
         let w = dist_out.len();
         debug_assert_eq!(theta_out.len(), w * N_PARAMS);
 
-        let mut rngs: Vec<Xoshiro256> =
-            (0..w).map(|l| lane_rng(key, (lane0 + l) as u64)).collect();
-        let thetas: Vec<Theta> = rngs.iter_mut().map(|r| prior.sample(r)).collect();
+        // Reusable arena, zero allocations once warm — and crucially
+        // ensure() resets the NoiseSlab spare parity, so a banked
+        // Box–Muller secondary can never leak across groups or runs.
+        scratch.ensure(nc, nz, m.n_observed(), w);
+        let RunScratch {
+            rngs, thetas, theta_slabs, state, init_buf, acc, noise, s_vec, next_vec,
+            z_vec, slab, ..
+        } = scratch;
+        rngs.extend((0..w).map(|l| lane_rng(key, (lane0 + l) as u64)));
+        thetas.extend(rngs.iter_mut().map(|r| prior.sample(r)));
         // θ transposed into [8, W] slabs so vector chunks load straight.
-        let mut theta_slabs: [Vec<f32>; N_PARAMS] = std::array::from_fn(|_| vec![0.0f32; w]);
         for (l, theta) in thetas.iter().enumerate() {
             for (p, v) in theta.iter().enumerate() {
                 theta_slabs[p][l] = *v;
             }
         }
 
-        let mut state = LaneState::init(m, &self.ic, &thetas, w);
-        let mut acc = vec![0.0f32; w];
-        let mut s_vec = vec![F32xL::splat(0.0); nc];
-        let mut next_vec = vec![F32xL::splat(0.0); nc];
-        let mut z_vec = vec![F32xL::splat(0.0); nz];
+        state.reinit(m, &self.ic, thetas, init_buf);
         // Day-0 residual straight off the init slabs.
         for c in (0..w).step_by(VLEN) {
             let end = (c + VLEN).min(w);
             for (comp, v) in s_vec.iter_mut().enumerate() {
                 *v = F32xL::load_partial(&state.slabs[comp][c..end], 0.0);
             }
-            let res = m.sq_distance_day_lanes(&s_vec, observed, 0, days);
+            let res = m.sq_distance_day_lanes(s_vec, observed, 0, days);
             res.store_partial(&mut acc[c..end]);
         }
 
         let population = F32xL::splat(self.ic.population);
-        let mut noise = vec![0.0f32; nz * w];
-        let mut slab = NoiseSlab::new(w);
         for t in 1..days {
-            slab.fill_day(&mut rngs, &mut noise, nz);
+            slab.fill_day(rngs, noise, nz);
             for c in (0..w).step_by(VLEN) {
                 let end = (c + VLEN).min(w);
                 // Pad lanes load a fill of 0.0 — they compute harmless
@@ -447,8 +520,8 @@ impl LaneEngine {
                 for (k, z) in z_vec.iter_mut().enumerate() {
                     *z = F32xL::load_partial(&noise[k * w + c..k * w + end], 0.0);
                 }
-                m.step_lanes(&s_vec, &th, &z_vec, population, &mut next_vec);
-                let res = m.sq_distance_day_lanes(&next_vec, observed, t, days);
+                m.step_lanes(s_vec, &th, z_vec, population, next_vec);
+                let res = m.sq_distance_day_lanes(next_vec, observed, t, days);
                 let sum = F32xL::load_partial(&acc[c..end], 0.0) + res;
                 sum.store_partial(&mut acc[c..end]);
                 for (comp, row) in next_vec.iter().enumerate() {
@@ -463,128 +536,6 @@ impl LaneEngine {
         }
         for (l, theta) in thetas.iter().enumerate() {
             theta_out[l * N_PARAMS..(l + 1) * N_PARAMS].copy_from_slice(theta);
-        }
-    }
-}
-
-/// Row-at-a-time Box–Muller fill for the `[nz, W]` noise slab — the
-/// vectorized form of `W` independent [`Xoshiro256::normal_f32`] lanes.
-///
-/// Correctness rests on two facts. First, each lane owns a private RNG,
-/// so interleaving *across* lanes (draw `u1` for every lane, then `u2`
-/// for every lane) cannot change any lane's within-stream draw order —
-/// which stays exactly the scalar `u1, u2, u1, u2, …`. Second, every
-/// lane of a group draws the same count of normals per day (the model's
-/// `n_noise`) and uniforms in between (prior sampling never touches the
-/// spare cache), so the Box–Muller spare parity is **group-wide**:
-/// either every lane has a cached spare or none does, and one
-/// `have_spare` flag replaces `W` per-lane `Option`s. Rows are then
-/// filled pair-wise — spare row first when present, then
-/// `(primary, secondary)` row pairs via [`box_muller`] (the same
-/// arithmetic the scalar path calls), with an odd last row banking its
-/// secondaries as the next day's spares. Even channel counts (SIR's 2,
-/// metapop's 6) therefore never bank; odd counts (epi's 5, SEIR's 3)
-/// bank exactly like the scalar `normal_f32` stream.
-struct NoiseSlab {
-    /// Cached second Box–Muller normal per lane (f64, pre-cast).
-    spare: Vec<f64>,
-    /// Group-wide spare parity (see above).
-    have_spare: bool,
-    /// Scratch rows for the uniform draws of one pair round.
-    u1: Vec<f64>,
-    u2: Vec<f64>,
-}
-
-impl NoiseSlab {
-    fn new(w: usize) -> Self {
-        Self {
-            spare: vec![0.0; w],
-            have_spare: false,
-            u1: vec![0.0; w],
-            u2: vec![0.0; w],
-        }
-    }
-
-    /// Fill one day's `[n_rows, W]` slab (`out[k * w + l]` = channel `k`
-    /// of lane `l`), drawing from each lane's RNG in exactly the order
-    /// the scalar `normal_f32` loop would.
-    fn fill_day(&mut self, rngs: &mut [Xoshiro256], out: &mut [f32], n_rows: usize) {
-        let w = rngs.len();
-        debug_assert_eq!(out.len(), n_rows * w);
-        let mut k = 0;
-        if self.have_spare {
-            for (l, &s) in self.spare.iter().enumerate() {
-                out[l] = s as f32;
-            }
-            self.have_spare = false;
-            k = 1;
-        }
-        while k < n_rows {
-            for (l, rng) in rngs.iter_mut().enumerate() {
-                self.u1[l] = 1.0 - rng.uniform();
-                self.u2[l] = rng.uniform();
-            }
-            if k + 1 < n_rows {
-                // full pair: primary row k, secondary row k+1
-                for l in 0..w {
-                    let (primary, secondary) = box_muller(self.u1[l], self.u2[l]);
-                    out[k * w + l] = primary as f32;
-                    out[(k + 1) * w + l] = secondary as f32;
-                }
-            } else {
-                // odd last row: bank the secondaries for the next day
-                for l in 0..w {
-                    let (primary, secondary) = box_muller(self.u1[l], self.u2[l]);
-                    out[k * w + l] = primary as f32;
-                    self.spare[l] = secondary;
-                }
-                self.have_spare = true;
-            }
-            k += 2;
-        }
-    }
-}
-
-/// Structure-of-arrays state: `slabs[c][l]` is compartment `c` of lane
-/// `l` — the `[nc, W]` layout of the accelerator kernels.
-struct LaneState {
-    slabs: Vec<Vec<f32>>,
-}
-
-impl LaneState {
-    /// Day-0 state for every lane, via the model's
-    /// [`CompartmentModel::init_state`].
-    fn init(
-        model: &dyn CompartmentModel,
-        ic: &InitialCondition,
-        thetas: &[Theta],
-        w: usize,
-    ) -> Self {
-        let nc = model.n_compartments();
-        let mut slabs: Vec<Vec<f32>> = (0..nc).map(|_| vec![0.0f32; w]).collect();
-        let mut buf = vec![0.0f32; nc];
-        for (l, theta) in thetas.iter().enumerate() {
-            model.init_state(ic, theta, &mut buf);
-            for (c, v) in buf.iter().enumerate() {
-                slabs[c][l] = *v;
-            }
-        }
-        Self { slabs }
-    }
-
-    /// Gather lane `l` into a scalar state buffer.
-    #[inline]
-    fn lane_into(&self, l: usize, out: &mut [f32]) {
-        for (c, slab) in self.slabs.iter().enumerate() {
-            out[c] = slab[l];
-        }
-    }
-
-    /// Scatter a scalar state buffer into lane `l`.
-    #[inline]
-    fn set_lane(&mut self, l: usize, s: &[f32]) {
-        for (c, v) in s.iter().enumerate() {
-            self.slabs[c][l] = *v;
         }
     }
 }
@@ -605,20 +556,54 @@ pub fn scalar_reference(
     batch: usize,
     key: [u32; 2],
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    let mut thetas = Vec::with_capacity(batch * N_PARAMS);
-    let mut distances = Vec::with_capacity(batch);
+    let mut thetas = vec![0.0f32; batch * N_PARAMS];
+    let mut distances = vec![0.0f32; batch];
+    let mut scratch = RunScratch::new();
+    scalar_reference_into(
+        sim, prior, observed, days, batch, key, &mut scratch, &mut thetas,
+        &mut distances,
+    )?;
+    Ok((thetas, distances))
+}
+
+/// [`scalar_reference`] against a caller-owned arena and output slices:
+/// the oracle's per-call scratch (the simulator's state/next/noise rows)
+/// comes from the same [`RunScratch`] the lane kernels use, so the
+/// scalar oracle and the vector path share one arena shape and the
+/// oracle loop is allocation-free once the arena is warm. `theta_out`
+/// must hold `batch * 8` elements and `dist_out` `batch`.
+#[allow(clippy::too_many_arguments)]
+pub fn scalar_reference_into(
+    sim: &Simulator,
+    prior: &Prior,
+    observed: &[f32],
+    days: usize,
+    batch: usize,
+    key: [u32; 2],
+    scratch: &mut RunScratch,
+    theta_out: &mut [f32],
+    dist_out: &mut [f32],
+) -> Result<()> {
+    if theta_out.len() != batch * N_PARAMS || dist_out.len() != batch {
+        return Err(Error::ShapeMismatch {
+            what: "scalar reference output slices".to_string(),
+            want: format!("theta_out of {} and dist_out of {batch}", batch * N_PARAMS),
+            got: format!("{} / {}", theta_out.len(), dist_out.len()),
+        });
+    }
     for lane in 0..batch {
         let mut rng = lane_rng(key, lane as u64);
         let theta = prior.sample(&mut rng);
-        distances.push(sim.distance(&theta, observed, days, &mut rng)?);
-        thetas.extend_from_slice(&theta);
+        dist_out[lane] = sim.distance_into(&theta, observed, days, &mut rng, scratch)?;
+        theta_out[lane * N_PARAMS..(lane + 1) * N_PARAMS].copy_from_slice(&theta);
     }
-    Ok((thetas, distances))
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::scratch::NoiseSlab;
     use crate::model::N_OBSERVED;
 
     fn ic() -> InitialCondition {

@@ -28,6 +28,7 @@ mod distance;
 pub mod epi;
 pub mod lanes;
 mod prior;
+pub mod scratch;
 pub mod simd;
 mod simulator;
 pub mod zoo;
@@ -36,6 +37,7 @@ pub use compartment::{CompartmentModel, EpiModel, ModelKind, MODEL_ENV};
 pub use distance::{euclidean_distance, sq_distance_day, sq_distance_day_lanes};
 pub use lanes::LaneEngine;
 pub use prior::Prior;
+pub use scratch::RunScratch;
 pub use simd::SimdMode;
 pub use simulator::{simulate_distance_batch, simulate_traj, Simulator};
 

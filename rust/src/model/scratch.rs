@@ -1,0 +1,346 @@
+//! The reusable per-worker scratch arena for the simulation hot path.
+//!
+//! The paper's compile-once/run-many discipline (§3.1: the graph is
+//! compiled and resident once, then millions of simulations stream
+//! through it) has a host-side analogue: allocate the working set once,
+//! then run every subsequent `(run, shard)` work item against the same
+//! buffers. [`RunScratch`] is that working set — every group-local
+//! buffer the lane kernels ([`super::lanes::LaneEngine`]) and the
+//! scalar oracle ([`super::Simulator`]) need, in one struct:
+//!
+//! * per-lane RNGs and sampled θ (plus the `[8, W]` θ slabs the
+//!   vectorized kernel loads from),
+//! * the `[nc, W]` SoA compartment state ([`LaneState`]) and the
+//!   `[nz, W]` noise slab,
+//! * the scalar gather/scatter rows (`lane`, `next`, `z`, `obs`),
+//! * the vector-register images (`[F32xL; nc]` state rows, `[F32xL;
+//!   nz]` noise rows) and the distance accumulator,
+//! * the Box–Muller fill state ([`NoiseSlab`]).
+//!
+//! **Steady-state contract (zero allocations).** [`RunScratch::ensure`]
+//! sizes every buffer with `Vec::resize`, which only touches the
+//! allocator when the requested length exceeds the retained capacity.
+//! The first run of a job on a worker grows the arena to the job's
+//! `(nc, nz, n_obs, W)` shape; every later run — including narrower
+//! tail groups and runs after a tail group — resizes within capacity,
+//! so the day loop and all per-group setup perform **zero heap
+//! allocations**. The `alloc-count` feature's counting global allocator
+//! measures this (CI's alloc-regression leg and the schema-v3
+//! `allocs_per_run` bench field), rather than asserting it.
+//!
+//! **Reuse is bit-invisible.** Nothing a kernel reads survives from the
+//! previous run: RNGs and θ are rebuilt from `(key, lane)`, state is
+//! re-initialized per lane, the accumulator and every slab row a day
+//! reads are fully overwritten before use, and [`NoiseSlab`]'s spare
+//! parity is reset per group by [`RunScratch::ensure`] — the one piece
+//! of cross-run state that *would* change bits if it leaked
+//! (`have_spare` decides whether a day's first noise row comes from the
+//! banked secondaries or a fresh Box–Muller pair).
+
+use super::compartment::CompartmentModel;
+use super::simd::F32xL;
+use super::{InitialCondition, Theta, N_PARAMS};
+use crate::rng::{box_muller, Xoshiro256};
+
+/// The reusable arena for one worker's simulation hot path — see the
+/// module docs for the steady-state zero-allocation contract.
+///
+/// Obtain one sized for an engine with
+/// [`super::LaneEngine::scratch`], or start empty with
+/// [`RunScratch::new`] (the first run grows it). A scratch is not tied
+/// to the engine that sized it: [`RunScratch::ensure`] re-shapes it for
+/// whatever `(model, width)` the next run needs, at the cost of fresh
+/// allocations when the new shape exceeds the retained capacity.
+#[derive(Debug, Default)]
+pub struct RunScratch {
+    /// Per-lane RNG streams (`lane_rng(key, lane)`), rebuilt per group.
+    pub(crate) rngs: Vec<Xoshiro256>,
+    /// Per-lane sampled θ, rebuilt per group.
+    pub(crate) thetas: Vec<Theta>,
+    /// θ transposed into `[8, W]` slabs (vectorized kernel loads).
+    pub(crate) theta_slabs: Vec<Vec<f32>>,
+    /// `[nc, W]` SoA compartment state.
+    pub(crate) state: LaneState,
+    /// Scalar row for `init_state` scatter (`nc`).
+    pub(crate) init_buf: Vec<f32>,
+    /// Scalar gather row (`nc`).
+    pub(crate) lane_buf: Vec<f32>,
+    /// Scalar stepped-state row (`nc`).
+    pub(crate) next_buf: Vec<f32>,
+    /// Scalar noise row (`nz`).
+    pub(crate) z_buf: Vec<f32>,
+    /// Scalar observation row (`n_obs`) for trajectory recording.
+    pub(crate) obs_buf: Vec<f32>,
+    /// Per-lane squared-distance accumulator (`W`).
+    pub(crate) acc: Vec<f32>,
+    /// `[nz, W]` noise slab (channel-major).
+    pub(crate) noise: Vec<f32>,
+    /// Vector-register images of the state rows (`nc`).
+    pub(crate) s_vec: Vec<F32xL>,
+    /// Vector-register images of the stepped state rows (`nc`).
+    pub(crate) next_vec: Vec<F32xL>,
+    /// Vector-register images of the noise rows (`nz`).
+    pub(crate) z_vec: Vec<F32xL>,
+    /// Box–Muller fill state for the noise slab.
+    pub(crate) slab: NoiseSlab,
+}
+
+impl RunScratch {
+    /// An empty arena: the first run's [`RunScratch::ensure`] grows it
+    /// to the run's shape, every later run reuses the capacity.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An arena pre-grown for `(model shapes, width)` — what
+    /// [`super::LaneEngine::scratch`] and the execution plan use, so
+    /// even the *first* run of a job performs no group-local
+    /// allocations.
+    pub fn with_shape(nc: usize, nz: usize, n_obs: usize, width: usize) -> Self {
+        let mut s = Self::new();
+        s.ensure(nc, nz, n_obs, width.max(1));
+        s
+    }
+
+    /// Re-shape every buffer for a group of `w` lanes of a model with
+    /// `nc` compartments, `nz` noise channels and `n_obs` observed
+    /// rows, and reset the cross-run state (`rngs`/`thetas` cleared,
+    /// Box–Muller spare parity dropped). `Vec::resize` within retained
+    /// capacity never touches the allocator, so in steady state this is
+    /// a handful of pointer-length stores.
+    pub(crate) fn ensure(&mut self, nc: usize, nz: usize, n_obs: usize, w: usize) {
+        self.rngs.clear();
+        self.rngs.reserve(w);
+        self.thetas.clear();
+        self.thetas.reserve(w);
+        resize_rows(&mut self.theta_slabs, N_PARAMS, w);
+        resize_rows(&mut self.state.slabs, nc, w);
+        self.init_buf.resize(nc, 0.0);
+        self.lane_buf.resize(nc, 0.0);
+        self.next_buf.resize(nc, 0.0);
+        self.z_buf.resize(nz, 0.0);
+        self.obs_buf.resize(n_obs, 0.0);
+        self.acc.resize(w, 0.0);
+        self.noise.resize(nz * w, 0.0);
+        self.s_vec.resize(nc, F32xL::splat(0.0));
+        self.next_vec.resize(nc, F32xL::splat(0.0));
+        self.z_vec.resize(nz, F32xL::splat(0.0));
+        self.slab.reset(w);
+    }
+}
+
+/// Shape a `[rows, w]` slab family: drop surplus rows (only when the
+/// model shape shrinks — never in steady state), grow missing ones, and
+/// resize each row to `w` within its retained capacity.
+fn resize_rows(slabs: &mut Vec<Vec<f32>>, rows: usize, w: usize) {
+    slabs.truncate(rows);
+    while slabs.len() < rows {
+        slabs.push(Vec::new());
+    }
+    for row in slabs.iter_mut() {
+        row.resize(w, 0.0);
+    }
+}
+
+/// Row-at-a-time Box–Muller fill for the `[nz, W]` noise slab — the
+/// vectorized form of `W` independent [`Xoshiro256::normal_f32`] lanes.
+///
+/// Correctness rests on two facts. First, each lane owns a private RNG,
+/// so interleaving *across* lanes (draw `u1` for every lane, then `u2`
+/// for every lane) cannot change any lane's within-stream draw order —
+/// which stays exactly the scalar `u1, u2, u1, u2, …`. Second, every
+/// lane of a group draws the same count of normals per day (the model's
+/// `n_noise`) and uniforms in between (prior sampling never touches the
+/// spare cache), so the Box–Muller spare parity is **group-wide**:
+/// either every lane has a cached spare or none does, and one
+/// `have_spare` flag replaces `W` per-lane `Option`s. Rows are then
+/// filled pair-wise — spare row first when present, then
+/// `(primary, secondary)` row pairs via [`box_muller`] (the same
+/// arithmetic the scalar path calls), with an odd last row banking its
+/// secondaries as the next day's spares. Even channel counts (SIR's 2,
+/// metapop's 6) therefore never bank; odd counts (epi's 5, SEIR's 3)
+/// bank exactly like the scalar `normal_f32` stream.
+///
+/// When reused across groups (the arena path), [`NoiseSlab::reset`]
+/// must run first: a stale `have_spare` from the previous group's last
+/// day would replace the new group's first Box–Muller pair with banked
+/// secondaries and silently change every later draw.
+#[derive(Debug, Default)]
+pub(crate) struct NoiseSlab {
+    /// Cached second Box–Muller normal per lane (f64, pre-cast).
+    spare: Vec<f64>,
+    /// Group-wide spare parity (see above).
+    have_spare: bool,
+    /// Scratch rows for the uniform draws of one pair round.
+    u1: Vec<f64>,
+    u2: Vec<f64>,
+}
+
+impl NoiseSlab {
+    #[cfg(test)]
+    pub(crate) fn new(w: usize) -> Self {
+        let mut s = Self::default();
+        s.reset(w);
+        s
+    }
+
+    /// Size the fill state for `w` lanes and drop any banked spares —
+    /// the start-of-group reset that makes arena reuse bit-invisible.
+    pub(crate) fn reset(&mut self, w: usize) {
+        self.spare.resize(w, 0.0);
+        self.have_spare = false;
+        self.u1.resize(w, 0.0);
+        self.u2.resize(w, 0.0);
+    }
+
+    /// Fill one day's `[n_rows, W]` slab (`out[k * w + l]` = channel `k`
+    /// of lane `l`), drawing from each lane's RNG in exactly the order
+    /// the scalar `normal_f32` loop would.
+    pub(crate) fn fill_day(
+        &mut self,
+        rngs: &mut [Xoshiro256],
+        out: &mut [f32],
+        n_rows: usize,
+    ) {
+        let w = rngs.len();
+        debug_assert_eq!(out.len(), n_rows * w);
+        let mut k = 0;
+        if self.have_spare {
+            for (l, &s) in self.spare.iter().enumerate() {
+                out[l] = s as f32;
+            }
+            self.have_spare = false;
+            k = 1;
+        }
+        while k < n_rows {
+            for (l, rng) in rngs.iter_mut().enumerate() {
+                self.u1[l] = 1.0 - rng.uniform();
+                self.u2[l] = rng.uniform();
+            }
+            if k + 1 < n_rows {
+                // full pair: primary row k, secondary row k+1
+                for l in 0..w {
+                    let (primary, secondary) = box_muller(self.u1[l], self.u2[l]);
+                    out[k * w + l] = primary as f32;
+                    out[(k + 1) * w + l] = secondary as f32;
+                }
+            } else {
+                // odd last row: bank the secondaries for the next day
+                for l in 0..w {
+                    let (primary, secondary) = box_muller(self.u1[l], self.u2[l]);
+                    out[k * w + l] = primary as f32;
+                    self.spare[l] = secondary;
+                }
+                self.have_spare = true;
+            }
+            k += 2;
+        }
+    }
+}
+
+/// Structure-of-arrays state: `slabs[c][l]` is compartment `c` of lane
+/// `l` — the `[nc, W]` layout of the accelerator kernels.
+#[derive(Debug, Default)]
+pub(crate) struct LaneState {
+    pub(crate) slabs: Vec<Vec<f32>>,
+}
+
+impl LaneState {
+    /// Day-0 state for every lane, via the model's
+    /// [`CompartmentModel::init_state`] — rows must already be shaped by
+    /// [`RunScratch::ensure`]; `buf` is the `nc`-wide scatter row.
+    pub(crate) fn reinit(
+        &mut self,
+        model: &dyn CompartmentModel,
+        ic: &InitialCondition,
+        thetas: &[Theta],
+        buf: &mut [f32],
+    ) {
+        for (l, theta) in thetas.iter().enumerate() {
+            model.init_state(ic, theta, buf);
+            for (c, v) in buf.iter().enumerate() {
+                self.slabs[c][l] = *v;
+            }
+        }
+    }
+
+    /// Gather lane `l` into a scalar state buffer.
+    #[inline]
+    pub(crate) fn lane_into(&self, l: usize, out: &mut [f32]) {
+        for (c, slab) in self.slabs.iter().enumerate() {
+            out[c] = slab[l];
+        }
+    }
+
+    /// Scatter a scalar state buffer into lane `l`.
+    #[inline]
+    pub(crate) fn set_lane(&mut self, l: usize, s: &[f32]) {
+        for (c, v) in s.iter().enumerate() {
+            self.slabs[c][l] = *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelKind;
+
+    #[test]
+    fn ensure_shapes_every_buffer_and_resets_parity() {
+        let mut s = RunScratch::new();
+        s.ensure(6, 5, 3, 8);
+        assert_eq!(s.theta_slabs.len(), N_PARAMS);
+        assert!(s.theta_slabs.iter().all(|r| r.len() == 8));
+        assert_eq!(s.state.slabs.len(), 6);
+        assert!(s.state.slabs.iter().all(|r| r.len() == 8));
+        assert_eq!(
+            (s.init_buf.len(), s.lane_buf.len(), s.next_buf.len()),
+            (6, 6, 6)
+        );
+        assert_eq!((s.z_buf.len(), s.obs_buf.len()), (5, 3));
+        assert_eq!((s.acc.len(), s.noise.len()), (8, 40));
+        assert_eq!((s.s_vec.len(), s.next_vec.len(), s.z_vec.len()), (6, 6, 5));
+        // shrinking to a tail group and growing back stays consistent
+        s.ensure(6, 5, 3, 3);
+        assert_eq!(s.acc.len(), 3);
+        assert_eq!(s.noise.len(), 15);
+        s.ensure(6, 5, 3, 8);
+        assert_eq!(s.noise.len(), 40);
+        // and a model-shape change re-rows the slab families
+        s.ensure(4, 3, 2, 8);
+        assert_eq!(s.state.slabs.len(), 4);
+        assert_eq!((s.z_buf.len(), s.obs_buf.len()), (3, 2));
+    }
+
+    #[test]
+    fn ensure_resets_the_spare_parity() {
+        // a stale banked spare across groups would shift every
+        // Box–Muller draw of the next group — ensure() must drop it
+        let mut s = RunScratch::new();
+        s.ensure(6, 5, 3, 2);
+        let mut rngs: Vec<Xoshiro256> =
+            (0..2).map(|l| crate::rng::lane_rng([1, 2], l)).collect();
+        let mut out = vec![0.0f32; 5 * 2];
+        s.slab.fill_day(&mut rngs, &mut out, 5); // odd rows: banks a spare
+        assert!(s.slab.have_spare);
+        s.ensure(6, 5, 3, 2);
+        assert!(!s.slab.have_spare);
+    }
+
+    #[test]
+    fn with_shape_matches_ensure_for_every_zoo_model() {
+        for kind in ModelKind::all() {
+            let m = kind.instance();
+            let s = RunScratch::with_shape(
+                m.n_compartments(),
+                m.n_noise(),
+                m.n_observed(),
+                8,
+            );
+            assert_eq!(s.state.slabs.len(), m.n_compartments(), "{kind:?}");
+            assert_eq!(s.z_vec.len(), m.n_noise(), "{kind:?}");
+            assert_eq!(s.obs_buf.len(), m.n_observed(), "{kind:?}");
+        }
+    }
+}

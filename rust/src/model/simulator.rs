@@ -12,6 +12,7 @@
 //! `cpu_scalar_baseline`.
 
 use super::compartment::{CompartmentModel, ModelKind};
+use super::scratch::RunScratch;
 use super::{InitialCondition, Theta};
 use crate::rng::Xoshiro256;
 use crate::{Error, Result};
@@ -61,25 +62,51 @@ impl Simulator {
         days: usize,
         rng: &mut Xoshiro256,
     ) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.model.n_observed() * days];
+        self.trajectory_into(theta, days, rng, &mut RunScratch::new(), &mut out)?;
+        Ok(out)
+    }
+
+    /// [`trajectory`](Self::trajectory) against a caller-owned
+    /// [`RunScratch`] arena and output slice (`[n_observed, days]`
+    /// row-major) — lets batched rollouts (posterior prediction) reuse
+    /// one arena across every θ row instead of allocating per rollout.
+    /// Bit-identical to [`trajectory`](Self::trajectory).
+    pub fn trajectory_into(
+        &self,
+        theta: &Theta,
+        days: usize,
+        rng: &mut Xoshiro256,
+        scratch: &mut RunScratch,
+        out: &mut [f32],
+    ) -> Result<()> {
         check_days(days)?;
         let m = self.model;
         let (nc, nz, no) = (m.n_compartments(), m.n_noise(), m.n_observed());
-        let mut out = vec![0.0f32; no * days];
-        let mut state = vec![0.0f32; nc];
-        let mut next = vec![0.0f32; nc];
-        let mut z = vec![0.0f32; nz];
-        let mut obs = vec![0.0f32; no];
-        m.init_state(&self.ic, theta, &mut state);
-        self.record(&state, 0, days, &mut obs, &mut out);
+        if out.len() != no * days {
+            return Err(Error::ShapeMismatch {
+                what: format!(
+                    "trajectory output (model `{}`)",
+                    m.kind().as_str()
+                ),
+                want: format!("{} elements ([{no}, {days}])", no * days),
+                got: format!("{} elements", out.len()),
+            });
+        }
+        scratch.ensure(nc, nz, no, 1);
+        let RunScratch { lane_buf, next_buf, z_buf: z, obs_buf: obs, .. } = scratch;
+        let (mut state, mut next): (&mut [f32], &mut [f32]) = (lane_buf, next_buf);
+        m.init_state(&self.ic, theta, state);
+        self.record(state, 0, days, obs, out);
         for t in 1..days {
             for zz in z.iter_mut() {
                 *zz = rng.normal_f32();
             }
-            m.step(&state, theta, &z, self.ic.population, &mut next);
+            m.step(state, theta, z, self.ic.population, next);
             std::mem::swap(&mut state, &mut next);
-            self.record(&state, t, days, &mut obs, &mut out);
+            self.record(state, t, days, obs, out);
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Simulate one trajectory and return its Euclidean distance to
@@ -89,22 +116,38 @@ impl Simulator {
     /// `n_observed * days`.
     pub fn distance(&self, theta: &Theta, observed: &[f32], days: usize,
                     rng: &mut Xoshiro256) -> Result<f32> {
+        self.distance_into(theta, observed, days, rng, &mut RunScratch::new())
+    }
+
+    /// [`distance`](Self::distance) against a caller-owned
+    /// [`RunScratch`] arena: the per-call state/next/noise rows come
+    /// from the same arena shape the lane kernels use, so a warm
+    /// scratch makes repeated oracle calls allocation-free
+    /// (DESIGN.md §15). Bit-identical to [`distance`](Self::distance).
+    pub fn distance_into(
+        &self,
+        theta: &Theta,
+        observed: &[f32],
+        days: usize,
+        rng: &mut Xoshiro256,
+        scratch: &mut RunScratch,
+    ) -> Result<f32> {
         check_days(days)?;
         check_observed(self.model, observed, days)?;
         let m = self.model;
         let (nc, nz) = (m.n_compartments(), m.n_noise());
-        let mut state = vec![0.0f32; nc];
-        let mut next = vec![0.0f32; nc];
-        let mut z = vec![0.0f32; nz];
-        m.init_state(&self.ic, theta, &mut state);
-        let mut acc = m.sq_distance_day(&state, observed, 0, days);
+        scratch.ensure(nc, nz, m.n_observed(), 1);
+        let RunScratch { lane_buf, next_buf, z_buf: z, .. } = scratch;
+        let (mut state, mut next): (&mut [f32], &mut [f32]) = (lane_buf, next_buf);
+        m.init_state(&self.ic, theta, state);
+        let mut acc = m.sq_distance_day(state, observed, 0, days);
         for t in 1..days {
             for zz in z.iter_mut() {
                 *zz = rng.normal_f32();
             }
-            m.step(&state, theta, &z, self.ic.population, &mut next);
+            m.step(state, theta, z, self.ic.population, next);
             std::mem::swap(&mut state, &mut next);
-            acc += m.sq_distance_day(&state, observed, t, days);
+            acc += m.sq_distance_day(state, observed, t, days);
         }
         Ok(acc.sqrt())
     }
@@ -184,9 +227,10 @@ pub fn simulate_distance_batch(
 ) -> Result<(Vec<Theta>, Vec<f32>)> {
     let mut thetas = Vec::with_capacity(batch);
     let mut dists = Vec::with_capacity(batch);
+    let mut scratch = RunScratch::new();
     for _ in 0..batch {
         let theta = prior.sample(rng);
-        dists.push(sim.distance(&theta, observed, days, rng)?);
+        dists.push(sim.distance_into(&theta, observed, days, rng, &mut scratch)?);
         thetas.push(theta);
     }
     Ok((thetas, dists))

@@ -14,6 +14,13 @@
 //! actually produced the numbers), a boolean `simd` flag on every lane
 //! row, and a `simd_ratio` array comparing the vectorized and scalar
 //! kernels at widths 1/8/16 on a single thread.
+//!
+//! Schema v3 (the plan/arena seam, DESIGN.md §15) adds the required
+//! `allocs_per_run` field: heap-allocation events per warm
+//! steady-state run, measured under the counting global allocator
+//! (`--features alloc-count`). The committed artifact records `0`;
+//! [`HotPathSummary::require_zero_alloc`] is the CI gate that keeps it
+//! there.
 
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -22,7 +29,7 @@ use crate::{Error, Result};
 /// artifact shape changes; the validator rejects anything else as
 /// stale, which is what forces the committed artifact to be
 /// regenerated alongside shape changes.
-pub const HOT_PATH_SCHEMA: u64 = 2;
+pub const HOT_PATH_SCHEMA: u64 = 3;
 
 /// Lane widths the `simd_ratio` axis must cover, in order.
 pub const RATIO_WIDTHS: [usize; 3] = [1, 8, 16];
@@ -57,6 +64,10 @@ pub struct HotPathSummary {
     pub widest_speedup: f64,
     /// The vectorized-vs-scalar rows, one per [`RATIO_WIDTHS`] entry.
     pub simd_ratios: Vec<SimdRatio>,
+    /// Heap-allocation events per warm steady-state run (schema v3),
+    /// measured under the counting allocator. The plan/arena contract
+    /// (DESIGN.md §15) pins this at `0`.
+    pub allocs_per_run: u64,
 }
 
 impl HotPathSummary {
@@ -78,6 +89,21 @@ impl HotPathSummary {
             return Err(bad(format!(
                 "vectorized kernel slower than scalar at width {width}: \
                  ratio {ratio:.3} < 1.0"
+            )));
+        }
+        Ok(())
+    }
+
+    /// CI gate: the warm steady-state run loop must not allocate.
+    /// Unlike the wall-clock ratios this is not noisy — any value
+    /// above zero means the plan/arena contract (DESIGN.md §15)
+    /// regressed, on fast and slow runners alike.
+    pub fn require_zero_alloc(&self) -> Result<()> {
+        if self.allocs_per_run > 0 {
+            return Err(bad(format!(
+                "steady-state run loop allocates: allocs_per_run = {} \
+                 (the plan/arena contract requires 0)",
+                self.allocs_per_run
             )));
         }
         Ok(())
@@ -122,14 +148,17 @@ fn lane_row(row: &Json, axis: &str, i: usize) -> Result<(usize, f64)> {
     Ok((width, speedup))
 }
 
-/// Validate a `BENCH_hot_path.json` document against schema v2.
+/// Validate a `BENCH_hot_path.json` document against schema v3.
 ///
 /// Rejects (with a message naming the offending field): malformed
 /// JSON, a missing or stale `schema` version, a missing/empty `harness`
 /// provenance string, missing or non-positive throughput numbers,
 /// lane rows without the `simd` kernel flag, a `simd_ratio` axis that
-/// does not cover exactly [`RATIO_WIDTHS`] in order, and ratio rows
-/// whose `ratio` disagrees with `on/off` by more than 1%.
+/// does not cover exactly [`RATIO_WIDTHS`] in order, ratio rows
+/// whose `ratio` disagrees with `on/off` by more than 1%, and a
+/// missing or non-integer `allocs_per_run` (zero itself is gated
+/// separately by [`HotPathSummary::require_zero_alloc`], so a
+/// regressed-but-honest artifact still *parses* and names its value).
 pub fn validate_hot_path(text: &str) -> Result<HotPathSummary> {
     let doc = Json::parse(text).map_err(|e| bad(e))?;
 
@@ -163,6 +192,15 @@ pub fn validate_hot_path(text: &str) -> Result<HotPathSummary> {
             return Err(bad(format!("{field} must be >= 1")));
         }
     }
+    let allocs_per_run = match doc.get("allocs_per_run") {
+        None => {
+            return Err(bad(format!(
+                "missing `allocs_per_run` (pre-v{HOT_PATH_SCHEMA} artifact) — \
+                 regenerate with `make bench-hot`"
+            )))
+        }
+        Some(v) => v.as_u64().map_err(|e| bad(format!("allocs_per_run: {e}")))?,
+    };
     finite_pos(
         doc.req("scalar_baseline")
             .and_then(|b| b.req("samples_per_sec"))
@@ -240,6 +278,7 @@ pub fn validate_hot_path(text: &str) -> Result<HotPathSummary> {
         widest_width,
         widest_speedup,
         simd_ratios,
+        allocs_per_run,
     })
 }
 
@@ -247,7 +286,7 @@ pub fn validate_hot_path(text: &str) -> Result<HotPathSummary> {
 mod tests {
     use super::*;
 
-    /// A minimal valid v2 document.
+    /// A minimal valid v3 document.
     fn valid_doc() -> String {
         let row = |w: usize, t: usize, simd: bool, sps: f64, sp: f64| {
             format!(
@@ -266,6 +305,7 @@ mod tests {
             "{{\"suite\": \"hot_path\", \"schema\": {HOT_PATH_SCHEMA}, \
              \"harness\": \"cargo bench --bench hot_path\", \
              \"days\": 49, \"batch\": 10000, \"quick\": false, \
+             \"allocs_per_run\": 0, \
              \"scalar_baseline\": {{\"name\": \"scalar_oracle_1thread\", \
              \"batch\": 2000, \"samples_per_sec\": 50000.0}}, \
              \"lanes\": [{}, {}],\n \"lanes_single_thread\": [{}, {}], \
@@ -291,7 +331,31 @@ mod tests {
         assert_eq!(s.widest_speedup, 6.0);
         assert_eq!(s.simd_ratios.len(), 3);
         assert!(s.ratio_at(16).unwrap() > 1.0);
+        assert_eq!(s.allocs_per_run, 0);
         s.require_simd_speedup().unwrap();
+        s.require_zero_alloc().unwrap();
+    }
+
+    #[test]
+    fn missing_allocs_per_run_is_a_stale_artifact() {
+        let doc = valid_doc().replace("\"allocs_per_run\": 0, ", "");
+        let err = validate_hot_path(&doc).unwrap_err().to_string();
+        assert!(err.contains("allocs_per_run"), "{err}");
+        assert!(err.contains("bench-hot"), "{err}");
+    }
+
+    #[test]
+    fn zero_alloc_gate_fires_on_an_allocating_steady_state() {
+        // an honest-but-regressed artifact parses, names its value, and
+        // fails the dedicated gate
+        let doc = valid_doc().replace("\"allocs_per_run\": 0", "\"allocs_per_run\": 3");
+        let s = validate_hot_path(&doc).unwrap();
+        assert_eq!(s.allocs_per_run, 3);
+        let err = s.require_zero_alloc().unwrap_err().to_string();
+        assert!(err.contains("allocs_per_run = 3"), "{err}");
+        // a fractional count is not a count
+        let doc = valid_doc().replace("\"allocs_per_run\": 0", "\"allocs_per_run\": 0.5");
+        assert!(validate_hot_path(&doc).is_err());
     }
 
     #[test]

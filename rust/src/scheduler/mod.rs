@@ -69,6 +69,8 @@ mod pool;
 pub mod service;
 pub mod shard;
 
+pub use pool::{resolve_dispatch_batch, DISPATCH_BATCH_ENV};
+
 use crate::backend::{AbcJob, Backend, NativeBackend};
 use crate::checkpoint::{
     self, AssemblySnapshot, CheckpointConfig, JobSnapshot, ScheduleSnapshot,
@@ -448,6 +450,10 @@ impl Scheduler {
         }
 
         let (tx, rx) = mpsc::channel::<PoolMessage>();
+        let dispatch_batch = pool::resolve_dispatch_batch()?;
+        // live counters are for the long-running service; the batch path
+        // reads the same counts from the joined worker metrics
+        let plan_stats = Arc::new(pool::PlanCacheStats::default());
         let mut handles = Vec::with_capacity(self.workers);
         for device in 0..self.workers as u32 {
             let spec = PoolWorkerSpec {
@@ -455,6 +461,8 @@ impl Scheduler {
                 backend: self.backend.clone(),
                 dispatcher: dispatcher.clone(),
                 tx: tx.clone(),
+                dispatch_batch,
+                plan_stats: plan_stats.clone(),
             };
             handles.push(std::thread::spawn(move || pool_worker_main(spec)));
         }

@@ -24,6 +24,7 @@ use crate::coordinator::DeviceReport;
 use crate::metrics::{RunMetrics, Stopwatch};
 use crate::Error;
 use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 
 /// One unit of work: execute shard `shard` of job `job`'s run `run`.
@@ -166,19 +167,41 @@ impl Dispatcher {
     /// Claim the next work item, round-robin across issuable jobs.
     /// Blocks while no job can issue work; returns `None` on shutdown.
     pub fn next(&self) -> Option<WorkItem> {
+        self.next_batch(1).pop()
+    }
+
+    /// Claim up to `max` consecutive work items of *one* job under a
+    /// single lock acquisition — the multi-run dispatch batch
+    /// (`$ABC_IPU_DISPATCH_BATCH`). A warm worker then executes the
+    /// whole batch against one cached plan/arena without touching the
+    /// dispatcher lock between runs. All items share a job (round-robin
+    /// fairness moves to batch granularity, which is what the knob
+    /// trades); blocks while no job can issue; an empty vec means
+    /// shutdown. `max` is clamped to at least 1.
+    pub fn next_batch(&self, max: usize) -> Vec<WorkItem> {
+        let max = max.max(1);
         let mut st = lock(&self.state);
         loop {
             if st.shutdown {
-                return None;
+                return Vec::new();
             }
             let n = st.slots.len();
             for probe in 0..n {
                 let i = (st.cursor + probe) % n;
                 if st.slots[i].issuable() {
-                    let (run, shard) = st.slots[i].claim();
                     st.cursor = (i + 1) % n;
                     let ctx = st.slots[i].ctx.clone();
-                    return Some(WorkItem { job: i as u32, run, shard, ctx });
+                    let mut batch = Vec::with_capacity(max);
+                    while batch.len() < max && st.slots[i].issuable() {
+                        let (run, shard) = st.slots[i].claim();
+                        batch.push(WorkItem {
+                            job: i as u32,
+                            run,
+                            shard,
+                            ctx: ctx.clone(),
+                        });
+                    }
+                    return batch;
                 }
             }
             st = self
@@ -250,6 +273,36 @@ pub(crate) enum PoolMessage {
     JobError { job: u32, run: u64, error: Error },
 }
 
+/// Environment override for the worker dispatch batch: how many
+/// consecutive work items of one job a worker claims per dispatcher
+/// lock acquisition ([`Dispatcher::next_batch`]). `0`/unset = 1 (claim
+/// one item at a time — the fairness-preserving default). Always safe:
+/// results are bit-identical for every batch size; only lock traffic
+/// and cross-job interleaving change.
+pub const DISPATCH_BATCH_ENV: &str = "ABC_IPU_DISPATCH_BATCH";
+
+/// Resolve the effective dispatch batch from `$ABC_IPU_DISPATCH_BATCH`
+/// (`0`/unset = 1). A malformed value is a typed
+/// [`crate::Error::Config`], like every `$ABC_IPU_*` knob.
+pub fn resolve_dispatch_batch() -> crate::Result<usize> {
+    Ok(crate::util::env::usize_override(DISPATCH_BATCH_ENV)?
+        .filter(|&v| v >= 1)
+        .unwrap_or(1))
+}
+
+/// Live plan-cache counters shared by every worker of one pool. The
+/// long-running [`service`](super::service) reads these for
+/// `/v1/metrics` while workers are still claiming work; the batch
+/// scheduler instead merges each worker's returned [`RunMetrics`] at
+/// join time (the two views agree once the pool drains — workers
+/// count into both).
+#[derive(Debug, Default)]
+pub(crate) struct PlanCacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
 /// Everything a pool worker thread needs; plain data so it can be
 /// moved into the thread.
 pub(crate) struct PoolWorkerSpec {
@@ -257,73 +310,107 @@ pub(crate) struct PoolWorkerSpec {
     pub backend: Arc<dyn Backend>,
     pub dispatcher: Arc<Dispatcher>,
     pub tx: mpsc::Sender<PoolMessage>,
+    /// Work items claimed per dispatcher lock acquisition
+    /// ([`resolve_dispatch_batch`]; 1 = the classic one-at-a-time loop).
+    pub dispatch_batch: usize,
+    /// Pool-wide live plan-cache counters (mirrors the `plan_*` fields
+    /// of the returned metrics).
+    pub plan_stats: Arc<PlanCacheStats>,
 }
 
 /// Pool worker body: claim work items until shutdown, opening one
-/// engine per distinct job on this thread. Failures (including panics
-/// inside a backend) are demoted to per-job errors so one broken job
-/// cannot take down the other scenarios sharing the pool.
+/// engine per distinct job on this thread — the worker-side *plan
+/// cache* (each engine is a compiled `ExecutionPlan` plus its warm
+/// scratch arena on the native path; per-device program residency on
+/// the PJRT path). Cache traffic is accounted in the returned metrics:
+/// a miss per compilation, a hit per item reusing a cached engine, an
+/// eviction per decided-job removal. Failures (including panics inside
+/// a backend) are demoted to per-job errors so one broken job cannot
+/// take down the other scenarios sharing the pool.
 pub(crate) fn pool_worker_main(spec: PoolWorkerSpec) -> RunMetrics {
     let mut metrics = RunMetrics::default();
     let total_sw = Stopwatch::start();
     let mut engines: HashMap<u32, Box<dyn AbcEngine>> = HashMap::new();
 
-    while let Some(item) = spec.dispatcher.next() {
+    'claim: loop {
+        let batch = spec.dispatcher.next_batch(spec.dispatch_batch);
+        if batch.is_empty() {
+            break; // shutdown
+        }
         // Evict engines of jobs whose outcome is decided (keep the one
-        // the claimed item needs, even if its job was just retired).
+        // the claimed batch needs, even if its job was just retired).
+        // Once per batch: a batch is single-job by construction.
         if !engines.is_empty() {
             for id in spec.dispatcher.retired() {
-                if id != item.job {
-                    engines.remove(&id);
+                if id != batch[0].job && engines.remove(&id).is_some() {
+                    metrics.plan_evictions += 1;
+                    spec.plan_stats.evictions.fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || -> crate::Result<DeviceReport> {
-                let engine = match engines.entry(item.job) {
-                    std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-                    std::collections::hash_map::Entry::Vacant(v) => {
-                        v.insert(spec.backend.open_engine(spec.device, &item.ctx.job)?)
-                    }
-                };
-                execute_work(
-                    engine.as_mut(),
-                    &item.ctx,
-                    item.job,
-                    spec.device,
-                    item.run,
-                    item.shard,
-                )
-            },
-        ));
-        let result = match outcome {
-            Ok(r) => r,
-            Err(_) => {
-                // Engine state is unknown after a panic — drop it.
-                engines.remove(&item.job);
-                Err(Error::Coordinator(format!(
-                    "pool worker {} panicked executing run {} (shard {}) of job {}",
-                    spec.device, item.run, item.shard, item.job
-                )))
+        for item in batch {
+            if engines.contains_key(&item.job) {
+                metrics.plan_hits += 1;
+                spec.plan_stats.hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                // counted even if compilation fails below: a miss is a
+                // compilation *attempt*
+                metrics.plan_misses += 1;
+                spec.plan_stats.misses.fetch_add(1, Ordering::Relaxed);
             }
-        };
-        match result {
-            Ok(report) => {
-                metrics.runs += 1;
-                metrics.samples_simulated += report.samples;
-                metrics.device_exec += report.exec_time;
-                metrics.bytes_to_host += report.transfer.wire_bytes();
-                metrics.transfers += report.transfer.transfer_count();
-                metrics.transfers_skipped += report.chunks_skipped;
-                if spec.tx.send(PoolMessage::Report(report)).is_err() {
-                    break; // leader hung up
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || -> crate::Result<DeviceReport> {
+                    let engine = match engines.entry(item.job) {
+                        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                        std::collections::hash_map::Entry::Vacant(v) => {
+                            v.insert(spec.backend.open_engine(spec.device, &item.ctx.job)?)
+                        }
+                    };
+                    execute_work(
+                        engine.as_mut(),
+                        &item.ctx,
+                        item.job,
+                        spec.device,
+                        item.run,
+                        item.shard,
+                    )
+                },
+            ));
+            let result = match outcome {
+                Ok(r) => r,
+                Err(_) => {
+                    // Engine state is unknown after a panic — drop it
+                    // (not a plan eviction: the job is not decided, the
+                    // state is just untrusted).
+                    engines.remove(&item.job);
+                    Err(Error::Coordinator(format!(
+                        "pool worker {} panicked executing run {} (shard {}) of job {}",
+                        spec.device, item.run, item.shard, item.job
+                    )))
                 }
-            }
-            Err(error) => {
-                spec.dispatcher.finish_job(item.job);
-                let msg = PoolMessage::JobError { job: item.job, run: item.run, error };
-                if spec.tx.send(msg).is_err() {
-                    break;
+            };
+            match result {
+                Ok(report) => {
+                    metrics.runs += 1;
+                    metrics.samples_simulated += report.samples;
+                    metrics.device_exec += report.exec_time;
+                    metrics.bytes_to_host += report.transfer.wire_bytes();
+                    metrics.transfers += report.transfer.transfer_count();
+                    metrics.transfers_skipped += report.chunks_skipped;
+                    if spec.tx.send(PoolMessage::Report(report)).is_err() {
+                        break 'claim; // leader hung up
+                    }
+                }
+                Err(error) => {
+                    spec.dispatcher.finish_job(item.job);
+                    let msg =
+                        PoolMessage::JobError { job: item.job, run: item.run, error };
+                    if spec.tx.send(msg).is_err() {
+                        break 'claim;
+                    }
+                    // the rest of this batch belongs to the failed job;
+                    // drop it rather than hammer a broken engine
+                    continue 'claim;
                 }
             }
         }
@@ -457,6 +544,173 @@ mod tests {
         assert_eq!(d.next().map(|w| (w.job, w.run)), Some((1, 0)));
         d.shutdown();
         assert!(d.next().is_none());
+    }
+
+    #[test]
+    fn next_batch_claims_consecutive_items_of_one_job() {
+        let d = Dispatcher::new(vec![fresh(ctx_sharded(1, 2), Some(2)), fresh(ctx(2), Some(1))]);
+        let claimed = |b: Vec<WorkItem>| -> Vec<(u32, u64, u32)> {
+            b.iter().map(|w| (w.job, w.run, w.shard)).collect()
+        };
+        // a batch never crosses jobs and keeps (run, shard) order
+        assert_eq!(claimed(d.next_batch(3)), vec![(0, 0, 0), (0, 0, 1), (0, 1, 0)]);
+        // round-robin fairness now advances at batch granularity
+        assert_eq!(claimed(d.next_batch(3)), vec![(1, 0, 0)]);
+        // max is clamped to at least one item
+        assert_eq!(claimed(d.next_batch(0)), vec![(0, 1, 1)]);
+        d.shutdown();
+        assert!(d.next_batch(4).is_empty());
+    }
+
+    #[test]
+    fn malformed_dispatch_batch_override_is_a_typed_error() {
+        use crate::util::env::parse_usize_override;
+        for bad in ["two", "-3", "1.5", ""] {
+            let err = parse_usize_override(DISPATCH_BATCH_ENV, Some(bad)).unwrap_err();
+            assert!(matches!(err, crate::Error::Config(_)), "{bad}");
+            assert!(err.to_string().contains(DISPATCH_BATCH_ENV), "{bad}");
+        }
+        assert_eq!(parse_usize_override(DISPATCH_BATCH_ENV, Some("4")).unwrap(), Some(4));
+        // whatever the ambient env pins, resolution lands on >= 1
+        assert!(resolve_dispatch_batch().unwrap() >= 1);
+    }
+
+    #[test]
+    fn worker_plan_cache_counts_hits_misses_and_evictions() {
+        use crate::backend::AbcRunOutput;
+        use crate::model::N_PARAMS;
+
+        #[derive(Debug)]
+        struct StubEngine {
+            batch: usize,
+            fail: bool,
+        }
+        impl crate::backend::AbcEngine for StubEngine {
+            fn batch(&self) -> usize {
+                self.batch
+            }
+            fn run(&mut self, _key: [u32; 2]) -> crate::Result<AbcRunOutput> {
+                if self.fail {
+                    return Err(Error::Coordinator("stub engine failure".into()));
+                }
+                Ok(AbcRunOutput {
+                    thetas: vec![0.5; self.batch * N_PARAMS],
+                    distances: vec![0.0; self.batch],
+                })
+            }
+        }
+
+        /// Records every `open_engine` as `(device, job batch)`; the
+        /// 11-lane job's engine opens fine but fails at run time — the
+        /// worker-side finish path that must trigger an eviction on the
+        /// next claim.
+        #[derive(Debug, Default)]
+        struct StubBackend {
+            opens: Mutex<Vec<(u32, usize)>>,
+        }
+        impl Backend for StubBackend {
+            fn name(&self) -> &'static str {
+                "stub"
+            }
+            fn open_engine(
+                &self,
+                device: u32,
+                job: &AbcJob,
+            ) -> crate::Result<Box<dyn AbcEngine>> {
+                self.opens.lock().unwrap().push((device, job.batch));
+                Ok(Box::new(StubEngine { batch: job.batch, fail: job.batch == 11 }))
+            }
+            fn predict(
+                &self,
+                _key: [u32; 2],
+                _thetas: &[f32],
+                _consts: &[f32; 4],
+                _days: usize,
+            ) -> crate::Result<Vec<f32>> {
+                unreachable!("pool workers never predict")
+            }
+            fn onestep(
+                &self,
+                _states: &[f32],
+                _thetas: &[f32],
+                _z: &[f32],
+                _consts: &[f32; 4],
+            ) -> crate::Result<Vec<f32>> {
+                unreachable!("pool workers never onestep")
+            }
+            fn abc_batches(&self, _days: usize) -> Vec<usize> {
+                vec![10]
+            }
+        }
+
+        let prior = Prior::paper();
+        let mk = |batch: usize, seed: u64| {
+            let mut ctx = JobContext::new(
+                AbcJob::new(batch, 4, vec![0.0; 12], &prior, [155.0, 2.0, 3.0, 6e7]),
+                1.0,
+                ReturnStrategy::Outfeed { chunk: 10 },
+                SeedSequence::new(seed),
+            )
+            .unwrap();
+            // pin to 1 shard so the claim order is env-stable
+            ctx.plan = crate::scheduler::shard::ShardPlan::new(batch, 1);
+            Arc::new(ctx)
+        };
+        // job 0 (batch 10): two healthy runs. job 1 (batch 11): one run
+        // that fails on the engine, so the *worker* retires it; the
+        // claim after that must evict job 1's cached plan. Single
+        // worker, round-robin: (j0 r0) miss, (j1 r0) miss+fail,
+        // (j0 r1) evict j1 + hit.
+        let d = Arc::new(Dispatcher::new(vec![
+            fresh(mk(10, 1), Some(2)),
+            fresh(mk(11, 2), Some(1)),
+        ]));
+        let backend = Arc::new(StubBackend::default());
+        let (tx, rx) = mpsc::channel::<PoolMessage>();
+        let plan_stats = Arc::new(PlanCacheStats::default());
+        let spec = PoolWorkerSpec {
+            device: 0,
+            backend: backend.clone(),
+            dispatcher: d.clone(),
+            tx,
+            dispatch_batch: 1,
+            plan_stats: plan_stats.clone(),
+        };
+        let worker = std::thread::spawn(move || pool_worker_main(spec));
+
+        let (mut reports, mut errors) = (0u32, 0u32);
+        for _ in 0..3 {
+            match rx.recv().expect("worker message") {
+                PoolMessage::Report(r) => {
+                    assert_eq!(r.job, 0, "only job 0 produces reports");
+                    reports += 1;
+                }
+                PoolMessage::JobError { job, run, .. } => {
+                    assert_eq!((job, run), (1, 0));
+                    errors += 1;
+                }
+            }
+        }
+        assert_eq!((reports, errors), (2, 1));
+        d.shutdown();
+        let metrics = worker.join().expect("worker exits");
+
+        assert_eq!(metrics.plan_misses, 2, "one compilation per (worker, job)");
+        assert_eq!(metrics.plan_hits, 1, "job 0's second run reused the cached plan");
+        assert_eq!(
+            metrics.plan_evictions, 1,
+            "job 1's plan evicted once its outcome was decided"
+        );
+        assert_eq!(metrics.runs, 2);
+        assert_eq!(
+            *backend.opens.lock().unwrap(),
+            vec![(0, 10), (0, 11)],
+            "exactly one open_engine per (worker, job)"
+        );
+        // the live pool-wide counters agree with the joined metrics
+        assert_eq!(plan_stats.hits.load(Ordering::Relaxed), metrics.plan_hits);
+        assert_eq!(plan_stats.misses.load(Ordering::Relaxed), metrics.plan_misses);
+        assert_eq!(plan_stats.evictions.load(Ordering::Relaxed), metrics.plan_evictions);
     }
 
     #[test]

@@ -243,6 +243,10 @@ pub struct InferenceService {
     state: Arc<Mutex<ServiceState>>,
     clock: Stopwatch,
     threads: Mutex<Vec<JoinHandle<()>>>,
+    /// Live worker-side plan-cache counters (workers also count into
+    /// their own metrics, but those only merge at join time — a daemon
+    /// needs the running totals for `/v1/metrics`).
+    plan_stats: Arc<super::pool::PlanCacheStats>,
 }
 
 impl std::fmt::Debug for InferenceService {
@@ -259,7 +263,9 @@ impl InferenceService {
     /// leader, all parked until the first submission arrives. The
     /// result cache is capped at [`DEFAULT_CACHE_CAP`] — use
     /// [`start_with_cache_cap`](Self::start_with_cache_cap) to choose.
-    pub fn start(backend: Arc<dyn Backend>, workers: usize) -> Arc<Self> {
+    /// Fails only on a malformed `$ABC_IPU_*` knob (currently
+    /// `$ABC_IPU_DISPATCH_BATCH` is the one resolved at pool start).
+    pub fn start(backend: Arc<dyn Backend>, workers: usize) -> Result<Arc<Self>> {
         Self::start_with_cache_cap(backend, workers, DEFAULT_CACHE_CAP)
     }
 
@@ -269,8 +275,10 @@ impl InferenceService {
         backend: Arc<dyn Backend>,
         workers: usize,
         cache_cap: usize,
-    ) -> Arc<Self> {
+    ) -> Result<Arc<Self>> {
         let workers = workers.max(1);
+        let dispatch_batch = super::pool::resolve_dispatch_batch()?;
+        let plan_stats = Arc::new(super::pool::PlanCacheStats::default());
         let dispatcher = Arc::new(Dispatcher::new(Vec::new()));
         let state = Arc::new(Mutex::new(ServiceState {
             jobs: Vec::new(),
@@ -286,6 +294,8 @@ impl InferenceService {
                 backend: backend.clone(),
                 dispatcher: dispatcher.clone(),
                 tx: tx.clone(),
+                dispatch_batch,
+                plan_stats: plan_stats.clone(),
             };
             threads.push(std::thread::spawn(move || {
                 pool_worker_main(spec);
@@ -298,14 +308,15 @@ impl InferenceService {
             threads
                 .push(std::thread::spawn(move || leader_main(rx, state, dispatcher, clock)));
         }
-        Arc::new(Self {
+        Ok(Arc::new(Self {
             backend_name: backend.name(),
             workers,
             dispatcher,
             state,
             clock,
             threads: Mutex::new(threads),
-        })
+            plan_stats,
+        }))
     }
 
     /// Pool size.
@@ -491,6 +502,12 @@ impl InferenceService {
             }
             m.pool.merge(&job.metrics);
         }
+        // per-job metrics never see the worker-side plan cache; splice
+        // in the pool's live counters (DESIGN.md §15)
+        use std::sync::atomic::Ordering;
+        m.pool.plan_hits = self.plan_stats.hits.load(Ordering::Relaxed);
+        m.pool.plan_misses = self.plan_stats.misses.load(Ordering::Relaxed);
+        m.pool.plan_evictions = self.plan_stats.evictions.load(Ordering::Relaxed);
         m
     }
 
@@ -711,7 +728,7 @@ mod tests {
     }
 
     fn service(workers: usize) -> Arc<InferenceService> {
-        InferenceService::start(Arc::new(NativeBackend::new()), workers)
+        InferenceService::start(Arc::new(NativeBackend::new()), workers).unwrap()
     }
 
     #[test]

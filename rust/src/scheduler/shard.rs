@@ -50,101 +50,21 @@
 use crate::config::ReturnStrategy;
 use crate::coordinator::{merge_selections, OutfeedChunk, Transfer};
 
-/// Environment override for the shard count (`0` or unset = honour the
-/// requested value). Like `$ABC_IPU_LANES`, always safe: results are
-/// shard-invariant.
-pub const SHARDS_ENV: &str = "ABC_IPU_SHARDS";
-
 /// Upper bound on a requested shard count — owned by [`crate::backend`]
 /// (it guards `AbcJob` validation, which must not depend on this higher
 /// layer) and re-exported here as the sharding module's vocabulary.
 /// [`ShardPlan::new`] additionally clamps to the batch.
 pub use crate::backend::MAX_SHARDS;
 
-/// Resolve an effective shard count: `$ABC_IPU_SHARDS` wins when set to
-/// a positive integer (`0`/unset honour the request), then the
-/// requested value; `0` from either means auto, which is solo
-/// (1 shard). Capped at [`MAX_SHARDS`]. A malformed override (not a
-/// non-negative integer) is a typed [`crate::Error::Config`] — the
-/// shard count is harmless to *change* but not to silently mis-read.
-pub fn resolve_shards(requested: usize) -> crate::Result<usize> {
-    let requested = crate::util::env::usize_override(SHARDS_ENV)?
-        .filter(|&v| v >= 1)
-        .unwrap_or(requested);
-    Ok(if requested >= 1 {
-        requested.min(MAX_SHARDS)
-    } else {
-        1
-    })
-}
-
-/// One shard's contiguous lane range within a run's batch.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ShardRange {
-    /// Shard index, `0..K`.
-    pub shard: u32,
-    /// First global lane (sample index) of the range.
-    pub lane0: usize,
-    /// Number of lanes in the range (>= 1).
-    pub len: usize,
-}
-
-/// The shard plan of one job: `K` contiguous, disjoint, near-equal lane
-/// ranges covering the run batch `[0, B)` exactly.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ShardPlan {
-    batch: usize,
-    ranges: Vec<ShardRange>,
-}
-
-impl ShardPlan {
-    /// Plan `shards` contiguous ranges over a batch of `batch` lanes.
-    ///
-    /// The count is clamped to `[1, batch]` (a shard must own at least
-    /// one lane); the first `batch % K` shards get one extra lane so
-    /// sizes differ by at most one.
-    pub fn new(batch: usize, shards: usize) -> Self {
-        let k = shards.clamp(1, batch.max(1));
-        let base = batch / k;
-        let extra = batch % k;
-        let mut ranges = Vec::with_capacity(k);
-        let mut lane0 = 0usize;
-        for s in 0..k {
-            let len = base + usize::from(s < extra);
-            ranges.push(ShardRange { shard: s as u32, lane0, len });
-            lane0 += len;
-        }
-        Self { batch, ranges }
-    }
-
-    /// Number of shards `K`.
-    pub fn shards(&self) -> usize {
-        self.ranges.len()
-    }
-
-    /// The batch the plan covers.
-    pub fn batch(&self) -> usize {
-        self.batch
-    }
-
-    /// All ranges, ascending by `lane0`.
-    pub fn ranges(&self) -> &[ShardRange] {
-        &self.ranges
-    }
-
-    /// The range of shard `shard` (panics if out of plan).
-    pub fn range(&self, shard: u32) -> ShardRange {
-        self.ranges[shard as usize]
-    }
-
-    /// The shard owning global lane `lane` (panics if `lane` is outside
-    /// the batch). Ranges are contiguous and ascending, so this is a
-    /// binary search.
-    pub fn shard_of(&self, lane: usize) -> u32 {
-        assert!(lane < self.batch, "lane {lane} outside batch {}", self.batch);
-        self.ranges.partition_point(|r| r.lane0 + r.len <= lane) as u32
-    }
-}
+/// Shard *geometry* — the env knob, resolution, and the
+/// [`ShardPlan`]/[`ShardRange`] types — lives in
+/// [`crate::backend::plan`] since the plan/arena refactor: a job's
+/// compiled [`ExecutionPlan`](crate::backend::ExecutionPlan) carries
+/// its shard plan, and the backend layer must not depend on this one.
+/// Re-exported here as the historical vocabulary of the sharding seam;
+/// the leader-side transfer merge below stays, because it speaks
+/// coordinator types.
+pub use crate::backend::plan::{resolve_shards, ShardPlan, ShardRange, SHARDS_ENV};
 
 /// Merge the `K` per-shard transfers of one run (in shard order) into
 /// the transfer the solo run would have produced — the run-frontier

@@ -24,11 +24,15 @@
 //! Malformed requests are `400`, unknown ids `404`, a known path with
 //! the wrong method `405`, a posterior asked of an unfinished job `409`
 //! — and a panic anywhere in request handling is caught and returned
-//! as `500`, never a dead daemon (the whole point of this PR's
-//! panic-site sweep). The accept loop is sequential: every endpoint is
-//! non-blocking against the service (submission returns a receipt, the
-//! pool runs on its own threads), so one connection at a time is
-//! enough and keeps the surface free of per-connection thread litter.
+//! as `500`, never a dead daemon. Each accepted connection is handled
+//! on its own short-lived thread behind a non-blocking accept loop, so
+//! a slow or stalled client ties up one handler thread for at most the
+//! 10 s socket timeout — never the accept loop: `/v1/healthz` keeps
+//! answering while someone holds a socket open (pinned by
+//! `tests/serve.rs`). Every endpoint is non-blocking against the
+//! *service* (submission returns a receipt; the pool runs on its own
+//! threads), so handler threads are short-lived by construction and
+//! are all joined before `serve` returns.
 //!
 //! **Determinism at the wire.** Sample rows use the checkpoint codec's
 //! exact-bits layout ([`checkpoint::sample_to_json`]), and 64-bit
@@ -389,43 +393,74 @@ impl HttpServer {
         &self.service
     }
 
-    /// Serve until `POST /v1/shutdown` arrives, then shut the service
-    /// down (cancelling running jobs, joining the pool) and return.
-    /// Sequential accept loop — see the module docs for why that is
-    /// enough. One misbehaving connection gets an error response (or a
-    /// dropped socket); it never takes the daemon down.
+    /// Serve until `POST /v1/shutdown` arrives, then join the handler
+    /// threads, shut the service down (cancelling running jobs, joining
+    /// the pool) and return. Each connection is handled on its own
+    /// short-lived thread (module docs) — a stalled client occupies one
+    /// handler for at most the socket timeout while the accept loop
+    /// keeps answering. One misbehaving connection gets an error
+    /// response (or a dropped socket); it never takes the daemon down.
     pub fn serve(&self) -> Result<()> {
-        for conn in self.listener.incoming() {
-            if let Ok(stream) = conn {
-                let _ = self.handle(stream);
+        // Non-blocking accept: the loop must keep polling the stop flag
+        // (set by a handler thread) even while no connection arrives.
+        self.listener.set_nonblocking(true)?;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _addr)) => {
+                    let service = self.service.clone();
+                    let stop = self.stop.clone();
+                    conns.push(std::thread::spawn(move || {
+                        let _ = handle_connection(&service, &stop, stream);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                // Transient accept failure (e.g. the peer reset before
+                // the handshake finished): keep serving.
+                Err(_) => {}
             }
-            // The shutdown request is itself the connection that wakes
-            // this loop, so checking after handling sees its effect.
+            conns.retain(|h| !h.is_finished());
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
         }
+        // Joining bounds shutdown: every in-flight response (including
+        // the shutdown acknowledgement itself) is written before the
+        // pool is torn down, and the socket timeout bounds the wait.
+        for h in conns {
+            let _ = h.join();
+        }
         self.service.shutdown();
         Ok(())
     }
+}
 
-    fn handle(&self, stream: TcpStream) -> std::io::Result<()> {
-        let _ = stream.set_read_timeout(Some(SOCKET_TIMEOUT));
-        let _ = stream.set_write_timeout(Some(SOCKET_TIMEOUT));
-        let mut reader = BufReader::new(&stream);
-        let (code, body) = match read_request(&mut reader) {
-            Err(e) => (400, err_body(&e.to_string())),
-            // The daemon must outlive any bug in request handling: a
-            // panic is caught and degraded to a 500 response.
-            Ok(req) => match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                route(&self.service, &req, &self.stop)
-            })) {
-                Ok(answer) => answer,
-                Err(_) => (500, err_body("internal panic while handling the request")),
-            },
-        };
-        write_response(&stream, code, &body)
-    }
+/// Handle one accepted connection: parse, route, respond. Runs on its
+/// own thread; panics in routing degrade to a `500` response so the
+/// daemon never dies to a handler bug.
+fn handle_connection(
+    service: &InferenceService,
+    stop: &AtomicBool,
+    stream: TcpStream,
+) -> std::io::Result<()> {
+    // the listener is non-blocking; the accepted socket must block (with
+    // a timeout) or reads would spin
+    stream.set_nonblocking(false)?;
+    let _ = stream.set_read_timeout(Some(SOCKET_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(SOCKET_TIMEOUT));
+    let mut reader = BufReader::new(&stream);
+    let (code, body) = match read_request(&mut reader) {
+        Err(e) => (400, err_body(&e.to_string())),
+        Ok(req) => match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            route(service, &req, stop)
+        })) {
+            Ok(answer) => answer,
+            Err(_) => (500, err_body("internal panic while handling the request")),
+        },
+    };
+    write_response(&stream, code, &body)
 }
 
 #[cfg(test)]
@@ -439,7 +474,7 @@ mod tests {
     }
 
     fn service() -> Arc<InferenceService> {
-        InferenceService::start(Arc::new(NativeBackend::new()), 1)
+        InferenceService::start(Arc::new(NativeBackend::new()), 1).unwrap()
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! A counting global allocator behind the `alloc-count` feature.
+//!
+//! The plan/arena seam (DESIGN.md §15) promises that a warm worker's
+//! steady-state run loop — [`crate::backend::ExecutionPlan::run_into`]
+//! against a reused [`crate::model::RunScratch`] — performs **zero**
+//! heap allocations. That promise is only worth committing to if it is
+//! machine-checked, so this module provides the instrument: a
+//! [`CountingAllocator`] that wraps [`std::alloc::System`] and bumps an
+//! atomic counter on every `alloc`/`alloc_zeroed`/`realloc` (frees are
+//! not counted — a loop that frees without allocating cannot leak and
+//! cannot malloc-stall).
+//!
+//! The allocator is only *installed* (as `#[global_allocator]`) when
+//! the crate builds with `--features alloc-count`; the plain build
+//! keeps the system allocator untouched and [`alloc_count`] reads a
+//! counter that never moves. Consumers therefore gate on
+//! [`counting_enabled`] before trusting a delta of zero:
+//!
+//! * `tests/alloc_regression.rs` — the CI leg that fails if the warm
+//!   run loop allocates at all;
+//! * `benches/hot_path.rs` — measures `allocs_per_run` for the
+//!   schema-v3 `BENCH_hot_path.json` artifact.
+//!
+//! Counting is purely observational: layout, alignment and the actual
+//! allocation behaviour are exactly [`System`]'s, so measurements taken
+//! under the feature transfer to the default build.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of allocation events since startup. Relaxed
+/// ordering is sufficient: readers only ever compare before/after
+/// deltas on the same thread.
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// [`System`] plus an allocation-event counter (module docs above).
+pub struct CountingAllocator;
+
+// SAFETY: defers every operation verbatim to `System`, which upholds
+// the `GlobalAlloc` contract; the counter increment has no effect on
+// the returned pointers or layouts.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a grow-in-place is still an allocation *event*: the loop we
+        // certify must not even ask
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+/// Whether the counting allocator is actually installed as the global
+/// allocator (i.e. the crate was built with `--features alloc-count`).
+/// When `false`, [`alloc_count`] is frozen at zero and a zero delta
+/// proves nothing.
+pub const fn counting_enabled() -> bool {
+    cfg!(feature = "alloc-count")
+}
+
+/// Total allocation events (`alloc` + `alloc_zeroed` + `realloc`)
+/// observed so far. Subtract two readings taken on the same thread to
+/// count the events between them.
+pub fn alloc_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_moves_exactly_when_the_feature_installs_the_allocator() {
+        let before = alloc_count();
+        // a boxed slice forces a real heap allocation either way
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        let delta = alloc_count() - before;
+        drop(v);
+        if counting_enabled() {
+            assert!(delta >= 1, "installed allocator missed an allocation");
+        } else {
+            assert_eq!(delta, 0, "counter moved without the feature");
+        }
+    }
+}

@@ -6,7 +6,11 @@
 //! small, fully tested, and tailored to this project's needs. [`env`]
 //! is the one home for `$ABC_IPU_*` knob parsing, so every override
 //! fails loudly on malformed values instead of silently defaulting.
+//! [`alloc_count`] is the measurement substrate for the zero-alloc
+//! steady-state contract (DESIGN.md §15): a counting global allocator
+//! installed only under `--features alloc-count`.
 
+pub mod alloc_count;
 pub mod cli;
 pub mod env;
 pub mod json;

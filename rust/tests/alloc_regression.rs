@@ -1,0 +1,78 @@
+//! The zero-alloc steady-state gate (DESIGN.md §15).
+//!
+//! Builds only with `--features alloc-count`, which installs the
+//! counting `#[global_allocator]` (`util::alloc_count`). The single
+//! test compiles an [`ExecutionPlan`], warms a [`RunScratch`] arena
+//! with one run, and then asserts that every subsequent
+//! [`ExecutionPlan::run_into`] — the exact call a warm pool worker
+//! makes per work item — performs **zero** heap allocations, across
+//! every model in the zoo.
+//!
+//! One test function on purpose: the allocator counter is
+//! process-global, and the default test harness runs `#[test]`s on
+//! concurrent threads whose incidental allocations (test-name strings,
+//! captured output buffers) would bleed into another test's delta.
+//!
+//! ```text
+//! cargo test --release --features alloc-count --test alloc_regression
+//! ```
+
+#![cfg(feature = "alloc-count")]
+
+use abc_ipu::backend::{AbcJob, ExecutionPlan};
+use abc_ipu::model::{ModelKind, N_PARAMS};
+use abc_ipu::util::alloc_count::{alloc_count, counting_enabled};
+
+#[test]
+fn warm_plan_run_loop_performs_zero_heap_allocations() {
+    assert!(counting_enabled(), "gate requires the counting allocator");
+    // The zero-alloc contract is the single-thread steady state: the
+    // threaded engine path spawns scoped threads (and their transient
+    // arenas) per run by design, and pool workers run single-threaded
+    // engines. Pin the knob so an ambient override cannot retarget the
+    // test at the wrong path.
+    std::env::set_var("ABC_IPU_SIM_THREADS", "1");
+
+    let days = 21;
+    let batch = 256;
+    for kind in ModelKind::all() {
+        let model = kind.instance();
+        let job = AbcJob::new(
+            batch,
+            days,
+            vec![1.0f32; model.n_observed() * days],
+            &model.prior(),
+            [155.0, 2.0, 3.0, 6e7],
+        )
+        .with_model(kind);
+        let plan = ExecutionPlan::compile(&job).expect("compile");
+        let mut scratch = plan.scratch();
+        let mut thetas = vec![0.0f32; batch * N_PARAMS];
+        let mut dists = vec![0.0f32; batch];
+        // first run may still grow lane-state slabs to the batch shape
+        plan.run_into(&mut scratch, [1, 0], 0, batch, &mut thetas, &mut dists)
+            .expect("warm-up run");
+        for key in 2u32..8 {
+            let before = alloc_count();
+            plan.run_into(&mut scratch, [key, 0], 0, batch, &mut thetas, &mut dists)
+                .expect("steady-state run");
+            let delta = alloc_count() - before;
+            assert_eq!(
+                delta, 0,
+                "model {kind:?}: warm run_into (key {key}) performed {delta} \
+                 heap allocation(s); the steady-state loop must not allocate"
+            );
+        }
+        // partial-range (shard-shaped) runs reuse the same arena
+        // without allocating either
+        let half = batch / 2;
+        let before = alloc_count();
+        plan.run_into(&mut scratch, [9, 0], half, half, &mut thetas[..half * N_PARAMS], &mut dists[..half])
+            .expect("shard-range run");
+        assert_eq!(
+            alloc_count() - before,
+            0,
+            "model {kind:?}: warm shard-range run_into allocated"
+        );
+    }
+}

@@ -278,6 +278,69 @@ fn resume_may_change_pool_geometry_but_not_the_stream() {
 }
 
 #[test]
+fn resume_with_plan_cache_churn_bit_equals_solo() {
+    // Cold vs warm plan cache (DESIGN.md §15): two jobs on ONE worker
+    // make the dispatcher round-robin the worker between them, so each
+    // job's stream mixes a cold first item (plan compile) with warm
+    // cached-plan reuse, the first-retired job's plan is evicted
+    // mid-schedule, and the interrupt + resume rebuilds every cached
+    // plan from a fresh pool on top. Plans are pure performance state:
+    // not a bit may move.
+    // job a finishes four runs before job b does: its retire + eviction
+    // happen while b still has claims left, deterministically
+    let stop_a = StopRule::ExactRuns(4);
+    let stop_b = StopRule::ExactRuns(8);
+    let b1 = builder(ReturnStrategy::Outfeed { chunk: 93 });
+    let mut b2 = builder(ReturnStrategy::Outfeed { chunk: 57 });
+    b2.seed = 0x7E57;
+    b2.batch = 407;
+    let want1 = solo_reference(&b1, stop_a);
+    let want2 = solo_reference(&b2, stop_b);
+
+    let path = ckpt_path("plan_churn");
+    cleanup(&path);
+    let specs = || vec![b1.spec("churn_a", stop_a), b2.spec("churn_b", stop_b)];
+    let crash = CheckpointConfig::new(path.clone())
+        .with_interval(1)
+        .with_interrupt_after(3);
+    let err = Scheduler::new(native_backend(), 1)
+        .with_checkpoint(crash)
+        .run(specs())
+        .expect_err("schedule should have been interrupted");
+    assert!(matches!(err, Error::Interrupted { .. }), "{err}");
+    let resume = CheckpointConfig::new(path.clone())
+        .with_interval(1)
+        .with_resume(true);
+    let report = Scheduler::new(native_backend(), 1)
+        .with_checkpoint(resume)
+        .run(specs())
+        .expect("resume failed");
+    // the churn this test is about actually happened on the resumed
+    // pool: one cold compile per (worker, job), warm reuse for every
+    // further item, and the first-retired job's plan evicted once the
+    // lone worker moves on to the surviving job
+    assert_eq!(
+        report.pool_metrics.plan_misses, 2,
+        "1 worker x 2 jobs must compile exactly two plans"
+    );
+    assert!(
+        report.pool_metrics.plan_hits >= 1,
+        "alternating claims should have reused a cached plan"
+    );
+    assert!(
+        report.pool_metrics.plan_evictions >= 1,
+        "expected the first-retired job's plan to be evicted"
+    );
+    for run in report.jobs {
+        let result = run.outcome.expect("job outcome");
+        let got = fingerprints(&result.accepted);
+        let want = if run.name == "churn_a" { &want1 } else { &want2 };
+        assert_eq!(&got, want, "{} diverged under plan-cache churn", run.name);
+    }
+    cleanup(&path);
+}
+
+#[test]
 fn resume_across_simd_kernel_change_bit_equals_solo() {
     // snapshot written with the scalar kernel, resumed with the
     // vectorized kernel: like `lanes`/`shards`, the `simd` knob is

@@ -39,7 +39,8 @@ fn small_config(seed: u64) -> (RunConfig, abc_ipu::data::Dataset) {
 /// Boot a daemon on an ephemeral port; returns its address and the
 /// serve-loop handle (joined after `POST /v1/shutdown`).
 fn start_server(workers: usize) -> (String, JoinHandle<()>) {
-    let service = InferenceService::start(Arc::new(NativeBackend::new()), workers);
+    let service =
+        InferenceService::start(Arc::new(NativeBackend::new()), workers).expect("start pool");
     let server = HttpServer::bind(0, service).expect("bind ephemeral port");
     let addr = server.local_addr().expect("bound address").to_string();
     let handle = std::thread::spawn(move || server.serve().expect("serve loop"));
@@ -52,7 +53,8 @@ fn start_server_capped(workers: usize, cache_cap: usize) -> (String, JoinHandle<
         Arc::new(NativeBackend::new()),
         workers,
         cache_cap,
-    );
+    )
+    .expect("start pool");
     let server = HttpServer::bind(0, service).expect("bind ephemeral port");
     let addr = server.local_addr().expect("bound address").to_string();
     let handle = std::thread::spawn(move || server.serve().expect("serve loop"));
@@ -341,6 +343,43 @@ fn cancel_freezes_a_running_job_and_the_daemon_keeps_serving() {
     let status = wait_terminal(&addr, receipt.req("id").unwrap().as_u64().unwrap());
     assert_eq!(status.req("state").unwrap().as_str().unwrap(), "done");
 
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn stalled_client_does_not_block_concurrent_requests() {
+    use std::io::Write;
+    use std::net::TcpStream;
+
+    let (addr, handle) = start_server(1);
+
+    // A stalled client: open a connection and send only half a request
+    // line, then go quiet. The daemon's per-connection handler thread
+    // sits in its read (bounded by the 10 s socket timeout) — the
+    // accept loop must keep serving others in the meantime.
+    let mut stalled = TcpStream::connect(&addr).expect("connect stalled client");
+    stalled.write_all(b"GET /v1/he").expect("partial request line");
+
+    let t0 = Instant::now();
+    let (code, health) = get(&addr, "/v1/healthz");
+    assert_eq!(code, 200);
+    assert!(health.req("ok").unwrap().as_bool().unwrap());
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "healthz queued behind a stalled reader: {:?}",
+        t0.elapsed()
+    );
+
+    // a second stalled socket while the first is still open
+    let stalled2 = TcpStream::connect(&addr).expect("connect second stalled client");
+    let (code, _) = get(&addr, "/v1/healthz");
+    assert_eq!(code, 200);
+
+    // close the stalled sockets before shutdown: serve() joins every
+    // handler thread, and a closed peer ends its read immediately
+    // instead of waiting out the socket timeout
+    drop(stalled);
+    drop(stalled2);
     shutdown(&addr, handle);
 }
 

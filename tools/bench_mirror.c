@@ -12,6 +12,14 @@
  * `make bench-hot` overwrites the artifact with cargo-measured numbers
  * whenever a Rust toolchain is present.
  *
+ * The mirror also reproduces the plan/arena seam (DESIGN.md §15): all
+ * lane slabs live in a grow-once Arena (the RunScratch analogue)
+ * allocated through a counting malloc wrapper, warmed before any
+ * timing, and reused by every run. The measured steady-state
+ * allocation count per run is the artifact's schema-v3
+ * `allocs_per_run` field — the same quantity the Rust side measures
+ * with its counting #[global_allocator] (--features alloc-count).
+ *
  * Build & run (from the repo root):
  *   gcc -O3 -march=native -fno-math-errno -ffp-contract=off \
  *       -o bench_mirror tools/bench_mirror.c -lm
@@ -166,6 +174,56 @@ static float sq_distance_day(const float state[6], const float *obs, int t, int 
 static const float A0 = 155.0f, R0 = 2.0f, D0 = 3.0f, POP = 60000000.0f;
 static float OBS[3 * DAYS];
 
+/* ---- counting allocator + grow-once arena (RunScratch mirror) ---- */
+
+/* every arena (re)allocation goes through here, so the steady-state
+ * reps can prove they perform none — the C analogue of the Rust
+ * counting #[global_allocator] behind --features alloc-count */
+static uint64_t g_alloc_events = 0;
+
+static void *counted_malloc(size_t n) {
+    g_alloc_events++;
+    void *p = malloc(n);
+    if (!p) {
+        fprintf(stderr, "bench_mirror: out of memory (%zu bytes)\n", n);
+        exit(1);
+    }
+    return p;
+}
+
+/* The lane slabs of both kernel flavors, allocated once and grown only
+ * when a wider configuration first runs (ensure below). `thetas` holds
+ * the AoS [w][8] layout for the scalar kernel and the SoA [8][w] slab
+ * for the vectorized kernel — same footprint, never live at once. */
+typedef struct {
+    int width;      /* widest configuration seen so far (0 = empty) */
+    Xo *rngs;       /* [w] per-lane streams */
+    float *thetas;  /* [8 * w] parameter slab */
+    float *states;  /* [6 * w] compartment slab */
+    float *noise;   /* [5 * w] day-noise slab */
+    float *acc;     /* [w] distance accumulators */
+    double *spare;  /* [w] Box-Muller spare column */
+} Arena;
+
+static Arena ARENA = {0, NULL, NULL, NULL, NULL, NULL, NULL};
+
+static void arena_ensure(Arena *a, int width) {
+    if (width <= a->width) return;
+    free(a->rngs);
+    free(a->thetas);
+    free(a->states);
+    free(a->noise);
+    free(a->acc);
+    free(a->spare);
+    a->rngs = counted_malloc(sizeof(Xo) * width);
+    a->thetas = counted_malloc(sizeof(float) * 8 * width);
+    a->states = counted_malloc(sizeof(float) * 6 * width);
+    a->noise = counted_malloc(sizeof(float) * 5 * width);
+    a->acc = counted_malloc(sizeof(float) * width);
+    a->spare = counted_malloc(sizeof(double) * width);
+    a->width = width;
+}
+
 static void make_observed(void) {
     for (int t = 0; t < DAYS; t++) {
         OBS[t] = (float)(155 + 40 * t + ((t * t * 3) % 97));
@@ -205,15 +263,17 @@ static double run_scalar_oracle(uint64_t key64, float *sink) {
     return acc_sink;
 }
 
-/* LaneEngine with the scalar per-lane kernel ($ABC_IPU_SIMD=off) */
+/* LaneEngine with the scalar per-lane kernel ($ABC_IPU_SIMD=off);
+ * slabs come from the warm shared Arena (zero allocations per run) */
 static double run_lane_scalar(int width, uint64_t key64, float *sink) {
     double acc_sink = 0.0;
     int groups = (LANE_BATCH + width - 1) / width;
-    Xo *rngs = malloc(sizeof(Xo) * width);
-    float *thetas = malloc(sizeof(float) * width * 8);
-    float *states = malloc(sizeof(float) * 6 * width);
-    float *noise = malloc(sizeof(float) * 5 * width);
-    float *acc = malloc(sizeof(float) * width);
+    arena_ensure(&ARENA, width);
+    Xo *rngs = ARENA.rngs;
+    float *thetas = ARENA.thetas;
+    float *states = ARENA.states;
+    float *noise = ARENA.noise;
+    float *acc = ARENA.acc;
     for (int g = 0; g < groups; g++) {
         int lane0 = g * width;
         int w = (lane0 + width <= LANE_BATCH) ? width : LANE_BATCH - lane0;
@@ -241,11 +301,6 @@ static double run_lane_scalar(int width, uint64_t key64, float *sink) {
         }
         for (int l = 0; l < w; l++) acc_sink += sqrtf(acc[l]);
     }
-    free(rngs);
-    free(thetas);
-    free(states);
-    free(noise);
-    free(acc);
     *sink = (float)acc_sink;
     return acc_sink;
 }
@@ -313,16 +368,17 @@ static void step_lanes8(const float *restrict theta_slab /* [8][w] */,
 }
 
 /* LaneEngine with the vectorized kernel + grouped noise slab
- * ($ABC_IPU_SIMD=on) */
+ * ($ABC_IPU_SIMD=on); slabs come from the warm shared Arena */
 static double run_lane_simd(int width, uint64_t key64, float *sink) {
     double acc_sink = 0.0;
     int groups = (LANE_BATCH + width - 1) / width;
-    Xo *rngs = malloc(sizeof(Xo) * width);
-    float *theta_slab = malloc(sizeof(float) * 8 * width);
-    float *states = malloc(sizeof(float) * 6 * width);
-    float *noise = malloc(sizeof(float) * 5 * width);
-    float *acc = malloc(sizeof(float) * width);
-    double *spare = malloc(sizeof(double) * width);
+    arena_ensure(&ARENA, width);
+    Xo *rngs = ARENA.rngs;
+    float *theta_slab = ARENA.thetas;
+    float *states = ARENA.states;
+    float *noise = ARENA.noise;
+    float *acc = ARENA.acc;
+    double *spare = ARENA.spare;
     for (int g = 0; g < groups; g++) {
         int lane0 = g * width;
         int w = (lane0 + width <= LANE_BATCH) ? width : LANE_BATCH - lane0;
@@ -380,12 +436,6 @@ static double run_lane_simd(int width, uint64_t key64, float *sink) {
         }
         for (int l = 0; l < w; l++) acc_sink += sqrtf(acc[l]);
     }
-    free(rngs);
-    free(theta_slab);
-    free(states);
-    free(noise);
-    free(acc);
-    free(spare);
     *sink = (float)acc_sink;
     return acc_sink;
 }
@@ -398,16 +448,24 @@ static double now_s(void) {
 
 typedef double (*BatchFn)(int width, uint64_t key64, float *sink);
 
+/* steady-state allocation accounting across every timed rep: the
+ * warmup call grows the arena, then the reps must not allocate at all
+ * (the plan/arena contract the artifact's allocs_per_run records) */
+static uint64_t g_steady_allocs = 0, g_steady_runs = 0;
+
 static double measure(BatchFn fn, int width, int batch) {
     float sink = 0.0f;
-    double check = fn(width, 1000, &sink); /* warmup */
+    double check = fn(width, 1000, &sink); /* warmup (arena grows here) */
     double best_s = 1e300;
+    uint64_t allocs0 = g_alloc_events;
     for (int rep = 0; rep < REPS; rep++) {
         double t0 = now_s();
         check += fn(width, (uint64_t)(rep + 1), &sink);
         double dt = now_s() - t0;
         if (dt < best_s) best_s = dt;
     }
+    g_steady_allocs += g_alloc_events - allocs0;
+    g_steady_runs += REPS;
     if (check == 42.0) fprintf(stderr, "#"); /* keep the result live */
     return (double)batch / best_s; /* min-of-reps: least-noise estimate */
 }
@@ -446,14 +504,26 @@ int main(void) {
         ratio_on[i] = simd_sps[i == 0 ? 0 : i + 1];
     }
 
-    printf("{\n  \"suite\": \"hot_path\",\n  \"schema\": 2,\n");
+    /* allocs_per_run: ceiling so one allocation anywhere can't round
+     * away; the arena discipline above makes the true value 0 */
+    uint64_t allocs_per_run =
+        g_steady_runs ? (g_steady_allocs + g_steady_runs - 1) / g_steady_runs : 0;
+    if (g_steady_allocs)
+        fprintf(stderr,
+                "bench_mirror: WARNING: %" PRIu64 " steady-state allocation(s) "
+                "across %" PRIu64 " timed runs — the arena contract regressed\n",
+                g_steady_allocs, g_steady_runs);
+
+    printf("{\n  \"suite\": \"hot_path\",\n  \"schema\": 3,\n");
     printf("  \"harness\": \"tools/bench_mirror.c (gcc -O3 -march=native "
-           "-fno-math-errno -ffp-contract=off port of the Rust lane kernels; "
+           "-fno-math-errno -ffp-contract=off port of the Rust lane kernels, "
+           "grow-once arena + counted malloc mirroring the plan/arena seam; "
            "min-of-%d reps, single CPU core, no Rust toolchain on the measuring "
            "host — regenerate with `make bench-hot`)\",\n",
            REPS);
     printf("  \"days\": %d,\n  \"batch\": %d,\n  \"quick\": false,\n", DAYS,
            LANE_BATCH);
+    printf("  \"allocs_per_run\": %" PRIu64 ",\n", allocs_per_run);
     printf("  \"scalar_baseline\": {\"name\": \"scalar_oracle_1thread\", "
            "\"batch\": %d, \"samples_per_sec\": %.1f},\n",
            SCALAR_BATCH, scalar_sps);
